@@ -1,0 +1,76 @@
+//! DSE explorer: regenerates the paper's design-space figures (10–19) and
+//! then answers the co-design question the paper's §V works through:
+//! "what GLB capacity, Δ, and scratchpad should an accelerator of THIS
+//! array size and batch use?"
+//!
+//! Run: `cargo run --release --example dse_explorer [macs] [batch]`
+
+use std::io::Write;
+
+use stt_ai::accel::{ArrayConfig, RetentionAnalysis};
+use stt_ai::dse::capacity;
+use stt_ai::models::{self, DType};
+use stt_ai::mram::{DesignTargets, MtjTech, ScalingSolver};
+use stt_ai::report;
+use stt_ai::util::units::{fmt_bytes, fmt_time, KB, MB};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let macs: u64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(42);
+    let batch: u64 = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(16);
+
+    let mut out = std::io::stdout().lock();
+    writeln!(out, "#### paper figures ####")?;
+    report::fig10(&mut out)?;
+    report::fig11(&mut out)?;
+    report::fig13(&mut out)?;
+    report::fig14(&mut out)?;
+    report::fig16(&mut out)?;
+    report::fig18(&mut out)?;
+    report::fig19(&mut out)?;
+
+    writeln!(out, "\n#### co-design for a {macs}x{macs}-MAC array, batch {batch} ####")?;
+    let array = ArrayConfig::with_mac_array(macs);
+    let zoo = models::zoo();
+
+    // 1. GLB capacity that serves most of the zoo without DRAM spill.
+    let mut caps: Vec<u64> = zoo.iter().map(|m| m.max_conv_working_set(DType::Bf16, batch)).collect();
+    caps.sort();
+    let p80 = caps[(caps.len() * 4) / 5];
+    writeln!(out, "GLB capacity for 80% zoo coverage: {}", fmt_bytes(p80))?;
+    let served = capacity::models_served(&zoo, DType::Bf16, batch, 12 * MB);
+    writeln!(out, "a 12 MB GLB serves {served}/19 models at bf16/batch {batch}")?;
+
+    // 2. Worst occupancy → Δ design with margin.
+    let ra = RetentionAnalysis::new(&array, batch);
+    let worst = zoo.iter().map(|m| ra.analyze(m).max_t_ret()).fold(0.0, f64::max);
+    writeln!(out, "worst GLB occupancy: {}", fmt_time(worst))?;
+    let solver = ScalingSolver::new(MtjTech::sakhare2020());
+    let targets = DesignTargets {
+        retention_time: 2.0 * worst, // 2x engineering margin
+        retention_ber: 1e-8,
+        read_disturb_ber: 1e-8,
+        write_ber: 1e-8,
+    };
+    let d = solver.solve(&targets);
+    writeln!(
+        out,
+        "=> Δ_scaled {:.1}, Δ_PT_GB {:.1}, write pulse {}, {:.2}x base write energy",
+        d.delta_scaled,
+        d.delta_guard_banded,
+        fmt_time(d.write_pulse),
+        d.rel_write_energy
+    )?;
+
+    // 3. Scratchpad sizing: cover 80% of the zoo's partial ofmaps.
+    let mut partials: Vec<u64> = zoo.iter().map(|m| m.max_partial_ofmap(DType::Bf16)).collect();
+    partials.sort();
+    let sp = partials[(partials.len() * 4) / 5];
+    writeln!(
+        out,
+        "scratchpad for 80% coverage: {} (paper picked {} )",
+        fmt_bytes(sp),
+        fmt_bytes(52 * KB)
+    )?;
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! End-to-end driver (the EXPERIMENTS.md §E2E run): proves all layers
+//! compose on a real small workload.
+//!
+//! * L1/L2 (build time): TinyCNN was trained for 400 steps on the synthetic
+//!   10-class dataset and its Pallas forward lowered to HLO (`make
+//!   artifacts`; loss curve recorded in artifacts/manifest.json).
+//! * L3 (this binary): loads the artifact, runs the Fig. 21 grid — all
+//!   three GLB variants × {dense, 50%-pruned} — through PJRT with the
+//!   bank-split BER fault model, then a closed-loop serving run with
+//!   latency/throughput metrics, then prints the Table III composition the
+//!   accuracy numbers pair with.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_sttai`
+
+use std::path::Path;
+
+use stt_ai::config::GlbVariant;
+use stt_ai::coordinator::{accuracy, serve, Engine, EngineConfig};
+use stt_ai::report;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Path::new("artifacts");
+
+    // Training metadata recorded by the build.
+    let engine = Engine::load(artifacts, EngineConfig::new(GlbVariant::Sram))?;
+    let meta = &engine.manifest.train_meta;
+    println!("== build-time training (L2, ref path) ==");
+    if let (Some(steps), Some(acc)) = (meta.get("steps"), meta.get("test_acc")) {
+        println!("  {steps} Adam steps, held-out accuracy {acc}");
+    }
+    if let Some(curve) = meta.get("loss_curve").and_then(|c| c.as_arr()) {
+        let pts: Vec<String> = curve
+            .iter()
+            .filter_map(|p| p.as_arr())
+            .map(|p| {
+                format!(
+                    "{}:{:.3}",
+                    p[0].as_u64().unwrap_or(0),
+                    p[1].as_f64().unwrap_or(0.0)
+                )
+            })
+            .collect();
+        println!("  loss curve (step:loss): {}", pts.join(" "));
+    }
+    drop(engine);
+
+    // Fig. 21 grid: three variants × two prune rates, full test set.
+    println!("\n== Fig. 21 reproduction (accuracy under STT-MRAM BER) ==");
+    for prune in [0.0, 0.5] {
+        let row = accuracy::fig21_row(artifacts, prune, 16, None)?;
+        println!("-- prune rate {prune}");
+        for r in [&row.baseline, &row.stt_ai, &row.stt_ai_ultra] {
+            println!(
+                "   {:<14} top1 {:.4}  top5 {:.4}  flips {:>4}  (n={})",
+                r.variant, r.top1, r.top5, r.bit_flips, r.n
+            );
+        }
+        let drop_pct = row.ultra_drop_normalized() * 100.0;
+        println!("   Ultra normalized top-1 drop: {drop_pct:.3}% (paper: <1%)");
+        anyhow::ensure!(drop_pct < 2.0, "Ultra accuracy drop out of the paper's band");
+    }
+
+    // Serving: closed-loop batched inference, latency/throughput.
+    println!("\n== serving (L3 coordinator, batch 16) ==");
+    let engine = Engine::load(artifacts, EngineConfig::new(GlbVariant::SttAiUltra))?;
+    let summary = serve::closed_loop(&engine, 512, 16)?;
+    println!("  {summary}");
+
+    // The hardware the accuracy numbers pair with (Table III).
+    println!("\n== Table III composition ==");
+    let rows = report::table3_rows();
+    let base = rows[0].clone();
+    for r in &rows {
+        let (a, p) = r.savings_vs(&base);
+        println!(
+            "  {:<18} {:>7.2} mm²  {:>8.2} mW   ({:>5.1}% area, {:>4.1}% power saving)",
+            r.name,
+            r.area_mm2,
+            r.total_power_mw(),
+            a * 100.0,
+            p * 100.0
+        );
+    }
+    println!("\nE2E OK");
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! MRAM designer: walk one customized STT-MRAM design end to end, including
+//! the PT-corner analysis and the adjustable write driver of Fig. 9.
+//!
+//! Run: `cargo run --release --example mram_designer [retention_s] [ber]`
+
+use stt_ai::mram::{
+    read_disturb_prob, retention_failure_prob, write_error_rate, DesignTargets, MtjTech,
+    PtCorner, PtmSample, ScalingSolver, WriteDriver,
+};
+use stt_ai::util::units::fmt_time;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let retention: f64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(3.0);
+    let ber: f64 = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(1e-8);
+
+    let tech = MtjTech::sakhare2020();
+    let solver = ScalingSolver::new(tech);
+    let targets = DesignTargets {
+        retention_time: retention,
+        retention_ber: ber,
+        read_disturb_ber: ber,
+        write_ber: ber,
+    };
+    let d = solver.solve(&targets);
+
+    println!("== design point: {} @ BER {ber:.0e} ({}) ==", fmt_time(retention), tech.name);
+    println!("Δ_scaled {:.2} → Δ_PT_GB {:.2} → Δ_PT_MAX {:.2}", d.delta_scaled, d.delta_guard_banded, d.delta_pt_max);
+    println!("write pulse {}  read pulse {}", fmt_time(d.write_pulse), fmt_time(d.read_pulse));
+
+    // Verify the reliability budget at every PT corner.
+    println!("\n== corner verification ==");
+    let v = solver.variation;
+    for corner in PtCorner::ALL {
+        let delta = corner.delta(&v, d.delta_guard_banded);
+        let p_rf = retention_failure_prob(retention, tech.tau_ret, delta);
+        let p_rd = read_disturb_prob(d.read_pulse, tech.tau_rd, delta, tech.read_ratio);
+        let wer = write_error_rate(d.write_pulse, tech.tau_w, delta, d.overdrive);
+        println!(
+            "{corner:?}: Δ_eff={delta:.1}  P_RF={p_rf:.2e}  P_RD={p_rd:.2e}  WER={wer:.2e}"
+        );
+    }
+
+    // The Fig. 9 adjustable write driver across the PTM operating map.
+    println!("\n== adjustable write driver (Fig. 9), 4 extra legs ==");
+    let params = tech.params_at_delta(d.delta_guard_banded);
+    let driver = WriteDriver::new(v, d.delta_guard_banded, d.overdrive, params.critical_current(), 4, 0.9);
+    for (sigma, temp) in [(0.0, 300.0), (2.0, 273.0), (4.0, 253.0), (-4.0, 393.0)] {
+        let s = PtmSample { process_sigma: sigma, temperature: temp };
+        match driver.legs_for(&s) {
+            Some(legs) => println!(
+                "  σ={sigma:+.0} T={temp:.0}K → {legs} extra legs, I_w={:.1} µA, E_w={:.3} pJ",
+                driver.supplied_current(legs) * 1e6,
+                driver.write_energy(&s, d.write_pulse).unwrap() * 1e12
+            ),
+            None => println!("  σ={sigma:+.0} T={temp:.0}K → OUT OF SPEC (write driver exhausted)"),
+        }
+    }
+    println!(
+        "\ntypical-corner energy saving vs worst-case-sized driver: {:.1}%",
+        driver.typical_saving_fraction(d.write_pulse) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Quickstart: the whole stack in ~60 lines.
+//!
+//! 1. Solve a customized STT-MRAM design point from an occupancy target.
+//! 2. Compose the STT-AI buffer system and compare it with the SRAM baseline.
+//! 3. Load the AOT TinyCNN artifact and run one fault-injected inference.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use std::path::Path;
+
+use stt_ai::config::GlbVariant;
+use stt_ai::coordinator::{Engine, EngineConfig};
+use stt_ai::memsys::BufferSystem;
+use stt_ai::mram::{DesignTargets, MtjTech, ScalingSolver};
+use stt_ai::util::units::fmt_time;
+
+fn main() -> anyhow::Result<()> {
+    // -- 1. Device-level co-design: GLB retention 3 s @ BER 1e-8 (§V.C).
+    let solver = ScalingSolver::new(MtjTech::sakhare2020());
+    let glb = solver.solve(&DesignTargets::global_buffer());
+    println!(
+        "GLB MRAM design: Δ={:.1} (guard-banded {:.1})",
+        glb.delta_scaled, glb.delta_guard_banded
+    );
+    println!(
+        "  write pulse {}  read pulse {}",
+        fmt_time(glb.write_pulse),
+        fmt_time(glb.read_pulse)
+    );
+    println!("  write energy {:.2}x of the 10-year base cell", glb.rel_write_energy);
+
+    // -- 2. System-level: buffer area/leakage vs the SRAM baseline.
+    let baseline = BufferSystem::baseline_12mb();
+    let stt_ai = BufferSystem::stt_ai_12mb();
+    println!(
+        "\n12 MB buffer: SRAM {:.2} mm² vs STT-MRAM(+scratchpad) {:.2} mm²  ({:.1}x denser)",
+        baseline.area_mm2(),
+        stt_ai.area_mm2(),
+        baseline.area_mm2() / stt_ai.area_mm2()
+    );
+
+    // -- 3. Serve one batch through the AOT artifact with the Ultra fault model.
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        println!("\n(artifacts/ missing — run `make artifacts` for the inference demo)");
+        return Ok(());
+    }
+    let engine = Engine::load(artifacts, EngineConfig::new(GlbVariant::SttAiUltra))?;
+    let model = engine.model_for_batch(1)?;
+    let (images, labels) = engine.manifest.load_testset()?;
+    let per_image: usize = engine.manifest.testset.image_shape.iter().product::<i64>() as usize;
+    let logits = engine.infer(&model, &images[..per_image])?;
+    let pred = model.predictions(&logits)[0];
+    println!(
+        "\nTinyCNN on PJRT: predicted class {pred} (label {}), {} bit flips injected",
+        labels[0], engine.flips
+    );
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Open-loop serving demo: a producer thread feeds requests at a target
+//! rate through the dynamic batcher while the engine drains them — the
+//! vLLM-router-shaped view of the coordinator (threaded; the build is
+//! offline so no async runtime, the loop structure is identical).
+//!
+//! Run: `make artifacts && cargo run --release --example serve [rate_rps]`
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use stt_ai::config::GlbVariant;
+use stt_ai::coordinator::{Batcher, Engine, EngineConfig, Metrics, Request};
+
+const N_REQUESTS: usize = 512;
+const BATCH: usize = 16;
+
+fn main() -> anyhow::Result<()> {
+    let rate: f64 = std::env::args().nth(1).map(|s| s.parse()).transpose()?.unwrap_or(2000.0);
+    let artifacts = Path::new("artifacts");
+    let engine = Engine::load(artifacts, EngineConfig::new(GlbVariant::SttAiUltra))?;
+    let model = engine.model_for_batch(BATCH)?;
+    let (images, _) = engine.manifest.load_testset()?;
+    let per_image: usize = engine.manifest.testset.image_shape.iter().product::<i64>() as usize;
+    let n_test = engine.manifest.testset.n;
+
+    // Producer: one request every 1/rate seconds.
+    let (tx, rx) = mpsc::channel::<Request>();
+    let producer = std::thread::spawn(move || {
+        let gap = Duration::from_secs_f64(1.0 / rate);
+        for i in 0..N_REQUESTS {
+            let src = i % n_test;
+            let img = images[src * per_image..(src + 1) * per_image].to_vec();
+            if tx.send(Request::new(i as u64, img)).is_err() {
+                break;
+            }
+            std::thread::sleep(gap);
+        }
+    });
+
+    // Consumer: batcher + engine.
+    let mut batcher = Batcher::new(BATCH, Duration::from_millis(2), per_image, 4096);
+    let mut metrics = Metrics::new();
+    let mut served = 0usize;
+    while served < N_REQUESTS {
+        // Drain whatever has arrived.
+        while let Ok(r) = rx.try_recv() {
+            batcher.push(r);
+        }
+        let now = Instant::now();
+        if batcher.ready(now) {
+            if let Some(b) = batcher.form(BATCH, now) {
+                let t0 = Instant::now();
+                let _ = engine.infer(&model, &b.images)?;
+                metrics.record_batch(b.real, b.capacity, t0.elapsed() + b.oldest_wait);
+                served += b.real;
+            }
+        } else {
+            std::thread::sleep(Duration::from_micros(100));
+        }
+    }
+    producer.join().ok();
+
+    println!("open-loop @ {rate:.0} req/s target: {}", metrics.summary());
+    println!("sustained throughput {:.1} req/s", metrics.throughput());
+    Ok(())
+}

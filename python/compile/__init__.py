@@ -1,0 +1,1 @@
+"""Build-time compile package (never imported at runtime)."""

@@ -1,0 +1,96 @@
+"""AOT compile path: train TinyCNN, lower the Pallas forward to HLO text,
+dump weights/test-set binaries and the manifest the Rust runtime consumes.
+
+HLO *text* is the interchange format (NOT jax's serialized proto): the
+image's xla_extension 0.5.1 rejects jax>=0.5 64-bit-id protos; the text
+parser reassigns ids. See /opt/xla-example/README.md and gen_hlo.py.
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, train
+
+BATCHES = (1, 16)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_forward(batch):
+    """Lower forward_pallas_tuple for one batch size to HLO text."""
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in model.PARAM_SPECS]
+    x = jax.ShapeDtypeStruct((batch, *model.IMAGE_SHAPE), jnp.float32)
+    lowered = jax.jit(model.forward_pallas_tuple).lower(*specs, x)
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batches", type=int, nargs="*", default=list(BATCHES))
+    args = ap.parse_args()
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    print("== training TinyCNN (build-time, ref path) ==")
+    params, test_x, test_y, log = train.train()
+
+    # Flat weights blob + per-param offsets.
+    offsets, flat, cursor = [], [], 0
+    for (name, shape), p in zip(model.PARAM_SPECS, params):
+        arr = np.asarray(p, dtype=np.float32)
+        assert arr.shape == shape, (name, arr.shape, shape)
+        offsets.append({"name": name, "shape": list(shape), "offset": cursor})
+        flat.append(arr.reshape(-1))
+        cursor += arr.size
+    weights = np.concatenate(flat)
+    weights.tofile(out / "tinycnn_weights.bin")
+
+    np.asarray(test_x, np.float32).tofile(out / "test_images.bin")
+    np.asarray(test_y, np.float32).tofile(out / "test_labels.bin")
+
+    models = {}
+    for batch in args.batches:
+        print(f"== lowering forward_pallas (batch {batch}) ==")
+        hlo = lower_forward(batch)
+        name = f"tinycnn_b{batch}"
+        hlo_file = f"{name}.hlo.txt"
+        (out / hlo_file).write_text(hlo)
+        print(f"   wrote {hlo_file}: {len(hlo)} chars")
+        models[name] = {
+            "hlo": hlo_file,
+            "batch": batch,
+            "input_shape": list(model.IMAGE_SHAPE),
+            "num_classes": model.NUM_CLASSES,
+            "params": offsets,
+        }
+
+    manifest = {
+        "models": models,
+        "weights": "tinycnn_weights.bin",
+        "testset": {
+            "images": "test_images.bin",
+            "labels": "test_labels.bin",
+            "n": int(test_x.shape[0]),
+            "image_shape": list(model.IMAGE_SHAPE),
+        },
+        "train_meta": log,
+    }
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"== manifest written to {out / 'manifest.json'} ==")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""L1 Pallas kernel: bit-flip fault injection (the STT-MRAM BER model).
+
+Flips selected raw bits of an f32 buffer by XOR-ing a uint32 mask lane-wise
+— the same fault mechanism the Rust coordinator applies to the bf16 weight
+image, expressed as a kernel so the fault model can also be studied at the
+L1/L2 level (kernel-ablation benches). Bitcast-XOR-bitcast is exactly what
+an in-buffer retention/read-disturb upset does to a stored word.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _flip_kernel(x_ref, m_ref, o_ref):
+    bits = jax.lax.bitcast_convert_type(x_ref[...], jnp.uint32)
+    o_ref[...] = jax.lax.bitcast_convert_type(bits ^ m_ref[...], jnp.float32)
+
+
+@jax.jit
+def bitflip(x, mask):
+    """x: f32 (n,), mask: uint32 (n,) -> f32 (n,) with bits XOR'd."""
+    assert x.ndim == 1 and x.shape == mask.shape
+    n = x.shape[0]
+    return pl.pallas_call(
+        _flip_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), mask.astype(jnp.uint32))

@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: the reconfigurable core's convolution mode (Fig. 3c).
+
+The paper's conv PE performs P_s-wide dot products between stationary kernel
+rows and streaming ifmap rows (row-stationary), accumulating partial sums
+per input channel. The TPU rethink: one grid step owns one image's full conv
+(batch is the grid dimension — the HBM→VMEM schedule the paper expressed
+with PE-block scheduling); inside the kernel the 3x3 window is unrolled into
+nine shifted (Cout × Cin) dot products — each an einsum over the channel
+axis, the same "dot-product block + partial-sum accumulation" structure as
+the PE array, with f32 accumulators standing in for the FP32 adders.
+
+interpret=True for CPU-PJRT executability (see systolic_mm.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref):
+    # x: (1, Cin, H+2, W+2) padded slice for this image
+    # w: (Cout, Cin, 3, 3), b: (Cout,), o: (1, Cout, H, W)
+    x = x_ref[...][0].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    h = o_ref.shape[2]
+    wd = o_ref.shape[3]
+    acc = jnp.zeros(o_ref.shape[1:], jnp.float32)
+    # Unrolled 3x3: nine P_s-wide dot-product passes with psum accumulation.
+    for i in range(3):
+        for j in range(3):
+            patch = x[:, i : i + h, j : j + wd]  # (Cin, H, W)
+            acc = acc + jnp.einsum(
+                "oc,chw->ohw", w[:, :, i, j], patch,
+                preferred_element_type=jnp.float32,
+            )
+    o_ref[...] = (acc + b[:, None, None])[None]
+
+
+@jax.jit
+def conv3x3_same(x, w, b):
+    """3x3 'same' conv, NCHW/OIHW, stride 1, f32 accumulation.
+
+    x: (N, Cin, H, W), w: (Cout, Cin, 3, 3), b: (Cout,).
+    """
+    n, cin, h, wd = x.shape
+    cout = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (0, 0), (1, 1), (1, 1)))
+    return pl.pallas_call(
+        _conv_kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, cin, h + 2, wd + 2), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((cout, cin, 3, 3), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, cout, h, wd), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, cout, h, wd), jnp.float32),
+        interpret=True,
+    )(xp, w, b)
+
+
+def vmem_bytes(cin, cout, h, w, itemsize=4):
+    """Per-grid-step VMEM estimate: padded ifmap + weights + ofmap."""
+    return itemsize * (cin * (h + 2) * (w + 2) + cout * cin * 9 + cout * h * w)

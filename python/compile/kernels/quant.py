@@ -1,0 +1,77 @@
+"""L1: the int8 inference path (the paper's inference-only hardware).
+
+The paper's core is BF16 for training but "if only inference is desired,
+the hardware can be 8-bit int8 type". This module provides symmetric
+per-tensor int8 quantization and a Pallas int8 matmul with i32
+accumulation — the systolic mode of the int8 build.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def quantize(x, scale=None):
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    x = x.astype(jnp.float32)
+    if scale is None:
+        amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+        scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def matmul_i8_ref(xq, wq):
+    """Reference int8 matmul: i32 accumulation."""
+    return jnp.matmul(xq.astype(jnp.int32), wq.astype(jnp.int32))
+
+
+def _mm_i8_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...].astype(jnp.int32),
+        w_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def _pick_block(dim, target):
+    b = min(dim, target)
+    while dim % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul_i8(xq, wq, bm=128, bn=128):
+    """int8 × int8 → int32 tiled Pallas matmul (interpret=True)."""
+    m, k = xq.shape
+    k2, n = wq.shape
+    assert k == k2
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    return pl.pallas_call(
+        _mm_i8_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(xq, wq)
+
+
+def linear_quantized(x, w, x_scale=None):
+    """f32 linear layer through the int8 path: quantize, i8 matmul,
+    dequantize with the product of scales."""
+    xq, sx = quantize(x, x_scale)
+    wq, sw = quantize(w)
+    acc = matmul_i8(xq, wq)
+    return acc.astype(jnp.float32) * (sx * sw)

@@ -1,0 +1,44 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has its semantics defined here first; pytest
+(`python/tests/`) asserts `assert_allclose(kernel(...), ref(...))` across a
+hypothesis-driven sweep of shapes and dtypes. These functions are also what
+`train.py` uses on its fast path (interpret-mode Pallas is far too slow to
+train with).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Reference for systolic_mm: plain f32-accumulated matmul."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32)
+
+
+def conv3x3_same_ref(x, w, b):
+    """Reference for conv_pe: 3x3 'same' convolution, NCHW / OIHW.
+
+    x: (N, Cin, H, W), w: (Cout, Cin, 3, 3), b: (Cout,)
+    returns (N, Cout, H, W), f32 accumulation.
+    """
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out + b.astype(jnp.float32)[None, :, None, None]
+
+
+def bitflip_ref(x, mask):
+    """Reference for ber_inject: xor the raw bits of f32 lanes with mask."""
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    return jax.lax.bitcast_convert_type(bits ^ mask, jnp.float32)
+
+
+def maxpool2_ref(x):
+    """2x2 max pooling, NCHW, H and W even."""
+    n, c, h, w = x.shape
+    return x.reshape(n, c, h // 2, 2, w // 2, 2).max(axis=(3, 5))

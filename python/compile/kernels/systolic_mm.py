@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: the systolic-array matrix multiply (paper Fig. 3b).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's systolic
+mode loads an (H_A × W_SA) tile of weights and streams activations through
+it. On TPU the analogous structure is an MXU-targeted tile matmul: the
+BlockSpec pins a (bk-wide) weight stripe in VMEM per (i, j) grid step — the
+"stationary" operand — while activation tiles stream past. f32 accumulation
+mirrors the PE's FP32 adders behind the BFloat16 multipliers.
+
+Runs under interpret=True: the CPU PJRT client cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO (see /opt/xla-example).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_kernel(x_ref, w_ref, o_ref):
+    # One (bm, bn) output tile: full-K stripes of x and w are resident
+    # (the weight stripe is the 'stationary' operand of the systolic array).
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_block(dim, target):
+    """Largest divisor of `dim` that is <= target (keeps the grid exact)."""
+    b = min(dim, target)
+    while dim % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul(x, w, bm=128, bn=128):
+    """x: (M, K) @ w: (K, N) -> (M, N) f32, tiled Pallas matmul."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def vmem_bytes(m, k, n, bm=128, bn=128, itemsize=4):
+    """Estimated VMEM working set per grid step (perf model, DESIGN.md §Perf):
+    x stripe (bm, K) + w stripe (K, bn) + out tile (bm, bn)."""
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    return itemsize * (bm * k + k * bn + bm * bn)

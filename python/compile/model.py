@@ -1,0 +1,89 @@
+"""L2: the TinyCNN model assembled from the L1 Pallas kernels.
+
+TinyCNN is the end-to-end accuracy workload of the Fig. 21 reproduction
+(DESIGN.md §3 documents the ImageNet→synthetic substitution): a small conv
+net — conv(1→8) → pool → conv(8→32) → pool → fc(512→128) → fc(128→10) —
+over 16x16 single-channel images, 10 classes, ~70k parameters.
+
+Two forward paths with identical semantics (pytest asserts so):
+
+* `forward_pallas` — built on `kernels.conv_pe` / `kernels.systolic_mm`;
+  this is what `aot.py` lowers to the HLO artifact the Rust runtime serves.
+* `forward_ref`    — pure-jnp (kernels/ref.py); used by `train.py` where
+  interpret-mode Pallas would be orders of magnitude too slow.
+
+Params flow as a flat list of arrays so the lowered HLO takes each tensor
+as a separate parameter — the Rust side rebuilds them from the flat weight
+file via the manifest offsets and can fault-inject any of them.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv_pe, ref, systolic_mm
+
+IMAGE_SHAPE = (1, 16, 16)
+NUM_CLASSES = 10
+
+# (name, shape) in call order — single source of truth for model.py,
+# train.py, aot.py and the Rust manifest.
+PARAM_SPECS = [
+    ("conv1_w", (8, 1, 3, 3)),
+    ("conv1_b", (8,)),
+    ("conv2_w", (32, 8, 3, 3)),
+    ("conv2_b", (32,)),
+    ("fc1_w", (512, 128)),
+    ("fc1_b", (128,)),
+    ("fc2_w", (128, 10)),
+    ("fc2_b", (10,)),
+]
+
+
+def init_params(key):
+    """He-init parameters as a list in PARAM_SPECS order."""
+    params = []
+    for name, shape in PARAM_SPECS:
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for d in shape[1:] if len(shape) == 4 else shape[:1]:
+                fan_in *= d
+            scale = jnp.sqrt(2.0 / fan_in)
+            params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _head(h, fc1_w, fc1_b, fc2_w, fc2_b, mm):
+    n = h.shape[0]
+    h = h.reshape(n, -1)
+    h = jax.nn.relu(mm(h, fc1_w) + fc1_b)
+    return mm(h, fc2_w) + fc2_b
+
+
+def forward_pallas(params, x):
+    """Logits via the Pallas kernels. x: (N, 1, 16, 16) -> (N, 10)."""
+    c1w, c1b, c2w, c2b, f1w, f1b, f2w, f2b = params
+    h = jax.nn.relu(conv_pe.conv3x3_same(x, c1w, c1b))
+    h = ref.maxpool2_ref(h)  # pooling stays jnp (paper: pool is not the PE)
+    h = jax.nn.relu(conv_pe.conv3x3_same(h, c2w, c2b))
+    h = ref.maxpool2_ref(h)
+    return _head(h, f1w, f1b, f2w, f2b, systolic_mm.matmul)
+
+
+def forward_ref(params, x):
+    """Same model on the pure-jnp reference ops (fast path for training)."""
+    c1w, c1b, c2w, c2b, f1w, f1b, f2w, f2b = params
+    h = jax.nn.relu(ref.conv3x3_same_ref(x, c1w, c1b))
+    h = ref.maxpool2_ref(h)
+    h = jax.nn.relu(ref.conv3x3_same_ref(h, c2w, c2b))
+    h = ref.maxpool2_ref(h)
+    return _head(h, f1w, f1b, f2w, f2b, ref.matmul_ref)
+
+
+def forward_pallas_tuple(*args):
+    """AOT entrypoint: (w..., x) -> (logits,). Tuple return for the HLO
+    bridge (return_tuple=True), see /opt/xla-example/gen_hlo.py."""
+    params, x = list(args[:-1]), args[-1]
+    return (forward_pallas(params, x),)

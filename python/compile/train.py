@@ -1,0 +1,93 @@
+"""Build-time training of TinyCNN on the synthetic dataset.
+
+A few hundred Adam steps on the pure-jnp forward (kernels/ref.py — the
+Pallas path is numerically identical but interpret-mode slow). The loss
+curve is logged to artifacts/train_log.json and summarized in
+EXPERIMENTS.md. Deterministic: fixed seeds end to end.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+
+from . import data, model
+
+TRAIN_N = 4096
+TEST_N = 512
+BATCH = 64
+STEPS = 400
+LR = 1e-3
+SEED = 0
+
+
+def cross_entropy(params, x, y):
+    logits = model.forward_ref(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(logp[jnp.arange(x.shape[0]), y])
+
+
+@jax.jit
+def adam_step(params, m, v, t, x, y):
+    loss, grads = jax.value_and_grad(cross_entropy)(params, x, y)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    new_params, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = b1 * mi + (1 - b1) * g
+        vi = b2 * vi + (1 - b2) * g * g
+        mhat = mi / (1 - b1**t)
+        vhat = vi / (1 - b2**t)
+        new_params.append(p - LR * mhat / (jnp.sqrt(vhat) + eps))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_params, new_m, new_v, loss
+
+
+def accuracy(params, x, y, batch=256):
+    correct = 0
+    for i in range(0, x.shape[0], batch):
+        logits = model.forward_ref(params, x[i : i + batch])
+        correct += int((jnp.argmax(logits, -1) == y[i : i + batch]).sum())
+    return correct / x.shape[0]
+
+
+def train(verbose=True):
+    """Returns (params, test_images, test_labels, log_dict)."""
+    key = jax.random.PRNGKey(SEED)
+    k_init, k_train, k_test = jax.random.split(key, 3)
+    train_x, train_y = data.make_dataset(k_train, TRAIN_N)
+    test_x, test_y = data.make_dataset(k_test, TEST_N)
+
+    params = model.init_params(k_init)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+
+    losses = []
+    perm_key = jax.random.PRNGKey(SEED + 1)
+    for step in range(1, STEPS + 1):
+        perm_key, sub = jax.random.split(perm_key)
+        idx = jax.random.randint(sub, (BATCH,), 0, TRAIN_N)
+        params, m, v, loss = adam_step(params, m, v, step, train_x[idx], train_y[idx])
+        if step % 20 == 0 or step == 1:
+            losses.append((step, float(loss)))
+            if verbose:
+                print(f"step {step:4d}  loss {float(loss):.4f}")
+
+    train_acc = accuracy(params, train_x, train_y)
+    test_acc = accuracy(params, test_x, test_y)
+    if verbose:
+        print(f"train acc {train_acc:.4f}  test acc {test_acc:.4f}")
+    log = {
+        "steps": STEPS,
+        "batch": BATCH,
+        "lr": LR,
+        "loss_curve": losses,
+        "train_acc": train_acc,
+        "test_acc": test_acc,
+    }
+    return params, test_x, test_y, log
+
+
+if __name__ == "__main__":
+    _, _, _, log = train()
+    print(json.dumps(log["loss_curve"]))

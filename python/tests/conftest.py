@@ -1,0 +1,6 @@
+"""Make the build-time `compile` package importable when pytest runs from
+the repository root (the Makefile runs it from python/)."""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))

@@ -1,0 +1,32 @@
+"""AOT path: lowering produces loadable HLO text with the right signature."""
+
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+def test_lower_forward_emits_hlo_text():
+    hlo = aot.lower_forward(batch=1)
+    assert "ENTRY" in hlo and "HloModule" in hlo
+    # One parameter per weight tensor + the image input, inside the ENTRY
+    # computation body (HLO text puts the body between "ENTRY ... {" and "}").
+    entry_body = hlo.split("ENTRY", 1)[1]
+    entry_body = entry_body.split("\n}", 1)[0]
+    n_params = entry_body.count("parameter(")
+    assert n_params == len(model.PARAM_SPECS) + 1, entry_body
+
+
+def test_lowered_output_shape_in_text():
+    hlo = aot.lower_forward(batch=1)
+    # Tuple-wrapped (1, 10) logits.
+    assert "(f32[1,10]" in hlo.replace(" ", "") or "f32[1,10]" in hlo
+
+
+def test_param_specs_order_matches_model():
+    names = [n for n, _ in model.PARAM_SPECS]
+    assert names == [
+        "conv1_w", "conv1_b", "conv2_w", "conv2_b",
+        "fc1_w", "fc1_b", "fc2_w", "fc2_b",
+    ]
+    sizes = [int(jnp.zeros(s).size) for _, s in model.PARAM_SPECS]
+    assert sum(sizes) == 8 * 1 * 9 + 8 + 32 * 8 * 9 + 32 + 512 * 128 + 128 + 128 * 10 + 10

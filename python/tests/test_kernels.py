@@ -1,0 +1,142 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle,
+hypothesis-swept over shapes and dtypes (the CORE correctness signal)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ber_inject, conv_pe, ref, systolic_mm
+
+settings.register_profile("kernels", deadline=None, max_examples=12)
+settings.load_profile("kernels")
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------- systolic_mm
+
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 64),
+    n=st.integers(1, 48),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_matmul_matches_ref(m, k, n, dtype):
+    x = rand(m * 7 + 1, (m, k), dtype)
+    w = rand(n * 13 + 2, (k, n), dtype)
+    got = systolic_mm.matmul(x, w)
+    want = ref.matmul_ref(x, w)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(got, want, rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("bm,bn", [(1, 1), (8, 8), (128, 128), (7, 3)])
+def test_matmul_block_shapes(bm, bn):
+    x = rand(1, (24, 32), jnp.float32)
+    w = rand(2, (32, 12), jnp.float32)
+    np.testing.assert_allclose(
+        systolic_mm.matmul(x, w, bm=bm, bn=bn), ref.matmul_ref(x, w),
+        rtol=1e-4, atol=1e-5,  # reduction order differs per block shape
+    )
+
+
+def test_matmul_rejects_bad_inner_dim():
+    with pytest.raises(AssertionError):
+        systolic_mm.matmul(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+
+
+def test_matmul_vmem_estimate_positive():
+    assert systolic_mm.vmem_bytes(256, 512, 256) > 0
+    # Full-K stripes: VMEM grows linearly in K.
+    assert systolic_mm.vmem_bytes(256, 1024, 256) > systolic_mm.vmem_bytes(256, 512, 256)
+
+
+# -------------------------------------------------------------------- conv_pe
+
+@given(
+    n=st.integers(1, 4),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 8),
+    hw=st.sampled_from([4, 6, 8, 16]),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_conv_matches_ref(n, cin, cout, hw, dtype):
+    x = rand(n * 31 + 3, (n, cin, hw, hw), dtype)
+    w = rand(cout * 17 + 4, (cout, cin, 3, 3), dtype)
+    b = rand(5, (cout,), dtype)
+    got = conv_pe.conv3x3_same(x, w, b)
+    want = ref.conv3x3_same_ref(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=3e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=1e-3)
+
+
+def test_conv_identity_kernel():
+    # A delta kernel must reproduce the input channel.
+    x = rand(6, (1, 1, 8, 8), jnp.float32)
+    w = jnp.zeros((1, 1, 3, 3), jnp.float32).at[0, 0, 1, 1].set(1.0)
+    b = jnp.zeros((1,), jnp.float32)
+    np.testing.assert_allclose(conv_pe.conv3x3_same(x, w, b), x, rtol=1e-6)
+
+
+def test_conv_bias_broadcast():
+    x = jnp.zeros((2, 3, 4, 4), jnp.float32)
+    w = jnp.zeros((5, 3, 3, 3), jnp.float32)
+    b = jnp.arange(5, dtype=jnp.float32)
+    out = conv_pe.conv3x3_same(x, w, b)
+    for c in range(5):
+        np.testing.assert_allclose(out[:, c], jnp.full((2, 4, 4), float(c)))
+
+
+def test_conv_vmem_estimate():
+    assert conv_pe.vmem_bytes(8, 32, 16, 16) > 0
+
+
+# ----------------------------------------------------------------- ber_inject
+
+@given(n=st.integers(1, 256), seed=st.integers(0, 2**31 - 1))
+def test_bitflip_matches_ref(n, seed):
+    x = rand(seed % 1000, (n,), jnp.float32)
+    mask = jnp.asarray(
+        np.random.RandomState(seed % 2**31).randint(0, 2**32, size=n, dtype=np.uint64)
+    ).astype(jnp.uint32)
+    got = ber_inject.bitflip(x, mask)
+    want = ref.bitflip_ref(x, mask)
+    np.testing.assert_array_equal(
+        np.asarray(got).view(np.uint32), np.asarray(want).view(np.uint32)
+    )
+
+
+def test_bitflip_zero_mask_identity():
+    x = rand(1, (64,), jnp.float32)
+    out = ber_inject.bitflip(x, jnp.zeros(64, jnp.uint32))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+def test_bitflip_involution():
+    x = rand(2, (64,), jnp.float32)
+    mask = jnp.full((64,), (1 << 22) | (1 << 3), jnp.uint32)
+    twice = ber_inject.bitflip(ber_inject.bitflip(x, mask), mask)
+    np.testing.assert_array_equal(np.asarray(twice), np.asarray(x))
+
+
+def test_bitflip_sign_bit():
+    x = jnp.array([1.0, -2.5], jnp.float32)
+    out = ber_inject.bitflip(x, jnp.full((2,), 1 << 31, jnp.uint32))
+    np.testing.assert_allclose(np.asarray(out), [-1.0, 2.5])
+
+
+# ------------------------------------------------------------------- maxpool
+
+@given(n=st.integers(1, 3), c=st.integers(1, 4), hw=st.sampled_from([2, 4, 8]))
+def test_maxpool_ref_matches_lax(n, c, hw):
+    x = rand(9, (n, c, hw, hw), jnp.float32)
+    want = jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    )
+    np.testing.assert_allclose(ref.maxpool2_ref(x), want)

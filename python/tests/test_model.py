@@ -1,0 +1,57 @@
+"""L2 correctness: the Pallas-built TinyCNN against its jnp reference,
+shape contracts, and the PARAM_SPECS single-source-of-truth."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(42))
+
+
+def test_param_specs_consistent(params):
+    assert len(params) == len(model.PARAM_SPECS)
+    for p, (name, shape) in zip(params, model.PARAM_SPECS):
+        assert p.shape == shape, name
+        assert p.dtype == jnp.float32
+
+
+def test_forward_shapes(params):
+    for batch in (1, 3, 16):
+        x = jnp.zeros((batch, *model.IMAGE_SHAPE), jnp.float32)
+        out = model.forward_ref(params, x)
+        assert out.shape == (batch, model.NUM_CLASSES)
+
+
+def test_pallas_equals_ref(params):
+    # The core L2 signal: both forward paths are the same function.
+    x, _ = data.make_dataset(jax.random.PRNGKey(7), 4)
+    got = model.forward_pallas(params, x)
+    want = model.forward_ref(params, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_aot_entrypoint_tuple(params):
+    x, _ = data.make_dataset(jax.random.PRNGKey(8), 2)
+    out = model.forward_pallas_tuple(*params, x)
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (2, model.NUM_CLASSES)
+
+
+def test_param_count_is_tinycnn_class():
+    n = sum(int(np.prod(s)) for _, s in model.PARAM_SPECS)
+    assert 60_000 < n < 90_000, n
+
+
+def test_bias_only_changes_logits(params):
+    x, _ = data.make_dataset(jax.random.PRNGKey(9), 2)
+    base = model.forward_ref(params, x)
+    bumped = list(params)
+    bumped[-1] = bumped[-1] + 1.0  # fc2 bias
+    out = model.forward_ref(bumped, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base) + 1.0, rtol=1e-5)

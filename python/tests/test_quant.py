@@ -1,0 +1,61 @@
+"""int8 quantized path: Pallas kernel vs reference, quantization error
+bounds, and end-to-end quantized-linear accuracy."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant
+
+settings.register_profile("quant", deadline=None, max_examples=10)
+settings.load_profile("quant")
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@given(m=st.integers(1, 32), k=st.integers(1, 48), n=st.integers(1, 32))
+def test_matmul_i8_matches_ref(m, k, n):
+    xq, _ = quant.quantize(rand(m + 100, (m, k)))
+    wq, _ = quant.quantize(rand(n + 200, (k, n)))
+    got = quant.matmul_i8(xq, wq)
+    want = quant.matmul_i8_ref(xq, wq)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert got.dtype == jnp.int32
+
+
+def test_quantize_roundtrip_error_bound():
+    x = rand(1, (64, 64), scale=3.0)
+    q, s = quant.quantize(x)
+    back = quant.dequantize(q, s)
+    # Symmetric int8: max error is half a step.
+    max_err = float(jnp.max(jnp.abs(back - x)))
+    assert max_err <= float(s) * 0.5 + 1e-6
+
+
+def test_quantize_preserves_zero_and_sign():
+    x = jnp.array([[0.0, -1.0, 1.0, -0.5]], jnp.float32)
+    q, s = quant.quantize(x)
+    qa = np.asarray(q)
+    assert qa[0, 0] == 0
+    assert qa[0, 1] < 0 < qa[0, 2]
+    assert s > 0
+
+
+def test_quantize_saturates_at_127():
+    x = jnp.array([[1000.0, -1000.0, 0.1]], jnp.float32)
+    q, _ = quant.quantize(x)
+    qa = np.asarray(q)
+    assert qa[0, 0] == 127 and qa[0, 1] == -127
+
+
+def test_linear_quantized_close_to_f32():
+    x = rand(3, (8, 64))
+    w = rand(4, (64, 16)) * 0.1
+    got = quant.linear_quantized(x, w)
+    want = jnp.matmul(x, w)
+    # int8 linear: ~1% relative error at these scales.
+    err = float(jnp.max(jnp.abs(got - want)) / (jnp.max(jnp.abs(want)) + 1e-8))
+    assert err < 0.05, err

@@ -1,0 +1,16 @@
+//! Bench: regenerate Fig. 10 (model sizes + conv fmap/weight ranges) and
+//! time the zoo analysis.
+use stt_ai::dse::capacity::CapacityRow;
+use stt_ai::models::{self, DType};
+use stt_ai::report;
+use stt_ai::util::bench::Bencher;
+
+fn main() {
+    report::fig10(&mut std::io::stdout().lock()).unwrap();
+    let b = Bencher::new();
+    b.run("fig10/zoo_build", || models::zoo().len());
+    let zoo = models::zoo();
+    b.run("fig10/analyze_19_models", || {
+        zoo.iter().map(|m| CapacityRow::analyze(m, DType::Bf16, &[1]).size_bf16).sum::<u64>()
+    });
+}

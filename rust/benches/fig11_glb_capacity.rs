@@ -1,0 +1,17 @@
+//! Bench: regenerate Fig. 11 (required GLB capacity vs batch).
+use stt_ai::dse::capacity;
+use stt_ai::models::{self, DType};
+use stt_ai::report;
+use stt_ai::util::bench::Bencher;
+
+fn main() {
+    report::fig11(&mut std::io::stdout().lock()).unwrap();
+    let zoo = models::zoo();
+    let b = Bencher::new();
+    b.run("fig11/capacity_sweep_4_batches", || {
+        [1u64, 2, 4, 8]
+            .iter()
+            .map(|&n| capacity::glb_capacity_for_zoo(&zoo, DType::Bf16, n))
+            .sum::<u64>()
+    });
+}

@@ -1,0 +1,26 @@
+//! Bench: regenerate Fig. 12 (extra DRAM latency/energy, 12 MB GLB).
+use stt_ai::accel::ArrayConfig;
+use stt_ai::dse::capacity::DramOverheadRow;
+use stt_ai::memsys::DramModel;
+use stt_ai::models::{self, DType};
+use stt_ai::report;
+use stt_ai::util::bench::Bencher;
+use stt_ai::util::units::MB;
+
+fn main() {
+    report::fig12(&mut std::io::stdout().lock()).unwrap();
+    let zoo = models::zoo();
+    let a = ArrayConfig::paper_42x42();
+    let d = DramModel::ddr4_2933_dual();
+    Bencher::new().run("fig12/full_grid_19x4x2", || {
+        let mut acc = 0.0f64;
+        for m in &zoo {
+            for dt in [DType::Int8, DType::Bf16] {
+                for batch in [1u64, 2, 4, 8] {
+                    acc += DramOverheadRow::analyze(m, &a, &d, dt, batch, 12 * MB).extra_latency;
+                }
+            }
+        }
+        acc
+    });
+}

@@ -1,0 +1,16 @@
+//! Bench: regenerate Fig. 15 (Δ scaling panels, both base cases).
+use stt_ai::dse::delta::{paper_design_points, DeltaSweep};
+use stt_ai::mram::MtjTech;
+use stt_ai::report;
+use stt_ai::util::bench::Bencher;
+
+fn main() {
+    report::fig15(&mut std::io::stdout().lock()).unwrap();
+    let deltas = DeltaSweep::default_deltas();
+    let b = Bencher::new();
+    b.run("fig15/sweep_51_deltas_x2_tech", || {
+        DeltaSweep::run(MtjTech::sakhare2020(), 1e-8, &deltas).retention.len()
+            + DeltaSweep::run(MtjTech::wei2019(), 1e-8, &deltas).retention.len()
+    });
+    b.run("fig15/solve_3_design_points", || paper_design_points(MtjTech::sakhare2020()).len());
+}

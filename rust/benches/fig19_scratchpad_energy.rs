@@ -1,0 +1,41 @@
+//! Bench: regenerate Fig. 19 (buffer energy SRAM / MRAM / MRAM+scratchpad)
+//! plus an ablation over scratchpad capacity (DESIGN.md ablation list).
+use stt_ai::accel::{ArrayConfig, ModelTraffic};
+use stt_ai::dse::scratchpad::ScratchpadEnergyRow;
+use stt_ai::memsys::{BufferSystem, EnergyLedger, GlbKind, Scratchpad};
+use stt_ai::models::{self, DType};
+use stt_ai::report;
+use stt_ai::util::bench::Bencher;
+use stt_ai::util::units::{KB, MB};
+
+fn main() {
+    report::fig19(&mut std::io::stdout().lock()).unwrap();
+
+    // Ablation: scratchpad capacity 0..104 KB for ResNet-50.
+    let a = ArrayConfig::paper_42x42();
+    let m = models::by_name("ResNet50").unwrap();
+    let traffic = ModelTraffic::analyze(&m, &a, DType::Bf16, 16, 12 * MB);
+    println!("== ablation: scratchpad capacity (ResNet-50, batch 16) ==");
+    for kb in [0u64, 13, 26, 52, 104] {
+        let sys = BufferSystem::new(
+            GlbKind::stt_ai(),
+            12 * MB,
+            (kb > 0).then(|| Scratchpad::new(kb * KB)),
+        );
+        let mut total = EnergyLedger::default();
+        for l in &traffic.layers {
+            total.add(&sys.layer_energy(
+                l.glb_reads,
+                l.glb_writes,
+                l.partial_bytes,
+                l.partial_rounds,
+                l.dram_bytes,
+            ));
+        }
+        println!("  {kb:>4} KB scratchpad: {:.3} mJ", total.total() * 1e3);
+    }
+
+    Bencher::new().run("fig19/three_way_comparison", || {
+        ScratchpadEnergyRow::analyze(&m, &a, DType::Bf16, 16).mram_scratchpad.total()
+    });
+}

@@ -1,0 +1,37 @@
+//! Bench: the Fig. 21 fault-injection accuracy grid on the AOT artifacts
+//! (skips politely without `make artifacts`), plus injection/inference
+//! throughput.
+use std::path::Path;
+
+use stt_ai::config::GlbVariant;
+use stt_ai::coordinator::{accuracy, Engine, EngineConfig};
+use stt_ai::util::bench::Bencher;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP fig21: run `make artifacts` first");
+        return;
+    }
+    for prune in [0.0, 0.5] {
+        let row = accuracy::fig21_row(dir, prune, 16, Some(256)).unwrap();
+        println!("== Fig. 21 (prune {prune}) ==");
+        for r in [&row.baseline, &row.stt_ai, &row.stt_ai_ultra] {
+            println!(
+                "  {:<14} top1 {:.4} top5 {:.4} flips {}",
+                r.variant, r.top1, r.top5, r.bit_flips
+            );
+        }
+    }
+    let engine = Engine::load(dir, EngineConfig::new(GlbVariant::SttAiUltra)).unwrap();
+    let model = engine.model_for_batch(16).unwrap();
+    let (images, _) = engine.manifest.load_testset().unwrap();
+    let chunk = &images[..16 * 256];
+    let b = Bencher { sample_target_s: 0.2, samples: 8 };
+    b.run("fig21/pjrt_infer_batch16", || engine.infer(&model, chunk).unwrap().len());
+    let mut e2 = Engine::load(dir, EngineConfig::new(GlbVariant::SttAiUltra)).unwrap();
+    b.run("fig21/rebuild_served_weights", || {
+        e2.rebuild_served();
+        e2.flips
+    });
+}

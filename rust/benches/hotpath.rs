@@ -1,0 +1,61 @@
+//! Hot-path microbenches driving the §Perf iteration (EXPERIMENTS.md §Perf):
+//! BER injection throughput, bf16 round-trip, retention analysis, JSON
+//! parse, batcher ops, and the figure-regeneration end-to-end cost.
+use std::time::Duration;
+
+use stt_ai::accel::{ArrayConfig, RetentionAnalysis};
+use stt_ai::ber::{BankSplit, Injector, WordKind};
+use stt_ai::coordinator::{Batcher, Request};
+use stt_ai::models;
+use stt_ai::util::bench::Bencher;
+use stt_ai::util::bf16::{bf16_to_f32, f32_to_bf16};
+use stt_ai::util::json::Json;
+
+fn main() {
+    let b = Bencher::new();
+
+    // BER injector: 16 MB buffer at GLB-like BERs. Report GB/s.
+    let mut buf = vec![0u8; 16 << 20];
+    for ber in [1e-8, 1e-5, 1e-3] {
+        let label = format!("injector/flip_16MB@{ber:.0e}");
+        let mut inj = Injector::new(42);
+        let r = b.run(&label, || inj.flip(&mut buf, ber).bits_flipped);
+        println!("    -> {:.2} GB/s", (16u64 << 20) as f64 / r.median_ns);
+    }
+    let split = BankSplit::ultra(WordKind::Bf16);
+    let mut inj = Injector::new(7);
+    b.run("injector/bank_split_16MB_ultra", || split.inject(&mut inj, &mut buf).bits_flipped);
+
+    // bf16 round trip over a weight-image-sized vector.
+    let weights: Vec<f32> = (0..70_000).map(|i| (i as f32) * 1e-4 - 3.5).collect();
+    b.run("bf16/roundtrip_70k_weights", || {
+        weights.iter().map(|w| bf16_to_f32(f32_to_bf16(*w))).sum::<f32>()
+    });
+
+    // Retention analysis of the full zoo (the fig13 inner loop).
+    let zoo = models::zoo();
+    let a = ArrayConfig::paper_42x42();
+    b.run("accel/zoo_retention_analysis", || {
+        zoo.iter()
+            .map(|m| RetentionAnalysis::new(&a, 16).analyze(m).max_t_ret())
+            .fold(0.0, f64::max)
+    });
+
+    // JSON parse of a manifest-sized document.
+    let doc = std::fs::read_to_string("artifacts/manifest.json")
+        .unwrap_or_else(|_| r#"{"models":{"m":{"batch":16}},"weights":"w","testset":{"n":1}}"#.into());
+    b.run("json/parse_manifest", || Json::parse(&doc).unwrap());
+
+    // Batcher push/form cycle.
+    b.run("batcher/push_form_64", || {
+        let mut batcher = Batcher::new(16, Duration::ZERO, 4, 1024);
+        for i in 0..64u64 {
+            batcher.push(Request::new(i, vec![0.0; 4]));
+        }
+        let mut n = 0;
+        while let Some(batch) = batcher.form(16, std::time::Instant::now()) {
+            n += batch.real;
+        }
+        n
+    });
+}

@@ -1,0 +1,29 @@
+//! Bench: Table II — the reconfigurable core's two modes, functional model
+//! throughput and the analytical per-layer timing.
+use stt_ai::accel::{ArrayConfig, CoreMode, PeBlock, RetentionAnalysis};
+use stt_ai::models;
+use stt_ai::util::bench::Bencher;
+
+fn main() {
+    let a = ArrayConfig::paper_42x42();
+    println!("== Table II: reconfigurable core (post-layout anchors) ==");
+    println!("  systolic mode: {} cycles/step @ {:.1} GHz", a.cyc_per_step_systolic, a.clk_hz / 1e9);
+    println!("  conv mode:     {} cycles/step @ {:.1} GHz", a.cyc_per_step_conv, a.clk_hz / 1e9);
+    for mode in [CoreMode::Systolic, CoreMode::Convolution] {
+        println!("  peak {mode:?}: {:.2} GMAC/s", a.peak_macs_per_s(mode) / 1e9);
+    }
+
+    let b = Bencher::new();
+    b.run("table2/pe_conv_step", || {
+        let mut pe = PeBlock::default();
+        pe.conv_step([1.0, 2.0, 3.0], [4.0, 5.0, 6.0], 7.0)
+    });
+    b.run("table2/pe_systolic_step", || {
+        let mut pe = PeBlock::default();
+        pe.systolic_step([1.0, 2.0, 3.0], [4.0, 5.0, 6.0], [7.0, 8.0, 9.0])
+    });
+    let m = models::by_name("ResNet50").unwrap();
+    b.run("table2/resnet50_layer_timings", || {
+        RetentionAnalysis::new(&a, 16).layer_timings(&m).len()
+    });
+}

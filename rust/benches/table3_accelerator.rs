@@ -1,0 +1,49 @@
+//! Bench: Table III — accelerator composition and the headline savings,
+//! plus an ablation over GLB capacity (the "larger buffers favor MRAM more"
+//! trend behind the paper's future-accelerator claim).
+use stt_ai::config::{GlbVariant, SystemConfig};
+use stt_ai::memsys::BufferSystem;
+use stt_ai::report::{self, AcceleratorSummary, CoreCosts};
+use stt_ai::util::bench::Bencher;
+use stt_ai::util::units::MB;
+
+fn main() {
+    let rows = report::table3_rows();
+    println!("== Table III ==");
+    let base = rows[0].clone();
+    for r in &rows {
+        let (a, p) = r.savings_vs(&base);
+        println!(
+            "  {:<18} {:>7.2} mm² {:>9.2} mW  ({:.1}% area, {:.1}% power saving)",
+            r.name,
+            r.area_mm2,
+            r.total_power_mw(),
+            a * 100.0,
+            p * 100.0
+        );
+    }
+
+    println!("== ablation: GLB capacity scaling ==");
+    let core = CoreCosts::paper_42x42();
+    for mb in [4u64, 8, 12, 24, 48] {
+        let sram = AcceleratorSummary::compose(
+            "sram",
+            core,
+            &BufferSystem::new(stt_ai::memsys::GlbKind::Sram, mb * MB, None),
+        );
+        let mram = AcceleratorSummary::compose(
+            "mram",
+            core,
+            &BufferSystem::new(stt_ai::memsys::GlbKind::stt_ai(), mb * MB, None),
+        );
+        let (a, p) = mram.savings_vs(&sram);
+        println!("  {mb:>3} MB GLB: {:.1}% area, {:.1}% power saving", a * 100.0, p * 100.0);
+    }
+
+    let b = Bencher::new();
+    b.run("table3/compose_three_accelerators", || report::table3_rows().len());
+    b.run("table3/buffer_system_from_config", || {
+        SystemConfig::paper_stt_ai_ultra().buffer_system().area_mm2()
+    });
+    let _ = GlbVariant::SttAiUltra;
+}

@@ -1,0 +1,163 @@
+//! The runtime-reconfigurable core (paper §III.A, Fig. 3) and the array
+//! configuration with its post-layout timing (Table II).
+//!
+//! A PE block is three MACs (BFloat16 multiplier + FP32 adder each) and four
+//! multiplexers. `Mode = 0` disconnects the MACs into a systolic-array
+//! column; `Mode = 1` chains them into a 3-wide convolution dot-product
+//! block producing one partial sum per issue.
+
+
+/// Operating mode of the reconfigurable core (the Mux control of Fig. 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoreMode {
+    /// Systolic array: MACs independent, outputs collected downward (FC).
+    Systolic,
+    /// Convolution: 3 MACs fused into one dot-product PE (Conv).
+    Convolution,
+}
+
+/// One PE block: functional model of Fig. 3 used by tests and the
+/// golden-model checks of the coordinator.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PeBlock {
+    /// Partial-sum register (FP32 accumulate).
+    pub psum: f32,
+}
+
+impl PeBlock {
+    /// Convolution mode (Fig. 3c): three parallel products, tree-added with
+    /// the previous partial sum — adder3 (m2+m3), adder1 (m1+psum_in),
+    /// adder2 (sum) → PE_OUT.
+    pub fn conv_step(&mut self, ifmap: [f32; 3], weight: [f32; 3], psum_in: f32) -> f32 {
+        let m1 = ifmap[0] * weight[0];
+        let m2 = ifmap[1] * weight[1];
+        let m3 = ifmap[2] * weight[2];
+        let adder3 = m3 + m2;
+        let adder1 = m1 + psum_in;
+        let out = adder3 + adder1;
+        self.psum = out;
+        out
+    }
+
+    /// Systolic mode (Fig. 3b): each MAC is independent — one
+    /// multiply-accumulate per MAC; partial sums move downward (returned).
+    pub fn systolic_step(&mut self, a: [f32; 3], w: [f32; 3], psum_in: [f32; 3]) -> [f32; 3] {
+        [a[0] * w[0] + psum_in[0], a[1] * w[1] + psum_in[1], a[2] * w[2] + psum_in[2]]
+    }
+}
+
+/// Accelerator-array configuration (Table I symbols + Table II timing).
+#[derive(Debug, Clone, Copy)]
+pub struct ArrayConfig {
+    /// Accelerator array width in PE blocks (W_A).
+    pub w_a: u64,
+    /// Accelerator array height in PE blocks (H_A).
+    pub h_a: u64,
+    /// PE internal size P_s (MACs per PE block = elements per dot product).
+    pub p_s: u64,
+    /// Clock frequency (Hz). Table II: 1 GHz post-layout at 14nm.
+    pub clk_hz: f64,
+    /// Clock cycles per step in convolution mode (Table II: 17).
+    pub cyc_per_step_conv: u64,
+    /// Clock cycles per step in systolic mode (Table II: 11).
+    pub cyc_per_step_systolic: u64,
+    /// Time charged for MaxPool + ReLU between layers (s). Short vs T1/T2.
+    pub t_pool_relu: f64,
+}
+
+impl ArrayConfig {
+    /// The paper's evaluated configuration: 42×42 MACs, BF16 hardware,
+    /// Table II cycle counts. The 42×42 figure counts *MACs*: with P_s = 3
+    /// this is a 14×42 grid of PE blocks.
+    pub fn paper_42x42() -> Self {
+        Self {
+            w_a: 14, // 14 PE blocks × 3 MACs = 42 MAC columns
+            h_a: 42,
+            p_s: 3,
+            clk_hz: 1.0e9,
+            cyc_per_step_conv: 17,
+            cyc_per_step_systolic: 11,
+            t_pool_relu: 10.0e-6,
+        }
+    }
+
+    /// A square array of `macs`×`macs` MACs at P_s = 3 (Fig. 14a sweep).
+    pub fn with_mac_array(macs: u64) -> Self {
+        let p = Self::paper_42x42();
+        Self { w_a: (macs / p.p_s).max(1), h_a: macs, ..p }
+    }
+
+    pub fn t_clk(&self) -> f64 {
+        1.0 / self.clk_hz
+    }
+
+    /// Total PE blocks in the array (W_A · H_A).
+    pub fn total_pes(&self) -> u64 {
+        self.w_a * self.h_a
+    }
+
+    /// Total MACs (= systolic capacity H_A · W_SA with W_SA = P_s · W_A).
+    pub fn total_macs(&self) -> u64 {
+        self.total_pes() * self.p_s
+    }
+
+    /// Systolic array width in MACs, W_SA = P_s · W_A.
+    pub fn w_sa(&self) -> u64 {
+        self.p_s * self.w_a
+    }
+
+    /// Peak MAC throughput (MACs/s) in the given mode: one dot-product
+    /// element per MAC per step.
+    pub fn peak_macs_per_s(&self, mode: CoreMode) -> f64 {
+        let cyc = match mode {
+            CoreMode::Systolic => self.cyc_per_step_systolic,
+            CoreMode::Convolution => self.cyc_per_step_conv,
+        };
+        self.total_macs() as f64 * self.clk_hz / cyc as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_step_computes_3wide_dot_plus_psum() {
+        let mut pe = PeBlock::default();
+        let out = pe.conv_step([1.0, 2.0, 3.0], [4.0, 5.0, 6.0], 10.0);
+        assert_eq!(out, 1.0 * 4.0 + 2.0 * 5.0 + 3.0 * 6.0 + 10.0);
+        assert_eq!(pe.psum, out);
+    }
+
+    #[test]
+    fn systolic_step_macs_are_independent() {
+        let mut pe = PeBlock::default();
+        let out = pe.systolic_step([1.0, 2.0, 3.0], [4.0, 5.0, 6.0], [1.0, 1.0, 1.0]);
+        assert_eq!(out, [5.0, 11.0, 19.0]);
+    }
+
+    #[test]
+    fn paper_array_has_42x42_macs() {
+        let a = ArrayConfig::paper_42x42();
+        assert_eq!(a.total_macs(), 42 * 42);
+        assert_eq!(a.w_sa(), 42);
+        assert!((a.t_clk() - 1e-9).abs() < 1e-18);
+    }
+
+    #[test]
+    fn mode_throughput_ratio_is_table2() {
+        let a = ArrayConfig::paper_42x42();
+        let conv = a.peak_macs_per_s(CoreMode::Convolution);
+        let sys = a.peak_macs_per_s(CoreMode::Systolic);
+        // 17 vs 11 cycles per step.
+        assert!((sys / conv - 17.0 / 11.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mac_array_sweep_sizes() {
+        for macs in [14u64, 28, 42, 84] {
+            let a = ArrayConfig::with_mac_array(macs);
+            assert!(a.total_macs() >= macs * macs / 3, "array too small for {macs}");
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! The reconfigurable-core AI accelerator model (paper §III).
+//!
+//! * [`core`] — the PE building block (3 MACs + 4 muxes, Fig. 3) and the
+//!   array-level configuration with the post-layout Table II timing.
+//! * [`timing`] — the analytical occupancy/retention-time model, Eq. 2–11.
+//! * [`traffic`] — GLB/scratchpad/DRAM byte-traffic accounting per layer
+//!   (drives Fig. 12 and Fig. 19).
+
+pub mod core;
+pub mod simulator;
+pub mod systolic;
+pub mod timing;
+pub mod traffic;
+
+pub use core::{ArrayConfig, CoreMode, PeBlock};
+pub use simulator::{conv_golden, simulate_conv, SimResult};
+pub use systolic::{eq8_steps, matmul_golden, simulate_fc, SystolicResult};
+pub use timing::{LayerTiming, ModelRetention, RetentionAnalysis};
+pub use traffic::{LayerTraffic, ModelTraffic};

@@ -1,0 +1,260 @@
+//! Functional/step-accurate simulator of the reconfigurable PE array.
+//!
+//! The paper evaluates with the *analytical* model (Eq. 2–11); this
+//! simulator executes a conv layer the way §III.B describes — PE blocks get
+//! kernel rows (row-stationary), ifmaps stream by column, partial sums
+//! accumulate per input-channel step — counting actual array steps and
+//! producing real numbers through the `PeBlock` functional model (Fig. 3).
+//!
+//! It serves two purposes:
+//! 1. cross-validate `steps_per_out_ch` / Eq. 2 against a discrete schedule;
+//! 2. validate the reconfigurable-core dataflow numerically against a
+//!    direct convolution (the golden check behind Table II's cycle counts).
+
+use crate::accel::core::{ArrayConfig, PeBlock};
+use crate::accel::timing;
+use crate::models::ConvLayer;
+use crate::util::ceil_div;
+
+/// Result of simulating one conv layer.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Output feature map, [out_ch][oh][ow] flattened.
+    pub ofmap: Vec<f32>,
+    pub out_ch: usize,
+    pub oh: usize,
+    pub ow: usize,
+    /// Array steps actually used per output channel.
+    pub steps_per_out_ch: u64,
+    /// Partial-sum write+read rounds actually performed (scratchpad traffic).
+    pub partial_rounds: u64,
+    /// Total PE-block issue slots consumed.
+    pub pe_issues: u64,
+}
+
+/// Simulate a conv layer (stride arbitrary, zero padding) on the array.
+///
+/// `ifmap`: [in_ch][in_h][in_w] flattened; `weights`: [out_ch][in_ch][kh][kw].
+pub fn simulate_conv(
+    layer: &ConvLayer,
+    a: &ArrayConfig,
+    ifmap: &[f32],
+    weights: &[f32],
+) -> SimResult {
+    let (cin, h, w) = (layer.in_ch as usize, layer.in_h as usize, layer.in_w as usize);
+    let (cout, kh, kw) = (layer.out_ch as usize, layer.kh as usize, layer.kw as usize);
+    let (oh, ow) = (layer.ofmap_h() as usize, layer.ofmap_w() as usize);
+    let stride = layer.stride as usize;
+    let pad = layer.pad as usize;
+    assert_eq!(ifmap.len(), cin * h * w, "ifmap shape");
+    assert_eq!(weights.len(), cout * cin * kh * kw, "weight shape");
+    assert_eq!(layer.groups, 1, "simulator covers dense conv");
+
+    let at = |c: usize, y: isize, x: isize| -> f32 {
+        // Zero padding outside the ifmap.
+        if y < 0 || x < 0 || y as usize >= h || x as usize >= w {
+            0.0
+        } else {
+            ifmap[c * h * w + y as usize * w + x as usize]
+        }
+    };
+
+    // PE demand for one input channel (paper §III.B): each ofmap row needs
+    // k_h · ceil(k_w / P_s) PE blocks.
+    let pe_per_row = layer.kh * ceil_div(layer.kw, a.p_s);
+    let pe_per_in_ch = layer.ofmap_h() * pe_per_row;
+    let capacity = a.total_pes();
+    let ch_per_step = (capacity / pe_per_in_ch).max(1) as usize;
+
+    let mut ofmap = vec![0.0f32; cout * oh * ow];
+    let mut steps_per_out_ch = 0u64;
+    let mut partial_rounds = 0u64;
+    let mut pe_issues = 0u64;
+
+    for oc in 0..cout {
+        // Input channels are processed ch_per_step at a time; the partial
+        // ofmap is staged to the scratchpad between steps.
+        let mut steps_this_oc = 0u64;
+        let mut psum = vec![0.0f32; oh * ow]; // the scratchpad-resident partial
+        let mut ic0 = 0usize;
+        while ic0 < cin {
+            let ic1 = (ic0 + ch_per_step).min(cin);
+            steps_this_oc += 1;
+            if ic0 > 0 {
+                partial_rounds += 1; // wrote + read back the partial ofmap
+            }
+            for ic in ic0..ic1 {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        // One ofmap element = k_h rows of P_s-wide dot
+                        // products through the Fig. 3c PE chain.
+                        let mut acc = psum[oy * ow + ox];
+                        for ky in 0..kh {
+                            let mut kx = 0usize;
+                            while kx < kw {
+                                let mut pe = PeBlock::default();
+                                let mut ivec = [0.0f32; 3];
+                                let mut wvec = [0.0f32; 3];
+                                for lane in 0..(a.p_s as usize).min(3) {
+                                    if kx + lane < kw {
+                                        let y = (oy * stride + ky) as isize - pad as isize;
+                                        let x = (ox * stride + kx + lane) as isize - pad as isize;
+                                        ivec[lane] = at(ic, y, x);
+                                        wvec[lane] = weights
+                                            [((oc * cin + ic) * kh + ky) * kw + kx + lane];
+                                    }
+                                }
+                                acc = pe.conv_step(ivec, wvec, acc);
+                                pe_issues += 1;
+                                kx += a.p_s as usize;
+                            }
+                        }
+                        psum[oy * ow + ox] = acc;
+                    }
+                }
+            }
+            ic0 = ic1;
+        }
+        steps_per_out_ch = steps_per_out_ch.max(steps_this_oc);
+        ofmap[oc * oh * ow..(oc + 1) * oh * ow].copy_from_slice(&psum);
+    }
+
+    SimResult { ofmap, out_ch: cout, oh, ow, steps_per_out_ch, partial_rounds, pe_issues }
+}
+
+/// Direct (golden) convolution for validation.
+pub fn conv_golden(layer: &ConvLayer, ifmap: &[f32], weights: &[f32]) -> Vec<f32> {
+    let (cin, h, w) = (layer.in_ch as usize, layer.in_h as usize, layer.in_w as usize);
+    let (cout, kh, kw) = (layer.out_ch as usize, layer.kh as usize, layer.kw as usize);
+    let (oh, ow) = (layer.ofmap_h() as usize, layer.ofmap_w() as usize);
+    let stride = layer.stride as usize;
+    let pad = layer.pad as isize;
+    let mut out = vec![0.0f32; cout * oh * ow];
+    for oc in 0..cout {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = 0.0f32;
+                for ic in 0..cin {
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            let y = (oy * stride + ky) as isize - pad;
+                            let x = (ox * stride + kx) as isize - pad;
+                            if y >= 0 && x >= 0 && (y as usize) < h && (x as usize) < w {
+                                acc += ifmap[ic * h * w + y as usize * w + x as usize]
+                                    * weights[((oc * cin + ic) * kh + ky) * kw + kx];
+                            }
+                        }
+                    }
+                }
+                out[oc * oh * ow + oy * ow + ox] = acc;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn layer(in_ch: u64, out_ch: u64, k: u64, stride: u64, pad: u64, hw: u64) -> ConvLayer {
+        ConvLayer {
+            name: "sim".into(),
+            in_ch,
+            out_ch,
+            kh: k,
+            kw: k,
+            stride,
+            pad,
+            groups: 1,
+            in_h: hw,
+            in_w: hw,
+        }
+    }
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (rng.next_f64() as f32) - 0.5).collect()
+    }
+
+    #[test]
+    fn fig4_example_geometry() {
+        // Fig. 4: 3×3 kernel over 5×5 ifmap, stride 1 → 3×3 ofmap, 9 PEs,
+        // one step on the paper array.
+        let l = layer(1, 1, 3, 1, 0, 5);
+        let a = ArrayConfig::paper_42x42();
+        let mut rng = Rng::seed_from_u64(1);
+        let x = rand_vec(&mut rng, 25);
+        let w = rand_vec(&mut rng, 9);
+        let r = simulate_conv(&l, &a, &x, &w);
+        assert_eq!((r.oh, r.ow), (3, 3));
+        assert_eq!(r.steps_per_out_ch, 1);
+        assert_eq!(r.partial_rounds, 0);
+    }
+
+    #[test]
+    fn simulator_matches_golden_conv() {
+        let mut rng = Rng::seed_from_u64(2);
+        let a = ArrayConfig::paper_42x42();
+        for (cin, cout, k, stride, pad, hw) in
+            [(3, 4, 3, 1, 1, 8), (2, 2, 5, 1, 2, 9), (4, 3, 3, 2, 1, 11), (1, 6, 1, 1, 0, 7)]
+        {
+            let l = layer(cin, cout, k, stride, pad, hw);
+            let x = rand_vec(&mut rng, (cin * hw * hw) as usize);
+            let w = rand_vec(&mut rng, (cout * cin * k * k) as usize);
+            let sim = simulate_conv(&l, &a, &x, &w);
+            let gold = conv_golden(&l, &x, &w);
+            for (i, (s, g)) in sim.ofmap.iter().zip(&gold).enumerate() {
+                assert!(
+                    (s - g).abs() <= 1e-4 * g.abs().max(1.0),
+                    "cin={cin} cout={cout} k={k} s={stride} idx={i}: {s} vs {g}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simulator_steps_match_eq2() {
+        // The discrete schedule and the analytical Eq. 2 agree on steps per
+        // output channel across a spread of layer shapes.
+        let a = ArrayConfig::paper_42x42();
+        let mut rng = Rng::seed_from_u64(3);
+        for (cin, cout, k, hw) in [(16, 4, 3, 14), (32, 2, 3, 28), (8, 8, 5, 10), (64, 2, 1, 7)] {
+            let l = layer(cin, cout, k, 1, 0, hw);
+            let x = rand_vec(&mut rng, (cin * hw * hw) as usize);
+            let w = rand_vec(&mut rng, (cout * cin * k * k) as usize);
+            let sim = simulate_conv(&l, &a, &x, &w);
+            let analytical = timing::steps_per_out_ch(&l, &a);
+            assert_eq!(
+                sim.steps_per_out_ch, analytical,
+                "cin={cin} k={k} hw={hw}: sim {} vs Eq.2 {}",
+                sim.steps_per_out_ch, analytical
+            );
+        }
+    }
+
+    #[test]
+    fn partial_rounds_match_traffic_model() {
+        let a = ArrayConfig::paper_42x42();
+        let l = layer(32, 3, 3, 1, 0, 28);
+        let mut rng = Rng::seed_from_u64(4);
+        let x = rand_vec(&mut rng, 32 * 28 * 28);
+        let w = rand_vec(&mut rng, 3 * 32 * 9);
+        let sim = simulate_conv(&l, &a, &x, &w);
+        // Traffic model: (steps − 1) rounds per output channel (batch 1).
+        let expect = (sim.steps_per_out_ch - 1) * l.out_ch;
+        assert_eq!(sim.partial_rounds, expect);
+    }
+
+    #[test]
+    fn pe_issue_count_scales_with_macs() {
+        // PE issues = ofmap elems × k_h × ceil(k_w/P_s) per (in,out) pair.
+        let a = ArrayConfig::paper_42x42();
+        let l = layer(2, 2, 3, 1, 0, 6);
+        let x = vec![0.0; 2 * 36];
+        let w = vec![0.0; 2 * 2 * 9];
+        let sim = simulate_conv(&l, &a, &x, &w);
+        let per_pair = (l.ofmap_h() * l.ofmap_w()) * l.kh * ceil_div(l.kw, a.p_s);
+        assert_eq!(sim.pe_issues, per_pair * l.in_ch * l.out_ch);
+    }
+}

@@ -1,0 +1,153 @@
+//! Functional simulator of the systolic mode (Fig. 3b / Fig. 5).
+//!
+//! FC layers run with Mode = 0: the PE blocks decompose into independent
+//! MACs forming an H_A × W_SA systolic array. Weights load per step
+//! (divide & conquer over the weight matrix, Fig. 5b), inputs stream
+//! left→right, partial sums move down into accumulators. This module
+//! executes that schedule step by step, validating Eq. 8's step count and
+//! the numerical result against a direct matmul.
+
+use crate::accel::core::ArrayConfig;
+use crate::util::ceil_div;
+
+/// Result of simulating one FC layer (x: [batch, n_in] · w: [n_in, m_out]).
+#[derive(Debug, Clone)]
+pub struct SystolicResult {
+    /// Output activations, [batch][m_out] flattened.
+    pub out: Vec<f32>,
+    /// Weight-load steps actually used (Eq. 8's ceil(m/H_A)·ceil(n/W_SA)).
+    pub weight_loads: u64,
+    /// MAC operations issued.
+    pub macs: u64,
+}
+
+/// Simulate the FC layer: tile the weight matrix into (W_SA × H_A) blocks
+/// (n-dim × m-dim), load each, stream all batch rows through.
+pub fn simulate_fc(a: &ArrayConfig, x: &[f32], w: &[f32], batch: usize, n_in: usize, m_out: usize) -> SystolicResult {
+    assert_eq!(x.len(), batch * n_in, "x shape");
+    assert_eq!(w.len(), n_in * m_out, "w shape");
+    let w_sa = a.w_sa() as usize; // n-dim tile (inputs per load)
+    let h_a = a.h_a as usize; // m-dim tile (outputs per load)
+
+    let mut out = vec![0.0f32; batch * m_out];
+    let mut weight_loads = 0u64;
+    let mut macs = 0u64;
+
+    let mut m0 = 0usize;
+    while m0 < m_out {
+        let m1 = (m0 + h_a).min(m_out);
+        let mut n0 = 0usize;
+        while n0 < n_in {
+            let n1 = (n0 + w_sa).min(n_in);
+            weight_loads += 1; // one array-load step (Fig. 5b tile)
+            // Stream every batch row through the loaded tile: each MAC
+            // (n, m) accumulates x[b][n]·w[n][m] downward.
+            for b in 0..batch {
+                for m in m0..m1 {
+                    let mut acc = out[b * m_out + m];
+                    for n in n0..n1 {
+                        acc += x[b * n_in + n] * w[n * m_out + m];
+                        macs += 1;
+                    }
+                    out[b * m_out + m] = acc;
+                }
+            }
+            n0 = n1;
+        }
+        m0 = m1;
+    }
+    SystolicResult { out, weight_loads, macs }
+}
+
+/// Direct matmul for validation.
+pub fn matmul_golden(x: &[f32], w: &[f32], batch: usize, n_in: usize, m_out: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; batch * m_out];
+    for b in 0..batch {
+        for m in 0..m_out {
+            let mut acc = 0.0f32;
+            for n in 0..n_in {
+                acc += x[b * n_in + n] * w[n * m_out + m];
+            }
+            out[b * m_out + m] = acc;
+        }
+    }
+    out
+}
+
+/// Eq. 8's analytical step count for comparison.
+pub fn eq8_steps(a: &ArrayConfig, n_in: u64, m_out: u64) -> u64 {
+    ceil_div(m_out, a.h_a) * ceil_div(n_in, a.w_sa())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (rng.next_f64() as f32) - 0.5).collect()
+    }
+
+    #[test]
+    fn matches_golden_matmul() {
+        let a = ArrayConfig::paper_42x42();
+        let mut rng = Rng::seed_from_u64(1);
+        for (batch, n_in, m_out) in [(1, 100, 50), (4, 64, 64), (3, 200, 97), (2, 42, 42)] {
+            let x = rand_vec(&mut rng, batch * n_in);
+            let w = rand_vec(&mut rng, n_in * m_out);
+            let sim = simulate_fc(&a, &x, &w, batch, n_in, m_out);
+            let gold = matmul_golden(&x, &w, batch, n_in, m_out);
+            for (s, g) in sim.out.iter().zip(&gold) {
+                assert!((s - g).abs() <= 1e-4 * g.abs().max(1.0), "{s} vs {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn weight_loads_match_eq8() {
+        let a = ArrayConfig::paper_42x42();
+        let mut rng = Rng::seed_from_u64(2);
+        for (n_in, m_out) in [(4096u64, 4096u64), (25088, 4096), (100, 10), (42, 42), (43, 43)] {
+            let x = rand_vec(&mut rng, n_in as usize);
+            let w = rand_vec(&mut rng, (n_in * m_out) as usize);
+            let sim = simulate_fc(&a, &x, &w, 1, n_in as usize, m_out as usize);
+            assert_eq!(
+                sim.weight_loads,
+                eq8_steps(&a, n_in, m_out),
+                "n={n_in} m={m_out}"
+            );
+        }
+    }
+
+    #[test]
+    fn fig5b_example_four_tiles() {
+        // Fig. 5b: a 4×4 matrix on a 2×2 array → four 2×2 sub-matrices.
+        let a = ArrayConfig {
+            w_a: 2,
+            h_a: 2,
+            p_s: 1,
+            ..ArrayConfig::paper_42x42()
+        };
+        assert_eq!(eq8_steps(&a, 4, 4), 4);
+        let mut rng = Rng::seed_from_u64(3);
+        let x = rand_vec(&mut rng, 4);
+        let w = rand_vec(&mut rng, 16);
+        let sim = simulate_fc(&a, &x, &w, 1, 4, 4);
+        assert_eq!(sim.weight_loads, 4);
+        let gold = matmul_golden(&x, &w, 1, 4, 4);
+        for (s, g) in sim.out.iter().zip(&gold) {
+            assert!((s - g).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn mac_count_is_exact() {
+        let a = ArrayConfig::paper_42x42();
+        let x = vec![1.0; 2 * 100];
+        let w = vec![1.0; 100 * 30];
+        let sim = simulate_fc(&a, &x, &w, 2, 100, 30);
+        assert_eq!(sim.macs, 2 * 100 * 30);
+        // All-ones: every output is n_in.
+        assert!(sim.out.iter().all(|v| (*v - 100.0).abs() < 1e-3));
+    }
+}

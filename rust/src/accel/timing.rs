@@ -1,0 +1,340 @@
+//! The analytical occupancy/retention-time model of §III.B (Eq. 2–11).
+//!
+//! Deep-learning execution is layer-wise sequential: layer n's ifmap (= layer
+//! n−1's ofmap) must stay in the GLB until layer n finishes reading it, i.e.
+//! until ofmap_n is complete. So the required retention between consecutive
+//! layers is T_ret = T₁ + T_pool_relu + T₂ (Eq. 7/10/11), with T₁/T₂ the
+//! ofmap-generation times of the two layers (Eq. 5/6 for conv, Eq. 8/9 for
+//! FC). These retention times — ms to seconds — are what licenses the Δ
+//! scaling of §IV.
+
+
+use super::core::ArrayConfig;
+use crate::models::{ConvLayer, FcLayer, Layer, Model};
+use crate::util::ceil_div;
+
+/// Timing of one layer on the array.
+#[derive(Debug, Clone)]
+pub struct LayerTiming {
+    pub name: String,
+    /// Ofmap generation time T (s) — Eq. 5 (conv) or Eq. 8 (FC).
+    pub t_gen: f64,
+    /// Number of array steps per output channel (Eq. 2), conv only.
+    pub steps_per_out_ch: u64,
+    pub is_conv: bool,
+}
+
+/// Eq. 2: steps per output channel.
+/// N = ceil( N_in_ch · k_h · N_ofmp_rw · ceil(k_w / P_s) / (W_A · H_A) ).
+pub fn steps_per_out_ch(c: &ConvLayer, a: &ArrayConfig) -> u64 {
+    // Grouped/depthwise conv: each output channel only reads in_ch/groups
+    // input channels.
+    let in_ch_eff = c.in_ch / c.groups;
+    let pes_needed = in_ch_eff * c.kh * c.ofmap_h() * ceil_div(c.kw, a.p_s);
+    ceil_div(pes_needed, a.total_pes()).max(1)
+}
+
+/// Eq. 3: time per step,
+/// t = T_clk · N_cyc_per_stp · N_ofmp_cl · N_bat.
+pub fn time_per_step(c: &ConvLayer, a: &ArrayConfig, batch: u64) -> f64 {
+    a.t_clk() * a.cyc_per_step_conv as f64 * c.ofmap_w() as f64 * batch as f64
+}
+
+/// Eq. 5: conv-layer ofmap generation time
+/// T₁ = steps_per_out_ch · t_per_step · N_out_chn.
+pub fn conv_gen_time(c: &ConvLayer, a: &ArrayConfig, batch: u64) -> f64 {
+    steps_per_out_ch(c, a) as f64 * time_per_step(c, a, batch) * c.out_ch as f64
+}
+
+/// Eq. 8: FC-layer output generation time
+/// T₁ = ceil(m_fc/H_A) · ceil(n_fc/W_SA) · T_clk · N_cyc_per_stp · N_bat.
+pub fn fc_gen_time(f: &FcLayer, a: &ArrayConfig, batch: u64) -> f64 {
+    ceil_div(f.m_out, a.h_a) as f64
+        * ceil_div(f.n_in, a.w_sa()) as f64
+        * a.t_clk()
+        * a.cyc_per_step_systolic as f64
+        * batch as f64
+}
+
+/// Generation time for any weighted layer; pools return None.
+pub fn layer_gen_time(l: &Layer, a: &ArrayConfig, batch: u64) -> Option<LayerTiming> {
+    match l {
+        Layer::Conv(c) => Some(LayerTiming {
+            name: c.name.clone(),
+            t_gen: conv_gen_time(c, a, batch),
+            steps_per_out_ch: steps_per_out_ch(c, a),
+            is_conv: true,
+        }),
+        Layer::Fc(f) => Some(LayerTiming {
+            name: f.name.clone(),
+            t_gen: fc_gen_time(f, a, batch),
+            steps_per_out_ch: 0,
+            is_conv: false,
+        }),
+        Layer::Pool(_) => None,
+    }
+}
+
+/// One consecutive-layer retention requirement.
+#[derive(Debug, Clone)]
+pub struct RetentionPair {
+    pub producer: String,
+    pub consumer: String,
+    /// Eq. 7 / 10 / 11.
+    pub t_ret: f64,
+    /// Whether a pool/ReLU stage sits between (charges T_pool_relu).
+    pub pooled: bool,
+}
+
+/// Retention analysis of a full model on a given array.
+#[derive(Debug, Clone)]
+pub struct ModelRetention {
+    pub model: String,
+    pub pairs: Vec<RetentionPair>,
+}
+
+impl ModelRetention {
+    pub fn max_t_ret(&self) -> f64 {
+        self.pairs.iter().map(|p| p.t_ret).fold(0.0, f64::max)
+    }
+    pub fn min_t_ret(&self) -> f64 {
+        self.pairs.iter().map(|p| p.t_ret).fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Count the Mode-signal reconfigurations a model forces on the core
+/// (Fig. 3's Mux toggle): one per Conv↔FC boundary in execution order.
+pub fn mode_switches(m: &Model) -> u64 {
+    let mut switches = 0;
+    let mut last_conv: Option<bool> = None;
+    for l in &m.layers {
+        let is_conv = match l {
+            Layer::Conv(_) => true,
+            Layer::Fc(_) => false,
+            Layer::Pool(_) => continue,
+        };
+        if let Some(prev) = last_conv {
+            if prev != is_conv {
+                switches += 1;
+            }
+        }
+        last_conv = Some(is_conv);
+    }
+    switches
+}
+
+/// The analysis engine.
+pub struct RetentionAnalysis<'a> {
+    pub array: &'a ArrayConfig,
+    pub batch: u64,
+}
+
+impl<'a> RetentionAnalysis<'a> {
+    pub fn new(array: &'a ArrayConfig, batch: u64) -> Self {
+        Self { array, batch }
+    }
+
+    /// Per-layer generation times (weighted layers only, in order).
+    pub fn layer_timings(&self, m: &Model) -> Vec<LayerTiming> {
+        m.layers.iter().filter_map(|l| layer_gen_time(l, self.array, self.batch)).collect()
+    }
+
+    /// All consecutive-layer retention pairs (Eq. 7, 10, 11).
+    pub fn analyze(&self, m: &Model) -> ModelRetention {
+        let mut pairs = Vec::new();
+        let mut prev: Option<(LayerTiming, bool)> = None; // (timing, pool seen since)
+        for l in &m.layers {
+            match l {
+                Layer::Pool(_) => {
+                    if let Some((_, pooled)) = prev.as_mut() {
+                        *pooled = true;
+                    }
+                }
+                _ => {
+                    if let Some(t) = layer_gen_time(l, self.array, self.batch) {
+                        if let Some((p, pooled)) = prev.take() {
+                            let t_ret = p.t_gen
+                                + if pooled { self.array.t_pool_relu } else { 0.0 }
+                                + t.t_gen;
+                            pairs.push(RetentionPair {
+                                producer: p.name.clone(),
+                                consumer: t.name.clone(),
+                                t_ret,
+                                pooled,
+                            });
+                        }
+                        prev = Some((t, false));
+                    }
+                }
+            }
+        }
+        ModelRetention { model: m.name.clone(), pairs }
+    }
+
+    /// End-to-end inference time: Σ layer generation times + pool stages.
+    pub fn inference_latency(&self, m: &Model) -> f64 {
+        let mut t = 0.0;
+        for l in &m.layers {
+            match l {
+                Layer::Pool(_) => t += self.array.t_pool_relu,
+                _ => t += layer_gen_time(l, self.array, self.batch).map_or(0.0, |x| x.t_gen),
+            }
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{self, DType};
+
+    fn paper_array() -> ArrayConfig {
+        ArrayConfig::paper_42x42()
+    }
+
+    fn small_conv() -> ConvLayer {
+        // Fig. 4's worked example: 3×3 kernel over 5×5 ifmap, stride 1.
+        ConvLayer {
+            name: "fig4".into(),
+            in_ch: 1,
+            out_ch: 1,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 0,
+            groups: 1,
+            in_h: 5,
+            in_w: 5,
+        }
+    }
+
+    #[test]
+    fn fig4_needs_9_pe_blocks_one_step() {
+        let c = small_conv();
+        let a = paper_array();
+        // N_ofmp_rw · k_h · ceil(k_w/P_s) = 3·3·1 = 9 PEs → 1 step on 588 PEs.
+        assert_eq!(steps_per_out_ch(&c, &a), 1);
+    }
+
+    #[test]
+    fn eq3_time_per_step() {
+        let c = small_conv();
+        let a = paper_array();
+        // T_clk=1ns, 17 cyc, N_ofmp_cl=3, batch=2 → 102 ns.
+        let t = time_per_step(&c, &a, 2);
+        assert!((t - 102e-9).abs() < 1e-15);
+    }
+
+    #[test]
+    fn conv_time_scales_with_out_channels_and_batch() {
+        let a = paper_array();
+        let mut c = small_conv();
+        let t1 = conv_gen_time(&c, &a, 1);
+        c.out_ch = 4;
+        assert!((conv_gen_time(&c, &a, 1) / t1 - 4.0).abs() < 1e-9);
+        assert!((conv_gen_time(&c, &a, 4) / conv_gen_time(&c, &a, 1) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fc_time_eq8() {
+        let a = paper_array();
+        let f = FcLayer { name: "fc".into(), n_in: 4096, m_out: 4096 };
+        // ceil(4096/42)=98 steps each way; 11 cycles; batch 16.
+        let want = 98.0 * 98.0 * 1e-9 * 11.0 * 16.0;
+        assert!((fc_gen_time(&f, &a, 16) - want).abs() / want < 1e-12);
+    }
+
+    #[test]
+    fn fig13_retention_under_1p5s_for_zoo() {
+        // Paper: max GLB retention < 1.5 s across all models at 42×42 MACs,
+        // batch 16, bf16 timing; most models < 0.5 s.
+        let a = paper_array();
+        let ra = RetentionAnalysis::new(&a, 16);
+        let mut under_half = 0;
+        let zoo = models::zoo();
+        for m in &zoo {
+            let r = ra.analyze(m);
+            let max = r.max_t_ret();
+            assert!(max < 1.6, "{}: max retention {max} s", m.name);
+            if max < 0.5 {
+                under_half += 1;
+            }
+        }
+        assert!(under_half * 2 > zoo.len(), "most models should be < 0.5 s, got {under_half}");
+    }
+
+    #[test]
+    fn fig14a_retention_decreases_with_array_size() {
+        let m = models::by_name("ResNet50").unwrap();
+        let mut last = f64::INFINITY;
+        for macs in [14u64, 28, 42, 84] {
+            let a = ArrayConfig::with_mac_array(macs);
+            let r = RetentionAnalysis::new(&a, 16).analyze(&m);
+            assert!(r.max_t_ret() <= last, "retention must shrink as array grows");
+            last = r.max_t_ret();
+        }
+    }
+
+    #[test]
+    fn fig14b_retention_grows_with_batch() {
+        let m = models::by_name("ResNet50").unwrap();
+        let a = paper_array();
+        let mut last = 0.0;
+        for batch in [1u64, 4, 16, 64] {
+            let r = RetentionAnalysis::new(&a, batch).analyze(&m);
+            assert!(r.max_t_ret() >= last);
+            last = r.max_t_ret();
+        }
+    }
+
+    #[test]
+    fn pairs_cover_consecutive_weighted_layers() {
+        let m = models::by_name("AlexNet").unwrap();
+        let a = paper_array();
+        let r = RetentionAnalysis::new(&a, 1).analyze(&m);
+        // AlexNet: 5 convs + 3 fcs = 8 weighted layers → 7 pairs.
+        assert_eq!(r.pairs.len(), 7);
+        // conv→conv pairs after pools are flagged.
+        assert!(r.pairs.iter().any(|p| p.pooled));
+        // FC–FC pairs have no pool (Eq. 10).
+        let fc_pair = r.pairs.iter().find(|p| p.producer == "fc6").unwrap();
+        assert!(!fc_pair.pooled);
+    }
+
+    #[test]
+    fn mode_switches_counted() {
+        // AlexNet: convs then fcs → exactly one reconfiguration.
+        assert_eq!(mode_switches(&models::by_name("AlexNet").unwrap()), 1);
+        // SqueezeNet: conv-only → none.
+        assert_eq!(mode_switches(&models::by_name("SqueezeNet").unwrap()), 0);
+    }
+
+    #[test]
+    fn conv_fc_pair_uses_eq11() {
+        // AlexNet conv5 → fc6 crosses a pool: T_ret = T1 + T_pool_relu + T2.
+        let a = paper_array();
+        let ra = RetentionAnalysis::new(&a, 1);
+        let m = models::by_name("AlexNet").unwrap();
+        let r = ra.analyze(&m);
+        let pair = r.pairs.iter().find(|p| p.consumer == "fc6").unwrap();
+        assert!(pair.pooled, "pool5 sits between conv5 and fc6");
+        let t1 = conv_gen_time(
+            m.conv_layers().find(|c| c.name == "conv5").unwrap(), &a, 1);
+        let t2 = fc_gen_time(m.fc_layers().next().unwrap(), &a, 1);
+        assert!((pair.t_ret - (t1 + a.t_pool_relu + t2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inference_latency_positive_and_ordered() {
+        let a = paper_array();
+        let ra = RetentionAnalysis::new(&a, 1);
+        let small = ra.inference_latency(&models::by_name("SqueezeNet").unwrap());
+        let big = ra.inference_latency(&models::by_name("VGG16").unwrap());
+        assert!(small > 0.0 && big > small, "small={small} big={big}");
+        // Sanity: per-image VGG16 latency on 1764 MACs at 1 GHz should be
+        // tens-to-hundreds of ms class given 15.5 GMACs and 17-cycle steps.
+        let _ = models::by_name("VGG16").unwrap().size_bytes(DType::Bf16);
+        assert!(big > 1e-3 && big < 10.0, "big={big}");
+    }
+}

@@ -1,0 +1,177 @@
+//! GLB / scratchpad / DRAM byte-traffic accounting per layer.
+//!
+//! Drives the Fig. 12 extra-DRAM-access analysis (spill when a layer's
+//! working set exceeds the GLB) and the Fig. 19 scratchpad-energy comparison
+//! (partial-ofmap write/read rounds between accelerator steps, §IV.D).
+
+
+use super::core::ArrayConfig;
+use super::timing::steps_per_out_ch;
+use crate::models::{ConvLayer, DType, Layer, Model};
+
+/// Byte traffic of one conv layer at a given batch.
+#[derive(Debug, Clone)]
+pub struct LayerTraffic {
+    pub name: String,
+    /// ifmap + weight bytes read from GLB (per inference of the batch).
+    pub glb_reads: u64,
+    /// Final ofmap bytes written to GLB.
+    pub glb_writes: u64,
+    /// Bytes of one partial ofmap (the scratchpad working set).
+    pub partial_bytes: u64,
+    /// Number of partial-accumulation rounds (write+read each) between
+    /// steps: steps_per_out_ch − 1 per output channel, times batch.
+    pub partial_rounds: u64,
+    /// Working-set bytes (ifmap + weights + ofmap) — GLB requirement.
+    pub working_set: u64,
+    /// Bytes spilled to DRAM if the working set exceeds `glb_bytes`
+    /// (the overflow streams from/to DRAM once per layer).
+    pub dram_bytes: u64,
+}
+
+/// Traffic analysis of a whole model.
+#[derive(Debug, Clone)]
+pub struct ModelTraffic {
+    pub model: String,
+    pub layers: Vec<LayerTraffic>,
+}
+
+impl ModelTraffic {
+    /// Analyze conv-layer traffic (§V.A scope: FC weights stream from
+    /// DRAM/NVM directly, so FC layers are excluded from GLB sizing).
+    pub fn analyze(m: &Model, a: &ArrayConfig, dt: DType, batch: u64, glb_bytes: u64) -> Self {
+        let layers = m
+            .layers
+            .iter()
+            .filter_map(|l| match l {
+                Layer::Conv(c) => Some(layer_traffic(c, a, dt, batch, glb_bytes)),
+                _ => None,
+            })
+            .collect();
+        Self { model: m.name.clone(), layers }
+    }
+
+    pub fn total_dram_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.dram_bytes).sum()
+    }
+
+    pub fn total_glb_reads(&self) -> u64 {
+        self.layers.iter().map(|l| l.glb_reads).sum()
+    }
+
+    pub fn total_glb_writes(&self) -> u64 {
+        self.layers.iter().map(|l| l.glb_writes).sum()
+    }
+
+    /// Max partial-ofmap bytes over the model (Fig. 18's metric).
+    pub fn max_partial_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.partial_bytes).max().unwrap_or(0)
+    }
+}
+
+fn layer_traffic(c: &ConvLayer, a: &ArrayConfig, dt: DType, batch: u64, glb_bytes: u64) -> LayerTraffic {
+    let eb = dt.bytes();
+    let glb_reads = (batch * c.ifmap_elems() + c.weight_elems()) * eb;
+    let glb_writes = batch * c.ofmap_elems() * eb;
+    let partial_bytes = c.partial_ofmap_elems() * eb;
+    let steps = steps_per_out_ch(c, a);
+    // One write+read round per step beyond the first, for every output
+    // channel of every image in the batch.
+    let partial_rounds = steps.saturating_sub(1) * c.out_ch * batch;
+    let working_set = (batch * (c.ifmap_elems() + c.ofmap_elems()) + c.weight_elems()) * eb;
+    let dram_bytes = working_set.saturating_sub(glb_bytes);
+    LayerTraffic {
+        name: c.name.clone(),
+        glb_reads,
+        glb_writes,
+        partial_bytes,
+        partial_rounds,
+        working_set,
+        dram_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::util::units::{KB, MB};
+
+    fn setup() -> (ArrayConfig, Model) {
+        (ArrayConfig::paper_42x42(), models::by_name("ResNet50").unwrap())
+    }
+    use crate::models::Model;
+
+    #[test]
+    fn fig18_partial_ofmaps_fit_52kb_bf16() {
+        // Paper Fig. 18: a 52 KB scratchpad fits most models' partial ofmaps
+        // (bf16); 26 KB for int8.
+        let a = ArrayConfig::paper_42x42();
+        let zoo = models::zoo();
+        let mut fit = 0;
+        for m in &zoo {
+            let t = ModelTraffic::analyze(m, &a, DType::Bf16, 1, 12 * MB);
+            if t.max_partial_bytes() <= 52 * KB {
+                fit += 1;
+            }
+        }
+        assert!(fit * 4 >= zoo.len() * 3, "≥75% of models must fit 52 KB, got {fit}/19");
+    }
+
+    #[test]
+    fn int8_partials_half_of_bf16() {
+        let (a, m) = setup();
+        let t16 = ModelTraffic::analyze(&m, &a, DType::Bf16, 1, 12 * MB);
+        let t8 = ModelTraffic::analyze(&m, &a, DType::Int8, 1, 12 * MB);
+        assert_eq!(t16.max_partial_bytes(), 2 * t8.max_partial_bytes());
+    }
+
+    #[test]
+    fn fig12_no_spill_for_resnet50_int8_12mb() {
+        // Paper: with 12 MB GLB most models spill nothing at int8, batch ≤ 8.
+        let (a, m) = setup();
+        let t = ModelTraffic::analyze(&m, &a, DType::Int8, 8, 12 * MB);
+        assert_eq!(t.total_dram_bytes(), 0, "ResNet50 int8 batch 8 must fit 12 MB");
+    }
+
+    #[test]
+    fn fig12_spill_appears_for_big_models_bf16() {
+        // VGG19 at bf16 batch 8 exceeds 12 MB on its big layers.
+        let a = ArrayConfig::paper_42x42();
+        let m = models::by_name("VGG19").unwrap();
+        let t = ModelTraffic::analyze(&m, &a, DType::Bf16, 8, 12 * MB);
+        assert!(t.total_dram_bytes() > 0);
+        // And a bigger GLB removes it.
+        let t64 = ModelTraffic::analyze(&m, &a, DType::Bf16, 8, 64 * MB);
+        assert!(t64.total_dram_bytes() < t.total_dram_bytes());
+    }
+
+    #[test]
+    fn partial_rounds_zero_when_single_step() {
+        let a = ArrayConfig::paper_42x42();
+        // Tiny layer: everything fits in one array step → no partial rounds.
+        let c = ConvLayer {
+            name: "tiny".into(),
+            in_ch: 1,
+            out_ch: 1,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 0,
+            groups: 1,
+            in_h: 5,
+            in_w: 5,
+        };
+        let t = layer_traffic(&c, &a, DType::Bf16, 1, 12 * MB);
+        assert_eq!(t.partial_rounds, 0);
+    }
+
+    #[test]
+    fn reads_and_writes_scale_with_batch() {
+        let (a, m) = setup();
+        let t1 = ModelTraffic::analyze(&m, &a, DType::Bf16, 1, 12 * MB);
+        let t4 = ModelTraffic::analyze(&m, &a, DType::Bf16, 4, 12 * MB);
+        assert!(t4.total_glb_reads() > t1.total_glb_reads());
+        assert_eq!(t4.total_glb_writes(), 4 * t1.total_glb_writes());
+    }
+}

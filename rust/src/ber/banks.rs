@@ -1,0 +1,142 @@
+//! The MSB/LSB two-bank bit-group split of STT-AI Ultra (§IV, bullet 4).
+//!
+//! "The first half of the weight/fmap bits are considered significant (MSB
+//! group) and stored in the Δ_PT_GB = 27.5 bank, and the rest of the LSB
+//! groups in the Δ_PT_GB = 17.5 bank." For bf16 (1s + 8e + 7m) the MSB group
+//! is the upper byte (sign + exponent), for int8 the upper nibble.
+
+use crate::ber::injector::{BitFlipStats, Injector};
+
+/// Word layout for the bank split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WordKind {
+    /// 16-bit bfloat16: upper byte = MSB group, lower byte = LSB group.
+    Bf16,
+    /// 8-bit integer: upper nibble = MSB group, lower nibble = LSB group.
+    Int8,
+}
+
+impl WordKind {
+    pub fn bytes(&self) -> usize {
+        match self {
+            WordKind::Bf16 => 2,
+            WordKind::Int8 => 1,
+        }
+    }
+}
+
+/// Two-bank fault model: independent BERs for the MSB and LSB bit groups.
+#[derive(Debug, Clone, Copy)]
+pub struct BankSplit {
+    pub kind: WordKind,
+    pub msb_ber: f64,
+    pub lsb_ber: f64,
+}
+
+impl BankSplit {
+    /// STT-AI (single robust bank): both groups at `ber`.
+    pub fn uniform(kind: WordKind, ber: f64) -> Self {
+        Self { kind, msb_ber: ber, lsb_ber: ber }
+    }
+
+    /// STT-AI Ultra: MSB 1e-8, LSB 1e-5.
+    pub fn ultra(kind: WordKind) -> Self {
+        Self { kind, msb_ber: 1e-8, lsb_ber: 1e-5 }
+    }
+
+    /// Inject into a little-endian buffer of words of `self.kind`.
+    pub fn inject(&self, inj: &mut Injector, buf: &mut [u8]) -> BitFlipStats {
+        let mut total = BitFlipStats::default();
+        match self.kind {
+            WordKind::Int8 => {
+                let hi = inj.flip_masked(buf, self.msb_ber, 0xF0);
+                let lo = inj.flip_masked(buf, self.lsb_ber, 0x0F);
+                total.bits_scanned = hi.bits_scanned + lo.bits_scanned;
+                total.bits_flipped = hi.bits_flipped + lo.bits_flipped;
+            }
+            WordKind::Bf16 => {
+                assert_eq!(buf.len() % 2, 0, "bf16 buffer must be even-length");
+                // Little-endian: byte 0 of each pair is the mantissa-LSB
+                // byte (LSB group), byte 1 is sign+exponent (MSB group).
+                // Strided geometric walks flip each sub-stream in place.
+                let lo = inj.flip_strided(buf, self.lsb_ber, 0, 2);
+                let hi = inj.flip_strided(buf, self.msb_ber, 1, 2);
+                total.bits_scanned = hi.bits_scanned + lo.bits_scanned;
+                total.bits_flipped = hi.bits_flipped + lo.bits_flipped;
+            }
+        }
+        total
+    }
+
+    /// Expected flips for a buffer of `n_bytes`.
+    pub fn expected_flips(&self, n_bytes: usize) -> f64 {
+        let half_bits = (n_bytes * 8 / 2) as f64;
+        half_bits * (self.msb_ber + self.lsb_ber)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ultra_flips_concentrate_in_lsb_group() {
+        // With MSB 1e-8 vs LSB 1e-2-scaled test rates, flips land low.
+        let split = BankSplit { kind: WordKind::Bf16, msb_ber: 0.0, lsb_ber: 0.05 };
+        let mut buf = vec![0u8; 1 << 16];
+        let mut inj = Injector::new(11);
+        let s = split.inject(&mut inj, &mut buf);
+        assert!(s.bits_flipped > 0);
+        // All flips in even (LSB) bytes.
+        assert!(buf.iter().skip(1).step_by(2).all(|&b| b == 0));
+        assert!(buf.iter().step_by(2).any(|&b| b != 0));
+    }
+
+    #[test]
+    fn int8_nibble_split() {
+        let split = BankSplit { kind: WordKind::Int8, msb_ber: 0.0, lsb_ber: 0.1 };
+        let mut buf = vec![0u8; 4096];
+        let mut inj = Injector::new(13);
+        split.inject(&mut inj, &mut buf);
+        assert!(buf.iter().all(|&b| b & 0xF0 == 0));
+    }
+
+    #[test]
+    fn uniform_matches_paper_stt_ai() {
+        let s = BankSplit::uniform(WordKind::Bf16, 1e-8);
+        assert_eq!(s.msb_ber, s.lsb_ber);
+        let u = BankSplit::ultra(WordKind::Bf16);
+        assert!(u.lsb_ber > u.msb_ber);
+    }
+
+    #[test]
+    fn expected_flip_scale_of_fig21() {
+        // 12 MB buffer at Ultra settings: LSB half at 1e-5 dominates.
+        let u = BankSplit::ultra(WordKind::Bf16);
+        let e = u.expected_flips(12 << 20);
+        // half bits = 50.3e6; ×(1e-5 + 1e-8) ≈ 503 flips.
+        assert!(e > 400.0 && e < 600.0, "{e}");
+    }
+
+    #[test]
+    fn bf16_value_perturbation_small_for_lsb_flips() {
+        // Flipping a mantissa (LSB-group) bit perturbs a bf16 value by at
+        // most 2^-1 of its exponent bucket (≤ ~33% relative) and usually far
+        // less — while an exponent (MSB-group) flip rescales the value by
+        // ~2^±64. That asymmetry is the mechanism behind Fig. 21.
+        use crate::util::bf16::{bf16_to_f32, f32_to_bf16};
+        let bits = f32_to_bf16(1.5f32);
+        for bit in 0..7 {
+            let y = bf16_to_f32(bits ^ (1 << bit));
+            let rel = ((y - 1.5) / 1.5).abs();
+            assert!(rel <= 0.34, "bit {bit}: rel={rel}");
+        }
+        // While an exponent-bit (MSB group) flip is catastrophic — clearing
+        // a high exponent bit rescales 1.5 by 2^-64 (rel err ≈ 1), and
+        // setting the top exponent bit produces NaN/Inf. That is why the MSB
+        // group gets the robust bank.
+        let y = bf16_to_f32(bits ^ (1 << 13));
+        assert!(((y - 1.5) / 1.5).abs() > 0.9, "y={y}");
+        assert!(bf16_to_f32(bits ^ (1 << 14)).is_nan());
+    }
+}

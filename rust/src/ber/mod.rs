@@ -1,0 +1,22 @@
+//! Bit-error-rate fault injection (paper §V.G, Fig. 21).
+//!
+//! The STT-AI Ultra design stores the MSB half of every word in a robust
+//! bank (BER 1e-8) and the LSB half in a relaxed bank (BER 1e-5). This
+//! module injects that fault model into weight/activation buffers before the
+//! coordinator hands them to PJRT:
+//!
+//! * [`injector`] — fast geometric-skip Bernoulli bit flipping over byte
+//!   buffers (deterministic, seeded).
+//! * [`banks`] — the MSB/LSB bit-group split for bf16 and int8 words.
+//! * [`prune`] — magnitude pruning (Fig. 21 also evaluates 50%-pruned
+//!   models).
+
+pub mod analytical;
+pub mod banks;
+pub mod injector;
+pub mod prune;
+
+pub use analytical::{zoo_exposure, FaultExposure};
+pub use banks::{BankSplit, WordKind};
+pub use injector::{BitFlipStats, Injector};
+pub use prune::magnitude_prune_f32;

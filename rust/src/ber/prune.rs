@@ -1,0 +1,69 @@
+//! Magnitude pruning (Fig. 21 evaluates original and 50%-pruned models).
+
+/// Zero the `rate` fraction of smallest-magnitude weights, in place.
+/// Returns the number of weights zeroed.
+pub fn magnitude_prune_f32(weights: &mut [f32], rate: f64) -> usize {
+    assert!((0.0..=1.0).contains(&rate));
+    if weights.is_empty() || rate == 0.0 {
+        return 0;
+    }
+    let k = ((weights.len() as f64) * rate).floor() as usize;
+    if k == 0 {
+        return 0;
+    }
+    // Threshold = k-th smallest |w| via select_nth on a copy of magnitudes.
+    let mut mags: Vec<f32> = weights.iter().map(|w| w.abs()).collect();
+    let (_, thresh, _) = mags.select_nth_unstable_by(k - 1, |a, b| a.partial_cmp(b).unwrap());
+    let thresh = *thresh;
+    let mut zeroed = 0;
+    for w in weights.iter_mut() {
+        if w.abs() <= thresh && zeroed < k {
+            *w = 0.0;
+            zeroed += 1;
+        }
+    }
+    zeroed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prunes_half() {
+        let mut w: Vec<f32> = (1..=100).map(|i| i as f32 / 100.0).collect();
+        let n = magnitude_prune_f32(&mut w, 0.5);
+        assert_eq!(n, 50);
+        assert_eq!(w.iter().filter(|x| **x == 0.0).count(), 50);
+        // The survivors are the large-magnitude half.
+        assert!(w.iter().filter(|x| **x != 0.0).all(|x| *x > 0.5));
+    }
+
+    #[test]
+    fn zero_rate_is_noop() {
+        let mut w = vec![0.1f32, -0.5, 0.3];
+        assert_eq!(magnitude_prune_f32(&mut w, 0.0), 0);
+        assert_eq!(w, vec![0.1, -0.5, 0.3]);
+    }
+
+    #[test]
+    fn keeps_sign_of_survivors() {
+        let mut w = vec![-1.0f32, 0.01, -0.02, 2.0];
+        magnitude_prune_f32(&mut w, 0.5);
+        assert_eq!(w, vec![-1.0, 0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn full_rate_zeroes_all() {
+        let mut w = vec![1.0f32; 10];
+        assert_eq!(magnitude_prune_f32(&mut w, 1.0), 10);
+        assert!(w.iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn ties_do_not_overprune() {
+        let mut w = vec![0.5f32; 8];
+        let n = magnitude_prune_f32(&mut w, 0.5);
+        assert_eq!(n, 4, "exactly half even with ties");
+    }
+}

@@ -1,0 +1,350 @@
+//! Typed configuration for the whole system, with JSON load/save.
+//!
+//! One [`SystemConfig`] describes an accelerator build the way the paper's
+//! §V does: the PE array (Table II), the GLB organization (§V.F variants),
+//! the scratchpad, the MRAM technology base case and reliability targets, and
+//! the serving/coordinator knobs. `SystemConfig::paper_*` are the three
+//! evaluated design points.
+
+use std::path::Path;
+
+
+use crate::accel::ArrayConfig;
+use crate::memsys::{BufferSystem, GlbKind, Scratchpad};
+use crate::models::DType;
+use crate::mram::{DesignTargets, MtjTech, PtVariation};
+use crate::util::json::Json;
+use crate::util::units::{KB, MB};
+
+/// GLB variant selector (serializable mirror of [`GlbKind`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GlbVariant {
+    /// 12 MB SRAM (Baseline).
+    Sram,
+    /// 12 MB MRAM Δ_PT_GB = 27.5 (STT-AI).
+    SttAi,
+    /// 6+6 MB MRAM 27.5/17.5 MSB/LSB banks (STT-AI Ultra).
+    SttAiUltra,
+}
+
+impl GlbVariant {
+    pub fn kind(&self) -> GlbKind {
+        match self {
+            GlbVariant::Sram => GlbKind::baseline(),
+            GlbVariant::SttAi => GlbKind::stt_ai(),
+            GlbVariant::SttAiUltra => GlbKind::stt_ai_ultra(),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            GlbVariant::Sram => "Baseline (SRAM)",
+            GlbVariant::SttAi => "STT-AI",
+            GlbVariant::SttAiUltra => "STT-AI Ultra",
+        }
+    }
+}
+
+/// MRAM technology selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TechBase {
+    /// Sakhare et al. 2020 [6].
+    #[default]
+    Sakhare2020,
+    /// Wei et al. 2019 [13].
+    Wei2019,
+}
+
+impl TechBase {
+    pub fn tech(&self) -> MtjTech {
+        match self {
+            TechBase::Sakhare2020 => MtjTech::sakhare2020(),
+            TechBase::Wei2019 => MtjTech::wei2019(),
+        }
+    }
+}
+
+/// Serving-side knobs for the coordinator.
+#[derive(Debug, Clone)]
+pub struct ServingConfig {
+    /// Maximum dynamic-batch size.
+    pub max_batch: usize,
+    /// Batching window (us): how long the batcher waits to fill a batch.
+    pub batch_window_us: u64,
+    /// Request-queue depth before backpressure.
+    pub queue_depth: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self { max_batch: 16, batch_window_us: 500, queue_depth: 1024 }
+    }
+}
+
+/// Fault-injection (BER) settings for the three variants.
+#[derive(Debug, Clone, Copy)]
+pub struct BerConfig {
+    /// BER of the robust (MSB-group) bank.
+    pub msb_ber: f64,
+    /// BER of the relaxed (LSB-group) bank.
+    pub lsb_ber: f64,
+    /// RNG seed for reproducible injection.
+    pub seed: u64,
+}
+
+impl BerConfig {
+    pub fn for_variant(v: GlbVariant) -> Self {
+        match v {
+            // SRAM: no MRAM-induced flips.
+            GlbVariant::Sram => Self { msb_ber: 0.0, lsb_ber: 0.0, seed: 0xC0FFEE },
+            // STT-AI: 1e-8 across all bits (single robust bank).
+            GlbVariant::SttAi => Self { msb_ber: 1e-8, lsb_ber: 1e-8, seed: 0xC0FFEE },
+            // Ultra: MSB groups at 1e-8, LSB groups at 1e-5.
+            GlbVariant::SttAiUltra => Self { msb_ber: 1e-8, lsb_ber: 1e-5, seed: 0xC0FFEE },
+        }
+    }
+}
+
+/// The full system description.
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    /// Human-readable name of this build.
+    pub name: String,
+    /// GLB variant.
+    pub glb: GlbVariant,
+    /// GLB capacity in bytes (paper: 12 MB).
+    pub glb_bytes: u64,
+    /// Scratchpad capacity in bytes (paper: 52 KB bf16 / 26 KB int8);
+    /// 0 disables the scratchpad.
+    pub scratchpad_bytes: u64,
+    /// Datatype of the hardware build.
+    pub dtype: DTypeConfig,
+    /// PE-array geometry + Table II timing.
+    pub array: ArrayConfig,
+    /// MRAM technology base case.
+    pub tech: TechBase,
+    /// Serving knobs.
+    pub serving: ServingConfig,
+}
+
+/// Serializable datatype.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DTypeConfig {
+    Int8,
+    Bf16,
+}
+
+impl DTypeConfig {
+    pub fn dtype(&self) -> DType {
+        match self {
+            DTypeConfig::Int8 => DType::Int8,
+            DTypeConfig::Bf16 => DType::Bf16,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Baseline: 12 MB SRAM GLB, no scratchpad.
+    pub fn paper_baseline() -> Self {
+        Self {
+            name: "baseline-sram".into(),
+            glb: GlbVariant::Sram,
+            glb_bytes: 12 * MB,
+            scratchpad_bytes: 0,
+            dtype: DTypeConfig::Bf16,
+            array: ArrayConfig::paper_42x42(),
+            tech: TechBase::default(),
+            serving: ServingConfig::default(),
+        }
+    }
+
+    /// STT-AI: 12 MB MRAM (Δ_PT_GB 27.5) + 52 KB scratchpad.
+    pub fn paper_stt_ai() -> Self {
+        Self {
+            name: "stt-ai".into(),
+            glb: GlbVariant::SttAi,
+            scratchpad_bytes: 52 * KB,
+            ..Self::paper_baseline()
+        }
+    }
+
+    /// STT-AI Ultra: 6+6 MB two-bank MRAM + 52 KB scratchpad.
+    pub fn paper_stt_ai_ultra() -> Self {
+        Self {
+            name: "stt-ai-ultra".into(),
+            glb: GlbVariant::SttAiUltra,
+            scratchpad_bytes: 52 * KB,
+            ..Self::paper_baseline()
+        }
+    }
+
+    /// Materialize the buffer system model.
+    pub fn buffer_system(&self) -> BufferSystem {
+        let sp = (self.scratchpad_bytes > 0).then(|| Scratchpad::new(self.scratchpad_bytes));
+        BufferSystem::new(self.glb.kind(), self.glb_bytes, sp)
+    }
+
+    /// BER settings implied by the GLB variant.
+    pub fn ber(&self) -> BerConfig {
+        BerConfig::for_variant(self.glb)
+    }
+
+    /// GLB reliability targets (the §V.C design points).
+    pub fn glb_targets(&self) -> DesignTargets {
+        DesignTargets::global_buffer()
+    }
+
+    /// PT variation model.
+    pub fn variation(&self) -> PtVariation {
+        PtVariation::paper()
+    }
+
+    /// Serialize to JSON (the offline build carries its own JSON codec).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            (
+                "glb",
+                match self.glb {
+                    GlbVariant::Sram => "sram",
+                    GlbVariant::SttAi => "stt_ai",
+                    GlbVariant::SttAiUltra => "stt_ai_ultra",
+                }
+                .into(),
+            ),
+            ("glb_bytes", self.glb_bytes.into()),
+            ("scratchpad_bytes", self.scratchpad_bytes.into()),
+            ("dtype", if self.dtype == DTypeConfig::Int8 { "int8" } else { "bf16" }.into()),
+            (
+                "array",
+                Json::obj(vec![
+                    ("w_a", self.array.w_a.into()),
+                    ("h_a", self.array.h_a.into()),
+                    ("p_s", self.array.p_s.into()),
+                    ("clk_hz", Json::Num(self.array.clk_hz)),
+                    ("cyc_per_step_conv", self.array.cyc_per_step_conv.into()),
+                    ("cyc_per_step_systolic", self.array.cyc_per_step_systolic.into()),
+                    ("t_pool_relu", Json::Num(self.array.t_pool_relu)),
+                ]),
+            ),
+            ("tech", if self.tech == TechBase::Wei2019 { "wei2019" } else { "sakhare2020" }.into()),
+            (
+                "serving",
+                Json::obj(vec![
+                    ("max_batch", (self.serving.max_batch as u64).into()),
+                    ("batch_window_us", self.serving.batch_window_us.into()),
+                    ("queue_depth", (self.serving.queue_depth as u64).into()),
+                ]),
+            ),
+        ])
+    }
+
+    /// Deserialize from JSON; missing optional sections fall back to the
+    /// paper defaults.
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        use anyhow::Context;
+        let mut cfg = Self::paper_baseline();
+        cfg.name = j.req_str("name").map_err(anyhow::Error::from)?.to_string();
+        cfg.glb = match j.req_str("glb").map_err(anyhow::Error::from)? {
+            "sram" => GlbVariant::Sram,
+            "stt_ai" => GlbVariant::SttAi,
+            "stt_ai_ultra" => GlbVariant::SttAiUltra,
+            other => anyhow::bail!("unknown glb variant {other:?}"),
+        };
+        cfg.glb_bytes = j.req_u64("glb_bytes").map_err(anyhow::Error::from)?;
+        cfg.scratchpad_bytes = j.req_u64("scratchpad_bytes").map_err(anyhow::Error::from)?;
+        if let Some(d) = j.get("dtype").and_then(|d| d.as_str()) {
+            cfg.dtype = if d == "int8" { DTypeConfig::Int8 } else { DTypeConfig::Bf16 };
+        }
+        if let Some(t) = j.get("tech").and_then(|t| t.as_str()) {
+            cfg.tech = if t == "wei2019" { TechBase::Wei2019 } else { TechBase::Sakhare2020 };
+        }
+        if let Some(a) = j.get("array") {
+            cfg.array.w_a = a.req_u64("w_a").map_err(anyhow::Error::from)?;
+            cfg.array.h_a = a.req_u64("h_a").map_err(anyhow::Error::from)?;
+            cfg.array.p_s = a.req_u64("p_s").map_err(anyhow::Error::from)?;
+            cfg.array.clk_hz =
+                a.req("clk_hz").map_err(anyhow::Error::from)?.as_f64().context("clk_hz")?;
+            cfg.array.cyc_per_step_conv =
+                a.req_u64("cyc_per_step_conv").map_err(anyhow::Error::from)?;
+            cfg.array.cyc_per_step_systolic =
+                a.req_u64("cyc_per_step_systolic").map_err(anyhow::Error::from)?;
+            cfg.array.t_pool_relu =
+                a.req("t_pool_relu").map_err(anyhow::Error::from)?.as_f64().context("t_pool_relu")?;
+        }
+        if let Some(s) = j.get("serving") {
+            cfg.serving.max_batch = s.req_u64("max_batch").map_err(anyhow::Error::from)? as usize;
+            cfg.serving.batch_window_us =
+                s.req_u64("batch_window_us").map_err(anyhow::Error::from)?;
+            cfg.serving.queue_depth =
+                s.req_u64("queue_depth").map_err(anyhow::Error::from)? as usize;
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text).map_err(anyhow::Error::from)?)
+    }
+
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_variants() {
+        let b = SystemConfig::paper_baseline();
+        assert_eq!(b.glb_bytes, 12 * MB);
+        assert_eq!(b.scratchpad_bytes, 0);
+        let s = SystemConfig::paper_stt_ai();
+        assert_eq!(s.scratchpad_bytes, 52 * KB);
+        let u = SystemConfig::paper_stt_ai_ultra();
+        assert_eq!(u.glb, GlbVariant::SttAiUltra);
+    }
+
+    #[test]
+    fn ber_per_variant() {
+        assert_eq!(BerConfig::for_variant(GlbVariant::Sram).msb_ber, 0.0);
+        let ultra = BerConfig::for_variant(GlbVariant::SttAiUltra);
+        assert_eq!(ultra.msb_ber, 1e-8);
+        assert_eq!(ultra.lsb_ber, 1e-5);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = SystemConfig::paper_stt_ai_ultra();
+        let text = c.to_json().to_string();
+        let back = SystemConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.name, c.name);
+        assert_eq!(back.glb, c.glb);
+        assert_eq!(back.glb_bytes, c.glb_bytes);
+        assert_eq!(back.array.w_a, c.array.w_a);
+        assert_eq!(back.serving.max_batch, c.serving.max_batch);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("stt_ai_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        let c = SystemConfig::paper_stt_ai();
+        c.save(&p).unwrap();
+        let back = SystemConfig::load(&p).unwrap();
+        assert_eq!(back.name, "stt-ai");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn buffer_system_materializes() {
+        let sys = SystemConfig::paper_stt_ai().buffer_system();
+        assert!(sys.scratchpad.is_some());
+        let sys = SystemConfig::paper_baseline().buffer_system();
+        assert!(sys.scratchpad.is_none());
+    }
+}

@@ -1,0 +1,119 @@
+//! Fig. 21-style accuracy evaluation: Top-1/Top-5 of the three GLB variants
+//! on the held-out test set, with and without 50% pruning.
+
+use std::path::Path;
+
+
+use super::engine::{Engine, EngineConfig};
+use crate::config::GlbVariant;
+
+/// Accuracy of one (variant, prune) cell.
+#[derive(Debug, Clone)]
+pub struct AccuracyReport {
+    pub variant: String,
+    pub prune_rate: f64,
+    pub n: usize,
+    pub top1: f64,
+    pub top5: f64,
+    pub bit_flips: u64,
+}
+
+/// One row of the Fig. 21 comparison (all variants at one prune rate).
+#[derive(Debug, Clone)]
+pub struct Fig21Row {
+    pub prune_rate: f64,
+    pub baseline: AccuracyReport,
+    pub stt_ai: AccuracyReport,
+    pub stt_ai_ultra: AccuracyReport,
+}
+
+impl Fig21Row {
+    /// Normalized Top-1 accuracy drop of Ultra vs baseline (paper: <1%).
+    pub fn ultra_drop_normalized(&self) -> f64 {
+        if self.baseline.top1 <= 0.0 {
+            return 0.0;
+        }
+        (self.baseline.top1 - self.stt_ai_ultra.top1) / self.baseline.top1
+    }
+}
+
+/// Evaluate one engine over the artifact test set.
+pub fn evaluate(engine: &Engine, batch: usize, limit: Option<usize>) -> crate::Result<AccuracyReport> {
+    let model = engine.model_for_batch(batch)?;
+    let (images, labels) = engine.manifest.load_testset()?;
+    let per_image: usize =
+        engine.manifest.testset.image_shape.iter().product::<i64>() as usize;
+    let n = limit.unwrap_or(engine.manifest.testset.n).min(engine.manifest.testset.n);
+    let mut top1 = 0usize;
+    let mut top5 = 0usize;
+    let mut seen = 0usize;
+    let mut i = 0usize;
+    while i + batch <= n {
+        let chunk = &images[i * per_image..(i + batch) * per_image];
+        let logits = engine.infer(&model, chunk)?;
+        let preds = model.predictions(&logits);
+        let tops = model.top_k(&logits, 5);
+        for (j, (&p, t)) in preds.iter().zip(&tops).enumerate() {
+            let label = labels[i + j] as usize;
+            if p == label {
+                top1 += 1;
+            }
+            if t.contains(&label) {
+                top5 += 1;
+            }
+            seen += 1;
+        }
+        i += batch;
+    }
+    Ok(AccuracyReport {
+        variant: format!("{:?}", engine.config.variant),
+        prune_rate: engine.config.prune_rate,
+        n: seen,
+        top1: top1 as f64 / seen.max(1) as f64,
+        top5: top5 as f64 / seen.max(1) as f64,
+        bit_flips: engine.flips,
+    })
+}
+
+/// Run the full Fig. 21 grid for one prune rate.
+pub fn fig21_row(
+    artifacts: &Path,
+    prune_rate: f64,
+    batch: usize,
+    limit: Option<usize>,
+) -> crate::Result<Fig21Row> {
+    let run = |variant: GlbVariant| -> crate::Result<AccuracyReport> {
+        let engine = Engine::load(artifacts, EngineConfig::new(variant).with_prune(prune_rate))?;
+        evaluate(&engine, batch, limit)
+    };
+    Ok(Fig21Row {
+        prune_rate,
+        baseline: run(GlbVariant::Sram)?,
+        stt_ai: run(GlbVariant::SttAi)?,
+        stt_ai_ultra: run(GlbVariant::SttAiUltra)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ultra_drop_handles_degenerate_baseline() {
+        let rep = AccuracyReport {
+            variant: "x".into(),
+            prune_rate: 0.0,
+            n: 0,
+            top1: 0.0,
+            top5: 0.0,
+            bit_flips: 0,
+        };
+        let row = Fig21Row {
+            prune_rate: 0.0,
+            baseline: rep.clone(),
+            stt_ai: rep.clone(),
+            stt_ai_ultra: rep,
+        };
+        assert_eq!(row.ultra_drop_normalized(), 0.0);
+    }
+}

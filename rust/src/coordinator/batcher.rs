@@ -1,0 +1,176 @@
+//! Dynamic batcher: coalesce queued inference requests into batches.
+//!
+//! The accelerator exposes fixed-batch executables (one per compiled batch
+//! size); the batcher drains the request queue up to `max_batch`, waits at
+//! most `window` for stragglers, and pads the final partial batch (padding
+//! rows are executed and discarded — the fixed-shape cost of AOT).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// One inference request: an image and an opaque id.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub image: Vec<f32>,
+    pub enqueued: Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, image: Vec<f32>) -> Self {
+        Self { id, image, enqueued: Instant::now() }
+    }
+}
+
+/// A formed batch: concatenated images + the real (unpadded) request count.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub ids: Vec<u64>,
+    pub images: Vec<f32>,
+    /// Number of real rows; rows beyond this are padding.
+    pub real: usize,
+    /// Batch capacity (the executable's compiled batch size).
+    pub capacity: usize,
+    /// Queueing delay of the oldest request in the batch.
+    pub oldest_wait: Duration,
+}
+
+/// The batcher. Synchronous core (easily driven from a tokio task — see
+/// examples/serve.rs).
+pub struct Batcher {
+    queue: VecDeque<Request>,
+    pub max_batch: usize,
+    pub window: Duration,
+    pub image_elems: usize,
+    /// Rejected when the queue is full (backpressure).
+    pub queue_depth: usize,
+    pub rejected: u64,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, window: Duration, image_elems: usize, queue_depth: usize) -> Self {
+        Self {
+            queue: VecDeque::new(),
+            max_batch,
+            window,
+            image_elems,
+            queue_depth,
+            rejected: 0,
+        }
+    }
+
+    /// Enqueue a request; `false` if rejected by backpressure.
+    pub fn push(&mut self, r: Request) -> bool {
+        assert_eq!(r.image.len(), self.image_elems, "image shape mismatch");
+        if self.queue.len() >= self.queue_depth {
+            self.rejected += 1;
+            return false;
+        }
+        self.queue.push_back(r);
+        true
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Should the caller fire a batch now? Either the batch is full, or the
+    /// oldest request has waited past the window.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.max_batch {
+            return true;
+        }
+        match self.queue.front() {
+            Some(r) => now.duration_since(r.enqueued) >= self.window,
+            None => false,
+        }
+    }
+
+    /// Form a batch of exactly `capacity` rows (padding with zero images if
+    /// fewer real requests are queued). Returns `None` on an empty queue.
+    pub fn form(&mut self, capacity: usize, now: Instant) -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let take = self.queue.len().min(capacity);
+        let mut ids = Vec::with_capacity(take);
+        let mut images = Vec::with_capacity(capacity * self.image_elems);
+        let mut oldest = Duration::ZERO;
+        for _ in 0..take {
+            let r = self.queue.pop_front().unwrap();
+            oldest = oldest.max(now.duration_since(r.enqueued));
+            ids.push(r.id);
+            images.extend_from_slice(&r.image);
+        }
+        images.resize(capacity * self.image_elems, 0.0);
+        Some(Batch { ids, images, real: take, capacity, oldest_wait: oldest })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, vec![0.5; 4])
+    }
+
+    fn batcher() -> Batcher {
+        Batcher::new(4, Duration::from_millis(5), 4, 8)
+    }
+
+    #[test]
+    fn fires_when_full() {
+        let mut b = batcher();
+        for i in 0..4 {
+            assert!(b.push(req(i)));
+        }
+        assert!(b.ready(Instant::now()));
+        let batch = b.form(4, Instant::now()).unwrap();
+        assert_eq!(batch.real, 4);
+        assert_eq!(batch.ids, vec![0, 1, 2, 3]);
+        assert_eq!(batch.images.len(), 16);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn window_expiry_fires_partial() {
+        let mut b = batcher();
+        b.push(req(1));
+        assert!(!b.ready(Instant::now()), "fresh request, window not expired");
+        let later = Instant::now() + Duration::from_millis(10);
+        assert!(b.ready(later));
+        let batch = b.form(4, later).unwrap();
+        assert_eq!(batch.real, 1);
+        assert_eq!(batch.capacity, 4);
+        // Padding rows are zeros.
+        assert!(batch.images[4..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn backpressure_rejects() {
+        let mut b = batcher();
+        for i in 0..8 {
+            assert!(b.push(req(i)));
+        }
+        assert!(!b.push(req(99)));
+        assert_eq!(b.rejected, 1);
+    }
+
+    #[test]
+    fn empty_queue_forms_nothing() {
+        let mut b = batcher();
+        assert!(b.form(4, Instant::now()).is_none());
+        assert!(!b.ready(Instant::now()));
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = batcher();
+        for i in [5u64, 3, 9] {
+            b.push(req(i));
+        }
+        let batch = b.form(4, Instant::now()).unwrap();
+        assert_eq!(batch.ids, vec![5, 3, 9]);
+    }
+}

@@ -1,0 +1,178 @@
+//! The inference engine: PJRT executables + weight image + fault model.
+
+use std::path::Path;
+
+use crate::ber::{BankSplit, Injector, WordKind};
+use crate::config::{BerConfig, GlbVariant};
+use crate::runtime::{ArtifactManifest, LoadedModel, Runtime, Weights};
+
+/// Engine construction options.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// GLB variant: selects the BER fault model applied to buffered data.
+    pub variant: GlbVariant,
+    /// Magnitude-pruning rate applied to weights before injection (Fig. 21
+    /// evaluates 0.0 and 0.5).
+    pub prune_rate: f64,
+    /// Injection seed (reproducible fault patterns).
+    pub seed: u64,
+    /// Also corrupt input activations (ifmaps live in the same GLB banks as
+    /// weights; the paper's fault model covers "weight/fmap bits").
+    pub inject_activations: bool,
+}
+
+impl EngineConfig {
+    pub fn new(variant: GlbVariant) -> Self {
+        Self {
+            variant,
+            prune_rate: 0.0,
+            seed: BerConfig::for_variant(variant).seed,
+            inject_activations: false,
+        }
+    }
+
+    pub fn with_activation_faults(mut self) -> Self {
+        self.inject_activations = true;
+        self
+    }
+
+    pub fn with_prune(mut self, rate: f64) -> Self {
+        self.prune_rate = rate;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// The engine. Weights are stored twice: `clean` (as trained) and `served`
+/// (pruned + BER-injected — the image the STT-MRAM GLB actually holds).
+pub struct Engine {
+    pub runtime: Runtime,
+    pub manifest: ArtifactManifest,
+    pub config: EngineConfig,
+    clean: Weights,
+    served: Weights,
+    /// Total bit flips injected into the served weight image.
+    pub flips: u64,
+    /// Per-call counter for activation-fault seeding.
+    act_calls: std::sync::atomic::AtomicU64,
+}
+
+impl Engine {
+    /// Load artifacts and prepare the served weight image.
+    pub fn load(artifacts_dir: &Path, config: EngineConfig) -> crate::Result<Self> {
+        let runtime = Runtime::cpu()?;
+        let manifest = ArtifactManifest::load(artifacts_dir)?;
+        let clean = manifest.load_weights()?;
+        let mut engine = Self {
+            runtime,
+            manifest,
+            config,
+            served: clean.clone(),
+            clean,
+            flips: 0,
+            act_calls: std::sync::atomic::AtomicU64::new(0),
+        };
+        engine.rebuild_served();
+        Ok(engine)
+    }
+
+    /// Rebuild the served weight image: clean → prune → BER injection.
+    ///
+    /// The fault model mirrors the physical design: weights live in the GLB
+    /// as bf16 words split across the MSB/LSB banks, so we corrupt the bf16
+    /// image and convert back to the f32 the executable consumes (the
+    /// executable itself computes in f32 on CPU; bf16 rounding is part of
+    /// the fault model, applied identically to all variants).
+    pub fn rebuild_served(&mut self) {
+        let mut w = self.clean.data.clone();
+        if self.config.prune_rate > 0.0 {
+            crate::ber::magnitude_prune_f32(&mut w, self.config.prune_rate);
+        }
+        // f32 → bf16 image (what the buffer stores).
+        let mut image: Vec<u8> = Vec::with_capacity(w.len() * 2);
+        for v in &w {
+            image.extend_from_slice(&crate::util::bf16::f32_to_bf16(*v).to_le_bytes());
+        }
+        let ber = BerConfig::for_variant(self.config.variant);
+        let split = BankSplit { kind: WordKind::Bf16, msb_ber: ber.msb_ber, lsb_ber: ber.lsb_ber };
+        let mut inj = Injector::new(self.config.seed);
+        let stats = split.inject(&mut inj, &mut image);
+        self.flips = stats.bits_flipped;
+        // bf16 image → f32 served weights.
+        let served: Vec<f32> = image
+            .chunks_exact(2)
+            .map(|c| crate::util::bf16::bf16_to_f32(u16::from_le_bytes([c[0], c[1]])))
+            .collect();
+        self.served = Weights { data: served };
+    }
+
+    /// The weight image the executables run with.
+    pub fn served_weights(&self) -> &Weights {
+        &self.served
+    }
+
+    /// Load the executable variant for a batch size.
+    pub fn model_for_batch(&self, batch: usize) -> crate::Result<LoadedModel> {
+        let (_, art) = self.manifest.model_for_batch(batch)?;
+        self.runtime.load_model(&self.manifest.dir, art)
+    }
+
+    /// Run one batch of images through the served model; returns logits.
+    /// With `inject_activations`, the ifmap passes through the same
+    /// bf16-image + bank-split fault model as the weights (fresh pattern
+    /// per call, seeded from the engine seed + a call counter).
+    pub fn infer(&self, model: &LoadedModel, images: &[f32]) -> crate::Result<Vec<f32>> {
+        if !self.config.inject_activations {
+            return model.infer(&self.served, images);
+        }
+        let corrupted = self.corrupt_activations(images);
+        model.infer(&self.served, &corrupted)
+    }
+
+    /// Apply the GLB fault model to an activation buffer.
+    pub fn corrupt_activations(&self, images: &[f32]) -> Vec<f32> {
+        use crate::util::bf16::{bf16_to_f32, f32_to_bf16};
+        let mut image: Vec<u8> = Vec::with_capacity(images.len() * 2);
+        for v in images {
+            image.extend_from_slice(&f32_to_bf16(*v).to_le_bytes());
+        }
+        let ber = BerConfig::for_variant(self.config.variant);
+        let split = BankSplit { kind: WordKind::Bf16, msb_ber: ber.msb_ber, lsb_ber: ber.lsb_ber };
+        let n = self.act_calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let mut inj = Injector::new(self.config.seed ^ (0xAC7 << 32) ^ n);
+        split.inject(&mut inj, &mut image);
+        image
+            .chunks_exact(2)
+            .map(|c| bf16_to_f32(u16::from_le_bytes([c[0], c[1]])))
+            .collect()
+    }
+
+    /// Reseed and rebuild (fresh fault pattern — used by the Fig. 21 bench
+    /// to average over injection draws).
+    pub fn reseed(&mut self, seed: u64) {
+        self.config.seed = seed;
+        self.rebuild_served();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_builders() {
+        let c = EngineConfig::new(GlbVariant::SttAiUltra)
+            .with_prune(0.5)
+            .with_seed(99)
+            .with_activation_faults();
+        assert_eq!(c.prune_rate, 0.5);
+        assert_eq!(c.seed, 99);
+        assert!(c.inject_activations);
+    }
+
+    // Engine::load tests require built artifacts; see rust/tests/e2e.rs.
+}

@@ -1,0 +1,107 @@
+//! Serving metrics: latency histogram, throughput, batch-occupancy.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::LatencyHistogram;
+
+/// Aggregated serving metrics.
+#[derive(Debug, Clone)]
+pub struct Metrics {
+    pub latency: LatencyHistogram,
+    pub batches: u64,
+    pub requests: u64,
+    pub padded_rows: u64,
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            latency: LatencyHistogram::new(),
+            batches: 0,
+            requests: 0,
+            padded_rows: 0,
+            started: Instant::now(),
+        }
+    }
+
+    /// Record one executed batch.
+    pub fn record_batch(&mut self, real: usize, capacity: usize, latency: Duration) {
+        self.batches += 1;
+        self.requests += real as u64;
+        self.padded_rows += (capacity - real) as u64;
+        self.latency.record_us(latency.as_micros() as u64);
+    }
+
+    /// Requests per second since construction.
+    pub fn throughput(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.requests as f64 / secs
+        }
+    }
+
+    /// Mean batch occupancy (real rows / capacity rows).
+    pub fn occupancy(&self) -> f64 {
+        let total = self.requests + self.padded_rows;
+        if total == 0 {
+            0.0
+        } else {
+            self.requests as f64 / total as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "batches={} requests={} occupancy={:.1}% p50={}us p99={}us max={}us mean={:.0}us",
+            self.batches,
+            self.requests,
+            self.occupancy() * 100.0,
+            self.latency.percentile_us(50.0),
+            self.latency.percentile_us(99.0),
+            self.latency.max_us(),
+            self.latency.mean_us(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut m = Metrics::new();
+        m.record_batch(4, 4, Duration::from_micros(100));
+        m.record_batch(2, 4, Duration::from_micros(300));
+        assert_eq!(m.batches, 2);
+        assert_eq!(m.requests, 6);
+        assert_eq!(m.padded_rows, 2);
+        assert!((m.occupancy() - 0.75).abs() < 1e-12);
+        let s = m.summary();
+        assert!(s.contains("batches=2"));
+    }
+
+    #[test]
+    fn throughput_nonzero_after_requests() {
+        let mut m = Metrics::new();
+        m.record_batch(8, 8, Duration::from_micros(50));
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(m.throughput() > 0.0);
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::new();
+        assert_eq!(m.occupancy(), 0.0);
+        assert_eq!(m.latency.percentile_us(99.0), 0);
+    }
+}

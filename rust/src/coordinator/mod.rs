@@ -1,0 +1,23 @@
+//! L3 coordinator: the serving side of the STT-AI accelerator.
+//!
+//! * [`engine`] — the inference engine: owns the PJRT executables (one per
+//!   batch size), the weights, and the STT-MRAM fault model of the selected
+//!   GLB variant; applies bank-split BER injection to the weight image the
+//!   way the physical buffer would corrupt it, then serves batches.
+//! * [`batcher`] — dynamic batcher: coalesces queued requests up to
+//!   `max_batch` within a bounded window, padding the tail batch.
+//! * [`metrics`] — latency histograms + throughput counters.
+//! * [`accuracy`] — Fig. 21-style evaluation loops (Top-1/Top-5, pruning).
+
+pub mod accuracy;
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod router;
+pub mod serve;
+
+pub use accuracy::{AccuracyReport, Fig21Row};
+pub use batcher::{Batch, Batcher, Request};
+pub use engine::{Engine, EngineConfig};
+pub use metrics::Metrics;
+pub use router::{Router, RouterPolicy, Variant};

@@ -1,0 +1,137 @@
+//! Request router: picks the executable variant (batch size) per dispatch.
+//!
+//! The AOT flow compiles one executable per batch size; at serve time the
+//! router looks at queue depth and latency targets and decides whether to
+//! fire a small batch now (latency) or wait and fill a big one
+//! (throughput) — the same decision a vLLM-style router makes between
+//! latency- and throughput-optimal batching.
+
+use std::time::Duration;
+
+/// One available executable variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Variant {
+    pub batch: usize,
+}
+
+/// Routing policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct RouterPolicy {
+    /// Fire the largest fillable batch once queue ≥ this fraction of it.
+    pub fill_threshold: f64,
+    /// Max age of the oldest request before firing whatever is available.
+    pub max_wait: Duration,
+}
+
+impl Default for RouterPolicy {
+    fn default() -> Self {
+        Self { fill_threshold: 1.0, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// The router.
+#[derive(Debug, Clone)]
+pub struct Router {
+    /// Sorted ascending by batch.
+    variants: Vec<Variant>,
+    pub policy: RouterPolicy,
+}
+
+impl Router {
+    pub fn new(mut batches: Vec<usize>, policy: RouterPolicy) -> Self {
+        batches.sort_unstable();
+        batches.dedup();
+        assert!(!batches.is_empty(), "need at least one compiled variant");
+        Self { variants: batches.into_iter().map(|batch| Variant { batch }).collect(), policy }
+    }
+
+    pub fn variants(&self) -> &[Variant] {
+        &self.variants
+    }
+
+    /// Decide what to run given `queued` requests whose oldest has waited
+    /// `oldest_wait`. Returns `None` to keep waiting.
+    pub fn dispatch(&self, queued: usize, oldest_wait: Duration) -> Option<Variant> {
+        if queued == 0 {
+            return None;
+        }
+        // Throughput path: fire only when the LARGEST variant fills to the
+        // threshold (firing small variants early would starve big batches).
+        let largest = *self.variants.last().unwrap();
+        if queued as f64 >= largest.batch as f64 * self.policy.fill_threshold {
+            return Some(largest);
+        }
+        if oldest_wait >= self.policy.max_wait {
+            // Deadline: smallest variant that covers the queue (minimize
+            // padding), or the largest one if the queue exceeds everything.
+            let v = self
+                .variants
+                .iter()
+                .find(|v| v.batch >= queued)
+                .or_else(|| self.variants.last())
+                .unwrap();
+            return Some(*v);
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router() -> Router {
+        Router::new(vec![16, 1], RouterPolicy::default())
+    }
+
+    #[test]
+    fn empty_queue_waits() {
+        assert_eq!(router().dispatch(0, Duration::from_secs(1)), None);
+    }
+
+    #[test]
+    fn full_queue_fires_big_batch() {
+        let r = router();
+        assert_eq!(r.dispatch(16, Duration::ZERO), Some(Variant { batch: 16 }));
+        assert_eq!(r.dispatch(40, Duration::ZERO), Some(Variant { batch: 16 }));
+    }
+
+    #[test]
+    fn fresh_partial_queue_waits() {
+        let r = router();
+        // 5 queued, fresh: a single-request variant would thrash; wait.
+        assert_eq!(r.dispatch(5, Duration::ZERO), None);
+    }
+
+    #[test]
+    fn deadline_fires_smallest_covering_variant() {
+        let r = Router::new(vec![1, 4, 16], RouterPolicy::default());
+        let late = Duration::from_millis(5);
+        assert_eq!(r.dispatch(3, late), Some(Variant { batch: 4 }));
+        assert_eq!(r.dispatch(1, late), Some(Variant { batch: 1 }));
+        assert_eq!(r.dispatch(9, late), Some(Variant { batch: 16 }));
+    }
+
+    #[test]
+    fn single_request_fires_batch1_only_on_deadline() {
+        // A lone request waits for company; on deadline it takes the
+        // batch-1 variant (no padding).
+        let r = router();
+        assert_eq!(r.dispatch(1, Duration::ZERO), None);
+        assert_eq!(r.dispatch(1, Duration::from_millis(5)), Some(Variant { batch: 1 }));
+    }
+
+    #[test]
+    fn threshold_below_one_fires_earlier() {
+        let r = Router::new(vec![16], RouterPolicy { fill_threshold: 0.5, ..Default::default() });
+        assert_eq!(r.dispatch(8, Duration::ZERO), Some(Variant { batch: 16 }));
+        assert_eq!(r.dispatch(7, Duration::ZERO), None);
+    }
+
+    #[test]
+    fn variants_sorted_dedup() {
+        let r = Router::new(vec![16, 1, 16, 4], RouterPolicy::default());
+        let b: Vec<usize> = r.variants().iter().map(|v| v.batch).collect();
+        assert_eq!(b, vec![1, 4, 16]);
+    }
+}

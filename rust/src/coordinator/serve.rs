@@ -1,0 +1,41 @@
+//! Closed-loop serving driver: feeds synthetic requests drawn from the
+//! artifact test set through the batcher + engine and reports metrics.
+//! (The async open-loop variant lives in examples/serve.rs on tokio.)
+
+use std::time::{Duration, Instant};
+
+use super::batcher::{Batcher, Request};
+use super::engine::Engine;
+use super::metrics::Metrics;
+
+/// Run `n_requests` through the engine at the given batch size; returns a
+/// human-readable metrics summary.
+pub fn closed_loop(engine: &Engine, n_requests: usize, batch: usize) -> crate::Result<String> {
+    let model = engine.model_for_batch(batch)?;
+    let (images, _) = engine.manifest.load_testset()?;
+    let per_image: usize = engine.manifest.testset.image_shape.iter().product::<i64>() as usize;
+    let n_test = engine.manifest.testset.n;
+
+    let mut batcher = Batcher::new(batch, Duration::from_micros(200), per_image, n_requests + 1);
+    let mut metrics = Metrics::new();
+
+    for i in 0..n_requests {
+        let src = i % n_test;
+        let img = images[src * per_image..(src + 1) * per_image].to_vec();
+        batcher.push(Request::new(i as u64, img));
+    }
+    while batcher.pending() > 0 {
+        let now = Instant::now();
+        if let Some(b) = batcher.form(batch, now) {
+            let t0 = Instant::now();
+            let logits = engine.infer(&model, &b.images)?;
+            debug_assert_eq!(logits.len(), batch * model.art.num_classes);
+            metrics.record_batch(b.real, b.capacity, t0.elapsed());
+        }
+    }
+    Ok(format!(
+        "served {n_requests} requests (batch {batch}): {} | throughput {:.1} req/s",
+        metrics.summary(),
+        metrics.throughput()
+    ))
+}

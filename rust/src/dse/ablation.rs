@@ -1,0 +1,191 @@
+//! Ablation studies for the design choices DESIGN.md calls out.
+//!
+//! * guard-band on/off — what Eq. 17–18 actually buys (§IV.C);
+//! * refresh-based ultra-low-Δ GLB (the [33]-style alternative the paper
+//!   rejects) vs the paper's scaled-but-refresh-free design;
+//! * P_s (PE dot-product width) sweep — the Fig. 3 core parameter;
+//! * write-overdrive sweep — latency/energy trade of §IV.B.
+
+use crate::accel::{ArrayConfig, RetentionAnalysis};
+use crate::memsys::MemoryArray;
+use crate::models::Model;
+use crate::mram::{
+    retention_failure_prob, write_pulse_at_wer, DesignTargets, MtjTech, PtVariation,
+    ScalingSolver,
+};
+use crate::util::units::MB;
+
+/// Guard-band ablation: failure probability of the −4σ/hot die when the
+/// design skips Eq. 17.
+#[derive(Debug, Clone)]
+pub struct GuardBandAblation {
+    /// P_RF at the worst corner with guard-banding (should be ≤ budget).
+    pub p_rf_guarded: f64,
+    /// P_RF at the worst corner when the MTJ is built at Δ_scaled directly.
+    pub p_rf_unguarded: f64,
+    pub budget: f64,
+}
+
+pub fn guard_band_ablation(tech: MtjTech, targets: &DesignTargets) -> GuardBandAblation {
+    let v = PtVariation::paper();
+    let solver = ScalingSolver::with_variation(tech, v);
+    let d = solver.solve(targets);
+    // Worst corner Δ for a *guarded* build: Δ_scaled by construction.
+    let p_guarded = retention_failure_prob(targets.retention_time, tech.tau_ret, d.delta_scaled);
+    // Unguarded build at Δ_scaled: the −4σ/hot die drops below Δ_scaled.
+    let worst_unguarded =
+        v.delta_at(d.delta_scaled, -v.n_sigma, v.t_hot);
+    let p_unguarded =
+        retention_failure_prob(targets.retention_time, tech.tau_ret, worst_unguarded);
+    GuardBandAblation {
+        p_rf_guarded: p_guarded,
+        p_rf_unguarded: p_unguarded,
+        budget: targets.retention_ber,
+    }
+}
+
+/// Refresh ablation: scale Δ below the occupancy requirement and pay
+/// DRAM-like refresh (periodic rewrite of the whole GLB) instead.
+#[derive(Debug, Clone)]
+pub struct RefreshAblation {
+    pub delta_guard_banded: f64,
+    /// Refresh period to keep the per-bit failure within budget (s).
+    pub refresh_period: f64,
+    /// Average refresh power for a 12 MB GLB (W).
+    pub refresh_power_w: f64,
+    /// Leakage saved vs the paper's Δ=27.5 design (W) — the upside.
+    pub leakage_saved_w: f64,
+    /// Net win? (the paper's position: no for seconds-scale occupancy.)
+    pub net_power_w: f64,
+}
+
+pub fn refresh_ablation(delta_scaled: f64, ber: f64) -> RefreshAblation {
+    let tech = MtjTech::sakhare2020();
+    let v = PtVariation::paper();
+    let gb = v.guard_band(delta_scaled);
+    // Refresh period: retention time at the BER budget for this Δ.
+    let period = crate::mram::retention_time_at_ber(tech.tau_ret, delta_scaled, ber);
+    let glb = MemoryArray::stt_mram(12 * MB, gb.delta_guard_banded);
+    // One refresh = read + write every word.
+    let words = (12 * MB) as f64 / 8.0;
+    let e_refresh = words * (glb.read_energy_j() + glb.write_energy_j());
+    let p_refresh = e_refresh / period;
+    // Leakage difference vs the Δ_PT_GB = 27.5 paper design: periphery
+    // leakage shrinks slightly with Δ.
+    let p27 = MemoryArray::stt_mram(12 * MB, 27.5).leakage_mw() * 1e-3;
+    let p_this = glb.leakage_mw() * 1e-3;
+    RefreshAblation {
+        delta_guard_banded: gb.delta_guard_banded,
+        refresh_period: period,
+        refresh_power_w: p_refresh,
+        leakage_saved_w: p27 - p_this,
+        net_power_w: p_refresh - (p27 - p_this),
+    }
+}
+
+/// P_s sweep: steps per output channel (∝ conv time, Eq. 2/5) for a layer
+/// as the PE dot-product width varies at a fixed MAC budget.
+pub fn ps_sweep(m: &Model, batch: u64, ps_values: &[u64]) -> Vec<(u64, f64)> {
+    ps_values
+        .iter()
+        .map(|&ps| {
+            let base = ArrayConfig::paper_42x42();
+            // Fixed MAC budget: W_A·H_A·P_s = 1764.
+            let w_a = (42 / ps).max(1);
+            let a = ArrayConfig { p_s: ps, w_a, h_a: 42, ..base };
+            let worst = RetentionAnalysis::new(&a, batch).analyze(m).max_t_ret();
+            (ps, worst)
+        })
+        .collect()
+}
+
+/// Overdrive sweep: write pulse needed at each I_w/I_c (Fig. 15e/f's knob).
+pub fn overdrive_sweep(delta: f64, wer: f64, ratios: &[f64]) -> Vec<(f64, f64, f64)> {
+    let tech = MtjTech::sakhare2020();
+    ratios
+        .iter()
+        .map(|&i| {
+            let t = write_pulse_at_wer(wer, tech.tau_w, delta, i);
+            // Energy ∝ I²·t (relative units, I in I_c multiples).
+            (i, t, i * i * t)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn guard_band_is_necessary_and_sufficient() {
+        let g = guard_band_ablation(MtjTech::sakhare2020(), &DesignTargets::global_buffer());
+        assert!(g.p_rf_guarded <= g.budget * 1.01, "guarded {} > budget", g.p_rf_guarded);
+        // Without the guard band the worst-corner die blows the budget by
+        // orders of magnitude.
+        assert!(
+            g.p_rf_unguarded > 100.0 * g.budget,
+            "unguarded {} vs budget {}",
+            g.p_rf_unguarded,
+            g.budget
+        );
+    }
+
+    #[test]
+    fn refresh_does_not_pay_for_seconds_occupancy() {
+        // Scale Δ to 10 (retention ~ tens of ms at 1e-8) and refresh: the
+        // refresh power dwarfs the periphery-leakage saving — the paper's
+        // reason to scale only down to the occupancy time.
+        let r = refresh_ablation(10.0, 1e-8);
+        assert!(r.refresh_period < 1.0, "{}", r.refresh_period);
+        assert!(r.net_power_w > 0.0, "refresh must cost net power: {:?}", r);
+    }
+
+    #[test]
+    fn refresh_period_grows_with_delta() {
+        let a = refresh_ablation(10.0, 1e-8);
+        let b = refresh_ablation(14.0, 1e-8);
+        assert!(b.refresh_period > a.refresh_period);
+        assert!(b.refresh_power_w < a.refresh_power_w);
+    }
+
+    #[test]
+    fn ps_3_optimal_for_3x3_kernels() {
+        // The paper's P_s = 3 matches the dominant 3×3 kernel width:
+        // ceil(3/3) = 1 wastes no lanes. At a fixed MAC budget it ties
+        // P_s = 1 on VGG16 (pure 3×3) and strictly beats P_s = 2
+        // (ceil(3/2) = 2 → a third of the lanes idle).
+        let m = models::by_name("VGG16").unwrap();
+        let sweep = ps_sweep(&m, 16, &[1, 2, 3]);
+        let at = |p: u64| sweep.iter().find(|(q, _)| *q == p).unwrap().1;
+        assert!(at(3) <= at(1) * 1.01, "P_s=3 {} vs P_s=1 {}", at(3), at(1));
+        assert!(at(3) < at(2), "P_s=3 {} must beat P_s=2 {}", at(3), at(2));
+    }
+
+    #[test]
+    fn ps_sweep_exposes_1x1_utilization_cost() {
+        // Ablation finding: for 1×1-heavy nets (ResNet-50 bottlenecks) the
+        // 3-wide dot-product block leaves lanes idle — P_s = 1 at the same
+        // MAC budget is faster. This is the known utilization cost of the
+        // Fig. 3 reconfigurable block, traded for the mux-free 3×3 path.
+        let m = models::by_name("ResNet50").unwrap();
+        let sweep = ps_sweep(&m, 16, &[1, 3]);
+        let at = |p: u64| sweep.iter().find(|(q, _)| *q == p).unwrap().1;
+        assert!(at(1) < at(3), "{} vs {}", at(1), at(3));
+    }
+
+    #[test]
+    fn overdrive_trades_latency_for_energy() {
+        let sweep = overdrive_sweep(27.5, 1e-8, &[1.5, 2.0, 3.0, 4.0]);
+        // Pulse shrinks monotonically with overdrive…
+        assert!(sweep.windows(2).all(|w| w[1].1 <= w[0].1));
+        // …but energy is not monotone decreasing — beyond some point the I²
+        // factor wins, which is why I_w is a *knob*, not a free lunch.
+        let energies: Vec<f64> = sweep.iter().map(|s| s.2).collect();
+        assert!(
+            energies.last().unwrap() > energies.first().unwrap()
+                || energies.windows(2).any(|w| w[1] > w[0]),
+            "{energies:?}"
+        );
+    }
+}

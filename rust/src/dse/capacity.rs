@@ -1,0 +1,244 @@
+//! GLB capacity design-space exploration (Figs. 10–12).
+
+
+use crate::accel::{ArrayConfig, ModelTraffic};
+use crate::memsys::DramModel;
+use crate::models::{DType, Model};
+
+/// One row of the Fig. 10/11 model-size and capacity tables.
+#[derive(Debug, Clone)]
+pub struct CapacityRow {
+    pub model: String,
+    /// Fig. 10a: full model size (bytes) at int8/bf16.
+    pub size_int8: u64,
+    pub size_bf16: u64,
+    /// Fig. 10b: conv activation-map size range (elements).
+    pub fmap_min: u64,
+    pub fmap_max: u64,
+    /// Fig. 10c: conv weight size range (elements).
+    pub weight_min: u64,
+    pub weight_max: u64,
+    /// Fig. 11: required GLB bytes to avoid DRAM access, per batch size.
+    pub glb_required: Vec<(u64, u64)>, // (batch, bytes)
+}
+
+impl CapacityRow {
+    pub fn analyze(m: &Model, dt: DType, batches: &[u64]) -> Self {
+        let (fmap_min, fmap_max) = m.conv_fmap_range();
+        let (weight_min, weight_max) = m.conv_weight_range();
+        Self {
+            model: m.name.clone(),
+            size_int8: m.size_bytes(DType::Int8),
+            size_bf16: m.size_bytes(DType::Bf16),
+            fmap_min,
+            fmap_max,
+            weight_min,
+            weight_max,
+            glb_required: batches.iter().map(|&b| (b, m.max_conv_working_set(dt, b))).collect(),
+        }
+    }
+}
+
+/// One row of the Fig. 12 extra-DRAM-overhead analysis.
+#[derive(Debug, Clone)]
+pub struct DramOverheadRow {
+    pub model: String,
+    pub dtype_bytes: u64,
+    pub batch: u64,
+    pub glb_bytes: u64,
+    /// Spilled bytes (write-out + read-back).
+    pub spill_bytes: u64,
+    /// Extra DRAM latency (s), Fig. 12(a)(b).
+    pub extra_latency: f64,
+    /// Extra DRAM energy (J), Fig. 12(c)(d).
+    pub extra_energy: f64,
+}
+
+impl DramOverheadRow {
+    pub fn analyze(
+        m: &Model,
+        a: &ArrayConfig,
+        dram: &DramModel,
+        dt: DType,
+        batch: u64,
+        glb_bytes: u64,
+    ) -> Self {
+        let t = ModelTraffic::analyze(m, a, dt, batch, glb_bytes);
+        let spill = t.total_dram_bytes();
+        Self {
+            model: m.name.clone(),
+            dtype_bytes: dt.bytes(),
+            batch,
+            glb_bytes,
+            spill_bytes: spill,
+            extra_latency: if spill == 0 { 0.0 } else { dram.transfer_latency(spill) },
+            extra_energy: dram.transfer_energy(spill),
+        }
+    }
+}
+
+/// Fig. 11 aggregate: the GLB capacity that covers *all* models at a batch.
+pub fn glb_capacity_for_zoo(zoo: &[Model], dt: DType, batch: u64) -> u64 {
+    zoo.iter().map(|m| m.max_conv_working_set(dt, batch)).max().unwrap_or(0)
+}
+
+/// Count of zoo models fully served (zero spill) by a GLB size at a batch.
+pub fn models_served(zoo: &[Model], dt: DType, batch: u64, glb_bytes: u64) -> usize {
+    zoo.iter().filter(|m| m.max_conv_working_set(dt, batch) <= glb_bytes).count()
+}
+
+/// Working set of a magnitude-pruned model: sparse weights shrink by the
+/// prune rate (index overhead folded into `overhead`, e.g. CSR-ish 1.1),
+/// activations are unchanged. The paper's "if pruned models are used, a
+/// batch of more images can fit into the GLB".
+pub fn pruned_working_set(m: &Model, dt: DType, batch: u64, prune_rate: f64, overhead: f64) -> u64 {
+    let keep = (1.0 - prune_rate) * overhead;
+    m.conv_layers()
+        .map(|c| {
+            batch * (c.ifmap_elems() + c.ofmap_elems()) * dt.bytes()
+                + ((c.weight_elems() * dt.bytes()) as f64 * keep) as u64
+        })
+        .max()
+        .unwrap_or(0)
+}
+
+/// Largest batch a GLB can hold for a model (optionally pruned).
+pub fn max_batch_served(m: &Model, dt: DType, glb_bytes: u64, prune_rate: f64) -> u64 {
+    let mut batch = 0;
+    while batch < 1024 {
+        let next = batch + 1;
+        let ws = if prune_rate > 0.0 {
+            pruned_working_set(m, dt, next, prune_rate, 1.1)
+        } else {
+            m.max_conv_working_set(dt, next)
+        };
+        if ws > glb_bytes {
+            break;
+        }
+        batch = next;
+    }
+    batch
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::util::units::MB;
+
+    #[test]
+    fn fig11_12mb_covers_small_batches_int8() {
+        // Paper: ≤12 MB suffices for batch ≤ 2 at int8 for a max over the
+        // zoo; with 12 MB most models support batch 8.
+        let zoo = models::zoo();
+        let served_b2 = models_served(&zoo, DType::Int8, 2, 12 * MB);
+        assert!(served_b2 >= 17, "batch 2 int8: {served_b2}/19 in 12 MB");
+        let served_b8 = models_served(&zoo, DType::Int8, 8, 12 * MB);
+        assert!(served_b8 * 2 >= zoo.len(), "most models at batch 8: {served_b8}");
+        // bf16 batch 1 fits all (paper: "for BF16, 12MB would suffice for
+        // batch size 1 for all models").
+        let served_bf16 = models_served(&zoo, DType::Bf16, 1, 12 * MB);
+        assert!(served_bf16 >= 17, "bf16 batch 1: {served_bf16}/19");
+    }
+
+    #[test]
+    fn fig12_latency_bounds() {
+        // Paper: int8/batch-8 spill latency ≈ 0 for most models, ~ms for a
+        // few; bf16 within ~10 ms.
+        let zoo = models::zoo();
+        let a = ArrayConfig::paper_42x42();
+        let d = DramModel::ddr4_2933_dual();
+        let mut worst_int8 = 0.0f64;
+        let mut worst_bf16 = 0.0f64;
+        for m in &zoo {
+            let r = DramOverheadRow::analyze(m, &a, &d, DType::Int8, 8, 12 * MB);
+            worst_int8 = worst_int8.max(r.extra_latency);
+            let r = DramOverheadRow::analyze(m, &a, &d, DType::Bf16, 8, 12 * MB);
+            worst_bf16 = worst_bf16.max(r.extra_latency);
+        }
+        assert!(worst_int8 < 8e-3, "worst int8 spill latency {worst_int8}");
+        assert!(worst_bf16 < 15e-3, "worst bf16 spill latency {worst_bf16}");
+        assert!(worst_bf16 > worst_int8);
+    }
+
+    #[test]
+    fn fig12_energy_drops_with_glb_size() {
+        let a = ArrayConfig::paper_42x42();
+        let d = DramModel::ddr4_2933_dual();
+        let m = models::by_name("VGG19").unwrap();
+        let mut last = f64::INFINITY;
+        for glb_mb in [2u64, 4, 8, 12, 24] {
+            let r = DramOverheadRow::analyze(&m, &a, &d, DType::Bf16, 4, glb_mb * MB);
+            assert!(r.extra_energy <= last);
+            last = r.extra_energy;
+        }
+    }
+
+    #[test]
+    fn pruning_never_hurts_batch_capacity() {
+        // Paper §V.A says pruned models fit more images. Our per-layer
+        // residency analysis refines that: conv-layer working sets in this
+        // zoo are *activation*-bound, so 50% weight pruning never reduces —
+        // and at a 12 MB GLB rarely increases — the admissible batch. The
+        // weight-bound regime where pruning does buy batches is exercised
+        // below.
+        let zoo = models::zoo();
+        for m in &zoo {
+            let dense = max_batch_served(m, DType::Bf16, 12 * MB, 0.0);
+            let pruned = max_batch_served(m, DType::Bf16, 12 * MB, 0.5);
+            assert!(pruned >= dense, "{}: {pruned} < {dense}", m.name);
+        }
+    }
+
+    #[test]
+    fn pruning_buys_batches_in_weight_bound_regime() {
+        // A deep, small-fmap, wide-channel layer (Darknet-53's tail shape)
+        // is weight-bound: there pruning admits strictly larger batches.
+        use crate::models::{ConvLayer, Layer, Model};
+        let tail = Model {
+            name: "tail".into(),
+            input: (512, 16, 16),
+            layers: vec![Layer::Conv(ConvLayer {
+                name: "d1024".into(),
+                in_ch: 512,
+                out_ch: 1024,
+                kh: 3,
+                kw: 3,
+                stride: 2,
+                pad: 1,
+                groups: 1,
+                in_h: 16,
+                in_w: 16,
+            })],
+            reference_params: None,
+        };
+        // 9.4 MB of weights vs ~0.4 MB of activations per image (bf16).
+        let glb = 11 * MB;
+        let dense = max_batch_served(&tail, DType::Bf16, glb, 0.0);
+        let pruned = max_batch_served(&tail, DType::Bf16, glb, 0.5);
+        assert!(pruned > dense, "pruned {pruned} must exceed dense {dense}");
+        assert!(pruned >= dense + 4, "weight-bound layer should gain several batches");
+    }
+
+    #[test]
+    fn pruned_working_set_interpolates() {
+        let m = models::by_name("VGG16").unwrap();
+        let full = pruned_working_set(&m, DType::Bf16, 1, 0.0, 1.0);
+        assert_eq!(full, m.max_conv_working_set(DType::Bf16, 1));
+        let half = pruned_working_set(&m, DType::Bf16, 1, 0.5, 1.0);
+        assert!(half < full);
+        let none = pruned_working_set(&m, DType::Bf16, 1, 1.0, 1.0);
+        assert!(none < half);
+    }
+
+    #[test]
+    fn capacity_row_ranges_ordered() {
+        let m = models::by_name("ResNet50").unwrap();
+        let r = CapacityRow::analyze(&m, DType::Bf16, &[1, 2, 4, 8]);
+        assert!(r.fmap_min <= r.fmap_max);
+        assert!(r.weight_min <= r.weight_max);
+        assert_eq!(r.size_bf16, 2 * r.size_int8);
+        // GLB requirement grows with batch.
+        assert!(r.glb_required.windows(2).all(|w| w[1].1 >= w[0].1));
+    }
+}

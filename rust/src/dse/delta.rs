@@ -1,0 +1,124 @@
+//! Δ-scaling sweeps (Fig. 15 a–f and Fig. 17 a–c).
+
+
+use crate::mram::{DesignTargets, MtjTech, ScalingSolver};
+
+/// A complete Fig. 15/17 panel set for one technology base case.
+#[derive(Debug, Clone)]
+pub struct DeltaSweep {
+    pub tech: String,
+    pub ber: f64,
+    /// (Δ, retention time s) — Fig. 15(a)(b) / 17(a).
+    pub retention: Vec<(f64, f64)>,
+    /// (Δ, read pulse s) — Fig. 15(c)(d) / 17(b).
+    pub read_pulse: Vec<(f64, f64)>,
+    /// (Δ, write pulse s) — Fig. 15(e)(f) / 17(c).
+    pub write_pulse: Vec<(f64, f64)>,
+}
+
+impl DeltaSweep {
+    pub fn run(tech: MtjTech, ber: f64, deltas: &[f64]) -> Self {
+        let s = ScalingSolver::new(tech);
+        Self {
+            tech: tech.name.to_string(),
+            ber,
+            retention: s.retention_vs_delta(ber, deltas),
+            read_pulse: s.read_pulse_vs_delta(ber, deltas),
+            write_pulse: s.write_pulse_vs_delta(ber, deltas),
+        }
+    }
+
+    /// Standard Δ grid of the figures.
+    pub fn default_deltas() -> Vec<f64> {
+        (10..=60).map(|d| d as f64).collect()
+    }
+}
+
+/// The three named design points of §V.C–D, solved end to end.
+#[derive(Debug, Clone)]
+pub struct DesignPointSummary {
+    pub label: String,
+    pub delta_scaled: f64,
+    pub delta_guard_banded: f64,
+    pub write_pulse: f64,
+    pub read_pulse: f64,
+    pub achieved_retention: f64,
+    pub rel_write_energy: f64,
+    pub rel_cell_area: f64,
+}
+
+/// Solve the weight-NVM, GLB, and LSB-bank design points (Fig. 15a/b, 17).
+pub fn paper_design_points(tech: MtjTech) -> Vec<DesignPointSummary> {
+    let s = ScalingSolver::new(tech);
+    [
+        ("weight-NVM (3yr @ 1e-9)", DesignTargets::weight_nvm()),
+        ("GLB (3s @ 1e-8)", DesignTargets::global_buffer()),
+        ("LSB bank (3s @ 1e-5)", DesignTargets::lsb_bank()),
+    ]
+    .into_iter()
+    .map(|(label, t)| {
+        let d = s.solve(&t);
+        DesignPointSummary {
+            label: label.to_string(),
+            delta_scaled: d.delta_scaled,
+            delta_guard_banded: d.delta_guard_banded,
+            write_pulse: d.write_pulse,
+            read_pulse: d.read_pulse,
+            achieved_retention: d.achieved_retention,
+            rel_write_energy: d.rel_write_energy,
+            rel_cell_area: d.rel_cell_area,
+        }
+    })
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_panels_have_grid_length() {
+        let deltas = DeltaSweep::default_deltas();
+        let s = DeltaSweep::run(MtjTech::sakhare2020(), 1e-8, &deltas);
+        assert_eq!(s.retention.len(), deltas.len());
+        assert_eq!(s.read_pulse.len(), deltas.len());
+        assert_eq!(s.write_pulse.len(), deltas.len());
+    }
+
+    #[test]
+    fn both_base_cases_run() {
+        // Fig. 15 uses [6] for (c)(e) and [13] for (d)(f).
+        let deltas = DeltaSweep::default_deltas();
+        let a = DeltaSweep::run(MtjTech::sakhare2020(), 1e-8, &deltas);
+        let b = DeltaSweep::run(MtjTech::wei2019(), 1e-8, &deltas);
+        assert_ne!(a.tech, b.tech);
+        // Same physics, different constants → different but same-shaped curves.
+        assert!(a.write_pulse[0].1 > 0.0 && b.write_pulse[0].1 > 0.0);
+    }
+
+    #[test]
+    fn design_points_match_paper() {
+        let pts = paper_design_points(MtjTech::sakhare2020());
+        assert_eq!(pts.len(), 3);
+        let nvm = &pts[0];
+        assert!((nvm.delta_scaled - 39.0).abs() < 1.0);
+        let glb = &pts[1];
+        assert!((glb.delta_scaled - 19.5).abs() < 1.0);
+        let lsb = &pts[2];
+        assert!((lsb.delta_scaled - 12.5).abs() < 1.0);
+        // Relaxed bank is cheapest.
+        assert!(lsb.rel_write_energy < glb.rel_write_energy);
+        assert!(glb.rel_write_energy < nvm.rel_write_energy);
+    }
+
+    #[test]
+    fn fig17_relaxed_ber_shrinks_everything() {
+        // At the same Δ, relaxing BER 1e-8 → 1e-5 shortens read/write pulses.
+        let deltas = vec![17.5];
+        let tight = DeltaSweep::run(MtjTech::wei2019(), 1e-8, &deltas);
+        let relaxed = DeltaSweep::run(MtjTech::wei2019(), 1e-5, &deltas);
+        assert!(relaxed.write_pulse[0].1 < tight.write_pulse[0].1);
+        assert!(relaxed.read_pulse[0].1 > tight.read_pulse[0].1); // longer pulse allowed at same RD budget
+        assert!(relaxed.retention[0].1 > tight.retention[0].1); // more time within the looser budget
+    }
+}

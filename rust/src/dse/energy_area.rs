@@ -1,0 +1,93 @@
+//! SRAM vs STT-MRAM energy/area capacity sweep (Fig. 16 a–d).
+
+
+use crate::memsys::MemoryArray;
+use crate::util::units::MB;
+
+/// One capacity point of Fig. 16.
+#[derive(Debug, Clone)]
+pub struct EnergyAreaRow {
+    pub capacity_bytes: u64,
+    pub delta_guard_banded: f64,
+    /// Average per-access energy (J), 2:1 read:write mix.
+    pub sram_energy: f64,
+    pub mram_energy: f64,
+    /// Macro area (mm²).
+    pub sram_area: f64,
+    pub mram_area: f64,
+}
+
+impl EnergyAreaRow {
+    pub fn at(capacity_bytes: u64, delta_guard_banded: f64) -> Self {
+        let s = MemoryArray::sram(capacity_bytes);
+        let m = MemoryArray::stt_mram(capacity_bytes, delta_guard_banded);
+        let mix = 2.0;
+        Self {
+            capacity_bytes,
+            delta_guard_banded,
+            sram_energy: s.avg_energy_j(mix),
+            mram_energy: m.avg_energy_j(mix),
+            sram_area: s.area_mm2(),
+            mram_area: m.area_mm2(),
+        }
+    }
+
+    pub fn energy_ratio(&self) -> f64 {
+        self.sram_energy / self.mram_energy
+    }
+
+    pub fn area_ratio(&self) -> f64 {
+        self.sram_area / self.mram_area
+    }
+}
+
+/// Fig. 16(a)(b): GLB design point Δ_PT_GB = 27.5 across capacities.
+pub fn fig16_glb(capacities_mb: &[u64]) -> Vec<EnergyAreaRow> {
+    capacities_mb.iter().map(|&c| EnergyAreaRow::at(c * MB, 27.5)).collect()
+}
+
+/// Fig. 16(c)(d): LSB-bank design point Δ_PT_GB = 17.5 across capacities.
+pub fn fig16_lsb(capacities_mb: &[u64]) -> Vec<EnergyAreaRow> {
+    capacities_mb.iter().map(|&c| EnergyAreaRow::at(c * MB, 17.5)).collect()
+}
+
+/// Standard capacity grid of the figure.
+pub fn default_capacities_mb() -> Vec<u64> {
+    vec![1, 2, 4, 8, 12, 16, 24, 32, 48, 64]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn area_advantage_exceeds_10x_beyond_4mb() {
+        for r in fig16_glb(&[4, 8, 12, 32]) {
+            assert!(r.area_ratio() > 10.0, "at {} B: {}", r.capacity_bytes, r.area_ratio());
+        }
+    }
+
+    #[test]
+    fn energy_advantage_grows_with_capacity() {
+        let rows = fig16_glb(&default_capacities_mb());
+        let ratios: Vec<f64> = rows.iter().map(|r| r.energy_ratio()).collect();
+        assert!(ratios.windows(2).all(|w| w[1] >= w[0] - 1e-12), "{ratios:?}");
+        // Significant advantage beyond 4 MB (paper's headline observation).
+        let at12 = rows.iter().find(|r| r.capacity_bytes == 12 * MB).unwrap();
+        assert!(at12.energy_ratio() > 1.5, "{}", at12.energy_ratio());
+    }
+
+    #[test]
+    fn lsb_bank_strictly_better_than_glb_bank() {
+        let glb = fig16_glb(&[12]);
+        let lsb = fig16_lsb(&[12]);
+        assert!(lsb[0].mram_energy < glb[0].mram_energy);
+        assert!(lsb[0].mram_area < glb[0].mram_area);
+    }
+
+    #[test]
+    fn sram_wins_below_crossover() {
+        let rows = fig16_glb(&[1]);
+        assert!(rows[0].energy_ratio() < 1.0, "SRAM must win at 1 MB");
+    }
+}

@@ -1,0 +1,18 @@
+//! Design-space exploration sweeps (paper §V.A–E, Figs. 10–19).
+//!
+//! Each submodule produces the data series of one or more paper figures as
+//! plain structs; the `report` module renders them and the criterion benches
+//! measure their regeneration cost.
+
+pub mod ablation;
+pub mod capacity;
+pub mod delta;
+pub mod energy_area;
+pub mod retention;
+pub mod scratchpad;
+
+pub use capacity::{CapacityRow, DramOverheadRow};
+pub use delta::DeltaSweep;
+pub use energy_area::EnergyAreaRow;
+pub use retention::RetentionRow;
+pub use scratchpad::{PartialOfmapRow, ScratchpadEnergyRow};

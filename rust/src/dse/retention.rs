@@ -1,0 +1,103 @@
+//! Retention-time DSE (Figs. 13–14): GLB data occupancy across the zoo as a
+//! function of array size and batch.
+
+
+use crate::accel::{ArrayConfig, RetentionAnalysis};
+use crate::models::Model;
+
+/// One row of Fig. 13 (per-model retention range) or a cell of Fig. 14.
+#[derive(Debug, Clone)]
+pub struct RetentionRow {
+    pub model: String,
+    pub macs: u64,
+    pub batch: u64,
+    pub min_t_ret: f64,
+    pub max_t_ret: f64,
+}
+
+impl RetentionRow {
+    pub fn analyze(m: &Model, a: &ArrayConfig, batch: u64) -> Self {
+        let r = RetentionAnalysis::new(a, batch).analyze(m);
+        Self {
+            model: m.name.clone(),
+            macs: a.total_macs(),
+            batch,
+            min_t_ret: r.min_t_ret(),
+            max_t_ret: r.max_t_ret(),
+        }
+    }
+}
+
+/// Fig. 13: per-model retention ranges at the paper's operating point.
+pub fn fig13(zoo: &[Model]) -> Vec<RetentionRow> {
+    let a = ArrayConfig::paper_42x42();
+    zoo.iter().map(|m| RetentionRow::analyze(m, &a, 16)).collect()
+}
+
+/// Fig. 14a: max retention over the zoo vs MAC-array size (batch 16).
+pub fn fig14a(zoo: &[Model], mac_sizes: &[u64]) -> Vec<(u64, f64)> {
+    mac_sizes
+        .iter()
+        .map(|&macs| {
+            let a = ArrayConfig::with_mac_array(macs);
+            let worst = zoo
+                .iter()
+                .map(|m| RetentionRow::analyze(m, &a, 16).max_t_ret)
+                .fold(0.0, f64::max);
+            (macs, worst)
+        })
+        .collect()
+}
+
+/// Fig. 14b: max retention over the zoo vs batch size (42×42 MACs).
+pub fn fig14b(zoo: &[Model], batches: &[u64]) -> Vec<(u64, f64)> {
+    let a = ArrayConfig::paper_42x42();
+    batches
+        .iter()
+        .map(|&b| {
+            let worst =
+                zoo.iter().map(|m| RetentionRow::analyze(m, &a, b).max_t_ret).fold(0.0, f64::max);
+            (b, worst)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn fig13_shape() {
+        let zoo = models::zoo();
+        let rows = fig13(&zoo);
+        assert_eq!(rows.len(), 19);
+        for r in &rows {
+            assert!(r.min_t_ret <= r.max_t_ret, "{}", r.model);
+            assert!(r.max_t_ret < 1.6, "{}: {}", r.model, r.max_t_ret);
+        }
+    }
+
+    #[test]
+    fn fig14a_monotone_decreasing() {
+        let zoo = models::zoo();
+        let series = fig14a(&zoo, &[14, 28, 42, 84]);
+        assert!(series.windows(2).all(|w| w[1].1 <= w[0].1), "{series:?}");
+    }
+
+    #[test]
+    fn fig14b_monotone_increasing() {
+        let zoo = models::zoo();
+        let series = fig14b(&zoo, &[1, 4, 16, 32]);
+        assert!(series.windows(2).all(|w| w[1].1 >= w[0].1), "{series:?}");
+    }
+
+    #[test]
+    fn glb_design_point_covers_worst_case() {
+        // The Δ=19.5 design gives 3 s @ 1e-8 — must exceed the worst zoo
+        // occupancy at the paper's operating point (Fig. 13 < 1.5 s).
+        let zoo = models::zoo();
+        let worst = fig13(&zoo).iter().map(|r| r.max_t_ret).fold(0.0, f64::max);
+        assert!(worst < 3.0, "worst occupancy {worst} exceeds the 3 s design");
+    }
+}

@@ -1,0 +1,121 @@
+//! Scratchpad DSE: partial-ofmap sizing (Fig. 18) and the three-way buffer
+//! energy comparison SRAM / MRAM / MRAM+scratchpad (Fig. 19).
+
+
+use crate::accel::{ArrayConfig, ModelTraffic};
+use crate::memsys::{BufferSystem, EnergyLedger, GlbKind, Scratchpad};
+use crate::models::{DType, Model};
+use crate::util::units::MB;
+
+/// One row of Fig. 18: max partial-ofmap size for a model.
+#[derive(Debug, Clone)]
+pub struct PartialOfmapRow {
+    pub model: String,
+    pub bf16_bytes: u64,
+    pub int8_bytes: u64,
+}
+
+impl PartialOfmapRow {
+    pub fn analyze(m: &Model) -> Self {
+        Self {
+            model: m.name.clone(),
+            bf16_bytes: m.max_partial_ofmap(DType::Bf16),
+            int8_bytes: m.max_partial_ofmap(DType::Int8),
+        }
+    }
+}
+
+/// One bar group of Fig. 19: buffer energy of one inference under the three
+/// buffer organizations.
+#[derive(Debug, Clone)]
+pub struct ScratchpadEnergyRow {
+    pub model: String,
+    pub batch: u64,
+    pub sram: EnergyLedger,
+    pub mram: EnergyLedger,
+    pub mram_scratchpad: EnergyLedger,
+}
+
+impl ScratchpadEnergyRow {
+    pub fn analyze(m: &Model, a: &ArrayConfig, dt: DType, batch: u64) -> Self {
+        let glb = 12 * MB;
+        let systems = [
+            BufferSystem::new(GlbKind::Sram, glb, None),
+            BufferSystem::new(GlbKind::stt_ai(), glb, None),
+            BufferSystem::new(GlbKind::stt_ai(), glb, Some(Scratchpad::paper_bf16())),
+        ];
+        let traffic = ModelTraffic::analyze(m, a, dt, batch, glb);
+        let mut ledgers = systems.iter().map(|sys| {
+            let mut total = EnergyLedger::default();
+            for l in &traffic.layers {
+                total.add(&sys.layer_energy(
+                    l.glb_reads,
+                    l.glb_writes,
+                    l.partial_bytes,
+                    l.partial_rounds,
+                    l.dram_bytes,
+                ));
+            }
+            total
+        });
+        Self {
+            model: m.name.clone(),
+            batch,
+            sram: ledgers.next().unwrap(),
+            mram: ledgers.next().unwrap(),
+            mram_scratchpad: ledgers.next().unwrap(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::util::units::KB;
+
+    #[test]
+    fn fig18_majority_fit_52kb() {
+        let zoo = models::zoo();
+        let fit = zoo
+            .iter()
+            .map(PartialOfmapRow::analyze)
+            .filter(|r| r.bf16_bytes <= 52 * KB)
+            .count();
+        assert!(fit * 4 >= zoo.len() * 3, "{fit}/19 fit 52 KB bf16");
+        // int8 halves the requirement.
+        let r = PartialOfmapRow::analyze(&models::by_name("ResNet50").unwrap());
+        assert_eq!(r.bf16_bytes, 2 * r.int8_bytes);
+    }
+
+    #[test]
+    fn fig19_scratchpad_beats_bare_mram_beats_sram() {
+        // Paper Fig. 19 (ResNet-50): SRAM > MRAM > MRAM+scratchpad.
+        let a = ArrayConfig::paper_42x42();
+        let m = models::by_name("ResNet50").unwrap();
+        let r = ScratchpadEnergyRow::analyze(&m, &a, DType::Bf16, 16);
+        assert!(
+            r.mram_scratchpad.total() < r.mram.total(),
+            "scratchpad must cut MRAM buffer energy: {} vs {}",
+            r.mram_scratchpad.total(),
+            r.mram.total()
+        );
+        assert!(
+            r.mram.total() < r.sram.total(),
+            "12 MB MRAM must beat SRAM: {} vs {}",
+            r.mram.total(),
+            r.sram.total()
+        );
+    }
+
+    #[test]
+    fn fig19_partial_traffic_is_visible() {
+        let a = ArrayConfig::paper_42x42();
+        let m = models::by_name("ResNet50").unwrap();
+        let r = ScratchpadEnergyRow::analyze(&m, &a, DType::Bf16, 16);
+        assert!(r.mram_scratchpad.scratchpad > 0.0, "scratchpad must absorb traffic");
+        // The saving is material (>3% of buffer energy for ResNet-50).
+        let saving = 1.0 - r.mram_scratchpad.total() / r.mram.total();
+        assert!(saving > 0.03, "saving={saving}");
+    }
+}

@@ -1,0 +1,45 @@
+//! # STT-AI: AI accelerator + customized STT-MRAM co-design framework
+//!
+//! Reproduction of *"Designing Efficient and High-performance AI Accelerators
+//! with Customized STT-MRAM"* (Mishty & Sadi, 2021) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! The crate is organized bottom-up:
+//!
+//! * [`mram`] — STT-MRAM / MTJ device physics (thermal stability factor Δ,
+//!   critical current, retention failure, read disturb, write error rate,
+//!   process/temperature guard-banding, the PTM-driven write driver).
+//! * [`memsys`] — memory *system* models: SRAM and MRAM array area/energy
+//!   (Destiny-like), DDR4 DRAM channel model, the scratchpad-assisted global
+//!   buffer, and the full on-chip hierarchy.
+//! * [`models`] — a zoo of 19 real DNN architectures as per-layer shape
+//!   tables (the design-space-exploration workload of the paper's §V.A).
+//! * [`accel`] — the reconfigurable-core accelerator: PE/core cycle model
+//!   (Table II), row-stationary conv + systolic FC mapping, the analytical
+//!   occupancy/retention-time model (Eq. 2–11), and GLB traffic accounting.
+//! * [`dse`] — design-space exploration sweeps regenerating Figs. 10–19.
+//! * [`ber`] — bit-error-rate fault injection on bf16/int8 buffers with the
+//!   MSB/LSB two-bank split of the STT-AI Ultra design, plus magnitude
+//!   pruning (Fig. 21).
+//! * [`runtime`] — PJRT client wrapper: load AOT HLO-text artifacts, compile,
+//!   execute (Python is never on this path).
+//! * [`coordinator`] — the L3 serving loop: request queue, dynamic batcher,
+//!   inference engine, metrics.
+//! * [`report`] — figure/table printers used by the benches and the CLI.
+//! * [`config`] — typed configuration (accelerator, memory, tech) with TOML
+//!   loading, used by the CLI and launcher.
+
+pub mod accel;
+pub mod ber;
+pub mod config;
+pub mod coordinator;
+pub mod dse;
+pub mod memsys;
+pub mod models;
+pub mod mram;
+pub mod report;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,221 @@
+//! `stt-ai` — the STT-AI accelerator co-design framework CLI.
+//!
+//! Subcommands mirror the paper's workflow:
+//!
+//! * `figures [--fig N]` — regenerate the §V figures (10–19) as text tables.
+//! * `table3`            — accelerator composition + headline savings.
+//! * `design`            — solve a customized STT-MRAM design point.
+//! * `accuracy`          — Fig. 21 fault-injection evaluation on artifacts.
+//! * `serve`             — closed-loop batched inference with metrics.
+//! * `init-config`       — write the three paper SystemConfigs as JSON.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use stt_ai::config::{GlbVariant, SystemConfig};
+use stt_ai::coordinator::{self, Engine, EngineConfig};
+use stt_ai::dse::delta::paper_design_points;
+use stt_ai::mram::{DesignTargets, MtjTech, ScalingSolver};
+use stt_ai::report;
+use stt_ai::util::cli::Args;
+use stt_ai::util::units::fmt_time;
+
+const USAGE: &str = "\
+stt-ai — AI accelerator + customized STT-MRAM co-design framework
+
+USAGE: stt-ai <COMMAND> [FLAGS]
+
+COMMANDS:
+  figures      [--fig 10..19] [--csv-dir DIR]  regenerate paper figures
+  table3                               Table III composition + savings
+  design       [--retention 3.0|3y] [--ber 1e-8] [--tech sakhare2020|wei2019]
+  accuracy     [--artifacts DIR] [--prune 0.0] [--batch 16] [--limit N]
+  serve        [--artifacts DIR] [--variant sram|stt_ai|stt_ai_ultra]
+               [--requests 256] [--batch 16]
+  montecarlo   [--samples 20000] [--seed N]   PT-corner Monte Carlo
+  exposure                             zoo-wide analytical fault exposure
+  init-config  [--dir configs]         write paper SystemConfigs as JSON
+";
+
+fn parse_variant(s: &str) -> anyhow::Result<GlbVariant> {
+    Ok(match s.to_lowercase().replace('-', "_").as_str() {
+        "sram" | "baseline" => GlbVariant::Sram,
+        "stt_ai" | "sttai" => GlbVariant::SttAi,
+        "stt_ai_ultra" | "ultra" => GlbVariant::SttAiUltra,
+        other => anyhow::bail!("unknown variant {other:?}"),
+    })
+}
+
+fn run_figure(n: u32, out: &mut impl Write) -> std::io::Result<()> {
+    match n {
+        10 => report::fig10(out).map(|_| ()),
+        11 => report::fig11(out).map(|_| ()),
+        12 => report::fig12(out).map(|_| ()),
+        13 => report::fig13(out).map(|_| ()),
+        14 => report::fig14(out).map(|_| ()),
+        15 => report::fig15(out).map(|_| ()),
+        16 => report::fig16(out).map(|_| ()),
+        17 => report::fig17(out).map(|_| ()),
+        18 => report::fig18(out).map(|_| ()),
+        19 => report::fig19(out).map(|_| ()),
+        _ => writeln!(out, "no renderer for figure {n} (fig 21 → `stt-ai accuracy`)"),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let mut out = std::io::stdout().lock();
+    match args.cmd.as_str() {
+        "figures" => {
+            if let Some(dir) = args.get("csv-dir") {
+                let files = report::export_all(Path::new(dir))?;
+                writeln!(out, "wrote {} CSVs to {dir}: {files:?}", files.len())?;
+                args.finish()?;
+                return Ok(());
+            }
+            match args.get("fig") {
+                Some(n) => run_figure(n.parse()?, &mut out)?,
+                None => {
+                    for n in 10..=19 {
+                        run_figure(n, &mut out)?;
+                        writeln!(out)?;
+                    }
+                }
+            }
+            args.finish()?;
+        }
+        "table3" => {
+            args.finish()?;
+            let rows = report::table3_rows();
+            writeln!(out, "== Table III: accelerator design details at 14 nm ==")?;
+            writeln!(out, "{:<18} {:>10} {:>12} {:>12}", "accelerator", "area mm2", "dyn mW", "leak mW")?;
+            for r in &rows {
+                writeln!(out, "{:<18} {:>10.2} {:>12.2} {:>12.3}", r.name, r.area_mm2, r.dynamic_mw, r.leakage_mw)?;
+            }
+            let base = rows[0].clone();
+            for r in &rows[1..] {
+                let (a, p) = r.savings_vs(&base);
+                writeln!(out, "-- {}: {:.1}% area, {:.1}% power saving vs baseline", r.name, a * 100.0, p * 100.0)?;
+            }
+        }
+        "design" => {
+            let retention = args.get_or("retention", "3.0").to_string();
+            let ber = args.get_f64("ber", 1e-8)?;
+            let tech = match args.get_or("tech", "sakhare2020") {
+                "wei2019" => MtjTech::wei2019(),
+                _ => MtjTech::sakhare2020(),
+            };
+            args.finish()?;
+            let seconds = if let Some(y) = retention.strip_suffix('y') {
+                y.parse::<f64>()? * 365.25 * 24.0 * 3600.0
+            } else {
+                retention.parse::<f64>()?
+            };
+            let solver = ScalingSolver::new(tech);
+            let t = DesignTargets {
+                retention_time: seconds,
+                retention_ber: ber,
+                read_disturb_ber: ber,
+                write_ber: ber,
+            };
+            let d = solver.solve(&t);
+            writeln!(out, "customized STT-MRAM design point ({}):", tech.name)?;
+            writeln!(out, "  retention target {} @ BER {ber:.0e}", fmt_time(seconds))?;
+            writeln!(out, "  Δ_scaled        = {:.2}", d.delta_scaled)?;
+            writeln!(out, "  Δ_PT_GuardBand  = {:.2}   (Eq. 17, 4σ + T_hot)", d.delta_guard_banded)?;
+            writeln!(out, "  Δ_PT_MAX        = {:.2}   (Eq. 18, cold/fast corner)", d.delta_pt_max)?;
+            writeln!(out, "  write pulse     = {}", fmt_time(d.write_pulse))?;
+            writeln!(out, "  read pulse      = {}", fmt_time(d.read_pulse))?;
+            writeln!(out, "  achieved ret.   = {}", fmt_time(d.achieved_retention))?;
+            writeln!(out, "  rel write energy= {:.3}x vs Δ=60 base", d.rel_write_energy)?;
+            writeln!(out, "  rel cell area   = {:.3}x vs Δ=60 base", d.rel_cell_area)?;
+            writeln!(out, "\nreference design points:")?;
+            for p in paper_design_points(tech) {
+                writeln!(
+                    out,
+                    "  {:<24} Δ={:>5.1} Δ_GB={:>5.1} ret={}",
+                    p.label,
+                    p.delta_scaled,
+                    p.delta_guard_banded,
+                    fmt_time(p.achieved_retention)
+                )?;
+            }
+        }
+        "accuracy" => {
+            let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+            let prune = args.get_f64("prune", 0.0)?;
+            let batch = args.get_usize("batch", 16)?;
+            let limit = args.get("limit").map(|v| v.parse()).transpose()?;
+            args.finish()?;
+            let row = coordinator::accuracy::fig21_row(&artifacts, prune, batch, limit)?;
+            writeln!(out, "== Fig. 21: Top-1/Top-5 accuracy (prune rate {prune}) ==")?;
+            for r in [&row.baseline, &row.stt_ai, &row.stt_ai_ultra] {
+                writeln!(
+                    out,
+                    "  {:<14} top1 {:.4}  top5 {:.4}  flips {}  (n={})",
+                    r.variant, r.top1, r.top5, r.bit_flips, r.n
+                )?;
+            }
+            writeln!(out, "-- Ultra normalized Top-1 drop: {:.3}% (paper: <1%)", row.ultra_drop_normalized() * 100.0)?;
+        }
+        "serve" => {
+            let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+            let variant = parse_variant(args.get_or("variant", "stt_ai_ultra"))?;
+            let requests = args.get_usize("requests", 256)?;
+            let batch = args.get_usize("batch", 16)?;
+            args.finish()?;
+            let engine = Engine::load(&artifacts, EngineConfig::new(variant))?;
+            let summary = coordinator::serve::closed_loop(&engine, requests, batch)?;
+            writeln!(out, "{summary}")?;
+        }
+        "montecarlo" => {
+            let n = args.get_usize("samples", 20_000)?;
+            let seed = args.get_u64("seed", 0xD1E5)?;
+            args.finish()?;
+            let mc = stt_ai::mram::MonteCarlo::paper_glb();
+            let r = mc.run(seed, n);
+            writeln!(out, "== Monte-Carlo PT analysis (GLB design point, n={n}) ==")?;
+            writeln!(out, "  Δ_eff: mean {:.2} ± {:.2}  [{:.2}, {:.2}]", r.delta_mean, r.delta_std, r.delta_min, r.delta_max)?;
+            writeln!(out, "  retention violations: {:.4}%", r.retention_violations * 100.0)?;
+            writeln!(out, "  write violations: static driver {:.2}% → PTM-adjustable {:.3}%",
+                r.write_violations_static * 100.0, r.write_violations_adjustable * 100.0)?;
+            writeln!(out, "  write energy/bit: static {:.3} pJ, adjustable {:.3} pJ",
+                r.energy_static * 1e12, r.energy_adjustable * 1e12)?;
+        }
+        "exposure" => {
+            args.finish()?;
+            use stt_ai::ber::{zoo_exposure, BankSplit, WordKind};
+            let zoo = stt_ai::models::zoo();
+            writeln!(out, "== zoo fault exposure (bf16, STT-AI Ultra banks) ==")?;
+            writeln!(out, "{:<14} {:>10} {:>14} {:>16} {:>14}", "model", "E[flips]", "P(corrupt)", "P(catastrophic)", "E[|dw/w|]")?;
+            for e in zoo_exposure(&zoo, stt_ai::models::DType::Bf16, &BankSplit::ultra(WordKind::Bf16)) {
+                writeln!(
+                    out,
+                    "{:<14} {:>10.1} {:>14.2e} {:>16.2e} {:>14.2e}",
+                    e.model, e.expected_flips, e.corrupted_weight_fraction, e.catastrophic_fraction, e.mean_rel_perturbation
+                )?;
+            }
+        }
+        "init-config" => {
+            let dir = PathBuf::from(args.get_or("dir", "configs"));
+            args.finish()?;
+            std::fs::create_dir_all(&dir)?;
+            for cfg in [
+                SystemConfig::paper_baseline(),
+                SystemConfig::paper_stt_ai(),
+                SystemConfig::paper_stt_ai_ultra(),
+            ] {
+                let path = dir.join(format!("{}.json", cfg.name));
+                cfg.save(&path)?;
+                writeln!(out, "wrote {path:?}")?;
+            }
+        }
+        "" | "help" => {
+            write!(out, "{USAGE}")?;
+        }
+        other => {
+            anyhow::bail!("unknown command {other:?}\n\n{USAGE}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Off-chip DRAM channel model: dual-channel DDR4-2933 with a 64-bit bus,
+//! as used for the Fig. 12 extra-access latency/energy analysis (§V.A).
+
+
+/// DDR4-style channel model.
+#[derive(Debug, Clone, Copy)]
+pub struct DramModel {
+    /// Transfers per second per channel (MT/s · 1e6).
+    pub transfer_rate: f64,
+    /// Bus width per channel (bits).
+    pub bus_bits: u32,
+    /// Number of channels.
+    pub channels: u32,
+    /// Sustained-bandwidth efficiency vs peak (row misses, refresh, turnaround).
+    pub efficiency: f64,
+    /// Access energy (pJ/bit), I/O + array + on-die termination.
+    pub energy_pj_per_bit: f64,
+    /// Fixed latency per independent burst (s) — tRCD + tCL class.
+    pub burst_latency: f64,
+}
+
+impl DramModel {
+    /// The paper's configuration: dual-channel DDR4-2933, 64-bit bus.
+    pub fn ddr4_2933_dual() -> Self {
+        Self {
+            transfer_rate: 2933.0e6,
+            bus_bits: 64,
+            channels: 2,
+            efficiency: 0.7,
+            energy_pj_per_bit: 15.0,
+            burst_latency: 45.0e-9,
+        }
+    }
+
+    /// Peak bandwidth (bytes/s).
+    pub fn peak_bw(&self) -> f64 {
+        self.transfer_rate * (self.bus_bits as f64 / 8.0) * self.channels as f64
+    }
+
+    /// Sustained bandwidth (bytes/s).
+    pub fn sustained_bw(&self) -> f64 {
+        self.peak_bw() * self.efficiency
+    }
+
+    /// Time (s) to move `bytes` as a streaming transfer.
+    pub fn transfer_latency(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        self.burst_latency + bytes as f64 / self.sustained_bw()
+    }
+
+    /// Energy (J) to move `bytes`.
+    pub fn transfer_energy(&self, bytes: u64) -> f64 {
+        bytes as f64 * 8.0 * self.energy_pj_per_bit * 1e-12
+    }
+
+    /// The paper's §II.C framing: DRAM ≈ 100–200× the energy of a local
+    /// access. Ratio of DRAM pJ/bit to an on-chip per-bit read energy.
+    pub fn energy_ratio_vs(&self, onchip_read_j_per_word: f64, word_bits: u32) -> f64 {
+        let onchip_pj_per_bit = onchip_read_j_per_word * 1e12 / word_bits as f64;
+        self.energy_pj_per_bit / onchip_pj_per_bit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::MB;
+
+    #[test]
+    fn peak_bandwidth_matches_spec() {
+        let d = DramModel::ddr4_2933_dual();
+        // 2933 MT/s × 8 B × 2 ch = 46.9 GB/s.
+        assert!((d.peak_bw() / 1e9 - 46.9).abs() < 0.1);
+        assert!(d.sustained_bw() < d.peak_bw());
+    }
+
+    #[test]
+    fn latency_linear_in_bytes() {
+        let d = DramModel::ddr4_2933_dual();
+        let t1 = d.transfer_latency(10 * MB);
+        let t2 = d.transfer_latency(20 * MB);
+        assert!(t2 > t1);
+        assert!((t2 - d.burst_latency) / (t1 - d.burst_latency) > 1.99);
+        assert_eq!(d.transfer_latency(0), 0.0);
+    }
+
+    #[test]
+    fn fig12_scale_sanity() {
+        // Paper: a few models spill ~2 ms at int8/batch-8 with a 12 MB GLB;
+        // 2 ms at ~33 GB/s sustained ≈ 66 MB of spill — so a tens-of-MB
+        // spill must land in the ms range.
+        let d = DramModel::ddr4_2933_dual();
+        let t = d.transfer_latency(66 * MB);
+        assert!(t > 1.5e-3 && t < 3.0e-3, "t={t}");
+    }
+
+    #[test]
+    fn energy_ratio_is_paper_order() {
+        let d = DramModel::ddr4_2933_dual();
+        // vs a register-file-class access (~0.1 pJ/bit): 100–200×.
+        let ratio = d.energy_ratio_vs(0.8e-12, 64);
+        assert!(ratio > 100.0 && ratio < 2000.0, "ratio={ratio}");
+    }
+}

@@ -1,0 +1,262 @@
+//! Composition of the full on-chip buffer system: GLB (SRAM, single-bank
+//! MRAM, or the two-bank MSB/LSB MRAM of STT-AI Ultra), optional scratchpad,
+//! weight-storage NVM, and the DRAM behind it — with an energy ledger used by
+//! Fig. 19 and the Table III accelerator rows.
+
+
+use super::array::MemoryArray;
+use super::dram::DramModel;
+use super::scratchpad::{Scratchpad, TrafficSplit};
+use crate::util::units::MB;
+
+/// Global-buffer organization.
+#[derive(Debug, Clone, Copy)]
+pub enum GlbKind {
+    /// Baseline: one SRAM array.
+    Sram,
+    /// STT-AI: one MRAM array at the given guard-banded Δ.
+    Mram { delta_guard_banded: f64 },
+    /// STT-AI Ultra: two half-capacity banks; every word is split into an
+    /// MSB group (robust bank) and an LSB group (relaxed bank).
+    MramTwoBank { delta_msb: f64, delta_lsb: f64 },
+}
+
+impl GlbKind {
+    /// Paper's three §V.F design points.
+    pub fn baseline() -> Self {
+        GlbKind::Sram
+    }
+    pub fn stt_ai() -> Self {
+        GlbKind::Mram { delta_guard_banded: 27.5 }
+    }
+    pub fn stt_ai_ultra() -> Self {
+        GlbKind::MramTwoBank { delta_msb: 27.5, delta_lsb: 17.5 }
+    }
+}
+
+/// The assembled buffer system.
+#[derive(Debug, Clone)]
+pub struct BufferSystem {
+    pub kind: GlbKind,
+    pub glb_bytes: u64,
+    pub scratchpad: Option<Scratchpad>,
+    pub dram: DramModel,
+}
+
+/// Energy ledger for one workload segment (e.g., one conv layer or one full
+/// inference), all in joules.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EnergyLedger {
+    pub glb_read: f64,
+    pub glb_write: f64,
+    pub scratchpad: f64,
+    pub dram: f64,
+}
+
+impl EnergyLedger {
+    pub fn total(&self) -> f64 {
+        self.glb_read + self.glb_write + self.scratchpad + self.dram
+    }
+
+    pub fn add(&mut self, o: &EnergyLedger) {
+        self.glb_read += o.glb_read;
+        self.glb_write += o.glb_write;
+        self.scratchpad += o.scratchpad;
+        self.dram += o.dram;
+    }
+}
+
+impl BufferSystem {
+    pub fn new(kind: GlbKind, glb_bytes: u64, scratchpad: Option<Scratchpad>) -> Self {
+        Self { kind, glb_bytes, scratchpad, dram: DramModel::ddr4_2933_dual() }
+    }
+
+    /// The paper's three accelerator configurations with a 12 MB GLB.
+    pub fn baseline_12mb() -> Self {
+        Self::new(GlbKind::baseline(), 12 * MB, None)
+    }
+    pub fn stt_ai_12mb() -> Self {
+        Self::new(GlbKind::stt_ai(), 12 * MB, Some(Scratchpad::paper_bf16()))
+    }
+    pub fn stt_ai_ultra_12mb() -> Self {
+        Self::new(GlbKind::stt_ai_ultra(), 12 * MB, Some(Scratchpad::paper_bf16()))
+    }
+
+    /// The physical arrays making up the GLB.
+    pub fn glb_arrays(&self) -> Vec<MemoryArray> {
+        match self.kind {
+            GlbKind::Sram => vec![MemoryArray::sram(self.glb_bytes)],
+            GlbKind::Mram { delta_guard_banded } => {
+                vec![MemoryArray::stt_mram(self.glb_bytes, delta_guard_banded)]
+            }
+            GlbKind::MramTwoBank { delta_msb, delta_lsb } => vec![
+                MemoryArray::stt_mram(self.glb_bytes / 2, delta_msb),
+                MemoryArray::stt_mram(self.glb_bytes / 2, delta_lsb),
+            ],
+        }
+    }
+
+    /// GLB silicon area (mm²), scratchpad included.
+    pub fn area_mm2(&self) -> f64 {
+        let glb: f64 = self.glb_arrays().iter().map(|a| a.area_mm2()).sum();
+        glb + self.scratchpad.map_or(0.0, |s| s.array.area_mm2())
+    }
+
+    /// Total leakage (mW), scratchpad included (with gating).
+    pub fn leakage_mw(&self) -> f64 {
+        let glb: f64 = self.glb_arrays().iter().map(|a| a.leakage_mw()).sum();
+        glb + self.scratchpad.map_or(0.0, |s| s.leakage_mw())
+    }
+
+    /// Per-word GLB read energy (J). Two-bank: both banks fire with
+    /// half-width words.
+    pub fn glb_read_energy_j(&self) -> f64 {
+        match self.kind {
+            GlbKind::MramTwoBank { .. } => {
+                self.glb_arrays().iter().map(|a| 0.5 * a.read_energy_j()).sum()
+            }
+            _ => self.glb_arrays()[0].read_energy_j(),
+        }
+    }
+
+    /// Per-word GLB write energy (J).
+    pub fn glb_write_energy_j(&self) -> f64 {
+        match self.kind {
+            GlbKind::MramTwoBank { .. } => {
+                self.glb_arrays().iter().map(|a| 0.5 * a.write_energy_j()).sum()
+            }
+            _ => self.glb_arrays()[0].write_energy_j(),
+        }
+    }
+
+    /// Dynamic power at the reference rate (Table III column), 2:1 read mix.
+    pub fn dynamic_power_mw(&self) -> f64 {
+        use super::array::REF_ACCESS_RATE;
+        let mix = 2.0;
+        match self.kind {
+            GlbKind::MramTwoBank { .. } => {
+                // The banks split each word (MSB/LSB groups), sharing one
+                // controller/address path — the module behaves like a single
+                // full-capacity macro whose cell energy is the half-width
+                // average of the two banks.
+                let ctrl = 9.2; // MRAM controller anchor at 12 MB
+                let cell: f64 = self
+                    .glb_arrays()
+                    .iter()
+                    .map(|a| 0.5 * a.avg_energy_j(mix) * REF_ACCESS_RATE * 1e3)
+                    .sum();
+                ctrl * (self.glb_bytes as f64 / (12.0 * MB as f64)).powf(0.5) + cell
+            }
+            _ => self.glb_arrays()[0].dynamic_power_mw(mix),
+        }
+    }
+
+    /// Energy for a layer's GLB traffic, given byte counts and the
+    /// partial-ofmap round structure (Fig. 19's three-way comparison).
+    ///
+    /// * `glb_reads`/`glb_writes`: ifmap+weight reads and final-ofmap writes.
+    /// * `partial_bytes`, `rounds`: partial-ofmap accumulation traffic that
+    ///   the scratchpad (if present) absorbs.
+    /// * `dram_bytes`: spill traffic to DRAM.
+    pub fn layer_energy(
+        &self,
+        glb_reads: u64,
+        glb_writes: u64,
+        partial_bytes: u64,
+        rounds: u64,
+        dram_bytes: u64,
+    ) -> EnergyLedger {
+        let word_bytes = 8.0; // 64-bit GLB word
+        let er = self.glb_read_energy_j() / word_bytes;
+        let ew = self.glb_write_energy_j() / word_bytes;
+
+        let mut ledger = EnergyLedger {
+            glb_read: glb_reads as f64 * er,
+            glb_write: glb_writes as f64 * ew,
+            scratchpad: 0.0,
+            dram: self.dram.transfer_energy(dram_bytes),
+        };
+
+        match &self.scratchpad {
+            Some(sp) => {
+                let split = TrafficSplit::split(partial_bytes, rounds, sp);
+                let esp_r = sp.array.read_energy_j() / word_bytes;
+                let esp_w = sp.array.write_energy_j() / word_bytes;
+                ledger.scratchpad = split.scratchpad_writes as f64 * esp_w
+                    + split.scratchpad_reads as f64 * esp_r;
+                ledger.glb_write += split.glb_overflow_writes as f64 * ew;
+                ledger.glb_read += split.glb_overflow_reads as f64 * er;
+            }
+            None => {
+                // No scratchpad: every partial round hits the GLB.
+                ledger.glb_write += (partial_bytes * rounds) as f64 * ew;
+                ledger.glb_read += (partial_bytes * rounds) as f64 * er;
+            }
+        }
+        ledger
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::KB;
+
+    #[test]
+    fn table3_buffer_areas() {
+        // SRAM 16.2, MRAM+SP ≈ 1.01+0.069, Ultra+SP ≈ 0.93+0.069.
+        let b = BufferSystem::baseline_12mb().area_mm2();
+        assert!((b - 16.2).abs() / 16.2 < 0.02, "{b}");
+        let s = BufferSystem::stt_ai_12mb().area_mm2();
+        assert!((s - 1.079).abs() / 1.079 < 0.05, "{s}");
+        let u = BufferSystem::stt_ai_ultra_12mb().area_mm2();
+        assert!(u < s, "ultra smaller than stt-ai: {u} vs {s}");
+    }
+
+    #[test]
+    fn scratchpad_cuts_partial_ofmap_energy() {
+        let with = BufferSystem::stt_ai_12mb();
+        let without = BufferSystem::new(GlbKind::stt_ai(), 12 * MB, None);
+        // ResNet-50-class layer: 40 KB partials, 64 accumulation rounds.
+        let e_with = with.layer_energy(2_000_000, 400_000, 40 * KB, 64, 0);
+        let e_without = without.layer_energy(2_000_000, 400_000, 40 * KB, 64, 0);
+        assert!(e_with.total() < e_without.total());
+        assert!(e_with.scratchpad > 0.0);
+        assert_eq!(e_without.scratchpad, 0.0);
+    }
+
+    #[test]
+    fn two_bank_read_energy_below_single_bank() {
+        let ai = BufferSystem::stt_ai_12mb();
+        let ultra = BufferSystem::stt_ai_ultra_12mb();
+        assert!(ultra.glb_read_energy_j() < ai.glb_read_energy_j());
+        assert!(ultra.glb_write_energy_j() < ai.glb_write_energy_j());
+    }
+
+    #[test]
+    fn leakage_ordering_matches_table3() {
+        let b = BufferSystem::baseline_12mb().leakage_mw();
+        let s = BufferSystem::stt_ai_12mb().leakage_mw();
+        let u = BufferSystem::stt_ai_ultra_12mb().leakage_mw();
+        assert!(s < b && u < s, "b={b} s={s} u={u}");
+    }
+
+    #[test]
+    fn dram_spill_adds_energy() {
+        let sys = BufferSystem::stt_ai_12mb();
+        let no_spill = sys.layer_energy(1000, 1000, 0, 0, 0);
+        let spill = sys.layer_energy(1000, 1000, 0, 0, 10 * MB);
+        assert!(spill.total() > no_spill.total());
+        assert!(spill.dram > 0.0);
+    }
+
+    #[test]
+    fn ledger_add_accumulates() {
+        let sys = BufferSystem::stt_ai_12mb();
+        let mut total = EnergyLedger::default();
+        let l = sys.layer_energy(1000, 1000, 10 * KB, 4, 0);
+        total.add(&l);
+        total.add(&l);
+        assert!((total.total() - 2.0 * l.total()).abs() < 1e-18);
+    }
+}

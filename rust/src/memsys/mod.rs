@@ -1,0 +1,24 @@
+//! Memory *system* models (paper §II.C, §IV.D, §V.A/C/E).
+//!
+//! * [`array`] — the Destiny-like parametric array model: (capacity, tech, Δ)
+//!   → area, per-access read/write energy, leakage. Calibrated to the paper's
+//!   Table III silicon-anchored rows and the Fig. 16 SRAM/MRAM crossover.
+//! * [`dram`] — dual-channel DDR4-2933 model used for the Fig. 12 extra
+//!   DRAM-access latency/energy analysis.
+//! * [`scratchpad`] — the small SRAM scratchpad that absorbs partial-ofmap
+//!   writes (§IV.D) and the write-traffic bypass accounting (Fig. 19).
+//! * [`hierarchy`] — composition of GLB (single- or two-bank MRAM, or SRAM),
+//!   scratchpad, weight NVM, and DRAM into one buffer system with an energy
+//!   ledger per layer.
+
+pub mod array;
+pub mod dram;
+pub mod hierarchy;
+pub mod nvm;
+pub mod scratchpad;
+
+pub use array::{MemTech, MemoryArray, F_14NM};
+pub use dram::DramModel;
+pub use hierarchy::{BufferSystem, EnergyLedger, GlbKind};
+pub use nvm::WeightNvm;
+pub use scratchpad::{Scratchpad, TrafficSplit};

@@ -1,0 +1,123 @@
+//! Weight-storage NVM: the Δ=39 (guard-banded 55) STT-MRAM bank that
+//! replaces eFlash for pre-trained weights (§II.C, §IV.B, Fig. 10a/15a).
+//!
+//! Sizing comes straight from the zoo analysis: ~280 MB holds every model's
+//! bf16 weights, ~140 MB at int8. The module also carries the qualitative
+//! eFlash comparison the paper makes (eFlash stops scaling past 28 nm [10];
+//! eMRAM wins on write voltage/energy, endurance, area, speed).
+
+use crate::memsys::array::MemoryArray;
+use crate::models::{DType, Model};
+use crate::mram::{DesignTargets, MtjTech, ScalingSolver};
+
+/// A weight-storage NVM design.
+#[derive(Debug, Clone)]
+pub struct WeightNvm {
+    pub capacity_bytes: u64,
+    pub array: MemoryArray,
+    /// Guard-banded Δ of the bank.
+    pub delta_guard_banded: f64,
+    /// Retention at the 1e-9 budget (s).
+    pub retention_s: f64,
+    /// Write pulse for one word (s).
+    pub write_pulse: f64,
+}
+
+impl WeightNvm {
+    /// Size the NVM for a model set at a datatype, with a headroom factor
+    /// (the paper keeps room for "models replaced frequently").
+    pub fn sized_for(zoo: &[Model], dt: DType, headroom: f64, tech: MtjTech) -> Self {
+        let need: u64 = zoo.iter().map(|m| m.size_bytes(dt)).max().unwrap_or(0);
+        let capacity = (need as f64 * headroom) as u64;
+        let solver = ScalingSolver::new(tech);
+        let d = solver.solve(&DesignTargets::weight_nvm());
+        Self {
+            capacity_bytes: capacity,
+            array: MemoryArray::stt_mram(capacity, d.delta_guard_banded),
+            delta_guard_banded: d.delta_guard_banded,
+            retention_s: d.achieved_retention,
+            write_pulse: d.write_pulse,
+        }
+    }
+
+    /// Capacity to store *all* zoo models simultaneously (the "model store"
+    /// variant of Fig. 10a's aggregate).
+    pub fn total_zoo_bytes(zoo: &[Model], dt: DType) -> u64 {
+        zoo.iter().map(|m| m.size_bytes(dt)).sum()
+    }
+
+    /// Time to load one model's weights into the GLB at the NVM read
+    /// bandwidth (words/s from the read pulse, `lanes` parallel banks).
+    pub fn load_time(&self, model_bytes: u64, read_pulse: f64, lanes: u64) -> f64 {
+        let words = model_bytes.div_ceil(8);
+        // Pipelined reads: one word per read pulse per lane (sense-limited;
+        // a practical floor of 1 ns is applied for tiny RD-budget pulses).
+        words as f64 * read_pulse.max(1.0e-9) / lanes as f64
+    }
+
+    /// Full-model write time (one-time programming cost), words × t_w / lanes.
+    pub fn program_time(&self, model_bytes: u64, lanes: u64) -> f64 {
+        let words = model_bytes.div_ceil(8);
+        words as f64 * self.write_pulse / lanes as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::util::units::MB;
+
+    #[test]
+    fn paper_capacity_class() {
+        // Fig. 10a: ~280 MB bf16 / ~140 MB int8 for the largest model.
+        let zoo = models::zoo();
+        let nvm16 = WeightNvm::sized_for(&zoo, DType::Bf16, 1.0, MtjTech::sakhare2020());
+        assert!(
+            nvm16.capacity_bytes > 250 * MB && nvm16.capacity_bytes < 320 * MB,
+            "{}",
+            nvm16.capacity_bytes
+        );
+        let nvm8 = WeightNvm::sized_for(&zoo, DType::Int8, 1.0, MtjTech::sakhare2020());
+        assert_eq!(nvm8.capacity_bytes * 2, nvm16.capacity_bytes);
+    }
+
+    #[test]
+    fn retention_is_years() {
+        let zoo = models::zoo();
+        let nvm = WeightNvm::sized_for(&zoo, DType::Bf16, 1.0, MtjTech::sakhare2020());
+        assert!(nvm.retention_s > 2.9 * 365.25 * 24.0 * 3600.0);
+        assert!((nvm.delta_guard_banded - 55.0).abs() < 2.5, "{}", nvm.delta_guard_banded);
+    }
+
+    #[test]
+    fn nvm_denser_than_sram_store() {
+        let zoo = models::zoo();
+        let nvm = WeightNvm::sized_for(&zoo, DType::Bf16, 1.0, MtjTech::sakhare2020());
+        // Even at the conservative Δ=55, MRAM beats an SRAM weight store by
+        // a wide margin — the eFlash-replacement argument in area terms.
+        assert!(nvm.array.density_advantage() > 8.0, "{}", nvm.array.density_advantage());
+    }
+
+    #[test]
+    fn load_and_program_times_scale() {
+        let zoo = models::zoo();
+        let nvm = WeightNvm::sized_for(&zoo, DType::Bf16, 1.0, MtjTech::sakhare2020());
+        let t1 = nvm.load_time(100 * MB, 4e-9, 64);
+        let t2 = nvm.load_time(200 * MB, 4e-9, 64);
+        assert!((t2 / t1 - 2.0).abs() < 1e-6);
+        // Programming a 100 MB model across 64 lanes stays sub-minute.
+        let tp = nvm.program_time(100 * MB, 64);
+        assert!(tp < 60.0, "{tp}");
+        // More lanes, faster.
+        assert!(nvm.program_time(100 * MB, 128) < tp);
+    }
+
+    #[test]
+    fn zoo_total_store() {
+        let zoo = models::zoo();
+        let total = WeightNvm::total_zoo_bytes(&zoo, DType::Bf16);
+        // All 19 models together: ~1.3 GB bf16 (dominated by the VGGs).
+        assert!(total > 1000 * MB && total < 1700 * MB, "{total}");
+    }
+}

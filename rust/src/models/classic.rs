@@ -1,0 +1,174 @@
+//! Classic CNNs: AlexNet, VGG-16/19, GoogLeNet, SqueezeNet 1.0.
+
+use super::{Model, ModelBuilder};
+
+/// AlexNet (torchvision variant, 224×224 input) — 61.1 M params.
+pub fn alexnet() -> Model {
+    ModelBuilder::new("AlexNet", 3, 224, 224)
+        .reference_params(61_100_840)
+        .conv("conv1", 64, 11, 4, 2)
+        .maxpool("pool1", 3, 2)
+        .conv("conv2", 192, 5, 1, 2)
+        .maxpool("pool2", 3, 2)
+        .conv("conv3", 384, 3, 1, 1)
+        .conv("conv4", 256, 3, 1, 1)
+        .conv("conv5", 256, 3, 1, 1)
+        .maxpool("pool5", 3, 2)
+        .fc("fc6", 4096)
+        .fc("fc7", 4096)
+        .fc("fc8", 1000)
+        .build()
+}
+
+fn vgg_block(mut b: ModelBuilder, stage: &str, out_ch: u64, convs: u32) -> ModelBuilder {
+    for i in 0..convs {
+        b = b.conv(&format!("{stage}_conv{}", i + 1), out_ch, 3, 1, 1);
+    }
+    b.maxpool(&format!("{stage}_pool"), 2, 2)
+}
+
+/// VGG-16 — 138.36 M params.
+pub fn vgg16() -> Model {
+    let mut b = ModelBuilder::new("VGG16", 3, 224, 224).reference_params(138_357_544);
+    b = vgg_block(b, "s1", 64, 2);
+    b = vgg_block(b, "s2", 128, 2);
+    b = vgg_block(b, "s3", 256, 3);
+    b = vgg_block(b, "s4", 512, 3);
+    b = vgg_block(b, "s5", 512, 3);
+    b.fc("fc6", 4096).fc("fc7", 4096).fc("fc8", 1000).build()
+}
+
+/// VGG-19 — 143.67 M params.
+pub fn vgg19() -> Model {
+    let mut b = ModelBuilder::new("VGG19", 3, 224, 224).reference_params(143_667_240);
+    b = vgg_block(b, "s1", 64, 2);
+    b = vgg_block(b, "s2", 128, 2);
+    b = vgg_block(b, "s3", 256, 4);
+    b = vgg_block(b, "s4", 512, 4);
+    b = vgg_block(b, "s5", 512, 4);
+    b.fc("fc6", 4096).fc("fc7", 4096).fc("fc8", 1000).build()
+}
+
+/// One GoogLeNet Inception module: 1×1 / 1×1→3×3 / 1×1→5×5 / pool→1×1
+/// branches. `in_ch` is the module input; branch convs are recorded with
+/// their true shapes and the running fmap is set to the concat output.
+#[allow(clippy::too_many_arguments)]
+fn inception_v1(
+    b: ModelBuilder,
+    name: &str,
+    in_ch: u64,
+    c1: u64,
+    c3r: u64,
+    c3: u64,
+    c5r: u64,
+    c5: u64,
+    cp: u64,
+) -> ModelBuilder {
+    let (_, h, w) = b.shape();
+    b.branch_conv(&format!("{name}_1x1"), in_ch, c1, 1, 1, 0)
+        .branch_conv(&format!("{name}_3x3r"), in_ch, c3r, 1, 1, 0)
+        .branch_conv(&format!("{name}_3x3"), c3r, c3, 3, 1, 1)
+        .branch_conv(&format!("{name}_5x5r"), in_ch, c5r, 1, 1, 0)
+        .branch_conv(&format!("{name}_5x5"), c5r, c5, 5, 1, 2)
+        .branch_conv(&format!("{name}_poolproj"), in_ch, cp, 1, 1, 0)
+        .set_shape(c1 + c3 + c5 + cp, h, w)
+}
+
+/// GoogLeNet / Inception-v1 (main trunk, aux heads excluded).
+pub fn googlenet() -> Model {
+    let mut b = ModelBuilder::new("GoogLeNet", 3, 224, 224)
+        .conv("conv1", 64, 7, 2, 3)
+        .maxpool("pool1", 2, 2)
+        .conv("conv2r", 64, 1, 1, 0)
+        .conv("conv2", 192, 3, 1, 1)
+        .maxpool("pool2", 2, 2); // 28×28
+    b = inception_v1(b, "3a", 192, 64, 96, 128, 16, 32, 32);
+    b = inception_v1(b, "3b", 256, 128, 128, 192, 32, 96, 64);
+    b = b.maxpool("pool3", 2, 2); // 14×14
+    b = inception_v1(b, "4a", 480, 192, 96, 208, 16, 48, 64);
+    b = inception_v1(b, "4b", 512, 160, 112, 224, 24, 64, 64);
+    b = inception_v1(b, "4c", 512, 128, 128, 256, 24, 64, 64);
+    b = inception_v1(b, "4d", 512, 112, 144, 288, 32, 64, 64);
+    b = inception_v1(b, "4e", 528, 256, 160, 320, 32, 128, 128);
+    b = b.maxpool("pool4", 2, 2); // 7×7
+    b = inception_v1(b, "5a", 832, 256, 160, 320, 32, 128, 128);
+    b = inception_v1(b, "5b", 832, 384, 192, 384, 48, 128, 128);
+    b.global_pool("gap").fc("fc", 1000).build()
+}
+
+/// One SqueezeNet fire module: squeeze 1×1 → expand 1×1 ‖ 3×3.
+fn fire(b: ModelBuilder, name: &str, in_ch: u64, s: u64, e: u64) -> ModelBuilder {
+    let (_, h, w) = b.shape();
+    b.branch_conv(&format!("{name}_squeeze"), in_ch, s, 1, 1, 0)
+        .branch_conv(&format!("{name}_exp1"), s, e, 1, 1, 0)
+        .branch_conv(&format!("{name}_exp3"), s, e, 3, 1, 1)
+        .set_shape(2 * e, h, w)
+}
+
+/// SqueezeNet 1.0 — 1.25 M params.
+pub fn squeezenet() -> Model {
+    let mut b = ModelBuilder::new("SqueezeNet", 3, 224, 224)
+        .reference_params(1_248_424)
+        .conv("conv1", 96, 7, 2, 0)
+        .maxpool("pool1", 3, 2); // 54×54
+    b = fire(b, "fire2", 96, 16, 64);
+    b = fire(b, "fire3", 128, 16, 64);
+    b = fire(b, "fire4", 128, 32, 128);
+    b = b.maxpool("pool4", 3, 2); // 26×26
+    b = fire(b, "fire5", 256, 32, 128);
+    b = fire(b, "fire6", 256, 48, 192);
+    b = fire(b, "fire7", 384, 48, 192);
+    b = fire(b, "fire8", 384, 64, 256);
+    b = b.maxpool("pool8", 3, 2); // 12×12
+    b = fire(b, "fire9", 512, 64, 256);
+    b.conv("conv10", 1000, 1, 1, 0).global_pool("gap").build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::DType;
+
+    #[test]
+    fn alexnet_fc6_geometry() {
+        let m = alexnet();
+        let fc: Vec<_> = m.fc_layers().collect();
+        assert_eq!(fc[0].n_in, 9216, "pool5 must be 6x6x256");
+    }
+
+    #[test]
+    fn vgg16_has_13_convs_3_fcs() {
+        let m = vgg16();
+        assert_eq!(m.conv_layers().count(), 13);
+        assert_eq!(m.fc_layers().count(), 3);
+        // VGG19 adds 3 convs.
+        assert_eq!(vgg19().conv_layers().count(), 16);
+    }
+
+    #[test]
+    fn vgg16_size_is_fig10_class() {
+        // Paper Fig. 10a: VGG-class models are the big ones, >250 MB bf16.
+        let mb = vgg16().size_bytes(DType::Bf16) as f64 / (1 << 20) as f64;
+        assert!(mb > 250.0 && mb < 290.0, "{mb}");
+    }
+
+    #[test]
+    fn googlenet_channel_bookkeeping() {
+        let m = googlenet();
+        // 5b output: 384+384+128+128 = 1024 into the classifier.
+        let fc: Vec<_> = m.fc_layers().collect();
+        assert_eq!(fc[0].n_in, 1024);
+        // GoogLeNet is a small model (≈6 M params).
+        let p = m.param_count();
+        assert!(p > 4_500_000 && p < 8_000_000, "{p}");
+    }
+
+    #[test]
+    fn squeezenet_tiny() {
+        let m = squeezenet();
+        let p = m.param_count();
+        assert!(p < 1_500_000, "{p}");
+        // No FC layers at all — conv10 is the classifier.
+        assert_eq!(m.fc_layers().count(), 0);
+    }
+}

@@ -1,0 +1,106 @@
+//! Densely-connected and Darknet families: DenseNet-121/169, Darknet-53.
+
+use super::{Model, ModelBuilder};
+
+/// One DenseNet layer: BN-1×1 (bottleneck to 4k) → BN-3×3 (growth k).
+/// The input channel count grows by k per layer inside a block.
+fn dense_block(mut b: ModelBuilder, name: &str, layers: u32, growth: u64) -> ModelBuilder {
+    let (mut ch, h, w) = b.shape();
+    for i in 0..layers {
+        b = b
+            .branch_conv(&format!("{name}_l{}_1x1", i + 1), ch, 4 * growth, 1, 1, 0)
+            .branch_conv(&format!("{name}_l{}_3x3", i + 1), 4 * growth, growth, 3, 1, 1);
+        ch += growth;
+    }
+    b.set_shape(ch, h, w)
+}
+
+/// Transition: 1×1 halving channels + 2×2 average pool.
+fn transition(b: ModelBuilder, name: &str) -> ModelBuilder {
+    let (ch, _, _) = b.shape();
+    b.conv(&format!("{name}_conv"), ch / 2, 1, 1, 0).maxpool(&format!("{name}_pool"), 2, 2)
+}
+
+fn densenet(name: &str, blocks: [u32; 4], params: u64) -> Model {
+    let growth = 32;
+    let mut b = ModelBuilder::new(name, 3, 224, 224)
+        .reference_params(params)
+        .conv("conv1", 64, 7, 2, 3) // 112
+        .maxpool("pool1", 2, 2); // 56
+    for (i, &n) in blocks.iter().enumerate() {
+        b = dense_block(b, &format!("db{}", i + 1), n, growth);
+        if i < 3 {
+            b = transition(b, &format!("tr{}", i + 1));
+        }
+    }
+    b.global_pool("gap").fc("fc", 1000).build()
+}
+
+/// DenseNet-121 — 7.98 M params.
+pub fn densenet121() -> Model {
+    densenet("DenseNet121", [6, 12, 24, 16], 7_978_856)
+}
+
+/// DenseNet-169 — 14.15 M params.
+pub fn densenet169() -> Model {
+    densenet("DenseNet169", [6, 12, 32, 32], 14_149_480)
+}
+
+/// Darknet residual: 1×1 (ch/2) → 3×3 (ch).
+fn dark_res(b: ModelBuilder, name: &str, ch: u64) -> ModelBuilder {
+    b.conv(&format!("{name}_1x1"), ch / 2, 1, 1, 0).conv(&format!("{name}_3x3"), ch, 3, 1, 1)
+}
+
+/// Darknet-53 (the YOLOv3 backbone) — 41.6 M params.
+pub fn darknet53() -> Model {
+    let mut b = ModelBuilder::new("Darknet53", 3, 256, 256)
+        .reference_params(41_620_488)
+        .conv("conv1", 32, 3, 1, 1); // 256
+    let stages: [(u64, u32); 5] = [(64, 1), (128, 2), (256, 8), (512, 8), (1024, 4)];
+    for (si, (ch, reps)) in stages.iter().enumerate() {
+        b = b.conv(&format!("down{}", si + 1), *ch, 3, 2, 1);
+        for r in 0..*reps {
+            b = dark_res(b, &format!("s{}r{}", si + 1, r + 1), *ch);
+        }
+    }
+    b.global_pool("gap").fc("fc", 1000).build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn densenet121_channel_growth() {
+        let m = densenet121();
+        // Final block: 512 + 16·32 = 1024 channels into the classifier.
+        let fc: Vec<_> = m.fc_layers().collect();
+        assert_eq!(fc[0].n_in, 1024);
+    }
+
+    #[test]
+    fn densenet169_final_channels() {
+        let m = densenet169();
+        let fc: Vec<_> = m.fc_layers().collect();
+        // 640 + 32·32 / ... = 1664 channels (published penultimate width).
+        assert_eq!(fc[0].n_in, 1664);
+    }
+
+    #[test]
+    fn darknet53_conv_count() {
+        // 52 convs + fc = "53" layers.
+        let m = darknet53();
+        assert_eq!(m.conv_layers().count(), 52);
+    }
+
+    #[test]
+    fn darknet53_param_count_class() {
+        let p = darknet53().param_count();
+        assert!((p as f64 - 41_620_488.0).abs() / 41_620_488.0 < 0.05, "{p}");
+    }
+
+    #[test]
+    fn densenet_ordering() {
+        assert!(densenet121().param_count() < densenet169().param_count());
+    }
+}

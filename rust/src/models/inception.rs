@@ -1,0 +1,257 @@
+//! Inception-style networks: Inception-v3, Xception, NASNet-Large.
+//!
+//! NASNet-Large is encoded as a documented approximation: the NASNet-A
+//! (6 @ 4032) cell is a fixed DAG of separable convolutions; we encode each
+//! normal/reduction cell as its separable-conv inventory (2 input-adjust 1×1,
+//! three 5×5-separable and three 3×3-separable pairs at the cell filter
+//! count), which preserves the per-layer tensor shapes and total size class
+//! that the §V.A analysis consumes.
+
+use super::{Model, ModelBuilder};
+
+// ---------------------------------------------------------------- Inception-v3
+
+/// InceptionA (35×35): 1×1 / 5×5 / double-3×3 / pool-proj branches.
+fn inception_a(b: ModelBuilder, name: &str, in_ch: u64, pool_feat: u64) -> ModelBuilder {
+    let (_, h, w) = b.shape();
+    b.branch_conv(&format!("{name}_b1"), in_ch, 64, 1, 1, 0)
+        .branch_conv(&format!("{name}_b5r"), in_ch, 48, 1, 1, 0)
+        .branch_conv(&format!("{name}_b5"), 48, 64, 5, 1, 2)
+        .branch_conv(&format!("{name}_b3r"), in_ch, 64, 1, 1, 0)
+        .branch_conv(&format!("{name}_b3a"), 64, 96, 3, 1, 1)
+        .branch_conv(&format!("{name}_b3b"), 96, 96, 3, 1, 1)
+        .branch_conv(&format!("{name}_pool"), in_ch, pool_feat, 1, 1, 0)
+        .set_shape(224 + pool_feat, h, w)
+}
+
+/// InceptionC (17×17): 1×1 / 1×7-7×1 / double-7 factorized / pool branches.
+fn inception_c(b: ModelBuilder, name: &str, in_ch: u64, c7: u64) -> ModelBuilder {
+    let (_, h, w) = b.shape();
+    b.branch_conv(&format!("{name}_b1"), in_ch, 192, 1, 1, 0)
+        .branch_conv(&format!("{name}_b7r"), in_ch, c7, 1, 1, 0)
+        .branch_conv_rect(&format!("{name}_b7a"), c7, c7, 1, 7)
+        .branch_conv_rect(&format!("{name}_b7b"), c7, 192, 7, 1)
+        .branch_conv(&format!("{name}_b7dr"), in_ch, c7, 1, 1, 0)
+        .branch_conv_rect(&format!("{name}_b7d1"), c7, c7, 7, 1)
+        .branch_conv_rect(&format!("{name}_b7d2"), c7, c7, 1, 7)
+        .branch_conv_rect(&format!("{name}_b7d3"), c7, c7, 7, 1)
+        .branch_conv_rect(&format!("{name}_b7d4"), c7, 192, 1, 7)
+        .branch_conv(&format!("{name}_pool"), in_ch, 192, 1, 1, 0)
+        .set_shape(768, h, w)
+}
+
+/// InceptionE (8×8): 1×1 / split-3×3 / double split-3×3 / pool branches.
+fn inception_e(b: ModelBuilder, name: &str, in_ch: u64) -> ModelBuilder {
+    let (_, h, w) = b.shape();
+    b.branch_conv(&format!("{name}_b1"), in_ch, 320, 1, 1, 0)
+        .branch_conv(&format!("{name}_b3r"), in_ch, 384, 1, 1, 0)
+        .branch_conv_rect(&format!("{name}_b3a"), 384, 384, 1, 3)
+        .branch_conv_rect(&format!("{name}_b3b"), 384, 384, 3, 1)
+        .branch_conv(&format!("{name}_bdr"), in_ch, 448, 1, 1, 0)
+        .branch_conv(&format!("{name}_bd3"), 448, 384, 3, 1, 1)
+        .branch_conv_rect(&format!("{name}_bda"), 384, 384, 1, 3)
+        .branch_conv_rect(&format!("{name}_bdb"), 384, 384, 3, 1)
+        .branch_conv(&format!("{name}_pool"), in_ch, 192, 1, 1, 0)
+        .set_shape(2048, h, w)
+}
+
+/// Inception-v3 (299×299) — 23.8 M params (aux head excluded).
+pub fn inception_v3() -> Model {
+    let mut b = ModelBuilder::new("InceptionV3", 3, 299, 299)
+        .reference_params(23_834_568)
+        .conv("conv1", 32, 3, 2, 0) // 149
+        .conv("conv2", 32, 3, 1, 0) // 147
+        .conv("conv3", 64, 3, 1, 1) // 147
+        .maxpool("pool1", 3, 2) // 73
+        .conv("conv4", 80, 1, 1, 0)
+        .conv("conv5", 192, 3, 1, 0) // 71
+        .maxpool("pool2", 3, 2); // 35
+    b = inception_a(b, "m5b", 192, 32); // 256
+    b = inception_a(b, "m5c", 256, 64); // 288
+    b = inception_a(b, "m5d", 288, 64); // 288
+    // Mixed6a reduction 35 → 17.
+    let (_, h, w) = b.shape();
+    let (oh, ow) = ((h - 3) / 2 + 1, (w - 3) / 2 + 1);
+    b = b
+        .branch_conv("m6a_b3", 288, 384, 3, 2, 0)
+        .branch_conv("m6a_bdr", 288, 64, 1, 1, 0)
+        .branch_conv("m6a_bd1", 64, 96, 3, 1, 1)
+        .branch_conv("m6a_bd2", 96, 96, 3, 2, 0)
+        .set_shape(768, oh, ow); // 17×17
+    b = inception_c(b, "m6b", 768, 128);
+    b = inception_c(b, "m6c", 768, 160);
+    b = inception_c(b, "m6d", 768, 160);
+    b = inception_c(b, "m6e", 768, 192);
+    // Mixed7a reduction 17 → 8.
+    let (_, h, w) = b.shape();
+    let (oh, ow) = ((h - 3) / 2 + 1, (w - 3) / 2 + 1);
+    b = b
+        .branch_conv("m7a_b3r", 768, 192, 1, 1, 0)
+        .branch_conv("m7a_b3", 192, 320, 3, 2, 0)
+        .branch_conv("m7a_b7r", 768, 192, 1, 1, 0)
+        .branch_conv_rect("m7a_b7a", 192, 192, 1, 7)
+        .branch_conv_rect("m7a_b7b", 192, 192, 7, 1)
+        .branch_conv("m7a_b7c", 192, 192, 3, 2, 0)
+        .set_shape(1280, oh, ow); // 8×8
+    b = inception_e(b, "m7b", 1280);
+    b = inception_e(b, "m7c", 2048);
+    b.global_pool("gap").fc("fc", 1000).build()
+}
+
+// ------------------------------------------------------------------- Xception
+
+/// Separable conv pair (dw 3×3 + pw 1×1 to `out_ch`) on the running fmap.
+fn sep(b: ModelBuilder, name: &str, out_ch: u64) -> ModelBuilder {
+    b.dwconv(&format!("{name}_dw"), 3, 1, 1).conv(&format!("{name}_pw"), out_ch, 1, 1, 0)
+}
+
+/// Xception entry/exit block: `n` separable convs then a stride-2 pool, with
+/// a 1×1 stride-2 projection skip.
+fn xception_block(mut b: ModelBuilder, name: &str, out_ch: u64, n: u32) -> ModelBuilder {
+    let (in_ch, _, _) = b.shape();
+    b = b.branch_conv(&format!("{name}_skip"), in_ch, out_ch, 1, 2, 0);
+    for i in 0..n {
+        b = sep(b, &format!("{name}_sep{}", i + 1), out_ch);
+    }
+    b.maxpool(&format!("{name}_pool"), 2, 2)
+}
+
+/// Xception (299×299) — 22.9 M params.
+pub fn xception() -> Model {
+    let mut b = ModelBuilder::new("Xception", 3, 299, 299)
+        .reference_params(22_855_952)
+        .conv("conv1", 32, 3, 2, 0) // 149
+        .conv("conv2", 64, 3, 1, 0); // 147
+    b = xception_block(b, "entry1", 128, 2); // 73
+    b = xception_block(b, "entry2", 256, 2); // 36
+    b = xception_block(b, "entry3", 728, 2); // 18
+    for i in 0..8 {
+        let name = format!("mid{}", i + 1);
+        b = sep(b, &format!("{name}_sep1"), 728);
+        b = sep(b, &format!("{name}_sep2"), 728);
+        b = sep(b, &format!("{name}_sep3"), 728);
+    }
+    // Exit block: 728 → 1024 with skip, then 1536/2048 separables.
+    let (in_ch, _, _) = b.shape();
+    b = b.branch_conv("exit_skip", in_ch, 1024, 1, 2, 0);
+    b = sep(b, "exit_sep1", 728);
+    b = sep(b, "exit_sep2", 1024);
+    b = b.maxpool("exit_pool", 2, 2); // 9
+    b = sep(b, "exit_sep3", 1536);
+    b = sep(b, "exit_sep4", 2048);
+    b.global_pool("gap").fc("fc", 1000).build()
+}
+
+// --------------------------------------------------------------- NASNet-Large
+
+/// Approximated NASNet-A cell: two 1×1 input adjusts (prev + cur) to `f`
+/// filters, three 5×5-separable and three 3×3-separable pairs at `f`.
+fn nasnet_cell(b: ModelBuilder, name: &str, in_ch: u64, f: u64, out_mult: u64) -> ModelBuilder {
+    let (_, h, w) = b.shape();
+    let mut b = b
+        .branch_conv(&format!("{name}_adj1"), in_ch, f, 1, 1, 0)
+        .branch_conv(&format!("{name}_adj2"), in_ch, f, 1, 1, 0);
+    for i in 0..3 {
+        // 5×5 separable = dw 5×5 + pw 1×1 at f channels.
+        b = b
+            .raw_conv(super::ConvLayer {
+                name: format!("{name}_sep5_{i}_dw"),
+                in_ch: f,
+                out_ch: f,
+                kh: 5,
+                kw: 5,
+                stride: 1,
+                pad: 2,
+                groups: f,
+                in_h: h,
+                in_w: w,
+            })
+            .branch_conv(&format!("{name}_sep5_{i}_pw"), f, f, 1, 1, 0);
+        b = b
+            .raw_conv(super::ConvLayer {
+                name: format!("{name}_sep3_{i}_dw"),
+                in_ch: f,
+                out_ch: f,
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+                groups: f,
+                in_h: h,
+                in_w: w,
+            })
+            .branch_conv(&format!("{name}_sep3_{i}_pw"), f, f, 1, 1, 0);
+    }
+    b.set_shape(out_mult * f, h, w)
+}
+
+/// NASNet-Large (6 @ 4032), 331×331 — ≈85 M params (approximate cell
+/// inventory; see module docs).
+pub fn nasnet_large() -> Model {
+    let mut b = ModelBuilder::new("NasnetLarge", 3, 331, 331)
+        .conv("stem_conv", 96, 3, 2, 0) // 165
+        .maxpool("stem_pool1", 2, 2) // 82
+        .maxpool("stem_pool2", 2, 2); // 41 (stem reduction cells, geometry only)
+    let stages: [(u64, u32); 3] = [(168, 6), (336, 6), (672, 6)];
+    let mut in_ch = 96;
+    for (si, (f, n)) in stages.iter().enumerate() {
+        if si > 0 {
+            // Reduction cell halves the fmap and doubles filters.
+            let (_, h, w) = b.shape();
+            b = nasnet_cell(b, &format!("red{si}"), in_ch, *f, 6);
+            b = b.set_shape(6 * f, h, w).maxpool(&format!("red{si}_pool"), 2, 2);
+            in_ch = 6 * f;
+        }
+        for i in 0..*n {
+            b = nasnet_cell(b, &format!("st{}c{}", si + 1, i + 1), in_ch, *f, 6);
+            in_ch = 6 * f;
+        }
+    }
+    b.global_pool("gap").fc("fc", 1000).build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::DType;
+
+    #[test]
+    fn inception_v3_classifier_width() {
+        let m = inception_v3();
+        let fc: Vec<_> = m.fc_layers().collect();
+        assert_eq!(fc[0].n_in, 2048);
+    }
+
+    #[test]
+    fn inception_v3_param_class() {
+        let p = inception_v3().param_count();
+        assert!((p as f64 - 23.8e6).abs() / 23.8e6 < 0.10, "{p}");
+    }
+
+    #[test]
+    fn xception_param_class() {
+        let p = xception().param_count();
+        assert!((p as f64 - 22.9e6).abs() / 22.9e6 < 0.10, "{p}");
+    }
+
+    #[test]
+    fn xception_mid_flow_is_728() {
+        let m = xception();
+        let mid = m.conv_layers().find(|c| c.name == "mid4_sep2_pw").unwrap();
+        assert_eq!(mid.out_ch, 728);
+    }
+
+    #[test]
+    fn nasnet_is_large_class() {
+        let m = nasnet_large();
+        let p = m.param_count();
+        // ~85M class (approximate inventory; published 88.9M).
+        assert!(p > 60_000_000 && p < 110_000_000, "{p}");
+        let fc: Vec<_> = m.fc_layers().collect();
+        assert_eq!(fc[0].n_in, 4032);
+        // NASNet has the huge activation maps the paper's Fig. 11 calls out:
+        // it needs well over 12 MB at batch 8.
+        let ws = m.max_conv_working_set(DType::Bf16, 8);
+        assert!(ws > 20 * 1024 * 1024, "ws={ws}");
+    }
+}

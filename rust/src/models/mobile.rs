@@ -1,0 +1,163 @@
+//! Mobile-class networks: MobileNet-v1/v2, ShuffleNet-v2 (1.0×).
+
+use super::{ConvLayer, Model, ModelBuilder};
+
+/// Depthwise-separable pair: dw 3×3 (stride s) + pw 1×1 to `out_ch`.
+fn dw_sep(b: ModelBuilder, name: &str, out_ch: u64, stride: u64) -> ModelBuilder {
+    b.dwconv(&format!("{name}_dw"), 3, stride, 1).conv(&format!("{name}_pw"), out_ch, 1, 1, 0)
+}
+
+/// MobileNet-v1 (1.0×, 224) — 4.23 M params.
+pub fn mobilenet_v1() -> Model {
+    let mut b = ModelBuilder::new("MobileNetV1", 3, 224, 224)
+        .reference_params(4_231_976)
+        .conv("conv1", 32, 3, 2, 1); // 112
+    let cfg: [(u64, u64); 13] = [
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ];
+    for (i, (c, s)) in cfg.iter().enumerate() {
+        b = dw_sep(b, &format!("ds{}", i + 1), *c, *s);
+    }
+    b.global_pool("gap").fc("fc", 1000).build()
+}
+
+/// Inverted-residual block: 1×1 expand (t×) → dw 3×3 → 1×1 project.
+fn inverted_residual(mut b: ModelBuilder, name: &str, out_ch: u64, stride: u64, t: u64) -> ModelBuilder {
+    let (in_ch, _, _) = b.shape();
+    let hidden = in_ch * t;
+    if t != 1 {
+        b = b.conv(&format!("{name}_expand"), hidden, 1, 1, 0);
+    }
+    b.dwconv(&format!("{name}_dw"), 3, stride, 1).conv(&format!("{name}_project"), out_ch, 1, 1, 0)
+}
+
+/// MobileNet-v2 (1.0×, 224) — 3.50 M params.
+pub fn mobilenet_v2() -> Model {
+    let mut b = ModelBuilder::new("MobileNetV2", 3, 224, 224)
+        .reference_params(3_504_872)
+        .conv("conv1", 32, 3, 2, 1); // 112
+    // (expansion t, out channels c, repeats n, first stride s)
+    let cfg: [(u64, u64, u32, u64); 7] = [
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    for (stage, (t, c, n, s)) in cfg.iter().enumerate() {
+        for i in 0..*n {
+            let stride = if i == 0 { *s } else { 1 };
+            b = inverted_residual(b, &format!("ir{}_{}", stage + 1, i + 1), *c, stride, *t);
+        }
+    }
+    b.conv("conv_last", 1280, 1, 1, 0).global_pool("gap").fc("fc", 1000).build()
+}
+
+fn dw(name: &str, ch: u64, stride: u64, h: u64, w: u64) -> ConvLayer {
+    ConvLayer {
+        name: name.to_string(),
+        in_ch: ch,
+        out_ch: ch,
+        kh: 3,
+        kw: 3,
+        stride,
+        pad: 1,
+        groups: ch,
+        in_h: h,
+        in_w: w,
+    }
+}
+
+/// ShuffleNet-v2 unit. Stride-1 units: half the channels pass through, the
+/// other half sees 1×1 → dw 3×3 → 1×1. Stride-2 (downsample) units process
+/// both branches (the shortcut gets dw 3×3 s2 + 1×1 as well).
+fn shuffle_unit(b: ModelBuilder, name: &str, out_ch: u64, stride: u64) -> ModelBuilder {
+    let (in_ch, h, w) = b.shape();
+    let half = out_ch / 2;
+    let oh = (h + 2 - 3) / stride + 1;
+    let ow = (w + 2 - 3) / stride + 1;
+    let main_in = if stride == 1 { half } else { in_ch };
+    let mut b = b
+        .branch_conv(&format!("{name}_pw1"), main_in, half, 1, 1, 0)
+        .raw_conv(dw(&format!("{name}_dw"), half, stride, h, w))
+        .branch_conv(&format!("{name}_pw2"), half, half, 1, 1, 0);
+    if stride == 2 {
+        b = b
+            .raw_conv(dw(&format!("{name}_scdw"), in_ch, stride, h, w))
+            .branch_conv(&format!("{name}_scpw"), in_ch, half, 1, 1, 0);
+    }
+    b.set_shape(out_ch, oh, ow)
+}
+
+/// ShuffleNet-v2 1.0× — ≈2.3 M params.
+pub fn shufflenet_v2() -> Model {
+    let mut b = ModelBuilder::new("ShuffleNetV2", 3, 224, 224)
+        .conv("conv1", 24, 3, 2, 1) // 112
+        .maxpool("pool1", 2, 2); // 56
+    let stages: [(u64, u32); 3] = [(116, 4), (232, 8), (464, 4)];
+    for (si, (c, n)) in stages.iter().enumerate() {
+        for i in 0..*n {
+            let stride = if i == 0 { 2 } else { 1 };
+            b = shuffle_unit(b, &format!("st{}u{}", si + 2, i + 1), *c, stride);
+        }
+    }
+    b.conv("conv5", 1024, 1, 1, 0).global_pool("gap").fc("fc", 1000).build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mobilenet_v1_param_count_class() {
+        let p = mobilenet_v1().param_count();
+        assert!(p > 3_800_000 && p < 4_600_000, "{p}");
+    }
+
+    #[test]
+    fn mobilenet_v2_param_count_class() {
+        let p = mobilenet_v2().param_count();
+        assert!(p > 3_100_000 && p < 3_900_000, "{p}");
+    }
+
+    #[test]
+    fn shufflenet_is_smallest_class() {
+        let p = shufflenet_v2().param_count();
+        assert!(p > 1_200_000 && p < 3_200_000, "{p}");
+    }
+
+    #[test]
+    fn depthwise_layers_present() {
+        let m = mobilenet_v2();
+        let dw = m.conv_layers().filter(|c| c.groups > 1).count();
+        assert!(dw >= 17, "one dw per inverted residual, got {dw}");
+    }
+
+    #[test]
+    fn mobilenet_v1_final_fc() {
+        let fc: Vec<_> = mobilenet_v1().fc_layers().map(|f| (f.n_in, f.m_out)).collect();
+        assert_eq!(fc, vec![(1024, 1000)]);
+    }
+
+    #[test]
+    fn shufflenet_stage_geometry() {
+        // conv5 input must be 464 ch at 7×7.
+        let m = shufflenet_v2();
+        let conv5 = m.conv_layers().find(|c| c.name == "conv5").unwrap();
+        assert_eq!((conv5.in_ch, conv5.in_h, conv5.in_w), (464, 7, 7));
+    }
+}

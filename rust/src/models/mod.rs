@@ -1,0 +1,598 @@
+//! DNN model zoo: the 19 architectures of the paper's design-space
+//! exploration (§V.A, Figs. 10–14, 18), encoded as per-layer shape tables.
+//!
+//! Only tensor *shapes* matter for the memory/timing analysis, so each model
+//! is a sequence of [`Layer`]s built with [`ModelBuilder`], which tracks the
+//! running feature-map geometry exactly like the standard reference
+//! implementations do (conv arithmetic of Eq. 1). Branch-structured networks
+//! (Inception, DenseNet, NASNet) are encoded branch-by-branch: every conv
+//! that exists in the graph appears once with its true shapes, which is what
+//! the per-layer size/occupancy analysis consumes.
+//!
+//! Parameter counts are validated against the published numbers in tests.
+
+pub mod classic;
+pub mod dense;
+pub mod inception;
+pub mod mobile;
+pub mod resnet;
+
+
+/// Numeric datatype of weights/activations (Fig. 10's two axes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    Int8,
+    Bf16,
+}
+
+impl DType {
+    pub fn bytes(&self) -> u64 {
+        match self {
+            DType::Int8 => 1,
+            DType::Bf16 => 2,
+        }
+    }
+}
+
+/// One layer of a model, with fully-resolved geometry.
+#[derive(Debug, Clone)]
+pub enum Layer {
+    Conv(ConvLayer),
+    Fc(FcLayer),
+    /// Max/avg pooling — no weights, changes fmap geometry; retention
+    /// accounting charges it T_pool_relu.
+    Pool(PoolLayer),
+}
+
+/// Convolution layer geometry (Eq. 1 parameters).
+#[derive(Debug, Clone)]
+pub struct ConvLayer {
+    pub name: String,
+    pub in_ch: u64,
+    pub out_ch: u64,
+    pub kh: u64,
+    pub kw: u64,
+    pub stride: u64,
+    pub pad: u64,
+    /// Grouped conv (depthwise when groups == in_ch); 1 for dense conv.
+    pub groups: u64,
+    pub in_h: u64,
+    pub in_w: u64,
+}
+
+impl ConvLayer {
+    /// N_ofmap_rw = (I_h − k_h + 2P)/S + 1 (Eq. 1).
+    pub fn ofmap_h(&self) -> u64 {
+        (self.in_h + 2 * self.pad - self.kh) / self.stride + 1
+    }
+    pub fn ofmap_w(&self) -> u64 {
+        (self.in_w + 2 * self.pad - self.kw) / self.stride + 1
+    }
+    pub fn ifmap_elems(&self) -> u64 {
+        self.in_ch * self.in_h * self.in_w
+    }
+    pub fn ofmap_elems(&self) -> u64 {
+        self.out_ch * self.ofmap_h() * self.ofmap_w()
+    }
+    pub fn weight_elems(&self) -> u64 {
+        self.out_ch * (self.in_ch / self.groups) * self.kh * self.kw
+    }
+    /// One partial ofmap: the 2-D plane accumulated per (output-channel,
+    /// input-channel-step) — what the scratchpad holds (§IV.D, Fig. 18).
+    pub fn partial_ofmap_elems(&self) -> u64 {
+        self.ofmap_h() * self.ofmap_w()
+    }
+    /// MACs for the full layer (one image).
+    pub fn macs(&self) -> u64 {
+        self.ofmap_elems() * (self.in_ch / self.groups) * self.kh * self.kw
+    }
+}
+
+/// Fully-connected layer: n_fc inputs → m_fc outputs.
+#[derive(Debug, Clone)]
+pub struct FcLayer {
+    pub name: String,
+    pub n_in: u64,
+    pub m_out: u64,
+}
+
+impl FcLayer {
+    pub fn weight_elems(&self) -> u64 {
+        self.n_in * self.m_out
+    }
+}
+
+/// Pooling layer.
+#[derive(Debug, Clone)]
+pub struct PoolLayer {
+    pub name: String,
+    pub k: u64,
+    pub stride: u64,
+    pub ch: u64,
+    pub in_h: u64,
+    pub in_w: u64,
+    /// Global pooling collapses H×W → 1×1 regardless of k.
+    pub global: bool,
+}
+
+impl PoolLayer {
+    pub fn out_h(&self) -> u64 {
+        if self.global {
+            1
+        } else {
+            (self.in_h - self.k) / self.stride + 1
+        }
+    }
+    pub fn out_w(&self) -> u64 {
+        if self.global {
+            1
+        } else {
+            (self.in_w - self.k) / self.stride + 1
+        }
+    }
+}
+
+/// A complete model.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub name: String,
+    pub input: (u64, u64, u64), // (ch, h, w)
+    pub layers: Vec<Layer>,
+    /// Published parameter count (for validation), if known.
+    pub reference_params: Option<u64>,
+}
+
+impl Model {
+    /// Total weight elements (conv + fc).
+    pub fn param_count(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                Layer::Conv(c) => c.weight_elems() + c.out_ch, // + bias/BN-γβ class
+                Layer::Fc(f) => f.weight_elems() + f.m_out,
+                Layer::Pool(_) => 0,
+            })
+            .sum()
+    }
+
+    /// Model size in bytes at the given datatype (Fig. 10a).
+    pub fn size_bytes(&self, dt: DType) -> u64 {
+        self.param_count() * dt.bytes()
+    }
+
+    /// All conv layers.
+    pub fn conv_layers(&self) -> impl Iterator<Item = &ConvLayer> {
+        self.layers.iter().filter_map(|l| match l {
+            Layer::Conv(c) => Some(c),
+            _ => None,
+        })
+    }
+
+    /// All FC layers.
+    pub fn fc_layers(&self) -> impl Iterator<Item = &FcLayer> {
+        self.layers.iter().filter_map(|l| match l {
+            Layer::Fc(f) => Some(f),
+            _ => None,
+        })
+    }
+
+    /// (min, max) activation-map elements over conv layers — Fig. 10(b).
+    pub fn conv_fmap_range(&self) -> (u64, u64) {
+        let mut lo = u64::MAX;
+        let mut hi = 0;
+        for c in self.conv_layers() {
+            let m = c.ifmap_elems().max(c.ofmap_elems());
+            lo = lo.min(m);
+            hi = hi.max(m);
+        }
+        if hi == 0 {
+            (0, 0)
+        } else {
+            (lo, hi)
+        }
+    }
+
+    /// (min, max) weight elements over conv layers — Fig. 10(c).
+    pub fn conv_weight_range(&self) -> (u64, u64) {
+        let mut lo = u64::MAX;
+        let mut hi = 0;
+        for c in self.conv_layers() {
+            lo = lo.min(c.weight_elems());
+            hi = hi.max(c.weight_elems());
+        }
+        if hi == 0 {
+            (0, 0)
+        } else {
+            (lo, hi)
+        }
+    }
+
+    /// Max single-layer working set (ifmap + weights + ofmap) in bytes at
+    /// batch `n` — the per-layer GLB requirement (Fig. 11).
+    pub fn max_conv_working_set(&self, dt: DType, batch: u64) -> u64 {
+        self.conv_layers()
+            .map(|c| (batch * (c.ifmap_elems() + c.ofmap_elems()) + c.weight_elems()) * dt.bytes())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Max partial-ofmap bytes over conv layers (Fig. 18).
+    pub fn max_partial_ofmap(&self, dt: DType) -> u64 {
+        self.conv_layers().map(|c| c.partial_ofmap_elems() * dt.bytes()).max().unwrap_or(0)
+    }
+
+    /// Total MACs for one inference (one image).
+    pub fn total_macs(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                Layer::Conv(c) => c.macs(),
+                Layer::Fc(f) => f.weight_elems(),
+                Layer::Pool(_) => 0,
+            })
+            .sum()
+    }
+}
+
+/// Builder that tracks the running feature-map geometry.
+pub struct ModelBuilder {
+    name: String,
+    input: (u64, u64, u64),
+    ch: u64,
+    h: u64,
+    w: u64,
+    layers: Vec<Layer>,
+    reference_params: Option<u64>,
+}
+
+impl ModelBuilder {
+    pub fn new(name: &str, ch: u64, h: u64, w: u64) -> Self {
+        Self {
+            name: name.to_string(),
+            input: (ch, h, w),
+            ch,
+            h,
+            w,
+            layers: Vec::new(),
+            reference_params: None,
+        }
+    }
+
+    pub fn reference_params(mut self, p: u64) -> Self {
+        self.reference_params = Some(p);
+        self
+    }
+
+    /// Current (ch, h, w).
+    pub fn shape(&self) -> (u64, u64, u64) {
+        (self.ch, self.h, self.w)
+    }
+
+    /// Dense conv consuming the running fmap.
+    pub fn conv(mut self, name: &str, out_ch: u64, k: u64, stride: u64, pad: u64) -> Self {
+        self.push_conv(name, out_ch, k, k, stride, pad, 1);
+        self
+    }
+
+    /// Non-square conv (Inception's 1×7 / 7×1 factorizations).
+    pub fn conv_rect(
+        mut self,
+        name: &str,
+        out_ch: u64,
+        kh: u64,
+        kw: u64,
+        stride: u64,
+        pad_h: u64,
+        pad_w: u64,
+    ) -> Self {
+        let c = ConvLayer {
+            name: name.to_string(),
+            in_ch: self.ch,
+            out_ch,
+            kh,
+            kw,
+            stride,
+            pad: pad_h.max(pad_w), // symmetric-enough for size analysis
+            groups: 1,
+            in_h: self.h,
+            in_w: self.w,
+        };
+        self.h = (self.h + 2 * pad_h - kh) / stride + 1;
+        self.w = (self.w + 2 * pad_w - kw) / stride + 1;
+        self.ch = out_ch;
+        self.layers.push(Layer::Conv(c));
+        self
+    }
+
+    /// Depthwise conv (groups = channels).
+    pub fn dwconv(mut self, name: &str, k: u64, stride: u64, pad: u64) -> Self {
+        let ch = self.ch;
+        self.push_conv(name, ch, k, k, stride, pad, ch);
+        self
+    }
+
+    /// Grouped conv.
+    pub fn gconv(mut self, name: &str, out_ch: u64, k: u64, stride: u64, pad: u64, groups: u64) -> Self {
+        self.push_conv(name, out_ch, k, k, stride, pad, groups);
+        self
+    }
+
+    /// A conv on a *branch*: uses the running geometry for shapes but does
+    /// NOT advance the running fmap (used for parallel branches; caller sets
+    /// the merged output with [`Self::set_shape`]).
+    pub fn branch_conv(mut self, name: &str, in_ch: u64, out_ch: u64, k: u64, stride: u64, pad: u64) -> Self {
+        let c = ConvLayer {
+            name: name.to_string(),
+            in_ch,
+            out_ch,
+            kh: k,
+            kw: k,
+            stride,
+            pad,
+            groups: 1,
+            in_h: self.h,
+            in_w: self.w,
+        };
+        self.layers.push(Layer::Conv(c));
+        self
+    }
+
+    /// Push a fully-specified conv without advancing the running geometry
+    /// (branch-side layers whose input is not the running fmap).
+    pub fn raw_conv(mut self, c: ConvLayer) -> Self {
+        self.layers.push(Layer::Conv(c));
+        self
+    }
+
+    /// Rectangular conv on a *branch* (explicit input channels, running
+    /// spatial geometry, no shape advance) — Inception's 1×7/7×1 factors.
+    #[allow(clippy::too_many_arguments)]
+    pub fn branch_conv_rect(
+        self,
+        name: &str,
+        in_ch: u64,
+        out_ch: u64,
+        kh: u64,
+        kw: u64,
+    ) -> Self {
+        let (h, w) = (self.h, self.w);
+        self.raw_conv(ConvLayer {
+            name: name.to_string(),
+            in_ch,
+            out_ch,
+            kh,
+            kw,
+            stride: 1,
+            pad: kh.max(kw) / 2, // "same" padding on the long axis
+            groups: 1,
+            in_h: h,
+            in_w: w,
+        })
+    }
+
+    /// Force the running geometry (after a merge/concat of branches).
+    pub fn set_shape(mut self, ch: u64, h: u64, w: u64) -> Self {
+        self.ch = ch;
+        self.h = h;
+        self.w = w;
+        self
+    }
+
+    fn push_conv(&mut self, name: &str, out_ch: u64, kh: u64, kw: u64, stride: u64, pad: u64, groups: u64) {
+        let c = ConvLayer {
+            name: name.to_string(),
+            in_ch: self.ch,
+            out_ch,
+            kh,
+            kw,
+            stride,
+            pad,
+            groups,
+            in_h: self.h,
+            in_w: self.w,
+        };
+        self.h = (self.h + 2 * pad - kh) / stride + 1;
+        self.w = (self.w + 2 * pad - kw) / stride + 1;
+        self.ch = out_ch;
+        self.layers.push(Layer::Conv(c));
+    }
+
+    pub fn maxpool(mut self, name: &str, k: u64, stride: u64) -> Self {
+        let p = PoolLayer {
+            name: name.to_string(),
+            k,
+            stride,
+            ch: self.ch,
+            in_h: self.h,
+            in_w: self.w,
+            global: false,
+        };
+        self.h = p.out_h();
+        self.w = p.out_w();
+        self.layers.push(Layer::Pool(p));
+        self
+    }
+
+    pub fn global_pool(mut self, name: &str) -> Self {
+        let p = PoolLayer {
+            name: name.to_string(),
+            k: self.h,
+            stride: 1,
+            ch: self.ch,
+            in_h: self.h,
+            in_w: self.w,
+            global: true,
+        };
+        self.h = 1;
+        self.w = 1;
+        self.layers.push(Layer::Pool(p));
+        self
+    }
+
+    pub fn fc(mut self, name: &str, m_out: u64) -> Self {
+        let n_in = self.ch * self.h * self.w;
+        self.layers.push(Layer::Fc(FcLayer { name: name.to_string(), n_in, m_out }));
+        self.ch = m_out;
+        self.h = 1;
+        self.w = 1;
+        self
+    }
+
+    pub fn build(self) -> Model {
+        Model {
+            name: self.name,
+            input: self.input,
+            layers: self.layers,
+            reference_params: self.reference_params,
+        }
+    }
+}
+
+/// The full 19-model zoo of the paper's §V.A analysis.
+pub fn zoo() -> Vec<Model> {
+    vec![
+        classic::alexnet(),
+        classic::vgg16(),
+        classic::vgg19(),
+        classic::googlenet(),
+        classic::squeezenet(),
+        resnet::resnet18(),
+        resnet::resnet34(),
+        resnet::resnet50(),
+        resnet::resnet101(),
+        resnet::resnet152(),
+        mobile::mobilenet_v1(),
+        mobile::mobilenet_v2(),
+        mobile::shufflenet_v2(),
+        dense::densenet121(),
+        dense::densenet169(),
+        dense::darknet53(),
+        inception::inception_v3(),
+        inception::xception(),
+        inception::nasnet_large(),
+    ]
+}
+
+/// Look a model up by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<Model> {
+    let want = name.to_lowercase().replace(['-', '_'], "");
+    zoo().into_iter().find(|m| m.name.to_lowercase().replace(['-', '_'], "") == want)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_has_19_models() {
+        let z = zoo();
+        assert_eq!(z.len(), 19);
+        // Unique names.
+        let mut names: Vec<&str> = z.iter().map(|m| m.name.as_str()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 19);
+    }
+
+    #[test]
+    fn every_model_has_conv_and_plausible_size() {
+        for m in zoo() {
+            assert!(m.conv_layers().count() > 0, "{} has no conv layers", m.name);
+            let mb = m.size_bytes(DType::Bf16) as f64 / (1024.0 * 1024.0);
+            assert!(mb > 1.0 && mb < 400.0, "{}: {mb} MB bf16", m.name);
+        }
+    }
+
+    #[test]
+    fn param_counts_match_published() {
+        // Within 10% of the published parameter counts (our tables omit some
+        // BN statistics and odd biases; that is within the paper's own
+        // granularity for Fig. 10).
+        for m in zoo() {
+            if let Some(want) = m.reference_params {
+                let got = m.param_count();
+                let err = (got as f64 - want as f64).abs() / want as f64;
+                assert!(err < 0.10, "{}: got {got}, published {want} ({:.1}% off)", m.name, err * 100.0);
+            }
+        }
+    }
+
+    #[test]
+    fn fig10a_aggregate_sizes() {
+        // Paper: ~280 MB (bf16) / ~140 MB (int8) stores *the largest models*
+        // class; total zoo ≈ several hundred MB; the largest single model
+        // (NASNet/VGG-class) is 100–300 MB bf16.
+        let z = zoo();
+        let max_bf16 =
+            z.iter().map(|m| m.size_bytes(DType::Bf16)).max().unwrap() as f64 / (1 << 20) as f64;
+        assert!(max_bf16 > 200.0 && max_bf16 < 320.0, "max bf16 model = {max_bf16} MB");
+        for m in &z {
+            assert_eq!(m.size_bytes(DType::Bf16), 2 * m.size_bytes(DType::Int8));
+        }
+    }
+
+    #[test]
+    fn conv_arithmetic() {
+        let c = ConvLayer {
+            name: "t".into(),
+            in_ch: 3,
+            out_ch: 64,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            groups: 1,
+            in_h: 224,
+            in_w: 224,
+        };
+        assert_eq!(c.ofmap_h(), 224);
+        assert_eq!(c.weight_elems(), 64 * 3 * 9);
+        assert_eq!(c.partial_ofmap_elems(), 224 * 224);
+        // Fig. 4's example: 3×3 kernel, stride 1 over 5×5 → 3×3 ofmap.
+        let f4 = ConvLayer {
+            name: "fig4".into(),
+            in_ch: 1,
+            out_ch: 1,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 0,
+            groups: 1,
+            in_h: 5,
+            in_w: 5,
+        };
+        assert_eq!((f4.ofmap_h(), f4.ofmap_w()), (3, 3));
+    }
+
+    #[test]
+    fn builder_tracks_geometry() {
+        let m = ModelBuilder::new("t", 3, 224, 224)
+            .conv("c1", 64, 7, 2, 3)
+            .maxpool("p1", 2, 2)
+            .conv("c2", 128, 3, 1, 1)
+            .global_pool("gap")
+            .fc("fc", 10)
+            .build();
+        // 224 →(7,2,3) 112 →(pool2) 56 →(3,1,1) 56 →(gap) 1
+        let convs: Vec<&ConvLayer> = m.conv_layers().collect();
+        assert_eq!(convs[1].in_h, 56);
+        let fc: Vec<&FcLayer> = m.fc_layers().collect();
+        assert_eq!(fc[0].n_in, 128);
+        assert_eq!(fc[0].m_out, 10);
+    }
+
+    #[test]
+    fn depthwise_weights() {
+        let m = ModelBuilder::new("t", 32, 112, 112).dwconv("dw", 3, 1, 1).build();
+        let c: Vec<&ConvLayer> = m.conv_layers().collect();
+        assert_eq!(c[0].weight_elems(), 32 * 9);
+        assert_eq!(c[0].macs(), 32 * 112 * 112 * 9);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("resnet-50").is_some());
+        assert!(by_name("ResNet50").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,114 @@
+//! ResNet family (He et al.): 18/34 with basic blocks, 50/101/152 with
+//! bottleneck blocks. Downsample (projection) 1×1 convs included.
+
+use super::{Model, ModelBuilder};
+
+/// Basic block: 3×3 → 3×3 (+ 1×1 projection when the shape changes).
+fn basic_block(mut b: ModelBuilder, name: &str, out_ch: u64, stride: u64) -> ModelBuilder {
+    let (in_ch, h, w) = b.shape();
+    if stride != 1 || in_ch != out_ch {
+        b = b.branch_conv(&format!("{name}_proj"), in_ch, out_ch, 1, stride, 0);
+    }
+    b.conv(&format!("{name}_conv1"), out_ch, 3, stride, 1)
+        .conv(&format!("{name}_conv2"), out_ch, 3, 1, 1)
+        .set_shape(out_ch, (h + 2 - 3) / stride + 1, (w + 2 - 3) / stride + 1)
+}
+
+/// Bottleneck block: 1×1 (mid) → 3×3 (mid) → 1×1 (4·mid).
+fn bottleneck(mut b: ModelBuilder, name: &str, mid_ch: u64, stride: u64) -> ModelBuilder {
+    let out_ch = 4 * mid_ch;
+    let (in_ch, h, w) = b.shape();
+    if stride != 1 || in_ch != out_ch {
+        b = b.branch_conv(&format!("{name}_proj"), in_ch, out_ch, 1, stride, 0);
+    }
+    b.conv(&format!("{name}_conv1"), mid_ch, 1, 1, 0)
+        .conv(&format!("{name}_conv2"), mid_ch, 3, stride, 1)
+        .conv(&format!("{name}_conv3"), out_ch, 1, 1, 0)
+        .set_shape(out_ch, (h + 2 - 3) / stride + 1, (w + 2 - 3) / stride + 1)
+}
+
+fn stem(name: &str) -> ModelBuilder {
+    ModelBuilder::new(name, 3, 224, 224)
+        .conv("conv1", 64, 7, 2, 3) // 224 → 112
+        .maxpool("pool1", 2, 2) // → 56
+}
+
+fn resnet_basic(name: &str, reps: [u32; 4], params: u64) -> Model {
+    let mut b = stem(name).reference_params(params);
+    for (stage, (&n, ch)) in reps.iter().zip([64u64, 128, 256, 512]).enumerate() {
+        for i in 0..n {
+            let stride = if stage > 0 && i == 0 { 2 } else { 1 };
+            b = basic_block(b, &format!("s{}b{}", stage + 2, i + 1), ch, stride);
+        }
+    }
+    b.global_pool("gap").fc("fc", 1000).build()
+}
+
+fn resnet_bottleneck(name: &str, reps: [u32; 4], params: u64) -> Model {
+    let mut b = stem(name).reference_params(params);
+    for (stage, (&n, ch)) in reps.iter().zip([64u64, 128, 256, 512]).enumerate() {
+        for i in 0..n {
+            let stride = if stage > 0 && i == 0 { 2 } else { 1 };
+            b = bottleneck(b, &format!("s{}b{}", stage + 2, i + 1), ch, stride);
+        }
+    }
+    b.global_pool("gap").fc("fc", 1000).build()
+}
+
+pub fn resnet18() -> Model {
+    resnet_basic("ResNet18", [2, 2, 2, 2], 11_689_512)
+}
+pub fn resnet34() -> Model {
+    resnet_basic("ResNet34", [3, 4, 6, 3], 21_797_672)
+}
+pub fn resnet50() -> Model {
+    resnet_bottleneck("ResNet50", [3, 4, 6, 3], 25_557_032)
+}
+pub fn resnet101() -> Model {
+    resnet_bottleneck("ResNet101", [3, 4, 23, 3], 44_549_160)
+}
+pub fn resnet152() -> Model {
+    resnet_bottleneck("ResNet152", [3, 8, 36, 3], 60_192_808)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet50_layer_count() {
+        // 1 stem + (3+4+6+3)·3 bottleneck convs + 4 projections = 53 convs.
+        let m = resnet50();
+        assert_eq!(m.conv_layers().count(), 53);
+        assert_eq!(m.fc_layers().count(), 1);
+    }
+
+    #[test]
+    fn resnet18_final_geometry() {
+        let m = resnet18();
+        let fc: Vec<_> = m.fc_layers().collect();
+        assert_eq!(fc[0].n_in, 512, "gap output must be 512-d");
+        let m = resnet50();
+        let fc: Vec<_> = m.fc_layers().collect();
+        assert_eq!(fc[0].n_in, 2048);
+    }
+
+    #[test]
+    fn family_size_ordering() {
+        let p18 = resnet18().param_count();
+        let p34 = resnet34().param_count();
+        let p50 = resnet50().param_count();
+        let p101 = resnet101().param_count();
+        let p152 = resnet152().param_count();
+        assert!(p18 < p34 && p34 < p50 && p50 < p101 && p101 < p152);
+    }
+
+    #[test]
+    fn stage_spatial_sizes() {
+        // Stages run at 56/28/14/7 like the reference implementation.
+        let m = resnet50();
+        let convs: Vec<_> = m.conv_layers().collect();
+        let last = convs.last().unwrap();
+        assert_eq!(last.in_h, 7, "final stage must be 7x7");
+    }
+}

@@ -1,0 +1,44 @@
+//! STT-MRAM / MTJ device physics and Δ-customization (paper §IV).
+//!
+//! This module implements, from the equations in the paper:
+//!
+//! * [`mtj`] — the MTJ device model: thermal stability factor Δ (Eq. 12) and
+//!   critical switching current I_c (Eq. 13), with named technology presets
+//!   for the silicon base cases the paper calibrates against
+//!   (Sakhare 2020 [6], Wei 2019 [13]).
+//! * [`reliability`] — retention-failure probability (Eq. 14), read-disturb
+//!   probability (Eq. 15) and write-error rate (Eq. 16).
+//! * [`scaling`] — the design solver of §IV.B: given a target retention time
+//!   and BER budget, find the scaled Δ; given Δ and a WER/RD target, find the
+//!   write pulse width / read pulse width; the `ln(Δ)` write-latency law.
+//! * [`variation`] — process/temperature guard-banding (Eq. 17–18, Fig. 7–8).
+//! * [`write_driver`] — the dynamically adjustable write driver of Fig. 9
+//!   with its process-and-temperature-monitor (PTM) control loop.
+
+pub mod montecarlo;
+pub mod mtj;
+pub mod reliability;
+pub mod scaling;
+pub mod variation;
+pub mod write_driver;
+
+pub use montecarlo::{McResult, MonteCarlo};
+pub use mtj::{MtjParams, MtjTech};
+pub use reliability::{
+    read_disturb_prob, read_pulse_at_rd, retention_failure_prob, retention_time_at_ber,
+    write_error_rate, write_pulse_at_wer,
+};
+pub use scaling::{DeltaDesign, DesignTargets, ScalingSolver};
+pub use variation::{GuardBand, PtCorner, PtVariation};
+pub use write_driver::{PtmSample, WriteDriver, WriteDriverConfig};
+
+/// Boltzmann constant (J/K).
+pub const K_B: f64 = 1.380_649e-23;
+/// Electron charge (C).
+pub const E_CHARGE: f64 = 1.602_176_634e-19;
+/// Reduced Planck constant ħ (J·s) — Eq. 13's `h` is ħ in the source
+/// literature (Khvalkovskiy 2013).
+pub const H_BAR: f64 = 1.054_571_817e-34;
+
+/// Seconds in a Julian year, used for NVM retention targets ("3 years").
+pub const YEAR_S: f64 = 365.25 * 24.0 * 3600.0;

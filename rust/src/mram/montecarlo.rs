@@ -1,0 +1,233 @@
+//! Monte-Carlo process/temperature analysis (Figs. 7–8).
+//!
+//! The closed-form guard-banding of Eq. 17–18 covers ±4σ; this module
+//! *samples* the die population — Δ ~ N(Δ_GB, σ²), T ~ U(T_cold, T_hot) —
+//! and empirically measures retention-failure / write-failure rates, both
+//! with the statically-sized and the PTM-adjustable write driver of Fig. 9.
+//! It is the numerical check that the analytical corners are actually the
+//! worst cases (and the source of the Fig. 8-style current distributions).
+
+use crate::mram::mtj::MtjTech;
+use crate::mram::reliability::{retention_failure_prob, write_error_rate};
+use crate::mram::variation::PtVariation;
+use crate::mram::write_driver::{PtmSample, WriteDriver};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// One sampled die at one operating temperature.
+#[derive(Debug, Clone, Copy)]
+pub struct DieSample {
+    /// Effective Δ at the sampled (process, temperature) point.
+    pub delta_eff: f64,
+    pub process_sigma: f64,
+    pub temperature: f64,
+}
+
+/// Aggregated Monte-Carlo results.
+#[derive(Debug, Clone)]
+pub struct McResult {
+    pub n: usize,
+    /// Fraction of samples whose retention-failure prob exceeds the budget.
+    pub retention_violations: f64,
+    /// Fraction of samples whose WER (at the design pulse/current) exceeds
+    /// the budget with a STATIC typical-sized driver.
+    pub write_violations_static: f64,
+    /// Same with the PTM-adjustable driver (Fig. 9).
+    pub write_violations_adjustable: f64,
+    /// Mean write energy per bit (J), static vs adjustable driver.
+    pub energy_static: f64,
+    pub energy_adjustable: f64,
+    /// Distribution summary of Δ_eff.
+    pub delta_mean: f64,
+    pub delta_std: f64,
+    pub delta_min: f64,
+    pub delta_max: f64,
+}
+
+/// The Monte-Carlo engine.
+pub struct MonteCarlo {
+    pub tech: MtjTech,
+    pub variation: PtVariation,
+    pub delta_guard_banded: f64,
+    pub overdrive: f64,
+    pub write_pulse: f64,
+    pub retention_time: f64,
+    pub retention_ber: f64,
+    pub write_ber: f64,
+}
+
+impl MonteCarlo {
+    /// Sample `n` (die, temperature) points.
+    pub fn sample(&self, rng: &mut Rng, n: usize) -> Vec<DieSample> {
+        (0..n)
+            .map(|_| {
+                let ps = rng.normal();
+                let t = rng.range_f64(self.variation.t_cold, self.variation.t_hot);
+                DieSample {
+                    delta_eff: self.variation.delta_at(self.delta_guard_banded, ps, t),
+                    process_sigma: ps,
+                    temperature: t,
+                }
+            })
+            .collect()
+    }
+
+    /// Run the full analysis.
+    pub fn run(&self, seed: u64, n: usize) -> McResult {
+        let mut rng = Rng::seed_from_u64(seed);
+        let samples = self.sample(&mut rng, n);
+
+        let ic_nominal = self.tech.params_at_delta(self.delta_guard_banded).critical_current();
+        let driver = WriteDriver::new(
+            self.variation,
+            self.delta_guard_banded,
+            self.overdrive,
+            ic_nominal,
+            4,
+            0.9,
+        );
+        // Static driver: typical-corner current, always.
+        let i_static = self.overdrive * ic_nominal;
+
+        let mut ret_viol = 0usize;
+        let mut wr_static = 0usize;
+        let mut wr_adj = 0usize;
+        let mut e_static = 0.0;
+        let mut e_adj = 0.0;
+        let deltas: Vec<f64> = samples.iter().map(|s| s.delta_eff).collect();
+
+        for s in &samples {
+            // Retention at the effective Δ.
+            let p_rf = retention_failure_prob(self.retention_time, self.tech.tau_ret, s.delta_eff);
+            if p_rf > self.retention_ber * 1.000_001 {
+                ret_viol += 1;
+            }
+            // Write with the static driver: I_c grows with Δ_eff, so the
+            // *effective* overdrive shrinks on cold/+σ dies.
+            let ic_eff = ic_nominal * s.delta_eff / self.delta_guard_banded;
+            let od_static = (i_static / ic_eff).max(1.000_001);
+            let wer_s = write_error_rate(self.write_pulse, self.tech.tau_w, s.delta_eff, od_static);
+            if wer_s > self.write_ber * 1.000_001 {
+                wr_static += 1;
+            }
+            e_static += i_static * 0.9 * self.write_pulse;
+            // Adjustable driver: the PTM picks legs to restore the overdrive.
+            let ptm = PtmSample { process_sigma: s.process_sigma, temperature: s.temperature };
+            match driver.legs_for(&ptm) {
+                Some(legs) => {
+                    let i_adj = driver.supplied_current(legs);
+                    let od_adj = (i_adj / ic_eff).max(1.000_001);
+                    let wer_a =
+                        write_error_rate(self.write_pulse, self.tech.tau_w, s.delta_eff, od_adj);
+                    if wer_a > self.write_ber * 1.000_001 {
+                        wr_adj += 1;
+                    }
+                    e_adj += i_adj * 0.9 * self.write_pulse;
+                }
+                None => {
+                    wr_adj += 1; // out-of-spec die (beyond the sized legs)
+                    e_adj += driver.config.max_current() * 0.9 * self.write_pulse;
+                }
+            }
+        }
+
+        let (dmin, dmax) = stats::min_max(&deltas).unwrap_or((0.0, 0.0));
+        McResult {
+            n,
+            retention_violations: ret_viol as f64 / n as f64,
+            write_violations_static: wr_static as f64 / n as f64,
+            write_violations_adjustable: wr_adj as f64 / n as f64,
+            energy_static: e_static / n as f64,
+            energy_adjustable: e_adj / n as f64,
+            delta_mean: stats::mean(&deltas),
+            delta_std: stats::std_dev(&deltas),
+            delta_min: dmin,
+            delta_max: dmax,
+        }
+    }
+
+    /// The paper's GLB design point, ready to run.
+    pub fn paper_glb() -> Self {
+        let tech = MtjTech::sakhare2020();
+        let v = PtVariation::paper();
+        let solver = crate::mram::scaling::ScalingSolver::with_variation(tech, v);
+        let d = solver.solve(&crate::mram::scaling::DesignTargets::global_buffer());
+        Self {
+            tech,
+            variation: v,
+            delta_guard_banded: d.delta_guard_banded,
+            overdrive: d.overdrive,
+            write_pulse: d.write_pulse,
+            retention_time: 3.0,
+            retention_ber: 1e-8,
+            write_ber: 1e-8,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn population_is_safe_at_paper_design() {
+        let mc = MonteCarlo::paper_glb();
+        let r = mc.run(0xD1E5, 20_000);
+        // ±4σ guard-band: essentially no retention violations in the bulk
+        // (beyond-4σ dies are ~6e-5 of the population).
+        assert!(r.retention_violations < 1e-3, "{}", r.retention_violations);
+        // The adjustable driver keeps write failures at the same level.
+        assert!(r.write_violations_adjustable < 2e-3, "{}", r.write_violations_adjustable);
+    }
+
+    #[test]
+    fn static_driver_fails_cold_dies() {
+        // The point of Fig. 9: a typical-sized static driver violates WER on
+        // the high-Δ (cold / +σ) part of the population.
+        let mc = MonteCarlo::paper_glb();
+        let r = mc.run(0xC01D, 20_000);
+        assert!(
+            r.write_violations_static > r.write_violations_adjustable,
+            "static {} vs adjustable {}",
+            r.write_violations_static,
+            r.write_violations_adjustable
+        );
+        assert!(r.write_violations_static > 0.05, "{}", r.write_violations_static);
+    }
+
+    #[test]
+    fn adjustable_driver_saves_energy_vs_worst_case() {
+        // Against a driver statically sized for Δ_PT_MAX, the PTM-adjusted
+        // one spends less average energy (it only boosts when needed).
+        let mc = MonteCarlo::paper_glb();
+        let r = mc.run(0xE4E7, 20_000);
+        let ic = mc.tech.params_at_delta(mc.delta_guard_banded).critical_current();
+        let worst_i =
+            mc.overdrive * ic * mc.variation.delta_pt_max(mc.delta_guard_banded) / mc.delta_guard_banded;
+        let e_worst = worst_i * 0.9 * mc.write_pulse;
+        assert!(r.energy_adjustable < e_worst, "{} vs {}", r.energy_adjustable, e_worst);
+        // And more than the bare typical driver (it does boost sometimes).
+        assert!(r.energy_adjustable > r.energy_static);
+    }
+
+    #[test]
+    fn delta_distribution_matches_model() {
+        let mc = MonteCarlo::paper_glb();
+        let r = mc.run(0xD157, 50_000);
+        // Mean Δ_eff sits between the hot and cold scalings of Δ_GB.
+        let lo = mc.delta_guard_banded * 300.0 / mc.variation.t_hot;
+        let hi = mc.delta_guard_banded * 300.0 / mc.variation.t_cold;
+        assert!(r.delta_mean > lo && r.delta_mean < hi, "{}", r.delta_mean);
+        assert!(r.delta_std > 0.0);
+        assert!(r.delta_min < r.delta_mean && r.delta_mean < r.delta_max);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let mc = MonteCarlo::paper_glb();
+        let a = mc.run(7, 2_000);
+        let b = mc.run(7, 2_000);
+        assert_eq!(a.retention_violations, b.retention_violations);
+        assert_eq!(a.energy_adjustable, b.energy_adjustable);
+    }
+}

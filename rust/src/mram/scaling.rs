@@ -1,0 +1,280 @@
+//! The Δ-scaling design solver of §IV.B.
+//!
+//! Given the application's data-occupancy time (from the accelerator
+//! occupancy model, `accel::timing`) and a BER budget (from the AI-accuracy
+//! analysis, Ares-style [25]), produce a complete customized STT-MRAM design
+//! point: scaled Δ, guard-banded Δ, write pulse, read pulse, and the relative
+//! latency/energy vs the 10-year base case. This is the engine behind
+//! Fig. 15 and Fig. 17.
+
+
+use super::mtj::MtjTech;
+use super::reliability::{
+    read_pulse_at_rd, retention_time_at_ber, write_pulse_at_wer,
+};
+use super::variation::{GuardBand, PtVariation};
+use crate::util::bisect;
+
+/// Reliability + lifetime targets for one memory bank.
+#[derive(Debug, Clone, Copy)]
+pub struct DesignTargets {
+    /// Required data retention time (s) — from the occupancy model for GLB
+    /// banks, or e.g. 3 years for the weight-storage NVM.
+    pub retention_time: f64,
+    /// Per-bit retention-failure budget over `retention_time`.
+    pub retention_ber: f64,
+    /// Per-read read-disturb budget.
+    pub read_disturb_ber: f64,
+    /// Per-write write-error budget.
+    pub write_ber: f64,
+}
+
+impl DesignTargets {
+    /// The paper's weight-storage NVM target: 3 years @ 1e-9 (Fig. 15a).
+    pub fn weight_nvm() -> Self {
+        Self {
+            retention_time: 3.0 * super::YEAR_S,
+            retention_ber: 1e-9,
+            read_disturb_ber: 1e-9,
+            write_ber: 1e-9,
+        }
+    }
+
+    /// The paper's GLB target: 3 s @ 1e-8 (Fig. 15b).
+    pub fn global_buffer() -> Self {
+        Self { retention_time: 3.0, retention_ber: 1e-8, read_disturb_ber: 1e-8, write_ber: 1e-8 }
+    }
+
+    /// The STT-AI Ultra LSB bank: relaxed 1e-5 BER (Fig. 17).
+    pub fn lsb_bank() -> Self {
+        Self { retention_time: 3.0, retention_ber: 1e-5, read_disturb_ber: 1e-5, write_ber: 1e-5 }
+    }
+}
+
+/// A fully-solved customized STT-MRAM design point.
+#[derive(Debug, Clone, Copy)]
+pub struct DeltaDesign {
+    /// Scaled thermal stability factor (pre guard-band), Δ_scaled.
+    pub delta_scaled: f64,
+    /// Guard-banded Δ the MTJ is actually built with (Eq. 17).
+    pub delta_guard_banded: f64,
+    /// Worst-case Δ at cold + fast corner (Eq. 18).
+    pub delta_pt_max: f64,
+    /// Write pulse width (s) meeting the WER target at `delta_guard_banded`.
+    pub write_pulse: f64,
+    /// Read pulse width (s) meeting the RD target at `delta_guard_banded`.
+    pub read_pulse: f64,
+    /// Write-current overdrive ratio I_w/I_c used.
+    pub overdrive: f64,
+    /// Achieved retention time at the retention-BER target (s).
+    pub achieved_retention: f64,
+    /// Relative write energy vs the Δ-base design (∝ I_w²·t_w with I_c ∝ Δ).
+    pub rel_write_energy: f64,
+    /// Relative read energy vs the Δ-base design (∝ I_r·t_r with I_r ∝ I_c ∝ Δ).
+    pub rel_read_energy: f64,
+    /// Relative bit-cell area vs the Δ-base design (MTJ volume ∝ Δ; the cell
+    /// is access-transistor-limited, so area shrinks sub-linearly).
+    pub rel_cell_area: f64,
+}
+
+/// Solver tying the reliability equations together.
+#[derive(Debug, Clone, Copy)]
+pub struct ScalingSolver {
+    pub tech: MtjTech,
+    pub variation: PtVariation,
+}
+
+impl ScalingSolver {
+    pub fn new(tech: MtjTech) -> Self {
+        Self { tech, variation: PtVariation::paper() }
+    }
+
+    pub fn with_variation(tech: MtjTech, variation: PtVariation) -> Self {
+        Self { tech, variation }
+    }
+
+    /// Minimum Δ whose retention at the BER budget covers `targets.retention_time`.
+    ///
+    /// Closed form from Eq. 14: Δ = ln( t / (τ · (−ln(1−ber))) ).
+    pub fn delta_for_retention(&self, targets: &DesignTargets) -> f64 {
+        let lhs = -(-targets.retention_ber).ln_1p();
+        (targets.retention_time / (self.tech.tau_ret * lhs)).ln()
+    }
+
+    /// Solve the complete design point for the given targets.
+    ///
+    /// Procedure (§IV.B–C):
+    /// 1. Δ_scaled from the retention requirement (Eq. 14 inverse).
+    /// 2. Guard-band for 4σ process + hot temperature (Eq. 17) and compute
+    ///    the cold/fast worst case (Eq. 18).
+    /// 3. Write pulse from Eq. 16 inverse at the *guard-banded* Δ (write must
+    ///    succeed on every die), keeping the base overdrive ("keep I_w high"
+    ///    trick of [18] to preserve write speed at scaled Δ).
+    /// 4. Read pulse from Eq. 15 inverse at Δ_scaled at the *hot* corner
+    ///    (disturb is worst where Δ is smallest).
+    /// 5. Relative energies/area vs the base case: I_c ∝ Δ (Eq. 13).
+    pub fn solve(&self, targets: &DesignTargets) -> DeltaDesign {
+        let delta_scaled = self.delta_for_retention(targets);
+        let gb: GuardBand = self.variation.guard_band(delta_scaled);
+
+        let overdrive = self.tech.overdrive_base;
+        // Write designed at the highest Δ any in-spec die can show (cold+4σ):
+        // that is exactly why the write driver is adjustable (Fig. 9).
+        let write_pulse =
+            write_pulse_at_wer(targets.write_ber, self.tech.tau_w, gb.delta_pt_max, overdrive);
+        // Read disturb worst case: minimum Δ (hot, −4σ) = Δ_scaled by Eq. 17.
+        let read_pulse =
+            read_pulse_at_rd(targets.read_disturb_ber, self.tech.tau_rd, delta_scaled, self.tech.read_ratio);
+
+        let base = self.base_point();
+        // I_c ∝ Δ ⇒ write current ∝ Δ at fixed overdrive; E_w ∝ I_w²·t_w.
+        let rel_write_energy = (gb.delta_guard_banded / base.0).powi(2) * write_pulse / base.1;
+        // Read: E_r ∝ I_r·t_r·V ≈ ∝ Δ·t_r.
+        let rel_read_energy = (gb.delta_guard_banded / base.0) * read_pulse / base.2;
+        // Cell area: MTJ area ∝ Δ^(2/3) at fixed thickness-class; the 1T cell
+        // is transistor-dominated, and the smaller I_c also shrinks the
+        // required access-transistor width (W ∝ I_w ∝ Δ). Net: ∝ Δ^0.8 is the
+        // fit used against the paper's "smaller Δ ⇒ denser cell" claim.
+        let rel_cell_area = (gb.delta_guard_banded / base.0).powf(0.8);
+
+        DeltaDesign {
+            delta_scaled,
+            delta_guard_banded: gb.delta_guard_banded,
+            delta_pt_max: gb.delta_pt_max,
+            write_pulse,
+            read_pulse,
+            overdrive,
+            achieved_retention: retention_time_at_ber(
+                self.tech.tau_ret,
+                delta_scaled,
+                targets.retention_ber,
+            ),
+            rel_write_energy,
+            rel_read_energy,
+            rel_cell_area,
+        }
+    }
+
+    /// (Δ_base_guardbanded_equivalent, t_w_base, t_r_base) of the 10-year base case.
+    fn base_point(&self) -> (f64, f64, f64) {
+        (self.tech.delta_base, self.tech.write_latency_base, self.tech.read_latency_base)
+    }
+
+    /// Fig. 15(b)-style sweep: retention time at BER target vs Δ.
+    pub fn retention_vs_delta(&self, ber: f64, deltas: &[f64]) -> Vec<(f64, f64)> {
+        deltas.iter().map(|&d| (d, retention_time_at_ber(self.tech.tau_ret, d, ber))).collect()
+    }
+
+    /// Fig. 15(c,d)-style sweep: read pulse at RD target vs Δ.
+    pub fn read_pulse_vs_delta(&self, rd_ber: f64, deltas: &[f64]) -> Vec<(f64, f64)> {
+        deltas
+            .iter()
+            .map(|&d| (d, read_pulse_at_rd(rd_ber, self.tech.tau_rd, d, self.tech.read_ratio)))
+            .collect()
+    }
+
+    /// Fig. 15(e,f)-style sweep: write pulse at WER target vs Δ.
+    pub fn write_pulse_vs_delta(&self, wer: f64, deltas: &[f64]) -> Vec<(f64, f64)> {
+        deltas
+            .iter()
+            .map(|&d| {
+                (d, write_pulse_at_wer(wer, self.tech.tau_w, d, self.tech.overdrive_base))
+            })
+            .collect()
+    }
+
+    /// Overdrive required to hit a write pulse budget at given Δ (the "I_w as
+    /// another knob" of §IV.B) — solved numerically from Eq. 16.
+    pub fn overdrive_for_write_pulse(&self, wer: f64, delta: f64, t_w: f64) -> Option<f64> {
+        bisect(1.0 + 1e-6, 50.0, 1e-9, |i| {
+            write_pulse_at_wer(wer, self.tech.tau_w, delta, i) - t_w
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn solver() -> ScalingSolver {
+        ScalingSolver::new(MtjTech::sakhare2020())
+    }
+
+    #[test]
+    fn paper_design_points() {
+        let s = solver();
+        // Fig. 15(a): weight NVM, 3 yr @ 1e-9 → Δ ≈ 39.
+        let d = s.delta_for_retention(&DesignTargets::weight_nvm());
+        assert!((d - 39.0).abs() < 1.0, "delta={d}");
+        // Fig. 15(b): GLB, 3 s @ 1e-8 → Δ ≈ 19.5.
+        let d = s.delta_for_retention(&DesignTargets::global_buffer());
+        assert!((d - 19.5).abs() < 1.0, "delta={d}");
+        // Fig. 17: LSB bank @ 1e-5 → Δ ≈ 12.5.
+        let d = s.delta_for_retention(&DesignTargets::lsb_bank());
+        assert!((d - 12.5).abs() < 1.0, "delta={d}");
+    }
+
+    #[test]
+    fn guard_band_matches_paper() {
+        let s = solver();
+        let sol = s.solve(&DesignTargets::global_buffer());
+        // Paper: Δ=19.5 guard-bands to Δ_PT_GB = 27.5 (±1.5 tolerance here).
+        assert!((sol.delta_guard_banded - 27.5).abs() < 1.5, "gb={}", sol.delta_guard_banded);
+        assert!(sol.delta_pt_max > sol.delta_guard_banded);
+        let nvm = s.solve(&DesignTargets::weight_nvm());
+        // Paper: Δ=39 → Δ_PT_GB = 55.
+        assert!((nvm.delta_guard_banded - 55.0).abs() < 2.5, "gb={}", nvm.delta_guard_banded);
+    }
+
+    #[test]
+    fn scaled_design_is_faster_and_cheaper() {
+        let s = solver();
+        let glb = s.solve(&DesignTargets::global_buffer());
+        let nvm = s.solve(&DesignTargets::weight_nvm());
+        assert!(glb.write_pulse < nvm.write_pulse);
+        assert!(glb.read_pulse < nvm.read_pulse);
+        assert!(glb.rel_write_energy < 1.0, "write energy should shrink vs base");
+        assert!(glb.rel_cell_area < 1.0);
+        assert!(glb.rel_cell_area < nvm.rel_cell_area);
+        // Achieved retention covers the requirement.
+        assert!(glb.achieved_retention >= 3.0 * 0.99);
+    }
+
+    #[test]
+    fn lsb_bank_cheaper_than_msb_bank() {
+        let s = solver();
+        let msb = s.solve(&DesignTargets::global_buffer());
+        let lsb = s.solve(&DesignTargets::lsb_bank());
+        assert!(lsb.delta_guard_banded < msb.delta_guard_banded);
+        assert!(lsb.rel_write_energy < msb.rel_write_energy);
+        assert!(lsb.rel_cell_area < msb.rel_cell_area);
+        // Paper: Δ_PT_GB = 17.5 for the LSB bank.
+        assert!((lsb.delta_guard_banded - 17.5).abs() < 1.5, "gb={}", lsb.delta_guard_banded);
+    }
+
+    #[test]
+    fn sweeps_are_monotone() {
+        let s = solver();
+        let deltas: Vec<f64> = (10..=60).map(|d| d as f64).collect();
+        let ret = s.retention_vs_delta(1e-8, &deltas);
+        assert!(ret.windows(2).all(|w| w[1].1 > w[0].1));
+        let rp = s.read_pulse_vs_delta(1e-8, &deltas);
+        assert!(rp.windows(2).all(|w| w[1].1 > w[0].1));
+        let wp = s.write_pulse_vs_delta(1e-9, &deltas);
+        assert!(wp.windows(2).all(|w| w[1].1 >= w[0].1));
+    }
+
+    #[test]
+    fn overdrive_knob_recovers_speed() {
+        let s = solver();
+        // At Δ=27.5, find the overdrive that brings the write pulse to 10ns.
+        let i = s.overdrive_for_write_pulse(1e-8, 27.5, 10e-9).unwrap();
+        assert!(i > 1.0);
+        let t = super::write_pulse_at_wer(1e-8, s.tech.tau_w, 27.5, i);
+        assert!((t - 10e-9).abs() / 10e-9 < 1e-3);
+        // Retention prob of the solved GLB design actually meets budget.
+        let sol = s.solve(&DesignTargets::global_buffer());
+        let p = crate::mram::retention_failure_prob(3.0, s.tech.tau_ret, sol.delta_scaled);
+        assert!(p <= 1e-8 * 1.01);
+    }
+}

@@ -1,0 +1,171 @@
+//! Process and temperature (PT) variation handling: Eq. 17–18, Fig. 7–8.
+//!
+//! Δ varies with process (MTJ diameter, H_K — chip-to-chip dominated, σ =
+//! 2.1% of mean from the silicon data of [6]) and with runtime temperature
+//! (Δ ∝ 1/T, Eq. 12). The design recipe:
+//!
+//! * build the MTJ with Δ_PT_GuardBanded such that even a −4σ die at T_hot
+//!   still shows at least Δ_scaled (Eq. 17) — protecting retention;
+//! * size the write path for Δ_PT_MAX, the +4σ die at T_cold (Eq. 18) —
+//!   protecting WER; the adjustable write driver (Fig. 9) supplies that
+//!   current only when the PTM says it is needed.
+
+
+/// PT variation model parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct PtVariation {
+    /// Fractional process σ of Δ (chip-to-chip), e.g. 0.021 from [6].
+    pub sigma_frac: f64,
+    /// Number of σ to guard (paper: 4σ → 99.993% of samples).
+    pub n_sigma: f64,
+    /// Nominal temperature (K).
+    pub t_nom: f64,
+    /// Hot corner (K). Paper: 120 °C = 393 K.
+    pub t_hot: f64,
+    /// Cold corner (K). Paper: −20 °C = 253 K.
+    pub t_cold: f64,
+}
+
+impl PtVariation {
+    /// The paper's §V.C settings.
+    pub fn paper() -> Self {
+        Self { sigma_frac: 0.021, n_sigma: 4.0, t_nom: 300.0, t_hot: 393.0, t_cold: 253.0 }
+    }
+
+    /// No-variation model (for ablation benches).
+    pub fn none() -> Self {
+        Self { sigma_frac: 0.0, n_sigma: 0.0, t_nom: 300.0, t_hot: 300.0, t_cold: 300.0 }
+    }
+
+    /// Eq. 17 solved for Δ_PT_GuardBanded:
+    /// Δ_scaled ≤ (Δ_GB − nσ)·(T_nom/T_hot), σ = sigma_frac·Δ_GB
+    /// ⇒ Δ_GB = Δ_scaled·(T_hot/T_nom) / (1 − n·sigma_frac).
+    pub fn guard_band(&self, delta_scaled: f64) -> GuardBand {
+        let denom = 1.0 - self.n_sigma * self.sigma_frac;
+        assert!(denom > 0.0, "guard-band fraction too large");
+        let delta_gb = delta_scaled * (self.t_hot / self.t_nom) / denom;
+        GuardBand {
+            delta_scaled,
+            delta_guard_banded: delta_gb,
+            delta_pt_max: self.delta_pt_max(delta_gb),
+        }
+    }
+
+    /// Eq. 18: Δ_PT_MAX = (Δ_GB + nσ)·(T_nom/T_cold).
+    pub fn delta_pt_max(&self, delta_guard_banded: f64) -> f64 {
+        (delta_guard_banded * (1.0 + self.n_sigma * self.sigma_frac)) * (self.t_nom / self.t_cold)
+    }
+
+    /// Δ of a die at process offset `n_sigma_proc`·σ and temperature `t` (K),
+    /// for Monte-Carlo-style corner sampling (Fig. 8).
+    pub fn delta_at(&self, delta_guard_banded: f64, n_sigma_proc: f64, t: f64) -> f64 {
+        delta_guard_banded * (1.0 + n_sigma_proc * self.sigma_frac) * (self.t_nom / t)
+    }
+
+    /// Fraction of dies covered by the ±nσ guard (two-sided normal), via an
+    /// erf-free Abramowitz–Stegun approximation — good to ~1e-7 which is
+    /// plenty for reporting "99.993%".
+    pub fn coverage(&self) -> f64 {
+        let x = self.n_sigma / std::f64::consts::SQRT_2;
+        // A&S 7.1.26 erf approximation.
+        let t = 1.0 / (1.0 + 0.327_591_1 * x);
+        let poly = t
+            * (0.254_829_592 + t * (-0.284_496_736 + t * (1.421_413_741 + t * (-1.453_152_027 + t * 1.061_405_429))));
+        let erf = 1.0 - poly * (-x * x).exp();
+        erf
+    }
+}
+
+/// Output of the Eq. 17–18 guard-banding.
+#[derive(Debug, Clone, Copy)]
+pub struct GuardBand {
+    pub delta_scaled: f64,
+    pub delta_guard_banded: f64,
+    pub delta_pt_max: f64,
+}
+
+/// A named PT corner for corner-sweep benches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PtCorner {
+    /// Nominal process, nominal temperature.
+    Typical,
+    /// −nσ process at T_hot — minimum Δ: retention/read-disturb worst case.
+    HotSlow,
+    /// +nσ process at T_cold — maximum Δ: write worst case.
+    ColdFast,
+}
+
+impl PtCorner {
+    pub const ALL: [PtCorner; 3] = [PtCorner::Typical, PtCorner::HotSlow, PtCorner::ColdFast];
+
+    /// Effective Δ of a guard-banded design at this corner.
+    pub fn delta(&self, v: &PtVariation, delta_guard_banded: f64) -> f64 {
+        match self {
+            PtCorner::Typical => v.delta_at(delta_guard_banded, 0.0, v.t_nom),
+            PtCorner::HotSlow => v.delta_at(delta_guard_banded, -v.n_sigma, v.t_hot),
+            PtCorner::ColdFast => v.delta_at(delta_guard_banded, v.n_sigma, v.t_cold),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guard_band_reproduces_paper_values() {
+        let v = PtVariation::paper();
+        // Δ=19.5 → Δ_PT_GB ≈ 27.5 (paper §V.C).
+        let gb = v.guard_band(19.5);
+        assert!((gb.delta_guard_banded - 27.5).abs() < 1.5, "{}", gb.delta_guard_banded);
+        // Δ=39 → Δ_PT_GB ≈ 55.
+        let gb = v.guard_band(39.0);
+        assert!((gb.delta_guard_banded - 55.0).abs() < 2.0, "{}", gb.delta_guard_banded);
+        // Δ=12.5 → Δ_PT_GB ≈ 17.5.
+        let gb = v.guard_band(12.5);
+        assert!((gb.delta_guard_banded - 17.5).abs() < 1.0, "{}", gb.delta_guard_banded);
+    }
+
+    #[test]
+    fn hot_slow_corner_recovers_delta_scaled() {
+        // By construction the −4σ die at T_hot shows exactly Δ_scaled.
+        let v = PtVariation::paper();
+        let gb = v.guard_band(19.5);
+        let worst = PtCorner::HotSlow.delta(&v, gb.delta_guard_banded);
+        assert!((worst - 19.5).abs() < 1e-9, "worst={worst}");
+    }
+
+    #[test]
+    fn cold_fast_corner_is_pt_max() {
+        let v = PtVariation::paper();
+        let gb = v.guard_band(19.5);
+        let max = PtCorner::ColdFast.delta(&v, gb.delta_guard_banded);
+        assert!((max - gb.delta_pt_max).abs() < 1e-9);
+        assert!(max > gb.delta_guard_banded);
+    }
+
+    #[test]
+    fn no_variation_is_identity() {
+        let v = PtVariation::none();
+        let gb = v.guard_band(19.5);
+        assert!((gb.delta_guard_banded - 19.5).abs() < 1e-12);
+        assert!((gb.delta_pt_max - 19.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coverage_of_4_sigma() {
+        let v = PtVariation::paper();
+        let c = v.coverage();
+        assert!((c - 0.99993).abs() < 1e-4, "coverage={c}");
+    }
+
+    #[test]
+    fn corners_ordered() {
+        let v = PtVariation::paper();
+        let gb = v.guard_band(30.0);
+        let d_hot = PtCorner::HotSlow.delta(&v, gb.delta_guard_banded);
+        let d_typ = PtCorner::Typical.delta(&v, gb.delta_guard_banded);
+        let d_cold = PtCorner::ColdFast.delta(&v, gb.delta_guard_banded);
+        assert!(d_hot < d_typ && d_typ < d_cold);
+    }
+}

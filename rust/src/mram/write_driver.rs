@@ -1,0 +1,194 @@
+//! The dynamically adjustable write driver of Fig. 9 with its
+//! Process-and-Temperature Monitor (PTM) control loop.
+//!
+//! The driver has a base PMOS leg sized for the typical corner plus `n_legs`
+//! additional legs that the PTM switches in when the sensed (process,
+//! temperature) point implies a higher required write current (Δ rises at
+//! cold / +σ, and I_c ∝ Δ, Eq. 13). Designing the *base* driver for the worst
+//! case would burn write power on every non-worst-case die — the point of the
+//! paper's Fig. 9 circuit is to pay for that current only when needed.
+
+
+use super::variation::PtVariation;
+
+/// Static configuration of the adjustable write driver.
+#[derive(Debug, Clone, Copy)]
+pub struct WriteDriverConfig {
+    /// Write current (A) of the base leg, sized for the typical corner.
+    pub base_current: f64,
+    /// Number of additional PMOS legs.
+    pub n_legs: u32,
+    /// Current added per extra leg (A).
+    pub leg_current: f64,
+    /// Supply voltage (V), for energy accounting.
+    pub vdd: f64,
+}
+
+impl WriteDriverConfig {
+    /// Size the driver for a guard-banded design: base leg covers the typical
+    /// corner, legs together cover Δ_PT_MAX, split evenly.
+    pub fn sized_for(
+        typical_current: f64,
+        worst_case_current: f64,
+        n_legs: u32,
+        vdd: f64,
+    ) -> Self {
+        assert!(worst_case_current >= typical_current);
+        let extra = worst_case_current - typical_current;
+        let leg_current = if n_legs == 0 { 0.0 } else { extra / n_legs as f64 };
+        Self { base_current: typical_current, n_legs, leg_current, vdd }
+    }
+
+    /// Maximum current with all legs on.
+    pub fn max_current(&self) -> f64 {
+        self.base_current + self.n_legs as f64 * self.leg_current
+    }
+}
+
+/// One PTM observation: die process offset (in σ) and junction temperature.
+#[derive(Debug, Clone, Copy)]
+pub struct PtmSample {
+    pub process_sigma: f64,
+    pub temperature: f64,
+}
+
+/// The runtime write driver: PTM sample in, leg setting + current out.
+#[derive(Debug, Clone)]
+pub struct WriteDriver {
+    pub config: WriteDriverConfig,
+    pub variation: PtVariation,
+    /// Guard-banded design Δ (nominal, at T_nom).
+    pub delta_guard_banded: f64,
+    /// Required overdrive I_w/I_c.
+    pub overdrive: f64,
+    /// I_c at (Δ = delta_guard_banded, T_nom), the current-scale anchor.
+    pub ic_nominal: f64,
+}
+
+impl WriteDriver {
+    pub fn new(
+        variation: PtVariation,
+        delta_guard_banded: f64,
+        overdrive: f64,
+        ic_nominal: f64,
+        n_legs: u32,
+        vdd: f64,
+    ) -> Self {
+        let typical = overdrive * ic_nominal;
+        let worst_delta = variation.delta_pt_max(delta_guard_banded);
+        let worst = overdrive * ic_nominal * worst_delta / delta_guard_banded;
+        Self {
+            config: WriteDriverConfig::sized_for(typical, worst, n_legs, vdd),
+            variation,
+            delta_guard_banded,
+            overdrive,
+            ic_nominal,
+        }
+    }
+
+    /// Required write current at the sensed corner: I_w = overdrive · I_c(Δ_eff),
+    /// with Δ_eff from the PT model and I_c ∝ Δ (Eq. 13).
+    pub fn required_current(&self, s: &PtmSample) -> f64 {
+        let delta_eff =
+            self.variation.delta_at(self.delta_guard_banded, s.process_sigma, s.temperature);
+        self.overdrive * self.ic_nominal * delta_eff / self.delta_guard_banded
+    }
+
+    /// PTM decision: how many extra legs to enable for this sample.
+    /// Returns `None` if even all legs cannot supply the required current
+    /// (out-of-spec die — a write-failure corner, Fig. 8's tail).
+    pub fn legs_for(&self, s: &PtmSample) -> Option<u32> {
+        let need = self.required_current(s);
+        if need <= self.config.base_current {
+            return Some(0);
+        }
+        if self.config.leg_current <= 0.0 {
+            return None;
+        }
+        let extra = need - self.config.base_current;
+        let legs = (extra / self.config.leg_current).ceil() as u32;
+        (legs <= self.config.n_legs).then_some(legs)
+    }
+
+    /// Supplied current with `legs` extra legs on.
+    pub fn supplied_current(&self, legs: u32) -> f64 {
+        self.config.base_current + legs.min(self.config.n_legs) as f64 * self.config.leg_current
+    }
+
+    /// Write energy per bit for this sample: E = I_w(supplied) · V_dd · t_w.
+    pub fn write_energy(&self, s: &PtmSample, t_w: f64) -> Option<f64> {
+        let legs = self.legs_for(s)?;
+        Some(self.supplied_current(legs) * self.config.vdd * t_w)
+    }
+
+    /// Energy saved at the typical corner vs a statically worst-case-sized
+    /// driver — the benefit the Fig. 9 circuit exists to harvest.
+    pub fn typical_saving_fraction(&self, t_w: f64) -> f64 {
+        let typ = PtmSample { process_sigma: 0.0, temperature: self.variation.t_nom };
+        let e_dyn = self.write_energy(&typ, t_w).unwrap();
+        let e_static = self.config.max_current() * self.config.vdd * t_w;
+        1.0 - e_dyn / e_static
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn driver() -> WriteDriver {
+        WriteDriver::new(PtVariation::paper(), 27.5, 2.0, 40e-6, 4, 0.9)
+    }
+
+    #[test]
+    fn typical_corner_uses_no_extra_legs() {
+        let d = driver();
+        let s = PtmSample { process_sigma: 0.0, temperature: 300.0 };
+        assert_eq!(d.legs_for(&s), Some(0));
+    }
+
+    #[test]
+    fn cold_fast_corner_uses_all_legs() {
+        let d = driver();
+        let s = PtmSample { process_sigma: 4.0, temperature: 253.0 };
+        let legs = d.legs_for(&s).expect("worst case must be coverable by sizing");
+        assert_eq!(legs, d.config.n_legs);
+        // Supplied covers required.
+        assert!(d.supplied_current(legs) >= d.required_current(&s) * 0.999_999);
+    }
+
+    #[test]
+    fn out_of_spec_die_detected() {
+        let d = driver();
+        // 6σ at an even colder temperature than the design corner.
+        let s = PtmSample { process_sigma: 6.0, temperature: 233.0 };
+        assert_eq!(d.legs_for(&s), None);
+    }
+
+    #[test]
+    fn legs_monotone_in_severity() {
+        let d = driver();
+        let mut last = 0;
+        for (sig, t) in [(0.0, 300.0), (1.0, 280.0), (2.0, 270.0), (3.0, 260.0), (4.0, 253.0)] {
+            let legs = d.legs_for(&PtmSample { process_sigma: sig, temperature: t }).unwrap();
+            assert!(legs >= last, "legs must not decrease with worsening corner");
+            last = legs;
+        }
+    }
+
+    #[test]
+    fn dynamic_driver_saves_energy_at_typical() {
+        let d = driver();
+        let saving = d.typical_saving_fraction(10e-9);
+        // Δ_PT_MAX/Δ_GB ≈ 1.28 ⇒ ~22% saving at the typical corner.
+        assert!(saving > 0.1 && saving < 0.5, "saving={saving}");
+    }
+
+    #[test]
+    fn write_energy_scale() {
+        let d = driver();
+        let s = PtmSample { process_sigma: 0.0, temperature: 300.0 };
+        let e = d.write_energy(&s, 10e-9).unwrap();
+        // 80uA · 0.9V · 10ns ≈ 0.72 pJ/bit — the right order for STT-MRAM.
+        assert!(e > 0.1e-12 && e < 10e-12, "e={e}");
+    }
+}

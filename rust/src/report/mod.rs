@@ -1,0 +1,11 @@
+//! Figure/table renderers: each function prints the same rows/series the
+//! paper reports, consuming the `dse` sweep outputs. Used by the CLI
+//! (`stt-ai figures`) and by the criterion benches.
+
+pub mod export;
+pub mod figures;
+pub mod table3;
+
+pub use export::export_all;
+pub use figures::*;
+pub use table3::{AcceleratorSummary, CoreCosts, table3_rows};

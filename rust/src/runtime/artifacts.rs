@@ -1,0 +1,245 @@
+//! Artifact manifest: what `python/compile/aot.py` emits and the Rust side
+//! consumes. All binary tensors are little-endian f32, row-major.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context};
+
+use crate::util::json::Json;
+
+/// One parameter tensor of the model, in call order.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<i64>,
+    /// Element offset into the flat weights file.
+    pub offset: u64,
+}
+
+impl ParamSpec {
+    pub fn elems(&self) -> u64 {
+        self.shape.iter().product::<i64>() as u64
+    }
+}
+
+/// One compiled model variant (one executable per batch size).
+#[derive(Debug, Clone)]
+pub struct ModelArtifact {
+    /// HLO text file, relative to the manifest directory.
+    pub hlo: String,
+    pub batch: usize,
+    /// Input image shape (excluding batch): [ch, h, w].
+    pub input_shape: Vec<i64>,
+    pub num_classes: usize,
+    pub params: Vec<ParamSpec>,
+}
+
+/// The held-out evaluation set.
+#[derive(Debug, Clone)]
+pub struct TestSet {
+    pub images: String,
+    pub labels: String,
+    pub n: usize,
+    pub image_shape: Vec<i64>,
+}
+
+/// Top-level manifest (artifacts/manifest.json).
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    /// Model variants keyed by name (e.g. "tinycnn_b1", "tinycnn_b16").
+    pub models: std::collections::BTreeMap<String, ModelArtifact>,
+    /// Flat f32 weights file shared by all variants.
+    pub weights: String,
+    pub testset: TestSet,
+    /// Training metadata recorded by train.py (final loss etc.).
+    pub train_meta: Json,
+    pub dir: PathBuf,
+}
+
+fn shape_of(j: &Json, key: &str) -> crate::Result<Vec<i64>> {
+    Ok(j.req_arr(key)
+        .map_err(anyhow::Error::from)?
+        .iter()
+        .map(|x| x.as_i64().context("shape entry not an int"))
+        .collect::<Result<Vec<i64>, _>>()?)
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: &Path) -> crate::Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(anyhow::Error::from)?;
+
+        let mut models = std::collections::BTreeMap::new();
+        for (name, m) in j.req("models").map_err(anyhow::Error::from)?.as_obj().context("models not an object")? {
+            let mut params = Vec::new();
+            for p in m.req_arr("params").map_err(anyhow::Error::from)? {
+                params.push(ParamSpec {
+                    name: p.req_str("name").map_err(anyhow::Error::from)?.to_string(),
+                    shape: shape_of(p, "shape")?,
+                    offset: p.req_u64("offset").map_err(anyhow::Error::from)?,
+                });
+            }
+            models.insert(
+                name.clone(),
+                ModelArtifact {
+                    hlo: m.req_str("hlo").map_err(anyhow::Error::from)?.to_string(),
+                    batch: m.req_u64("batch").map_err(anyhow::Error::from)? as usize,
+                    input_shape: shape_of(m, "input_shape")?,
+                    num_classes: m.req_u64("num_classes").map_err(anyhow::Error::from)? as usize,
+                    params,
+                },
+            );
+        }
+        let ts = j.req("testset").map_err(anyhow::Error::from)?;
+        let testset = TestSet {
+            images: ts.req_str("images").map_err(anyhow::Error::from)?.to_string(),
+            labels: ts.req_str("labels").map_err(anyhow::Error::from)?.to_string(),
+            n: ts.req_u64("n").map_err(anyhow::Error::from)? as usize,
+            image_shape: shape_of(ts, "image_shape")?,
+        };
+        Ok(ArtifactManifest {
+            models,
+            weights: j.req_str("weights").map_err(anyhow::Error::from)?.to_string(),
+            testset,
+            train_meta: j.get("train_meta").cloned().unwrap_or(Json::Null),
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> crate::Result<&ModelArtifact> {
+        self.models.get(name).with_context(|| {
+            format!("model {name:?} not in manifest (have: {:?})", self.models.keys())
+        })
+    }
+
+    /// Pick the variant compiled for `batch`.
+    pub fn model_for_batch(&self, batch: usize) -> crate::Result<(&String, &ModelArtifact)> {
+        self.models
+            .iter()
+            .find(|(_, m)| m.batch == batch)
+            .with_context(|| format!("no variant compiled for batch {batch}"))
+    }
+
+    pub fn hlo_path(&self, m: &ModelArtifact) -> PathBuf {
+        self.dir.join(&m.hlo)
+    }
+
+    pub fn load_weights(&self) -> crate::Result<Weights> {
+        Weights::load(&self.dir.join(&self.weights))
+    }
+
+    pub fn load_testset(&self) -> crate::Result<(Vec<f32>, Vec<i64>)> {
+        let imgs = read_f32(&self.dir.join(&self.testset.images))?;
+        let labels_f = read_f32(&self.dir.join(&self.testset.labels))?;
+        let per_image: i64 = self.testset.image_shape.iter().product();
+        if imgs.len() as i64 != per_image * self.testset.n as i64 {
+            bail!(
+                "test image file size mismatch: {} elems, want {}",
+                imgs.len(),
+                per_image * self.testset.n as i64
+            );
+        }
+        Ok((imgs, labels_f.iter().map(|&x| x as i64).collect()))
+    }
+}
+
+/// Flat f32 weights blob.
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub data: Vec<f32>,
+}
+
+impl Weights {
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        Ok(Self { data: read_f32(path)? })
+    }
+
+    /// Slice out one parameter tensor.
+    pub fn param(&self, spec: &ParamSpec) -> crate::Result<&[f32]> {
+        let start = spec.offset as usize;
+        let end = start + spec.elems() as usize;
+        if end > self.data.len() {
+            bail!("param {} [{start}..{end}) out of range ({})", spec.name, self.data.len());
+        }
+        Ok(&self.data[start..end])
+    }
+
+    /// Mutable slice (the BER injector writes through this).
+    pub fn param_mut(&mut self, spec: &ParamSpec) -> crate::Result<&mut [f32]> {
+        let start = spec.offset as usize;
+        let end = start + spec.elems() as usize;
+        if end > self.data.len() {
+            bail!("param {} [{start}..{end}) out of range ({})", spec.name, self.data.len());
+        }
+        Ok(&mut self.data[start..end])
+    }
+}
+
+fn read_f32(path: &Path) -> crate::Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{path:?}: length {} not a multiple of 4", bytes.len());
+    }
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_spec_elems() {
+        let p = ParamSpec { name: "w".into(), shape: vec![8, 3, 3, 3], offset: 0 };
+        assert_eq!(p.elems(), 216);
+    }
+
+    #[test]
+    fn weights_slicing_and_bounds() {
+        let w = Weights { data: (0..10).map(|i| i as f32).collect() };
+        let p = ParamSpec { name: "a".into(), shape: vec![2, 2], offset: 2 };
+        assert_eq!(w.param(&p).unwrap(), &[2.0, 3.0, 4.0, 5.0]);
+        let bad = ParamSpec { name: "b".into(), shape: vec![4], offset: 8 };
+        assert!(w.param(&bad).is_err());
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let dir = std::env::temp_dir().join("stt_ai_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{
+            "models": {
+                "m_b1": {
+                    "hlo": "m.hlo.txt",
+                    "batch": 1,
+                    "input_shape": [1, 16, 16],
+                    "num_classes": 10,
+                    "params": [{"name": "w", "shape": [4], "offset": 0}]
+                }
+            },
+            "weights": "w.bin",
+            "testset": {"images": "x.bin", "labels": "y.bin", "n": 2, "image_shape": [1, 16, 16]}
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert!(m.model("m_b1").is_ok());
+        assert!(m.model("nope").is_err());
+        let (_, v) = m.model_for_batch(1).unwrap();
+        assert_eq!(v.num_classes, 10);
+        assert!(m.model_for_batch(99).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn read_f32_le() {
+        let dir = std::env::temp_dir().join("stt_ai_readf32_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        std::fs::write(&p, 1.5f32.to_le_bytes()).unwrap();
+        assert_eq!(read_f32(&p).unwrap(), vec![1.5]);
+        std::fs::write(&p, [0u8; 3]).unwrap();
+        assert!(read_f32(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

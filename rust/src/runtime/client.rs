@@ -1,0 +1,141 @@
+//! PJRT client wrapper: HLO text → compiled executable → typed execution.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. The lowered modules return a 1-tuple
+//! (`return_tuple=True` at lowering), unwrapped with `to_tuple1`.
+
+use std::path::Path;
+
+use anyhow::Context;
+
+use super::artifacts::{ModelArtifact, Weights};
+
+/// The PJRT CPU client. One per process; cheap to share by reference.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> crate::Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu().context("creating PJRT CPU client")? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load and compile an HLO-text artifact.
+    pub fn load_hlo(&self, path: &Path) -> crate::Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {path:?}"))?;
+        Ok(Executable { exe })
+    }
+
+    /// Load a model artifact and bind its parameter layout.
+    pub fn load_model(&self, manifest_dir: &Path, art: &ModelArtifact) -> crate::Result<LoadedModel> {
+        let exe = self.load_hlo(&manifest_dir.join(&art.hlo))?;
+        Ok(LoadedModel { exe, art: art.clone() })
+    }
+}
+
+/// A compiled executable.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened f32 output of the
+    /// 1-tuple result.
+    pub fn run_f32(&self, inputs: &[xla::Literal]) -> crate::Result<Vec<f32>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], shape: &[i64]) -> crate::Result<xla::Literal> {
+    let n: i64 = shape.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape {shape:?} != {} elems", data.len());
+    Ok(xla::Literal::vec1(data).reshape(shape)?)
+}
+
+/// A compiled model variant plus its parameter layout: everything needed to
+/// run inference with (possibly fault-injected) weights.
+pub struct LoadedModel {
+    exe: Executable,
+    pub art: ModelArtifact,
+}
+
+impl LoadedModel {
+    /// Run one batch: builds param literals from `weights` (in manifest
+    /// order) followed by the batched input image literal.
+    ///
+    /// Returns logits, shape [batch, num_classes] flattened.
+    pub fn infer(&self, weights: &Weights, images: &[f32]) -> crate::Result<Vec<f32>> {
+        let mut inputs = Vec::with_capacity(self.art.params.len() + 1);
+        for p in &self.art.params {
+            inputs.push(literal_f32(weights.param(p)?, &p.shape)?);
+        }
+        let mut x_shape = vec![self.art.batch as i64];
+        x_shape.extend_from_slice(&self.art.input_shape);
+        inputs.push(literal_f32(images, &x_shape)?);
+        let logits = self.exe.run_f32(&inputs)?;
+        anyhow::ensure!(
+            logits.len() == self.art.batch * self.art.num_classes,
+            "logits len {} != batch {} × classes {}",
+            logits.len(),
+            self.art.batch,
+            self.art.num_classes
+        );
+        Ok(logits)
+    }
+
+    /// Argmax per row of a logits batch.
+    pub fn predictions(&self, logits: &[f32]) -> Vec<usize> {
+        logits
+            .chunks_exact(self.art.num_classes)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+
+    /// Top-k indices per row (for Top-5-style accuracy).
+    pub fn top_k(&self, logits: &[f32], k: usize) -> Vec<Vec<usize>> {
+        logits
+            .chunks_exact(self.art.num_classes)
+            .map(|row| {
+                let mut idx: Vec<usize> = (0..row.len()).collect();
+                idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+                idx.truncate(k);
+                idx
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_check() {
+        assert!(literal_f32(&[1.0, 2.0], &[2]).is_ok());
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+
+    // Execution-path tests live in rust/tests/runtime_e2e.rs (they need the
+    // PJRT client + built artifacts).
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! Python (JAX + Pallas) runs once at build time (`make artifacts`); this
+//! module is the only thing that touches the compiled artifacts on the
+//! request path. Interchange format is HLO *text* — the crate's bundled
+//! xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos (64-bit
+//! instruction ids), while the text parser reassigns ids cleanly.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactManifest, ModelArtifact, TestSet, Weights};
+pub use client::{LoadedModel, Runtime};

@@ -1,0 +1,114 @@
+//! Tiny benchmark harness (offline build: no criterion).
+//!
+//! `cargo bench` runs each bench binary with `--bench`; [`Bencher`] times a
+//! closure with warmup + multiple measured samples and prints a
+//! `name  median ± spread  (n iters)` line. Good enough for the §Perf
+//! before/after ledger and the per-figure regeneration-cost benches.
+
+use std::time::Instant;
+
+/// One benchmark run's summary statistics (nanoseconds per iteration).
+#[derive(Debug, Clone, Copy)]
+pub struct BenchResult {
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+/// The harness.
+pub struct Bencher {
+    /// Target wall time per sample (s).
+    pub sample_target_s: f64,
+    /// Number of measured samples.
+    pub samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self { sample_target_s: 0.05, samples: 12 }
+    }
+}
+
+impl Bencher {
+    /// Quick harness for cheap closures.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f`, printing a summary line; returns the stats. The closure's
+    /// return value is consumed with `std::hint::black_box` to keep the
+    /// optimizer honest.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        // Calibrate: how many iters fit the per-sample budget?
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.sample_target_s / once).ceil() as u64).clamp(1, 1_000_000);
+
+        // Warmup.
+        for _ in 0..iters.min(3) {
+            std::hint::black_box(f());
+        }
+
+        let mut per_iter: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            per_iter.push(t.elapsed().as_secs_f64() * 1e9 / iters as f64);
+        }
+        per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let res = BenchResult {
+            median_ns: per_iter[per_iter.len() / 2],
+            min_ns: per_iter[0],
+            max_ns: *per_iter.last().unwrap(),
+            iters_per_sample: iters,
+            samples: self.samples,
+        };
+        println!(
+            "bench {:<44} {:>12}/iter  (min {}, max {}, {}x{} iters)",
+            name,
+            fmt_ns(res.median_ns),
+            fmt_ns(res.min_ns),
+            fmt_ns(res.max_ns),
+            res.samples,
+            res.iters_per_sample,
+        );
+        res
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} us", ns / 1e3)
+    } else {
+        format!("{ns:.1} ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let b = Bencher { sample_target_s: 0.001, samples: 3 };
+        let r = b.run("noop-ish", || std::hint::black_box(1 + 1));
+        assert!(r.median_ns >= 0.0);
+        assert!(r.min_ns <= r.median_ns && r.median_ns <= r.max_ns);
+    }
+
+    #[test]
+    fn scales_iterations_for_cheap_ops() {
+        let b = Bencher { sample_target_s: 0.001, samples: 2 };
+        let r = b.run("cheap", || 42u64);
+        assert!(r.iters_per_sample > 100);
+    }
+}

@@ -1,0 +1,86 @@
+//! bfloat16 conversions (local implementation; offline build has no `half`).
+//!
+//! bf16 is the top 16 bits of an f32 (1 sign + 8 exponent + 7 mantissa).
+//! `f32_to_bf16` uses round-to-nearest-even, matching JAX/XLA semantics so
+//! the Rust-side fault model quantizes exactly like the compiled graph.
+
+/// f32 → bf16 bits with round-to-nearest-even.
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Preserve NaN, force a set mantissa bit.
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    if x.is_infinite() {
+        return (bits >> 16) as u16;
+    }
+    let lsb = (bits >> 16) & 1;
+    (bits.wrapping_add(0x0000_7FFF + lsb) >> 16) as u16
+}
+
+/// bf16 bits → f32.
+#[inline]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Round an f32 through bf16 precision.
+#[inline]
+pub fn round_via_bf16(x: f32) -> f32 {
+    bf16_to_f32(f32_to_bf16(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for v in [0.0f32, 1.0, -1.0, 0.5, 2.0, -0.25, 1.5] {
+            assert_eq!(round_via_bf16(v), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn rounds_to_nearest_even() {
+        // 1.0 + 2^-8 is exactly halfway between bf16(1.0) and the next
+        // representable value; ties-to-even keeps 1.0.
+        let x = 1.0f32 + 2.0f32.powi(-8);
+        assert_eq!(round_via_bf16(x), 1.0);
+        // Slightly above the halfway point rounds up.
+        let y = 1.0f32 + 2.0f32.powi(-8) + 2.0f32.powi(-16);
+        assert_eq!(round_via_bf16(y), 1.0 + 2.0f32.powi(-7));
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        // bf16 has 8 mantissa bits incl. implicit → rel err ≤ 2^-8.
+        let mut x = 0.001f32;
+        while x < 1.0e6 {
+            let r = round_via_bf16(x);
+            let rel = ((r - x) / x).abs();
+            assert!(rel <= 0.004, "x={x} r={r} rel={rel}");
+            x *= 1.7;
+        }
+    }
+
+    #[test]
+    fn specials() {
+        assert_eq!(round_via_bf16(f32::INFINITY), f32::INFINITY);
+        assert_eq!(round_via_bf16(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert!(round_via_bf16(f32::NAN).is_nan());
+        assert_eq!(bf16_to_f32(0x3F80), 1.0);
+        assert_eq!(f32_to_bf16(1.0), 0x3F80);
+    }
+
+    #[test]
+    fn sign_and_exponent_layout() {
+        // MSB byte = sign+exponent(+mantissa msb), LSB byte = mantissa tail.
+        let b = f32_to_bf16(-2.5);
+        assert_eq!(b & 0x8000, 0x8000, "sign bit set");
+        let [lo, hi] = b.to_le_bytes();
+        assert_eq!(hi & 0x80, 0x80);
+        let _ = lo;
+    }
+}

@@ -1,0 +1,153 @@
+//! Minimal CLI argument parser (offline build: no clap).
+//!
+//! Grammar: `stt-ai <subcommand> [--flag value]... [--switch]...`.
+//! Flags may appear in any order; unknown flags are surfaced as errors by
+//! the caller via [`Args::finish`].
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub cmd: String,
+    flags: BTreeMap<String, String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from `std::env::args` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Parse from an iterator of tokens.
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Self {
+        let mut cmd = String::new();
+        let mut flags = BTreeMap::new();
+        let mut iter = it.into_iter().peekable();
+        if let Some(first) = iter.peek() {
+            if !first.starts_with("--") {
+                cmd = iter.next().unwrap();
+            }
+        }
+        while let Some(tok) = iter.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // `--k=v`, or `--k v`, or bare switch `--k`.
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else {
+                    match iter.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            flags.insert(name.to_string(), v);
+                        }
+                        _ => {
+                            flags.insert(name.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            }
+        }
+        Self { cmd, flags, consumed: Default::default() }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        let v = self.flags.get(key).map(|s| s.as_str());
+        if v.is_some() {
+            self.consumed.borrow_mut().push(key.to_string());
+        }
+        v
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_flag(&self, key: &str) -> bool {
+        self.get(key).map(|v| v != "false").unwrap_or(false)
+    }
+
+    /// Error on any flag that no `get*` call touched (catches typos).
+    pub fn finish(&self) -> anyhow::Result<()> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> =
+            self.flags.keys().filter(|k| !consumed.contains(k)).collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            anyhow::bail!("unknown flags: {unknown:?}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = args("figures --fig 13 --verbose");
+        assert_eq!(a.cmd, "figures");
+        assert_eq!(a.get("fig"), Some("13"));
+        assert!(a.get_flag("verbose"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = args("design --retention=3.0 --ber=1e-8");
+        assert_eq!(a.get_f64("retention", 0.0).unwrap(), 3.0);
+        assert_eq!(a.get_f64("ber", 0.0).unwrap(), 1e-8);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args("serve");
+        assert_eq!(a.get_usize("batch", 16).unwrap(), 16);
+        assert_eq!(a.get_or("variant", "stt_ai_ultra"), "stt_ai_ultra");
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = args("table3 --oops 1");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = args("--help");
+        assert_eq!(a.cmd, "");
+        assert!(a.get_flag("help"));
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = args("x --n abc");
+        assert!(a.get_usize("n", 1).is_err());
+    }
+}

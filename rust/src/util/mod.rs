@@ -1,0 +1,81 @@
+//! Small shared utilities: units, statistics, bisection root finding.
+
+pub mod bench;
+pub mod bf16;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod units;
+
+/// Bisection root finder for monotone functions.
+///
+/// Finds `x` in `[lo, hi]` such that `f(x) ~= 0`, assuming `f(lo)` and
+/// `f(hi)` bracket a root. Used by the Δ-scaling solver where the reliability
+/// equations (retention failure, WER, read disturb) are monotone in Δ, pulse
+/// width, or current ratio but have no closed-form inverse.
+///
+/// Returns `None` if the root is not bracketed.
+pub fn bisect(mut lo: f64, mut hi: f64, tol: f64, f: impl Fn(f64) -> f64) -> Option<f64> {
+    let (flo, fhi) = (f(lo), f(hi));
+    if flo == 0.0 {
+        return Some(lo);
+    }
+    if fhi == 0.0 {
+        return Some(hi);
+    }
+    if flo.signum() == fhi.signum() {
+        return None;
+    }
+    // 200 iterations halves the bracket well below f64 resolution for any
+    // practical [lo, hi]; tol is on the bracket width.
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        let fmid = f(mid);
+        if fmid == 0.0 || (hi - lo) < tol {
+            return Some(mid);
+        }
+        if fmid.signum() == flo.signum() {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Some(0.5 * (lo + hi))
+}
+
+/// `ceil(a / b)` for positive integers (the ⌈·⌉ of the paper's Eq. 2, 8).
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bisect_finds_sqrt2() {
+        let r = bisect(0.0, 2.0, 1e-12, |x| x * x - 2.0).unwrap();
+        assert!((r - std::f64::consts::SQRT_2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bisect_rejects_unbracketed() {
+        assert!(bisect(3.0, 4.0, 1e-9, |x| x * x - 2.0).is_none());
+    }
+
+    #[test]
+    fn bisect_exact_endpoints() {
+        assert_eq!(bisect(0.0, 1.0, 1e-9, |x| x), Some(0.0));
+        assert_eq!(bisect(-1.0, 0.0, 1e-9, |x| x), Some(0.0));
+    }
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 3), 1);
+        assert_eq!(ceil_div(0, 3), 0);
+    }
+}

@@ -1,0 +1,73 @@
+//! Unit helpers: byte sizes, time and energy formatting for reports.
+
+pub const KB: u64 = 1024;
+pub const MB: u64 = 1024 * 1024;
+
+/// Format a byte count as a human-readable string ("12.00 MB", "52.0 KB").
+pub fn fmt_bytes(b: u64) -> String {
+    let bf = b as f64;
+    if b >= MB {
+        format!("{:.2} MB", bf / MB as f64)
+    } else if b >= KB {
+        format!("{:.1} KB", bf / KB as f64)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Format seconds with an SI prefix ("1.50 s", "230 ms", "17 ns", "3.0 yr").
+pub fn fmt_time(s: f64) -> String {
+    const YEAR: f64 = 365.25 * 24.0 * 3600.0;
+    if s >= YEAR {
+        format!("{:.2} yr", s / YEAR)
+    } else if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.3} ns", s * 1e9)
+    }
+}
+
+/// Format joules with an SI prefix ("2.1 mJ", "13 pJ").
+pub fn fmt_energy(j: f64) -> String {
+    if j >= 1.0 {
+        format!("{j:.3} J")
+    } else if j >= 1e-3 {
+        format!("{:.3} mJ", j * 1e3)
+    } else if j >= 1e-6 {
+        format!("{:.3} uJ", j * 1e6)
+    } else if j >= 1e-9 {
+        format!("{:.3} nJ", j * 1e9)
+    } else {
+        format!("{:.3} pJ", j * 1e12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(52 * KB), "52.0 KB");
+        assert_eq!(fmt_bytes(12 * MB), "12.00 MB");
+    }
+
+    #[test]
+    fn times() {
+        assert_eq!(fmt_time(1.5), "1.500 s");
+        assert_eq!(fmt_time(0.23), "230.000 ms");
+        assert_eq!(fmt_time(17e-9), "17.000 ns");
+        assert!(fmt_time(3.0 * 365.25 * 24.0 * 3600.0).contains("yr"));
+    }
+
+    #[test]
+    fn energies() {
+        assert_eq!(fmt_energy(2.1e-3), "2.100 mJ");
+        assert_eq!(fmt_energy(13e-12), "13.000 pJ");
+    }
+}

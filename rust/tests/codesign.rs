@@ -1,0 +1,131 @@
+//! Cross-module co-design invariants: the contracts §III–§V rely on between
+//! the accelerator model, the device model, and the memory system.
+
+use stt_ai::accel::{ArrayConfig, ModelTraffic, RetentionAnalysis};
+use stt_ai::config::SystemConfig;
+use stt_ai::dse::delta::paper_design_points;
+use stt_ai::dse::retention;
+use stt_ai::memsys::{MemTech, Scratchpad};
+use stt_ai::models::{self, DType};
+use stt_ai::mram::{DesignTargets, MtjTech, ScalingSolver};
+use stt_ai::util::units::{KB, MB};
+
+/// §V.C's central claim: the Δ=19.5 GLB design (3 s at 1e-8) covers the
+/// worst data occupancy of ALL 19 models at the paper's operating point —
+/// with margin.
+#[test]
+fn glb_design_covers_worst_zoo_occupancy() {
+    let zoo = models::zoo();
+    let worst = retention::fig13(&zoo).iter().map(|r| r.max_t_ret).fold(0.0, f64::max);
+    let solver = ScalingSolver::new(MtjTech::sakhare2020());
+    let d = solver.solve(&DesignTargets::global_buffer());
+    assert!(
+        d.achieved_retention > 1.5 * worst,
+        "retention {} must cover worst occupancy {} with margin",
+        d.achieved_retention,
+        worst
+    );
+}
+
+/// The LSB bank (Δ=12.5 @ 1e-5) must also cover the occupancy — relaxing
+/// BER, not retention, is what makes Ultra safe.
+#[test]
+fn lsb_bank_still_covers_occupancy() {
+    let zoo = models::zoo();
+    let worst = retention::fig13(&zoo).iter().map(|r| r.max_t_ret).fold(0.0, f64::max);
+    let solver = ScalingSolver::new(MtjTech::sakhare2020());
+    let d = solver.solve(&DesignTargets::lsb_bank());
+    assert!(d.achieved_retention > worst, "{} vs {}", d.achieved_retention, worst);
+}
+
+/// The paper's scratchpad (52 KB) covers the partial ofmaps of exactly the
+/// models the GLB capacity analysis targets; overflow goes to the GLB and
+/// the traffic model accounts for every byte.
+#[test]
+fn scratchpad_traffic_conservation() {
+    let a = ArrayConfig::paper_42x42();
+    let sp = Scratchpad::paper_bf16();
+    for m in models::zoo() {
+        let t = ModelTraffic::analyze(&m, &a, DType::Bf16, 4, 12 * MB);
+        for l in &t.layers {
+            let split =
+                stt_ai::memsys::TrafficSplit::split(l.partial_bytes, l.partial_rounds, &sp);
+            assert_eq!(
+                split.total_partial_bytes(),
+                l.partial_bytes * l.partial_rounds,
+                "{}/{}",
+                m.name,
+                l.name
+            );
+            if l.partial_bytes <= 52 * KB {
+                assert_eq!(split.glb_overflow_writes, 0, "{}/{}", m.name, l.name);
+            }
+        }
+    }
+}
+
+/// Table III consistency: the SystemConfig-composed buffer systems match
+/// the GLB kinds they claim.
+#[test]
+fn system_configs_compose_expected_arrays() {
+    let base = SystemConfig::paper_baseline().buffer_system();
+    assert!(matches!(base.glb_arrays()[0].tech, MemTech::Sram));
+    let ai = SystemConfig::paper_stt_ai().buffer_system();
+    assert!(matches!(
+        ai.glb_arrays()[0].tech,
+        MemTech::SttMram { delta_guard_banded } if (delta_guard_banded - 27.5).abs() < 1e-9
+    ));
+    let ultra = SystemConfig::paper_stt_ai_ultra().buffer_system();
+    let deltas: Vec<f64> = ultra
+        .glb_arrays()
+        .iter()
+        .map(|a| match a.tech {
+            MemTech::SttMram { delta_guard_banded } => delta_guard_banded,
+            _ => panic!("ultra banks must be MRAM"),
+        })
+        .collect();
+    assert_eq!(deltas, vec![27.5, 17.5]);
+    // Capacity is conserved across the split.
+    let total: u64 = ultra.glb_arrays().iter().map(|a| a.capacity_bytes).sum();
+    assert_eq!(total, 12 * MB);
+}
+
+/// The weight-NVM design point retains through years of model lifetime at
+/// both base technologies (§V.C "models are replaced frequently").
+#[test]
+fn weight_nvm_across_technologies() {
+    for tech in [MtjTech::sakhare2020(), MtjTech::wei2019()] {
+        let pts = paper_design_points(tech);
+        let nvm = &pts[0];
+        assert!(
+            nvm.achieved_retention > 2.9 * 365.25 * 24.0 * 3600.0,
+            "{}: {}",
+            tech.name,
+            nvm.achieved_retention
+        );
+        // All three points keep the Δ ordering NVM > GLB > LSB.
+        assert!(pts[0].delta_scaled > pts[1].delta_scaled);
+        assert!(pts[1].delta_scaled > pts[2].delta_scaled);
+    }
+}
+
+/// Timing model vs traffic model: a layer with more array steps must create
+/// at least as much partial-ofmap traffic (they share steps_per_out_ch).
+#[test]
+fn timing_and_traffic_agree_on_steps() {
+    let a = ArrayConfig::paper_42x42();
+    let m = models::by_name("ResNet50").unwrap();
+    let ra = RetentionAnalysis::new(&a, 1);
+    let timings = ra.layer_timings(&m);
+    let traffic = ModelTraffic::analyze(&m, &a, DType::Bf16, 1, 12 * MB);
+    let conv_timings: Vec<_> = timings.iter().filter(|t| t.is_conv).collect();
+    assert_eq!(conv_timings.len(), traffic.layers.len());
+    for (t, l) in conv_timings.iter().zip(&traffic.layers) {
+        assert_eq!(t.name, l.name);
+        if t.steps_per_out_ch <= 1 {
+            assert_eq!(l.partial_rounds, 0, "{}", l.name);
+        } else {
+            assert!(l.partial_rounds > 0, "{}", l.name);
+        }
+    }
+}

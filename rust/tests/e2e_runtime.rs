@@ -1,0 +1,141 @@
+//! Integration tests over the PJRT runtime + coordinator, using the real
+//! AOT artifacts. Skipped (with a loud message) if `make artifacts` has not
+//! run — keeps `cargo test` usable before the Python build.
+
+use std::path::{Path, PathBuf};
+
+use stt_ai::config::GlbVariant;
+use stt_ai::coordinator::{accuracy, serve, Engine, EngineConfig};
+
+fn artifacts() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn manifest_loads_and_is_consistent() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::load(&dir, EngineConfig::new(GlbVariant::Sram)).unwrap();
+    let m = &engine.manifest;
+    assert!(m.models.len() >= 2, "expect batch-1 and batch-16 variants");
+    for (name, art) in &m.models {
+        assert!(m.hlo_path(art).exists(), "{name} HLO missing");
+        assert_eq!(art.num_classes, 10);
+        assert_eq!(art.input_shape, vec![1, 16, 16]);
+    }
+    let w = m.load_weights().unwrap();
+    let total: u64 = m.models.values().next().unwrap().params.iter().map(|p| p.elems()).sum();
+    assert_eq!(w.data.len() as u64, total, "flat weights must cover all params");
+    let (imgs, labels) = m.load_testset().unwrap();
+    assert_eq!(labels.len(), m.testset.n);
+    assert_eq!(imgs.len(), m.testset.n * 256);
+}
+
+#[test]
+fn inference_is_deterministic_across_engines() {
+    let Some(dir) = artifacts() else { return };
+    let run = || {
+        let engine = Engine::load(&dir, EngineConfig::new(GlbVariant::SttAiUltra)).unwrap();
+        let model = engine.model_for_batch(1).unwrap();
+        let (images, _) = engine.manifest.load_testset().unwrap();
+        engine.infer(&model, &images[..256]).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "same seed → identical fault pattern → identical logits");
+}
+
+#[test]
+fn baseline_matches_training_accuracy() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::load(&dir, EngineConfig::new(GlbVariant::Sram)).unwrap();
+    let rep = accuracy::evaluate(&engine, 16, None).unwrap();
+    // The bf16 rounding of the fault model costs at most a small amount vs
+    // the f32 training accuracy (recorded in the manifest ≈ 0.93).
+    assert!(rep.top1 > 0.85, "top1={}", rep.top1);
+    assert!(rep.top5 > 0.99, "top5={}", rep.top5);
+    assert_eq!(rep.bit_flips, 0, "SRAM variant must not flip bits");
+}
+
+#[test]
+fn fig21_iso_accuracy_shape() {
+    let Some(dir) = artifacts() else { return };
+    let row = accuracy::fig21_row(&dir, 0.0, 16, Some(256)).unwrap();
+    // Paper: STT-AI (1e-8) iso-accuracy with baseline.
+    assert_eq!(row.baseline.top1, row.stt_ai.top1, "1e-8 BER must be iso-accuracy here");
+    // Ultra: some flips injected, <1% normalized drop.
+    assert!(row.stt_ai_ultra.bit_flips > 0, "Ultra must actually inject flips");
+    assert!(row.ultra_drop_normalized() < 0.01, "drop={}", row.ultra_drop_normalized());
+}
+
+#[test]
+fn pruned_model_still_works() {
+    let Some(dir) = artifacts() else { return };
+    let engine =
+        Engine::load(&dir, EngineConfig::new(GlbVariant::SttAiUltra).with_prune(0.5)).unwrap();
+    let rep = accuracy::evaluate(&engine, 16, Some(256)).unwrap();
+    assert!(rep.top1 > 0.7, "50%-pruned top1={}", rep.top1);
+}
+
+#[test]
+fn different_seed_changes_fault_pattern() {
+    let Some(dir) = artifacts() else { return };
+    let e1 = Engine::load(&dir, EngineConfig::new(GlbVariant::SttAiUltra).with_seed(1)).unwrap();
+    let e2 = Engine::load(&dir, EngineConfig::new(GlbVariant::SttAiUltra).with_seed(2)).unwrap();
+    assert_ne!(
+        e1.served_weights().data,
+        e2.served_weights().data,
+        "different seeds must corrupt different bits"
+    );
+}
+
+#[test]
+fn activation_faults_injected_and_benign() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = EngineConfig::new(GlbVariant::SttAiUltra).with_activation_faults();
+    let engine = Engine::load(&dir, cfg).unwrap();
+    let (images, _) = engine.manifest.load_testset().unwrap();
+    // The corrupt path actually changes something at Ultra BERs over a
+    // large-enough buffer (512 images × 256 px × 16 bits ≈ 2.1 Mbit; LSB
+    // half at 1e-5 ⇒ ~10 expected flips beyond bf16 rounding)…
+    let corrupted = engine.corrupt_activations(&images);
+    assert_eq!(corrupted.len(), images.len());
+    let bf16_only: Vec<f32> =
+        images.iter().map(|v| stt_ai::util::bf16::round_via_bf16(*v)).collect();
+    assert_ne!(corrupted, bf16_only, "activation faults must land");
+    // …and accuracy stays in the paper's band with both weight and
+    // activation faults active.
+    let rep = accuracy::evaluate(&engine, 16, Some(256)).unwrap();
+    assert!(rep.top1 > 0.9, "top1={}", rep.top1);
+}
+
+#[test]
+fn serve_closed_loop_reports_metrics() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::load(&dir, EngineConfig::new(GlbVariant::SttAi)).unwrap();
+    let summary = serve::closed_loop(&engine, 64, 16).unwrap();
+    assert!(summary.contains("served 64 requests"), "{summary}");
+    assert!(summary.contains("throughput"), "{summary}");
+}
+
+#[test]
+fn batch1_and_batch16_agree() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::load(&dir, EngineConfig::new(GlbVariant::Sram)).unwrap();
+    let m1 = engine.model_for_batch(1).unwrap();
+    let m16 = engine.model_for_batch(16).unwrap();
+    let (images, _) = engine.manifest.load_testset().unwrap();
+    let logits16 = engine.infer(&m16, &images[..16 * 256]).unwrap();
+    for i in 0..4 {
+        let l1 = engine.infer(&m1, &images[i * 256..(i + 1) * 256]).unwrap();
+        let l16 = &logits16[i * 10..(i + 1) * 10];
+        for (a, b) in l1.iter().zip(l16) {
+            assert!((a - b).abs() < 1e-4, "batch-1 vs batch-16 logits diverge: {a} vs {b}");
+        }
+    }
+}

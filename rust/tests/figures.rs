@@ -1,0 +1,112 @@
+//! Integration: every figure renderer produces the paper-shaped output,
+//! end to end through the public API (no artifacts needed).
+
+use stt_ai::report;
+
+fn render<T>(f: impl FnOnce(&mut Vec<u8>) -> std::io::Result<T>) -> (T, String) {
+    let mut buf = Vec::new();
+    let v = f(&mut buf).expect("renderer failed");
+    (v, String::from_utf8(buf).unwrap())
+}
+
+#[test]
+fn fig10_has_19_rows_and_total() {
+    let (rows, text) = render(report::fig10);
+    assert_eq!(rows.len(), 19);
+    assert!(text.contains("Fig. 10"));
+    assert!(text.contains("VGG16"));
+    assert!(text.contains("zoo total bf16"));
+}
+
+#[test]
+fn fig11_reports_12mb_coverage() {
+    let (rows, text) = render(report::fig11);
+    assert_eq!(rows.len(), 19);
+    assert!(text.contains("12 MB serves"));
+    // Every model's requirement grows with batch.
+    for (_, series) in rows {
+        assert!(series.windows(2).all(|w| w[1].1 >= w[0].1));
+    }
+}
+
+#[test]
+fn fig12_covers_both_dtypes_and_batches() {
+    let (rows, text) = render(report::fig12);
+    // 19 models × 4 batches × 2 dtypes.
+    assert_eq!(rows.len(), 19 * 4 * 2);
+    assert!(text.contains("dtype Int8") && text.contains("dtype Bf16"));
+    // int8 spill ≤ bf16 spill for the same model/batch.
+    for i in 0..(19 * 4) {
+        assert!(rows[i].spill_bytes <= rows[i + 19 * 4].spill_bytes);
+    }
+}
+
+#[test]
+fn fig13_worst_case_under_paper_bound() {
+    let (rows, text) = render(report::fig13);
+    assert_eq!(rows.len(), 19);
+    assert!(text.contains("worst case"));
+    assert!(rows.iter().all(|r| r.max_t_ret < 1.6));
+}
+
+#[test]
+fn fig14_series_shapes() {
+    let ((a, b), _) = render(report::fig14);
+    assert!(a.windows(2).all(|w| w[1].1 <= w[0].1), "14a decreasing: {a:?}");
+    assert!(b.windows(2).all(|w| w[1].1 >= w[0].1), "14b increasing: {b:?}");
+}
+
+#[test]
+fn fig15_both_base_cases() {
+    let (sweeps, text) = render(report::fig15);
+    assert_eq!(sweeps.len(), 2);
+    assert!(text.contains("sakhare2020") && text.contains("wei2019"));
+    assert!(text.contains("weight-NVM"));
+}
+
+#[test]
+fn fig16_energy_and_area_ratios() {
+    let (rows, text) = render(report::fig16);
+    assert!(text.contains("GLB") && text.contains("LSB"));
+    let at_12mb: Vec<_> =
+        rows.iter().filter(|r| r.capacity_bytes == 12 * 1024 * 1024).collect();
+    assert_eq!(at_12mb.len(), 2);
+    for r in at_12mb {
+        assert!(r.area_ratio() > 10.0);
+        assert!(r.energy_ratio() > 1.0);
+    }
+}
+
+#[test]
+fn fig17_relaxed_vs_tight() {
+    let (sweeps, _) = render(report::fig17);
+    assert_eq!(sweeps.len(), 2);
+    let (relaxed, tight) = (&sweeps[0], &sweeps[1]);
+    for (r, t) in relaxed.write_pulse.iter().zip(&tight.write_pulse) {
+        assert!(r.1 <= t.1, "relaxed BER must not need longer writes");
+    }
+}
+
+#[test]
+fn fig18_counts_fits() {
+    let (rows, text) = render(report::fig18);
+    assert_eq!(rows.len(), 19);
+    assert!(text.contains("fit the 52 KB"));
+}
+
+#[test]
+fn fig19_ordering() {
+    let (row, text) = render(report::fig19);
+    assert!(text.contains("ResNet-50"));
+    assert!(row.mram_scratchpad.total() < row.mram.total());
+    assert!(row.mram.total() < row.sram.total());
+}
+
+#[test]
+fn table3_savings() {
+    let rows = report::table3_rows();
+    let (a, p) = rows[1].savings_vs(&rows[0]);
+    assert!(a > 0.7 && p > 0.02);
+    let (a2, p2) = rows[2].savings_vs(&rows[0]);
+    assert!(a2 > a && p2 > p);
+}

@@ -1,0 +1,171 @@
+//! Property-style randomized tests (offline build: no proptest crate; the
+//! same discipline — random inputs, many cases, explicit invariants — using
+//! the crate's own deterministic RNG, with the failing seed printed).
+
+use stt_ai::accel::{ArrayConfig, RetentionAnalysis};
+use stt_ai::ber::Injector;
+use stt_ai::coordinator::{Batcher, Request};
+use stt_ai::models;
+use stt_ai::mram::{
+    read_disturb_prob, read_pulse_at_rd, retention_failure_prob, retention_time_at_ber,
+    write_error_rate, write_pulse_at_wer, PtVariation,
+};
+use stt_ai::util::json::Json;
+use stt_ai::util::rng::Rng;
+
+const CASES: usize = 200;
+
+#[test]
+fn prop_retention_inverse_roundtrip() {
+    let mut rng = Rng::seed_from_u64(0x5151);
+    for case in 0..CASES {
+        let delta = rng.range_f64(5.0, 80.0);
+        let tau = 10f64.powf(rng.range_f64(-9.0, 0.0));
+        let ber = 10f64.powf(rng.range_f64(-12.0, -2.0));
+        let t = retention_time_at_ber(tau, delta, ber);
+        let p = retention_failure_prob(t, tau, delta);
+        assert!((p / ber - 1.0).abs() < 1e-6, "case {case}: delta={delta} tau={tau} ber={ber}");
+    }
+}
+
+#[test]
+fn prop_wer_inverse_and_monotonicity() {
+    let mut rng = Rng::seed_from_u64(0xBEEF);
+    for case in 0..CASES {
+        let delta = rng.range_f64(5.0, 80.0);
+        let i = rng.range_f64(1.2, 5.0);
+        let wer = 10f64.powf(rng.range_f64(-12.0, -3.0));
+        let t = write_pulse_at_wer(wer, 1e-9, delta, i);
+        if t > 0.0 {
+            let w = write_error_rate(t, 1e-9, delta, i);
+            assert!((w / wer - 1.0).abs() < 1e-5, "case {case}");
+            // Longer pulse → strictly lower WER.
+            assert!(write_error_rate(t * 1.5, 1e-9, delta, i) < w, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_read_disturb_bounds_and_inverse() {
+    let mut rng = Rng::seed_from_u64(0xD15C);
+    for case in 0..CASES {
+        let delta = rng.range_f64(5.0, 80.0);
+        let r = rng.range_f64(0.05, 0.9);
+        let p = 10f64.powf(rng.range_f64(-12.0, -3.0));
+        let t = read_pulse_at_rd(p, 1e-9, delta, r);
+        let back = read_disturb_prob(t, 1e-9, delta, r);
+        assert!((back / p - 1.0).abs() < 1e-6, "case {case}");
+        // Probabilities stay in [0,1] over wild pulse widths.
+        let p2 = read_disturb_prob(t * 1e6, 1e-9, delta, r);
+        assert!((0.0..=1.0).contains(&p2), "case {case}: {p2}");
+    }
+}
+
+#[test]
+fn prop_guard_band_closes_the_loop() {
+    // For any Δ_scaled and any variation setting, the hot/−nσ corner of the
+    // guard-banded design recovers at least Δ_scaled (Eq. 17's contract).
+    let mut rng = Rng::seed_from_u64(0x6B);
+    for case in 0..CASES {
+        let v = PtVariation {
+            sigma_frac: rng.range_f64(0.0, 0.05),
+            n_sigma: rng.range_f64(0.0, 6.0),
+            t_nom: 300.0,
+            t_hot: rng.range_f64(300.0, 420.0),
+            t_cold: rng.range_f64(230.0, 300.0),
+        };
+        if 1.0 - v.n_sigma * v.sigma_frac <= 0.05 {
+            continue; // guard fraction out of physical range
+        }
+        let delta_scaled = rng.range_f64(10.0, 60.0);
+        let gb = v.guard_band(delta_scaled);
+        let worst = v.delta_at(gb.delta_guard_banded, -v.n_sigma, v.t_hot);
+        assert!(worst >= delta_scaled * (1.0 - 1e-9), "case {case}: {worst} < {delta_scaled}");
+        assert!(gb.delta_pt_max >= gb.delta_guard_banded * (1.0 - 1e-9), "case {case}");
+    }
+}
+
+#[test]
+fn prop_injector_flip_rate_tracks_ber() {
+    let mut rng = Rng::seed_from_u64(0xF1);
+    for case in 0..20 {
+        let ber = 10f64.powf(rng.range_f64(-4.0, -2.0));
+        let n = 1usize << 18;
+        let mut buf = vec![0u8; n];
+        let stats = Injector::new(case as u64).flip(&mut buf, ber);
+        let expect = (n * 8) as f64 * ber;
+        let sigma = expect.sqrt();
+        assert!(
+            (stats.bits_flipped as f64 - expect).abs() < 6.0 * sigma,
+            "case {case}: flips={} expect={expect}",
+            stats.bits_flipped
+        );
+        // Popcount agrees with the reported count (no double flips).
+        let ones: u64 = buf.iter().map(|b| b.count_ones() as u64).sum();
+        assert_eq!(ones, stats.bits_flipped, "case {case}");
+    }
+}
+
+#[test]
+fn prop_batcher_never_loses_or_reorders() {
+    let mut rng = Rng::seed_from_u64(0xBA7C);
+    for case in 0..50 {
+        let max_batch = 1 + rng.below(8) as usize;
+        let mut b = Batcher::new(max_batch, std::time::Duration::ZERO, 1, usize::MAX);
+        let n = 1 + rng.below(64);
+        for id in 0..n {
+            assert!(b.push(Request::new(id, vec![0.0])));
+        }
+        let mut seen = Vec::new();
+        while let Some(batch) = b.form(max_batch, std::time::Instant::now()) {
+            assert!(batch.real <= max_batch);
+            assert_eq!(batch.images.len(), max_batch);
+            seen.extend(batch.ids);
+        }
+        let want: Vec<u64> = (0..n).collect();
+        assert_eq!(seen, want, "case {case}: FIFO order must hold");
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_trees() {
+    fn gen(rng: &mut Rng, depth: u32) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 1),
+            2 => Json::Num((rng.below(1_000_000) as f64) - 500_000.0),
+            3 => Json::Str(format!("s{}-\"esc\\{}", rng.below(100), rng.below(10))),
+            4 => Json::Arr((0..rng.below(4)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(4)).map(|i| (format!("k{i}"), gen(rng, depth - 1))).collect(),
+            ),
+        }
+    }
+    let mut rng = Rng::seed_from_u64(0x150);
+    for case in 0..CASES {
+        let v = gen(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(back, v, "case {case}");
+    }
+}
+
+#[test]
+fn prop_retention_monotone_in_array_and_batch() {
+    // Random (model, array, batch) triples: growing the array never grows
+    // retention; growing the batch never shrinks it.
+    let zoo = models::zoo();
+    let mut rng = Rng::seed_from_u64(0xACC);
+    for case in 0..40 {
+        let m = &zoo[rng.below(zoo.len() as u64) as usize];
+        let macs = 14 + 7 * rng.below(12);
+        let batch = 1 + rng.below(32);
+        let a1 = ArrayConfig::with_mac_array(macs);
+        let a2 = ArrayConfig::with_mac_array(macs * 2);
+        let r1 = RetentionAnalysis::new(&a1, batch).analyze(m).max_t_ret();
+        let r2 = RetentionAnalysis::new(&a2, batch).analyze(m).max_t_ret();
+        assert!(r2 <= r1 * (1.0 + 1e-12), "case {case} ({}): {r2} > {r1}", m.name);
+        let rb = RetentionAnalysis::new(&a1, batch + 1).analyze(m).max_t_ret();
+        assert!(rb >= r1 * (1.0 - 1e-12), "case {case} ({})", m.name);
+    }
+}
