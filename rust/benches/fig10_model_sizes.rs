@@ -1,12 +1,13 @@
 //! Bench: regenerate Fig. 10 (model sizes + conv fmap/weight ranges) and
 //! time the zoo analysis.
 use stt_ai::dse::capacity::CapacityRow;
+use stt_ai::dse::engine::Runner;
 use stt_ai::models::{self, DType};
 use stt_ai::report;
 use stt_ai::util::bench::Bencher;
 
 fn main() {
-    report::fig10(&mut std::io::stdout().lock()).unwrap();
+    report::fig10_with(&mut std::io::stdout().lock(), &Runner::from_args()).unwrap();
     let b = Bencher::new();
     b.run("fig10/zoo_build", || models::zoo().len());
     let zoo = models::zoo();

@@ -1,11 +1,12 @@
 //! Bench: regenerate Fig. 11 (required GLB capacity vs batch).
 use stt_ai::dse::capacity;
+use stt_ai::dse::engine::Runner;
 use stt_ai::models::{self, DType};
 use stt_ai::report;
 use stt_ai::util::bench::Bencher;
 
 fn main() {
-    report::fig11(&mut std::io::stdout().lock()).unwrap();
+    report::fig11_with(&mut std::io::stdout().lock(), &Runner::from_args()).unwrap();
     let zoo = models::zoo();
     let b = Bencher::new();
     b.run("fig11/capacity_sweep_4_batches", || {

@@ -1,6 +1,7 @@
 //! Bench: regenerate Fig. 12 (extra DRAM latency/energy, 12 MB GLB).
 use stt_ai::accel::ArrayConfig;
 use stt_ai::dse::capacity::DramOverheadRow;
+use stt_ai::dse::engine::Runner;
 use stt_ai::memsys::DramModel;
 use stt_ai::models::{self, DType};
 use stt_ai::report;
@@ -8,7 +9,7 @@ use stt_ai::util::bench::Bencher;
 use stt_ai::util::units::MB;
 
 fn main() {
-    report::fig12(&mut std::io::stdout().lock()).unwrap();
+    report::fig12_with(&mut std::io::stdout().lock(), &Runner::from_args()).unwrap();
     let zoo = models::zoo();
     let a = ArrayConfig::paper_42x42();
     let d = DramModel::ddr4_2933_dual();

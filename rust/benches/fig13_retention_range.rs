@@ -1,11 +1,12 @@
 //! Bench: regenerate Fig. 13 (GLB retention ranges, 42x42, batch 16).
+use stt_ai::dse::engine::Runner;
 use stt_ai::dse::retention;
 use stt_ai::models;
 use stt_ai::report;
 use stt_ai::util::bench::Bencher;
 
 fn main() {
-    report::fig13(&mut std::io::stdout().lock()).unwrap();
+    report::fig13_with(&mut std::io::stdout().lock(), &Runner::from_args()).unwrap();
     let zoo = models::zoo();
     Bencher::new().run("fig13/retention_19_models", || {
         retention::fig13(&zoo).iter().map(|r| r.max_t_ret).fold(0.0, f64::max)

@@ -1,11 +1,12 @@
 //! Bench: regenerate Fig. 14 (retention vs array size / batch).
+use stt_ai::dse::engine::Runner;
 use stt_ai::dse::retention;
 use stt_ai::models;
 use stt_ai::report;
 use stt_ai::util::bench::Bencher;
 
 fn main() {
-    report::fig14(&mut std::io::stdout().lock()).unwrap();
+    report::fig14_with(&mut std::io::stdout().lock(), &Runner::from_args()).unwrap();
     let zoo = models::zoo();
     let b = Bencher::new();
     b.run("fig14a/array_sweep", || retention::fig14a(&zoo, &[14, 28, 42, 56, 84]).len());

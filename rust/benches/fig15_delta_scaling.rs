@@ -1,11 +1,12 @@
 //! Bench: regenerate Fig. 15 (Δ scaling panels, both base cases).
 use stt_ai::dse::delta::{paper_design_points, DeltaSweep};
+use stt_ai::dse::engine::Runner;
 use stt_ai::mram::MtjTech;
 use stt_ai::report;
 use stt_ai::util::bench::Bencher;
 
 fn main() {
-    report::fig15(&mut std::io::stdout().lock()).unwrap();
+    report::fig15_with(&mut std::io::stdout().lock(), &Runner::from_args()).unwrap();
     let deltas = DeltaSweep::default_deltas();
     let b = Bencher::new();
     b.run("fig15/sweep_51_deltas_x2_tech", || {

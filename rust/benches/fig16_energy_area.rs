@@ -1,10 +1,11 @@
 //! Bench: regenerate Fig. 16 (SRAM vs MRAM energy/area vs capacity).
 use stt_ai::dse::energy_area;
+use stt_ai::dse::engine::Runner;
 use stt_ai::report;
 use stt_ai::util::bench::Bencher;
 
 fn main() {
-    report::fig16(&mut std::io::stdout().lock()).unwrap();
+    report::fig16_with(&mut std::io::stdout().lock(), &Runner::from_args()).unwrap();
     let caps = energy_area::default_capacities_mb();
     Bencher::new().run("fig16/two_delta_sweeps", || {
         energy_area::fig16_glb(&caps).len() + energy_area::fig16_lsb(&caps).len()

@@ -1,11 +1,12 @@
 //! Bench: regenerate Fig. 17 (Δ scaling at relaxed BER for the LSB bank).
 use stt_ai::dse::delta::DeltaSweep;
+use stt_ai::dse::engine::Runner;
 use stt_ai::mram::MtjTech;
 use stt_ai::report;
 use stt_ai::util::bench::Bencher;
 
 fn main() {
-    report::fig17(&mut std::io::stdout().lock()).unwrap();
+    report::fig17_with(&mut std::io::stdout().lock(), &Runner::from_args()).unwrap();
     let deltas = DeltaSweep::default_deltas();
     Bencher::new().run("fig17/relaxed_vs_tight", || {
         DeltaSweep::run(MtjTech::wei2019(), 1e-5, &deltas).write_pulse.len()

@@ -1,11 +1,12 @@
 //! Bench: regenerate Fig. 18 (max partial-ofmap sizes).
+use stt_ai::dse::engine::Runner;
 use stt_ai::dse::scratchpad::PartialOfmapRow;
 use stt_ai::models;
 use stt_ai::report;
 use stt_ai::util::bench::Bencher;
 
 fn main() {
-    report::fig18(&mut std::io::stdout().lock()).unwrap();
+    report::fig18_with(&mut std::io::stdout().lock(), &Runner::from_args()).unwrap();
     let zoo = models::zoo();
     Bencher::new().run("fig18/partials_19_models", || {
         zoo.iter().map(|m| PartialOfmapRow::analyze(m).bf16_bytes).max().unwrap()

@@ -1,6 +1,7 @@
 //! Bench: regenerate Fig. 19 (buffer energy SRAM / MRAM / MRAM+scratchpad)
 //! plus an ablation over scratchpad capacity (DESIGN.md ablation list).
 use stt_ai::accel::{ArrayConfig, ModelTraffic};
+use stt_ai::dse::engine::Runner;
 use stt_ai::dse::scratchpad::ScratchpadEnergyRow;
 use stt_ai::memsys::{BufferSystem, EnergyLedger, GlbKind, Scratchpad};
 use stt_ai::models::{self, DType};
@@ -9,7 +10,7 @@ use stt_ai::util::bench::Bencher;
 use stt_ai::util::units::{KB, MB};
 
 fn main() {
-    report::fig19(&mut std::io::stdout().lock()).unwrap();
+    report::fig19_with(&mut std::io::stdout().lock(), &Runner::from_args()).unwrap();
 
     // Ablation: scratchpad capacity 0..104 KB for ResNet-50.
     let a = ArrayConfig::paper_42x42();

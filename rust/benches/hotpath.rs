@@ -1,12 +1,15 @@
 //! Hot-path microbenches driving the §Perf iteration (EXPERIMENTS.md §Perf):
 //! BER injection throughput, bf16 round-trip, retention analysis, JSON
-//! parse, batcher ops, and the figure-regeneration end-to-end cost.
+//! parse, batcher ops, and the figure-regeneration end-to-end cost (serial
+//! vs the parallel sweep engine; honors `--parallel N`).
 use std::time::Duration;
 
 use stt_ai::accel::{ArrayConfig, RetentionAnalysis};
 use stt_ai::ber::{BankSplit, Injector, WordKind};
 use stt_ai::coordinator::{Batcher, Request};
+use stt_ai::dse::engine::Runner;
 use stt_ai::models;
+use stt_ai::report;
 use stt_ai::util::bench::Bencher;
 use stt_ai::util::bf16::{bf16_to_f32, f32_to_bf16};
 use stt_ai::util::json::Json;
@@ -58,4 +61,21 @@ fn main() {
         }
         n
     });
+
+    // Figure regeneration end to end (Figs. 10-19): the pre-refactor serial
+    // path vs the work-stealing sweep engine — the acceptance wall-clock
+    // entry for the `dse::engine` refactor.
+    let slow = Bencher { sample_target_s: 0.2, samples: 5 };
+    let serial = Runner::new(1);
+    let r1 = slow.run("figures/regenerate_all_serial", || {
+        report::render_all(&mut std::io::sink(), &serial).unwrap()
+    });
+    let auto = Runner::from_args();
+    let label = format!("figures/regenerate_all_parallel_x{}", auto.workers());
+    let rn = slow.run(&label, || report::render_all(&mut std::io::sink(), &auto).unwrap());
+    println!(
+        "    -> figure regeneration speedup: {:.2}x with {} workers",
+        r1.median_ns / rn.median_ns,
+        auto.workers()
+    );
 }

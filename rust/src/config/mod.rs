@@ -36,6 +36,17 @@ impl GlbVariant {
         }
     }
 
+    /// Parse a CLI token — the one grammar shared by `stt-ai serve --variant`
+    /// and the sweep engine's `variant=` axis.
+    pub fn from_token(s: &str) -> Option<Self> {
+        match s.to_lowercase().replace('-', "_").as_str() {
+            "sram" | "baseline" => Some(GlbVariant::Sram),
+            "stt_ai" | "sttai" => Some(GlbVariant::SttAi),
+            "stt_ai_ultra" | "ultra" => Some(GlbVariant::SttAiUltra),
+            _ => None,
+        }
+    }
+
     pub fn label(&self) -> &'static str {
         match self {
             GlbVariant::Sram => "Baseline (SRAM)",
@@ -60,6 +71,15 @@ impl TechBase {
         match self {
             TechBase::Sakhare2020 => MtjTech::sakhare2020(),
             TechBase::Wei2019 => MtjTech::wei2019(),
+        }
+    }
+
+    /// Parse a CLI token (`sakhare2020` / `wei2019`).
+    pub fn from_token(s: &str) -> Option<Self> {
+        match s.to_lowercase().as_str() {
+            "sakhare2020" => Some(TechBase::Sakhare2020),
+            "wei2019" => Some(TechBase::Wei2019),
+            _ => None,
         }
     }
 }

@@ -1,18 +1,22 @@
-//! Design-space exploration sweeps (paper §V.A–E, Figs. 10–19).
+//! Design-space exploration (paper §V.A–E, Figs. 10–19).
 //!
-//! Each submodule produces the data series of one or more paper figures as
-//! plain structs; the `report` module renders them and the criterion benches
-//! measure their regeneration cost.
+//! The per-figure submodules hold the *analysis* (one row / one point of a
+//! figure as a plain struct); [`engine`] composes them into declarative
+//! [`engine::SweepSpec`] cross-products evaluated in parallel on the
+//! work-stealing pool, producing the unified [`engine::SweepResult`] records
+//! that `report` renders and exports.
 
 pub mod ablation;
 pub mod capacity;
 pub mod delta;
 pub mod energy_area;
+pub mod engine;
 pub mod retention;
 pub mod scratchpad;
 
 pub use capacity::{CapacityRow, DramOverheadRow};
 pub use delta::DeltaSweep;
 pub use energy_area::EnergyAreaRow;
+pub use engine::{Axis, DesignPoint, Runner, SweepResult, SweepSpec};
 pub use retention::RetentionRow;
 pub use scratchpad::{PartialOfmapRow, ScratchpadEnergyRow};

@@ -17,7 +17,11 @@
 //! * [`accel`] — the reconfigurable-core accelerator: PE/core cycle model
 //!   (Table II), row-stationary conv + systolic FC mapping, the analytical
 //!   occupancy/retention-time model (Eq. 2–11), and GLB traffic accounting.
-//! * [`dse`] — design-space exploration sweeps regenerating Figs. 10–19.
+//! * [`dse`] — design-space exploration: per-figure analyses (Figs. 10–19)
+//!   plus [`dse::engine`], the unified parallel sweep subsystem (declarative
+//!   `SweepSpec` cross-products over model × dtype × batch × GLB × Δ/BER
+//!   axes, evaluated on the [`util::pool`] work-stealing pool into
+//!   serializable `SweepResult` records).
 //! * [`ber`] — bit-error-rate fault injection on bf16/int8 buffers with the
 //!   MSB/LSB two-bank split of the STT-AI Ultra design, plus magnitude
 //!   pruning (Fig. 21).
@@ -25,7 +29,9 @@
 //!   execute (Python is never on this path).
 //! * [`coordinator`] — the L3 serving loop: request queue, dynamic batcher,
 //!   inference engine, metrics.
-//! * [`report`] — figure/table printers used by the benches and the CLI.
+//! * [`report`] — figure/table renderers over the unified sweep records
+//!   (`report::legacy` keeps the frozen pre-refactor serial renderers as the
+//!   golden parity reference), plus CSV/JSON export.
 //! * [`config`] — typed configuration (accelerator, memory, tech) with TOML
 //!   loading, used by the CLI and launcher.
 

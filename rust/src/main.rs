@@ -2,7 +2,9 @@
 //!
 //! Subcommands mirror the paper's workflow:
 //!
-//! * `figures [--fig N]` — regenerate the §V figures (10–19) as text tables.
+//! * `figures [--fig N]` — regenerate the §V figures (10–19) as text tables,
+//!   in parallel (`--parallel N`), with optional `--sweep` axis overrides.
+//! * `sweep`             — free-form cross-product design-space exploration.
 //! * `table3`            — accelerator composition + headline savings.
 //! * `design`            — solve a customized STT-MRAM design point.
 //! * `accuracy`          — Fig. 21 fault-injection evaluation on artifacts.
@@ -15,9 +17,12 @@ use std::path::{Path, PathBuf};
 use stt_ai::config::{GlbVariant, SystemConfig};
 use stt_ai::coordinator::{self, Engine, EngineConfig};
 use stt_ai::dse::delta::paper_design_points;
+use stt_ai::dse::engine as dse_engine;
+use stt_ai::dse::engine::Runner;
 use stt_ai::mram::{DesignTargets, MtjTech, ScalingSolver};
 use stt_ai::report;
 use stt_ai::util::cli::Args;
+use stt_ai::util::pool::available_parallelism;
 use stt_ai::util::units::fmt_time;
 
 const USAGE: &str = "\
@@ -26,7 +31,11 @@ stt-ai — AI accelerator + customized STT-MRAM co-design framework
 USAGE: stt-ai <COMMAND> [FLAGS]
 
 COMMANDS:
-  figures      [--fig 10..19] [--csv-dir DIR]  regenerate paper figures
+  figures      [--fig 10..19] [--csv-dir DIR] [--parallel N]
+               [--sweep axis=v1|v2,...]       regenerate paper figures
+  sweep        --axes axis=v1|v2,... [--parallel N] [--csv FILE] [--json FILE]
+               free cross-product DSE (axes: model, dtype, batch, glb_mb,
+               macs, variant, tech, ber, delta)
   table3                               Table III composition + savings
   design       [--retention 3.0|3y] [--ber 1e-8] [--tech sakhare2020|wei2019]
   accuracy     [--artifacts DIR] [--prune 0.0] [--batch 16] [--limit N]
@@ -38,28 +47,33 @@ COMMANDS:
 ";
 
 fn parse_variant(s: &str) -> anyhow::Result<GlbVariant> {
-    Ok(match s.to_lowercase().replace('-', "_").as_str() {
-        "sram" | "baseline" => GlbVariant::Sram,
-        "stt_ai" | "sttai" => GlbVariant::SttAi,
-        "stt_ai_ultra" | "ultra" => GlbVariant::SttAiUltra,
-        other => anyhow::bail!("unknown variant {other:?}"),
-    })
+    GlbVariant::from_token(s).ok_or_else(|| anyhow::anyhow!("unknown variant {s:?}"))
 }
 
-fn run_figure(n: u32, out: &mut impl Write) -> std::io::Result<()> {
+fn run_figure(n: u32, out: &mut impl Write, r: &Runner) -> std::io::Result<()> {
     match n {
-        10 => report::fig10(out).map(|_| ()),
-        11 => report::fig11(out).map(|_| ()),
-        12 => report::fig12(out).map(|_| ()),
-        13 => report::fig13(out).map(|_| ()),
-        14 => report::fig14(out).map(|_| ()),
-        15 => report::fig15(out).map(|_| ()),
-        16 => report::fig16(out).map(|_| ()),
-        17 => report::fig17(out).map(|_| ()),
-        18 => report::fig18(out).map(|_| ()),
-        19 => report::fig19(out).map(|_| ()),
+        10 => report::fig10_with(out, r).map(|_| ()),
+        11 => report::fig11_with(out, r).map(|_| ()),
+        12 => report::fig12_with(out, r).map(|_| ()),
+        13 => report::fig13_with(out, r).map(|_| ()),
+        14 => report::fig14_with(out, r).map(|_| ()),
+        15 => report::fig15_with(out, r).map(|_| ()),
+        16 => report::fig16_with(out, r).map(|_| ()),
+        17 => report::fig17_with(out, r).map(|_| ()),
+        18 => report::fig18_with(out, r).map(|_| ()),
+        19 => report::fig19_with(out, r).map(|_| ()),
         _ => writeln!(out, "no renderer for figure {n} (fig 21 → `stt-ai accuracy`)"),
     }
+}
+
+/// Build the sweep runner from the shared `--parallel` / `--sweep` flags.
+fn runner_from(args: &Args) -> anyhow::Result<Runner> {
+    let parallel = args.get_usize("parallel", available_parallelism())?;
+    let overrides = match args.get("sweep") {
+        Some(spec) => dse_engine::parse_axes(spec)?,
+        None => Vec::new(),
+    };
+    Ok(Runner::new(parallel).with_overrides(overrides))
 }
 
 fn main() -> anyhow::Result<()> {
@@ -67,22 +81,54 @@ fn main() -> anyhow::Result<()> {
     let mut out = std::io::stdout().lock();
     match args.cmd.as_str() {
         "figures" => {
+            let runner = runner_from(&args)?;
             if let Some(dir) = args.get("csv-dir") {
-                let files = report::export_all(Path::new(dir))?;
-                writeln!(out, "wrote {} CSVs to {dir}: {files:?}", files.len())?;
+                let files = report::export::export_all_with(Path::new(dir), &runner)?;
+                writeln!(out, "wrote {} files to {dir}: {files:?}", files.len())?;
                 args.finish()?;
                 return Ok(());
             }
             match args.get("fig") {
-                Some(n) => run_figure(n.parse()?, &mut out)?,
-                None => {
-                    for n in 10..=19 {
-                        run_figure(n, &mut out)?;
-                        writeln!(out)?;
-                    }
-                }
+                Some(n) => run_figure(n.parse()?, &mut out, &runner)?,
+                None => report::render_all(&mut out, &runner)?,
             }
             args.finish()?;
+        }
+        "sweep" => {
+            // No `--sweep` overrides here: the axes ARE the sweep, so a
+            // stray `--sweep` flag is rejected by `finish()` below.
+            let runner = Runner::new(args.get_usize("parallel", available_parallelism())?);
+            let axes = match args.get("axes") {
+                Some(spec) => dse_engine::parse_axes(spec)?,
+                None => Vec::new(),
+            };
+            let csv = args.get("csv").map(PathBuf::from);
+            let json = args.get("json").map(PathBuf::from);
+            args.finish()?;
+            let zoo = dse_engine::shared_zoo();
+            let spec = dse_engine::custom_spec(&zoo, axes);
+            writeln!(
+                out,
+                "== custom sweep: {} points x {} axes ({} workers) ==",
+                spec.len(),
+                spec.axes.len(),
+                runner.workers()
+            )?;
+            let results = spec.run(runner.pool());
+            if let Some(first) = results.first() {
+                writeln!(out, "{}", first.csv_header().replace(',', "\t"))?;
+            }
+            for r in &results {
+                writeln!(out, "{}", r.csv_row().replace(',', "\t"))?;
+            }
+            if let Some(path) = csv {
+                report::export::write_results_csv(&path, &results)?;
+                writeln!(out, "-- wrote {}", path.display())?;
+            }
+            if let Some(path) = json {
+                report::export::export_json(&path, &results)?;
+                writeln!(out, "-- wrote {}", path.display())?;
+            }
         }
         "table3" => {
             args.finish()?;

@@ -1,178 +1,84 @@
-//! CSV export of the figure data series — plot-ready files for anyone
+//! CSV/JSON export of the figure data series — plot-ready files for anyone
 //! regenerating the paper's graphs (`stt-ai figures --csv-dir out/`).
+//!
+//! Every figure goes through the unified `dse::engine` records: one CSV per
+//! sweep whose schema is the sweep's axis columns plus its metric names,
+//! and one `sweeps.json` with every record of every sweep. Custom
+//! `stt-ai sweep` runs export through the same two helpers.
 
 use std::io::Write;
 use std::path::Path;
 
-use crate::accel::ArrayConfig;
-use crate::dse::capacity::{CapacityRow, DramOverheadRow};
-use crate::dse::delta::DeltaSweep;
-use crate::dse::{energy_area, retention, scratchpad::PartialOfmapRow};
-use crate::memsys::DramModel;
-use crate::models::{self, DType};
-use crate::mram::MtjTech;
-use crate::util::units::MB;
+use crate::dse::engine::{paper_specs, shared_zoo, Runner, SweepResult};
+use crate::util::json::Json;
 
-fn write_csv(path: &Path, header: &str, rows: &[String]) -> std::io::Result<()> {
+/// Stable file names for the paper sweeps (kept close to the figure list).
+fn file_name(sweep: &str) -> String {
+    match sweep {
+        "fig10" => "fig10_model_sizes.csv".into(),
+        "fig11" => "fig11_glb_capacity.csv".into(),
+        "fig12" => "fig12_dram_overhead.csv".into(),
+        "fig13" => "fig13_retention.csv".into(),
+        "fig14a" => "fig14a_retention_vs_array.csv".into(),
+        "fig14b" => "fig14b_retention_vs_batch.csv".into(),
+        "fig15" => "fig15_delta_scaling.csv".into(),
+        "fig16" => "fig16_energy_area.csv".into(),
+        "fig17" => "fig17_lsb_bank.csv".into(),
+        "fig18" => "fig18_partial_ofmaps.csv".into(),
+        "fig19" => "fig19_scratchpad_energy.csv".into(),
+        other => format!("{other}.csv"),
+    }
+}
+
+/// Write one sweep's records as a CSV (axis columns + metric columns).
+pub fn write_results_csv(path: &Path, results: &[SweepResult]) -> std::io::Result<()> {
     let mut f = std::fs::File::create(path)?;
-    writeln!(f, "{header}")?;
-    for r in rows {
-        writeln!(f, "{r}")?;
+    if let Some(first) = results.first() {
+        writeln!(f, "{}", first.csv_header())?;
+    }
+    for r in results {
+        writeln!(f, "{}", r.csv_row())?;
     }
     Ok(())
 }
 
-/// Export every figure's data series as CSVs into `dir`.
-/// Returns the list of files written.
+/// Write records as a JSON array of `{sweep, point, metrics}` objects.
+pub fn export_json(path: &Path, results: &[SweepResult]) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", Json::Arr(results.iter().map(SweepResult::to_json).collect()))
+}
+
+/// Export every figure's data series into `dir` (CSV per sweep + one JSON
+/// dump + Table III). Returns the list of files written.
 pub fn export_all(dir: &Path) -> std::io::Result<Vec<String>> {
+    export_all_with(dir, &Runner::default())
+}
+
+pub fn export_all_with(dir: &Path, runner: &Runner) -> std::io::Result<Vec<String>> {
     std::fs::create_dir_all(dir)?;
-    let zoo = models::zoo();
+    let zoo = shared_zoo();
     let mut written = Vec::new();
-    let mut emit = |name: &str, header: &str, rows: Vec<String>| -> std::io::Result<()> {
-        write_csv(&dir.join(name), header, &rows)?;
-        written.push(name.to_string());
-        Ok(())
-    };
-
-    // Fig. 10.
-    emit(
-        "fig10_model_sizes.csv",
-        "model,int8_bytes,bf16_bytes,fmap_min,fmap_max,weight_min,weight_max",
-        zoo.iter()
-            .map(|m| {
-                let r = CapacityRow::analyze(m, DType::Bf16, &[1]);
-                format!(
-                    "{},{},{},{},{},{},{}",
-                    r.model, r.size_int8, r.size_bf16, r.fmap_min, r.fmap_max, r.weight_min, r.weight_max
-                )
-            })
-            .collect(),
-    )?;
-
-    // Fig. 11.
-    let mut rows = Vec::new();
-    for m in &zoo {
-        for b in [1u64, 2, 4, 8] {
-            rows.push(format!(
-                "{},{},{},{}",
-                m.name,
-                b,
-                m.max_conv_working_set(DType::Int8, b),
-                m.max_conv_working_set(DType::Bf16, b)
-            ));
-        }
-    }
-    emit("fig11_glb_capacity.csv", "model,batch,int8_bytes,bf16_bytes", rows)?;
-
-    // Fig. 12.
-    let a = ArrayConfig::paper_42x42();
-    let dram = DramModel::ddr4_2933_dual();
-    let mut rows = Vec::new();
-    for m in &zoo {
-        for dt in [DType::Int8, DType::Bf16] {
-            for b in [1u64, 2, 4, 8] {
-                let r = DramOverheadRow::analyze(m, &a, &dram, dt, b, 12 * MB);
-                rows.push(format!(
-                    "{},{},{},{},{:.6e},{:.6e}",
-                    r.model,
-                    r.dtype_bytes * 8,
-                    b,
-                    r.spill_bytes,
-                    r.extra_latency,
-                    r.extra_energy
-                ));
-            }
-        }
-    }
-    emit("fig12_dram_overhead.csv", "model,dtype_bits,batch,spill_bytes,latency_s,energy_j", rows)?;
-
-    // Fig. 13.
-    emit(
-        "fig13_retention.csv",
-        "model,min_t_ret_s,max_t_ret_s",
-        retention::fig13(&zoo)
-            .iter()
-            .map(|r| format!("{},{:.6e},{:.6e}", r.model, r.min_t_ret, r.max_t_ret))
-            .collect(),
-    )?;
-
-    // Fig. 14.
-    emit(
-        "fig14a_retention_vs_array.csv",
-        "macs,max_t_ret_s",
-        retention::fig14a(&zoo, &[14, 28, 42, 56, 84])
-            .iter()
-            .map(|(m, t)| format!("{m},{t:.6e}"))
-            .collect(),
-    )?;
-    emit(
-        "fig14b_retention_vs_batch.csv",
-        "batch,max_t_ret_s",
-        retention::fig14b(&zoo, &[1, 2, 4, 8, 16, 32])
-            .iter()
-            .map(|(b, t)| format!("{b},{t:.6e}"))
-            .collect(),
-    )?;
-
-    // Fig. 15 / 17 sweeps.
-    for (name, tech, ber) in [
-        ("fig15_sakhare2020_1e-8.csv", MtjTech::sakhare2020(), 1e-8),
-        ("fig15_wei2019_1e-8.csv", MtjTech::wei2019(), 1e-8),
-        ("fig17_wei2019_1e-5.csv", MtjTech::wei2019(), 1e-5),
-    ] {
-        let s = DeltaSweep::run(tech, ber, &DeltaSweep::default_deltas());
-        let rows = s
-            .retention
-            .iter()
-            .zip(&s.read_pulse)
-            .zip(&s.write_pulse)
-            .map(|((r, rp), wp)| format!("{},{:.6e},{:.6e},{:.6e}", r.0, r.1, rp.1, wp.1))
-            .collect();
-        emit(name, "delta,retention_s,read_pulse_s,write_pulse_s", rows)?;
+    let mut all: Vec<SweepResult> = Vec::new();
+    for spec in paper_specs(&zoo) {
+        let results = runner.run(spec);
+        let name = file_name(&results[0].sweep);
+        write_results_csv(&dir.join(&name), &results)?;
+        written.push(name);
+        all.extend(results);
     }
 
-    // Fig. 16.
-    let caps = energy_area::default_capacities_mb();
-    for (name, rows) in [
-        ("fig16_glb_27p5.csv", energy_area::fig16_glb(&caps)),
-        ("fig16_lsb_17p5.csv", energy_area::fig16_lsb(&caps)),
-    ] {
-        emit(
-            name,
-            "capacity_bytes,sram_energy_j,mram_energy_j,sram_area_mm2,mram_area_mm2",
-            rows.iter()
-                .map(|r| {
-                    format!(
-                        "{},{:.6e},{:.6e},{:.6},{:.6}",
-                        r.capacity_bytes, r.sram_energy, r.mram_energy, r.sram_area, r.mram_area
-                    )
-                })
-                .collect(),
-        )?;
+    // Table III is a fixed three-point composition, not a sweep.
+    let t3 = "table3_accelerators.csv";
+    let mut f = std::fs::File::create(dir.join(t3))?;
+    writeln!(f, "accelerator,area_mm2,dynamic_mw,leakage_mw")?;
+    for r in super::table3_rows() {
+        writeln!(f, "{},{:.4},{:.3},{:.4}", r.name, r.area_mm2, r.dynamic_mw, r.leakage_mw)?;
     }
+    written.push(t3.to_string());
 
-    // Fig. 18.
-    emit(
-        "fig18_partial_ofmaps.csv",
-        "model,bf16_bytes,int8_bytes",
-        zoo.iter()
-            .map(|m| {
-                let r = PartialOfmapRow::analyze(m);
-                format!("{},{},{}", r.model, r.bf16_bytes, r.int8_bytes)
-            })
-            .collect(),
-    )?;
-
-    // Table III.
-    emit(
-        "table3_accelerators.csv",
-        "accelerator,area_mm2,dynamic_mw,leakage_mw",
-        super::table3_rows()
-            .iter()
-            .map(|r| format!("{},{:.4},{:.3},{:.4}", r.name, r.area_mm2, r.dynamic_mw, r.leakage_mw))
-            .collect(),
-    )?;
-
+    let js = "sweeps.json";
+    export_json(&dir.join(js), &all)?;
+    written.push(js.to_string());
     Ok(written)
 }
 
@@ -183,9 +89,10 @@ mod tests {
     #[test]
     fn exports_all_figures() {
         let dir = std::env::temp_dir().join("stt_ai_csv_test");
-        let files = export_all(&dir).unwrap();
-        assert!(files.len() >= 12, "{files:?}");
-        for f in &files {
+        let files = export_all_with(&dir, &Runner::new(2)).unwrap();
+        // 11 sweep CSVs + table3 + sweeps.json.
+        assert_eq!(files.len(), 13, "{files:?}");
+        for f in files.iter().filter(|f| f.ends_with(".csv")) {
             let text = std::fs::read_to_string(dir.join(f)).unwrap();
             let lines: Vec<&str> = text.lines().collect();
             assert!(lines.len() >= 2, "{f} must have header + data");
@@ -202,6 +109,7 @@ mod tests {
         let dir = std::env::temp_dir().join("stt_ai_csv_test2");
         export_all(&dir).unwrap();
         let text = std::fs::read_to_string(dir.join("fig13_retention.csv")).unwrap();
+        assert_eq!(text.lines().next().unwrap(), "model,min_t_ret_s,max_t_ret_s");
         let data_rows = text.lines().skip(1).count();
         assert_eq!(data_rows, 19);
         for l in text.lines().skip(1) {
@@ -209,6 +117,22 @@ mod tests {
             let min: f64 = parts[1].parse().unwrap();
             let max: f64 = parts[2].parse().unwrap();
             assert!(min <= max);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn json_dump_round_trips() {
+        let dir = std::env::temp_dir().join("stt_ai_json_test");
+        export_all_with(&dir, &Runner::new(1)).unwrap();
+        let text = std::fs::read_to_string(dir.join("sweeps.json")).unwrap();
+        let v = Json::parse(text.trim()).unwrap();
+        let arr = v.as_arr().unwrap();
+        assert!(arr.len() > 300, "all sweeps dumped: {}", arr.len());
+        for rec in arr {
+            assert!(rec.req_str("sweep").is_ok());
+            assert!(rec.req("point").unwrap().as_obj().is_some());
+            assert!(rec.req("metrics").unwrap().as_obj().is_some());
         }
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -1,142 +1,214 @@
-//! Plain-text renderers for every figure of §V. Each `fig*` function prints
-//! the paper-shaped rows/series to the given writer and returns the data so
-//! benches/tests can assert on it.
+//! Figure renderers for §V, driven by the unified `dse::engine` sweeps.
+//!
+//! Every `fig*` function builds its figure's [`SweepSpec`], evaluates it on
+//! the [`Runner`]'s work-stealing pool (deterministic, ordered results) and
+//! prints the paper-shaped table from the unified [`SweepResult`] records.
+//! The text is **byte-identical** to the frozen pre-refactor renderers in
+//! [`super::legacy`] — `tests/figures.rs` asserts this for every figure —
+//! while regeneration fans out over all cores and obeys `--sweep` axis
+//! overrides.
+//!
+//! `fig*` entry points keep the old one-argument signature (auto-sized
+//! pool); `fig*_with` take an explicit [`Runner`] for `--parallel N` and
+//! axis overrides.
 
 use std::io::Write;
 
-use crate::accel::ArrayConfig;
-use crate::dse::{
-    capacity::{self, CapacityRow, DramOverheadRow},
-    delta::{paper_design_points, DeltaSweep},
-    energy_area,
-    retention,
-    scratchpad::{PartialOfmapRow, ScratchpadEnergyRow},
-};
-use crate::memsys::DramModel;
-use crate::models::{self, DType, Model};
+use crate::dse::delta::paper_design_points;
+use crate::dse::engine::{self, Axis, Runner, SweepResult, SweepSpec};
+use crate::models::DType;
 use crate::mram::MtjTech;
 use crate::util::units::{fmt_bytes, fmt_time, KB, MB};
 
-fn zoo() -> Vec<Model> {
-    models::zoo()
+fn u64_axis(spec: &SweepSpec, name: &str, default: &[u64]) -> Vec<u64> {
+    match spec.axis(name) {
+        Some(Axis::Batch(v)) | Some(Axis::GlbMb(v)) | Some(Axis::Macs(v)) => v.clone(),
+        _ => default.to_vec(),
+    }
+}
+
+fn f64_axis(spec: &SweepSpec, name: &str, default: &[f64]) -> Vec<f64> {
+    match spec.axis(name) {
+        Some(Axis::Delta(v)) | Some(Axis::Ber(v)) => v.clone(),
+        _ => default.to_vec(),
+    }
 }
 
 /// Fig. 10: model sizes + conv fmap/weight ranges.
-pub fn fig10(w: &mut impl Write) -> std::io::Result<Vec<CapacityRow>> {
+pub fn fig10(w: &mut impl Write) -> std::io::Result<Vec<SweepResult>> {
+    fig10_with(w, &Runner::default())
+}
+
+pub fn fig10_with(w: &mut impl Write, r: &Runner) -> std::io::Result<Vec<SweepResult>> {
     writeln!(w, "== Fig. 10: model sizes and conv fmap/weight ranges ==")?;
     writeln!(
         w,
         "{:<14} {:>10} {:>10} {:>12} {:>12} {:>12} {:>12}",
         "model", "int8", "bf16", "fmap-min", "fmap-max", "wt-min", "wt-max"
     )?;
-    let rows: Vec<CapacityRow> =
-        zoo().iter().map(|m| CapacityRow::analyze(m, DType::Bf16, &[1])).collect();
-    for r in &rows {
+    let rows = r.run(engine::spec_fig10(&engine::shared_zoo()));
+    for rec in &rows {
         writeln!(
             w,
             "{:<14} {:>10} {:>10} {:>12} {:>12} {:>12} {:>12}",
-            r.model,
-            fmt_bytes(r.size_int8),
-            fmt_bytes(r.size_bf16),
-            r.fmap_min,
-            r.fmap_max,
-            r.weight_min,
-            r.weight_max
+            rec.point.model.as_deref().unwrap(),
+            fmt_bytes(rec.metric_u64("int8_bytes")),
+            fmt_bytes(rec.metric_u64("bf16_bytes")),
+            rec.metric_u64("fmap_min"),
+            rec.metric_u64("fmap_max"),
+            rec.metric_u64("weight_min"),
+            rec.metric_u64("weight_max")
         )?;
     }
-    let total: u64 = rows.iter().map(|r| r.size_bf16).sum();
+    let total: u64 = rows.iter().map(|x| x.metric_u64("bf16_bytes")).sum();
     writeln!(w, "-- zoo total bf16 {} (paper: ~280 MB NVM for bf16 class)", fmt_bytes(total))?;
     Ok(rows)
 }
 
 /// Fig. 11: required GLB capacity vs batch size.
-pub fn fig11(w: &mut impl Write) -> std::io::Result<Vec<(String, Vec<(u64, u64)>)>> {
-    let batches = [1u64, 2, 4, 8];
+pub fn fig11(w: &mut impl Write) -> std::io::Result<Vec<SweepResult>> {
+    fig11_with(w, &Runner::default())
+}
+
+pub fn fig11_with(w: &mut impl Write, r: &Runner) -> std::io::Result<Vec<SweepResult>> {
+    let spec = r.resolve(engine::spec_fig11(&engine::shared_zoo()));
+    let batches = u64_axis(&spec, "batch", &[1, 2, 4, 8]);
+    let rows = spec.run(r.pool());
     writeln!(w, "== Fig. 11: required GLB capacity (int8 | bf16) vs batch ==")?;
-    writeln!(w, "{:<14} {}", "model", "batch: 1 | 2 | 4 | 8  (int8, bf16)")?;
-    let mut out = Vec::new();
-    for m in zoo() {
-        let mut series = Vec::new();
-        let mut line = format!("{:<14}", m.name);
-        for &b in &batches {
-            let i8 = m.max_conv_working_set(DType::Int8, b);
-            let b16 = m.max_conv_working_set(DType::Bf16, b);
-            line += &format!(" {:>9}/{:<9}", fmt_bytes(i8), fmt_bytes(b16));
-            series.push((b, b16));
+    let heads: Vec<String> = batches.iter().map(|b| b.to_string()).collect();
+    let head = format!("batch: {}  (int8, bf16)", heads.join(" | "));
+    writeln!(w, "{:<14} {head}", "model")?;
+    for chunk in rows.chunks(batches.len()) {
+        let mut line = format!("{:<14}", chunk[0].point.model.as_deref().unwrap());
+        for rec in chunk {
+            line += &format!(
+                " {:>9}/{:<9}",
+                fmt_bytes(rec.metric_u64("int8_bytes")),
+                fmt_bytes(rec.metric_u64("bf16_bytes"))
+            );
         }
         writeln!(w, "{line}")?;
-        out.push((m.name.clone(), series));
     }
-    for &b in &batches {
-        let need = capacity::glb_capacity_for_zoo(&zoo(), DType::Int8, b);
-        let served = capacity::models_served(&zoo(), DType::Int8, b, 12 * MB);
-        writeln!(w, "-- batch {b}: zoo-max int8 {} ; 12 MB serves {served}/19", fmt_bytes(need))?;
+    let n_models = rows.len() / batches.len();
+    for (bi, &b) in batches.iter().enumerate() {
+        let need = rows
+            .iter()
+            .skip(bi)
+            .step_by(batches.len())
+            .map(|x| x.metric_u64("int8_bytes"))
+            .max()
+            .unwrap_or(0);
+        let served = rows
+            .iter()
+            .skip(bi)
+            .step_by(batches.len())
+            .filter(|x| x.metric_u64("int8_bytes") <= 12 * MB)
+            .count();
+        writeln!(
+            w,
+            "-- batch {b}: zoo-max int8 {} ; 12 MB serves {served}/{n_models}",
+            fmt_bytes(need)
+        )?;
     }
-    Ok(out)
+    Ok(rows)
 }
 
 /// Fig. 12: extra DRAM latency/energy with a 12 MB GLB.
-pub fn fig12(w: &mut impl Write) -> std::io::Result<Vec<DramOverheadRow>> {
-    let a = ArrayConfig::paper_42x42();
-    let dram = DramModel::ddr4_2933_dual();
-    let mut rows = Vec::new();
+pub fn fig12(w: &mut impl Write) -> std::io::Result<Vec<SweepResult>> {
+    fig12_with(w, &Runner::default())
+}
+
+pub fn fig12_with(w: &mut impl Write, r: &Runner) -> std::io::Result<Vec<SweepResult>> {
+    let spec = r.resolve(engine::spec_fig12(&engine::shared_zoo()));
+    // The paper's table shows the largest swept batch (8 by default).
+    let show = *u64_axis(&spec, "batch", &[1, 2, 4, 8]).last().unwrap();
+    let rows = spec.run(r.pool());
     writeln!(w, "== Fig. 12: extra DRAM access latency/energy (12 MB GLB) ==")?;
-    for dt in [DType::Int8, DType::Bf16] {
-        writeln!(w, "-- dtype {dt:?}")?;
-        writeln!(w, "{:<14} {:>6} {:>12} {:>12} {:>12}", "model", "batch", "spill", "latency", "energy")?;
-        for m in zoo() {
-            for batch in [1u64, 2, 4, 8] {
-                let r = DramOverheadRow::analyze(&m, &a, &dram, dt, batch, 12 * MB);
-                if batch == 8 {
-                    writeln!(
-                        w,
-                        "{:<14} {:>6} {:>12} {:>10.3}ms {:>10.3}mJ",
-                        r.model,
-                        r.batch,
-                        fmt_bytes(r.spill_bytes),
-                        r.extra_latency * 1e3,
-                        r.extra_energy * 1e3
-                    )?;
-                }
-                rows.push(r);
-            }
+    let mut cur: Option<DType> = None;
+    for rec in &rows {
+        let dt = rec.point.dtype.unwrap();
+        if cur != Some(dt) {
+            cur = Some(dt);
+            writeln!(w, "-- dtype {dt:?}")?;
+            writeln!(
+                w,
+                "{:<14} {:>6} {:>12} {:>12} {:>12}",
+                "model", "batch", "spill", "latency", "energy"
+            )?;
+        }
+        if rec.point.batch == Some(show) {
+            writeln!(
+                w,
+                "{:<14} {:>6} {:>12} {:>10.3}ms {:>10.3}mJ",
+                rec.point.model.as_deref().unwrap(),
+                rec.point.batch.unwrap(),
+                fmt_bytes(rec.metric_u64("spill_bytes")),
+                rec.metric("latency_s") * 1e3,
+                rec.metric("energy_j") * 1e3
+            )?;
         }
     }
     Ok(rows)
 }
 
 /// Fig. 13: GLB retention range per model (42×42 MACs, batch 16, bf16).
-pub fn fig13(w: &mut impl Write) -> std::io::Result<Vec<retention::RetentionRow>> {
+pub fn fig13(w: &mut impl Write) -> std::io::Result<Vec<SweepResult>> {
+    fig13_with(w, &Runner::default())
+}
+
+pub fn fig13_with(w: &mut impl Write, r: &Runner) -> std::io::Result<Vec<SweepResult>> {
     writeln!(w, "== Fig. 13: GLB retention time range (42x42 MACs, batch 16) ==")?;
-    let rows = retention::fig13(&zoo());
-    for r in &rows {
-        writeln!(w, "{:<14} min {:>12}  max {:>12}", r.model, fmt_time(r.min_t_ret), fmt_time(r.max_t_ret))?;
+    let rows = r.run(engine::spec_fig13(&engine::shared_zoo()));
+    for rec in &rows {
+        writeln!(
+            w,
+            "{:<14} min {:>12}  max {:>12}",
+            rec.point.model.as_deref().unwrap(),
+            fmt_time(rec.metric("min_t_ret_s")),
+            fmt_time(rec.metric("max_t_ret_s"))
+        )?;
     }
-    let worst = rows.iter().map(|r| r.max_t_ret).fold(0.0, f64::max);
+    let worst = rows.iter().map(|x| x.metric("max_t_ret_s")).fold(0.0, f64::max);
     writeln!(w, "-- worst case {} (paper: < 1.5 s, most < 0.5 s)", fmt_time(worst))?;
     Ok(rows)
 }
 
 /// Fig. 14: max retention vs MAC-array size (a) and batch (b).
-pub fn fig14(w: &mut impl Write) -> std::io::Result<(Vec<(u64, f64)>, Vec<(u64, f64)>)> {
-    let z = zoo();
-    let a = retention::fig14a(&z, &[14, 28, 42, 56, 84]);
-    let b = retention::fig14b(&z, &[1, 2, 4, 8, 16, 32]);
+pub fn fig14(w: &mut impl Write) -> std::io::Result<Vec<SweepResult>> {
+    fig14_with(w, &Runner::default())
+}
+
+pub fn fig14_with(w: &mut impl Write, r: &Runner) -> std::io::Result<Vec<SweepResult>> {
+    let zoo = engine::shared_zoo();
+    let spec_a = r.resolve(engine::spec_fig14a(&zoo));
+    let macs = u64_axis(&spec_a, "macs", &[14, 28, 42, 56, 84]);
+    let rows_a = spec_a.run(r.pool());
     writeln!(w, "== Fig. 14a: max retention vs MAC array (batch 16) ==")?;
-    for (macs, t) in &a {
-        writeln!(w, "  {macs}x{macs} MACs: {}", fmt_time(*t))?;
+    for (gi, group) in rows_a.chunks(rows_a.len() / macs.len()).enumerate() {
+        let worst = group.iter().map(|x| x.metric("max_t_ret_s")).fold(0.0, f64::max);
+        let m = macs[gi];
+        writeln!(w, "  {m}x{m} MACs: {}", fmt_time(worst))?;
     }
+    let spec_b = r.resolve(engine::spec_fig14b(&zoo));
+    let batches = u64_axis(&spec_b, "batch", &[1, 2, 4, 8, 16, 32]);
+    let rows_b = spec_b.run(r.pool());
     writeln!(w, "== Fig. 14b: max retention vs batch (42x42) ==")?;
-    for (batch, t) in &b {
-        writeln!(w, "  batch {batch}: {}", fmt_time(*t))?;
+    for (gi, group) in rows_b.chunks(rows_b.len() / batches.len()).enumerate() {
+        let worst = group.iter().map(|x| x.metric("max_t_ret_s")).fold(0.0, f64::max);
+        writeln!(w, "  batch {}: {}", batches[gi], fmt_time(worst))?;
     }
-    Ok((a, b))
+    Ok(rows_a.into_iter().chain(rows_b).collect())
 }
 
 /// Fig. 15: Δ scaling panels for both silicon base cases.
-pub fn fig15(w: &mut impl Write) -> std::io::Result<Vec<DeltaSweep>> {
-    let deltas = DeltaSweep::default_deltas();
-    let mut out = Vec::new();
+pub fn fig15(w: &mut impl Write) -> std::io::Result<Vec<SweepResult>> {
+    fig15_with(w, &Runner::default())
+}
+
+pub fn fig15_with(w: &mut impl Write, r: &Runner) -> std::io::Result<Vec<SweepResult>> {
+    let spec = r.resolve(engine::spec_fig15());
+    let deltas = f64_axis(&spec, "delta", &[]);
+    let rows = spec.run(r.pool());
     writeln!(w, "== Fig. 15: thermal-stability scaling ==")?;
     for pts in paper_design_points(MtjTech::sakhare2020()) {
         writeln!(
@@ -150,118 +222,182 @@ pub fn fig15(w: &mut impl Write) -> std::io::Result<Vec<DeltaSweep>> {
             fmt_time(pts.achieved_retention)
         )?;
     }
-    for (tech, ber) in [(MtjTech::sakhare2020(), 1e-8), (MtjTech::wei2019(), 1e-8)] {
-        let s = DeltaSweep::run(tech, ber, &deltas);
-        writeln!(w, "-- base case {} @ BER {ber:.0e}: Δ grid {} points", s.tech, deltas.len())?;
+    let ber = 1.0e-8_f64;
+    for group in rows.chunks(deltas.len()) {
+        let tech = group[0].point.tech.unwrap().tech();
+        writeln!(w, "-- base case {} @ BER {ber:.0e}: Δ grid {} points", tech.name, deltas.len())?;
         for d in [12.5, 19.5, 27.5, 39.0, 55.0, 60.0] {
-            let i = deltas.iter().position(|&x| (x - d).abs() < 0.6).unwrap_or(0);
-            writeln!(
-                w,
-                "   Δ≈{:<5} retention {:>12}  read {:>10}  write {:>10}",
-                d,
-                fmt_time(s.retention[i].1),
-                fmt_time(s.read_pulse[i].1),
-                fmt_time(s.write_pulse[i].1)
-            )?;
+            // Showcase rows only for Δ values the (possibly overridden)
+            // grid actually contains — never attribute another Δ's physics.
+            if let Some(i) = deltas.iter().position(|&x| (x - d).abs() < 0.6) {
+                writeln!(
+                    w,
+                    "   Δ≈{:<5} retention {:>12}  read {:>10}  write {:>10}",
+                    d,
+                    fmt_time(group[i].metric("retention_s")),
+                    fmt_time(group[i].metric("read_pulse_s")),
+                    fmt_time(group[i].metric("write_pulse_s"))
+                )?;
+            }
         }
-        out.push(s);
     }
-    Ok(out)
+    Ok(rows)
 }
 
 /// Fig. 16: SRAM vs MRAM energy & area across capacities.
-pub fn fig16(w: &mut impl Write) -> std::io::Result<Vec<energy_area::EnergyAreaRow>> {
+pub fn fig16(w: &mut impl Write) -> std::io::Result<Vec<SweepResult>> {
+    fig16_with(w, &Runner::default())
+}
+
+pub fn fig16_with(w: &mut impl Write, r: &Runner) -> std::io::Result<Vec<SweepResult>> {
     writeln!(w, "== Fig. 16: SRAM vs STT-MRAM energy/area vs capacity ==")?;
-    let caps = energy_area::default_capacities_mb();
-    let mut all = Vec::new();
-    for (label, rows) in
-        [("GLB Δ_GB=27.5", energy_area::fig16_glb(&caps)), ("LSB Δ_GB=17.5", energy_area::fig16_lsb(&caps))]
-    {
-        writeln!(w, "-- {label}")?;
-        writeln!(w, "{:>6} {:>12} {:>12} {:>8} {:>10} {:>10} {:>8}", "MB", "E_sram", "E_mram", "Ex", "A_sram", "A_mram", "Ax")?;
-        for r in &rows {
+    let spec = r.resolve(engine::spec_fig16());
+    let deltas = f64_axis(&spec, "delta", &[27.5, 17.5]);
+    let rows = spec.run(r.pool());
+    for (gi, group) in rows.chunks(rows.len() / deltas.len()).enumerate() {
+        // Default two-point sweep: robust GLB bank first, relaxed LSB last.
+        let bank = if gi == 0 { "GLB" } else if gi + 1 == deltas.len() { "LSB" } else { "Δ" };
+        writeln!(w, "-- {bank} Δ_GB={}", deltas[gi])?;
+        writeln!(
+            w,
+            "{:>6} {:>12} {:>12} {:>8} {:>10} {:>10} {:>8}",
+            "MB", "E_sram", "E_mram", "Ex", "A_sram", "A_mram", "Ax"
+        )?;
+        for rec in group {
+            let (e_sram, e_mram) = (rec.metric("sram_energy_j"), rec.metric("mram_energy_j"));
+            let (a_sram, a_mram) = (rec.metric("sram_area_mm2"), rec.metric("mram_area_mm2"));
             writeln!(
                 w,
                 "{:>6} {:>10.1}pJ {:>10.1}pJ {:>7.2}x {:>8.3}mm2 {:>8.3}mm2 {:>7.1}x",
-                r.capacity_bytes / MB,
-                r.sram_energy * 1e12,
-                r.mram_energy * 1e12,
-                r.energy_ratio(),
-                r.sram_area,
-                r.mram_area,
-                r.area_ratio()
+                rec.point.glb_mb.unwrap(),
+                e_sram * 1e12,
+                e_mram * 1e12,
+                e_sram / e_mram,
+                a_sram,
+                a_mram,
+                a_sram / a_mram
             )?;
         }
-        all.extend(rows);
     }
-    Ok(all)
+    Ok(rows)
 }
 
 /// Fig. 17: Δ scaling with relaxed BER (LSB bank).
-pub fn fig17(w: &mut impl Write) -> std::io::Result<Vec<DeltaSweep>> {
+pub fn fig17(w: &mut impl Write) -> std::io::Result<Vec<SweepResult>> {
+    fig17_with(w, &Runner::default())
+}
+
+pub fn fig17_with(w: &mut impl Write, r: &Runner) -> std::io::Result<Vec<SweepResult>> {
     writeln!(w, "== Fig. 17: Δ scaling at relaxed BER 1e-5 (LSB bank, base [13]) ==")?;
-    let deltas = DeltaSweep::default_deltas();
-    let relaxed = DeltaSweep::run(MtjTech::wei2019(), 1e-5, &deltas);
-    let tight = DeltaSweep::run(MtjTech::wei2019(), 1e-8, &deltas);
+    let spec = r.resolve(engine::spec_fig17());
+    let bers = f64_axis(&spec, "ber", &[1.0e-5, 1.0e-8]);
+    let deltas = f64_axis(&spec, "delta", &[]);
+    let rows = spec.run(r.pool());
+    let groups: Vec<&[SweepResult]> = rows.chunks(deltas.len()).collect();
+    let (relaxed, tight) = (groups[0], *groups.last().unwrap());
+    // Label the comparison with the actual tightest swept BER (1e-8 by
+    // default), so an overridden ber axis never misattributes the baseline.
+    let tight_ber = *bers.last().unwrap();
     for d in [12.5, 17.5, 27.5] {
-        let i = deltas.iter().position(|&x| (x - d).abs() < 0.6).unwrap();
-        writeln!(
-            w,
-            "  Δ≈{:<5} ret {:>10} (vs {:>10} @1e-8)  write {:>10} (vs {:>10})",
-            d,
-            fmt_time(relaxed.retention[i].1),
-            fmt_time(tight.retention[i].1),
-            fmt_time(relaxed.write_pulse[i].1),
-            fmt_time(tight.write_pulse[i].1)
-        )?;
+        if let Some(i) = deltas.iter().position(|&x| (x - d).abs() < 0.6) {
+            writeln!(
+                w,
+                "  Δ≈{:<5} ret {:>10} (vs {:>10} @{tight_ber:e})  write {:>10} (vs {:>10})",
+                d,
+                fmt_time(relaxed[i].metric("retention_s")),
+                fmt_time(tight[i].metric("retention_s")),
+                fmt_time(relaxed[i].metric("write_pulse_s")),
+                fmt_time(tight[i].metric("write_pulse_s"))
+            )?;
+        }
     }
-    Ok(vec![relaxed, tight])
+    Ok(rows)
 }
 
 /// Fig. 18: max partial-ofmap sizes.
-pub fn fig18(w: &mut impl Write) -> std::io::Result<Vec<PartialOfmapRow>> {
+pub fn fig18(w: &mut impl Write) -> std::io::Result<Vec<SweepResult>> {
+    fig18_with(w, &Runner::default())
+}
+
+pub fn fig18_with(w: &mut impl Write, r: &Runner) -> std::io::Result<Vec<SweepResult>> {
     writeln!(w, "== Fig. 18: max partial-ofmap size per model ==")?;
-    let rows: Vec<PartialOfmapRow> = zoo().iter().map(PartialOfmapRow::analyze).collect();
+    let rows = r.run(engine::spec_fig18(&engine::shared_zoo()));
     let mut fit = 0;
-    for r in &rows {
-        let ok = r.bf16_bytes <= 52 * KB;
+    for rec in &rows {
+        let bf16 = rec.metric_u64("bf16_bytes");
+        let ok = bf16 <= 52 * KB;
         if ok {
             fit += 1;
         }
         writeln!(
             w,
             "{:<14} bf16 {:>10}  int8 {:>10}  {}",
-            r.model,
-            fmt_bytes(r.bf16_bytes),
-            fmt_bytes(r.int8_bytes),
+            rec.point.model.as_deref().unwrap(),
+            fmt_bytes(bf16),
+            fmt_bytes(rec.metric_u64("int8_bytes")),
             if ok { "fits 52 KB" } else { "exceeds 52 KB" }
         )?;
     }
-    writeln!(w, "-- {fit}/19 fit the 52 KB bf16 scratchpad (26 KB int8)")?;
+    writeln!(w, "-- {fit}/{} fit the 52 KB bf16 scratchpad (26 KB int8)", rows.len())?;
     Ok(rows)
 }
 
 /// Fig. 19: buffer energy SRAM / MRAM / MRAM+scratchpad (ResNet-50).
-pub fn fig19(w: &mut impl Write) -> std::io::Result<ScratchpadEnergyRow> {
-    let a = ArrayConfig::paper_42x42();
-    let m = models::by_name("ResNet50").unwrap();
-    let r = ScratchpadEnergyRow::analyze(&m, &a, DType::Bf16, 16);
-    writeln!(w, "== Fig. 19: buffer energy per inference batch (ResNet-50, batch 16) ==")?;
-    let base = r.sram.total();
-    for (label, l) in
-        [("SRAM", &r.sram), ("MRAM", &r.mram), ("MRAM+scratchpad", &r.mram_scratchpad)]
-    {
+pub fn fig19(w: &mut impl Write) -> std::io::Result<Vec<SweepResult>> {
+    fig19_with(w, &Runner::default())
+}
+
+pub fn fig19_with(w: &mut impl Write, r: &Runner) -> std::io::Result<Vec<SweepResult>> {
+    let rows = r.run(engine::spec_fig19(&engine::shared_zoo()));
+    let rec = &rows[0];
+    let name = rec.point.model.as_deref().unwrap();
+    // The paper's display name for the default subject.
+    let display = if name == "ResNet50" { "ResNet-50" } else { name };
+    writeln!(
+        w,
+        "== Fig. 19: buffer energy per inference batch ({display}, batch {}) ==",
+        rec.point.batch.unwrap()
+    )?;
+    let base = engine::ledger_total(rec, "sram");
+    for (label, tag) in [("SRAM", "sram"), ("MRAM", "mram"), ("MRAM+scratchpad", "mram_sp")] {
+        let total = engine::ledger_total(rec, tag);
         writeln!(
             w,
             "  {:<16} total {:>10.3} mJ (norm {:.3})  [rd {:.3} wr {:.3} sp {:.3} dram {:.3} mJ]",
             label,
-            l.total() * 1e3,
-            l.total() / base,
-            l.glb_read * 1e3,
-            l.glb_write * 1e3,
-            l.scratchpad * 1e3,
-            l.dram * 1e3
+            total * 1e3,
+            total / base,
+            rec.metric(engine::ledger_metric(tag, "glb_read_j")) * 1e3,
+            rec.metric(engine::ledger_metric(tag, "glb_write_j")) * 1e3,
+            rec.metric(engine::ledger_metric(tag, "scratchpad_j")) * 1e3,
+            rec.metric(engine::ledger_metric(tag, "dram_j")) * 1e3
         )?;
     }
-    Ok(r)
+    Ok(rows)
+}
+
+/// Regenerate every figure (10–19) in order — the `stt-ai figures` hot path
+/// and the `benches/hotpath.rs` figure-regeneration entry.
+pub fn render_all(w: &mut impl Write, r: &Runner) -> std::io::Result<()> {
+    fig10_with(w, r)?;
+    writeln!(w)?;
+    fig11_with(w, r)?;
+    writeln!(w)?;
+    fig12_with(w, r)?;
+    writeln!(w)?;
+    fig13_with(w, r)?;
+    writeln!(w)?;
+    fig14_with(w, r)?;
+    writeln!(w)?;
+    fig15_with(w, r)?;
+    writeln!(w)?;
+    fig16_with(w, r)?;
+    writeln!(w)?;
+    fig17_with(w, r)?;
+    writeln!(w)?;
+    fig18_with(w, r)?;
+    writeln!(w)?;
+    fig19_with(w, r)?;
+    writeln!(w)?;
+    Ok(())
 }

@@ -1,0 +1,271 @@
+//! FROZEN pre-refactor serial figure renderers — the golden reference.
+//!
+//! These are the bespoke per-figure loops the `dse::engine` refactor
+//! replaced, kept verbatim so `tests/figures.rs` can assert that the
+//! engine-driven renderers in [`super::figures`] produce **byte-identical**
+//! text. Do not "improve" this module: its value is that it does not change.
+//! Everything here runs strictly serially.
+
+use std::io::Write;
+
+use crate::accel::ArrayConfig;
+use crate::dse::{
+    capacity::{self, CapacityRow, DramOverheadRow},
+    delta::{paper_design_points, DeltaSweep},
+    energy_area,
+    retention,
+    scratchpad::{PartialOfmapRow, ScratchpadEnergyRow},
+};
+use crate::memsys::DramModel;
+use crate::models::{self, DType, Model};
+use crate::mram::MtjTech;
+use crate::util::units::{fmt_bytes, fmt_time, KB, MB};
+
+fn zoo() -> Vec<Model> {
+    models::zoo()
+}
+
+/// Fig. 10: model sizes + conv fmap/weight ranges.
+pub fn fig10(w: &mut impl Write) -> std::io::Result<Vec<CapacityRow>> {
+    writeln!(w, "== Fig. 10: model sizes and conv fmap/weight ranges ==")?;
+    writeln!(
+        w,
+        "{:<14} {:>10} {:>10} {:>12} {:>12} {:>12} {:>12}",
+        "model", "int8", "bf16", "fmap-min", "fmap-max", "wt-min", "wt-max"
+    )?;
+    let rows: Vec<CapacityRow> =
+        zoo().iter().map(|m| CapacityRow::analyze(m, DType::Bf16, &[1])).collect();
+    for r in &rows {
+        writeln!(
+            w,
+            "{:<14} {:>10} {:>10} {:>12} {:>12} {:>12} {:>12}",
+            r.model,
+            fmt_bytes(r.size_int8),
+            fmt_bytes(r.size_bf16),
+            r.fmap_min,
+            r.fmap_max,
+            r.weight_min,
+            r.weight_max
+        )?;
+    }
+    let total: u64 = rows.iter().map(|r| r.size_bf16).sum();
+    writeln!(w, "-- zoo total bf16 {} (paper: ~280 MB NVM for bf16 class)", fmt_bytes(total))?;
+    Ok(rows)
+}
+
+/// Fig. 11: required GLB capacity vs batch size.
+pub fn fig11(w: &mut impl Write) -> std::io::Result<Vec<(String, Vec<(u64, u64)>)>> {
+    let batches = [1u64, 2, 4, 8];
+    writeln!(w, "== Fig. 11: required GLB capacity (int8 | bf16) vs batch ==")?;
+    writeln!(w, "{:<14} {}", "model", "batch: 1 | 2 | 4 | 8  (int8, bf16)")?;
+    let mut out = Vec::new();
+    for m in zoo() {
+        let mut series = Vec::new();
+        let mut line = format!("{:<14}", m.name);
+        for &b in &batches {
+            let i8 = m.max_conv_working_set(DType::Int8, b);
+            let b16 = m.max_conv_working_set(DType::Bf16, b);
+            line += &format!(" {:>9}/{:<9}", fmt_bytes(i8), fmt_bytes(b16));
+            series.push((b, b16));
+        }
+        writeln!(w, "{line}")?;
+        out.push((m.name.clone(), series));
+    }
+    for &b in &batches {
+        let need = capacity::glb_capacity_for_zoo(&zoo(), DType::Int8, b);
+        let served = capacity::models_served(&zoo(), DType::Int8, b, 12 * MB);
+        writeln!(w, "-- batch {b}: zoo-max int8 {} ; 12 MB serves {served}/19", fmt_bytes(need))?;
+    }
+    Ok(out)
+}
+
+/// Fig. 12: extra DRAM latency/energy with a 12 MB GLB.
+pub fn fig12(w: &mut impl Write) -> std::io::Result<Vec<DramOverheadRow>> {
+    let a = ArrayConfig::paper_42x42();
+    let dram = DramModel::ddr4_2933_dual();
+    let mut rows = Vec::new();
+    writeln!(w, "== Fig. 12: extra DRAM access latency/energy (12 MB GLB) ==")?;
+    for dt in [DType::Int8, DType::Bf16] {
+        writeln!(w, "-- dtype {dt:?}")?;
+        writeln!(w, "{:<14} {:>6} {:>12} {:>12} {:>12}", "model", "batch", "spill", "latency", "energy")?;
+        for m in zoo() {
+            for batch in [1u64, 2, 4, 8] {
+                let r = DramOverheadRow::analyze(&m, &a, &dram, dt, batch, 12 * MB);
+                if batch == 8 {
+                    writeln!(
+                        w,
+                        "{:<14} {:>6} {:>12} {:>10.3}ms {:>10.3}mJ",
+                        r.model,
+                        r.batch,
+                        fmt_bytes(r.spill_bytes),
+                        r.extra_latency * 1e3,
+                        r.extra_energy * 1e3
+                    )?;
+                }
+                rows.push(r);
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Fig. 13: GLB retention range per model (42×42 MACs, batch 16, bf16).
+pub fn fig13(w: &mut impl Write) -> std::io::Result<Vec<retention::RetentionRow>> {
+    writeln!(w, "== Fig. 13: GLB retention time range (42x42 MACs, batch 16) ==")?;
+    let rows = retention::fig13(&zoo());
+    for r in &rows {
+        writeln!(w, "{:<14} min {:>12}  max {:>12}", r.model, fmt_time(r.min_t_ret), fmt_time(r.max_t_ret))?;
+    }
+    let worst = rows.iter().map(|r| r.max_t_ret).fold(0.0, f64::max);
+    writeln!(w, "-- worst case {} (paper: < 1.5 s, most < 0.5 s)", fmt_time(worst))?;
+    Ok(rows)
+}
+
+/// Fig. 14: max retention vs MAC-array size (a) and batch (b).
+pub fn fig14(w: &mut impl Write) -> std::io::Result<(Vec<(u64, f64)>, Vec<(u64, f64)>)> {
+    let z = zoo();
+    let a = retention::fig14a(&z, &[14, 28, 42, 56, 84]);
+    let b = retention::fig14b(&z, &[1, 2, 4, 8, 16, 32]);
+    writeln!(w, "== Fig. 14a: max retention vs MAC array (batch 16) ==")?;
+    for (macs, t) in &a {
+        writeln!(w, "  {macs}x{macs} MACs: {}", fmt_time(*t))?;
+    }
+    writeln!(w, "== Fig. 14b: max retention vs batch (42x42) ==")?;
+    for (batch, t) in &b {
+        writeln!(w, "  batch {batch}: {}", fmt_time(*t))?;
+    }
+    Ok((a, b))
+}
+
+/// Fig. 15: Δ scaling panels for both silicon base cases.
+pub fn fig15(w: &mut impl Write) -> std::io::Result<Vec<DeltaSweep>> {
+    let deltas = DeltaSweep::default_deltas();
+    let mut out = Vec::new();
+    writeln!(w, "== Fig. 15: thermal-stability scaling ==")?;
+    for pts in paper_design_points(MtjTech::sakhare2020()) {
+        writeln!(
+            w,
+            "  {:<22} Δ={:<5.1} Δ_GB={:<5.1} t_w={} t_r={} ret={}",
+            pts.label,
+            pts.delta_scaled,
+            pts.delta_guard_banded,
+            fmt_time(pts.write_pulse),
+            fmt_time(pts.read_pulse),
+            fmt_time(pts.achieved_retention)
+        )?;
+    }
+    for (tech, ber) in [(MtjTech::sakhare2020(), 1e-8), (MtjTech::wei2019(), 1e-8)] {
+        let s = DeltaSweep::run(tech, ber, &deltas);
+        writeln!(w, "-- base case {} @ BER {ber:.0e}: Δ grid {} points", s.tech, deltas.len())?;
+        for d in [12.5, 19.5, 27.5, 39.0, 55.0, 60.0] {
+            let i = deltas.iter().position(|&x| (x - d).abs() < 0.6).unwrap_or(0);
+            writeln!(
+                w,
+                "   Δ≈{:<5} retention {:>12}  read {:>10}  write {:>10}",
+                d,
+                fmt_time(s.retention[i].1),
+                fmt_time(s.read_pulse[i].1),
+                fmt_time(s.write_pulse[i].1)
+            )?;
+        }
+        out.push(s);
+    }
+    Ok(out)
+}
+
+/// Fig. 16: SRAM vs MRAM energy & area across capacities.
+pub fn fig16(w: &mut impl Write) -> std::io::Result<Vec<energy_area::EnergyAreaRow>> {
+    writeln!(w, "== Fig. 16: SRAM vs STT-MRAM energy/area vs capacity ==")?;
+    let caps = energy_area::default_capacities_mb();
+    let mut all = Vec::new();
+    for (label, rows) in
+        [("GLB Δ_GB=27.5", energy_area::fig16_glb(&caps)), ("LSB Δ_GB=17.5", energy_area::fig16_lsb(&caps))]
+    {
+        writeln!(w, "-- {label}")?;
+        writeln!(w, "{:>6} {:>12} {:>12} {:>8} {:>10} {:>10} {:>8}", "MB", "E_sram", "E_mram", "Ex", "A_sram", "A_mram", "Ax")?;
+        for r in &rows {
+            writeln!(
+                w,
+                "{:>6} {:>10.1}pJ {:>10.1}pJ {:>7.2}x {:>8.3}mm2 {:>8.3}mm2 {:>7.1}x",
+                r.capacity_bytes / MB,
+                r.sram_energy * 1e12,
+                r.mram_energy * 1e12,
+                r.energy_ratio(),
+                r.sram_area,
+                r.mram_area,
+                r.area_ratio()
+            )?;
+        }
+        all.extend(rows);
+    }
+    Ok(all)
+}
+
+/// Fig. 17: Δ scaling with relaxed BER (LSB bank).
+pub fn fig17(w: &mut impl Write) -> std::io::Result<Vec<DeltaSweep>> {
+    writeln!(w, "== Fig. 17: Δ scaling at relaxed BER 1e-5 (LSB bank, base [13]) ==")?;
+    let deltas = DeltaSweep::default_deltas();
+    let relaxed = DeltaSweep::run(MtjTech::wei2019(), 1e-5, &deltas);
+    let tight = DeltaSweep::run(MtjTech::wei2019(), 1e-8, &deltas);
+    for d in [12.5, 17.5, 27.5] {
+        let i = deltas.iter().position(|&x| (x - d).abs() < 0.6).unwrap();
+        writeln!(
+            w,
+            "  Δ≈{:<5} ret {:>10} (vs {:>10} @1e-8)  write {:>10} (vs {:>10})",
+            d,
+            fmt_time(relaxed.retention[i].1),
+            fmt_time(tight.retention[i].1),
+            fmt_time(relaxed.write_pulse[i].1),
+            fmt_time(tight.write_pulse[i].1)
+        )?;
+    }
+    Ok(vec![relaxed, tight])
+}
+
+/// Fig. 18: max partial-ofmap sizes.
+pub fn fig18(w: &mut impl Write) -> std::io::Result<Vec<PartialOfmapRow>> {
+    writeln!(w, "== Fig. 18: max partial-ofmap size per model ==")?;
+    let rows: Vec<PartialOfmapRow> = zoo().iter().map(PartialOfmapRow::analyze).collect();
+    let mut fit = 0;
+    for r in &rows {
+        let ok = r.bf16_bytes <= 52 * KB;
+        if ok {
+            fit += 1;
+        }
+        writeln!(
+            w,
+            "{:<14} bf16 {:>10}  int8 {:>10}  {}",
+            r.model,
+            fmt_bytes(r.bf16_bytes),
+            fmt_bytes(r.int8_bytes),
+            if ok { "fits 52 KB" } else { "exceeds 52 KB" }
+        )?;
+    }
+    writeln!(w, "-- {fit}/19 fit the 52 KB bf16 scratchpad (26 KB int8)")?;
+    Ok(rows)
+}
+
+/// Fig. 19: buffer energy SRAM / MRAM / MRAM+scratchpad (ResNet-50).
+pub fn fig19(w: &mut impl Write) -> std::io::Result<ScratchpadEnergyRow> {
+    let a = ArrayConfig::paper_42x42();
+    let m = models::by_name("ResNet50").unwrap();
+    let r = ScratchpadEnergyRow::analyze(&m, &a, DType::Bf16, 16);
+    writeln!(w, "== Fig. 19: buffer energy per inference batch (ResNet-50, batch 16) ==")?;
+    let base = r.sram.total();
+    for (label, l) in
+        [("SRAM", &r.sram), ("MRAM", &r.mram), ("MRAM+scratchpad", &r.mram_scratchpad)]
+    {
+        writeln!(
+            w,
+            "  {:<16} total {:>10.3} mJ (norm {:.3})  [rd {:.3} wr {:.3} sp {:.3} dram {:.3} mJ]",
+            label,
+            l.total() * 1e3,
+            l.total() / base,
+            l.glb_read * 1e3,
+            l.glb_write * 1e3,
+            l.scratchpad * 1e3,
+            l.dram * 1e3
+        )?;
+    }
+    Ok(r)
+}

@@ -1,11 +1,13 @@
 //! Figure/table renderers: each function prints the same rows/series the
-//! paper reports, consuming the `dse` sweep outputs. Used by the CLI
-//! (`stt-ai figures`) and by the criterion benches.
+//! paper reports, consuming the unified `dse::engine` sweep records. Used by
+//! the CLI (`stt-ai figures`) and by the benches. [`legacy`] keeps the
+//! frozen pre-refactor serial renderers as the golden parity reference.
 
 pub mod export;
 pub mod figures;
+pub mod legacy;
 pub mod table3;
 
-pub use export::export_all;
+pub use export::{export_all, export_json};
 pub use figures::*;
 pub use table3::{AcceleratorSummary, CoreCosts, table3_rows};

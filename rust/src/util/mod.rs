@@ -1,9 +1,11 @@
-//! Small shared utilities: units, statistics, bisection root finding.
+//! Small shared utilities: units, statistics, bisection root finding, the
+//! offline JSON codec, and the work-stealing thread pool behind `dse::engine`.
 
 pub mod bench;
 pub mod bf16;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod units;

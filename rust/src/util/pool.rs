@@ -1,0 +1,182 @@
+//! Work-stealing thread pool for the DSE engine (std-only: no rayon).
+//!
+//! The engine's workloads are finite batches of independent, pure jobs (one
+//! per [`crate::dse::DesignPoint`]), so the pool is a *scoped fork-join*
+//! pool: every call to [`ThreadPool::map`] distributes the job indices over
+//! per-worker deques, spawns scoped workers that drain their own deque from
+//! the front and steal from the back of their neighbours' when empty, and
+//! joins. Results are re-assembled in input order, so the output is
+//! deterministic and byte-identical for any worker count — the property the
+//! figure-parity tests assert.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Number of hardware threads, with a safe fallback of 1.
+pub fn available_parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// A fixed-width work-stealing pool. Threads are scoped per `map` call (jobs
+/// are coarse — figure sweeps, not nanosecond ops — so spawn cost is noise).
+#[derive(Debug, Clone, Copy)]
+pub struct ThreadPool {
+    workers: usize,
+}
+
+impl Default for ThreadPool {
+    fn default() -> Self {
+        Self::auto()
+    }
+}
+
+impl ThreadPool {
+    /// A pool with exactly `workers` threads (clamped to ≥ 1).
+    pub fn new(workers: usize) -> Self {
+        Self { workers: workers.max(1) }
+    }
+
+    /// A pool sized to the machine.
+    pub fn auto() -> Self {
+        Self::new(available_parallelism())
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Apply `f` to every item, in parallel, returning results in input
+    /// order. `f(i, &items[i])` must be pure with respect to ordering — the
+    /// pool guarantees each index runs exactly once but not *where* or
+    /// *when*. Worker panics are propagated to the caller.
+    pub fn map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let n = self.workers.min(items.len());
+        if n <= 1 {
+            return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+
+        // Contiguous index chunks per worker; stealing takes from the *back*
+        // of a victim's chunk so owner (front) and thief (back) rarely race
+        // over the same cache lines of work.
+        let queues: Vec<Mutex<VecDeque<usize>>> = (0..n)
+            .map(|w| {
+                let lo = w * items.len() / n;
+                let hi = (w + 1) * items.len() / n;
+                Mutex::new((lo..hi).collect())
+            })
+            .collect();
+
+        let f = &f;
+        let queues = &queues;
+        let mut tagged: Vec<(usize, R)> = Vec::with_capacity(items.len());
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|w| {
+                    s.spawn(move || {
+                        let mut out: Vec<(usize, R)> = Vec::new();
+                        loop {
+                            // Pop from the own queue in its own statement so
+                            // the guard is dropped *before* stealing — never
+                            // hold two queue locks at once (deadlock-free).
+                            let own = queues[w].lock().unwrap().pop_front();
+                            let job = match own {
+                                Some(i) => Some(i),
+                                None => (1..n).find_map(|off| {
+                                    queues[(w + off) % n].lock().unwrap().pop_back()
+                                }),
+                            };
+                            match job {
+                                Some(i) => out.push((i, f(i, &items[i]))),
+                                None => return out,
+                            }
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                match h.join() {
+                    Ok(part) => tagged.extend(part),
+                    Err(panic) => std::panic::resume_unwind(panic),
+                }
+            }
+        });
+
+        debug_assert_eq!(tagged.len(), items.len());
+        tagged.sort_by_key(|(i, _)| *i);
+        tagged.into_iter().map(|(_, r)| r).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn map_preserves_input_order() {
+        let items: Vec<u64> = (0..257).collect();
+        let out = ThreadPool::new(4).map(&items, |i, x| (i as u64, x * 2));
+        assert_eq!(out.len(), 257);
+        for (i, (idx, doubled)) in out.iter().enumerate() {
+            assert_eq!(*idx, i as u64);
+            assert_eq!(*doubled, 2 * i as u64);
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let items: Vec<u64> = (0..100).collect();
+        let f = |_: usize, x: &u64| x.wrapping_mul(0x9E3779B97F4A7C15).rotate_left(17);
+        let serial = ThreadPool::new(1).map(&items, f);
+        for workers in [2, 3, 8, 64] {
+            assert_eq!(ThreadPool::new(workers).map(&items, f), serial, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn every_job_runs_exactly_once_under_stealing() {
+        // Lopsided work: the first chunk's jobs are slow, so other workers
+        // must steal to finish — every index must still run exactly once.
+        let items: Vec<usize> = (0..64).collect();
+        let runs = AtomicUsize::new(0);
+        let out = ThreadPool::new(4).map(&items, |i, _| {
+            if i < 16 {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            runs.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(runs.load(Ordering::Relaxed), 64);
+        assert_eq!(out, items);
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let pool = ThreadPool::new(8);
+        assert_eq!(pool.map(&[] as &[u8], |_, x| *x), Vec::<u8>::new());
+        assert_eq!(pool.map(&[7u8], |_, x| *x), vec![7]);
+    }
+
+    #[test]
+    fn worker_count_clamped() {
+        assert_eq!(ThreadPool::new(0).workers(), 1);
+        assert!(ThreadPool::auto().workers() >= 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "job 13 exploded")]
+    fn panics_propagate() {
+        let items: Vec<usize> = (0..32).collect();
+        ThreadPool::new(4).map(&items, |i, _| {
+            if i == 13 {
+                panic!("job 13 exploded");
+            }
+            i
+        });
+    }
+}

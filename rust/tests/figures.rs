@@ -1,7 +1,86 @@
-//! Integration: every figure renderer produces the paper-shaped output,
-//! end to end through the public API (no artifacts needed).
+//! Integration: the engine-driven figure renderers are byte-identical to the
+//! frozen pre-refactor serial renderers (`report::legacy`), parallel output
+//! is byte-identical to serial output, and the unified `SweepResult` records
+//! keep the paper-shaped invariants the old ad-hoc rows carried.
 
-use stt_ai::report;
+use stt_ai::dse::engine::{self, Runner, SweepResult};
+use stt_ai::report::{self, figures, legacy};
+
+fn legacy_text(n: u32) -> String {
+    let mut buf = Vec::new();
+    match n {
+        10 => {
+            legacy::fig10(&mut buf).unwrap();
+        }
+        11 => {
+            legacy::fig11(&mut buf).unwrap();
+        }
+        12 => {
+            legacy::fig12(&mut buf).unwrap();
+        }
+        13 => {
+            legacy::fig13(&mut buf).unwrap();
+        }
+        14 => {
+            legacy::fig14(&mut buf).unwrap();
+        }
+        15 => {
+            legacy::fig15(&mut buf).unwrap();
+        }
+        16 => {
+            legacy::fig16(&mut buf).unwrap();
+        }
+        17 => {
+            legacy::fig17(&mut buf).unwrap();
+        }
+        18 => {
+            legacy::fig18(&mut buf).unwrap();
+        }
+        19 => {
+            legacy::fig19(&mut buf).unwrap();
+        }
+        _ => unreachable!(),
+    }
+    String::from_utf8(buf).unwrap()
+}
+
+fn engine_text(n: u32, r: &Runner) -> String {
+    let mut buf = Vec::new();
+    match n {
+        10 => {
+            figures::fig10_with(&mut buf, r).unwrap();
+        }
+        11 => {
+            figures::fig11_with(&mut buf, r).unwrap();
+        }
+        12 => {
+            figures::fig12_with(&mut buf, r).unwrap();
+        }
+        13 => {
+            figures::fig13_with(&mut buf, r).unwrap();
+        }
+        14 => {
+            figures::fig14_with(&mut buf, r).unwrap();
+        }
+        15 => {
+            figures::fig15_with(&mut buf, r).unwrap();
+        }
+        16 => {
+            figures::fig16_with(&mut buf, r).unwrap();
+        }
+        17 => {
+            figures::fig17_with(&mut buf, r).unwrap();
+        }
+        18 => {
+            figures::fig18_with(&mut buf, r).unwrap();
+        }
+        19 => {
+            figures::fig19_with(&mut buf, r).unwrap();
+        }
+        _ => unreachable!(),
+    }
+    String::from_utf8(buf).unwrap()
+}
 
 fn render<T>(f: impl FnOnce(&mut Vec<u8>) -> std::io::Result<T>) -> (T, String) {
     let mut buf = Vec::new();
@@ -9,9 +88,66 @@ fn render<T>(f: impl FnOnce(&mut Vec<u8>) -> std::io::Result<T>) -> (T, String) 
     (v, String::from_utf8(buf).unwrap())
 }
 
+// ---------------------------------------------------------------------------
+// Golden parity + determinism (the refactor's acceptance criteria)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn golden_parity_engine_matches_frozen_serial_renderers() {
+    // Parallel engine output must be byte-identical to the pre-refactor
+    // bespoke serial loops for every figure.
+    let r = Runner::new(4);
+    for n in 10..=19 {
+        assert_eq!(
+            engine_text(n, &r),
+            legacy_text(n),
+            "fig{n}: engine text diverged from the frozen pre-refactor renderer"
+        );
+    }
+}
+
+#[test]
+fn parallel_1_and_parallel_n_are_byte_identical() {
+    let serial = Runner::new(1);
+    let wide = Runner::new(8);
+    for n in 10..=19 {
+        assert_eq!(engine_text(n, &serial), engine_text(n, &wide), "fig{n} not deterministic");
+    }
+}
+
+#[test]
+fn render_all_regenerates_every_figure() {
+    let mut buf = Vec::new();
+    report::render_all(&mut buf, &Runner::new(2)).unwrap();
+    let text = String::from_utf8(buf).unwrap();
+    for n in 10..=19 {
+        let expected = match n {
+            14 => "== Fig. 14a".to_string(),
+            _ => format!("== Fig. {n}"),
+        };
+        assert!(text.contains(&expected), "render_all missing fig{n}");
+    }
+}
+
+#[test]
+fn sweep_overrides_reshape_figures() {
+    // `--sweep batch=2` narrows fig11 to one batch column without touching
+    // figures that don't vary a batch axis.
+    let r = Runner::new(2).with_overrides(engine::parse_axes("batch=2").unwrap());
+    let (rows, text) = render(|w| figures::fig11_with(w, &r));
+    assert_eq!(rows.len(), 19);
+    assert!(text.contains("batch: 2  (int8, bf16)"), "{text}");
+    let (rows10, _) = render(|w| figures::fig10_with(w, &r));
+    assert_eq!(rows10.len(), 19);
+}
+
+// ---------------------------------------------------------------------------
+// Paper-shaped invariants on the unified records
+// ---------------------------------------------------------------------------
+
 #[test]
 fn fig10_has_19_rows_and_total() {
-    let (rows, text) = render(report::fig10);
+    let (rows, text) = render(figures::fig10);
     assert_eq!(rows.len(), 19);
     assert!(text.contains("Fig. 10"));
     assert!(text.contains("VGG16"));
@@ -19,87 +155,100 @@ fn fig10_has_19_rows_and_total() {
 }
 
 #[test]
-fn fig11_reports_12mb_coverage() {
-    let (rows, text) = render(report::fig11);
-    assert_eq!(rows.len(), 19);
+fn fig11_requirement_grows_with_batch() {
+    let (rows, text) = render(figures::fig11);
+    assert_eq!(rows.len(), 19 * 4);
     assert!(text.contains("12 MB serves"));
-    // Every model's requirement grows with batch.
-    for (_, series) in rows {
-        assert!(series.windows(2).all(|w| w[1].1 >= w[0].1));
+    for per_model in rows.chunks(4) {
+        let ws: Vec<u64> = per_model.iter().map(|r| r.metric_u64("bf16_bytes")).collect();
+        assert!(ws.windows(2).all(|w| w[1] >= w[0]), "{ws:?}");
     }
 }
 
 #[test]
 fn fig12_covers_both_dtypes_and_batches() {
-    let (rows, text) = render(report::fig12);
-    // 19 models × 4 batches × 2 dtypes.
-    assert_eq!(rows.len(), 19 * 4 * 2);
+    let (rows, text) = render(figures::fig12);
+    // 2 dtypes × 19 models × 4 batches, dtype-major.
+    assert_eq!(rows.len(), 2 * 19 * 4);
     assert!(text.contains("dtype Int8") && text.contains("dtype Bf16"));
     // int8 spill ≤ bf16 spill for the same model/batch.
-    for i in 0..(19 * 4) {
-        assert!(rows[i].spill_bytes <= rows[i + 19 * 4].spill_bytes);
+    let half = rows.len() / 2;
+    for i in 0..half {
+        assert!(rows[i].metric_u64("spill_bytes") <= rows[i + half].metric_u64("spill_bytes"));
     }
 }
 
 #[test]
 fn fig13_worst_case_under_paper_bound() {
-    let (rows, text) = render(report::fig13);
+    let (rows, text) = render(figures::fig13);
     assert_eq!(rows.len(), 19);
     assert!(text.contains("worst case"));
-    assert!(rows.iter().all(|r| r.max_t_ret < 1.6));
+    assert!(rows.iter().all(|r| r.metric("max_t_ret_s") < 1.6));
 }
 
 #[test]
 fn fig14_series_shapes() {
-    let ((a, b), _) = render(report::fig14);
-    assert!(a.windows(2).all(|w| w[1].1 <= w[0].1), "14a decreasing: {a:?}");
-    assert!(b.windows(2).all(|w| w[1].1 >= w[0].1), "14b increasing: {b:?}");
+    let (rows, _) = render(figures::fig14);
+    // 5 array sizes × 19 models, then 6 batches × 19 models.
+    assert_eq!(rows.len(), 5 * 19 + 6 * 19);
+    let (a, b) = rows.split_at(5 * 19);
+    let worst = |group: &[SweepResult]| {
+        group.iter().map(|r| r.metric("max_t_ret_s")).fold(0.0, f64::max)
+    };
+    let series_a: Vec<f64> = a.chunks(19).map(worst).collect();
+    assert!(series_a.windows(2).all(|w| w[1] <= w[0]), "14a decreasing: {series_a:?}");
+    let series_b: Vec<f64> = b.chunks(19).map(worst).collect();
+    assert!(series_b.windows(2).all(|w| w[1] >= w[0]), "14b increasing: {series_b:?}");
 }
 
 #[test]
 fn fig15_both_base_cases() {
-    let (sweeps, text) = render(report::fig15);
-    assert_eq!(sweeps.len(), 2);
+    let (rows, text) = render(figures::fig15);
+    assert_eq!(rows.len(), 2 * 51);
     assert!(text.contains("sakhare2020") && text.contains("wei2019"));
     assert!(text.contains("weight-NVM"));
 }
 
 #[test]
 fn fig16_energy_and_area_ratios() {
-    let (rows, text) = render(report::fig16);
+    let (rows, text) = render(figures::fig16);
     assert!(text.contains("GLB") && text.contains("LSB"));
-    let at_12mb: Vec<_> =
-        rows.iter().filter(|r| r.capacity_bytes == 12 * 1024 * 1024).collect();
+    let at_12mb: Vec<&SweepResult> =
+        rows.iter().filter(|r| r.point.glb_mb == Some(12)).collect();
     assert_eq!(at_12mb.len(), 2);
     for r in at_12mb {
-        assert!(r.area_ratio() > 10.0);
-        assert!(r.energy_ratio() > 1.0);
+        assert!(r.metric("sram_area_mm2") / r.metric("mram_area_mm2") > 10.0);
+        assert!(r.metric("sram_energy_j") / r.metric("mram_energy_j") > 1.0);
     }
 }
 
 #[test]
 fn fig17_relaxed_vs_tight() {
-    let (sweeps, _) = render(report::fig17);
-    assert_eq!(sweeps.len(), 2);
-    let (relaxed, tight) = (&sweeps[0], &sweeps[1]);
-    for (r, t) in relaxed.write_pulse.iter().zip(&tight.write_pulse) {
-        assert!(r.1 <= t.1, "relaxed BER must not need longer writes");
+    let (rows, _) = render(figures::fig17);
+    assert_eq!(rows.len(), 2 * 51);
+    let (relaxed, tight) = rows.split_at(rows.len() / 2);
+    for (r, t) in relaxed.iter().zip(tight) {
+        assert!(
+            r.metric("write_pulse_s") <= t.metric("write_pulse_s"),
+            "relaxed BER must not need longer writes"
+        );
     }
 }
 
 #[test]
 fn fig18_counts_fits() {
-    let (rows, text) = render(report::fig18);
+    let (rows, text) = render(figures::fig18);
     assert_eq!(rows.len(), 19);
     assert!(text.contains("fit the 52 KB"));
 }
 
 #[test]
 fn fig19_ordering() {
-    let (row, text) = render(report::fig19);
+    let (rows, text) = render(figures::fig19);
     assert!(text.contains("ResNet-50"));
-    assert!(row.mram_scratchpad.total() < row.mram.total());
-    assert!(row.mram.total() < row.sram.total());
+    let rec = &rows[0];
+    assert!(engine::ledger_total(rec, "mram_sp") < engine::ledger_total(rec, "mram"));
+    assert!(engine::ledger_total(rec, "mram") < engine::ledger_total(rec, "sram"));
 }
 
 #[test]
