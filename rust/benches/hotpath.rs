@@ -8,8 +8,11 @@ use stt_ai::accel::{ArrayConfig, RetentionAnalysis};
 use stt_ai::ber::{BankSplit, Injector, WordKind};
 use stt_ai::coordinator::{Batcher, Request};
 use stt_ai::dse::engine::Runner;
-use stt_ai::models;
+use stt_ai::dse::{cache, DramOverheadRow, RetentionRow};
+use stt_ai::memsys::DramModel;
+use stt_ai::models::{self, DType};
 use stt_ai::report;
+use stt_ai::util::units::MB;
 use stt_ai::util::bench::Bencher;
 use stt_ai::util::bf16::{bf16_to_f32, f32_to_bf16};
 use stt_ai::util::json::Json;
@@ -43,6 +46,33 @@ fn main() {
             .map(|m| RetentionAnalysis::new(&a, 16).analyze(m).max_t_ret())
             .fold(0.0, f64::max)
     });
+
+    // The fig11/fig12/fig14-style overlapping model walks, cold (cache
+    // cleared every iteration) vs warm (memoized across sweeps) — the
+    // ROADMAP perf item behind `dse::cache`.
+    let a42 = ArrayConfig::paper_42x42();
+    let dram = DramModel::ddr4_2933_dual();
+    let walk = |zoo: &[stt_ai::models::Model]| {
+        let mut acc = 0.0f64;
+        for m in zoo {
+            for batch in [1u64, 2, 4, 8] {
+                let r = DramOverheadRow::analyze(m, &a42, &dram, DType::Bf16, batch, 12 * MB);
+                acc += r.extra_energy;
+                acc += RetentionRow::analyze(m, &a42, batch).max_t_ret;
+            }
+        }
+        acc
+    };
+    let cold = b.run("dse/model_walks_cold", || {
+        cache::clear();
+        walk(&zoo)
+    });
+    let warm = b.run("dse/model_walks_warm", || walk(&zoo));
+    let (hits, misses) = cache::stats();
+    println!(
+        "    -> traffic/retention cache: {:.1}x faster warm ({hits} hits / {misses} misses)",
+        cold.median_ns / warm.median_ns
+    );
 
     // JSON parse of a manifest-sized document.
     let doc = std::fs::read_to_string("artifacts/manifest.json")

@@ -29,7 +29,7 @@ fn main() {
         let sram = AcceleratorSummary::compose(
             "sram",
             core,
-            &BufferSystem::new(stt_ai::memsys::GlbKind::Sram, mb * MB, None),
+            &BufferSystem::new(stt_ai::memsys::GlbKind::baseline(), mb * MB, None),
         );
         let mram = AcceleratorSummary::compose(
             "mram",

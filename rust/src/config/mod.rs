@@ -10,9 +10,10 @@ use std::path::Path;
 
 
 use crate::accel::ArrayConfig;
-use crate::memsys::{BufferSystem, GlbKind, Scratchpad};
+use crate::memsys::{BankSpec, BufferSystem, GlbKind, Scratchpad};
 use crate::models::DType;
-use crate::mram::{DesignTargets, MtjTech, PtVariation};
+use crate::mram::technology::{MemTechnology, TechnologyId};
+use crate::mram::{DesignTargets, PtVariation};
 use crate::util::json::Json;
 use crate::util::units::{KB, MB};
 
@@ -28,11 +29,27 @@ pub enum GlbVariant {
 }
 
 impl GlbVariant {
+    /// The GLB organization with the default (paper STT) technology.
     pub fn kind(&self) -> GlbKind {
+        self.kind_for(&TechConfig::default())
+    }
+
+    /// The GLB organization built in a specific technology: the variant
+    /// picks the bank *structure* (mono vs MSB/LSB split), the technology
+    /// picks the cells. A volatile technology collapses both MRAM variants
+    /// to the single-bank baseline (no Δ knob to split on).
+    pub fn kind_for(&self, tech: &TechConfig) -> GlbKind {
+        let id = tech.base.id();
+        if matches!(self, GlbVariant::Sram) || id == TechnologyId::Sram {
+            return GlbKind::baseline();
+        }
+        let glb = BankSpec::new(id, tech.glb_delta());
         match self {
-            GlbVariant::Sram => GlbKind::baseline(),
-            GlbVariant::SttAi => GlbKind::stt_ai(),
-            GlbVariant::SttAiUltra => GlbKind::stt_ai_ultra(),
+            GlbVariant::Sram => unreachable!("handled above"),
+            GlbVariant::SttAi => GlbKind::Mono(glb),
+            GlbVariant::SttAiUltra => {
+                GlbKind::Split { msb: glb, lsb: BankSpec::new(id, tech.lsb_delta()) }
+            }
         }
     }
 
@@ -56,31 +73,100 @@ impl GlbVariant {
     }
 }
 
-/// MRAM technology selector.
+/// Memory-technology selector: one entry per registered
+/// [`MemTechnology`] base case (serializable mirror of [`TechnologyId`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum TechBase {
-    /// Sakhare et al. 2020 [6].
+    /// STT-MRAM, Sakhare et al. 2020 [6].
     #[default]
     Sakhare2020,
-    /// Wei et al. 2019 [13].
+    /// STT-MRAM, Wei et al. 2019 [13].
     Wei2019,
+    /// SOT-MRAM (ROADMAP co-optimization scenario).
+    Sot,
+    /// Volatile SRAM baseline.
+    Sram,
 }
 
 impl TechBase {
-    pub fn tech(&self) -> MtjTech {
+    pub fn id(&self) -> TechnologyId {
         match self {
-            TechBase::Sakhare2020 => MtjTech::sakhare2020(),
-            TechBase::Wei2019 => MtjTech::wei2019(),
+            TechBase::Sakhare2020 => TechnologyId::SttSakhare2020,
+            TechBase::Wei2019 => TechnologyId::SttWei2019,
+            TechBase::Sot => TechnologyId::Sot,
+            TechBase::Sram => TechnologyId::Sram,
         }
     }
 
-    /// Parse a CLI token (`sakhare2020` / `wei2019`).
-    pub fn from_token(s: &str) -> Option<Self> {
-        match s.to_lowercase().as_str() {
-            "sakhare2020" => Some(TechBase::Sakhare2020),
-            "wei2019" => Some(TechBase::Wei2019),
-            _ => None,
+    /// The technology model behind this selector.
+    pub fn technology(&self) -> &'static dyn MemTechnology {
+        self.id().technology()
+    }
+
+    /// Stable base-case name (the sweep-record `tech` column).
+    pub fn name(&self) -> &'static str {
+        self.technology().name()
+    }
+
+    /// Canonical serialization token.
+    pub fn token(&self) -> &'static str {
+        match self {
+            TechBase::Sakhare2020 => "sakhare2020",
+            TechBase::Wei2019 => "wei2019",
+            TechBase::Sot => "sot",
+            TechBase::Sram => "sram",
         }
+    }
+
+    /// Every registered base case, in registry order (the default grid of a
+    /// cross-technology sweep).
+    pub fn all() -> [TechBase; 4] {
+        [TechBase::Sakhare2020, TechBase::Wei2019, TechBase::Sot, TechBase::Sram]
+    }
+
+    /// The selector for a registry id.
+    pub fn from_id(id: TechnologyId) -> Self {
+        match id {
+            TechnologyId::SttSakhare2020 => TechBase::Sakhare2020,
+            TechnologyId::SttWei2019 => TechBase::Wei2019,
+            TechnologyId::Sot => TechBase::Sot,
+            TechnologyId::Sram => TechBase::Sram,
+        }
+    }
+
+    /// Parse a CLI token: family tokens (`stt` / `sot` / `sram`) or explicit
+    /// base-case names (`sakhare2020` / `wei2019` / `sot2023`). One grammar,
+    /// owned by the registry ([`crate::mram::technology::by_token`]).
+    pub fn from_token(s: &str) -> Option<Self> {
+        crate::mram::technology::by_token(s).map(|t| Self::from_id(t.id()))
+    }
+}
+
+/// The `[tech.*]` configuration section: which registered technology the
+/// accelerator's GLB is built in, plus optional Δ design-point overrides.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TechConfig {
+    /// Registered technology base case.
+    pub base: TechBase,
+    /// Δ_PT_GB override for the (mono or MSB) GLB bank.
+    pub glb_delta_override: Option<f64>,
+    /// Δ_PT_GB override for the relaxed LSB bank.
+    pub lsb_delta_override: Option<f64>,
+}
+
+impl TechConfig {
+    pub fn new(base: TechBase) -> Self {
+        Self { base, ..Self::default() }
+    }
+
+    /// Effective GLB-bank Δ (override or the technology default).
+    pub fn glb_delta(&self) -> f64 {
+        self.glb_delta_override.unwrap_or_else(|| self.base.technology().default_glb_delta())
+    }
+
+    /// Effective LSB-bank Δ (override or the technology default).
+    pub fn lsb_delta(&self) -> f64 {
+        self.lsb_delta_override.unwrap_or_else(|| self.base.technology().default_lsb_delta())
     }
 }
 
@@ -141,8 +227,8 @@ pub struct SystemConfig {
     pub dtype: DTypeConfig,
     /// PE-array geometry + Table II timing.
     pub array: ArrayConfig,
-    /// MRAM technology base case.
-    pub tech: TechBase,
+    /// Memory-technology section (`[tech.*]`): base case + Δ overrides.
+    pub tech: TechConfig,
     /// Serving knobs.
     pub serving: ServingConfig,
 }
@@ -173,7 +259,7 @@ impl SystemConfig {
             scratchpad_bytes: 0,
             dtype: DTypeConfig::Bf16,
             array: ArrayConfig::paper_42x42(),
-            tech: TechBase::default(),
+            tech: TechConfig::default(),
             serving: ServingConfig::default(),
         }
     }
@@ -198,10 +284,11 @@ impl SystemConfig {
         }
     }
 
-    /// Materialize the buffer system model.
+    /// Materialize the buffer system model: the GLB variant's bank structure
+    /// built in the configured technology.
     pub fn buffer_system(&self) -> BufferSystem {
         let sp = (self.scratchpad_bytes > 0).then(|| Scratchpad::new(self.scratchpad_bytes));
-        BufferSystem::new(self.glb.kind(), self.glb_bytes, sp)
+        BufferSystem::new(self.glb.kind_for(&self.tech), self.glb_bytes, sp)
     }
 
     /// BER settings implied by the GLB variant.
@@ -247,7 +334,16 @@ impl SystemConfig {
                     ("t_pool_relu", Json::Num(self.array.t_pool_relu)),
                 ]),
             ),
-            ("tech", if self.tech == TechBase::Wei2019 { "wei2019" } else { "sakhare2020" }.into()),
+            ("tech", {
+                let mut fields = vec![("base", Json::Str(self.tech.base.token().to_string()))];
+                if let Some(d) = self.tech.glb_delta_override {
+                    fields.push(("glb_delta", Json::Num(d)));
+                }
+                if let Some(d) = self.tech.lsb_delta_override {
+                    fields.push(("lsb_delta", Json::Num(d)));
+                }
+                Json::obj(fields)
+            }),
             (
                 "serving",
                 Json::obj(vec![
@@ -276,8 +372,21 @@ impl SystemConfig {
         if let Some(d) = j.get("dtype").and_then(|d| d.as_str()) {
             cfg.dtype = if d == "int8" { DTypeConfig::Int8 } else { DTypeConfig::Bf16 };
         }
-        if let Some(t) = j.get("tech").and_then(|t| t.as_str()) {
-            cfg.tech = if t == "wei2019" { TechBase::Wei2019 } else { TechBase::Sakhare2020 };
+        if let Some(t) = j.get("tech") {
+            // Accept both the legacy string form ("wei2019") and the
+            // `[tech.*]` section form ({"base": "sot", "glb_delta": 27.5}).
+            let base = match t.as_str() {
+                Some(s) => s,
+                None => t.req_str("base").map_err(anyhow::Error::from)?,
+            };
+            cfg.tech.base = TechBase::from_token(base)
+                .ok_or_else(|| anyhow::anyhow!("unknown tech base {base:?}"))?;
+            if let Some(d) = t.get("glb_delta") {
+                cfg.tech.glb_delta_override = Some(d.as_f64().context("glb_delta")?);
+            }
+            if let Some(d) = t.get("lsb_delta") {
+                cfg.tech.lsb_delta_override = Some(d.as_f64().context("lsb_delta")?);
+            }
         }
         if let Some(a) = j.get("array") {
             cfg.array.w_a = a.req_u64("w_a").map_err(anyhow::Error::from)?;
@@ -366,5 +475,56 @@ mod tests {
         assert!(sys.scratchpad.is_some());
         let sys = SystemConfig::paper_baseline().buffer_system();
         assert!(sys.scratchpad.is_none());
+    }
+
+    #[test]
+    fn tech_tokens_cover_registry() {
+        for t in TechBase::all() {
+            assert_eq!(TechBase::from_token(t.token()), Some(t));
+            assert_eq!(t.technology().id(), t.id());
+        }
+        assert_eq!(TechBase::from_token("stt"), Some(TechBase::Sakhare2020));
+        assert_eq!(TechBase::from_token("SOT-MRAM"), Some(TechBase::Sot));
+        assert_eq!(TechBase::from_token("reram"), None);
+    }
+
+    #[test]
+    fn tech_section_roundtrips_with_overrides() {
+        let mut c = SystemConfig::paper_stt_ai();
+        c.tech = TechConfig {
+            base: TechBase::Sot,
+            glb_delta_override: Some(24.0),
+            lsb_delta_override: None,
+        };
+        let back = SystemConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.tech, c.tech);
+        assert_eq!(back.tech.glb_delta(), 24.0);
+        assert_eq!(back.tech.lsb_delta(), 17.5, "unset override falls back to tech default");
+        // Legacy string form still parses.
+        let legacy = r#"{"name":"x","glb":"stt_ai","glb_bytes":1048576,
+                         "scratchpad_bytes":0,"tech":"wei2019"}"#;
+        let cfg = SystemConfig::from_json(&Json::parse(legacy).unwrap()).unwrap();
+        assert_eq!(cfg.tech.base, TechBase::Wei2019);
+    }
+
+    #[test]
+    fn variant_structure_composes_with_any_technology() {
+        use crate::memsys::GlbKind;
+        // Default tech reproduces the paper kinds exactly.
+        assert_eq!(GlbVariant::SttAi.kind(), GlbKind::stt_ai());
+        assert_eq!(GlbVariant::SttAiUltra.kind(), GlbKind::stt_ai_ultra());
+        // SOT keeps the structure, swaps the cells.
+        let sot = GlbVariant::SttAiUltra.kind_for(&TechConfig::new(TechBase::Sot));
+        match sot {
+            GlbKind::Split { msb, lsb } => {
+                assert_eq!(msb.tech, TechnologyId::Sot);
+                assert_eq!(lsb.tech, TechnologyId::Sot);
+                assert!(msb.delta_guard_banded > lsb.delta_guard_banded);
+            }
+            other => panic!("expected split, got {other:?}"),
+        }
+        // A volatile technology collapses MRAM variants to the baseline.
+        let sram = GlbVariant::SttAiUltra.kind_for(&TechConfig::new(TechBase::Sram));
+        assert_eq!(sram, GlbKind::baseline());
     }
 }

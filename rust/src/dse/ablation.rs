@@ -6,7 +6,7 @@
 //! * P_s (PE dot-product width) sweep — the Fig. 3 core parameter;
 //! * write-overdrive sweep — latency/energy trade of §IV.B.
 
-use crate::accel::{ArrayConfig, RetentionAnalysis};
+use crate::accel::ArrayConfig;
 use crate::memsys::MemoryArray;
 use crate::models::Model;
 use crate::mram::{
@@ -93,7 +93,7 @@ pub fn ps_sweep(m: &Model, batch: u64, ps_values: &[u64]) -> Vec<(u64, f64)> {
             // Fixed MAC budget: W_A·H_A·P_s = 1764.
             let w_a = (42 / ps).max(1);
             let a = ArrayConfig { p_s: ps, w_a, h_a: 42, ..base };
-            let worst = RetentionAnalysis::new(&a, batch).analyze(m).max_t_ret();
+            let worst = super::cache::retention(m, &a, batch).max_t_ret();
             (ps, worst)
         })
         .collect()

@@ -1,7 +1,7 @@
 //! GLB capacity design-space exploration (Figs. 10–12).
 
 
-use crate::accel::{ArrayConfig, ModelTraffic};
+use crate::accel::ArrayConfig;
 use crate::memsys::DramModel;
 use crate::models::{DType, Model};
 
@@ -63,7 +63,7 @@ impl DramOverheadRow {
         batch: u64,
         glb_bytes: u64,
     ) -> Self {
-        let t = ModelTraffic::analyze(m, a, dt, batch, glb_bytes);
+        let t = super::cache::traffic(m, a, dt, batch, glb_bytes);
         let spill = t.total_dram_bytes();
         Self {
             model: m.name.clone(),

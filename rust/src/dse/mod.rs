@@ -4,9 +4,12 @@
 //! figure as a plain struct); [`engine`] composes them into declarative
 //! [`engine::SweepSpec`] cross-products evaluated in parallel on the
 //! work-stealing pool, producing the unified [`engine::SweepResult`] records
-//! that `report` renders and exports.
+//! that `report` renders and exports. [`cache`] memoizes the per-layer
+//! traffic/retention model walks those analyses share, across sweeps and
+//! figures.
 
 pub mod ablation;
+pub mod cache;
 pub mod capacity;
 pub mod delta;
 pub mod energy_area;

@@ -2,7 +2,7 @@
 //! function of array size and batch.
 
 
-use crate::accel::{ArrayConfig, RetentionAnalysis};
+use crate::accel::ArrayConfig;
 use crate::models::Model;
 
 /// One row of Fig. 13 (per-model retention range) or a cell of Fig. 14.
@@ -17,7 +17,7 @@ pub struct RetentionRow {
 
 impl RetentionRow {
     pub fn analyze(m: &Model, a: &ArrayConfig, batch: u64) -> Self {
-        let r = RetentionAnalysis::new(a, batch).analyze(m);
+        let r = super::cache::retention(m, a, batch);
         Self {
             model: m.name.clone(),
             macs: a.total_macs(),

@@ -2,7 +2,7 @@
 //! energy comparison SRAM / MRAM / MRAM+scratchpad (Fig. 19).
 
 
-use crate::accel::{ArrayConfig, ModelTraffic};
+use crate::accel::ArrayConfig;
 use crate::memsys::{BufferSystem, EnergyLedger, GlbKind, Scratchpad};
 use crate::models::{DType, Model};
 use crate::util::units::MB;
@@ -40,11 +40,11 @@ impl ScratchpadEnergyRow {
     pub fn analyze(m: &Model, a: &ArrayConfig, dt: DType, batch: u64) -> Self {
         let glb = 12 * MB;
         let systems = [
-            BufferSystem::new(GlbKind::Sram, glb, None),
+            BufferSystem::new(GlbKind::baseline(), glb, None),
             BufferSystem::new(GlbKind::stt_ai(), glb, None),
             BufferSystem::new(GlbKind::stt_ai(), glb, Some(Scratchpad::paper_bf16())),
         ];
-        let traffic = ModelTraffic::analyze(m, a, dt, batch, glb);
+        let traffic = super::cache::traffic(m, a, dt, batch, glb);
         let mut ledgers = systems.iter().map(|sys| {
             let mut total = EnergyLedger::default();
             for l in &traffic.layers {

@@ -6,12 +6,16 @@
 //!
 //! The crate is organized bottom-up:
 //!
-//! * [`mram`] — STT-MRAM / MTJ device physics (thermal stability factor Δ,
-//!   critical current, retention failure, read disturb, write error rate,
-//!   process/temperature guard-banding, the PTM-driven write driver).
-//! * [`memsys`] — memory *system* models: SRAM and MRAM array area/energy
-//!   (Destiny-like), DDR4 DRAM channel model, the scratchpad-assisted global
-//!   buffer, and the full on-chip hierarchy.
+//! * [`mram`] — device physics and the pluggable memory-technology layer:
+//!   STT-MRAM / MTJ equations (thermal stability factor Δ, critical current,
+//!   retention failure, read disturb, write error rate, process/temperature
+//!   guard-banding, the PTM-driven write driver), abstracted behind the
+//!   [`mram::technology::MemTechnology`] trait with STT-MRAM, SOT-MRAM and
+//!   SRAM implementations in a [`mram::TechnologyId`] registry.
+//! * [`memsys`] — memory *system* models: technology-parametrized array
+//!   area/energy (Destiny-like, over the `MemTechnology` registry), DDR4
+//!   DRAM channel model, the scratchpad-assisted global buffer, and the
+//!   full on-chip hierarchy composed from per-technology bank specs.
 //! * [`models`] — a zoo of 19 real DNN architectures as per-layer shape
 //!   tables (the design-space-exploration workload of the paper's §V.A).
 //! * [`accel`] — the reconfigurable-core accelerator: PE/core cycle model
@@ -19,9 +23,11 @@
 //!   occupancy/retention-time model (Eq. 2–11), and GLB traffic accounting.
 //! * [`dse`] — design-space exploration: per-figure analyses (Figs. 10–19)
 //!   plus [`dse::engine`], the unified parallel sweep subsystem (declarative
-//!   `SweepSpec` cross-products over model × dtype × batch × GLB × Δ/BER
-//!   axes, evaluated on the [`util::pool`] work-stealing pool into
-//!   serializable `SweepResult` records).
+//!   `SweepSpec` cross-products over model × dtype × batch × GLB ×
+//!   technology × Δ/BER × write-intensity axes, evaluated on the
+//!   [`util::pool`] work-stealing pool into serializable `SweepResult`
+//!   records), and [`dse::cache`], the cross-sweep memoization of the
+//!   per-layer traffic/retention model walks.
 //! * [`ber`] — bit-error-rate fault injection on bf16/int8 buffers with the
 //!   MSB/LSB two-bank split of the STT-AI Ultra design, plus magnitude
 //!   pruning (Fig. 21).
@@ -32,8 +38,8 @@
 //! * [`report`] — figure/table renderers over the unified sweep records
 //!   (`report::legacy` keeps the frozen pre-refactor serial renderers as the
 //!   golden parity reference), plus CSV/JSON export.
-//! * [`config`] — typed configuration (accelerator, memory, tech) with TOML
-//!   loading, used by the CLI and launcher.
+//! * [`config`] — typed configuration (accelerator, memory, the `[tech.*]`
+//!   technology section) with JSON load/save, used by the CLI and launcher.
 
 pub mod accel;
 pub mod ber;

@@ -14,7 +14,7 @@
 use std::io::Write;
 use std::path::{Path, PathBuf};
 
-use stt_ai::config::{GlbVariant, SystemConfig};
+use stt_ai::config::{GlbVariant, SystemConfig, TechBase};
 use stt_ai::coordinator::{self, Engine, EngineConfig};
 use stt_ai::dse::delta::paper_design_points;
 use stt_ai::dse::engine as dse_engine;
@@ -31,11 +31,13 @@ stt-ai — AI accelerator + customized STT-MRAM co-design framework
 USAGE: stt-ai <COMMAND> [FLAGS]
 
 COMMANDS:
-  figures      [--fig 10..19] [--csv-dir DIR] [--parallel N]
-               [--sweep axis=v1|v2,...]       regenerate paper figures
+  figures      [--fig 10..19|tech] [--csv-dir DIR] [--parallel N]
+               [--sweep axis=v1|v2,...] [--tech stt|sot|sram]
+               regenerate paper figures (+ cross-technology table)
   sweep        --axes axis=v1|v2,... [--parallel N] [--csv FILE] [--json FILE]
+               [--tech stt|sot|sram]
                free cross-product DSE (axes: model, dtype, batch, glb_mb,
-               macs, variant, tech, ber, delta)
+               macs, variant, tech, ber, delta, write_intensity)
   table3                               Table III composition + savings
   design       [--retention 3.0|3y] [--ber 1e-8] [--tech sakhare2020|wei2019]
   accuracy     [--artifacts DIR] [--prune 0.0] [--batch 16] [--limit N]
@@ -66,13 +68,23 @@ fn run_figure(n: u32, out: &mut impl Write, r: &Runner) -> std::io::Result<()> {
     }
 }
 
-/// Build the sweep runner from the shared `--parallel` / `--sweep` flags.
+/// Parse a `--tech` token against the technology registry.
+fn parse_tech(s: &str) -> anyhow::Result<TechBase> {
+    TechBase::from_token(s)
+        .ok_or_else(|| anyhow::anyhow!("unknown tech {s:?} (stt, sot, sram, wei2019)"))
+}
+
+/// Build the sweep runner from the shared `--parallel` / `--sweep` / `--tech`
+/// flags (`--tech T` is shorthand for overriding the tech axis to one value).
 fn runner_from(args: &Args) -> anyhow::Result<Runner> {
     let parallel = args.get_usize("parallel", available_parallelism())?;
-    let overrides = match args.get("sweep") {
+    let mut overrides = match args.get("sweep") {
         Some(spec) => dse_engine::parse_axes(spec)?,
         None => Vec::new(),
     };
+    if let Some(t) = args.get("tech") {
+        overrides.push(dse_engine::Axis::Tech(vec![parse_tech(t)?]));
+    }
     Ok(Runner::new(parallel).with_overrides(overrides))
 }
 
@@ -89,6 +101,9 @@ fn main() -> anyhow::Result<()> {
                 return Ok(());
             }
             match args.get("fig") {
+                Some("tech") => {
+                    report::figures::techcmp_with(&mut out, &runner)?;
+                }
                 Some(n) => run_figure(n.parse()?, &mut out, &runner)?,
                 None => report::render_all(&mut out, &runner)?,
             }
@@ -98,10 +113,18 @@ fn main() -> anyhow::Result<()> {
             // No `--sweep` overrides here: the axes ARE the sweep, so a
             // stray `--sweep` flag is rejected by `finish()` below.
             let runner = Runner::new(args.get_usize("parallel", available_parallelism())?);
-            let axes = match args.get("axes") {
+            let mut axes = match args.get("axes") {
                 Some(spec) => dse_engine::parse_axes(spec)?,
                 None => Vec::new(),
             };
+            // `--tech T` pins the technology axis (e.g. `sweep --tech sot`)
+            // unless the axis list already varies it.
+            if let Some(t) = args.get("tech") {
+                if axes.iter().any(|a| a.name() == "tech") {
+                    anyhow::bail!("--tech conflicts with a tech= axis in --axes");
+                }
+                axes.push(dse_engine::Axis::Tech(vec![parse_tech(t)?]));
+            }
             let csv = args.get("csv").map(PathBuf::from);
             let json = args.get("json").map(PathBuf::from);
             args.finish()?;

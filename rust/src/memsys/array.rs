@@ -4,7 +4,9 @@
 //! and leakage power at the 14 nm node. The functional forms are the standard
 //! memory-compiler scalings (cell area · capacity + periphery; bitline energy
 //! growing with array size; leakage ∝ area for SRAM and periphery-only for
-//! MRAM); the constants are calibrated so that:
+//! MRAM); the constants live with each technology behind the
+//! [`MemTechnology`] trait ([`crate::mram::technology`]) and are calibrated
+//! so that:
 //!
 //! * 12 MB SRAM   → 16.2 mm², ~49 mW dyn @ reference rate, 0.21 mW leak
 //! * 52 KB SRAM   → 0.069 mm² (the scratchpad row)         (Table III)
@@ -14,9 +16,12 @@
 //! * SRAM/MRAM energy crossover ≈ 4 MB (Fig. 16)
 //!
 //! The paper used a Destiny modified with the silicon observation of [6];
-//! we calibrate directly against the numbers the paper publishes.
+//! we calibrate directly against the numbers the paper publishes. This
+//! module is a thin, technology-agnostic shell: it owns only the geometry
+//! bookkeeping (bits, capacity ratios, word width) and delegates every
+//! per-cell number to the technology.
 
-
+use crate::mram::technology::{MemTechnology, TechnologyId};
 use crate::util::units::MB;
 
 /// 14 nm feature size (m).
@@ -29,114 +34,75 @@ pub const WORD_BITS: u64 = 64;
 /// energy into the Table III dynamic-power column.
 pub const REF_ACCESS_RATE: f64 = 2.0e8;
 
-/// Memory technology for an on-chip array.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum MemTech {
-    /// 6T SRAM (100 F² cell class).
-    Sram,
-    /// 1T-1MTJ STT-MRAM with the given guard-banded Δ.
-    SttMram { delta_guard_banded: f64 },
-}
-
-/// One physical array instance.
+/// One physical array instance: a capacity built in one registered memory
+/// technology at one guard-banded Δ design point.
 #[derive(Debug, Clone, Copy)]
 pub struct MemoryArray {
-    pub tech: MemTech,
+    pub tech: TechnologyId,
+    /// Guard-banded Δ the cells are built with (0 for volatile cells, which
+    /// have no Δ knob).
+    pub delta_guard_banded: f64,
     pub capacity_bytes: u64,
 }
 
-/// Reference Δ at which the MRAM energy/area constants are anchored
-/// (the paper's GLB design point, Δ_PT_GB = 27.5).
-const DELTA_REF: f64 = 27.5;
 /// Reference capacity for the capacity-scaling terms.
 const CAP_REF: f64 = 12.0 * MB as f64;
 
 impl MemoryArray {
+    /// An array in any registered technology.
+    pub fn new(tech: TechnologyId, capacity_bytes: u64, delta_guard_banded: f64) -> Self {
+        Self { tech, delta_guard_banded, capacity_bytes }
+    }
+
     pub fn sram(capacity_bytes: u64) -> Self {
-        Self { tech: MemTech::Sram, capacity_bytes }
+        Self::new(TechnologyId::Sram, capacity_bytes, 0.0)
     }
 
     pub fn stt_mram(capacity_bytes: u64, delta_guard_banded: f64) -> Self {
-        Self { tech: MemTech::SttMram { delta_guard_banded }, capacity_bytes }
+        Self::new(TechnologyId::SttSakhare2020, capacity_bytes, delta_guard_banded)
+    }
+
+    pub fn sot_mram(capacity_bytes: u64, delta_guard_banded: f64) -> Self {
+        Self::new(TechnologyId::Sot, capacity_bytes, delta_guard_banded)
+    }
+
+    /// The technology model behind this array.
+    pub fn technology(&self) -> &'static dyn MemTechnology {
+        self.tech.technology()
     }
 
     fn bits(&self) -> f64 {
         self.capacity_bytes as f64 * 8.0
     }
 
-    /// Bit-cell area in F².
-    ///
-    /// SRAM: 100 F² [17], [18]. MRAM: 6 F² theoretical, with a Δ^0.4 shrink
-    /// factor (transistor-limited cell: smaller Δ ⇒ smaller I_c ⇒ narrower
-    /// access device; exponent fit to the paper's 12 MB vs 6+6 MB rows).
+    /// Bit-cell area in F² (per-technology calibration; see the trait docs).
     pub fn cell_area_f2(&self) -> f64 {
-        match self.tech {
-            MemTech::Sram => 100.0,
-            MemTech::SttMram { delta_guard_banded } => {
-                6.0 * (delta_guard_banded / DELTA_REF).powf(0.4)
-            }
-        }
+        self.technology().cell_area_f2(self.delta_guard_banded)
     }
 
     /// Macro silicon area (mm²) including periphery.
-    ///
-    /// Periphery/overhead multipliers calibrated to Table III:
-    /// SRAM ×8.21 (hits both 16.2 mm² @ 12 MB and 0.069 mm² @ 52 KB);
-    /// MRAM ×8.53 (hits 1.01 mm² @ 12 MB, Δ_GB 27.5; the 6+6 split lands on
-    /// 0.93 mm² through the Δ^0.4 cell shrink).
     pub fn area_mm2(&self) -> f64 {
         let cell_m2 = self.cell_area_f2() * F_14NM * F_14NM;
-        let periphery = match self.tech {
-            MemTech::Sram => 8.21,
-            MemTech::SttMram { .. } => 8.53,
-        };
+        let periphery = self.technology().periphery_mult();
         self.bits() * cell_m2 * periphery * 1e6 // m² → mm²
     }
 
     /// Leakage power (mW).
-    ///
-    /// SRAM: ∝ capacity (0.0175 mW/MB ⇒ 0.21 mW @ 12 MB, 8.9e-4 @ 52 KB).
-    /// MRAM: periphery-only, ∝ capacity × (Δ/Δ_ref)^1.5 (0.08 mW @ 12 MB
-    /// Δ=27.5; the exponent reproduces the 0.06 mW of the 6+6 split).
     pub fn leakage_mw(&self) -> f64 {
         let cap_mb = self.capacity_bytes as f64 / MB as f64;
-        match self.tech {
-            MemTech::Sram => 0.0175 * cap_mb,
-            MemTech::SttMram { delta_guard_banded } => {
-                0.006_67 * cap_mb * (delta_guard_banded / DELTA_REF).powf(1.5)
-            }
-        }
+        self.technology().leakage_mw(self.delta_guard_banded, cap_mb)
     }
 
     /// Per-access read energy (J) for a 64-bit word.
-    ///
-    /// SRAM: bitline/wordline dominated, ∝ C^0.9 (117 pJ @ 12 MB).
-    /// MRAM: fixed sense cost + Δ-proportional cell current term
-    /// (I_r ∝ I_c ∝ Δ, Eq. 13), ∝ C^0.5 in the periphery.
     pub fn read_energy_j(&self) -> f64 {
         let c = self.capacity_bytes as f64 / CAP_REF;
-        match self.tech {
-            MemTech::Sram => (5.0 + 112.0 * c.powf(0.9)) * 1e-12,
-            MemTech::SttMram { delta_guard_banded } => {
-                let d = delta_guard_banded / DELTA_REF;
-                (20.0 + 10.0 * d * c.powf(0.5)) * 1e-12
-            }
-        }
+        self.technology().read_energy_j(self.delta_guard_banded, c)
     }
 
     /// Per-access write energy (J) for a 64-bit word.
-    ///
-    /// SRAM: ≈ read. MRAM: E_w ∝ I_w²·t_w with I_w ∝ Δ — 1.7× read at the
-    /// (12 MB, Δ=27.5) anchor, dropping quadratically with Δ.
     pub fn write_energy_j(&self) -> f64 {
         let c = self.capacity_bytes as f64 / CAP_REF;
-        match self.tech {
-            MemTech::Sram => (5.0 + 112.0 * c.powf(0.9)) * 1e-12,
-            MemTech::SttMram { delta_guard_banded } => {
-                let d = delta_guard_banded / DELTA_REF;
-                (28.0 + 22.0 * d * d * c.powf(0.5)) * 1e-12
-            }
-        }
+        self.technology().write_energy_j(self.delta_guard_banded, c)
     }
 
     /// Average per-access energy for a read:write mix (reads per write).
@@ -147,16 +113,7 @@ impl MemoryArray {
     /// Dynamic power (mW) at the Table III reference access rate, including
     /// the controller component (larger for the big SRAM periphery).
     pub fn dynamic_power_mw(&self, reads_per_write: f64) -> f64 {
-        let ctrl = match self.tech {
-            MemTech::Sram => {
-                // Controller/clock-tree dynamic power, ∝ capacity^0.5,
-                // anchored at 25.6 mW @ 12 MB.
-                25.6 * (self.capacity_bytes as f64 / CAP_REF).powf(0.5)
-            }
-            MemTech::SttMram { .. } => {
-                9.2 * (self.capacity_bytes as f64 / CAP_REF).powf(0.5)
-            }
-        };
+        let ctrl = self.technology().ctrl_dynamic_mw(self.capacity_bytes as f64 / CAP_REF);
         ctrl + self.avg_energy_j(reads_per_write) * REF_ACCESS_RATE * 1e3
     }
 
@@ -171,7 +128,7 @@ impl MemoryArray {
     /// `mram::scaling` solver. This helper only covers SRAM; MRAM timing
     /// lives in the design point.
     pub fn sram_latency_s(&self) -> f64 {
-        debug_assert!(matches!(self.tech, MemTech::Sram));
+        debug_assert!(self.tech == TechnologyId::Sram);
         let c = self.capacity_bytes as f64 / CAP_REF;
         1.0e-9 * (0.4 + 0.6 * c.powf(0.4))
     }
@@ -271,5 +228,16 @@ mod tests {
         let big = MemoryArray::sram(12 * MB).sram_latency_s();
         assert!(small < big);
         assert!(big < 2e-9);
+    }
+
+    #[test]
+    fn sot_array_trades_density_for_write_energy() {
+        let stt = MemoryArray::stt_mram(12 * MB, 27.5);
+        let sot = MemoryArray::sot_mram(12 * MB, 27.5);
+        assert!(sot.area_mm2() > stt.area_mm2(), "2T SOT cell is bigger");
+        assert!(sot.area_mm2() < MemoryArray::sram(12 * MB).area_mm2() / 4.0);
+        assert!(sot.write_energy_j() < stt.write_energy_j(), "SOT writes are cheaper");
+        // At write-heavy mixes SOT wins the average energy.
+        assert!(sot.avg_energy_j(0.5) < stt.avg_energy_j(0.5));
     }
 }

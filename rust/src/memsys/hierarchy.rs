@@ -1,36 +1,96 @@
-//! Composition of the full on-chip buffer system: GLB (SRAM, single-bank
-//! MRAM, or the two-bank MSB/LSB MRAM of STT-AI Ultra), optional scratchpad,
-//! weight-storage NVM, and the DRAM behind it — with an energy ledger used by
-//! Fig. 19 and the Table III accelerator rows.
-
+//! Composition of the full on-chip buffer system: GLB (one bank in any
+//! registered memory technology, or the two-bank MSB/LSB split of STT-AI
+//! Ultra), optional scratchpad, weight-storage NVM, and the DRAM behind it —
+//! with an energy ledger used by Fig. 19 and the Table III accelerator rows.
+//!
+//! The GLB is described by [`BankSpec`]s — (technology, guard-banded Δ)
+//! pairs — instead of hard-coded SRAM/STT variants, so the same composition
+//! code serves the three paper design points and any technology the
+//! [`crate::mram::technology`] registry knows (e.g. a SOT-MRAM GLB).
 
 use super::array::MemoryArray;
 use super::dram::DramModel;
 use super::scratchpad::{Scratchpad, TrafficSplit};
+use crate::mram::technology::{MemTechnology, TechnologyId};
 use crate::util::units::MB;
 
-/// Global-buffer organization.
-#[derive(Debug, Clone, Copy)]
+/// One GLB bank: a technology at a guard-banded Δ design point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BankSpec {
+    pub tech: TechnologyId,
+    pub delta_guard_banded: f64,
+}
+
+impl BankSpec {
+    pub fn new(tech: TechnologyId, delta_guard_banded: f64) -> Self {
+        Self { tech, delta_guard_banded }
+    }
+
+    /// The volatile baseline bank.
+    pub fn sram() -> Self {
+        Self::new(TechnologyId::Sram, 0.0)
+    }
+
+    /// A robust (GLB-class) bank at the technology's default design point.
+    pub fn glb_default(tech: TechnologyId) -> Self {
+        Self::new(tech, tech.technology().default_glb_delta())
+    }
+
+    /// A relaxed (LSB-class) bank at the technology's default design point.
+    pub fn lsb_default(tech: TechnologyId) -> Self {
+        Self::new(tech, tech.technology().default_lsb_delta())
+    }
+
+    /// Materialize an array of `capacity_bytes` in this bank's technology.
+    pub fn array(&self, capacity_bytes: u64) -> MemoryArray {
+        MemoryArray::new(self.tech, capacity_bytes, self.delta_guard_banded)
+    }
+}
+
+/// Global-buffer organization: one full-capacity bank, or the STT-AI-Ultra
+/// split where every word is divided into an MSB group (robust bank) and an
+/// LSB group (relaxed bank).
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum GlbKind {
-    /// Baseline: one SRAM array.
-    Sram,
-    /// STT-AI: one MRAM array at the given guard-banded Δ.
-    Mram { delta_guard_banded: f64 },
-    /// STT-AI Ultra: two half-capacity banks; every word is split into an
-    /// MSB group (robust bank) and an LSB group (relaxed bank).
-    MramTwoBank { delta_msb: f64, delta_lsb: f64 },
+    /// One bank holding the full capacity.
+    Mono(BankSpec),
+    /// Two half-capacity banks splitting every word MSB/LSB.
+    Split { msb: BankSpec, lsb: BankSpec },
 }
 
 impl GlbKind {
     /// Paper's three §V.F design points.
     pub fn baseline() -> Self {
-        GlbKind::Sram
+        GlbKind::Mono(BankSpec::sram())
     }
     pub fn stt_ai() -> Self {
-        GlbKind::Mram { delta_guard_banded: 27.5 }
+        GlbKind::Mono(BankSpec::new(TechnologyId::SttSakhare2020, 27.5))
     }
     pub fn stt_ai_ultra() -> Self {
-        GlbKind::MramTwoBank { delta_msb: 27.5, delta_lsb: 17.5 }
+        GlbKind::Split {
+            msb: BankSpec::new(TechnologyId::SttSakhare2020, 27.5),
+            lsb: BankSpec::new(TechnologyId::SttSakhare2020, 17.5),
+        }
+    }
+
+    /// A single-bank GLB in any registered technology at its default
+    /// GLB-class design point.
+    pub fn mono(tech: TechnologyId) -> Self {
+        GlbKind::Mono(BankSpec::glb_default(tech))
+    }
+
+    /// A two-bank MSB/LSB GLB in any registered technology at its default
+    /// design points.
+    pub fn split(tech: TechnologyId) -> Self {
+        GlbKind::Split { msb: BankSpec::glb_default(tech), lsb: BankSpec::lsb_default(tech) }
+    }
+
+    /// The bank specs, MSB-first.
+    pub fn banks(&self) -> Vec<BankSpec> {
+        match self {
+            GlbKind::Mono(b) => vec![*b],
+            GlbKind::Split { msb, lsb } => vec![*msb, *lsb],
+        }
     }
 }
 
@@ -85,14 +145,10 @@ impl BufferSystem {
     /// The physical arrays making up the GLB.
     pub fn glb_arrays(&self) -> Vec<MemoryArray> {
         match self.kind {
-            GlbKind::Sram => vec![MemoryArray::sram(self.glb_bytes)],
-            GlbKind::Mram { delta_guard_banded } => {
-                vec![MemoryArray::stt_mram(self.glb_bytes, delta_guard_banded)]
+            GlbKind::Mono(b) => vec![b.array(self.glb_bytes)],
+            GlbKind::Split { msb, lsb } => {
+                vec![msb.array(self.glb_bytes / 2), lsb.array(self.glb_bytes / 2)]
             }
-            GlbKind::MramTwoBank { delta_msb, delta_lsb } => vec![
-                MemoryArray::stt_mram(self.glb_bytes / 2, delta_msb),
-                MemoryArray::stt_mram(self.glb_bytes / 2, delta_lsb),
-            ],
         }
     }
 
@@ -112,7 +168,7 @@ impl BufferSystem {
     /// half-width words.
     pub fn glb_read_energy_j(&self) -> f64 {
         match self.kind {
-            GlbKind::MramTwoBank { .. } => {
+            GlbKind::Split { .. } => {
                 self.glb_arrays().iter().map(|a| 0.5 * a.read_energy_j()).sum()
             }
             _ => self.glb_arrays()[0].read_energy_j(),
@@ -122,7 +178,7 @@ impl BufferSystem {
     /// Per-word GLB write energy (J).
     pub fn glb_write_energy_j(&self) -> f64 {
         match self.kind {
-            GlbKind::MramTwoBank { .. } => {
+            GlbKind::Split { .. } => {
                 self.glb_arrays().iter().map(|a| 0.5 * a.write_energy_j()).sum()
             }
             _ => self.glb_arrays()[0].write_energy_j(),
@@ -134,18 +190,21 @@ impl BufferSystem {
         use super::array::REF_ACCESS_RATE;
         let mix = 2.0;
         match self.kind {
-            GlbKind::MramTwoBank { .. } => {
+            GlbKind::Split { msb, .. } => {
                 // The banks split each word (MSB/LSB groups), sharing one
                 // controller/address path — the module behaves like a single
                 // full-capacity macro whose cell energy is the half-width
                 // average of the two banks.
-                let ctrl = 9.2; // MRAM controller anchor at 12 MB
                 let cell: f64 = self
                     .glb_arrays()
                     .iter()
                     .map(|a| 0.5 * a.avg_energy_j(mix) * REF_ACCESS_RATE * 1e3)
                     .sum();
-                ctrl * (self.glb_bytes as f64 / (12.0 * MB as f64)).powf(0.5) + cell
+                let ctrl = msb
+                    .tech
+                    .technology()
+                    .ctrl_dynamic_mw(self.glb_bytes as f64 / (12.0 * MB as f64));
+                ctrl + cell
             }
             _ => self.glb_arrays()[0].dynamic_power_mw(mix),
         }
@@ -258,5 +317,35 @@ mod tests {
         total.add(&l);
         total.add(&l);
         assert!((total.total() - 2.0 * l.total()).abs() < 1e-18);
+    }
+
+    #[test]
+    fn any_registered_technology_composes_a_glb() {
+        // The same composition code serves every registry entry.
+        for id in
+            [TechnologyId::Sram, TechnologyId::SttSakhare2020, TechnologyId::Sot] {
+            let sys = BufferSystem::new(GlbKind::mono(id), 12 * MB, None);
+            assert!(sys.area_mm2() > 0.0);
+            assert!(sys.glb_read_energy_j() > 0.0);
+            let e = sys.layer_energy(1000, 1000, 10 * KB, 4, 0);
+            assert!(e.total() > 0.0, "{id:?}");
+        }
+        // A SOT split GLB exists and is write-cheaper than the STT split.
+        let sot = BufferSystem::new(GlbKind::split(TechnologyId::Sot), 12 * MB, None);
+        let stt = BufferSystem::stt_ai_ultra_12mb();
+        assert!(sot.glb_write_energy_j() < stt.glb_write_energy_j());
+    }
+
+    #[test]
+    fn paper_kinds_map_to_expected_banks() {
+        assert_eq!(GlbKind::baseline().banks(), vec![BankSpec::sram()]);
+        let ultra = GlbKind::stt_ai_ultra().banks();
+        assert_eq!(ultra.len(), 2);
+        assert_eq!(ultra[0].delta_guard_banded, 27.5);
+        assert_eq!(ultra[1].delta_guard_banded, 17.5);
+        assert!(ultra.iter().all(|b| b.tech.is_stt()));
+        // Default-design-point constructors agree with the paper literals.
+        assert_eq!(GlbKind::mono(TechnologyId::SttSakhare2020), GlbKind::stt_ai());
+        assert_eq!(GlbKind::split(TechnologyId::SttSakhare2020), GlbKind::stt_ai_ultra());
     }
 }

@@ -7,9 +7,13 @@
 //!   DRAM-access latency/energy analysis.
 //! * [`scratchpad`] — the small SRAM scratchpad that absorbs partial-ofmap
 //!   writes (§IV.D) and the write-traffic bypass accounting (Fig. 19).
-//! * [`hierarchy`] — composition of GLB (single- or two-bank MRAM, or SRAM),
-//!   scratchpad, weight NVM, and DRAM into one buffer system with an energy
-//!   ledger per layer.
+//! * [`hierarchy`] — composition of GLB banks (any registered technology,
+//!   single- or two-bank), scratchpad, weight NVM, and DRAM into one buffer
+//!   system with an energy ledger per layer.
+//!
+//! Arrays and banks are parametrized by [`TechnologyId`] — the
+//! [`crate::mram::technology::MemTechnology`] registry — instead of matching
+//! on hard-coded SRAM/STT variants.
 
 pub mod array;
 pub mod dram;
@@ -17,8 +21,10 @@ pub mod hierarchy;
 pub mod nvm;
 pub mod scratchpad;
 
-pub use array::{MemTech, MemoryArray, F_14NM};
+pub use array::{MemoryArray, F_14NM};
 pub use dram::DramModel;
-pub use hierarchy::{BufferSystem, EnergyLedger, GlbKind};
+pub use hierarchy::{BankSpec, BufferSystem, EnergyLedger, GlbKind};
 pub use nvm::WeightNvm;
 pub use scratchpad::{Scratchpad, TrafficSplit};
+
+pub use crate::mram::technology::TechnologyId;

@@ -143,6 +143,52 @@ pub struct Model {
 }
 
 impl Model {
+    /// Cheap structural fingerprint (FNV-1a over every layer's geometry),
+    /// used by the `dse::cache` keys so two models that happen to share a
+    /// name but differ in shape never alias in the analysis caches.
+    pub fn fingerprint(&self) -> u64 {
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(PRIME);
+        };
+        mix(self.input.0);
+        mix(self.input.1);
+        mix(self.input.2);
+        for l in &self.layers {
+            match l {
+                Layer::Conv(c) => {
+                    mix(1);
+                    mix(c.in_ch);
+                    mix(c.out_ch);
+                    mix(c.kh);
+                    mix(c.kw);
+                    mix(c.stride);
+                    mix(c.pad);
+                    mix(c.groups);
+                    mix(c.in_h);
+                    mix(c.in_w);
+                }
+                Layer::Fc(f) => {
+                    mix(2);
+                    mix(f.n_in);
+                    mix(f.m_out);
+                }
+                Layer::Pool(p) => {
+                    mix(3);
+                    mix(p.k);
+                    mix(p.stride);
+                    mix(p.ch);
+                    mix(p.in_h);
+                    mix(p.in_w);
+                    mix(p.global as u64);
+                }
+            }
+        }
+        h
+    }
+
     /// Total weight elements (conv + fc).
     pub fn param_count(&self) -> u64 {
         self.layers

@@ -14,11 +14,19 @@
 //! * [`variation`] — process/temperature guard-banding (Eq. 17–18, Fig. 7–8).
 //! * [`write_driver`] — the dynamically adjustable write driver of Fig. 9
 //!   with its process-and-temperature-monitor (PTM) control loop.
+//! * [`technology`] — the pluggable memory-technology layer: the
+//!   [`MemTechnology`] trait (retention/Δ model, read/write dynamics,
+//!   critical-current model, per-bit area/energy calibration, variation
+//!   guard-banding — the full contract is documented on the module) with
+//!   STT-MRAM, SOT-MRAM and SRAM implementations behind a [`TechnologyId`]
+//!   registry. Everything above the device layer — `memsys` arrays, the DSE
+//!   `tech` axis, config, reports, the CLI — works over this abstraction.
 
 pub mod montecarlo;
 pub mod mtj;
 pub mod reliability;
 pub mod scaling;
+pub mod technology;
 pub mod variation;
 pub mod write_driver;
 
@@ -29,6 +37,7 @@ pub use reliability::{
     write_error_rate, write_pulse_at_wer,
 };
 pub use scaling::{DeltaDesign, DesignTargets, ScalingSolver};
+pub use technology::{finite_or_max, MemTechnology, SotMram, Sram, SttMram, TechnologyId};
 pub use variation::{GuardBand, PtCorner, PtVariation};
 pub use write_driver::{PtmSample, WriteDriver, WriteDriverConfig};
 

@@ -1,0 +1,559 @@
+//! The pluggable memory-technology layer: every device stack the framework
+//! can build a buffer out of, behind one [`MemTechnology`] trait.
+//!
+//! # Trait contract
+//!
+//! A [`MemTechnology`] bundles the five things the layers above need to know
+//! about a bit cell, and nothing else:
+//!
+//! 1. **Retention / Δ model** — [`MemTechnology::retention_time`] and its
+//!    inverse [`MemTechnology::delta_for_retention`]. Non-volatile
+//!    technologies follow the Arrhenius law of Eq. 14 with their own τ;
+//!    volatile technologies report infinite retention and Δ = 0 (callers
+//!    that serialize metrics should clamp with [`finite_or_max`]).
+//! 2. **Read/write dynamics** — [`MemTechnology::write_pulse`] /
+//!    [`MemTechnology::read_pulse`] map a WER / read-disturb budget and a Δ
+//!    to pulse widths (Eq. 15–16 for STT; incubation-free switching for SOT;
+//!    capacity-independent latency class for SRAM).
+//! 3. **Critical-current / write-driver model** —
+//!    [`MemTechnology::critical_current`], the I_c(Δ) anchor the adjustable
+//!    write driver (Fig. 9) and the energy scalings hang off.
+//! 4. **Area / energy per bit** — the Destiny-like array calibration:
+//!    [`MemTechnology::cell_area_f2`], [`MemTechnology::periphery_mult`],
+//!    [`MemTechnology::leakage_mw`], [`MemTechnology::read_energy_j`],
+//!    [`MemTechnology::write_energy_j`], [`MemTechnology::ctrl_dynamic_mw`].
+//!    `cap_ratio` is capacity / 12 MB (the calibration anchor), `cap_mb` is
+//!    capacity in MiB. Implementations must keep these formulas *pure* —
+//!    [`crate::memsys::MemoryArray`] is a thin shell over them.
+//! 5. **Variation guard-banding** — [`MemTechnology::guard_band`] applies
+//!    the Eq. 17–18 process/temperature recipe (or a no-op for volatile
+//!    cells).
+//!
+//! The [`SttMram`] implementation routes every method to the exact same
+//! free functions (`reliability::*`) and constants the pre-refactor
+//! hard-coded paths used, so the paper figures stay byte-identical — the
+//! parity tests in `tests/figures.rs` enforce this. [`SotMram`] and
+//! [`Sram`] open the scenario space the ROADMAP names (SOT-MRAM
+//! co-optimization, arXiv:2303.12310 class, and the SRAM baseline as a
+//! first-class registry citizen).
+//!
+//! Technologies are enumerated by the Copy-able [`TechnologyId`] so that
+//! value types (`MemoryArray`, bank specs, sweep points) stay `Copy`;
+//! [`TechnologyId::technology`] resolves the id to the `'static` trait
+//! object, and [`registry`] / [`by_token`] expose the full set to the DSE
+//! engine's `tech` axis and the CLI's `--tech stt|sot|sram`.
+
+use std::sync::OnceLock;
+
+use super::mtj::MtjTech;
+use super::reliability::{read_pulse_at_rd, retention_time_at_ber, write_pulse_at_wer};
+use super::variation::{GuardBand, PtVariation};
+
+/// Reference Δ at which the MRAM-class energy/area constants are anchored
+/// (the paper's GLB design point, Δ_PT_GB = 27.5).
+pub const DELTA_REF: f64 = 27.5;
+
+/// Clamp a possibly-infinite technology metric (SRAM retention) to the
+/// largest finite f64 so CSV/JSON records stay well-formed.
+pub fn finite_or_max(v: f64) -> f64 {
+    if v.is_finite() {
+        v
+    } else {
+        f64::MAX
+    }
+}
+
+/// Copy-able identifier of a registered memory technology.
+///
+/// The two STT entries share one array-level model (the 1T-1MTJ calibration
+/// of Table III) but carry different silicon base cases for the Δ-scaling
+/// dynamics ([6] vs [13]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum TechnologyId {
+    /// STT-MRAM, Sakhare et al. TED 2020 [6] base case (paper default).
+    #[default]
+    SttSakhare2020,
+    /// STT-MRAM, Wei et al. ISSCC 2019 [13] base case.
+    SttWei2019,
+    /// SOT-MRAM (three-terminal, decoupled read/write path).
+    Sot,
+    /// 6T SRAM (volatile baseline).
+    Sram,
+}
+
+impl TechnologyId {
+    /// Resolve to the singleton technology model.
+    pub fn technology(self) -> &'static dyn MemTechnology {
+        match self {
+            TechnologyId::SttSakhare2020 => {
+                static T: OnceLock<SttMram> = OnceLock::new();
+                T.get_or_init(SttMram::sakhare2020)
+            }
+            TechnologyId::SttWei2019 => {
+                static T: OnceLock<SttMram> = OnceLock::new();
+                T.get_or_init(SttMram::wei2019)
+            }
+            TechnologyId::Sot => &SotMram,
+            TechnologyId::Sram => &Sram,
+        }
+    }
+
+    /// Whether this id names an STT-MRAM base case.
+    pub fn is_stt(self) -> bool {
+        matches!(self, TechnologyId::SttSakhare2020 | TechnologyId::SttWei2019)
+    }
+}
+
+/// The pluggable memory-technology abstraction. See the module docs for the
+/// full contract of each method group.
+pub trait MemTechnology: std::fmt::Debug + Send + Sync {
+    /// The id this model answers to.
+    fn id(&self) -> TechnologyId;
+    /// Human-readable base-case name (stable: used in sweep records).
+    fn name(&self) -> &'static str;
+    /// Canonical CLI token (`stt` / `sot` / `sram`).
+    fn token(&self) -> &'static str;
+    /// Whether the cell retains data without power.
+    fn is_nonvolatile(&self) -> bool;
+
+    // -- retention / Δ model -------------------------------------------------
+    /// Retention time (s) at a per-bit failure budget `ber` for stability
+    /// factor `delta`. Volatile cells return `f64::INFINITY`.
+    fn retention_time(&self, delta: f64, ber: f64) -> f64;
+    /// Minimum Δ whose retention at `ber` covers `retention_s` (0 for
+    /// volatile cells: no Δ knob exists).
+    fn delta_for_retention(&self, retention_s: f64, ber: f64) -> f64;
+    /// Process/temperature guard-banding of a scaled Δ (Eq. 17–18).
+    fn guard_band(&self, delta_scaled: f64) -> GuardBand;
+
+    // -- read/write dynamics -------------------------------------------------
+    /// Write pulse width (s) meeting the WER budget at `delta`.
+    fn write_pulse(&self, wer: f64, delta: f64) -> f64;
+    /// Read pulse width (s) meeting the read-disturb budget at `delta`.
+    fn read_pulse(&self, rd_ber: f64, delta: f64) -> f64;
+    /// Critical switching current I_c(Δ) (A); 0 for volatile cells.
+    fn critical_current(&self, delta: f64) -> f64;
+
+    // -- array calibration (Destiny-like, anchored at 12 MB / Δ_REF) --------
+    /// Bit-cell area in F² at guard-banded Δ `delta_gb`.
+    fn cell_area_f2(&self, delta_gb: f64) -> f64;
+    /// Periphery/overhead multiplier on cell area.
+    fn periphery_mult(&self) -> f64;
+    /// Macro leakage (mW) for `cap_mb` MiB at `delta_gb`.
+    fn leakage_mw(&self, delta_gb: f64, cap_mb: f64) -> f64;
+    /// Per-access read energy (J) for a 64-bit word; `cap_ratio` = cap/12 MB.
+    fn read_energy_j(&self, delta_gb: f64, cap_ratio: f64) -> f64;
+    /// Per-access write energy (J) for a 64-bit word.
+    fn write_energy_j(&self, delta_gb: f64, cap_ratio: f64) -> f64;
+    /// Controller/clock-tree dynamic power (mW) at the reference rate.
+    fn ctrl_dynamic_mw(&self, cap_ratio: f64) -> f64;
+
+    // -- default design points ----------------------------------------------
+    /// Δ_PT_GB of the robust GLB-class bank (0 for volatile cells).
+    fn default_glb_delta(&self) -> f64;
+    /// Δ_PT_GB of the relaxed LSB-class bank (0 for volatile cells).
+    fn default_lsb_delta(&self) -> f64;
+}
+
+/// Every registered technology, in a stable order (the `tech` axis grid).
+pub fn registry() -> [&'static dyn MemTechnology; 4] {
+    [
+        TechnologyId::SttSakhare2020.technology(),
+        TechnologyId::SttWei2019.technology(),
+        TechnologyId::Sot.technology(),
+        TechnologyId::Sram.technology(),
+    ]
+}
+
+/// Parse a CLI token into a registered technology. Accepts the family
+/// tokens (`stt`, `sot`, `sram`) and the explicit base-case names.
+pub fn by_token(s: &str) -> Option<&'static dyn MemTechnology> {
+    let t = s.to_lowercase().replace('-', "_");
+    let id = match t.as_str() {
+        "stt" | "stt_mram" | "sakhare2020" => TechnologyId::SttSakhare2020,
+        "wei2019" => TechnologyId::SttWei2019,
+        "sot" | "sot_mram" | "sot2023" => TechnologyId::Sot,
+        "sram" => TechnologyId::Sram,
+        _ => return None,
+    };
+    Some(id.technology())
+}
+
+// ---------------------------------------------------------------------------
+// STT-MRAM
+// ---------------------------------------------------------------------------
+
+/// STT-MRAM behind the trait: Δ dynamics from one [`MtjTech`] silicon base
+/// case, array calibration from the Table III anchors. Byte-for-byte
+/// identical to the pre-refactor hard-coded paths.
+#[derive(Debug, Clone, Copy)]
+pub struct SttMram {
+    id: TechnologyId,
+    base: MtjTech,
+    variation: PtVariation,
+}
+
+impl SttMram {
+    pub fn sakhare2020() -> Self {
+        Self {
+            id: TechnologyId::SttSakhare2020,
+            base: MtjTech::sakhare2020(),
+            variation: PtVariation::paper(),
+        }
+    }
+
+    pub fn wei2019() -> Self {
+        Self {
+            id: TechnologyId::SttWei2019,
+            base: MtjTech::wei2019(),
+            variation: PtVariation::paper(),
+        }
+    }
+
+    /// The underlying silicon base case (for the STT-specific Δ solver).
+    pub fn base(&self) -> MtjTech {
+        self.base
+    }
+}
+
+impl MemTechnology for SttMram {
+    fn id(&self) -> TechnologyId {
+        self.id
+    }
+    fn name(&self) -> &'static str {
+        self.base.name
+    }
+    fn token(&self) -> &'static str {
+        // The family token resolves to the default base case, so the
+        // non-default Wei2019 entry must round-trip by its explicit name.
+        match self.id {
+            TechnologyId::SttWei2019 => "wei2019",
+            _ => "stt",
+        }
+    }
+    fn is_nonvolatile(&self) -> bool {
+        true
+    }
+
+    fn retention_time(&self, delta: f64, ber: f64) -> f64 {
+        retention_time_at_ber(self.base.tau_ret, delta, ber)
+    }
+
+    fn delta_for_retention(&self, retention_s: f64, ber: f64) -> f64 {
+        let lhs = -(-ber).ln_1p();
+        (retention_s / (self.base.tau_ret * lhs)).ln()
+    }
+
+    fn guard_band(&self, delta_scaled: f64) -> GuardBand {
+        self.variation.guard_band(delta_scaled)
+    }
+
+    fn write_pulse(&self, wer: f64, delta: f64) -> f64 {
+        write_pulse_at_wer(wer, self.base.tau_w, delta, self.base.overdrive_base)
+    }
+
+    fn read_pulse(&self, rd_ber: f64, delta: f64) -> f64 {
+        read_pulse_at_rd(rd_ber, self.base.tau_rd, delta, self.base.read_ratio)
+    }
+
+    fn critical_current(&self, delta: f64) -> f64 {
+        self.base.params_at_delta(delta).critical_current()
+    }
+
+    fn cell_area_f2(&self, delta_gb: f64) -> f64 {
+        6.0 * (delta_gb / DELTA_REF).powf(0.4)
+    }
+
+    fn periphery_mult(&self) -> f64 {
+        8.53
+    }
+
+    fn leakage_mw(&self, delta_gb: f64, cap_mb: f64) -> f64 {
+        0.006_67 * cap_mb * (delta_gb / DELTA_REF).powf(1.5)
+    }
+
+    fn read_energy_j(&self, delta_gb: f64, cap_ratio: f64) -> f64 {
+        let d = delta_gb / DELTA_REF;
+        (20.0 + 10.0 * d * cap_ratio.powf(0.5)) * 1e-12
+    }
+
+    fn write_energy_j(&self, delta_gb: f64, cap_ratio: f64) -> f64 {
+        let d = delta_gb / DELTA_REF;
+        (28.0 + 22.0 * d * d * cap_ratio.powf(0.5)) * 1e-12
+    }
+
+    fn ctrl_dynamic_mw(&self, cap_ratio: f64) -> f64 {
+        9.2 * cap_ratio.powf(0.5)
+    }
+
+    fn default_glb_delta(&self) -> f64 {
+        27.5
+    }
+    fn default_lsb_delta(&self) -> f64 {
+        17.5
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SOT-MRAM
+// ---------------------------------------------------------------------------
+
+/// SOT-MRAM: three-terminal cell writing through a heavy-metal track.
+///
+/// Modeling assumptions (provisional calibration for the ROADMAP's
+/// arXiv:2303.12310 co-optimization scenario; revisit against silicon):
+///
+/// * retention is the same Arrhenius Eq. 14 law (τ = 1 s calibration class);
+/// * switching is incubation-free, so the write pulse is sub-ns and only
+///   weakly (logarithmically) dependent on the WER budget;
+/// * the read path is decoupled from the write path, so read pulses are
+///   sense-limited, not disturb-limited;
+/// * the two-transistor cell is ~2× the 1T-1MTJ footprint, with the same
+///   Δ^0.4 access-device shrink;
+/// * write energy is near read-class (short pulse beats the higher track
+///   current) and only ~linear in Δ — which is what makes SOT attractive
+///   for write-intensive (training-style) scratchpad traffic.
+#[derive(Debug, Clone, Copy)]
+pub struct SotMram;
+
+/// SOT incubation-free switching time scale (s).
+const SOT_T_W0: f64 = 0.35e-9;
+/// SOT sense-limited read pulse (s).
+const SOT_T_READ: f64 = 1.2e-9;
+
+impl MemTechnology for SotMram {
+    fn id(&self) -> TechnologyId {
+        TechnologyId::Sot
+    }
+    fn name(&self) -> &'static str {
+        "sot2023"
+    }
+    fn token(&self) -> &'static str {
+        "sot"
+    }
+    fn is_nonvolatile(&self) -> bool {
+        true
+    }
+
+    fn retention_time(&self, delta: f64, ber: f64) -> f64 {
+        retention_time_at_ber(1.0, delta, ber)
+    }
+
+    fn delta_for_retention(&self, retention_s: f64, ber: f64) -> f64 {
+        let lhs = -(-ber).ln_1p();
+        (retention_s / lhs).ln()
+    }
+
+    fn guard_band(&self, delta_scaled: f64) -> GuardBand {
+        PtVariation::paper().guard_band(delta_scaled)
+    }
+
+    fn write_pulse(&self, wer: f64, delta: f64) -> f64 {
+        // Incubation-free: t_w ≈ t0·(1 + ln(1/WER)/(2Δ)) — sub-ns across the
+        // whole Δ/WER design space, vs the STT ln(Δ)/overdrive law.
+        SOT_T_W0 * (1.0 + (-wer.ln()) / (2.0 * delta.max(1.0)))
+    }
+
+    fn read_pulse(&self, _rd_ber: f64, _delta: f64) -> f64 {
+        // Read current does not flow through the write path: disturb-free,
+        // sense-amp-limited.
+        SOT_T_READ
+    }
+
+    fn critical_current(&self, delta: f64) -> f64 {
+        // Track current ∝ Δ with a higher prefactor than STT (η_SOT < η_STT
+        // per written bit, compensated by the short pulse).
+        super::mtj::critical_current(delta, 300.0, 0.01, 0.35, 2.4e5, 1.2e5)
+    }
+
+    fn cell_area_f2(&self, delta_gb: f64) -> f64 {
+        12.0 * (delta_gb / DELTA_REF).powf(0.4)
+    }
+
+    fn periphery_mult(&self) -> f64 {
+        8.53
+    }
+
+    fn leakage_mw(&self, delta_gb: f64, cap_mb: f64) -> f64 {
+        0.008 * cap_mb * (delta_gb / DELTA_REF).powf(1.5)
+    }
+
+    fn read_energy_j(&self, delta_gb: f64, cap_ratio: f64) -> f64 {
+        let d = delta_gb / DELTA_REF;
+        (16.0 + 6.0 * d * cap_ratio.powf(0.5)) * 1e-12
+    }
+
+    fn write_energy_j(&self, delta_gb: f64, cap_ratio: f64) -> f64 {
+        // Short incubation-free pulse ⇒ near-read-class energy, linear in Δ
+        // (vs quadratic for STT).
+        let d = delta_gb / DELTA_REF;
+        (22.0 + 7.0 * d * cap_ratio.powf(0.5)) * 1e-12
+    }
+
+    fn ctrl_dynamic_mw(&self, cap_ratio: f64) -> f64 {
+        9.2 * cap_ratio.powf(0.5)
+    }
+
+    fn default_glb_delta(&self) -> f64 {
+        27.5
+    }
+    fn default_lsb_delta(&self) -> f64 {
+        17.5
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SRAM
+// ---------------------------------------------------------------------------
+
+/// 6T SRAM as a first-class registry citizen: volatile, no Δ knob, with the
+/// Table III baseline calibration.
+#[derive(Debug, Clone, Copy)]
+pub struct Sram;
+
+impl MemTechnology for Sram {
+    fn id(&self) -> TechnologyId {
+        TechnologyId::Sram
+    }
+    fn name(&self) -> &'static str {
+        "sram"
+    }
+    fn token(&self) -> &'static str {
+        "sram"
+    }
+    fn is_nonvolatile(&self) -> bool {
+        false
+    }
+
+    fn retention_time(&self, _delta: f64, _ber: f64) -> f64 {
+        f64::INFINITY
+    }
+
+    fn delta_for_retention(&self, _retention_s: f64, _ber: f64) -> f64 {
+        0.0
+    }
+
+    fn guard_band(&self, delta_scaled: f64) -> GuardBand {
+        GuardBand { delta_scaled, delta_guard_banded: delta_scaled, delta_pt_max: delta_scaled }
+    }
+
+    fn write_pulse(&self, _wer: f64, _delta: f64) -> f64 {
+        1.0e-9
+    }
+
+    fn read_pulse(&self, _rd_ber: f64, _delta: f64) -> f64 {
+        1.0e-9
+    }
+
+    fn critical_current(&self, _delta: f64) -> f64 {
+        0.0
+    }
+
+    fn cell_area_f2(&self, _delta_gb: f64) -> f64 {
+        100.0
+    }
+
+    fn periphery_mult(&self) -> f64 {
+        8.21
+    }
+
+    fn leakage_mw(&self, _delta_gb: f64, cap_mb: f64) -> f64 {
+        0.0175 * cap_mb
+    }
+
+    fn read_energy_j(&self, _delta_gb: f64, cap_ratio: f64) -> f64 {
+        (5.0 + 112.0 * cap_ratio.powf(0.9)) * 1e-12
+    }
+
+    fn write_energy_j(&self, _delta_gb: f64, cap_ratio: f64) -> f64 {
+        (5.0 + 112.0 * cap_ratio.powf(0.9)) * 1e-12
+    }
+
+    fn ctrl_dynamic_mw(&self, cap_ratio: f64) -> f64 {
+        25.6 * cap_ratio.powf(0.5)
+    }
+
+    fn default_glb_delta(&self) -> f64 {
+        0.0
+    }
+    fn default_lsb_delta(&self) -> f64 {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mram::{DesignTargets, ScalingSolver};
+
+    #[test]
+    fn registry_is_complete_and_tokens_resolve() {
+        let names: Vec<&str> = registry().iter().map(|t| t.name()).collect();
+        assert_eq!(names, vec!["sakhare2020", "wei2019", "sot2023", "sram"]);
+        for t in registry() {
+            assert_eq!(by_token(t.token()).unwrap().id(), t.id(), "{}", t.name());
+            assert_eq!(t.id().technology().name(), t.name());
+        }
+        assert_eq!(by_token("stt").unwrap().name(), "sakhare2020");
+        assert_eq!(by_token("wei2019").unwrap().id(), TechnologyId::SttWei2019);
+        assert_eq!(by_token("SOT-MRAM").unwrap().id(), TechnologyId::Sot);
+        assert!(by_token("dram").is_none());
+    }
+
+    #[test]
+    fn stt_trait_matches_legacy_solver_exactly() {
+        // The trait path must be the *same arithmetic* as ScalingSolver —
+        // bit-identical, not just close (figure parity depends on it).
+        let t = TechnologyId::SttSakhare2020.technology();
+        let s = ScalingSolver::new(MtjTech::sakhare2020());
+        for delta in [12.5, 19.5, 27.5, 39.0, 60.0] {
+            for ber in [1e-9, 1e-8, 1e-5] {
+                assert_eq!(t.retention_time(delta, ber), s.retention_vs_delta(ber, &[delta])[0].1);
+                assert_eq!(t.read_pulse(ber, delta), s.read_pulse_vs_delta(ber, &[delta])[0].1);
+                assert_eq!(t.write_pulse(ber, delta), s.write_pulse_vs_delta(ber, &[delta])[0].1);
+            }
+        }
+        assert_eq!(
+            t.delta_for_retention(3.0, 1e-8),
+            s.delta_for_retention(&DesignTargets::global_buffer())
+        );
+        let gb = t.guard_band(19.5);
+        assert_eq!(gb.delta_guard_banded, s.variation.guard_band(19.5).delta_guard_banded);
+    }
+
+    #[test]
+    fn sot_is_write_cheap_and_stt_is_dense() {
+        let sot = TechnologyId::Sot.technology();
+        let stt = TechnologyId::SttSakhare2020.technology();
+        // SOT writes are sub-ns and cheaper than STT at the GLB point.
+        assert!(sot.write_pulse(1e-8, 27.5) < 1.0e-9);
+        assert!(sot.write_pulse(1e-8, 27.5) < stt.write_pulse(1e-8, 27.5));
+        assert!(sot.write_energy_j(27.5, 1.0) < stt.write_energy_j(27.5, 1.0));
+        // STT keeps the density edge (1T vs 2T cell).
+        assert!(stt.cell_area_f2(27.5) < sot.cell_area_f2(27.5));
+        // Both retain by the same Arrhenius class.
+        let r_sot = sot.retention_time(19.5, 1e-8);
+        assert!(r_sot > 2.0 && r_sot < 4.0, "{r_sot}");
+    }
+
+    #[test]
+    fn sram_reports_volatile_semantics() {
+        let s = TechnologyId::Sram.technology();
+        assert!(!s.is_nonvolatile());
+        assert_eq!(s.retention_time(0.0, 1e-8), f64::INFINITY);
+        assert_eq!(finite_or_max(s.retention_time(0.0, 1e-8)), f64::MAX);
+        assert_eq!(s.delta_for_retention(3.0, 1e-8), 0.0);
+        assert_eq!(s.critical_current(27.5), 0.0);
+        assert_eq!(s.cell_area_f2(0.0), 100.0);
+    }
+
+    #[test]
+    fn write_pulse_orderings_hold_across_registry() {
+        // Tighter WER never shortens the pulse, for every technology.
+        for t in registry() {
+            let relaxed = t.write_pulse(1e-5, 27.5);
+            let tight = t.write_pulse(1e-9, 27.5);
+            assert!(tight >= relaxed, "{}: {tight} < {relaxed}", t.name());
+        }
+    }
+}

@@ -9,7 +9,7 @@
 use std::io::Write;
 use std::path::Path;
 
-use crate::dse::engine::{paper_specs, shared_zoo, Runner, SweepResult};
+use crate::dse::engine::{paper_specs, shared_zoo, spec_techcmp, Runner, SweepResult};
 use crate::util::json::Json;
 
 /// Stable file names for the paper sweeps (kept close to the figure list).
@@ -26,6 +26,7 @@ fn file_name(sweep: &str) -> String {
         "fig17" => "fig17_lsb_bank.csv".into(),
         "fig18" => "fig18_partial_ofmaps.csv".into(),
         "fig19" => "fig19_scratchpad_energy.csv".into(),
+        "techcmp" => "techcmp_technologies.csv".into(),
         other => format!("{other}.csv"),
     }
 }
@@ -59,7 +60,8 @@ pub fn export_all_with(dir: &Path, runner: &Runner) -> std::io::Result<Vec<Strin
     let zoo = shared_zoo();
     let mut written = Vec::new();
     let mut all: Vec<SweepResult> = Vec::new();
-    for spec in paper_specs(&zoo) {
+    // Paper sweeps plus the cross-technology comparison records.
+    for spec in paper_specs(&zoo).into_iter().chain([spec_techcmp(&zoo)]) {
         let results = runner.run(spec);
         let name = file_name(&results[0].sweep);
         write_results_csv(&dir.join(&name), &results)?;
@@ -90,8 +92,9 @@ mod tests {
     fn exports_all_figures() {
         let dir = std::env::temp_dir().join("stt_ai_csv_test");
         let files = export_all_with(&dir, &Runner::new(2)).unwrap();
-        // 11 sweep CSVs + table3 + sweeps.json.
-        assert_eq!(files.len(), 13, "{files:?}");
+        // 11 sweep CSVs + techcmp + table3 + sweeps.json.
+        assert_eq!(files.len(), 14, "{files:?}");
+        assert!(files.contains(&"techcmp_technologies.csv".to_string()));
         for f in files.iter().filter(|f| f.ends_with(".csv")) {
             let text = std::fs::read_to_string(dir.join(f)).unwrap();
             let lines: Vec<&str> = text.lines().collect();

@@ -224,8 +224,8 @@ pub fn fig15_with(w: &mut impl Write, r: &Runner) -> std::io::Result<Vec<SweepRe
     }
     let ber = 1.0e-8_f64;
     for group in rows.chunks(deltas.len()) {
-        let tech = group[0].point.tech.unwrap().tech();
-        writeln!(w, "-- base case {} @ BER {ber:.0e}: Δ grid {} points", tech.name, deltas.len())?;
+        let tech = group[0].point.tech.unwrap();
+        writeln!(w, "-- base case {} @ BER {ber:.0e}: Δ grid {} points", tech.name(), deltas.len())?;
         for d in [12.5, 19.5, 27.5, 39.0, 55.0, 60.0] {
             // Showcase rows only for Δ values the (possibly overridden)
             // grid actually contains — never attribute another Δ's physics.
@@ -376,8 +376,63 @@ pub fn fig19_with(w: &mut impl Write, r: &Runner) -> std::io::Result<Vec<SweepRe
     Ok(rows)
 }
 
-/// Regenerate every figure (10–19) in order — the `stt-ai figures` hot path
-/// and the `benches/hotpath.rs` figure-regeneration entry.
+/// Cross-technology GLB comparison table: every registered memory
+/// technology building the 12 MB GLB at its default design point, at
+/// inference-like and training-like write intensities (ResNet-50 traffic).
+pub fn techcmp(w: &mut impl Write) -> std::io::Result<Vec<SweepResult>> {
+    techcmp_with(w, &Runner::default())
+}
+
+pub fn techcmp_with(w: &mut impl Write, r: &Runner) -> std::io::Result<Vec<SweepResult>> {
+    let rows = r.run(engine::spec_techcmp(&engine::shared_zoo()));
+    writeln!(w, "== Cross-technology GLB comparison (12 MB, ResNet-50 batch 16) ==")?;
+    writeln!(
+        w,
+        "{:<14} {:>4} {:>9} {:>9} {:>9} {:>9} {:>11} {:>11}",
+        "tech", "wi", "area", "leak", "E_rd", "E_wr", "t_write", "E_buffer"
+    )?;
+    for rec in &rows {
+        writeln!(
+            w,
+            "{:<14} {:>4} {:>6.2}mm2 {:>7.3}mW {:>7.1}pJ {:>7.1}pJ {:>11} {:>9.3}mJ",
+            rec.point.tech.unwrap().name(),
+            rec.point.write_intensity.unwrap(),
+            rec.metric("glb_area_mm2"),
+            rec.metric("glb_leakage_mw"),
+            rec.metric("read_energy_j") * 1e12,
+            rec.metric("write_energy_j") * 1e12,
+            fmt_time(rec.metric("write_pulse_s")),
+            rec.metric("buffer_energy_j") * 1e3
+        )?;
+    }
+    // Headline: the buffer-energy winner at each swept intensity (derived
+    // from the rows, so `--sweep write_intensity=...` overrides stay
+    // covered).
+    let mut wis: Vec<f64> = rows.iter().filter_map(|x| x.point.write_intensity).collect();
+    wis.sort_by(f64::total_cmp);
+    wis.dedup();
+    for wi in wis {
+        if let Some(best) = rows
+            .iter()
+            .filter(|x| x.point.write_intensity == Some(wi))
+            .min_by(|a, b| {
+                a.metric("buffer_energy_j").total_cmp(&b.metric("buffer_energy_j"))
+            })
+        {
+            writeln!(
+                w,
+                "-- write intensity {wi}: lowest buffer energy {} ({:.3} mJ)",
+                best.point.tech.unwrap().name(),
+                best.metric("buffer_energy_j") * 1e3
+            )?;
+        }
+    }
+    Ok(rows)
+}
+
+/// Regenerate every figure (10–19) in order, plus the cross-technology
+/// comparison — the `stt-ai figures` hot path and the `benches/hotpath.rs`
+/// figure-regeneration entry.
 pub fn render_all(w: &mut impl Write, r: &Runner) -> std::io::Result<()> {
     fig10_with(w, r)?;
     writeln!(w)?;
@@ -398,6 +453,8 @@ pub fn render_all(w: &mut impl Write, r: &Runner) -> std::io::Result<()> {
     fig18_with(w, r)?;
     writeln!(w)?;
     fig19_with(w, r)?;
+    writeln!(w)?;
+    techcmp_with(w, r)?;
     writeln!(w)?;
     Ok(())
 }

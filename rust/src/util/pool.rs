@@ -169,6 +169,33 @@ mod tests {
     }
 
     #[test]
+    fn panicking_job_does_not_deadlock_or_corrupt_ordering() {
+        // A worker panic must neither wedge the remaining workers (the scope
+        // join would hang) nor poison anything that corrupts a later map.
+        let pool = ThreadPool::new(4);
+        let items: Vec<usize> = (0..64).collect();
+        let attempt = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.map(&items, |i, _| {
+                if i == 5 {
+                    panic!("boom");
+                }
+                i
+            })
+        }));
+        assert!(attempt.is_err(), "panic must propagate to the caller");
+        // The pool is stateless across maps: the very next call must run
+        // every job exactly once and return results in input order.
+        let runs = AtomicUsize::new(0);
+        let out = pool.map(&items, |i, x| {
+            assert_eq!(i, *x);
+            runs.fetch_add(1, Ordering::Relaxed);
+            *x * 3
+        });
+        assert_eq!(runs.load(Ordering::Relaxed), 64);
+        assert_eq!(out, items.iter().map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
     #[should_panic(expected = "job 13 exploded")]
     fn panics_propagate() {
         let items: Vec<usize> = (0..32).collect();

@@ -5,7 +5,7 @@ use stt_ai::accel::{ArrayConfig, ModelTraffic, RetentionAnalysis};
 use stt_ai::config::SystemConfig;
 use stt_ai::dse::delta::paper_design_points;
 use stt_ai::dse::retention;
-use stt_ai::memsys::{MemTech, Scratchpad};
+use stt_ai::memsys::{Scratchpad, TechnologyId};
 use stt_ai::models::{self, DType};
 use stt_ai::mram::{DesignTargets, MtjTech, ScalingSolver};
 use stt_ai::util::units::{KB, MB};
@@ -69,19 +69,17 @@ fn scratchpad_traffic_conservation() {
 #[test]
 fn system_configs_compose_expected_arrays() {
     let base = SystemConfig::paper_baseline().buffer_system();
-    assert!(matches!(base.glb_arrays()[0].tech, MemTech::Sram));
+    assert_eq!(base.glb_arrays()[0].tech, TechnologyId::Sram);
     let ai = SystemConfig::paper_stt_ai().buffer_system();
-    assert!(matches!(
-        ai.glb_arrays()[0].tech,
-        MemTech::SttMram { delta_guard_banded } if (delta_guard_banded - 27.5).abs() < 1e-9
-    ));
+    let glb = ai.glb_arrays()[0];
+    assert!(glb.tech.is_stt() && (glb.delta_guard_banded - 27.5).abs() < 1e-9);
     let ultra = SystemConfig::paper_stt_ai_ultra().buffer_system();
     let deltas: Vec<f64> = ultra
         .glb_arrays()
         .iter()
-        .map(|a| match a.tech {
-            MemTech::SttMram { delta_guard_banded } => delta_guard_banded,
-            _ => panic!("ultra banks must be MRAM"),
+        .map(|a| {
+            assert!(a.tech.is_stt(), "ultra banks must be MRAM");
+            a.delta_guard_banded
         })
         .collect();
     assert_eq!(deltas, vec![27.5, 17.5]);

@@ -1,0 +1,135 @@
+//! Cross-layer integration of the pluggable memory-technology stack: the
+//! same figure/table numbers through the trait (parity is asserted
+//! per-figure in `tests/figures.rs`), plus the new SOT-MRAM and
+//! write-intensity scenario space end to end — sweep → records → export.
+
+use stt_ai::config::{GlbVariant, SystemConfig, TechBase, TechConfig};
+use stt_ai::dse::engine::{self, Runner};
+use stt_ai::memsys::TechnologyId;
+use stt_ai::mram::technology::{by_token, registry, MemTechnology};
+use stt_ai::report::{export, figures};
+use stt_ai::util::json::Json;
+
+/// The STT-AI paper design points, built *through the trait registry*, must
+/// match the hard-coded Table III anchors.
+#[test]
+fn stt_through_trait_reproduces_table3_anchors() {
+    let sys = SystemConfig::paper_stt_ai().buffer_system();
+    let area = sys.glb_arrays()[0].area_mm2();
+    assert!((area - 1.01).abs() / 1.01 < 0.03, "{area}");
+    let base = SystemConfig::paper_baseline().buffer_system();
+    assert!((base.area_mm2() - 16.2).abs() / 16.2 < 0.02);
+    // And the composed Table III savings still hold (same numbers as the
+    // pre-trait build — table3 tests assert the tolerances).
+    let rows = stt_ai::report::table3_rows();
+    let (a, p) = rows[1].savings_vs(&rows[0]);
+    assert!(a > 0.7 && p > 0.0, "area {a} power {p}");
+}
+
+/// A SOT-MRAM build of the same system config: legal, denser than SRAM,
+/// write-cheaper than STT.
+#[test]
+fn sot_system_config_builds_and_orders() {
+    let mut cfg = SystemConfig::paper_stt_ai();
+    cfg.tech = TechConfig::new(TechBase::Sot);
+    let sot = cfg.buffer_system();
+    assert_eq!(sot.glb_arrays()[0].tech, TechnologyId::Sot);
+    let stt = SystemConfig::paper_stt_ai().buffer_system();
+    let sram = SystemConfig::paper_baseline().buffer_system();
+    assert!(sot.area_mm2() > stt.area_mm2(), "2T SOT cell bigger than 1T STT");
+    assert!(sot.area_mm2() < sram.area_mm2() / 4.0, "still far denser than SRAM");
+    assert!(sot.glb_write_energy_j() < stt.glb_write_energy_j());
+    // Variant structure is preserved: an Ultra config in SOT splits MSB/LSB.
+    let mut ultra = SystemConfig::paper_stt_ai_ultra();
+    ultra.tech = TechConfig::new(TechBase::Sot);
+    assert_eq!(ultra.buffer_system().glb_arrays().len(), 2);
+    assert_eq!(GlbVariant::SttAiUltra.kind_for(&ultra.tech).banks().len(), 2);
+}
+
+/// `sweep --tech sot` + a write_intensity axis: new records exist, export
+/// round-trips through CSV and JSON, and the write-heavy regime flips the
+/// technology ranking in SOT's favor.
+#[test]
+fn sot_and_write_intensity_records_export() {
+    let zoo = engine::shared_zoo();
+    let axes = engine::parse_axes(
+        "model=ResNet50,variant=stt_ai,tech=stt|sot,write_intensity=1|3",
+    )
+    .unwrap();
+    let results = Runner::new(2).run(engine::custom_spec(&zoo, axes));
+    assert_eq!(results.len(), 4);
+
+    let pick = |tech: &str, wi: f64| {
+        results
+            .iter()
+            .find(|r| {
+                r.point.tech.unwrap().name() == tech && r.point.write_intensity == Some(wi)
+            })
+            .unwrap()
+    };
+    // At inference intensity STT and SOT are close; at training intensity
+    // SOT's cheap writes win outright.
+    let gap_inf = pick("sakhare2020", 1.0).metric("buffer_energy_j")
+        - pick("sot2023", 1.0).metric("buffer_energy_j");
+    let gap_train = pick("sakhare2020", 3.0).metric("buffer_energy_j")
+        - pick("sot2023", 3.0).metric("buffer_energy_j");
+    assert!(gap_train > gap_inf, "SOT's edge must grow with write intensity");
+    assert!(gap_train > 0.0);
+
+    // Export: CSV rectangular, JSON parses, columns carry the new axes.
+    let dir = std::env::temp_dir().join("stt_ai_tech_export_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv_path = dir.join("sot.csv");
+    let json_path = dir.join("sot.json");
+    export::write_results_csv(&csv_path, &results).unwrap();
+    export::export_json(&json_path, &results).unwrap();
+    let text = std::fs::read_to_string(&csv_path).unwrap();
+    let mut lines = text.lines();
+    let header = lines.next().unwrap();
+    assert!(header.contains("tech") && header.contains("write_intensity"), "{header}");
+    for l in lines {
+        assert_eq!(l.split(',').count(), header.split(',').count(), "{l}");
+    }
+    let parsed = Json::parse(std::fs::read_to_string(&json_path).unwrap().trim()).unwrap();
+    let arr = parsed.as_arr().unwrap();
+    assert_eq!(arr.len(), 4);
+    assert!(arr.iter().any(|r| {
+        r.req("point").unwrap().get("tech").and_then(|t| t.as_str()) == Some("sot2023")
+    }));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The cross-technology comparison renders for every registry entry and is
+/// deterministic across worker counts (same contract as the figures).
+#[test]
+fn techcmp_renders_deterministically() {
+    let render = |workers: usize| {
+        let mut buf = Vec::new();
+        figures::techcmp_with(&mut buf, &Runner::new(workers)).unwrap();
+        String::from_utf8(buf).unwrap()
+    };
+    let serial = render(1);
+    assert_eq!(serial, render(4), "techcmp must be worker-count invariant");
+    for t in registry() {
+        assert!(serial.contains(t.name()), "missing {} in:\n{serial}", t.name());
+    }
+    assert!(serial.contains("lowest buffer energy"));
+}
+
+/// CLI-facing token grammar: the `--tech` families resolve, and unknown
+/// tokens fail closed everywhere.
+#[test]
+fn tech_token_grammar_is_consistent() {
+    for (token, id) in [
+        ("stt", TechnologyId::SttSakhare2020),
+        ("sot", TechnologyId::Sot),
+        ("sram", TechnologyId::Sram),
+        ("wei2019", TechnologyId::SttWei2019),
+    ] {
+        assert_eq!(by_token(token).unwrap().id(), id);
+        assert_eq!(TechBase::from_token(token).unwrap().id(), id);
+    }
+    assert!(by_token("fefet").is_none());
+    assert!(TechBase::from_token("fefet").is_none());
+    assert!(engine::parse_axes("tech=fefet").is_err());
+}
