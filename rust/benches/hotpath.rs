@@ -1,7 +1,9 @@
 //! Hot-path microbenches driving the §Perf iteration (EXPERIMENTS.md §Perf):
 //! BER injection throughput, bf16 round-trip, retention analysis, JSON
-//! parse, batcher ops, and the figure-regeneration end-to-end cost (serial
-//! vs the parallel sweep engine; honors `--parallel N`).
+//! parse, batcher ops, Monte-Carlo sampling, and the figure-regeneration
+//! end-to-end cost (serial vs the parallel sweep engine; honors
+//! `--parallel N`). `--smoke` runs reduced sizes for CI; `--bench-json PATH`
+//! writes the machine-readable BENCH_hotpath.json trajectory.
 use std::time::Duration;
 
 use stt_ai::accel::{ArrayConfig, RetentionAnalysis};
@@ -11,41 +13,56 @@ use stt_ai::dse::engine::Runner;
 use stt_ai::dse::{cache, DramOverheadRow, RetentionRow};
 use stt_ai::memsys::DramModel;
 use stt_ai::models::{self, DType};
+use stt_ai::mram::montecarlo::DEFAULT_CHUNK_SAMPLES;
+use stt_ai::mram::MonteCarlo;
 use stt_ai::report;
-use stt_ai::util::units::MB;
-use stt_ai::util::bench::Bencher;
+use stt_ai::util::bench::{self, Bencher, Ledger};
 use stt_ai::util::bf16::{bf16_to_f32, f32_to_bf16};
 use stt_ai::util::json::Json;
+use stt_ai::util::pool::ThreadPool;
+use stt_ai::util::units::MB;
 
 fn main() {
-    let b = Bencher::new();
+    let smoke = bench::smoke_from_args();
+    let b = if smoke {
+        Bencher { sample_target_s: 0.005, samples: 3 }
+    } else {
+        Bencher::new()
+    };
+    let mut ledger = Ledger::new();
 
-    // BER injector: 16 MB buffer at GLB-like BERs. Report GB/s.
-    let mut buf = vec![0u8; 16 << 20];
+    // BER injector: GLB-sized buffer at GLB-like BERs. Report GB/s.
+    let buf_mb: usize = if smoke { 2 } else { 16 };
+    let mut buf = vec![0u8; buf_mb << 20];
     for ber in [1e-8, 1e-5, 1e-3] {
-        let label = format!("injector/flip_16MB@{ber:.0e}");
+        let label = format!("injector/flip_{buf_mb}MB@{ber:.0e}");
         let mut inj = Injector::new(42);
         let r = b.run(&label, || inj.flip(&mut buf, ber).bits_flipped);
-        println!("    -> {:.2} GB/s", (16u64 << 20) as f64 / r.median_ns);
+        ledger.add_throughput(&label, &r, (buf_mb << 20) as f64, "bytes");
+        println!("    -> {:.2} GB/s", ((buf_mb as u64) << 20) as f64 / r.median_ns);
     }
     let split = BankSplit::ultra(WordKind::Bf16);
     let mut inj = Injector::new(7);
-    b.run("injector/bank_split_16MB_ultra", || split.inject(&mut inj, &mut buf).bits_flipped);
+    let label = format!("injector/bank_split_{buf_mb}MB_ultra");
+    let r = b.run(&label, || split.inject(&mut inj, &mut buf).bits_flipped);
+    ledger.add_throughput(&label, &r, (buf_mb << 20) as f64, "bytes");
 
     // bf16 round trip over a weight-image-sized vector.
     let weights: Vec<f32> = (0..70_000).map(|i| (i as f32) * 1e-4 - 3.5).collect();
-    b.run("bf16/roundtrip_70k_weights", || {
+    let r = b.run("bf16/roundtrip_70k_weights", || {
         weights.iter().map(|w| bf16_to_f32(f32_to_bf16(*w))).sum::<f32>()
     });
+    ledger.add("bf16/roundtrip_70k_weights", &r);
 
     // Retention analysis of the full zoo (the fig13 inner loop).
     let zoo = models::zoo();
     let a = ArrayConfig::paper_42x42();
-    b.run("accel/zoo_retention_analysis", || {
+    let r = b.run("accel/zoo_retention_analysis", || {
         zoo.iter()
             .map(|m| RetentionAnalysis::new(&a, 16).analyze(m).max_t_ret())
             .fold(0.0, f64::max)
     });
+    ledger.add("accel/zoo_retention_analysis", &r);
 
     // The fig11/fig12/fig14-style overlapping model walks, cold (cache
     // cleared every iteration) vs warm (memoized across sweeps) — the
@@ -68,19 +85,42 @@ fn main() {
         walk(&zoo)
     });
     let warm = b.run("dse/model_walks_warm", || walk(&zoo));
+    ledger.add("dse/model_walks_cold", &cold);
+    ledger.add("dse/model_walks_warm", &warm);
     let (hits, misses) = cache::stats();
     println!(
         "    -> traffic/retention cache: {:.1}x faster warm ({hits} hits / {misses} misses)",
         cold.median_ns / warm.median_ns
     );
 
+    // Monte-Carlo PT sampling, serial vs pool-parallel — the headline
+    // datapoints; `benches/montecarlo.rs` carries the deep dive.
+    let mc = MonteCarlo::paper_glb();
+    let mc_n: usize = if smoke { 50_000 } else { 200_000 };
+    let label = format!("mram/montecarlo_{}k_serial", mc_n / 1000);
+    let serial_pool = ThreadPool::new(1);
+    let r1 = b.run(&label, || mc.run_with(0xD1E5, mc_n, &serial_pool, DEFAULT_CHUNK_SAMPLES));
+    ledger.add_throughput(&label, &r1, mc_n as f64, "samples");
+    let auto = Runner::from_args();
+    let mc_pool = ThreadPool::new(auto.workers());
+    let label = format!("mram/montecarlo_{}k_parallel_x{}", mc_n / 1000, mc_pool.workers());
+    let rn = b.run(&label, || mc.run_with(0xD1E5, mc_n, &mc_pool, DEFAULT_CHUNK_SAMPLES));
+    ledger.add_throughput(&label, &rn, mc_n as f64, "samples");
+    println!(
+        "    -> montecarlo speedup: {:.2}x with {} workers ({:.2} Msamples/s)",
+        r1.median_ns / rn.median_ns,
+        mc_pool.workers(),
+        mc_n as f64 * 1e3 / rn.median_ns
+    );
+
     // JSON parse of a manifest-sized document.
     let doc = std::fs::read_to_string("artifacts/manifest.json")
         .unwrap_or_else(|_| r#"{"models":{"m":{"batch":16}},"weights":"w","testset":{"n":1}}"#.into());
-    b.run("json/parse_manifest", || Json::parse(&doc).unwrap());
+    let r = b.run("json/parse_manifest", || Json::parse(&doc).unwrap());
+    ledger.add("json/parse_manifest", &r);
 
     // Batcher push/form cycle.
-    b.run("batcher/push_form_64", || {
+    let r = b.run("batcher/push_form_64", || {
         let mut batcher = Batcher::new(16, Duration::ZERO, 4, 1024);
         for i in 0..64u64 {
             batcher.push(Request::new(i, vec![0.0; 4]));
@@ -91,21 +131,32 @@ fn main() {
         }
         n
     });
+    ledger.add("batcher/push_form_64", &r);
 
     // Figure regeneration end to end (Figs. 10-19): the pre-refactor serial
     // path vs the work-stealing sweep engine — the acceptance wall-clock
     // entry for the `dse::engine` refactor.
-    let slow = Bencher { sample_target_s: 0.2, samples: 5 };
+    let slow = if smoke {
+        Bencher { sample_target_s: 0.05, samples: 2 }
+    } else {
+        Bencher { sample_target_s: 0.2, samples: 5 }
+    };
     let serial = Runner::new(1);
     let r1 = slow.run("figures/regenerate_all_serial", || {
         report::render_all(&mut std::io::sink(), &serial).unwrap()
     });
-    let auto = Runner::from_args();
+    ledger.add("figures/regenerate_all_serial", &r1);
     let label = format!("figures/regenerate_all_parallel_x{}", auto.workers());
     let rn = slow.run(&label, || report::render_all(&mut std::io::sink(), &auto).unwrap());
+    ledger.add(&label, &rn);
     println!(
         "    -> figure regeneration speedup: {:.2}x with {} workers",
         r1.median_ns / rn.median_ns,
         auto.workers()
     );
+
+    if let Some(path) = bench::bench_json_from_args() {
+        ledger.write_json(&path).expect("write --bench-json");
+        println!("-- wrote {}", path.display());
+    }
 }

@@ -1,0 +1,92 @@
+//! Monte-Carlo engine throughput (EXPERIMENTS.md §Perf): serial baseline vs
+//! the pool-parallel chunked map-reduce, steady-state allocation behavior,
+//! and a bit-identical determinism cross-check.
+//!
+//! Flags (mixed with harness flags, all optional):
+//! `--smoke` reduced n for CI, `--parallel N` worker count,
+//! `--bench-json PATH` machine-readable trajectory output.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use stt_ai::dse::engine::Runner;
+use stt_ai::mram::montecarlo::{BLOCK_SAMPLES, DEFAULT_CHUNK_SAMPLES};
+use stt_ai::mram::MonteCarlo;
+use stt_ai::util::bench::{self, Bencher, Ledger};
+use stt_ai::util::pool::ThreadPool;
+
+/// Counting allocator: every heap allocation anywhere in the process bumps
+/// one counter, which is how the "zero per-sample allocation" claim is
+/// measured rather than asserted.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn main() {
+    let smoke = bench::smoke_from_args();
+    let n: usize = if smoke { 64 * BLOCK_SAMPLES / 4 } else { 1_000_000 };
+    let b = if smoke {
+        Bencher { sample_target_s: 0.02, samples: 3 }
+    } else {
+        Bencher::new()
+    };
+    let mc = MonteCarlo::paper_glb();
+    let mut ledger = Ledger::new();
+
+    // Serial baseline: same streaming engine, one worker.
+    let serial = ThreadPool::new(1);
+    let label = format!("montecarlo/run_{}k_serial", n / 1000);
+    let r1 = b.run(&label, || mc.run_with(0xD1E5, n, &serial, DEFAULT_CHUNK_SAMPLES));
+    ledger.add_throughput(&label, &r1, n as f64, "samples");
+    println!("    -> {:.2} Msamples/s", n as f64 * 1e3 / r1.median_ns);
+
+    // Pool-parallel: all hardware threads (or `--parallel N`).
+    let workers = Runner::from_args().workers();
+    let pool = ThreadPool::new(workers);
+    let label = format!("montecarlo/run_{}k_parallel_x{}", n / 1000, workers);
+    let rn = b.run(&label, || mc.run_with(0xD1E5, n, &pool, DEFAULT_CHUNK_SAMPLES));
+    ledger.add_throughput(&label, &rn, n as f64, "samples");
+    println!(
+        "    -> {:.2} Msamples/s: {:.2}x vs serial with {} workers (acceptance: >=5x at >=4)",
+        n as f64 * 1e3 / rn.median_ns,
+        r1.median_ns / rn.median_ns,
+        workers
+    );
+
+    // Determinism cross-check: worker count AND chunk size must not change
+    // a single bit of the result.
+    let a = mc.run_with(7, n, &serial, DEFAULT_CHUNK_SAMPLES);
+    let c = mc.run_with(7, n, &pool, 2 * BLOCK_SAMPLES);
+    assert_eq!(a, c, "parallel/chunked MC must be bit-identical to serial");
+
+    // Steady-state allocations (engine already warm from the timed runs):
+    // the budget is O(chunks + blocks) per run, ~0 per sample.
+    let before = ALLOCS.load(Ordering::Relaxed);
+    std::hint::black_box(mc.run_with(0xA110C, n, &pool, DEFAULT_CHUNK_SAMPLES));
+    let during = ALLOCS.load(Ordering::Relaxed) - before;
+    println!(
+        "    -> {} allocations / {} samples = {:.5} per sample (target ~0)",
+        during,
+        n,
+        during as f64 / n as f64
+    );
+
+    if let Some(path) = bench::bench_json_from_args() {
+        ledger.write_json(&path).expect("write --bench-json");
+        println!("-- wrote {}", path.display());
+    }
+}

@@ -17,6 +17,10 @@
 //!   tests cover the cached paths.
 //!
 //! `benches/hotpath.rs` carries the cold-vs-warm datapoint for this cache.
+//!
+//! The same interning serves the Monte-Carlo sweep: [`mc_design`] memoizes
+//! the solved per-(technology, targets) [`MonteCarlo`] engine so every
+//! `mc_samples`/Δ point shares one Δ-scaling solve and driver sizing.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -24,6 +28,9 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::accel::{ArrayConfig, ModelRetention, ModelTraffic, RetentionAnalysis};
 use crate::models::{DType, Model};
+use crate::mram::montecarlo::{McResult, MonteCarlo};
+use crate::mram::scaling::DesignTargets;
+use crate::mram::technology::TechnologyId;
 
 /// Hashable identity of an [`ArrayConfig`] (f64 fields by bit pattern).
 #[derive(Clone, Copy, PartialEq, Eq, Hash)]
@@ -66,6 +73,8 @@ impl ModelKey {
 
 type TrafficKey = (ModelKey, ArrayKey, u64, u64, u64); // (dtype bytes, batch, glb)
 type RetentionKey = (ModelKey, ArrayKey, u64); // (batch)
+type McKey = (TechnologyId, u64, u64, u64, u64); // (targets, f64 fields by bit pattern)
+type McRunKey = (McKey, u64, u64, u64); // (delta_gb bits, seed, n)
 
 static HITS: AtomicU64 = AtomicU64::new(0);
 static MISSES: AtomicU64 = AtomicU64::new(0);
@@ -78,6 +87,33 @@ fn traffic_map() -> &'static Mutex<HashMap<TrafficKey, Arc<ModelTraffic>>> {
 fn retention_map() -> &'static Mutex<HashMap<RetentionKey, Arc<ModelRetention>>> {
     static M: OnceLock<Mutex<HashMap<RetentionKey, Arc<ModelRetention>>>> = OnceLock::new();
     M.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn mc_map() -> &'static Mutex<HashMap<McKey, Arc<MonteCarlo>>> {
+    static M: OnceLock<Mutex<HashMap<McKey, Arc<MonteCarlo>>>> = OnceLock::new();
+    M.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+// One cell per run key: `OnceLock::get_or_init` makes concurrent workers
+// that miss on the same key block on ONE computation instead of each
+// duplicating a potentially seconds-long sample walk (unlike the walk
+// caches above, a sweep grid often collapses to a single MC key, so the
+// simultaneous-miss race would be the common case, not the corner).
+type McRunCell = Arc<OnceLock<McResult>>;
+
+fn mc_run_map() -> &'static Mutex<HashMap<McRunKey, McRunCell>> {
+    static M: OnceLock<Mutex<HashMap<McRunKey, McRunCell>>> = OnceLock::new();
+    M.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn mc_key(id: TechnologyId, targets: &DesignTargets) -> McKey {
+    (
+        id,
+        targets.retention_time.to_bits(),
+        targets.retention_ber.to_bits(),
+        targets.read_disturb_ber.to_bits(),
+        targets.write_ber.to_bits(),
+    )
 }
 
 /// Memoized [`ModelTraffic::analyze`].
@@ -106,6 +142,55 @@ pub fn retention(m: &Model, a: &ArrayConfig, batch: u64) -> Arc<ModelRetention> 
     retention_map().lock().unwrap().entry(key).or_insert(v).clone()
 }
 
+/// Memoized [`MonteCarlo::for_technology`]: the Δ-scaling solve, guard-band
+/// and driver sizing are pure functions of (technology, targets), so every
+/// Monte-Carlo sweep point that varies only `mc_samples` (or re-anchors Δ
+/// via [`MonteCarlo::at_delta_gb`], which is a cheap copy) shares one solved
+/// engine. `None` for technologies without a PT Monte-Carlo model. Uses the
+/// same racy check-then-insert as the walk caches — the closed-form solve
+/// is microseconds, so a simultaneous-miss duplicate is harmless (the
+/// seconds-scale *runs* get the stricter once-per-key treatment in
+/// [`mc_result`]).
+pub fn mc_design(id: TechnologyId, targets: &DesignTargets) -> Option<Arc<MonteCarlo>> {
+    let key = mc_key(id, targets);
+    if let Some(hit) = mc_map().lock().unwrap().get(&key) {
+        HITS.fetch_add(1, Ordering::Relaxed);
+        return Some(hit.clone());
+    }
+    let v = Arc::new(MonteCarlo::for_technology(id, targets)?);
+    MISSES.fetch_add(1, Ordering::Relaxed);
+    Some(mc_map().lock().unwrap().entry(key).or_insert(v).clone())
+}
+
+/// Memoized serial Monte-Carlo run: the aggregate result is a pure function
+/// of (technology, targets, Δ_GB, seed, n), so sweep grids that repeat the
+/// same MC coordinates across orthogonal axes (model × batch × ...) share
+/// one run instead of recomputing a potentially seconds-long sample walk —
+/// concurrent first callers block on one computation, they do not race it.
+/// `None` for technologies without a PT Monte-Carlo model.
+pub fn mc_result(
+    id: TechnologyId,
+    targets: &DesignTargets,
+    delta_gb: f64,
+    seed: u64,
+    n: u64,
+) -> Option<McResult> {
+    let mc = mc_design(id, targets)?;
+    let key: McRunKey = (mc_key(id, targets), delta_gb.to_bits(), seed, n);
+    let cell: McRunCell = {
+        let mut map = mc_run_map().lock().unwrap();
+        map.entry(key).or_insert_with(|| Arc::new(OnceLock::new())).clone()
+    };
+    if cell.get().is_some() {
+        HITS.fetch_add(1, Ordering::Relaxed);
+    } else {
+        MISSES.fetch_add(1, Ordering::Relaxed);
+    }
+    // Outside the map lock: the walk is the expensive part. get_or_init
+    // runs it exactly once per key; latecomers block until it is ready.
+    Some(cell.get_or_init(|| mc.at_delta_gb(delta_gb).run_serial(seed, n as usize)).clone())
+}
+
 /// (hits, misses) since process start (or the last [`clear`]).
 pub fn stats() -> (u64, u64) {
     (HITS.load(Ordering::Relaxed), MISSES.load(Ordering::Relaxed))
@@ -115,6 +200,8 @@ pub fn stats() -> (u64, u64) {
 pub fn clear() {
     traffic_map().lock().unwrap().clear();
     retention_map().lock().unwrap().clear();
+    mc_map().lock().unwrap().clear();
+    mc_run_map().lock().unwrap().clear();
     HITS.store(0, Ordering::Relaxed);
     MISSES.store(0, Ordering::Relaxed);
 }
@@ -164,6 +251,61 @@ mod tests {
         let t1 = traffic(&m, &a, DType::Bf16, 1, 12 * MB);
         let t8 = traffic(&m, &a, DType::Bf16, 8, 12 * MB);
         assert!(t8.total_glb_reads() > t1.total_glb_reads());
+    }
+
+    #[test]
+    fn mc_designs_are_shared_per_technology_and_targets() {
+        let t = DesignTargets::global_buffer();
+        let a = mc_design(TechnologyId::SttSakhare2020, &t).unwrap();
+        let (h0, _) = stats();
+        let b = mc_design(TechnologyId::SttSakhare2020, &t).unwrap();
+        let (h1, _) = stats();
+        assert!(h1 > h0, "second lookup must be a hit");
+        assert!(Arc::ptr_eq(&a, &b), "hits share one solved engine");
+        // Distinct targets / technologies do not alias.
+        let c = mc_design(TechnologyId::SttSakhare2020, &DesignTargets::lsb_bank()).unwrap();
+        assert_ne!(a.delta_guard_banded, c.delta_guard_banded);
+        let d = mc_design(TechnologyId::SttWei2019, &t).unwrap();
+        assert_ne!(a.write_pulse, d.write_pulse);
+        // Technologies without a PT model stay None (and never panic).
+        assert!(mc_design(TechnologyId::Sot, &t).is_none());
+        assert!(mc_design(TechnologyId::Sram, &t).is_none());
+    }
+
+    #[test]
+    fn mc_runs_are_memoized_per_coordinates() {
+        let t = DesignTargets::global_buffer();
+        let a = mc_result(TechnologyId::SttSakhare2020, &t, 27.5, 0xD1E5, 2_000).unwrap();
+        let (h0, _) = stats();
+        let b = mc_result(TechnologyId::SttSakhare2020, &t, 27.5, 0xD1E5, 2_000).unwrap();
+        let (h1, _) = stats();
+        assert!(h1 > h0, "second lookup must be a hit");
+        assert_eq!(a, b);
+        // The memoized run equals a direct engine run, bit for bit.
+        let direct = MonteCarlo::for_technology(TechnologyId::SttSakhare2020, &t)
+            .unwrap()
+            .at_delta_gb(27.5)
+            .run_serial(0xD1E5, 2_000);
+        assert_eq!(a, direct);
+        // Concurrent first callers on a fresh key agree (the per-key
+        // OnceLock serializes initialization; latecomers block and read).
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    s.spawn(|| {
+                        mc_result(TechnologyId::SttSakhare2020, &t, 26.5, 0xFEED, 2_000).unwrap()
+                    })
+                })
+                .collect();
+            let results: Vec<McResult> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+            for r in &results {
+                assert_eq!(*r, results[0]);
+            }
+        });
+        // Coordinates are part of the key.
+        let c = mc_result(TechnologyId::SttSakhare2020, &t, 27.5, 0xD1E5, 4_000).unwrap();
+        assert_eq!(c.n, 4_000);
+        assert!(mc_result(TechnologyId::Sram, &t, 27.5, 1, 100).is_none());
     }
 
     #[test]

@@ -37,13 +37,15 @@ COMMANDS:
   sweep        --axes axis=v1|v2,... [--parallel N] [--csv FILE] [--json FILE]
                [--tech stt|sot|sram]
                free cross-product DSE (axes: model, dtype, batch, glb_mb,
-               macs, variant, tech, ber, delta, write_intensity)
+               macs, variant, tech, ber, delta, write_intensity, mc_samples)
   table3                               Table III composition + savings
   design       [--retention 3.0|3y] [--ber 1e-8] [--tech sakhare2020|wei2019]
   accuracy     [--artifacts DIR] [--prune 0.0] [--batch 16] [--limit N]
   serve        [--artifacts DIR] [--variant sram|stt_ai|stt_ai_ultra]
                [--requests 256] [--batch 16]
-  montecarlo   [--samples 20000] [--seed N]   PT-corner Monte Carlo
+  montecarlo   [--samples 20000] [--seed N] [--parallel N]
+               [--sweep axis=v1|v2,...] [--tech stt|wei2019]
+               streaming PT Monte Carlo through the sweep engine
   exposure                             zoo-wide analytical fault exposure
   init-config  [--dir configs]         write paper SystemConfigs as JSON
 ";
@@ -238,18 +240,16 @@ fn main() -> anyhow::Result<()> {
             writeln!(out, "{summary}")?;
         }
         "montecarlo" => {
-            let n = args.get_usize("samples", 20_000)?;
+            // Through the sweep engine: default grid is the two STT base
+            // cases at the GLB Δ; `--sweep mc_samples=...|...,delta=...`
+            // and `--tech wei2019` reshape it like any other sweep, and
+            // `--parallel N` feeds both point- and chunk-level parallelism
+            // (bit-identical results either way).
+            let n = args.get_u64("samples", 20_000)?;
             let seed = args.get_u64("seed", 0xD1E5)?;
+            let runner = runner_from(&args)?;
             args.finish()?;
-            let mc = stt_ai::mram::MonteCarlo::paper_glb();
-            let r = mc.run(seed, n);
-            writeln!(out, "== Monte-Carlo PT analysis (GLB design point, n={n}) ==")?;
-            writeln!(out, "  Δ_eff: mean {:.2} ± {:.2}  [{:.2}, {:.2}]", r.delta_mean, r.delta_std, r.delta_min, r.delta_max)?;
-            writeln!(out, "  retention violations: {:.4}%", r.retention_violations * 100.0)?;
-            writeln!(out, "  write violations: static driver {:.2}% → PTM-adjustable {:.3}%",
-                r.write_violations_static * 100.0, r.write_violations_adjustable * 100.0)?;
-            writeln!(out, "  write energy/bit: static {:.3} pJ, adjustable {:.3} pJ",
-                r.energy_static * 1e12, r.energy_adjustable * 1e12)?;
+            report::figures::montecarlo_with(&mut out, &runner, seed, n)?;
         }
         "exposure" => {
             args.finish()?;

@@ -14,6 +14,10 @@
 //! * [`variation`] — process/temperature guard-banding (Eq. 17–18, Fig. 7–8).
 //! * [`write_driver`] — the dynamically adjustable write driver of Fig. 9
 //!   with its process-and-temperature-monitor (PTM) control loop.
+//! * [`montecarlo`] — the streaming, pool-parallel Monte-Carlo engine that
+//!   samples the die population (Figs. 7–8): chunked map-reduce over
+//!   jump-derived RNG sub-streams with zero-allocation accumulators,
+//!   bit-identical for any worker count / chunk size.
 //! * [`technology`] — the pluggable memory-technology layer: the
 //!   [`MemTechnology`] trait (retention/Δ model, read/write dynamics,
 //!   critical-current model, per-bit area/energy calibration, variation
@@ -30,11 +34,11 @@ pub mod technology;
 pub mod variation;
 pub mod write_driver;
 
-pub use montecarlo::{McResult, MonteCarlo};
+pub use montecarlo::{McAccumulator, McResult, MonteCarlo};
 pub use mtj::{MtjParams, MtjTech};
 pub use reliability::{
-    read_disturb_prob, read_pulse_at_rd, retention_failure_prob, retention_time_at_ber,
-    write_error_rate, write_pulse_at_wer,
+    read_disturb_prob, read_pulse_at_rd, retention_failure_prob, retention_failure_prob_pre,
+    retention_time_at_ber, write_error_rate, write_error_rate_pre, write_pulse_at_wer,
 };
 pub use scaling::{DeltaDesign, DesignTargets, ScalingSolver};
 pub use technology::{finite_or_max, MemTechnology, SotMram, Sram, SttMram, TechnologyId};

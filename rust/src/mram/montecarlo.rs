@@ -6,13 +6,70 @@
 //! with the statically-sized and the PTM-adjustable write driver of Fig. 9.
 //! It is the numerical check that the analytical corners are actually the
 //! worst cases (and the source of the Fig. 8-style current distributions).
+//!
+//! # Streaming engine
+//!
+//! BER-tail studies need 1e6–1e8 samples per design point, so the engine is
+//! a chunked map-reduce over the work-stealing pool rather than a serial
+//! `Vec<DieSample>` walk:
+//!
+//! * the sample index space is carved into fixed [`BLOCK_SAMPLES`]-sized
+//!   blocks; block `b` draws from the `b`-th [`crate::util::rng::Rng::jump`]
+//!   sub-stream of the seed, so the random numbers a sample sees depend only
+//!   on its index — never on worker count or chunk size;
+//! * each block folds into a zero-allocation [`McAccumulator`] (Welford
+//!   [`Streaming`] moments + violation/energy counters) using batched
+//!   `fill_normal`/`fill_f64` draws and the hoisted `*_pre` reliability
+//!   forms — no per-sample heap traffic, no `Vec<f64>` materialization;
+//! * block accumulators merge **in block-index order** on the caller
+//!   thread, so [`MonteCarlo::run_with`] is bit-identical for any worker
+//!   count *and* any chunk size — the same determinism contract the
+//!   `--parallel` sweep engine gives the figures.
 
 use crate::mram::mtj::MtjTech;
-use crate::mram::reliability::{retention_failure_prob, write_error_rate};
+use crate::mram::reliability::{
+    retention_failure_prob_pre, write_error_rate_pre, write_pulse_at_wer,
+};
+use crate::mram::scaling::{DesignTargets, ScalingSolver};
+use crate::mram::technology::TechnologyId;
 use crate::mram::variation::PtVariation;
-use crate::mram::write_driver::{PtmSample, WriteDriver};
+use crate::mram::write_driver::WriteDriver;
+use crate::util::pool::ThreadPool;
 use crate::util::rng::Rng;
-use crate::util::stats;
+use crate::util::stats::Streaming;
+
+/// Relative slack on the three violation checks (retention, static-driver
+/// WER, adjustable-driver WER): a sample only counts as a violation when its
+/// failure probability exceeds the budget by more than this factor, so a
+/// design sitting exactly *at* its budget is in spec despite FP noise.
+pub const BUDGET_TOL: f64 = 1.000_001;
+
+/// Minimum effective overdrive fed to Eq. 16, which requires I_w/I_c > 1
+/// strictly (an underdriven die shows ~100% WER and is counted by the
+/// budget check, not by a singularity).
+pub const MIN_OVERDRIVE: f64 = 1.000_001;
+
+/// RNG sub-stream / accumulator granularity in samples. Fixed (never a
+/// tuning knob): sample `i` always draws from jump-stream `i / BLOCK_SAMPLES`
+/// and block accumulators always merge in index order, which is what makes
+/// results independent of worker count and chunk size.
+pub const BLOCK_SAMPLES: usize = 4096;
+
+/// Default chunk handed to one pool worker — a whole number of blocks, big
+/// enough to amortize job dispatch, small enough to load-balance.
+pub const DEFAULT_CHUNK_SAMPLES: usize = 16 * BLOCK_SAMPLES;
+
+/// Write-driver supply voltage (V) used for energy accounting.
+const DRIVER_VDD: f64 = 0.9;
+
+/// Extra PMOS legs of the Fig. 9 adjustable driver.
+const PTM_LEGS: u32 = 4;
+
+/// The shared violation predicate — all three checks route through here.
+#[inline]
+fn exceeds_budget(p: f64, budget: f64) -> bool {
+    p > budget * BUDGET_TOL
+}
 
 /// One sampled die at one operating temperature.
 #[derive(Debug, Clone, Copy)]
@@ -24,7 +81,7 @@ pub struct DieSample {
 }
 
 /// Aggregated Monte-Carlo results.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct McResult {
     pub n: usize,
     /// Fraction of samples whose retention-failure prob exceeds the budget.
@@ -44,7 +101,100 @@ pub struct McResult {
     pub delta_max: f64,
 }
 
+/// Zero-allocation streaming accumulator for a run of samples. One lives
+/// per [`BLOCK_SAMPLES`] block; the fixed partition merged in block-index
+/// order yields the same bits for any worker count or chunk size (merge
+/// order, not merge associativity, is what the contract rests on).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct McAccumulator {
+    ret_viol: u64,
+    wr_static: u64,
+    wr_adj: u64,
+    e_static: f64,
+    e_adj: f64,
+    delta: Streaming,
+}
+
+impl McAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Samples folded in so far (every sample pushes one Δ_eff, so the
+    /// moment accumulator is the single source of truth for the count).
+    pub fn count(&self) -> u64 {
+        self.delta.count()
+    }
+
+    /// Fold another accumulator in (callers must keep a fixed merge order
+    /// to preserve bit-exact reproducibility).
+    pub fn merge(&mut self, o: &McAccumulator) {
+        self.ret_viol += o.ret_viol;
+        self.wr_static += o.wr_static;
+        self.wr_adj += o.wr_adj;
+        self.e_static += o.e_static;
+        self.e_adj += o.e_adj;
+        self.delta.merge(&o.delta);
+    }
+
+    /// Finish into the aggregate result (all-zero for an empty run).
+    pub fn result(&self) -> McResult {
+        let n = self.count();
+        let nf = if n == 0 { 1.0 } else { n as f64 };
+        McResult {
+            n: n as usize,
+            retention_violations: self.ret_viol as f64 / nf,
+            write_violations_static: self.wr_static as f64 / nf,
+            write_violations_adjustable: self.wr_adj as f64 / nf,
+            energy_static: self.e_static / nf,
+            energy_adjustable: self.e_adj / nf,
+            delta_mean: self.delta.mean(),
+            delta_std: self.delta.std_dev(),
+            delta_min: self.delta.min(),
+            delta_max: self.delta.max(),
+        }
+    }
+}
+
+/// Reusable per-worker scratch for one chunk's blocks: allocated once per
+/// pool job, so the steady state does zero per-sample heap work.
+struct BlockScratch {
+    normals: Vec<f64>,
+    uniforms: Vec<f64>,
+}
+
+impl BlockScratch {
+    fn new() -> Self {
+        Self { normals: vec![0.0; BLOCK_SAMPLES], uniforms: vec![0.0; BLOCK_SAMPLES] }
+    }
+}
+
+/// Per-run invariants hoisted out of the per-sample loop (the `ln`/`exp`
+/// terms of Eq. 14/16 that do not depend on the sampled die).
+#[derive(Debug, Clone, Copy)]
+struct McConsts {
+    /// retention_time / τ_ret (Eq. 14's hoisted ratio).
+    t_over_tau_ret: f64,
+    /// write_pulse / τ_w (Eq. 16's hoisted ratio).
+    tw_over_tau: f64,
+    /// Retention-failure budget.
+    ret_budget: f64,
+    /// WER budget.
+    wr_budget: f64,
+    /// overdrive · Δ_GB: static overdrive at Δ_eff is `od_num / Δ_eff`.
+    od_num: f64,
+    /// I_c(Δ_GB) / Δ_GB: effective critical current is `ic_per_delta · Δ_eff`.
+    ic_per_delta: f64,
+    /// Static-driver write energy per bit (constant per sample).
+    e_static_bit: f64,
+    /// V_dd · t_w: adjustable-driver energy is `I_adj · e_per_amp`.
+    e_per_amp: f64,
+    /// Energy charged to an out-of-spec die (all legs on).
+    e_oos: f64,
+}
+
 /// The Monte-Carlo engine.
+#[derive(Debug, Clone, Copy)]
 pub struct MonteCarlo {
     pub tech: MtjTech,
     pub variation: PtVariation,
@@ -57,7 +207,8 @@ pub struct MonteCarlo {
 }
 
 impl MonteCarlo {
-    /// Sample `n` (die, temperature) points.
+    /// Sample `n` (die, temperature) points — the Fig. 8-style raw
+    /// distribution view (the aggregate path never materializes this).
     pub fn sample(&self, rng: &mut Rng, n: usize) -> Vec<DieSample> {
         (0..n)
             .map(|_| {
@@ -72,96 +223,214 @@ impl MonteCarlo {
             .collect()
     }
 
-    /// Run the full analysis.
-    pub fn run(&self, seed: u64, n: usize) -> McResult {
-        let mut rng = Rng::seed_from_u64(seed);
-        let samples = self.sample(&mut rng, n);
+    /// I_c at the guard-banded design Δ (the current-scale anchor).
+    fn ic_nominal(&self) -> f64 {
+        self.tech.params_at_delta(self.delta_guard_banded).critical_current()
+    }
 
-        let ic_nominal = self.tech.params_at_delta(self.delta_guard_banded).critical_current();
-        let driver = WriteDriver::new(
+    /// The PTM-adjustable write driver for this design point (Fig. 9 sizing).
+    pub fn driver(&self) -> WriteDriver {
+        WriteDriver::new(
             self.variation,
             self.delta_guard_banded,
             self.overdrive,
-            ic_nominal,
-            4,
-            0.9,
-        );
-        // Static driver: typical-corner current, always.
+            self.ic_nominal(),
+            PTM_LEGS,
+            DRIVER_VDD,
+        )
+    }
+
+    fn consts(&self, driver: &WriteDriver) -> McConsts {
+        let ic_nominal = self.ic_nominal();
         let i_static = self.overdrive * ic_nominal;
+        let e_per_amp = DRIVER_VDD * self.write_pulse;
+        McConsts {
+            t_over_tau_ret: self.retention_time / self.tech.tau_ret,
+            tw_over_tau: self.write_pulse / self.tech.tau_w,
+            ret_budget: self.retention_ber,
+            wr_budget: self.write_ber,
+            od_num: self.overdrive * self.delta_guard_banded,
+            ic_per_delta: ic_nominal / self.delta_guard_banded,
+            e_static_bit: i_static * e_per_amp,
+            e_per_amp,
+            e_oos: driver.config.max_current() * e_per_amp,
+        }
+    }
 
-        let mut ret_viol = 0usize;
-        let mut wr_static = 0usize;
-        let mut wr_adj = 0usize;
-        let mut e_static = 0.0;
-        let mut e_adj = 0.0;
-        let deltas: Vec<f64> = samples.iter().map(|s| s.delta_eff).collect();
-
-        for s in &samples {
-            // Retention at the effective Δ.
-            let p_rf = retention_failure_prob(self.retention_time, self.tech.tau_ret, s.delta_eff);
-            if p_rf > self.retention_ber * 1.000_001 {
-                ret_viol += 1;
+    /// Fold `m` samples from `rng` into `acc`, drawing through the batched
+    /// fill APIs into caller-provided scratch (no per-sample allocation).
+    fn accumulate_block(
+        &self,
+        rng: &mut Rng,
+        m: usize,
+        c: &McConsts,
+        driver: &WriteDriver,
+        scratch: &mut BlockScratch,
+        acc: &mut McAccumulator,
+    ) {
+        let normals = &mut scratch.normals[..m];
+        let uniforms = &mut scratch.uniforms[..m];
+        rng.fill_normal(normals);
+        rng.fill_f64(uniforms);
+        let t_span = self.variation.t_hot - self.variation.t_cold;
+        for (&ps, &u) in normals.iter().zip(uniforms.iter()) {
+            let t = self.variation.t_cold + t_span * u;
+            let delta_eff = self.variation.delta_at(self.delta_guard_banded, ps, t);
+            // Retention at the effective Δ (hoisted Eq. 14).
+            let p_rf = retention_failure_prob_pre(c.t_over_tau_ret, delta_eff);
+            if exceeds_budget(p_rf, c.ret_budget) {
+                acc.ret_viol += 1;
             }
             // Write with the static driver: I_c grows with Δ_eff, so the
             // *effective* overdrive shrinks on cold/+σ dies.
-            let ic_eff = ic_nominal * s.delta_eff / self.delta_guard_banded;
-            let od_static = (i_static / ic_eff).max(1.000_001);
-            let wer_s = write_error_rate(self.write_pulse, self.tech.tau_w, s.delta_eff, od_static);
-            if wer_s > self.write_ber * 1.000_001 {
-                wr_static += 1;
+            let od_static = (c.od_num / delta_eff).max(MIN_OVERDRIVE);
+            let wer_s = write_error_rate_pre(c.tw_over_tau, delta_eff, od_static);
+            if exceeds_budget(wer_s, c.wr_budget) {
+                acc.wr_static += 1;
             }
-            e_static += i_static * 0.9 * self.write_pulse;
             // Adjustable driver: the PTM picks legs to restore the overdrive.
-            let ptm = PtmSample { process_sigma: s.process_sigma, temperature: s.temperature };
-            match driver.legs_for(&ptm) {
+            match driver.legs_for_delta(delta_eff) {
                 Some(legs) => {
                     let i_adj = driver.supplied_current(legs);
-                    let od_adj = (i_adj / ic_eff).max(1.000_001);
-                    let wer_a =
-                        write_error_rate(self.write_pulse, self.tech.tau_w, s.delta_eff, od_adj);
-                    if wer_a > self.write_ber * 1.000_001 {
-                        wr_adj += 1;
+                    let od_adj = (i_adj / (c.ic_per_delta * delta_eff)).max(MIN_OVERDRIVE);
+                    let wer_a = write_error_rate_pre(c.tw_over_tau, delta_eff, od_adj);
+                    if exceeds_budget(wer_a, c.wr_budget) {
+                        acc.wr_adj += 1;
                     }
-                    e_adj += i_adj * 0.9 * self.write_pulse;
+                    acc.e_adj += i_adj * c.e_per_amp;
                 }
                 None => {
-                    wr_adj += 1; // out-of-spec die (beyond the sized legs)
-                    e_adj += driver.config.max_current() * 0.9 * self.write_pulse;
+                    acc.wr_adj += 1; // out-of-spec die (beyond the sized legs)
+                    acc.e_adj += c.e_oos;
                 }
             }
+            acc.delta.push(delta_eff);
+        }
+        // The static driver always pushes the same current: hoist the sum.
+        acc.e_static += c.e_static_bit * m as f64;
+    }
+
+    /// Run the full analysis on `pool`, `chunk_samples` samples per job
+    /// (rounded up to whole [`BLOCK_SAMPLES`] blocks). Bit-identical for
+    /// any worker count and any chunk size.
+    pub fn run_with(
+        &self,
+        seed: u64,
+        n: usize,
+        pool: &ThreadPool,
+        chunk_samples: usize,
+    ) -> McResult {
+        let driver = self.driver();
+        let consts = self.consts(&driver);
+
+        // One independent RNG sub-stream per block, derived by successive
+        // jumps from the seed (serial, but each jump is a few hundred ops).
+        let n_blocks = n.div_ceil(BLOCK_SAMPLES);
+        let mut master = Rng::seed_from_u64(seed);
+        let mut streams = Vec::with_capacity(n_blocks);
+        for _ in 0..n_blocks {
+            streams.push(master.clone());
+            master.jump();
         }
 
-        let (dmin, dmax) = stats::min_max(&deltas).unwrap_or((0.0, 0.0));
-        McResult {
-            n,
-            retention_violations: ret_viol as f64 / n as f64,
-            write_violations_static: wr_static as f64 / n as f64,
-            write_violations_adjustable: wr_adj as f64 / n as f64,
-            energy_static: e_static / n as f64,
-            energy_adjustable: e_adj / n as f64,
-            delta_mean: stats::mean(&deltas),
-            delta_std: stats::std_dev(&deltas),
-            delta_min: dmin,
-            delta_max: dmax,
-        }
+        let blocks_per_chunk = chunk_samples.div_ceil(BLOCK_SAMPLES).max(1);
+        let chunks: Vec<(usize, &[Rng])> = streams
+            .chunks(blocks_per_chunk)
+            .enumerate()
+            .map(|(ci, s)| (ci * blocks_per_chunk, s))
+            .collect();
+
+        // Map: each chunk folds its blocks into per-block accumulators
+        // (scratch buffers are reused across the chunk's blocks). Reduce:
+        // merge in block-index order on the caller thread — deterministic
+        // for any worker count / chunk split.
+        let total = pool.map_reduce(
+            &chunks,
+            |_, &(first_block, chunk_streams)| {
+                let mut scratch = BlockScratch::new();
+                chunk_streams
+                    .iter()
+                    .enumerate()
+                    .map(|(j, stream)| {
+                        let lo = (first_block + j) * BLOCK_SAMPLES;
+                        let m = BLOCK_SAMPLES.min(n - lo);
+                        let mut rng = stream.clone();
+                        let mut acc = McAccumulator::new();
+                        self.accumulate_block(
+                            &mut rng,
+                            m,
+                            &consts,
+                            &driver,
+                            &mut scratch,
+                            &mut acc,
+                        );
+                        acc
+                    })
+                    .collect::<Vec<McAccumulator>>()
+            },
+            McAccumulator::new(),
+            |mut acc, blocks| {
+                for b in &blocks {
+                    acc.merge(b);
+                }
+                acc
+            },
+        );
+        total.result()
+    }
+
+    /// Run the full analysis on all hardware threads (bit-identical to
+    /// [`MonteCarlo::run_serial`] by the streaming-engine contract).
+    pub fn run(&self, seed: u64, n: usize) -> McResult {
+        self.run_with(seed, n, &ThreadPool::auto(), DEFAULT_CHUNK_SAMPLES)
+    }
+
+    /// Single-threaded reference run (the bench baseline).
+    pub fn run_serial(&self, seed: u64, n: usize) -> McResult {
+        self.run_with(seed, n, &ThreadPool::new(1), DEFAULT_CHUNK_SAMPLES)
+    }
+
+    /// Build the engine for a registered technology at the given reliability
+    /// targets (Δ-scaling solve + guard-band + driver sizing). `None` for
+    /// technologies without an MTJ process/temperature model (SOT uses a
+    /// different switching mechanism; SRAM has no Δ at all).
+    pub fn for_technology(id: TechnologyId, targets: &DesignTargets) -> Option<Self> {
+        let tech = match id {
+            TechnologyId::SttSakhare2020 => MtjTech::sakhare2020(),
+            TechnologyId::SttWei2019 => MtjTech::wei2019(),
+            TechnologyId::Sot | TechnologyId::Sram => return None,
+        };
+        let variation = PtVariation::paper();
+        let d = ScalingSolver::with_variation(tech, variation).solve(targets);
+        Some(Self {
+            tech,
+            variation,
+            delta_guard_banded: d.delta_guard_banded,
+            overdrive: d.overdrive,
+            write_pulse: d.write_pulse,
+            retention_time: targets.retention_time,
+            retention_ber: targets.retention_ber,
+            write_ber: targets.write_ber,
+        })
+    }
+
+    /// The same engine re-anchored at an explicit guard-banded Δ (the sweep
+    /// engine's Δ axis); the write pulse is re-solved at the new cold/fast
+    /// worst case, mirroring the §IV.B design procedure.
+    pub fn at_delta_gb(&self, delta_gb: f64) -> Self {
+        let write_pulse = write_pulse_at_wer(
+            self.write_ber,
+            self.tech.tau_w,
+            self.variation.delta_pt_max(delta_gb),
+            self.overdrive,
+        );
+        Self { delta_guard_banded: delta_gb, write_pulse, ..*self }
     }
 
     /// The paper's GLB design point, ready to run.
     pub fn paper_glb() -> Self {
-        let tech = MtjTech::sakhare2020();
-        let v = PtVariation::paper();
-        let solver = crate::mram::scaling::ScalingSolver::with_variation(tech, v);
-        let d = solver.solve(&crate::mram::scaling::DesignTargets::global_buffer());
-        Self {
-            tech,
-            variation: v,
-            delta_guard_banded: d.delta_guard_banded,
-            overdrive: d.overdrive,
-            write_pulse: d.write_pulse,
-            retention_time: 3.0,
-            retention_ber: 1e-8,
-            write_ber: 1e-8,
-        }
+        Self::for_technology(TechnologyId::SttSakhare2020, &DesignTargets::global_buffer())
+            .expect("the STT base case has a PT Monte-Carlo model")
     }
 }
 
@@ -227,7 +496,65 @@ mod tests {
         let mc = MonteCarlo::paper_glb();
         let a = mc.run(7, 2_000);
         let b = mc.run(7, 2_000);
-        assert_eq!(a.retention_violations, b.retention_violations);
-        assert_eq!(a.energy_adjustable, b.energy_adjustable);
+        assert_eq!(a, b);
+        assert_ne!(a, mc.run(8, 2_000));
+    }
+
+    #[test]
+    fn budget_tolerance_boundary() {
+        // Exactly at budget: in spec. Beyond the BUDGET_TOL slack: violation.
+        // Inside the slack: still in spec — the check guards the p == budget
+        // boundary against FP noise, nothing more.
+        for budget in [1e-8, 1e-5, 0.5] {
+            assert!(!exceeds_budget(budget, budget), "p == budget must be in spec");
+            assert!(!exceeds_budget(budget * 1.000_000_9, budget), "inside the slack");
+            assert!(exceeds_budget(budget * 1.000_001_1, budget), "beyond the slack");
+            assert!(!exceeds_budget(0.0, budget));
+        }
+    }
+
+    #[test]
+    fn accumulator_merge_matches_single_fold() {
+        // One 3-block chunk folded serially == the same blocks evaluated as
+        // three single-block chunks (exactness of the merge, not closeness).
+        let mc = MonteCarlo::paper_glb();
+        let whole = mc.run_with(42, 3 * BLOCK_SAMPLES, &ThreadPool::new(1), 3 * BLOCK_SAMPLES);
+        let split = mc.run_with(42, 3 * BLOCK_SAMPLES, &ThreadPool::new(1), BLOCK_SAMPLES);
+        assert_eq!(whole, split);
+    }
+
+    #[test]
+    fn empty_run_is_all_zero() {
+        let mc = MonteCarlo::paper_glb();
+        let r = mc.run(1, 0);
+        assert_eq!(r.n, 0);
+        assert_eq!(r.retention_violations, 0.0);
+        assert_eq!(r.energy_adjustable, 0.0);
+        assert_eq!((r.delta_min, r.delta_max), (0.0, 0.0));
+    }
+
+    #[test]
+    fn delta_axis_reanchors_the_design() {
+        let mc = MonteCarlo::paper_glb();
+        let relaxed = mc.at_delta_gb(17.5);
+        assert_eq!(relaxed.delta_guard_banded, 17.5);
+        // Smaller Δ switches faster at the same WER target (t_pw ∝ ln Δ).
+        assert!(relaxed.write_pulse < mc.write_pulse);
+        let r = relaxed.run(3, 10_000);
+        assert!(r.delta_mean < mc.run(3, 10_000).delta_mean);
+    }
+
+    #[test]
+    fn for_technology_covers_stt_only() {
+        let t = DesignTargets::global_buffer();
+        assert!(MonteCarlo::for_technology(TechnologyId::SttSakhare2020, &t).is_some());
+        assert!(MonteCarlo::for_technology(TechnologyId::SttWei2019, &t).is_some());
+        assert!(MonteCarlo::for_technology(TechnologyId::Sot, &t).is_none());
+        assert!(MonteCarlo::for_technology(TechnologyId::Sram, &t).is_none());
+        // paper_glb is the Sakhare GLB solve.
+        let a = MonteCarlo::paper_glb();
+        let b = MonteCarlo::for_technology(TechnologyId::SttSakhare2020, &t).unwrap();
+        assert_eq!(a.delta_guard_banded, b.delta_guard_banded);
+        assert_eq!(a.write_pulse, b.write_pulse);
     }
 }

@@ -11,6 +11,19 @@ pub fn retention_failure_prob(t_ret: f64, tau: f64, delta: f64) -> f64 {
     -(-t_ret / (tau * delta.exp())).exp_m1()
 }
 
+/// Eq. 14 with the sweep-invariant ratio `t_ret / τ` hoisted out of the
+/// per-sample loop: P_RF = 1 − exp(−(t_ret/τ)·exp(−Δ)).
+///
+/// Mathematically identical to [`retention_failure_prob`] (agrees to ~1 ulp;
+/// the property tests pin the two together) but costs one division less per
+/// call — the Monte-Carlo engine computes `t_over_tau` once per chunk and
+/// only Δ varies per sample.
+#[inline]
+pub fn retention_failure_prob_pre(t_over_tau: f64, delta: f64) -> f64 {
+    debug_assert!(t_over_tau >= 0.0);
+    -(-t_over_tau * (-delta).exp()).exp_m1()
+}
+
 /// Mean thermal lifetime τ·exp(Δ) — the "retention time" knob of Fig. 15 when
 /// quoted without a BER qualifier.
 pub fn mean_retention_time(tau: f64, delta: f64) -> f64 {
@@ -49,9 +62,19 @@ pub fn read_pulse_at_rd(p_rd: f64, tau: f64, delta: f64, ir_over_ic: f64) -> f64
 /// `t_w/τ`, which is what we implement.)
 pub fn write_error_rate(t_w: f64, tau: f64, delta: f64, iw_over_ic: f64) -> f64 {
     debug_assert!(t_w >= 0.0 && tau > 0.0);
+    write_error_rate_pre(t_w / tau, delta, iw_over_ic)
+}
+
+/// Eq. 16 with the sweep-invariant ratio `t_w / τ` hoisted out of the
+/// per-sample loop; [`write_error_rate`] is now a thin wrapper, so the two
+/// are bit-identical by construction. The Monte-Carlo engine computes
+/// `tw_over_tau` once per chunk — only Δ and the overdrive vary per sample.
+#[inline]
+pub fn write_error_rate_pre(tw_over_tau: f64, delta: f64, iw_over_ic: f64) -> f64 {
+    debug_assert!(tw_over_tau >= 0.0);
     debug_assert!(iw_over_ic > 1.0, "write current must exceed critical current");
     let i = iw_over_ic;
-    let denom = 4.0 * (i * ((t_w / tau) * (i - 1.0)).exp() - 1.0);
+    let denom = 4.0 * (i * (tw_over_tau * (i - 1.0)).exp() - 1.0);
     let expo = -(std::f64::consts::PI.powi(2)) * delta * (i - 1.0) / denom;
     -expo.exp_m1()
 }
@@ -113,6 +136,27 @@ mod tests {
         // Fig. 17: Δ=12.5 @ 1e-5 still covers the ≤1.5 s GLB occupancy.
         let t = retention_time_at_ber(TAU, 12.5, 1e-5);
         assert!(t > 1.5, "got {t} s");
+    }
+
+    #[test]
+    fn hoisted_forms_match_the_originals() {
+        for delta in [12.5, 19.5, 27.5, 39.0, 60.0] {
+            for t in [0.1, 1.0, 3.0, 100.0] {
+                let a = retention_failure_prob(t, TAU, delta);
+                let b = retention_failure_prob_pre(t / TAU, delta);
+                assert!(
+                    (a - b).abs() <= 1e-12 * a.max(1e-300),
+                    "delta={delta} t={t}: {a} vs {b}"
+                );
+            }
+            for i in [1.5, 2.0, 3.0] {
+                for tw in [5e-9, 10e-9, 25e-9] {
+                    let a = write_error_rate(tw, TAU_NS, delta, i);
+                    let b = write_error_rate_pre(tw / TAU_NS, delta, i);
+                    assert_eq!(a.to_bits(), b.to_bits(), "delta={delta} i={i} tw={tw}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -91,6 +91,14 @@ impl WriteDriver {
     pub fn required_current(&self, s: &PtmSample) -> f64 {
         let delta_eff =
             self.variation.delta_at(self.delta_guard_banded, s.process_sigma, s.temperature);
+        self.required_current_at_delta(delta_eff)
+    }
+
+    /// Required current when the caller already holds Δ_eff — the
+    /// Monte-Carlo hot path computes Δ_eff once per sample and must not
+    /// re-derive it from (σ, T) here.
+    #[inline]
+    pub fn required_current_at_delta(&self, delta_eff: f64) -> f64 {
         self.overdrive * self.ic_nominal * delta_eff / self.delta_guard_banded
     }
 
@@ -98,7 +106,16 @@ impl WriteDriver {
     /// Returns `None` if even all legs cannot supply the required current
     /// (out-of-spec die — a write-failure corner, Fig. 8's tail).
     pub fn legs_for(&self, s: &PtmSample) -> Option<u32> {
-        let need = self.required_current(s);
+        let delta_eff =
+            self.variation.delta_at(self.delta_guard_banded, s.process_sigma, s.temperature);
+        self.legs_for_delta(delta_eff)
+    }
+
+    /// [`WriteDriver::legs_for`] on an already-computed Δ_eff (bit-identical:
+    /// `legs_for` routes through this).
+    #[inline]
+    pub fn legs_for_delta(&self, delta_eff: f64) -> Option<u32> {
+        let need = self.required_current_at_delta(delta_eff);
         if need <= self.config.base_current {
             return Some(0);
         }
@@ -172,6 +189,20 @@ mod tests {
             let legs = d.legs_for(&PtmSample { process_sigma: sig, temperature: t }).unwrap();
             assert!(legs >= last, "legs must not decrease with worsening corner");
             last = legs;
+        }
+    }
+
+    #[test]
+    fn delta_fast_path_matches_sample_path() {
+        let d = driver();
+        for (sig, t) in [(0.0, 300.0), (2.0, 270.0), (4.0, 253.0), (-4.0, 393.0), (6.0, 233.0)] {
+            let s = PtmSample { process_sigma: sig, temperature: t };
+            let delta_eff = d.variation.delta_at(d.delta_guard_banded, sig, t);
+            assert_eq!(d.legs_for(&s), d.legs_for_delta(delta_eff), "sig={sig} t={t}");
+            assert_eq!(
+                d.required_current(&s).to_bits(),
+                d.required_current_at_delta(delta_eff).to_bits()
+            );
         }
     }
 

@@ -18,6 +18,7 @@ use crate::dse::delta::paper_design_points;
 use crate::dse::engine::{self, Axis, Runner, SweepResult, SweepSpec};
 use crate::models::DType;
 use crate::mram::MtjTech;
+use crate::util::pool::ThreadPool;
 use crate::util::units::{fmt_bytes, fmt_time, KB, MB};
 
 fn u64_axis(spec: &SweepSpec, name: &str, default: &[u64]) -> Vec<u64> {
@@ -426,6 +427,81 @@ pub fn techcmp_with(w: &mut impl Write, r: &Runner) -> std::io::Result<Vec<Sweep
                 best.metric("buffer_energy_j") * 1e3
             )?;
         }
+    }
+    Ok(rows)
+}
+
+/// Monte-Carlo PT analysis (Figs. 7–8) through the sweep engine: one row
+/// per (tech × Δ × samples) point, default 20 k samples on the STT bases.
+pub fn montecarlo(w: &mut impl Write) -> std::io::Result<Vec<SweepResult>> {
+    montecarlo_with(w, &Runner::default(), 0xD1E5, 20_000)
+}
+
+pub fn montecarlo_with(
+    w: &mut impl Write,
+    r: &Runner,
+    seed: u64,
+    samples: u64,
+) -> std::io::Result<Vec<SweepResult>> {
+    // All `--parallel N` workers go to chunk-level parallelism inside each
+    // point; points run serially at the outer level so the machine is never
+    // oversubscribed (a point's chunks already saturate the pool). Results
+    // are bit-identical for any split of the two levels.
+    let inner = ThreadPool::new(r.workers());
+    let spec = r.resolve(engine::spec_montecarlo(seed, samples, inner));
+    // A clean error beats a worker panic for techs without a PT MC model
+    // (`--tech sot|sram` parses fine everywhere else).
+    if let Some(Axis::Tech(ts)) = spec.axis("tech") {
+        if let Some(bad) = ts.iter().find(|t| !t.id().is_stt()) {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!(
+                    "montecarlo supports the STT base cases only (stt, wei2019), got {:?}",
+                    bad.token()
+                ),
+            ));
+        }
+    }
+    let rows = spec.run(&ThreadPool::new(1));
+    writeln!(w, "== Monte-Carlo PT analysis (streaming engine, seed {seed:#06x}) ==")?;
+    writeln!(
+        w,
+        "{:<12} {:>6} {:>9} {:>10} {:>10} {:>10} {:>9} {:>9} {:>18}",
+        "tech",
+        "dGB",
+        "samples",
+        "ret-viol",
+        "wr-static",
+        "wr-adjust",
+        "E_st pJ",
+        "E_adj pJ",
+        "d_eff mean±std"
+    )?;
+    for rec in &rows {
+        writeln!(
+            w,
+            "{:<12} {:>6} {:>9} {:>9.4}% {:>9.3}% {:>9.4}% {:>9.3} {:>9.3} {:>9.2} ± {:<6.2}",
+            rec.point.tech.unwrap().name(),
+            rec.point.delta.unwrap_or(0.0),
+            rec.point.mc_samples.unwrap_or(samples),
+            rec.metric("retention_violations") * 100.0,
+            rec.metric("write_violations_static") * 100.0,
+            rec.metric("write_violations_adjustable") * 100.0,
+            rec.metric("energy_static_j") * 1e12,
+            rec.metric("energy_adjustable_j") * 1e12,
+            rec.metric("delta_mean"),
+            rec.metric("delta_std")
+        )?;
+    }
+    if let Some(worst) = rows.iter().max_by(|a, b| {
+        a.metric("write_violations_static").total_cmp(&b.metric("write_violations_static"))
+    }) {
+        writeln!(
+            w,
+            "-- static driver worst case {:.2}% WER violations vs {:.4}% PTM-adjusted (Fig. 9's point)",
+            worst.metric("write_violations_static") * 100.0,
+            worst.metric("write_violations_adjustable") * 100.0
+        )?;
     }
     Ok(rows)
 }

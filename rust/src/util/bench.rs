@@ -4,8 +4,18 @@
 //! closure with warmup + multiple measured samples and prints a
 //! `name  median ± spread  (n iters)` line. Good enough for the §Perf
 //! before/after ledger and the per-figure regeneration-cost benches.
+//!
+//! [`Ledger`] collects results into the machine-readable `BENCH_*.json`
+//! trajectory (name → median/min/max ns + optional throughput): bench
+//! binaries honor `--bench-json <path>` (see [`bench_json_from_args`]) so
+//! CI can archive one JSON artifact per bench run, and `--smoke` (see
+//! [`smoke_from_args`]) for the reduced-n every-PR compile-and-run check.
 
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 /// One benchmark run's summary statistics (nanoseconds per iteration).
 #[derive(Debug, Clone, Copy)]
@@ -81,6 +91,106 @@ impl Bencher {
     }
 }
 
+/// One [`Ledger`] entry: the [`BenchResult`] summary plus an optional
+/// throughput derived from a caller-supplied per-iteration work amount.
+#[derive(Debug, Clone)]
+struct LedgerEntry {
+    median_ns: f64,
+    min_ns: f64,
+    max_ns: f64,
+    throughput_per_s: Option<f64>,
+    throughput_unit: Option<String>,
+}
+
+/// Machine-readable bench trajectory: ordered `name → summary` records that
+/// serialize to the `BENCH_*.json` schema CI archives per run.
+#[derive(Debug, Clone, Default)]
+pub struct Ledger {
+    entries: BTreeMap<String, LedgerEntry>,
+}
+
+impl Ledger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Record a plain timing result.
+    pub fn add(&mut self, name: &str, r: &BenchResult) {
+        self.entries.insert(
+            name.to_string(),
+            LedgerEntry {
+                median_ns: r.median_ns,
+                min_ns: r.min_ns,
+                max_ns: r.max_ns,
+                throughput_per_s: None,
+                throughput_unit: None,
+            },
+        );
+    }
+
+    /// Record a result whose iteration processes `work_per_iter` `unit`s
+    /// (samples, bytes, ...): throughput = work / median time.
+    pub fn add_throughput(&mut self, name: &str, r: &BenchResult, work_per_iter: f64, unit: &str) {
+        self.entries.insert(
+            name.to_string(),
+            LedgerEntry {
+                median_ns: r.median_ns,
+                min_ns: r.min_ns,
+                max_ns: r.max_ns,
+                throughput_per_s: Some(work_per_iter / (r.median_ns * 1e-9)),
+                throughput_unit: Some(unit.to_string()),
+            },
+        );
+    }
+
+    /// The `BENCH_*.json` document: `{"results": {name: {...}}}`.
+    pub fn to_json(&self) -> Json {
+        let results: BTreeMap<String, Json> = self
+            .entries
+            .iter()
+            .map(|(name, e)| {
+                let mut m = BTreeMap::new();
+                m.insert("median_ns".to_string(), Json::Num(e.median_ns));
+                m.insert("min_ns".to_string(), Json::Num(e.min_ns));
+                m.insert("max_ns".to_string(), Json::Num(e.max_ns));
+                if let Some(t) = e.throughput_per_s {
+                    m.insert("throughput_per_s".to_string(), Json::Num(t));
+                }
+                if let Some(u) = &e.throughput_unit {
+                    m.insert("throughput_unit".to_string(), Json::Str(u.clone()));
+                }
+                (name.clone(), Json::Obj(m))
+            })
+            .collect();
+        Json::Obj(BTreeMap::from([("results".to_string(), Json::Obj(results))]))
+    }
+
+    /// Write the trajectory document to `path`.
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+    }
+}
+
+/// Scan argv for `--bench-json PATH` / `--bench-json=PATH` (bench binaries
+/// receive harness flags mixed in, so unknown flags are tolerated).
+pub fn bench_json_from_args() -> Option<PathBuf> {
+    crate::util::cli::arg_value("bench-json").map(PathBuf::from)
+}
+
+/// Scan argv for `--smoke`: CI's reduced-n mode that proves the perf path
+/// compiles and runs on every PR without paying full measurement time.
+pub fn smoke_from_args() -> bool {
+    crate::util::cli::arg_switch("smoke")
+}
+
 fn fmt_ns(ns: f64) -> String {
     if ns >= 1e9 {
         format!("{:.3} s", ns / 1e9)
@@ -110,5 +220,53 @@ mod tests {
         let b = Bencher { sample_target_s: 0.001, samples: 2 };
         let r = b.run("cheap", || 42u64);
         assert!(r.iters_per_sample > 100);
+    }
+
+    #[test]
+    fn ledger_serializes_the_trajectory_schema() {
+        let mut l = Ledger::new();
+        assert!(l.is_empty());
+        let r = BenchResult {
+            median_ns: 1000.0,
+            min_ns: 900.0,
+            max_ns: 1200.0,
+            iters_per_sample: 10,
+            samples: 3,
+        };
+        l.add("plain", &r);
+        l.add_throughput("mc", &r, 4096.0, "samples");
+        assert_eq!(l.len(), 2);
+        let j = l.to_json();
+        let results = j.req("results").unwrap();
+        let plain = results.get("plain").unwrap();
+        assert_eq!(plain.get("median_ns").unwrap().as_f64(), Some(1000.0));
+        assert!(plain.get("throughput_per_s").is_none());
+        let mc = results.get("mc").unwrap();
+        // 4096 units / 1000 ns = 4.096e9 per second.
+        let t = mc.get("throughput_per_s").unwrap().as_f64().unwrap();
+        assert!((t - 4.096e9).abs() / 4.096e9 < 1e-12, "{t}");
+        assert_eq!(mc.get("throughput_unit").unwrap().as_str(), Some("samples"));
+        // Round-trips through the offline JSON codec.
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert!(parsed.req("results").unwrap().get("mc").is_some());
+    }
+
+    #[test]
+    fn ledger_writes_a_parseable_file() {
+        let mut l = Ledger::new();
+        let r = BenchResult {
+            median_ns: 5.0,
+            min_ns: 4.0,
+            max_ns: 6.0,
+            iters_per_sample: 1,
+            samples: 1,
+        };
+        l.add("x", &r);
+        let path = std::env::temp_dir().join("stt_ai_bench_ledger_test.json");
+        l.write_json(&path).unwrap();
+        let doc = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(&doc).unwrap();
+        assert!(parsed.req("results").unwrap().get("x").is_some());
+        let _ = std::fs::remove_file(&path);
     }
 }

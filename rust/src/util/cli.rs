@@ -6,6 +6,37 @@
 
 use std::collections::BTreeMap;
 
+/// Scan the raw argv for one `--NAME value` / `--NAME=value` flag,
+/// tolerating foreign flags around it. A following `--flag` token is never
+/// consumed as the value. For binaries that receive argv mixed with harness
+/// flags (benches under `cargo bench -- ...`), where [`Args::finish`]'s
+/// strict unknown-flag check cannot be used.
+pub fn arg_value(name: &str) -> Option<String> {
+    arg_value_in(std::env::args(), name)
+}
+
+fn arg_value_in(args: impl IntoIterator<Item = String>, name: &str) -> Option<String> {
+    let args: Vec<String> = args.into_iter().collect();
+    let eq = format!("--{name}=");
+    let bare = format!("--{name}");
+    for (i, a) in args.iter().enumerate() {
+        if let Some(v) = a.strip_prefix(&eq) {
+            return Some(v.to_string());
+        }
+        if *a == bare {
+            return args.get(i + 1).filter(|v| !v.starts_with("--")).cloned();
+        }
+    }
+    None
+}
+
+/// Scan the raw argv for a bare `--NAME` switch (same tolerance as
+/// [`arg_value`]).
+pub fn arg_switch(name: &str) -> bool {
+    let bare = format!("--{name}");
+    std::env::args().any(|a| a == bare)
+}
+
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
@@ -149,5 +180,25 @@ mod tests {
     fn bad_number_errors() {
         let a = args("x --n abc");
         assert!(a.get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn raw_argv_scanner_tolerates_foreign_flags() {
+        let argv = |s: &str| s.split_whitespace().map(String::from).collect::<Vec<_>>();
+        assert_eq!(
+            arg_value_in(argv("bench --bench --bench-json out.json --smoke"), "bench-json"),
+            Some("out.json".to_string())
+        );
+        assert_eq!(
+            arg_value_in(argv("bench --bench-json=x.json"), "bench-json"),
+            Some("x.json".to_string())
+        );
+        // A following flag is never consumed as the value.
+        assert_eq!(arg_value_in(argv("bench --bench-json --smoke"), "bench-json"), None);
+        // Missing entirely.
+        assert_eq!(arg_value_in(argv("bench --smoke"), "bench-json"), None);
+        // `--parallel 4` style numeric flags share the same scanner.
+        let p = arg_value_in(argv("hotpath --bench --parallel 4"), "parallel");
+        assert_eq!(p, Some("4".into()));
     }
 }

@@ -110,6 +110,21 @@ impl ThreadPool {
         tagged.sort_by_key(|(i, _)| *i);
         tagged.into_iter().map(|(_, r)| r).collect()
     }
+
+    /// Parallel map + ordered sequential reduce: `map` runs on the pool,
+    /// then `fold` combines the results **in input order on the caller
+    /// thread**. Because the reduction order is fixed, the accumulated value
+    /// is bit-identical for any worker count even when `fold` is not
+    /// floating-point associative — the Monte-Carlo merge contract.
+    pub fn map_reduce<T, R, A, F, G>(&self, items: &[T], map: F, init: A, fold: G) -> A
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+        G: FnMut(A, R) -> A,
+    {
+        self.map(items, map).into_iter().fold(init, fold)
+    }
 }
 
 #[cfg(test)]
@@ -153,6 +168,22 @@ mod tests {
         });
         assert_eq!(runs.load(Ordering::Relaxed), 64);
         assert_eq!(out, items);
+    }
+
+    #[test]
+    fn map_reduce_is_worker_count_invariant() {
+        // A non-associative float fold must still come out bit-identical
+        // for any worker count (the reduce runs in input order).
+        let items: Vec<f64> = (0..997).map(|i| 1.0 / (1.0 + i as f64)).collect();
+        let serial = ThreadPool::new(1)
+            .map_reduce(&items, |_, x| x * x, 0.0f64, |acc, v| acc + v)
+            .to_bits();
+        for workers in [2, 4, 8] {
+            let par = ThreadPool::new(workers)
+                .map_reduce(&items, |_, x| x * x, 0.0f64, |acc, v| acc + v)
+                .to_bits();
+            assert_eq!(par, serial, "workers={workers}");
+        }
     }
 
     #[test]

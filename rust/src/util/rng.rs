@@ -1,12 +1,28 @@
 //! Deterministic RNG: xoshiro256++ (Blackman & Vigna), implemented locally
-//! because the build environment is offline. Used by the BER injector and
-//! the property-style randomized tests.
+//! because the build environment is offline. Used by the BER injector, the
+//! Monte-Carlo engine and the property-style randomized tests.
+//!
+//! Two API layers:
+//!
+//! * scalar draws (`next_u64` / `next_f64` / `normal` / ...), and
+//! * batched fills (`fill_u64` / `fill_f64` / `fill_normal`) that amortize
+//!   call overhead and keep the pairwise Box–Muller transform's second
+//!   output — the hot-path form the streaming Monte-Carlo engine consumes.
+//!
+//! [`Rng::jump`] advances the state by 2^128 steps, carving the sequence
+//! into non-overlapping sub-streams: chunked parallel consumers derive one
+//! stream per chunk from a single seed, so results are independent of how
+//! many workers drain the chunks.
 
 /// xoshiro256++ generator.
 #[derive(Debug, Clone)]
 pub struct Rng {
     s: [u64; 4],
 }
+
+/// The xoshiro256 2^128-step jump polynomial (Blackman & Vigna reference).
+const JUMP: [u64; 4] =
+    [0x180e_c6d3_3cfd_0aba, 0xd5a6_1266_f0c9_392c, 0xa958_2618_e03f_c9aa, 0x39ab_dc45_29b1_661c];
 
 impl Rng {
     /// Seed via SplitMix64 (the reference seeding procedure).
@@ -64,6 +80,63 @@ impl Rng {
         let u2 = self.next_f64();
         (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
     }
+
+    /// Advance the state by 2^128 `next_u64` steps (the reference xoshiro
+    /// jump). Successive jumps from one seed yield non-overlapping
+    /// sub-streams of 2^128 draws each — one per Monte-Carlo block.
+    pub fn jump(&mut self) {
+        let mut s = [0u64; 4];
+        for word in JUMP {
+            for bit in 0..64 {
+                if word & (1u64 << bit) != 0 {
+                    s[0] ^= self.s[0];
+                    s[1] ^= self.s[1];
+                    s[2] ^= self.s[2];
+                    s[3] ^= self.s[3];
+                }
+                self.next_u64();
+            }
+        }
+        self.s = s;
+    }
+
+    /// Fill `out` with raw draws; element `i` equals the `i`-th `next_u64`.
+    pub fn fill_u64(&mut self, out: &mut [u64]) {
+        for x in out.iter_mut() {
+            *x = self.next_u64();
+        }
+    }
+
+    /// Fill `out` with uniform f64 in [0, 1); element `i` equals the `i`-th
+    /// `next_f64`.
+    pub fn fill_f64(&mut self, out: &mut [f64]) {
+        for x in out.iter_mut() {
+            *x = self.next_f64();
+        }
+    }
+
+    /// Fill `out` with standard normals via *pairwise* Box–Muller: each
+    /// uniform pair (u1, u2) yields both the cosine and the sine branch, so
+    /// a batch of `n` normals costs `n` uniform draws instead of the `2n`
+    /// the scalar [`Rng::normal`] spends (it discards the sine partner).
+    /// Even-indexed outputs are bit-identical to what `normal()` would have
+    /// produced from the same state; a trailing odd element falls back to
+    /// the scalar path.
+    pub fn fill_normal(&mut self, out: &mut [f64]) {
+        let mut i = 0;
+        while i + 1 < out.len() {
+            let u1 = self.next_f64().max(1e-300);
+            let u2 = self.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            out[i] = r * theta.cos();
+            out[i + 1] = r * theta.sin();
+            i += 2;
+        }
+        if i < out.len() {
+            out[i] = self.normal();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -100,6 +173,80 @@ mod tests {
         for c in counts {
             assert!((c as i64 - 10_000).abs() < 600, "{counts:?}");
         }
+    }
+
+    #[test]
+    fn jump_is_deterministic_and_disjoint() {
+        let mut a = Rng::seed_from_u64(11);
+        let mut b = Rng::seed_from_u64(11);
+        a.jump();
+        b.jump();
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        // A jumped stream must not replay the base stream's prefix.
+        let mut base = Rng::seed_from_u64(11);
+        let mut jumped = Rng::seed_from_u64(11);
+        jumped.jump();
+        let head: Vec<u64> = (0..64).map(|_| base.next_u64()).collect();
+        let jhead: Vec<u64> = (0..64).map(|_| jumped.next_u64()).collect();
+        assert_ne!(head, jhead);
+        // Successive jumps give pairwise-distinct stream heads.
+        let mut r = Rng::seed_from_u64(12);
+        let mut heads = Vec::new();
+        for _ in 0..16 {
+            heads.push(r.clone().next_u64());
+            r.jump();
+        }
+        heads.sort_unstable();
+        heads.dedup();
+        assert_eq!(heads.len(), 16);
+    }
+
+    #[test]
+    fn fill_matches_scalar_draws() {
+        let mut a = Rng::seed_from_u64(21);
+        let mut b = Rng::seed_from_u64(21);
+        let mut buf = [0u64; 33];
+        a.fill_u64(&mut buf);
+        for &x in &buf {
+            assert_eq!(x, b.next_u64());
+        }
+        let mut a = Rng::seed_from_u64(22);
+        let mut b = Rng::seed_from_u64(22);
+        let mut fbuf = [0.0f64; 17];
+        a.fill_f64(&mut fbuf);
+        for &x in &fbuf {
+            assert_eq!(x.to_bits(), b.next_f64().to_bits());
+        }
+    }
+
+    #[test]
+    fn fill_normal_even_lanes_match_scalar() {
+        // The cosine branch of each Box–Muller pair is exactly what the
+        // scalar normal() computes from the same two uniforms.
+        let mut a = Rng::seed_from_u64(23);
+        let mut b = Rng::seed_from_u64(23);
+        let mut buf = [0.0f64; 8];
+        a.fill_normal(&mut buf);
+        assert_eq!(buf[0].to_bits(), b.normal().to_bits());
+        // Odd trailing element falls back to the scalar path.
+        let mut c = Rng::seed_from_u64(24);
+        let mut one = [0.0f64; 1];
+        c.fill_normal(&mut one);
+        let mut d = Rng::seed_from_u64(24);
+        assert_eq!(one[0].to_bits(), d.normal().to_bits());
+    }
+
+    #[test]
+    fn fill_normal_moments() {
+        let mut r = Rng::seed_from_u64(25);
+        let mut xs = vec![0.0f64; 50_000];
+        r.fill_normal(&mut xs);
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
     }
 
     #[test]

@@ -49,6 +49,109 @@ pub fn min_max(xs: &[f64]) -> Option<(f64, f64)> {
     Some((lo, hi))
 }
 
+/// Welford-style streaming summary: mean/std/min/max without materializing
+/// the sample vector (the Monte-Carlo engine's zero-allocation accumulator).
+///
+/// [`Streaming::merge`] combines two partial accumulators with the Chan
+/// et al. parallel update. Merging is *not* bit-identical to pushing the
+/// same samples sequentially (floating-point update order differs), but it
+/// IS deterministic: a **fixed partition merged in a fixed order** always
+/// reproduces the same bits, no matter which thread computed which partial.
+/// That is the property the pool-parallel Monte Carlo leans on — blocks are
+/// always [`crate::mram::montecarlo::BLOCK_SAMPLES`] wide and always merge
+/// in block-index order, so worker count and chunk size cannot change the
+/// result.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Streaming {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Streaming {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Streaming {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    /// Record one observation.
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Exact merge of another accumulator into this one.
+    pub fn merge(&mut self, o: &Streaming) {
+        if o.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = *o;
+            return;
+        }
+        let n = self.n + o.n;
+        let d = o.mean - self.mean;
+        self.mean += d * o.n as f64 / n as f64;
+        self.m2 += o.m2 + d * d * (self.n as f64 * o.n as f64 / n as f64);
+        self.n = n;
+        self.min = self.min.min(o.min);
+        self.max = self.max.max(o.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Mean; 0.0 when empty (matching [`mean`]).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    /// Population standard deviation; 0.0 for n < 2 (matching [`std_dev`]).
+    pub fn std_dev(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / self.n as f64).sqrt()
+        }
+    }
+
+    /// Smallest observation; 0.0 when empty (record-friendly, like the old
+    /// `min_max(..).unwrap_or((0.0, 0.0))` callers).
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest observation; 0.0 when empty.
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+}
+
 /// Streaming latency histogram for the coordinator (fixed log-spaced buckets).
 ///
 /// Buckets are powers of two in microseconds from 1us to ~17min, which is
@@ -149,6 +252,81 @@ mod tests {
     fn min_max_works() {
         assert_eq!(min_max(&[3.0, -1.0, 2.0]), Some((-1.0, 3.0)));
         assert_eq!(min_max(&[]), None);
+    }
+
+    #[test]
+    fn streaming_matches_batch_stats() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut s = Streaming::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 8);
+        assert!((s.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((s.std_dev() - std_dev(&xs)).abs() < 1e-12);
+        assert_eq!((s.min(), s.max()), min_max(&xs).unwrap());
+    }
+
+    #[test]
+    fn streaming_empty_is_zeroed() {
+        let s = Streaming::new();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.std_dev(), 0.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+        // Single observation: std is 0 (population, n < 2).
+        let mut s1 = Streaming::new();
+        s1.push(3.5);
+        assert_eq!(s1.std_dev(), 0.0);
+        assert_eq!((s1.min(), s1.max()), (3.5, 3.5));
+    }
+
+    #[test]
+    fn streaming_merge_matches_sequential() {
+        let xs: Vec<f64> = (0..1000).map(|i| ((i * 37) % 101) as f64 * 0.13 - 5.0).collect();
+        let mut whole = Streaming::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        for split in [1usize, 13, 500, 999] {
+            let (a, b) = xs.split_at(split);
+            let mut left = Streaming::new();
+            let mut right = Streaming::new();
+            a.iter().for_each(|&x| left.push(x));
+            b.iter().for_each(|&x| right.push(x));
+            left.merge(&right);
+            assert_eq!(left.count(), whole.count());
+            assert!((left.mean() - whole.mean()).abs() < 1e-10, "split={split}");
+            assert!((left.std_dev() - whole.std_dev()).abs() < 1e-10, "split={split}");
+            assert_eq!(left.min(), whole.min());
+            assert_eq!(left.max(), whole.max());
+        }
+        // Merging into/from empty is the identity.
+        let mut e = Streaming::new();
+        e.merge(&whole);
+        assert_eq!(e, whole);
+        let mut w2 = whole;
+        w2.merge(&Streaming::new());
+        assert_eq!(w2, whole);
+    }
+
+    #[test]
+    fn streaming_fixed_merge_order_is_reproducible() {
+        // Same partition, same order → bit-identical results (the MC
+        // determinism contract); this holds regardless of who computed the
+        // partials.
+        let xs: Vec<f64> = (0..4096).map(|i| (i as f64).sin()).collect();
+        let fold = |chunk_size: usize| {
+            let mut acc = Streaming::new();
+            for c in xs.chunks(chunk_size) {
+                let mut part = Streaming::new();
+                c.iter().for_each(|&x| part.push(x));
+                acc.merge(&part);
+            }
+            (acc.mean().to_bits(), acc.std_dev().to_bits())
+        };
+        assert_eq!(fold(256), fold(256));
     }
 
     #[test]

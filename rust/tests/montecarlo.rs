@@ -1,0 +1,103 @@
+//! Integration tests for the streaming Monte-Carlo engine: bit-identical
+//! determinism across worker counts *and* chunk sizes, batched-RNG
+//! distribution agreement, and the sweep-engine / CLI-facing integration.
+
+use stt_ai::dse::engine::{self, Runner};
+use stt_ai::mram::montecarlo::{BLOCK_SAMPLES, DEFAULT_CHUNK_SAMPLES};
+use stt_ai::mram::{McResult, MonteCarlo};
+use stt_ai::util::pool::ThreadPool;
+use stt_ai::util::rng::Rng;
+use stt_ai::util::stats::Streaming;
+
+/// Compare every McResult field bit-for-bit (PartialEq would treat -0.0 ==
+/// 0.0 and NaN != NaN; the determinism contract is about bits).
+fn assert_bits_eq(a: &McResult, b: &McResult, ctx: &str) {
+    assert_eq!(a.n, b.n, "{ctx}: n");
+    let fields = [
+        ("retention_violations", a.retention_violations, b.retention_violations),
+        ("write_violations_static", a.write_violations_static, b.write_violations_static),
+        (
+            "write_violations_adjustable",
+            a.write_violations_adjustable,
+            b.write_violations_adjustable,
+        ),
+        ("energy_static", a.energy_static, b.energy_static),
+        ("energy_adjustable", a.energy_adjustable, b.energy_adjustable),
+        ("delta_mean", a.delta_mean, b.delta_mean),
+        ("delta_std", a.delta_std, b.delta_std),
+        ("delta_min", a.delta_min, b.delta_min),
+        ("delta_max", a.delta_max, b.delta_max),
+    ];
+    for (name, x, y) in fields {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {name} ({x} vs {y})");
+    }
+}
+
+#[test]
+fn bit_identical_across_worker_counts_and_chunk_sizes() {
+    let mc = MonteCarlo::paper_glb();
+    let n = 100_000;
+    let reference = mc.run_with(0xD1E5, n, &ThreadPool::new(1), DEFAULT_CHUNK_SAMPLES);
+    for workers in [1usize, 2, 8] {
+        let pool = ThreadPool::new(workers);
+        for chunk in [BLOCK_SAMPLES, 10_000, DEFAULT_CHUNK_SAMPLES, n] {
+            let r = mc.run_with(0xD1E5, n, &pool, chunk);
+            assert_bits_eq(&reference, &r, &format!("workers={workers} chunk={chunk}"));
+        }
+    }
+    // And a different seed must actually differ (no degenerate constant).
+    let other = mc.run_with(0xBEEF, n, &ThreadPool::new(8), DEFAULT_CHUNK_SAMPLES);
+    assert_ne!(reference, other);
+}
+
+#[test]
+fn run_and_run_serial_agree() {
+    let mc = MonteCarlo::paper_glb();
+    let a = mc.run_serial(0xC0FFEE, 30_000);
+    let b = mc.run(0xC0FFEE, 30_000);
+    assert_bits_eq(&a, &b, "run vs run_serial");
+}
+
+#[test]
+fn fill_normal_and_scalar_normal_agree_in_distribution() {
+    // 1e6 samples each way: mean within ~5σ/√n, std within the same class.
+    let n = 1_000_000usize;
+    let mut batched = vec![0.0f64; n];
+    Rng::seed_from_u64(0x6042).fill_normal(&mut batched);
+    let mut scalar_rng = Rng::seed_from_u64(0x5CA1A7);
+    let mut s_batched = Streaming::new();
+    let mut s_scalar = Streaming::new();
+    for &x in &batched {
+        s_batched.push(x);
+    }
+    for _ in 0..n {
+        s_scalar.push(scalar_rng.normal());
+    }
+    let tol = 5.0 / (n as f64).sqrt();
+    assert!(s_batched.mean().abs() < tol, "batched mean {}", s_batched.mean());
+    assert!(s_scalar.mean().abs() < tol, "scalar mean {}", s_scalar.mean());
+    assert!((s_batched.std_dev() - 1.0).abs() < tol, "batched std {}", s_batched.std_dev());
+    assert!((s_scalar.std_dev() - 1.0).abs() < tol, "scalar std {}", s_scalar.std_dev());
+    assert!(
+        (s_batched.mean() - s_scalar.mean()).abs() < 2.0 * tol
+            && (s_batched.std_dev() - s_scalar.std_dev()).abs() < 2.0 * tol,
+        "batched and scalar normals must agree in distribution"
+    );
+}
+
+#[test]
+fn montecarlo_sweep_through_runner_matches_direct_engine() {
+    // The CLI path (spec through a Runner) and a direct engine run must
+    // agree bit-for-bit for the same (tech, Δ, seed, n).
+    let n = 8_000u64;
+    let spec = engine::spec_montecarlo(0xD1E5, n, ThreadPool::new(1));
+    let rows = Runner::new(4).run(spec);
+    assert_eq!(rows.len(), 2);
+    let stt_row = &rows[0];
+    assert_eq!(stt_row.point.tech.unwrap().name(), "sakhare2020");
+    let mc = MonteCarlo::paper_glb().at_delta_gb(stt_row.point.delta.unwrap());
+    let direct = mc.run_serial(0xD1E5, n as usize);
+    assert_eq!(stt_row.metric("retention_violations"), direct.retention_violations);
+    assert_eq!(stt_row.metric("energy_adjustable_j"), direct.energy_adjustable);
+    assert_eq!(stt_row.metric("delta_std"), direct.delta_std);
+}

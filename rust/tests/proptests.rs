@@ -169,3 +169,41 @@ fn prop_retention_monotone_in_array_and_batch() {
         assert!(rb >= r1 * (1.0 - 1e-12), "case {case} ({})", m.name);
     }
 }
+
+#[test]
+fn prop_strided_split_matches_copy_based_masked_split() {
+    // The §Perf fast path: for identical seeds the geometric-gap walk visits
+    // the same eligible-bit indices, so the in-place strided injection over
+    // an interleaved [lsb, msb, lsb, msb, ...] word buffer must flip exactly
+    // the bits the copy-based deinterleave-flip-reinterleave split flips —
+    // same counts, same positions. This pins flip_strided against the
+    // flip_masked reference the bank split used before going in-place.
+    let mut rng = Rng::seed_from_u64(0x57_101D);
+    for case in 0..40 {
+        let words = 1 + rng.below(2048) as usize;
+        let ber = 10f64.powf(rng.range_f64(-5.0, -1.5));
+        let seed_lsb = rng.next_u64();
+        let seed_msb = rng.next_u64();
+        let mut interleaved = vec![0u8; words * 2];
+        for byte in interleaved.iter_mut() {
+            *byte = rng.next_u64() as u8;
+        }
+        // Reference: copy each lane out, flip the whole lane, copy back.
+        let mut lsb: Vec<u8> = interleaved.iter().step_by(2).copied().collect();
+        let mut msb: Vec<u8> = interleaved.iter().skip(1).step_by(2).copied().collect();
+        let r_l = Injector::new(seed_lsb).flip_masked(&mut lsb, ber, 0xFF);
+        let r_m = Injector::new(seed_msb).flip_masked(&mut msb, ber, 0xFF);
+        // Fast path: in place on the interleaved buffer.
+        let mut fast = interleaved.clone();
+        let f_l = Injector::new(seed_lsb).flip_strided(&mut fast, ber, 0, 2);
+        let f_m = Injector::new(seed_msb).flip_strided(&mut fast, ber, 1, 2);
+        assert_eq!(r_l.bits_flipped, f_l.bits_flipped, "case {case}: lsb count");
+        assert_eq!(r_m.bits_flipped, f_m.bits_flipped, "case {case}: msb count");
+        assert_eq!(r_l.bits_scanned, f_l.bits_scanned, "case {case}: lsb scanned");
+        assert_eq!(r_m.bits_scanned, f_m.bits_scanned, "case {case}: msb scanned");
+        for i in 0..words {
+            assert_eq!(lsb[i], fast[2 * i], "case {case}: lsb byte {i}");
+            assert_eq!(msb[i], fast[2 * i + 1], "case {case}: msb byte {i}");
+        }
+    }
+}
