@@ -1,0 +1,63 @@
+//! Sweep-driven deployment selection: derive the serving design point from
+//! the DSE instead of hard-coding a paper config, then show the exact
+//! configuration the coordinator would boot from.
+//!
+//! Run: `cargo run --release --example select_deploy [objective]`
+//! (objective: area | energy | latency | throughput; default area)
+//!
+//! This is the codesign loop end-to-end:
+//!   candidate grid (variant x delta x ber)  ->  constraints + Pareto
+//!   frontier  ->  DesignSelection  ->  SystemConfig / EngineConfig.
+
+use stt_ai::coordinator::EngineConfig;
+use stt_ai::dse::engine::{shared_zoo, Runner};
+use stt_ai::dse::select::{self, Constraint, Objective};
+
+fn main() -> anyhow::Result<()> {
+    let objective = match std::env::args().nth(1) {
+        Some(tok) => Objective::from_token(&tok)
+            .ok_or_else(|| anyhow::anyhow!("unknown objective {tok:?}"))?,
+        None => Objective::MinArea,
+    };
+    let constraints = [Constraint::MinAccuracy(0.99), Constraint::RetentionCoversOccupancy];
+
+    let zoo = shared_zoo();
+    let runner = Runner::auto();
+    let results = runner.run(select::spec_selection(&zoo));
+    println!(
+        "evaluated {} candidates on {} workers (objective: {})",
+        results.len(),
+        runner.workers(),
+        objective.token()
+    );
+
+    let sel = select::select("selection", &results, objective, &constraints)?;
+    println!(
+        "selected {} (feasible {}/{}, frontier {}):",
+        sel.variant().label(),
+        sel.feasible,
+        sel.candidates,
+        sel.frontier
+    );
+    for (k, v) in sel.point.columns() {
+        println!("  point  {k:<10} = {v}");
+    }
+    for (k, v) in &sel.metrics {
+        println!("  metric {k:<22} = {v:.6e}");
+    }
+    if let Some(saving) = sel.metric("area_saving_vs_sram") {
+        println!("  area saving vs SRAM baseline: {:.1}%", saving * 100.0);
+    }
+
+    // The serving bridge: this is everything `stt-ai serve --from-selection`
+    // derives — no GlbVariant is hard-coded between here and the engine.
+    let cfg = sel.system_config();
+    println!("system config: {} (GLB {:?}, {} B)", cfg.name, cfg.glb, cfg.glb_bytes);
+    let engine_cfg = EngineConfig::from_selection(&sel);
+    println!(
+        "engine fault model: msb_ber={:e} lsb_ber={:e} seed={:#x}",
+        engine_cfg.ber.msb_ber, engine_cfg.ber.lsb_ber, engine_cfg.seed
+    );
+    println!("glb structure: {:?}", sel.glb_kind());
+    Ok(())
+}

@@ -52,7 +52,7 @@ fn main() -> anyhow::Result<()> {
             if let Some(b) = batcher.form(BATCH, now) {
                 let t0 = Instant::now();
                 let _ = engine.infer(&model, &b.images)?;
-                metrics.record_batch(b.real, b.capacity, t0.elapsed() + b.oldest_wait);
+                metrics.record_batch_waited(b.real, b.capacity, t0.elapsed(), b.oldest_wait);
                 served += b.real;
             }
         } else {

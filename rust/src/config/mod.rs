@@ -170,6 +170,101 @@ impl TechConfig {
     }
 }
 
+/// The `[deployment]` configuration section: what this deployment optimizes
+/// and must not violate. `stt-ai select` evaluates it over the selection
+/// sweep ([`crate::dse::select`]) to derive the design point the serving
+/// coordinator boots from, replacing the hard-coded paper variants.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeploymentConfig {
+    /// What the deployment optimizes.
+    pub objective: crate::dse::select::Objective,
+    /// Iso-accuracy floor (normalized estimated accuracy).
+    pub min_accuracy: Option<f64>,
+    /// Require worst-bank retention to cover the workload occupancy (the
+    /// §V.C design rule).
+    pub retention_covers_occupancy: bool,
+    /// Optional accelerator area budget (mm²).
+    pub max_area_mm2: Option<f64>,
+    /// Optional accelerator total-power budget (mW).
+    pub max_power_mw: Option<f64>,
+}
+
+impl Default for DeploymentConfig {
+    /// The paper's deployment: minimum area at "<1 % normalized drop" with
+    /// retention covering occupancy.
+    fn default() -> Self {
+        Self {
+            objective: crate::dse::select::Objective::MinArea,
+            min_accuracy: Some(0.99),
+            retention_covers_occupancy: true,
+            max_area_mm2: None,
+            max_power_mw: None,
+        }
+    }
+}
+
+impl DeploymentConfig {
+    /// The constraint set this section implies.
+    pub fn constraints(&self) -> Vec<crate::dse::select::Constraint> {
+        use crate::dse::select::Constraint;
+        let mut cs = Vec::new();
+        if let Some(floor) = self.min_accuracy {
+            cs.push(Constraint::MinAccuracy(floor));
+        }
+        if self.retention_covers_occupancy {
+            cs.push(Constraint::RetentionCoversOccupancy);
+        }
+        if let Some(cap) = self.max_area_mm2 {
+            cs.push(Constraint::MaxAreaMm2(cap));
+        }
+        if let Some(cap) = self.max_power_mw {
+            cs.push(Constraint::MaxPowerMw(cap));
+        }
+        cs
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields =
+            vec![("objective", Json::Str(self.objective.token().to_string()))];
+        if let Some(f) = self.min_accuracy {
+            fields.push(("min_accuracy", Json::Num(f)));
+        }
+        fields.push(("retention_covers_occupancy", self.retention_covers_occupancy.into()));
+        if let Some(c) = self.max_area_mm2 {
+            fields.push(("max_area_mm2", Json::Num(c)));
+        }
+        if let Some(c) = self.max_power_mw {
+            fields.push(("max_power_mw", Json::Num(c)));
+        }
+        Json::obj(fields)
+    }
+
+    fn from_json(j: &Json) -> crate::Result<Self> {
+        use anyhow::Context;
+        let mut cfg = Self::default();
+        let token = j.req_str("objective").map_err(anyhow::Error::from)?;
+        cfg.objective = crate::dse::select::Objective::from_token(token)
+            .ok_or_else(|| anyhow::anyhow!("unknown objective {token:?}"))?;
+        cfg.min_accuracy = match j.get("min_accuracy") {
+            Some(v) => Some(v.as_f64().context("min_accuracy")?),
+            None => None,
+        };
+        if let Some(v) = j.get("retention_covers_occupancy") {
+            cfg.retention_covers_occupancy =
+                v.as_bool().context("retention_covers_occupancy")?;
+        }
+        cfg.max_area_mm2 = match j.get("max_area_mm2") {
+            Some(v) => Some(v.as_f64().context("max_area_mm2")?),
+            None => None,
+        };
+        cfg.max_power_mw = match j.get("max_power_mw") {
+            Some(v) => Some(v.as_f64().context("max_power_mw")?),
+            None => None,
+        };
+        Ok(cfg)
+    }
+}
+
 /// Serving-side knobs for the coordinator.
 #[derive(Debug, Clone)]
 pub struct ServingConfig {
@@ -209,6 +304,28 @@ impl BerConfig {
             GlbVariant::SttAiUltra => Self { msb_ber: 1e-8, lsb_ber: 1e-5, seed: 0xC0FFEE },
         }
     }
+
+    /// The budget implied by a selected design point: the variant picks the
+    /// bank *structure*, the selection's (optional) robust-bank BER budget
+    /// replaces the paper default. The Ultra split keeps the paper's
+    /// three-decade MSB→LSB relaxation; SRAM never flips bits.
+    pub fn for_selection(v: GlbVariant, msb_ber: Option<f64>) -> Self {
+        let mut c = Self::for_variant(v);
+        if let Some(b) = msb_ber {
+            match v {
+                GlbVariant::Sram => {}
+                GlbVariant::SttAi => {
+                    c.msb_ber = b;
+                    c.lsb_ber = b;
+                }
+                GlbVariant::SttAiUltra => {
+                    c.msb_ber = b;
+                    c.lsb_ber = (b * 1.0e3).min(0.5);
+                }
+            }
+        }
+        c
+    }
 }
 
 /// The full system description.
@@ -231,6 +348,9 @@ pub struct SystemConfig {
     pub tech: TechConfig,
     /// Serving knobs.
     pub serving: ServingConfig,
+    /// Deployment objective/constraint section (`[deployment]`): what
+    /// `stt-ai select` optimizes when deriving this build's design point.
+    pub deployment: DeploymentConfig,
 }
 
 /// Serializable datatype.
@@ -261,6 +381,7 @@ impl SystemConfig {
             array: ArrayConfig::paper_42x42(),
             tech: TechConfig::default(),
             serving: ServingConfig::default(),
+            deployment: DeploymentConfig::default(),
         }
     }
 
@@ -352,6 +473,7 @@ impl SystemConfig {
                     ("queue_depth", (self.serving.queue_depth as u64).into()),
                 ]),
             ),
+            ("deployment", self.deployment.to_json()),
         ])
     }
 
@@ -407,6 +529,9 @@ impl SystemConfig {
                 s.req_u64("batch_window_us").map_err(anyhow::Error::from)?;
             cfg.serving.queue_depth =
                 s.req_u64("queue_depth").map_err(anyhow::Error::from)? as usize;
+        }
+        if let Some(d) = j.get("deployment") {
+            cfg.deployment = DeploymentConfig::from_json(d)?;
         }
         Ok(cfg)
     }
@@ -505,6 +630,59 @@ mod tests {
                          "scratchpad_bytes":0,"tech":"wei2019"}"#;
         let cfg = SystemConfig::from_json(&Json::parse(legacy).unwrap()).unwrap();
         assert_eq!(cfg.tech.base, TechBase::Wei2019);
+    }
+
+    #[test]
+    fn deployment_section_round_trips() {
+        use crate::dse::select::{Constraint, Objective};
+        let mut c = SystemConfig::paper_stt_ai_ultra();
+        assert_eq!(c.deployment, DeploymentConfig::default());
+        c.deployment = DeploymentConfig {
+            objective: Objective::MinEnergy,
+            min_accuracy: Some(0.995),
+            retention_covers_occupancy: true,
+            max_area_mm2: Some(6.0),
+            max_power_mw: None,
+        };
+        let back =
+            SystemConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.deployment, c.deployment);
+        assert_eq!(
+            back.deployment.constraints(),
+            vec![
+                Constraint::MinAccuracy(0.995),
+                Constraint::RetentionCoversOccupancy,
+                Constraint::MaxAreaMm2(6.0)
+            ]
+        );
+        // A config without the section falls back to the paper deployment.
+        let legacy = r#"{"name":"x","glb":"stt_ai","glb_bytes":1048576,"scratchpad_bytes":0}"#;
+        let cfg = SystemConfig::from_json(&Json::parse(legacy).unwrap()).unwrap();
+        assert_eq!(cfg.deployment, DeploymentConfig::default());
+        // Unknown objectives fail loudly.
+        let bad = r#"{"name":"x","glb":"sram","glb_bytes":1,"scratchpad_bytes":0,
+                      "deployment":{"objective":"vibes"}}"#;
+        assert!(SystemConfig::from_json(&Json::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn ber_for_selection_applies_budget_over_variant_structure() {
+        // No budget: identical to the paper defaults.
+        for v in [GlbVariant::Sram, GlbVariant::SttAi, GlbVariant::SttAiUltra] {
+            let (a, b) = (BerConfig::for_selection(v, None), BerConfig::for_variant(v));
+            assert_eq!((a.msb_ber, a.lsb_ber, a.seed), (b.msb_ber, b.lsb_ber, b.seed));
+        }
+        // Mono bank: the budget applies uniformly.
+        let c = BerConfig::for_selection(GlbVariant::SttAi, Some(1e-6));
+        assert_eq!((c.msb_ber, c.lsb_ber), (1e-6, 1e-6));
+        // Ultra: three-decade MSB→LSB relaxation, capped below certainty.
+        let c = BerConfig::for_selection(GlbVariant::SttAiUltra, Some(1e-8));
+        assert_eq!((c.msb_ber, c.lsb_ber), (1e-8, 1e-5));
+        let c = BerConfig::for_selection(GlbVariant::SttAiUltra, Some(1e-2));
+        assert_eq!((c.msb_ber, c.lsb_ber), (1e-2, 0.5));
+        // SRAM never flips bits, whatever the budget says.
+        let c = BerConfig::for_selection(GlbVariant::Sram, Some(1e-3));
+        assert_eq!((c.msb_ber, c.lsb_ber), (0.0, 0.0));
     }
 
     #[test]

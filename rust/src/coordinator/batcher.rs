@@ -45,6 +45,10 @@ pub struct Batcher {
     /// Rejected when the queue is full (backpressure).
     pub queue_depth: usize,
     pub rejected: u64,
+    /// Rejected because the request's image shape does not match the
+    /// compiled executables (a malformed request must never crash the
+    /// serving loop — it is the *caller's* payload that is wrong).
+    pub malformed: u64,
 }
 
 impl Batcher {
@@ -56,12 +60,17 @@ impl Batcher {
             image_elems,
             queue_depth,
             rejected: 0,
+            malformed: 0,
         }
     }
 
-    /// Enqueue a request; `false` if rejected by backpressure.
+    /// Enqueue a request; `false` if rejected (malformed image shape, or
+    /// backpressure when the queue is full).
     pub fn push(&mut self, r: Request) -> bool {
-        assert_eq!(r.image.len(), self.image_elems, "image shape mismatch");
+        if r.image.len() != self.image_elems {
+            self.malformed += 1;
+            return false;
+        }
         if self.queue.len() >= self.queue_depth {
             self.rejected += 1;
             return false;
@@ -72,6 +81,12 @@ impl Batcher {
 
     pub fn pending(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Queueing delay of the oldest pending request (zero when idle) — the
+    /// signal [`crate::coordinator::Router::dispatch`] schedules on.
+    pub fn oldest_wait(&self, now: Instant) -> Duration {
+        self.queue.front().map_or(Duration::ZERO, |r| now.duration_since(r.enqueued))
     }
 
     /// Should the caller fire a batch now? Either the batch is full, or the
@@ -172,5 +187,69 @@ mod tests {
         }
         let batch = b.form(4, Instant::now()).unwrap();
         assert_eq!(batch.ids, vec![5, 3, 9]);
+    }
+
+    #[test]
+    fn malformed_request_is_rejected_not_a_panic() {
+        // Regression: a wrong-shaped image used to assert! and crash the
+        // whole serving loop; it must be rejected and counted instead.
+        let mut b = batcher();
+        assert!(!b.push(Request::new(1, vec![0.5; 3])), "short image rejected");
+        assert!(!b.push(Request::new(2, vec![0.5; 5])), "long image rejected");
+        assert!(!b.push(Request::new(3, Vec::new())), "empty image rejected");
+        assert_eq!(b.malformed, 3);
+        assert_eq!(b.rejected, 0, "malformed is its own counter");
+        assert_eq!(b.pending(), 0, "nothing malformed reaches the queue");
+        // The loop keeps serving well-formed traffic afterwards.
+        assert!(b.push(req(4)));
+        assert_eq!(b.pending(), 1);
+        assert_eq!(b.form(4, Instant::now()).unwrap().ids, vec![4]);
+    }
+
+    #[test]
+    fn malformed_counts_even_under_backpressure() {
+        // Shape check runs first: a malformed request never consumes the
+        // queue-depth budget, and a full queue still counts it as malformed.
+        let mut b = batcher();
+        for i in 0..8 {
+            assert!(b.push(req(i)));
+        }
+        assert!(!b.push(Request::new(99, vec![0.0; 2])));
+        assert_eq!((b.malformed, b.rejected), (1, 0));
+        assert!(!b.push(req(100)));
+        assert_eq!((b.malformed, b.rejected), (1, 1));
+    }
+
+    #[test]
+    fn oldest_wait_tracks_the_queue_head() {
+        let mut b = batcher();
+        let now = Instant::now();
+        assert_eq!(b.oldest_wait(now), Duration::ZERO, "idle queue waits zero");
+        b.push(req(1));
+        let later = now + Duration::from_millis(10);
+        assert!(b.oldest_wait(later) >= Duration::from_millis(9));
+        // Forming the batch drains the head; the wait resets.
+        b.form(4, later).unwrap();
+        assert_eq!(b.oldest_wait(later + Duration::from_millis(5)), Duration::ZERO);
+    }
+
+    #[test]
+    fn window_expiry_interacts_with_backpressure() {
+        // Fill to the depth limit, get rejected, then let the window expire:
+        // the partial batch fires, frees queue space, and pushes succeed
+        // again — backpressure is transient, not sticky.
+        let mut b = batcher();
+        for i in 0..8 {
+            assert!(b.push(req(i)));
+        }
+        assert!(!b.push(req(99)));
+        assert_eq!(b.rejected, 1);
+        let later = Instant::now() + Duration::from_millis(10);
+        assert!(b.ready(later), "expired window fires despite backpressure");
+        let batch = b.form(4, later).unwrap();
+        assert_eq!(batch.real, 4);
+        assert!(batch.oldest_wait >= Duration::from_millis(9));
+        assert_eq!(b.pending(), 4);
+        assert!(b.push(req(100)), "space freed after the batch fired");
     }
 }

@@ -9,8 +9,11 @@ use crate::runtime::{ArtifactManifest, LoadedModel, Runtime, Weights};
 /// Engine construction options.
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
-    /// GLB variant: selects the BER fault model applied to buffered data.
+    /// GLB variant (bank structure label; the fault model itself lives in
+    /// `ber` so a sweep-selected point can carry a custom budget).
     pub variant: GlbVariant,
+    /// The BER fault model applied to buffered data.
+    pub ber: BerConfig,
     /// Magnitude-pruning rate applied to weights before injection (Fig. 21
     /// evaluates 0.0 and 0.5).
     pub prune_rate: f64,
@@ -23,12 +26,28 @@ pub struct EngineConfig {
 
 impl EngineConfig {
     pub fn new(variant: GlbVariant) -> Self {
+        let ber = BerConfig::for_variant(variant);
+        Self { variant, ber, prune_rate: 0.0, seed: ber.seed, inject_activations: false }
+    }
+
+    /// Boot from a sweep-selected design point (`stt-ai serve
+    /// --from-selection`): the variant structure and BER budget both come
+    /// from the selection record instead of a hard-coded paper config.
+    pub fn from_selection(sel: &crate::dse::select::DesignSelection) -> Self {
+        let ber = sel.ber_config();
         Self {
-            variant,
+            variant: sel.variant(),
+            ber,
             prune_rate: 0.0,
-            seed: BerConfig::for_variant(variant).seed,
+            seed: ber.seed,
             inject_activations: false,
         }
+    }
+
+    /// Replace the BER fault model (keeps the variant label).
+    pub fn with_ber(mut self, ber: BerConfig) -> Self {
+        self.ber = ber;
+        self
     }
 
     pub fn with_activation_faults(mut self) -> Self {
@@ -97,7 +116,7 @@ impl Engine {
         for v in &w {
             image.extend_from_slice(&crate::util::bf16::f32_to_bf16(*v).to_le_bytes());
         }
-        let ber = BerConfig::for_variant(self.config.variant);
+        let ber = self.config.ber;
         let split = BankSplit { kind: WordKind::Bf16, msb_ber: ber.msb_ber, lsb_ber: ber.lsb_ber };
         let mut inj = Injector::new(self.config.seed);
         let stats = split.inject(&mut inj, &mut image);
@@ -140,7 +159,7 @@ impl Engine {
         for v in images {
             image.extend_from_slice(&f32_to_bf16(*v).to_le_bytes());
         }
-        let ber = BerConfig::for_variant(self.config.variant);
+        let ber = self.config.ber;
         let split = BankSplit { kind: WordKind::Bf16, msb_ber: ber.msb_ber, lsb_ber: ber.lsb_ber };
         let n = self.act_calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let mut inj = Injector::new(self.config.seed ^ (0xAC7 << 32) ^ n);
@@ -172,6 +191,43 @@ mod tests {
         assert_eq!(c.prune_rate, 0.5);
         assert_eq!(c.seed, 99);
         assert!(c.inject_activations);
+        // `new` carries the paper budget for the variant...
+        assert_eq!((c.ber.msb_ber, c.ber.lsb_ber), (1e-8, 1e-5));
+        // ...and `with_ber` replaces it without touching the label.
+        let custom = BerConfig { msb_ber: 1e-7, lsb_ber: 1e-4, seed: 7 };
+        let c = EngineConfig::new(GlbVariant::SttAiUltra).with_ber(custom);
+        assert_eq!(c.ber.msb_ber, 1e-7);
+        assert_eq!(c.variant, GlbVariant::SttAiUltra);
+    }
+
+    #[test]
+    fn engine_config_boots_from_a_selection_record() {
+        use crate::dse::engine::DesignPoint;
+        use crate::dse::select::{DesignSelection, Objective};
+        let sel = DesignSelection {
+            sweep: "selection".into(),
+            objective: Objective::MinArea,
+            constraints: vec![],
+            point: DesignPoint {
+                variant: Some(GlbVariant::SttAi),
+                ber: Some(1e-6),
+                ..Default::default()
+            },
+            metrics: vec![],
+            score: 0.0,
+            candidates: 1,
+            feasible: 1,
+            frontier: 1,
+        };
+        let c = EngineConfig::from_selection(&sel);
+        assert_eq!(c.variant, GlbVariant::SttAi);
+        assert_eq!((c.ber.msb_ber, c.ber.lsb_ber), (1e-6, 1e-6));
+        // A point that never varied the variant boots the paper's serving
+        // default (Ultra) rather than panicking.
+        let sparse = DesignSelection { point: DesignPoint::default(), ..sel };
+        let c = EngineConfig::from_selection(&sparse);
+        assert_eq!(c.variant, GlbVariant::SttAiUltra);
+        assert_eq!((c.ber.msb_ber, c.ber.lsb_ber), (1e-8, 1e-5));
     }
 
     // Engine::load tests require built artifacts; see rust/tests/e2e.rs.

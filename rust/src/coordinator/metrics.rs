@@ -1,4 +1,5 @@
-//! Serving metrics: latency histogram, throughput, batch-occupancy.
+//! Serving metrics: latency histogram, queueing delay, throughput,
+//! batch-occupancy.
 
 use std::time::{Duration, Instant};
 
@@ -8,10 +9,15 @@ use crate::util::stats::LatencyHistogram;
 #[derive(Debug, Clone)]
 pub struct Metrics {
     pub latency: LatencyHistogram,
+    /// Queueing delay of the oldest request in each executed batch (how
+    /// long the batching window actually held traffic back).
+    pub queue_wait: LatencyHistogram,
     pub batches: u64,
     pub requests: u64,
     pub padded_rows: u64,
-    started: Instant,
+    /// Anchored at the *first executed batch*, not construction — model
+    /// load and idle warm-up time must not dilute the throughput figure.
+    started: Option<Instant>,
 }
 
 impl Default for Metrics {
@@ -24,24 +30,50 @@ impl Metrics {
     pub fn new() -> Self {
         Self {
             latency: LatencyHistogram::new(),
+            queue_wait: LatencyHistogram::new(),
             batches: 0,
             requests: 0,
             padded_rows: 0,
-            started: Instant::now(),
+            started: None,
         }
     }
 
-    /// Record one executed batch.
+    /// Record one executed batch (no queueing-delay information).
     pub fn record_batch(&mut self, real: usize, capacity: usize, latency: Duration) {
+        self.record_batch_waited(real, capacity, latency, Duration::ZERO);
+    }
+
+    /// Record one executed batch plus the queueing delay of its oldest
+    /// request ([`crate::coordinator::Batch::oldest_wait`]).
+    pub fn record_batch_waited(
+        &mut self,
+        real: usize,
+        capacity: usize,
+        latency: Duration,
+        queue_wait: Duration,
+    ) {
+        if self.started.is_none() {
+            // Anchor at the *start* of the first executed batch (records
+            // arrive after inference, so back-date by its latency): the
+            // interval includes every batch's service time but none of the
+            // model-load/idle time before the first request.
+            let now = Instant::now();
+            self.started = Some(now.checked_sub(latency).unwrap_or(now));
+        }
         self.batches += 1;
         self.requests += real as u64;
         self.padded_rows += (capacity - real) as u64;
         self.latency.record_us(latency.as_micros() as u64);
+        self.queue_wait.record_us(queue_wait.as_micros() as u64);
     }
 
-    /// Requests per second since construction.
+    /// Requests per second since the first recorded batch (0 before any
+    /// batch has executed — there is no serving interval to measure yet).
     pub fn throughput(&self) -> f64 {
-        self.throughput_after(self.started.elapsed())
+        match self.started {
+            Some(t0) => self.throughput_after(t0.elapsed()),
+            None => 0.0,
+        }
     }
 
     /// Requests per second over an injected elapsed time — the deterministic
@@ -68,7 +100,7 @@ impl Metrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "batches={} requests={} occupancy={:.1}% p50={}us p99={}us max={}us mean={:.0}us",
+            "batches={} requests={} occupancy={:.1}% p50={}us p99={}us max={}us mean={:.0}us qwait-p50={}us qwait-max={}us",
             self.batches,
             self.requests,
             self.occupancy() * 100.0,
@@ -76,6 +108,8 @@ impl Metrics {
             self.latency.percentile_us(99.0),
             self.latency.max_us(),
             self.latency.mean_us(),
+            self.queue_wait.percentile_us(50.0),
+            self.queue_wait.max_us(),
         )
     }
 }
@@ -88,13 +122,14 @@ mod tests {
     fn records_and_summarizes() {
         let mut m = Metrics::new();
         m.record_batch(4, 4, Duration::from_micros(100));
-        m.record_batch(2, 4, Duration::from_micros(300));
+        m.record_batch_waited(2, 4, Duration::from_micros(300), Duration::from_micros(40));
         assert_eq!(m.batches, 2);
         assert_eq!(m.requests, 6);
         assert_eq!(m.padded_rows, 2);
         assert!((m.occupancy() - 0.75).abs() < 1e-12);
         let s = m.summary();
         assert!(s.contains("batches=2"));
+        assert!(s.contains("qwait-max=40us"), "{s}");
     }
 
     #[test]
@@ -112,9 +147,46 @@ mod tests {
     }
 
     #[test]
+    fn throughput_anchors_on_first_batch_not_construction() {
+        // Regression: `started` used to be stamped in `new()`, so model
+        // loading / idle time before the first request silently deflated
+        // throughput. Before any batch there is no interval — and after a
+        // batch the interval starts at that batch, so even if construction
+        // happened long ago the figure only reflects serving time.
+        let m = Metrics::new();
+        assert_eq!(m.throughput(), 0.0, "no batches -> no throughput");
+        let mut m = Metrics::new();
+        std::thread::sleep(Duration::from_millis(50)); // "model load" delay
+        m.record_batch(100, 100, Duration::from_millis(10));
+        // Anchored at the first batch's start: even with generous scheduler
+        // jitter the measured interval stays far below the 50 ms warm-up,
+        // so the figure stays above the diluted 100/50ms bound the old
+        // construction-time anchor would impose.
+        let diluted_bound = 100.0 / Duration::from_millis(50).as_secs_f64();
+        assert!(
+            m.throughput() > diluted_bound,
+            "warm-up time must not count: {} vs {}",
+            m.throughput(),
+            diluted_bound
+        );
+        // And the interval includes the first batch's own service time, so
+        // a single-batch run reports requests/batch-latency, not a
+        // requests/(~0 s) explosion.
+        let single_batch_bound = 100.0 / Duration::from_millis(10).as_secs_f64();
+        assert!(
+            m.throughput() <= single_batch_bound * 1.01,
+            "first batch's service time must count: {} vs {}",
+            m.throughput(),
+            single_batch_bound
+        );
+    }
+
+    #[test]
     fn empty_metrics_safe() {
         let m = Metrics::new();
         assert_eq!(m.occupancy(), 0.0);
         assert_eq!(m.latency.percentile_us(99.0), 0);
+        assert_eq!(m.queue_wait.percentile_us(50.0), 0);
+        assert_eq!(m.throughput(), 0.0);
     }
 }

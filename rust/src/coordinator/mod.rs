@@ -5,9 +5,18 @@
 //!   GLB variant; applies bank-split BER injection to the weight image the
 //!   way the physical buffer would corrupt it, then serves batches.
 //! * [`batcher`] — dynamic batcher: coalesces queued requests up to
-//!   `max_batch` within a bounded window, padding the tail batch.
-//! * [`metrics`] — latency histograms + throughput counters.
+//!   `max_batch` within a bounded window, padding the tail batch; rejects
+//!   (and counts) malformed and backpressured requests instead of crashing.
+//! * [`router`] — picks the executable variant per dispatch from queue
+//!   depth and head-of-line wait; [`serve::closed_loop`] schedules through
+//!   it.
+//! * [`metrics`] — latency + queue-wait histograms, throughput counters
+//!   anchored at the first served batch.
 //! * [`accuracy`] — Fig. 21-style evaluation loops (Top-1/Top-5, pruning).
+//!
+//! The engine boots from a hard-coded paper config
+//! ([`EngineConfig::new`]) or from a sweep-selected design point
+//! ([`EngineConfig::from_selection`], `stt-ai serve --from-selection`).
 
 pub mod accuracy;
 pub mod batcher;

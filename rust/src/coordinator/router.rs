@@ -134,4 +134,47 @@ mod tests {
         let b: Vec<usize> = r.variants().iter().map(|v| v.batch).collect();
         assert_eq!(b, vec![1, 4, 16]);
     }
+
+    #[test]
+    fn threshold_above_one_never_fires_on_fill_alone() {
+        // fill_threshold > 1.0 demands more queued requests than the
+        // largest batch holds before the throughput path fires — the queue
+        // must overfill so the next batch starts warm.
+        let r = Router::new(vec![16], RouterPolicy { fill_threshold: 1.5, ..Default::default() });
+        assert_eq!(r.dispatch(16, Duration::ZERO), None, "a full batch is not 1.5x full");
+        assert_eq!(r.dispatch(23, Duration::ZERO), None);
+        assert_eq!(r.dispatch(24, Duration::ZERO), Some(Variant { batch: 16 }));
+        // The deadline path is independent of the threshold: stale traffic
+        // still drains even under an overfill policy.
+        assert_eq!(r.dispatch(3, Duration::from_millis(5)), Some(Variant { batch: 16 }));
+    }
+
+    #[test]
+    fn deadline_queue_between_variants_picks_minimal_padding() {
+        // Queue sizes that land strictly between compiled variants must
+        // take the smallest variant that covers them (minimal padding),
+        // across the whole ladder.
+        let r = Router::new(vec![2, 8, 32], RouterPolicy::default());
+        let late = Duration::from_millis(5);
+        assert_eq!(r.dispatch(1, late), Some(Variant { batch: 2 }));
+        assert_eq!(r.dispatch(3, late), Some(Variant { batch: 8 }));
+        assert_eq!(r.dispatch(8, late), Some(Variant { batch: 8 }));
+        assert_eq!(r.dispatch(9, late), Some(Variant { batch: 32 }));
+        // Beyond every variant: the largest fires (the rest re-queue).
+        assert_eq!(r.dispatch(33, late), Some(Variant { batch: 32 }));
+        // Exactly at the deadline boundary counts as expired.
+        assert_eq!(r.dispatch(1, RouterPolicy::default().max_wait), Some(Variant { batch: 2 }));
+    }
+
+    #[test]
+    fn zero_max_wait_dispatches_any_pending_request() {
+        // A zero-deadline policy degenerates to "serve whatever is queued":
+        // oldest_wait >= ZERO always holds, so nothing ever starves — and
+        // an empty queue still yields None rather than a phantom batch.
+        let policy = RouterPolicy { fill_threshold: 1.0, max_wait: Duration::ZERO };
+        let r = Router::new(vec![4, 16], policy);
+        assert_eq!(r.dispatch(0, Duration::ZERO), None);
+        assert_eq!(r.dispatch(1, Duration::ZERO), Some(Variant { batch: 4 }));
+        assert_eq!(r.dispatch(16, Duration::ZERO), Some(Variant { batch: 16 }));
+    }
 }

@@ -6,7 +6,10 @@
 //! work-stealing pool, producing the unified [`engine::SweepResult`] records
 //! that `report` renders and exports. [`cache`] memoizes the per-layer
 //! traffic/retention model walks those analyses share, across sweeps and
-//! figures.
+//! figures. [`select`] closes the co-design loop: an objective/constraint
+//! layer over the sweep records (Pareto frontier, accuracy/retention/budget
+//! constraints) that picks the deployment's design point and hands it to
+//! the serving coordinator as a [`select::DesignSelection`].
 
 pub mod ablation;
 pub mod cache;
@@ -16,6 +19,7 @@ pub mod energy_area;
 pub mod engine;
 pub mod retention;
 pub mod scratchpad;
+pub mod select;
 
 pub use capacity::{CapacityRow, DramOverheadRow};
 pub use delta::DeltaSweep;
@@ -23,3 +27,4 @@ pub use energy_area::EnergyAreaRow;
 pub use engine::{Axis, DesignPoint, Runner, SweepResult, SweepSpec};
 pub use retention::RetentionRow;
 pub use scratchpad::{PartialOfmapRow, ScratchpadEnergyRow};
+pub use select::{Constraint, DesignSelection, Objective};

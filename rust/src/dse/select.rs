@@ -1,0 +1,816 @@
+//! Objective/constraint-driven design-point selection over sweep records.
+//!
+//! The paper's central flow is *model-driven co-design*: the right STT-MRAM
+//! design point (GLB variant, Δ scaling, bank split, BER budget) is derived
+//! from the DSE sweeps, not hand-picked. This module closes that loop over
+//! the unified [`SweepResult`] records:
+//!
+//! * [`Objective`] — what a deployment optimizes (minimize accelerator
+//!   area / buffer energy / latency, maximize throughput);
+//! * [`Constraint`] — what it must not violate (estimated-accuracy floor,
+//!   retention ≥ data-occupancy time, area/power budgets);
+//! * [`pareto_mask`] — non-dominated-frontier extraction across the
+//!   objective metrics;
+//! * [`select`] — feasibility filter → Pareto frontier → scored winner,
+//!   returned as a [`DesignSelection`] that carries the winning
+//!   [`DesignPoint`] plus its provenance (sweep name, objective,
+//!   constraint set, metrics, candidate/feasible/frontier counts);
+//! * [`spec_selection`] — the candidate grid (GLB variant × Δ × BER budget
+//!   on the paper's serving workload), evaluated like any other sweep on
+//!   the [`crate::dse::engine::Runner`] pool and memoized through
+//!   [`crate::dse::cache`];
+//! * the serving bridge — [`DesignSelection::system_config`],
+//!   [`DesignSelection::ber_config`] and
+//!   [`DesignSelection::glb_kind`] let `coordinator::Engine`/`serve` boot
+//!   from a *selected* point (`stt-ai serve --from-selection`), with no
+//!   hard-coded `GlbVariant` on the path.
+//!
+//! Under the paper's own deployment objective — minimum accelerator area at
+//! an iso-accuracy floor with retention covering occupancy — the frontier
+//! selects the STT-AI Ultra point (Δ 27.5/17.5 split banks at BER
+//! 1e-8/1e-5, ≈75.4 % area saving vs the SRAM baseline); `tests/select.rs`
+//! pins that golden.
+
+use std::path::Path;
+
+use crate::accel::{ArrayConfig, RetentionAnalysis};
+use crate::ber::{BankSplit, FaultExposure, WordKind};
+use crate::config::{BerConfig, DTypeConfig, GlbVariant, SystemConfig, TechConfig};
+use crate::dse::cache;
+use crate::dse::capacity::DramOverheadRow;
+use crate::dse::engine::{Axis, DesignPoint, SweepResult, SweepSpec, Zoo};
+use crate::memsys::{BufferSystem, DramModel, EnergyLedger, GlbKind, Scratchpad};
+use crate::models::{DType, Model};
+use crate::mram::technology::finite_or_max;
+use crate::report::table3::{AcceleratorSummary, CoreCosts};
+use crate::util::json::Json;
+use crate::util::units::MB;
+
+// ---------------------------------------------------------------------------
+// Objective
+// ---------------------------------------------------------------------------
+
+/// What a deployment optimizes. Each objective names one metric of the
+/// selection records and an orientation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Minimize composed accelerator silicon area (`accel_area_mm2`).
+    MinArea,
+    /// Minimize buffer energy per inference batch (`buffer_energy_j`).
+    MinEnergy,
+    /// Minimize end-to-end inference latency (`latency_s`).
+    MinLatency,
+    /// Maximize served requests per second (`throughput_rps`).
+    MaxThroughput,
+}
+
+impl Objective {
+    /// The record metric this objective scores.
+    pub fn metric(&self) -> &'static str {
+        match self {
+            Objective::MinArea => "accel_area_mm2",
+            Objective::MinEnergy => "buffer_energy_j",
+            Objective::MinLatency => "latency_s",
+            Objective::MaxThroughput => "throughput_rps",
+        }
+    }
+
+    /// Orientation: `true` when a smaller metric value is better.
+    pub fn lower_is_better(&self) -> bool {
+        !matches!(self, Objective::MaxThroughput)
+    }
+
+    /// Canonical CLI/serialization token (`--objective area`).
+    pub fn token(&self) -> &'static str {
+        match self {
+            Objective::MinArea => "area",
+            Objective::MinEnergy => "energy",
+            Objective::MinLatency => "latency",
+            Objective::MaxThroughput => "throughput",
+        }
+    }
+
+    /// Parse a CLI token.
+    pub fn from_token(s: &str) -> Option<Self> {
+        match s.to_lowercase().replace('-', "_").as_str() {
+            "area" | "min_area" => Some(Objective::MinArea),
+            "energy" | "min_energy" => Some(Objective::MinEnergy),
+            "latency" | "min_latency" => Some(Objective::MinLatency),
+            "throughput" | "max_throughput" => Some(Objective::MaxThroughput),
+            _ => None,
+        }
+    }
+
+    /// Every objective, in the canonical (frontier) order.
+    pub fn all() -> [Objective; 4] {
+        [Objective::MinArea, Objective::MinEnergy, Objective::MinLatency, Objective::MaxThroughput]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Constraint
+// ---------------------------------------------------------------------------
+
+/// A feasibility constraint over one selection record.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Constraint {
+    /// Estimated normalized accuracy (`est_accuracy`) must stay at or above
+    /// this floor (the paper's iso-accuracy condition; 0.99 ⇔ "<1 % drop").
+    MinAccuracy(f64),
+    /// Worst-bank retention at the BER budget must cover the worst data
+    /// occupancy time of the workload (`retention_at_ber_s ≥ occupancy_s`,
+    /// the §V.C design rule).
+    RetentionCoversOccupancy,
+    /// Composed accelerator area budget (mm²).
+    MaxAreaMm2(f64),
+    /// Composed accelerator total-power budget (mW).
+    MaxPowerMw(f64),
+}
+
+impl Constraint {
+    /// Does `r` satisfy this constraint? Records missing the constrained
+    /// metric are conservatively infeasible.
+    pub fn satisfied(&self, r: &SweepResult) -> bool {
+        let ge = |name: &str, floor: f64| r.metric_opt(name).is_some_and(|v| v >= floor);
+        let le = |name: &str, cap: f64| r.metric_opt(name).is_some_and(|v| v <= cap);
+        match self {
+            Constraint::MinAccuracy(floor) => ge("est_accuracy", *floor),
+            Constraint::RetentionCoversOccupancy => match
+                (r.metric_opt("retention_at_ber_s"), r.metric_opt("occupancy_s"))
+            {
+                (Some(ret), Some(occ)) => ret >= occ,
+                _ => false,
+            },
+            Constraint::MaxAreaMm2(cap) => le("accel_area_mm2", *cap),
+            Constraint::MaxPowerMw(cap) => le("accel_power_mw", *cap),
+        }
+    }
+
+    /// Stable provenance string (stored in the selection record).
+    pub fn describe(&self) -> String {
+        match self {
+            Constraint::MinAccuracy(f) => format!("est_accuracy>={f}"),
+            Constraint::RetentionCoversOccupancy => "retention_at_ber_s>=occupancy_s".to_string(),
+            Constraint::MaxAreaMm2(c) => format!("accel_area_mm2<={c}"),
+            Constraint::MaxPowerMw(c) => format!("accel_power_mw<={c}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pareto frontier + selection
+// ---------------------------------------------------------------------------
+
+/// Per-record feasibility under a constraint set.
+pub fn feasible_mask(results: &[SweepResult], constraints: &[Constraint]) -> Vec<bool> {
+    results.iter().map(|r| constraints.iter().all(|c| c.satisfied(r))).collect()
+}
+
+/// Non-dominated mask over the given objectives. Record `a` dominates `b`
+/// when it is at least as good on every objective and strictly better on at
+/// least one. Objectives whose metric is missing from any record are
+/// skipped, so the frontier stays well-defined on custom sweeps that carry
+/// only a subset of the selection metrics.
+pub fn pareto_mask(results: &[SweepResult], objectives: &[Objective]) -> Vec<bool> {
+    let live: Vec<Objective> = objectives
+        .iter()
+        .copied()
+        .filter(|o| results.iter().all(|r| r.metric_opt(o.metric()).is_some()))
+        .collect();
+    if live.is_empty() {
+        return vec![true; results.len()];
+    }
+    // Signed view: smaller is always better.
+    let key = |r: &SweepResult, o: Objective| {
+        let v = r.metric(o.metric());
+        if o.lower_is_better() {
+            v
+        } else {
+            -v
+        }
+    };
+    let dominates = |a: &SweepResult, b: &SweepResult| {
+        live.iter().all(|&o| key(a, o) <= key(b, o)) && live.iter().any(|&o| key(a, o) < key(b, o))
+    };
+    results
+        .iter()
+        .map(|b| !results.iter().any(|a| dominates(a, b)))
+        .collect()
+}
+
+/// The outcome of a [`select`] run: the winning design point plus the full
+/// provenance needed to rebuild (and audit) the serving configuration.
+#[derive(Debug, Clone)]
+pub struct DesignSelection {
+    /// Name of the sweep the candidates came from (e.g. `selection`).
+    pub sweep: String,
+    pub objective: Objective,
+    /// Stable description of the applied constraint set.
+    pub constraints: Vec<String>,
+    /// The winning coordinate.
+    pub point: DesignPoint,
+    /// The winner's full metric record.
+    pub metrics: Vec<(String, f64)>,
+    /// Objective metric value of the winner.
+    pub score: f64,
+    /// Candidate / feasible / frontier population sizes.
+    pub candidates: usize,
+    pub feasible: usize,
+    pub frontier: usize,
+}
+
+impl DesignSelection {
+    /// Metric by name, if the record carries it.
+    pub fn metric(&self, name: &str) -> Option<f64> {
+        self.metrics.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
+    }
+
+    /// The selected GLB variant (defaults to the paper's serving pick when
+    /// the sweep did not vary the variant axis).
+    pub fn variant(&self) -> GlbVariant {
+        self.point.variant.unwrap_or(GlbVariant::SttAiUltra)
+    }
+
+    /// Materialize a [`SystemConfig`] at the selected point: variant, GLB
+    /// capacity, dtype, MAC array, technology and Δ design point all come
+    /// from the record (unset axes keep the paper defaults of the variant's
+    /// constructor, scratchpad included).
+    pub fn system_config(&self) -> SystemConfig {
+        let variant = self.variant();
+        let mut cfg = match variant {
+            GlbVariant::Sram => SystemConfig::paper_baseline(),
+            GlbVariant::SttAi => SystemConfig::paper_stt_ai(),
+            GlbVariant::SttAiUltra => SystemConfig::paper_stt_ai_ultra(),
+        };
+        cfg.name = format!("selected-{}-{}", self.objective.token(), variant.label());
+        if let Some(mb) = self.point.glb_mb {
+            cfg.glb_bytes = mb * MB;
+        }
+        if let Some(dt) = self.point.dtype {
+            cfg.dtype = match dt {
+                DType::Int8 => DTypeConfig::Int8,
+                DType::Bf16 => DTypeConfig::Bf16,
+            };
+        }
+        if let Some(side) = self.point.macs {
+            cfg.array = ArrayConfig::with_mac_array(side);
+        }
+        cfg.tech = TechConfig {
+            base: self.point.tech.unwrap_or_default(),
+            glb_delta_override: self.point.delta,
+            lsb_delta_override: self.point.delta.map(lsb_delta_for),
+        };
+        cfg
+    }
+
+    /// The GLB bank structure at the selected point.
+    pub fn glb_kind(&self) -> GlbKind {
+        let cfg = self.system_config();
+        cfg.glb.kind_for(&cfg.tech)
+    }
+
+    /// The fault-injection budget at the selected point (variant structure
+    /// with the record's BER budget applied).
+    pub fn ber_config(&self) -> BerConfig {
+        BerConfig::for_selection(self.variant(), self.point.ber)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("sweep", Json::Str(self.sweep.clone())),
+            ("objective", Json::Str(self.objective.token().to_string())),
+            (
+                "constraints",
+                Json::Arr(self.constraints.iter().map(|c| Json::Str(c.clone())).collect()),
+            ),
+            ("point", self.point.to_json()),
+            (
+                "metrics",
+                Json::Obj(
+                    self.metrics.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect(),
+                ),
+            ),
+            ("score", Json::Num(self.score)),
+            ("candidates", (self.candidates as u64).into()),
+            ("feasible", (self.feasible as u64).into()),
+            ("frontier", (self.frontier as u64).into()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let objective_token = j.req_str("objective").map_err(anyhow::Error::from)?;
+        let objective = Objective::from_token(objective_token)
+            .ok_or_else(|| anyhow::anyhow!("unknown objective {objective_token:?}"))?;
+        let constraints = match j.get("constraints").and_then(Json::as_arr) {
+            Some(cs) => cs
+                .iter()
+                .map(|c| {
+                    c.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| anyhow::anyhow!("constraints must be strings"))
+                })
+                .collect::<anyhow::Result<_>>()?,
+            None => Vec::new(),
+        };
+        let metrics = match j.get("metrics").and_then(Json::as_obj) {
+            Some(m) => m
+                .iter()
+                .map(|(k, v)| {
+                    v.as_f64()
+                        .map(|v| (k.clone(), v))
+                        .ok_or_else(|| anyhow::anyhow!("metric {k:?} must be a number"))
+                })
+                .collect::<anyhow::Result<_>>()?,
+            None => Vec::new(),
+        };
+        Ok(Self {
+            sweep: j.req_str("sweep").map_err(anyhow::Error::from)?.to_string(),
+            objective,
+            constraints,
+            point: DesignPoint::from_json(j.req("point").map_err(anyhow::Error::from)?)?,
+            metrics,
+            score: j
+                .req("score")
+                .map_err(anyhow::Error::from)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("score must be a number"))?,
+            candidates: j.req_u64("candidates").map_err(anyhow::Error::from)? as usize,
+            feasible: j.req_u64("feasible").map_err(anyhow::Error::from)? as usize,
+            frontier: j.req_u64("frontier").map_err(anyhow::Error::from)? as usize,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(text.trim()).map_err(anyhow::Error::from)?)
+    }
+
+    /// CSV schema: provenance columns + the point's axis columns + metrics.
+    pub fn csv_header(&self) -> String {
+        let mut cols = vec!["sweep".to_string(), "objective".to_string(), "score".to_string()];
+        cols.extend(self.point.columns().iter().map(|(k, _)| k.to_string()));
+        cols.extend(self.metrics.iter().map(|(k, _)| k.clone()));
+        cols.join(",")
+    }
+
+    pub fn csv_row(&self) -> String {
+        let mut cols = vec![
+            self.sweep.clone(),
+            self.objective.token().to_string(),
+            format!("{:.6e}", self.score),
+        ];
+        cols.extend(self.point.columns().into_iter().map(|(_, v)| v));
+        cols.extend(self.metrics.iter().map(|(_, v)| format!("{v:.6e}")));
+        cols.join(",")
+    }
+}
+
+/// Feasibility filter → Pareto frontier → scored winner.
+///
+/// The frontier is taken over every [`Objective`] whose metric the records
+/// carry; the winner is the frontier member with the best value of the
+/// requested objective (ties broken by record order, so selection is
+/// deterministic for a deterministic sweep).
+pub fn select(
+    sweep: &str,
+    results: &[SweepResult],
+    objective: Objective,
+    constraints: &[Constraint],
+) -> anyhow::Result<DesignSelection> {
+    if results.is_empty() {
+        anyhow::bail!("selection needs at least one candidate record");
+    }
+    if results.iter().all(|r| r.metric_opt(objective.metric()).is_none()) {
+        anyhow::bail!(
+            "sweep {sweep:?} carries no {:?} metric for objective {:?}",
+            objective.metric(),
+            objective.token()
+        );
+    }
+    let feasible = feasible_mask(results, constraints);
+    let n_feasible = feasible.iter().filter(|f| **f).count();
+    if n_feasible == 0 {
+        let described: Vec<String> = constraints.iter().map(Constraint::describe).collect();
+        anyhow::bail!(
+            "no feasible design point among {} candidates under {:?}",
+            results.len(),
+            described
+        );
+    }
+    let owned: Vec<SweepResult> = results
+        .iter()
+        .zip(&feasible)
+        .filter_map(|(r, ok)| ok.then(|| r.clone()))
+        .collect();
+    let frontier = pareto_mask(&owned, &Objective::all());
+    let n_frontier = frontier.iter().filter(|f| **f).count();
+    let winner = owned
+        .iter()
+        .zip(&frontier)
+        .filter(|(r, on)| **on && r.metric_opt(objective.metric()).is_some())
+        .min_by(|(a, _), (b, _)| {
+            let (va, vb) = (a.metric(objective.metric()), b.metric(objective.metric()));
+            if objective.lower_is_better() {
+                va.total_cmp(&vb)
+            } else {
+                vb.total_cmp(&va)
+            }
+        })
+        .map(|(r, _)| r)
+        .ok_or_else(|| anyhow::anyhow!("Pareto frontier carries no {:?} metric", objective.metric()))?;
+    Ok(DesignSelection {
+        sweep: sweep.to_string(),
+        objective,
+        constraints: constraints.iter().map(Constraint::describe).collect(),
+        point: winner.point.clone(),
+        metrics: winner.metrics.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        score: winner.metric(objective.metric()),
+        candidates: results.len(),
+        feasible: n_feasible,
+        frontier: n_frontier,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// The candidate grid (`stt-ai select`)
+// ---------------------------------------------------------------------------
+
+/// LSB-bank Δ implied by a GLB-bank Δ: the paper relaxes the split bank by
+/// 10 (27.5 → 17.5), floored at the Δ=12.5 LSB design point.
+pub fn lsb_delta_for(glb_delta: f64) -> f64 {
+    (glb_delta - 10.0).max(12.5)
+}
+
+/// Ares-style amplification of the catastrophic fault class: one flipped
+/// exponent/sign bit per ~10⁴ resident weights is modeled as losing the
+/// prediction — calibrated so the STT-AI Ultra budget (MSB 1e-8 / LSB 1e-5)
+/// lands at the paper's "<1 % normalized drop" while a uniformly relaxed
+/// 1e-5 budget collapses, which is exactly Fig. 21's contrast.
+const CATASTROPHIC_AMPLIFICATION: f64 = 1.0e4;
+
+fn find_model<'a>(zoo: &'a [Model], name: &str) -> &'a Model {
+    zoo.iter().find(|m| m.name == name).unwrap_or_else(|| panic!("unknown model {name:?}"))
+}
+
+/// The default candidate grid: the three GLB organizations × a Δ-scaling
+/// grid around the paper's design points × tight/relaxed robust-bank BER
+/// budgets, on the paper's serving workload (ResNet-50, batch 16, 12 MB).
+/// CLI `--sweep` overrides reshape any axis (`variant=...`, `delta=...`,
+/// `ber=...`, `model=...`, `batch=...`).
+pub fn spec_selection(zoo: &Zoo) -> SweepSpec {
+    let z = zoo.clone();
+    SweepSpec::new(
+        "selection",
+        vec![
+            Axis::Model(vec![find_model(zoo, "ResNet50").name.clone()]),
+            Axis::Variant(vec![GlbVariant::Sram, GlbVariant::SttAi, GlbVariant::SttAiUltra]),
+            Axis::Delta(vec![27.5, 22.5, 17.5]),
+            Axis::Ber(vec![1.0e-8, 1.0e-5]),
+        ],
+        move |p| selection_eval(&z, p),
+    )
+}
+
+/// Evaluate one candidate: composed accelerator cost (the Table III
+/// arithmetic), serving-workload buffer energy, end-to-end latency, the
+/// Ares-style accuracy estimate, and the retention-vs-occupancy pair the
+/// §V.C design rule constrains.
+fn selection_eval(zoo: &[Model], p: &DesignPoint) -> Vec<(&'static str, f64)> {
+    let m = find_model(zoo, p.model.as_deref().unwrap_or("ResNet50"));
+    let dt = p.dtype.unwrap_or(DType::Bf16);
+    let batch = p.batch.unwrap_or(16);
+    let glb = p.glb_mb.unwrap_or(12) * MB;
+    let a = match p.macs {
+        Some(side) => ArrayConfig::with_mac_array(side),
+        None => ArrayConfig::paper_42x42(),
+    };
+    let variant = p.variant.unwrap_or(GlbVariant::SttAiUltra);
+    let tech = p.tech.unwrap_or_default();
+    let t = tech.technology();
+    let delta = p.delta.unwrap_or_else(|| t.default_glb_delta());
+    let ber = p.ber.unwrap_or(1.0e-8);
+    let tech_cfg = TechConfig {
+        base: tech,
+        glb_delta_override: Some(delta),
+        lsb_delta_override: Some(lsb_delta_for(delta)),
+    };
+
+    // Composed accelerator (core + GLB variant + scratchpad), and the SRAM
+    // baseline of the same capacity for the headline saving.
+    let scratch = (variant != GlbVariant::Sram).then(Scratchpad::paper_bf16);
+    let sys = BufferSystem::new(variant.kind_for(&tech_cfg), glb, scratch);
+    let core = CoreCosts::paper_42x42();
+    let acc = AcceleratorSummary::compose(variant.label(), core, &sys);
+    let sram_glb = BufferSystem::new(GlbKind::baseline(), glb, None);
+    let baseline = AcceleratorSummary::compose("baseline", core, &sram_glb);
+
+    // Serving-workload buffer energy per inference batch.
+    let traffic = cache::traffic(m, &a, dt, batch, glb);
+    let mut buffer = EnergyLedger::default();
+    for l in &traffic.layers {
+        buffer.add(&sys.layer_energy(
+            l.glb_reads,
+            l.glb_writes,
+            l.partial_bytes,
+            l.partial_rounds,
+            l.dram_bytes,
+        ));
+    }
+
+    // End-to-end latency: compute walk + DRAM spill overhead. The paper's
+    // integration argument is that MRAM write pulses hide behind compute,
+    // so latency is variant-invariant at iso array/model — the latency and
+    // throughput objectives discriminate across model/batch/macs axes.
+    let dram = DramModel::ddr4_2933_dual();
+    let spill = DramOverheadRow::analyze(m, &a, &dram, dt, batch, glb);
+    let latency = RetentionAnalysis::new(&a, batch).inference_latency(m) + spill.extra_latency;
+
+    // Ares-style accuracy estimate from the analytical fault exposure of
+    // the variant's bank split at this BER budget — the *same*
+    // [`BerConfig::for_selection`] budget the serving engine will inject
+    // with if this candidate wins, so the iso-accuracy constraint and the
+    // served fault model cannot drift apart.
+    let kind = match dt {
+        DType::Bf16 => WordKind::Bf16,
+        DType::Int8 => WordKind::Int8,
+    };
+    let nonvolatile = t.is_nonvolatile();
+    let budget = BerConfig::for_selection(variant, Some(ber));
+    let split = if nonvolatile {
+        BankSplit { kind, msb_ber: budget.msb_ber, lsb_ber: budget.lsb_ber }
+    } else {
+        // A volatile GLB never flips bits, whatever the variant says.
+        BankSplit::uniform(kind, 0.0)
+    };
+    let exposure = FaultExposure::analyze(m, dt, &split);
+    let est_drop = (exposure.catastrophic_fraction * CATASTROPHIC_AMPLIFICATION
+        + exposure.mean_rel_perturbation)
+        .min(1.0);
+
+    // Worst-bank retention at the BER budget vs the workload's worst data
+    // occupancy (volatile GLBs hold data indefinitely while powered). The
+    // built Δ is derated to the hot/slow PT corner before the check — the
+    // inverse of the Eq. 17 guard band, so a candidate only passes if its
+    // *worst* die still covers the occupancy (§V.C's design rule; this is
+    // what makes the paper's Δ_GB = 27.5 the smallest feasible GLB bank).
+    let retention = if variant == GlbVariant::Sram || !nonvolatile {
+        f64::MAX
+    } else {
+        // guard_band is linear in Δ_scaled, so one probe inverts it.
+        let gb_per_scaled = t.guard_band(1.0).delta_guard_banded;
+        let derate = if gb_per_scaled > 0.0 { 1.0 / gb_per_scaled } else { 1.0 };
+        let glb_ret = t.retention_time(delta * derate, budget.msb_ber);
+        let ret = match variant {
+            GlbVariant::SttAiUltra => {
+                glb_ret.min(t.retention_time(lsb_delta_for(delta) * derate, budget.lsb_ber))
+            }
+            _ => glb_ret,
+        };
+        finite_or_max(ret)
+    };
+    // §V.C designs the GLB for the worst data occupancy across the whole
+    // served zoo, not just the sweep's traffic model — an accelerator that
+    // only covers ResNet-50 would lose data under VGG16. The per-model
+    // walks are memoized, so this is one retention pass per (array, batch).
+    let occupancy = zoo
+        .iter()
+        .map(|zm| cache::retention(zm, &a, batch).max_t_ret())
+        .fold(0.0, f64::max);
+
+    vec![
+        ("accel_area_mm2", acc.area_mm2),
+        ("accel_power_mw", acc.total_power_mw()),
+        ("buffer_energy_j", buffer.total()),
+        ("latency_s", latency),
+        ("throughput_rps", batch as f64 / latency),
+        ("est_accuracy", 1.0 - est_drop),
+        ("retention_at_ber_s", retention),
+        ("occupancy_s", occupancy),
+        ("area_saving_vs_sram", 1.0 - acc.area_mm2 / baseline.area_mm2),
+    ]
+}
+
+/// The paper's deployment objectives (area / energy / latency at the
+/// iso-accuracy floor with retention covering occupancy) evaluated over one
+/// set of candidate records — the `selection.csv` export rows.
+pub fn paper_selections(results: &[SweepResult]) -> anyhow::Result<Vec<DesignSelection>> {
+    let constraints = [Constraint::MinAccuracy(0.99), Constraint::RetentionCoversOccupancy];
+    [Objective::MinArea, Objective::MinEnergy, Objective::MinLatency]
+        .into_iter()
+        .map(|o| select("selection", results, o, &constraints))
+        .collect()
+}
+
+/// Axis overrides that pin a sweep to a selected point (`figures
+/// --from-selection`): every axis the selection's point names collapses to
+/// that single value; axes a given spec does not vary are ignored by
+/// [`crate::dse::engine::Runner::resolve`].
+pub fn selection_overrides(p: &DesignPoint) -> Vec<Axis> {
+    let mut over = Vec::new();
+    if let Some(m) = &p.model {
+        over.push(Axis::Model(vec![m.clone()]));
+    }
+    if let Some(d) = p.dtype {
+        over.push(Axis::Dtype(vec![d]));
+    }
+    if let Some(b) = p.batch {
+        over.push(Axis::Batch(vec![b]));
+    }
+    if let Some(g) = p.glb_mb {
+        over.push(Axis::GlbMb(vec![g]));
+    }
+    if let Some(m) = p.macs {
+        over.push(Axis::Macs(vec![m]));
+    }
+    if let Some(v) = p.variant {
+        over.push(Axis::Variant(vec![v]));
+    }
+    if let Some(t) = p.tech {
+        over.push(Axis::Tech(vec![t]));
+    }
+    if let Some(b) = p.ber {
+        over.push(Axis::Ber(vec![b]));
+    }
+    if let Some(d) = p.delta {
+        over.push(Axis::Delta(vec![d]));
+    }
+    over
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(sweep: &str, area: f64, energy: f64, acc: f64) -> SweepResult {
+        SweepResult {
+            sweep: sweep.to_string(),
+            point: DesignPoint { delta: Some(area), ..Default::default() },
+            metrics: vec![
+                ("accel_area_mm2", area),
+                ("buffer_energy_j", energy),
+                ("latency_s", 1.0),
+                ("throughput_rps", 16.0),
+                ("est_accuracy", acc),
+                ("retention_at_ber_s", 10.0),
+                ("occupancy_s", 1.0),
+            ],
+        }
+    }
+
+    #[test]
+    fn objective_tokens_round_trip() {
+        for o in Objective::all() {
+            assert_eq!(Objective::from_token(o.token()), Some(o));
+        }
+        assert_eq!(Objective::from_token("min-area"), Some(Objective::MinArea));
+        assert_eq!(Objective::from_token("nope"), None);
+    }
+
+    #[test]
+    fn pareto_keeps_non_dominated_only() {
+        let rs = vec![
+            rec("t", 10.0, 1.0, 1.0), // best energy
+            rec("t", 5.0, 2.0, 1.0),  // best area
+            rec("t", 12.0, 3.0, 1.0), // dominated by both
+        ];
+        let mask = pareto_mask(&rs, &[Objective::MinArea, Objective::MinEnergy]);
+        assert_eq!(mask, vec![true, true, false]);
+    }
+
+    #[test]
+    fn equal_records_do_not_dominate_each_other() {
+        let rs = vec![rec("t", 5.0, 2.0, 1.0), rec("t", 5.0, 2.0, 1.0)];
+        assert_eq!(pareto_mask(&rs, &[Objective::MinArea, Objective::MinEnergy]), vec![true, true]);
+    }
+
+    #[test]
+    fn constraints_gate_selection() {
+        let rs = vec![rec("t", 4.0, 2.0, 0.5), rec("t", 8.0, 2.0, 0.995)];
+        // Unconstrained: the small-area (low-accuracy) point wins.
+        let sel = select("t", &rs, Objective::MinArea, &[]).unwrap();
+        assert_eq!(sel.score, 4.0);
+        // Accuracy floor: the feasible point wins instead.
+        let sel =
+            select("t", &rs, Objective::MinArea, &[Constraint::MinAccuracy(0.99)]).unwrap();
+        assert_eq!(sel.score, 8.0);
+        assert_eq!(sel.feasible, 1);
+        assert_eq!(sel.candidates, 2);
+        // Infeasible everywhere: a clean error naming the constraint set.
+        let err = select("t", &rs, Objective::MinArea, &[Constraint::MinAccuracy(1.01)])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no feasible design point"), "{err}");
+        assert!(err.contains("est_accuracy>=1.01"), "{err}");
+    }
+
+    #[test]
+    fn missing_objective_metric_is_an_error() {
+        let rs = vec![SweepResult {
+            sweep: "t".into(),
+            point: DesignPoint::default(),
+            metrics: vec![("other", 1.0)],
+        }];
+        assert!(select("t", &rs, Objective::MinArea, &[]).is_err());
+        assert!(select("t", &[], Objective::MinArea, &[]).is_err());
+    }
+
+    #[test]
+    fn selection_grid_evaluates_and_papers_point_wins_area() {
+        let zoo = crate::dse::engine::shared_zoo();
+        let results = spec_selection(&zoo).run_serial();
+        assert_eq!(results.len(), 18, "3 variants x 3 deltas x 2 bers");
+        let sel = select(
+            "selection",
+            &results,
+            Objective::MinArea,
+            &[Constraint::MinAccuracy(0.99), Constraint::RetentionCoversOccupancy],
+        )
+        .unwrap();
+        assert_eq!(sel.variant(), GlbVariant::SttAiUltra, "{sel:?}");
+        // The unique feasible area-minimum is the paper's exact design point:
+        // Δ 27.5/17.5 split banks at the 1e-8/1e-5 BER budget. Lower-Δ
+        // candidates are cheaper but fail the retention-vs-occupancy rule at
+        // the hot/slow corner; relaxed-BER candidates fail iso-accuracy.
+        assert_eq!(sel.point.delta, Some(27.5), "{sel:?}");
+        assert_eq!(sel.point.ber, Some(1.0e-8), "{sel:?}");
+        let saving = sel.metric("area_saving_vs_sram").unwrap();
+        assert!((saving - 0.754).abs() < 0.03, "area saving {saving}");
+        assert!(sel.frontier >= 1 && sel.feasible >= sel.frontier);
+    }
+
+    #[test]
+    fn relaxed_uniform_ber_fails_the_accuracy_floor() {
+        let zoo = crate::dse::engine::shared_zoo();
+        let results = spec_selection(&zoo).run_serial();
+        let relaxed_mono = results
+            .iter()
+            .find(|r| {
+                r.point.variant == Some(GlbVariant::SttAi) && r.point.ber == Some(1.0e-5)
+            })
+            .unwrap();
+        assert!(relaxed_mono.metric("est_accuracy") < 0.99, "uniform 1e-5 must fail iso-accuracy");
+        assert!(!Constraint::MinAccuracy(0.99).satisfied(relaxed_mono));
+        // The paper's Ultra budget stays above the floor.
+        let ultra = results
+            .iter()
+            .find(|r| {
+                r.point.variant == Some(GlbVariant::SttAiUltra)
+                    && r.point.ber == Some(1.0e-8)
+                    && r.point.delta == Some(27.5)
+            })
+            .unwrap();
+        assert!(ultra.metric("est_accuracy") > 0.99);
+        assert!(Constraint::RetentionCoversOccupancy.satisfied(ultra));
+    }
+
+    #[test]
+    fn selection_record_round_trips_and_boots_config() {
+        let zoo = crate::dse::engine::shared_zoo();
+        let results = spec_selection(&zoo).run_serial();
+        let sel = paper_selections(&results).unwrap().remove(0);
+        let back = DesignSelection::from_json(&sel.to_json()).unwrap();
+        assert_eq!(back.point, sel.point);
+        assert_eq!(back.objective, sel.objective);
+        assert_eq!(back.score, sel.score);
+        assert_eq!(back.constraints, sel.constraints);
+        // The serving bridge reproduces the paper's Ultra configuration.
+        let cfg = back.system_config();
+        assert_eq!(cfg.glb, GlbVariant::SttAiUltra);
+        assert_eq!(cfg.tech.glb_delta(), 27.5);
+        assert_eq!(cfg.tech.lsb_delta(), 17.5);
+        let ber = back.ber_config();
+        assert_eq!(ber.msb_ber, 1.0e-8);
+        assert_eq!(ber.lsb_ber, 1.0e-5);
+        match back.glb_kind() {
+            GlbKind::Split { msb, lsb } => {
+                assert_eq!(msb.delta_guard_banded, 27.5);
+                assert_eq!(lsb.delta_guard_banded, 17.5);
+            }
+            other => panic!("expected split GLB, got {other:?}"),
+        }
+        // CSV stays rectangular.
+        assert_eq!(sel.csv_header().split(',').count(), sel.csv_row().split(',').count());
+    }
+
+    #[test]
+    fn selection_overrides_pin_swept_axes() {
+        let p = DesignPoint {
+            variant: Some(GlbVariant::SttAiUltra),
+            delta: Some(27.5),
+            ber: Some(1.0e-8),
+            ..Default::default()
+        };
+        let over = selection_overrides(&p);
+        assert_eq!(over.len(), 3);
+        let mut spec = spec_selection(&crate::dse::engine::shared_zoo());
+        for o in over {
+            spec.override_axis(o);
+        }
+        assert_eq!(spec.len(), 1, "selection pins the grid to one point");
+    }
+}

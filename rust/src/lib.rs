@@ -26,15 +26,19 @@
 //!   `SweepSpec` cross-products over model × dtype × batch × GLB ×
 //!   technology × Δ/BER × write-intensity axes, evaluated on the
 //!   [`util::pool`] work-stealing pool into serializable `SweepResult`
-//!   records), and [`dse::cache`], the cross-sweep memoization of the
-//!   per-layer traffic/retention model walks.
+//!   records), [`dse::cache`], the cross-sweep memoization of the
+//!   per-layer traffic/retention model walks, and [`dse::select`], the
+//!   objective/constraint selection layer (Pareto frontier, iso-accuracy
+//!   and retention-coverage constraints) that derives each deployment's
+//!   design point from the sweep records and hands it to the coordinator.
 //! * [`ber`] — bit-error-rate fault injection on bf16/int8 buffers with the
 //!   MSB/LSB two-bank split of the STT-AI Ultra design, plus magnitude
 //!   pruning (Fig. 21).
 //! * [`runtime`] — PJRT client wrapper: load AOT HLO-text artifacts, compile,
 //!   execute (Python is never on this path).
 //! * [`coordinator`] — the L3 serving loop: request queue, dynamic batcher,
-//!   inference engine, metrics.
+//!   router, inference engine, metrics; boots from either a paper config or
+//!   a sweep-selected design point ([`dse::select::DesignSelection`]).
 //! * [`report`] — figure/table renderers over the unified sweep records
 //!   (`report::legacy` keeps the frozen pre-refactor serial renderers as the
 //!   golden parity reference), plus CSV/JSON export.

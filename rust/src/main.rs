@@ -19,6 +19,7 @@ use stt_ai::coordinator::{self, Engine, EngineConfig};
 use stt_ai::dse::delta::paper_design_points;
 use stt_ai::dse::engine as dse_engine;
 use stt_ai::dse::engine::Runner;
+use stt_ai::dse::select::{self, Constraint, DesignSelection, Objective};
 use stt_ai::mram::{DesignTargets, MtjTech, ScalingSolver};
 use stt_ai::report;
 use stt_ai::util::cli::Args;
@@ -33,16 +34,24 @@ USAGE: stt-ai <COMMAND> [FLAGS]
 COMMANDS:
   figures      [--fig 10..19|tech] [--csv-dir DIR] [--parallel N]
                [--sweep axis=v1|v2,...] [--tech stt|sot|sram]
+               [--from-selection FILE]
                regenerate paper figures (+ cross-technology table)
   sweep        --axes axis=v1|v2,... [--parallel N] [--csv FILE] [--json FILE]
                [--tech stt|sot|sram]
                free cross-product DSE (axes: model, dtype, batch, glb_mb,
                macs, variant, tech, ber, delta, write_intensity, mc_samples)
+  select       [--objective area|energy|latency|throughput]
+               [--min-accuracy 0.99] [--max-area-mm2 X] [--max-power-mw X]
+               [--no-retention-check] [--config build.json]
+               [--sweep axis=v1|v2,...] [--parallel N]
+               [--out selection.json] [--csv selection.csv]
+               objective/constraint design-point selection over the
+               variant x delta x ber candidate grid (Pareto frontier)
   table3                               Table III composition + savings
   design       [--retention 3.0|3y] [--ber 1e-8] [--tech sakhare2020|wei2019]
   accuracy     [--artifacts DIR] [--prune 0.0] [--batch 16] [--limit N]
   serve        [--artifacts DIR] [--variant sram|stt_ai|stt_ai_ultra]
-               [--requests 256] [--batch 16]
+               [--from-selection FILE] [--requests 256] [--batch 16]
   montecarlo   [--samples 20000] [--seed N] [--parallel N]
                [--sweep axis=v1|v2,...] [--tech stt|wei2019]
                streaming PT Monte Carlo through the sweep engine
@@ -77,7 +86,9 @@ fn parse_tech(s: &str) -> anyhow::Result<TechBase> {
 }
 
 /// Build the sweep runner from the shared `--parallel` / `--sweep` / `--tech`
-/// flags (`--tech T` is shorthand for overriding the tech axis to one value).
+/// / `--from-selection` flags (`--tech T` is shorthand for overriding the
+/// tech axis to one value; a selection record pins every axis its winning
+/// point names, applied last so it wins over the shorthands).
 fn runner_from(args: &Args) -> anyhow::Result<Runner> {
     let parallel = args.get_usize("parallel", available_parallelism())?;
     let mut overrides = match args.get("sweep") {
@@ -86,6 +97,10 @@ fn runner_from(args: &Args) -> anyhow::Result<Runner> {
     };
     if let Some(t) = args.get("tech") {
         overrides.push(dse_engine::Axis::Tech(vec![parse_tech(t)?]));
+    }
+    if let Some(path) = args.get("from-selection") {
+        let sel = DesignSelection::load(Path::new(path))?;
+        overrides.extend(select::selection_overrides(&sel.point));
     }
     Ok(Runner::new(parallel).with_overrides(overrides))
 }
@@ -152,6 +167,111 @@ fn main() -> anyhow::Result<()> {
             }
             if let Some(path) = json {
                 report::export::export_json(&path, &results)?;
+                writeln!(out, "-- wrote {}", path.display())?;
+            }
+        }
+        "select" => {
+            // Objective + constraints come from a `[deployment]` config
+            // section (`--config build.json`) or from individual flags.
+            let (objective, constraints) = match args.get("config") {
+                Some(path) => {
+                    for f in
+                        ["objective", "min-accuracy", "max-area-mm2", "max-power-mw", "no-retention-check"]
+                    {
+                        if args.get(f).is_some() {
+                            anyhow::bail!(
+                                "--{f} conflicts with --config (the [deployment] section owns it)"
+                            );
+                        }
+                    }
+                    let dep = SystemConfig::load(Path::new(path))?.deployment;
+                    (dep.objective, dep.constraints())
+                }
+                None => {
+                    let objective_token = args.get_or("objective", "area").to_string();
+                    let objective = Objective::from_token(&objective_token).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown objective {objective_token:?} (area, energy, latency, throughput)"
+                        )
+                    })?;
+                    let mut constraints = Vec::new();
+                    if let Some(floor) =
+                        args.get("min-accuracy").map(|v| v.parse::<f64>()).transpose()?
+                    {
+                        constraints.push(Constraint::MinAccuracy(floor));
+                    }
+                    if !args.get_flag("no-retention-check") {
+                        constraints.push(Constraint::RetentionCoversOccupancy);
+                    }
+                    if let Some(cap) =
+                        args.get("max-area-mm2").map(|v| v.parse::<f64>()).transpose()?
+                    {
+                        constraints.push(Constraint::MaxAreaMm2(cap));
+                    }
+                    if let Some(cap) =
+                        args.get("max-power-mw").map(|v| v.parse::<f64>()).transpose()?
+                    {
+                        constraints.push(Constraint::MaxPowerMw(cap));
+                    }
+                    (objective, constraints)
+                }
+            };
+            let runner = runner_from(&args)?;
+            let out_json = args.get("out").map(PathBuf::from);
+            let csv = args.get("csv").map(PathBuf::from);
+            args.finish()?;
+
+            let zoo = dse_engine::shared_zoo();
+            let spec = runner.resolve(select::spec_selection(&zoo));
+            let results = spec.run(runner.pool());
+            let feasible = select::feasible_mask(&results, &constraints);
+            let sel = select::select("selection", &results, objective, &constraints)?;
+
+            writeln!(
+                out,
+                "== design-point selection: {} candidates, objective {} ({} workers) ==",
+                results.len(),
+                objective.token(),
+                runner.workers()
+            )?;
+            if let Some(first) = results.first() {
+                writeln!(out, "{}\tfeasible", first.csv_header().replace(',', "\t"))?;
+            }
+            for (r, ok) in results.iter().zip(&feasible) {
+                writeln!(
+                    out,
+                    "{}\t{}",
+                    r.csv_row().replace(',', "\t"),
+                    if *ok { "yes" } else { "no" }
+                )?;
+            }
+            writeln!(
+                out,
+                "-- constraints: {:?} | feasible {}/{} | Pareto frontier {}",
+                sel.constraints, sel.feasible, sel.candidates, sel.frontier
+            )?;
+            let mut picked = vec![format!("variant={}", sel.variant().label())];
+            picked.extend(sel.point.columns().into_iter().map(|(k, v)| format!("{k}={v}")));
+            writeln!(
+                out,
+                "-- winner: {} | {} = {:.6e}",
+                picked.join(" "),
+                objective.metric(),
+                sel.score
+            )?;
+            if let Some(saving) = sel.metric("area_saving_vs_sram") {
+                writeln!(
+                    out,
+                    "-- area saving vs SRAM baseline: {:.1}% (paper: 75.4% for STT-AI Ultra)",
+                    saving * 100.0
+                )?;
+            }
+            if let Some(path) = out_json {
+                sel.save(&path)?;
+                writeln!(out, "-- wrote {}", path.display())?;
+            }
+            if let Some(path) = csv {
+                report::export::write_selection_csv(&path, std::slice::from_ref(&sel))?;
                 writeln!(out, "-- wrote {}", path.display())?;
             }
         }
@@ -231,11 +351,31 @@ fn main() -> anyhow::Result<()> {
         }
         "serve" => {
             let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
-            let variant = parse_variant(args.get_or("variant", "stt_ai_ultra"))?;
             let requests = args.get_usize("requests", 256)?;
             let batch = args.get_usize("batch", 16)?;
+            // The engine boots either from an explicit variant or from a
+            // sweep-selected design point — never from both.
+            let config = match args.get("from-selection") {
+                Some(path) => {
+                    if args.get("variant").is_some() {
+                        anyhow::bail!("--variant conflicts with --from-selection");
+                    }
+                    let sel = DesignSelection::load(Path::new(path))?;
+                    writeln!(
+                        out,
+                        "booting from selection {:?}: objective {} -> {} ({} = {:.6e})",
+                        sel.sweep,
+                        sel.objective.token(),
+                        sel.variant().label(),
+                        sel.objective.metric(),
+                        sel.score
+                    )?;
+                    EngineConfig::from_selection(&sel)
+                }
+                None => EngineConfig::new(parse_variant(args.get_or("variant", "stt_ai_ultra"))?),
+            };
             args.finish()?;
-            let engine = Engine::load(&artifacts, EngineConfig::new(variant))?;
+            let engine = Engine::load(&artifacts, config)?;
             let summary = coordinator::serve::closed_loop(&engine, requests, batch)?;
             writeln!(out, "{summary}")?;
         }

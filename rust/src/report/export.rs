@@ -10,6 +10,7 @@ use std::io::Write;
 use std::path::Path;
 
 use crate::dse::engine::{paper_specs, shared_zoo, spec_techcmp, Runner, SweepResult};
+use crate::dse::select::{self, DesignSelection};
 use crate::util::json::Json;
 
 /// Stable file names for the paper sweeps (kept close to the figure list).
@@ -27,6 +28,7 @@ fn file_name(sweep: &str) -> String {
         "fig18" => "fig18_partial_ofmaps.csv".into(),
         "fig19" => "fig19_scratchpad_energy.csv".into(),
         "techcmp" => "techcmp_technologies.csv".into(),
+        "selection" => "selection_candidates.csv".into(),
         other => format!("{other}.csv"),
     }
 }
@@ -49,8 +51,23 @@ pub fn export_json(path: &Path, results: &[SweepResult]) -> std::io::Result<()> 
     writeln!(f, "{}", Json::Arr(results.iter().map(SweepResult::to_json).collect()))
 }
 
+/// Write selection records (the chosen design points with provenance) as a
+/// CSV — the `selection.csv` of `stt-ai figures --csv-dir` and `stt-ai
+/// select --csv`.
+pub fn write_selection_csv(path: &Path, selections: &[DesignSelection]) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    if let Some(first) = selections.first() {
+        writeln!(f, "{}", first.csv_header())?;
+    }
+    for s in selections {
+        writeln!(f, "{}", s.csv_row())?;
+    }
+    Ok(())
+}
+
 /// Export every figure's data series into `dir` (CSV per sweep + one JSON
-/// dump + Table III). Returns the list of files written.
+/// dump + Table III + the design-point selection records). Returns the list
+/// of files written.
 pub fn export_all(dir: &Path) -> std::io::Result<Vec<String>> {
     export_all_with(dir, &Runner::default())
 }
@@ -60,14 +77,28 @@ pub fn export_all_with(dir: &Path, runner: &Runner) -> std::io::Result<Vec<Strin
     let zoo = shared_zoo();
     let mut written = Vec::new();
     let mut all: Vec<SweepResult> = Vec::new();
-    // Paper sweeps plus the cross-technology comparison records.
-    for spec in paper_specs(&zoo).into_iter().chain([spec_techcmp(&zoo)]) {
+    // Paper sweeps plus the cross-technology comparison and the selection
+    // candidate grid.
+    for spec in paper_specs(&zoo)
+        .into_iter()
+        .chain([spec_techcmp(&zoo), select::spec_selection(&zoo)])
+    {
         let results = runner.run(spec);
         let name = file_name(&results[0].sweep);
         write_results_csv(&dir.join(&name), &results)?;
         written.push(name);
         all.extend(results);
     }
+
+    // The paper-objective selections over the candidate grid: one chosen
+    // design point per objective, with provenance.
+    let candidates: Vec<SweepResult> =
+        all.iter().filter(|r| r.sweep == "selection").cloned().collect();
+    let selections = select::paper_selections(&candidates)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
+    let sel_csv = "selection.csv";
+    write_selection_csv(&dir.join(sel_csv), &selections)?;
+    written.push(sel_csv.to_string());
 
     // Table III is a fixed three-point composition, not a sweep.
     let t3 = "table3_accelerators.csv";
@@ -78,8 +109,14 @@ pub fn export_all_with(dir: &Path, runner: &Runner) -> std::io::Result<Vec<Strin
     }
     written.push(t3.to_string());
 
+    // One JSON dump: every sweep record plus the selection records (their
+    // objects keep the same {sweep, point, metrics} core shape, extended
+    // with objective/constraint provenance).
     let js = "sweeps.json";
-    export_json(&dir.join(js), &all)?;
+    let mut records: Vec<Json> = all.iter().map(SweepResult::to_json).collect();
+    records.extend(selections.iter().map(DesignSelection::to_json));
+    let mut f = std::fs::File::create(dir.join(js))?;
+    writeln!(f, "{}", Json::Arr(records))?;
     written.push(js.to_string());
     Ok(written)
 }
@@ -92,9 +129,17 @@ mod tests {
     fn exports_all_figures() {
         let dir = std::env::temp_dir().join("stt_ai_csv_test");
         let files = export_all_with(&dir, &Runner::new(2)).unwrap();
-        // 11 sweep CSVs + techcmp + table3 + sweeps.json.
-        assert_eq!(files.len(), 14, "{files:?}");
+        // 11 sweep CSVs + techcmp + selection candidates + selection picks
+        // + table3 + sweeps.json.
+        assert_eq!(files.len(), 16, "{files:?}");
         assert!(files.contains(&"techcmp_technologies.csv".to_string()));
+        assert!(files.contains(&"selection_candidates.csv".to_string()));
+        assert!(files.contains(&"selection.csv".to_string()));
+        // The paper pick is in the selection records: area objective, Ultra.
+        let sel = std::fs::read_to_string(dir.join("selection.csv")).unwrap();
+        let area_row = sel.lines().nth(1).unwrap();
+        assert!(area_row.starts_with("selection,area,"), "{area_row}");
+        assert!(area_row.contains("stt_ai_ultra"), "{area_row}");
         for f in files.iter().filter(|f| f.ends_with(".csv")) {
             let text = std::fs::read_to_string(dir.join(f)).unwrap();
             let lines: Vec<&str> = text.lines().collect();
@@ -136,6 +181,16 @@ mod tests {
             assert!(rec.req_str("sweep").is_ok());
             assert!(rec.req("point").unwrap().as_obj().is_some());
             assert!(rec.req("metrics").unwrap().as_obj().is_some());
+        }
+        // The selection records ride along in the same dump, identified by
+        // their objective field, and parse back into DesignSelections.
+        let selections: Vec<&Json> =
+            arr.iter().filter(|r| r.get("objective").is_some()).collect();
+        assert_eq!(selections.len(), 3, "area/energy/latency paper objectives");
+        for s in selections {
+            let sel = DesignSelection::from_json(s).unwrap();
+            assert_eq!(sel.sweep, "selection");
+            assert!(sel.feasible > 0 && sel.feasible <= sel.candidates);
         }
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -101,3 +101,37 @@ fn montecarlo_sweep_through_runner_matches_direct_engine() {
     assert_eq!(stt_row.metric("energy_adjustable_j"), direct.energy_adjustable);
     assert_eq!(stt_row.metric("delta_std"), direct.delta_std);
 }
+
+#[test]
+fn non_stt_tech_is_a_clean_error_not_a_panic() {
+    use stt_ai::config::TechBase;
+    use stt_ai::report::figures;
+
+    // Regression: `montecarlo --tech sot|sram` used to reach the evaluator
+    // and abort with a raw worker panic. The CLI renderer must surface a
+    // clean error instead.
+    for tech in ["sot", "sram"] {
+        let runner =
+            Runner::new(1).with_overrides(engine::parse_axes(&format!("tech={tech}")).unwrap());
+        let mut buf = Vec::new();
+        let err = figures::montecarlo_with(&mut buf, &runner, 0xD1E5, 1_000)
+            .expect_err("non-STT tech must not render");
+        assert!(err.to_string().contains("STT base cases"), "{err}");
+    }
+    // The Result-returning constructor rejects the grid up front...
+    let err = engine::spec_montecarlo_for(
+        0xD1E5,
+        1_000,
+        ThreadPool::new(1),
+        vec![TechBase::Sakhare2020, TechBase::Sot],
+    )
+    .expect_err("SOT has no PT Monte-Carlo model yet")
+    .to_string();
+    assert!(err.contains("sot"), "{err}");
+    // ...while both STT base cases (and the default spec) still build.
+    for tech in [TechBase::Sakhare2020, TechBase::Wei2019] {
+        let spec =
+            engine::spec_montecarlo_for(0xD1E5, 1_000, ThreadPool::new(1), vec![tech]).unwrap();
+        assert_eq!(spec.len(), 1);
+    }
+}
