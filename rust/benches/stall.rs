@@ -1,0 +1,58 @@
+//! Write-bandwidth stall model hot path (EXPERIMENTS.md §Latency-model):
+//! the per-candidate stalled-latency walk (the selection grid's inner
+//! loop) and the full `--fig stall` comparison sweep on the runner pool.
+//!
+//! Flags (mixed with harness flags, all optional): `--smoke` reduced
+//! budget for CI, `--parallel N` worker count, `--bench-json PATH`
+//! machine-readable trajectory output.
+
+use stt_ai::accel::{ArrayConfig, RetentionAnalysis};
+use stt_ai::dse::{cache, engine};
+use stt_ai::memsys::{GlbBandwidth, GlbKind, Scratchpad};
+use stt_ai::models::{self, DType};
+use stt_ai::util::bench::{self, Bencher, Ledger};
+use stt_ai::util::units::MB;
+
+fn main() {
+    let smoke = bench::smoke_from_args();
+    let b = if smoke {
+        Bencher { sample_target_s: 0.02, samples: 3 }
+    } else {
+        Bencher::new()
+    };
+    let mut ledger = Ledger::new();
+
+    let zoo = engine::shared_zoo();
+    let m = models::by_name("ResNet50").unwrap();
+    let a = ArrayConfig::paper_42x42();
+    let traffic = cache::traffic(&m, &a, DType::Bf16, 16, 12 * MB);
+    let bw = GlbBandwidth::of(&GlbKind::stt_ai_ultra(), 1.0e-8, 1.0e-5);
+    let sp = Scratchpad::paper_bf16();
+    let ra = RetentionAnalysis::new(&a, 16);
+
+    // Per-candidate stalled walk over the memoized traffic (what every
+    // selection-grid candidate pays on top of the cached walks).
+    let label = "stall/stalled_walk_resnet50_b16";
+    let r = b.run(label, || ra.inference_latency_stalled(&m, &traffic, &bw, Some(&sp)));
+    ledger.add_throughput(label, &r, traffic.layers.len() as f64, "layers");
+
+    // The full `--fig stall` comparison sweep (12 points), warm cache.
+    let runner = engine::Runner::from_args();
+    let spec = engine::spec_stall(&zoo);
+    let label = format!("stall/spec_stall_x{}", runner.workers());
+    let points = spec.len() as f64;
+    let r = b.run(&label, || runner.run(spec.clone()));
+    ledger.add_throughput(&label, &r, points, "points");
+
+    // Shape sanity inside the bench binary: the comparison must surface a
+    // real stall somewhere (the 84×84 MRAM corner) and none for SRAM.
+    let rows = runner.run(spec);
+    let worst = rows.iter().map(|x| x.metric("stall_s")).fold(0.0_f64, f64::max);
+    println!("    -> max stall across the comparison grid: {:.3} ms", worst * 1e3);
+    assert!(worst > 0.0, "the stall comparison must surface a nonzero stall");
+
+    if let Some(path) = bench::bench_json_from_args() {
+        ledger.write_json(&path).expect("write --bench-json");
+        println!("-- wrote {}", path.display());
+    }
+}

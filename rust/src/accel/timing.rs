@@ -10,6 +10,9 @@
 
 
 use super::core::ArrayConfig;
+use super::traffic::ModelTraffic;
+use crate::memsys::bandwidth::{layer_stall, GlbBandwidth};
+use crate::memsys::Scratchpad;
 use crate::models::{ConvLayer, FcLayer, Layer, Model};
 use crate::util::ceil_div;
 
@@ -182,6 +185,77 @@ impl<'a> RetentionAnalysis<'a> {
         }
         t
     }
+
+    /// End-to-end inference time under a finite GLB write/read bandwidth:
+    /// the Eq. 5/8 compute walk plus, per conv layer, the buffer service
+    /// time the layer's generation time cannot hide
+    /// ([`crate::memsys::bandwidth::layer_stall`]). FC layers stream their
+    /// weights from the NVM (§V.A scope) and pool stages are compute-only,
+    /// so neither stalls on the GLB. With [`GlbBandwidth::unconstrained`]
+    /// and no scratchpad this reproduces [`Self::inference_latency`]
+    /// exactly (zero-stall parity). `traffic` must be the walk of the same
+    /// model on the same array/batch.
+    pub fn inference_latency_stalled(
+        &self,
+        m: &Model,
+        traffic: &ModelTraffic,
+        glb: &GlbBandwidth,
+        scratchpad: Option<&Scratchpad>,
+    ) -> StalledLatency {
+        let mut compute = 0.0;
+        let mut stall = 0.0;
+        let mut conv = traffic.layers.iter();
+        for l in &m.layers {
+            match l {
+                Layer::Pool(_) => compute += self.array.t_pool_relu,
+                _ => {
+                    if let Some(t) = layer_gen_time(l, self.array, self.batch) {
+                        compute += t.t_gen;
+                        if t.is_conv {
+                            let lt = conv.next().expect("traffic walk covers every conv layer");
+                            debug_assert_eq!(lt.name, t.name, "traffic/timing walks must align");
+                            stall += layer_stall(
+                                glb,
+                                scratchpad,
+                                lt.glb_reads,
+                                lt.glb_writes,
+                                lt.partial_bytes,
+                                lt.partial_rounds,
+                                t.t_gen,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        StalledLatency { compute_s: compute, stall_s: stall }
+    }
+}
+
+/// End-to-end latency decomposition under the write-bandwidth stall model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StalledLatency {
+    /// Pure compute walk — identical arithmetic to
+    /// [`RetentionAnalysis::inference_latency`].
+    pub compute_s: f64,
+    /// Σ per-layer buffer service the compute walk could not hide.
+    pub stall_s: f64,
+}
+
+impl StalledLatency {
+    /// Total inference latency (compute + stall).
+    pub fn total(&self) -> f64 {
+        self.compute_s + self.stall_s
+    }
+
+    /// Stall share of the total latency (0 when everything hides).
+    pub fn stall_fraction(&self) -> f64 {
+        if self.total() > 0.0 {
+            self.stall_s / self.total()
+        } else {
+            0.0
+        }
+    }
 }
 
 #[cfg(test)]
@@ -323,6 +397,39 @@ mod tests {
             m.conv_layers().find(|c| c.name == "conv5").unwrap(), &a, 1);
         let t2 = fc_gen_time(m.fc_layers().next().unwrap(), &a, 1);
         assert!((pair.t_ret - (t1 + a.t_pool_relu + t2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stalled_latency_parity_and_write_sensitivity() {
+        use crate::memsys::{GlbBandwidth, GlbKind, Scratchpad};
+        use crate::util::units::MB;
+        let a = paper_array();
+        let m = models::by_name("ResNet50").unwrap();
+        let ra = RetentionAnalysis::new(&a, 16);
+        let traffic = ModelTraffic::analyze(&m, &a, DType::Bf16, 16, 12 * MB);
+
+        // Zero-stall parity: infinite bandwidth reproduces the compute walk
+        // exactly, bit for bit.
+        let free = ra.inference_latency_stalled(&m, &traffic, &GlbBandwidth::unconstrained(), None);
+        assert_eq!(free.stall_s, 0.0);
+        assert_eq!(free.total(), ra.inference_latency(&m));
+        assert_eq!(free.stall_fraction(), 0.0);
+
+        // A finite MRAM GLB can only add latency, never remove it.
+        let bw = GlbBandwidth::of(&GlbKind::stt_ai(), 1.0e-8, 1.0e-5);
+        let sp = Scratchpad::paper_bf16();
+        let stalled = ra.inference_latency_stalled(&m, &traffic, &bw, Some(&sp));
+        assert_eq!(stalled.compute_s, free.compute_s, "compute walk is bandwidth-invariant");
+        assert!(stalled.stall_s >= 0.0 && stalled.total() >= free.total());
+
+        // Halving the write bandwidth never shortens the stall (latency is
+        // non-decreasing in the write pulse).
+        let slower = GlbBandwidth {
+            write_bytes_per_s: bw.write_bytes_per_s / 2.0,
+            read_bytes_per_s: bw.read_bytes_per_s,
+        };
+        let worse = ra.inference_latency_stalled(&m, &traffic, &slower, Some(&sp));
+        assert!(worse.stall_s >= stalled.stall_s);
     }
 
     #[test]

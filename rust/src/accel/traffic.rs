@@ -29,6 +29,21 @@ pub struct LayerTraffic {
     pub dram_bytes: u64,
 }
 
+impl LayerTraffic {
+    /// This layer's traffic with the write side scaled by a training-style
+    /// multiplier (the `write_intensity` sweep axis, arXiv:2308.02024
+    /// scenario): final-ofmap writes and partial-accumulation rounds grow
+    /// by `wi`; reads and DRAM spill are unchanged. `wi = 1` reproduces the
+    /// layer verbatim (bit-identical counts).
+    pub fn with_write_intensity(&self, wi: f64) -> LayerTraffic {
+        LayerTraffic {
+            glb_writes: (self.glb_writes as f64 * wi).round() as u64,
+            partial_rounds: (self.partial_rounds as f64 * wi).round() as u64,
+            ..self.clone()
+        }
+    }
+}
+
 /// Traffic analysis of a whole model.
 #[derive(Debug, Clone)]
 pub struct ModelTraffic {
@@ -66,6 +81,15 @@ impl ModelTraffic {
     /// Max partial-ofmap bytes over the model (Fig. 18's metric).
     pub fn max_partial_bytes(&self) -> u64 {
         self.layers.iter().map(|l| l.partial_bytes).max().unwrap_or(0)
+    }
+
+    /// The whole walk with every layer's write side scaled by `wi`
+    /// ([`LayerTraffic::with_write_intensity`]).
+    pub fn with_write_intensity(&self, wi: f64) -> ModelTraffic {
+        ModelTraffic {
+            model: self.model.clone(),
+            layers: self.layers.iter().map(|l| l.with_write_intensity(wi)).collect(),
+        }
     }
 }
 
@@ -164,6 +188,23 @@ mod tests {
         };
         let t = layer_traffic(&c, &a, DType::Bf16, 1, 12 * MB);
         assert_eq!(t.partial_rounds, 0);
+    }
+
+    #[test]
+    fn write_intensity_scales_the_write_side_only() {
+        let (a, m) = setup();
+        let t = ModelTraffic::analyze(&m, &a, DType::Bf16, 4, 12 * MB);
+        let l = &t.layers[1];
+        // Unit intensity is the identity, bit for bit.
+        let same = l.with_write_intensity(1.0);
+        assert_eq!((same.glb_writes, same.partial_rounds), (l.glb_writes, l.partial_rounds));
+        // Training-style intensity scales writes/rounds, nothing else.
+        let train = l.with_write_intensity(2.5);
+        assert_eq!(train.glb_writes, (l.glb_writes as f64 * 2.5).round() as u64);
+        assert_eq!(train.partial_rounds, (l.partial_rounds as f64 * 2.5).round() as u64);
+        assert_eq!(train.glb_reads, l.glb_reads);
+        assert_eq!(train.dram_bytes, l.dram_bytes);
+        assert_eq!(train.partial_bytes, l.partial_bytes);
     }
 
     #[test]

@@ -187,11 +187,17 @@ pub struct DeploymentConfig {
     pub max_area_mm2: Option<f64>,
     /// Optional accelerator total-power budget (mW).
     pub max_power_mw: Option<f64>,
+    /// Optional GLB-capacity grid (MiB) for the selection sweep — reshapes
+    /// the `glb_mb` axis of the candidate grid when set.
+    pub glb_mb: Option<Vec<u64>>,
+    /// Optional MAC-array-side grid for the selection sweep — reshapes the
+    /// `macs` axis of the candidate grid when set.
+    pub macs: Option<Vec<u64>>,
 }
 
 impl Default for DeploymentConfig {
     /// The paper's deployment: minimum area at "<1 % normalized drop" with
-    /// retention covering occupancy.
+    /// retention covering occupancy, on the default candidate grid.
     fn default() -> Self {
         Self {
             objective: crate::dse::select::Objective::MinArea,
@@ -199,6 +205,8 @@ impl Default for DeploymentConfig {
             retention_covers_occupancy: true,
             max_area_mm2: None,
             max_power_mw: None,
+            glb_mb: None,
+            macs: None,
         }
     }
 }
@@ -223,6 +231,20 @@ impl DeploymentConfig {
         cs
     }
 
+    /// Axis overrides implied by the grid knobs: a set `glb_mb`/`macs` list
+    /// reshapes the matching axis of the selection candidate grid (same
+    /// mechanism as a CLI `--sweep glb_mb=...` override).
+    pub fn grid_overrides(&self) -> Vec<crate::dse::engine::Axis> {
+        let mut over = Vec::new();
+        if let Some(g) = &self.glb_mb {
+            over.push(crate::dse::engine::Axis::GlbMb(g.clone()));
+        }
+        if let Some(m) = &self.macs {
+            over.push(crate::dse::engine::Axis::Macs(m.clone()));
+        }
+        over
+    }
+
     fn to_json(&self) -> Json {
         let mut fields =
             vec![("objective", Json::Str(self.objective.token().to_string()))];
@@ -235,6 +257,12 @@ impl DeploymentConfig {
         }
         if let Some(c) = self.max_power_mw {
             fields.push(("max_power_mw", Json::Num(c)));
+        }
+        if let Some(g) = &self.glb_mb {
+            fields.push(("glb_mb", Json::Arr(g.iter().map(|v| (*v).into()).collect())));
+        }
+        if let Some(m) = &self.macs {
+            fields.push(("macs", Json::Arr(m.iter().map(|v| (*v).into()).collect())));
         }
         Json::obj(fields)
     }
@@ -261,8 +289,36 @@ impl DeploymentConfig {
             Some(v) => Some(v.as_f64().context("max_power_mw")?),
             None => None,
         };
+        cfg.glb_mb = match j.get("glb_mb") {
+            Some(v) => Some(parse_u64_grid(v, "glb_mb")?),
+            None => None,
+        };
+        cfg.macs = match j.get("macs") {
+            Some(v) => Some(parse_u64_grid(v, "macs")?),
+            None => None,
+        };
         Ok(cfg)
     }
+}
+
+/// Parse a non-empty JSON array of positive integers (the deployment grid
+/// knobs).
+fn parse_u64_grid(v: &Json, what: &str) -> crate::Result<Vec<u64>> {
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{what} must be an array of integers"))?;
+    let grid: Vec<u64> = arr
+        .iter()
+        .map(|x| {
+            x.as_u64()
+                .filter(|n| *n > 0)
+                .ok_or_else(|| anyhow::anyhow!("{what} entries must be positive integers"))
+        })
+        .collect::<crate::Result<_>>()?;
+    if grid.is_empty() {
+        anyhow::bail!("{what} grid must not be empty");
+    }
+    Ok(grid)
 }
 
 /// Serving-side knobs for the coordinator.
@@ -643,6 +699,8 @@ mod tests {
             retention_covers_occupancy: true,
             max_area_mm2: Some(6.0),
             max_power_mw: None,
+            glb_mb: Some(vec![12, 24]),
+            macs: Some(vec![42]),
         };
         let back =
             SystemConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
@@ -655,6 +713,18 @@ mod tests {
                 Constraint::MaxAreaMm2(6.0)
             ]
         );
+        // Grid knobs surface as axis overrides for the selection sweep.
+        let over = back.deployment.grid_overrides();
+        assert_eq!(over.len(), 2);
+        assert_eq!(over[0], crate::dse::engine::Axis::GlbMb(vec![12, 24]));
+        assert_eq!(over[1], crate::dse::engine::Axis::Macs(vec![42]));
+        // Malformed grids fail loudly.
+        let bad = r#"{"name":"x","glb":"sram","glb_bytes":1,"scratchpad_bytes":0,
+                      "deployment":{"objective":"area","glb_mb":[0]}}"#;
+        assert!(SystemConfig::from_json(&Json::parse(bad).unwrap()).is_err());
+        let bad = r#"{"name":"x","glb":"sram","glb_bytes":1,"scratchpad_bytes":0,
+                      "deployment":{"objective":"area","macs":[]}}"#;
+        assert!(SystemConfig::from_json(&Json::parse(bad).unwrap()).is_err());
         // A config without the section falls back to the paper deployment.
         let legacy = r#"{"name":"x","glb":"stt_ai","glb_bytes":1048576,"scratchpad_bytes":0}"#;
         let cfg = SystemConfig::from_json(&Json::parse(legacy).unwrap()).unwrap();

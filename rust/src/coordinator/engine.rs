@@ -208,6 +208,7 @@ mod tests {
             sweep: "selection".into(),
             objective: Objective::MinArea,
             constraints: vec![],
+            latency_model: crate::dse::select::LATENCY_MODEL.into(),
             point: DesignPoint {
                 variant: Some(GlbVariant::SttAi),
                 ber: Some(1e-6),

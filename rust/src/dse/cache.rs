@@ -73,6 +73,7 @@ impl ModelKey {
 
 type TrafficKey = (ModelKey, ArrayKey, u64, u64, u64); // (dtype bytes, batch, glb)
 type RetentionKey = (ModelKey, ArrayKey, u64); // (batch)
+type OccupancyKey = (u64, ArrayKey, u64); // (zoo fingerprint fold, array, batch)
 type McKey = (TechnologyId, u64, u64, u64, u64); // (targets, f64 fields by bit pattern)
 type McRunKey = (McKey, u64, u64, u64); // (delta_gb bits, seed, n)
 
@@ -86,6 +87,11 @@ fn traffic_map() -> &'static Mutex<HashMap<TrafficKey, Arc<ModelTraffic>>> {
 
 fn retention_map() -> &'static Mutex<HashMap<RetentionKey, Arc<ModelRetention>>> {
     static M: OnceLock<Mutex<HashMap<RetentionKey, Arc<ModelRetention>>>> = OnceLock::new();
+    M.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn occupancy_map() -> &'static Mutex<HashMap<OccupancyKey, f64>> {
+    static M: OnceLock<Mutex<HashMap<OccupancyKey, f64>>> = OnceLock::new();
     M.get_or_init(|| Mutex::new(HashMap::new()))
 }
 
@@ -140,6 +146,23 @@ pub fn retention(m: &Model, a: &ArrayConfig, batch: u64) -> Arc<ModelRetention> 
     MISSES.fetch_add(1, Ordering::Relaxed);
     let v = Arc::new(RetentionAnalysis::new(a, batch).analyze(m));
     retention_map().lock().unwrap().entry(key).or_insert(v).clone()
+}
+
+/// Memoized zoo-wide worst data-occupancy time (§V.C): the max over every
+/// model's retention walk at (array, batch) — the fold the selection grid
+/// re-derives for every candidate sharing an array. Keyed by an
+/// order-sensitive fold of the zoo's model fingerprints, so ad-hoc test
+/// zoos never alias the shared zoo.
+pub fn zoo_occupancy(zoo: &[Model], a: &ArrayConfig, batch: u64) -> f64 {
+    let fp = zoo.iter().fold(zoo.len() as u64, |acc, m| acc.rotate_left(7) ^ m.fingerprint());
+    let key: OccupancyKey = (fp, ArrayKey::of(a), batch);
+    if let Some(hit) = occupancy_map().lock().unwrap().get(&key) {
+        HITS.fetch_add(1, Ordering::Relaxed);
+        return *hit;
+    }
+    MISSES.fetch_add(1, Ordering::Relaxed);
+    let v = zoo.iter().map(|m| retention(m, a, batch).max_t_ret()).fold(0.0, f64::max);
+    *occupancy_map().lock().unwrap().entry(key).or_insert(v)
 }
 
 /// Memoized [`MonteCarlo::for_technology`]: the Δ-scaling solve, guard-band
@@ -200,6 +223,7 @@ pub fn stats() -> (u64, u64) {
 pub fn clear() {
     traffic_map().lock().unwrap().clear();
     retention_map().lock().unwrap().clear();
+    occupancy_map().lock().unwrap().clear();
     mc_map().lock().unwrap().clear();
     mc_run_map().lock().unwrap().clear();
     HITS.store(0, Ordering::Relaxed);
@@ -251,6 +275,26 @@ mod tests {
         let t1 = traffic(&m, &a, DType::Bf16, 1, 12 * MB);
         let t8 = traffic(&m, &a, DType::Bf16, 8, 12 * MB);
         assert!(t8.total_glb_reads() > t1.total_glb_reads());
+    }
+
+    #[test]
+    fn zoo_occupancy_matches_the_direct_fold_and_hits() {
+        let zoo = models::zoo();
+        let a = ArrayConfig::paper_42x42();
+        let direct = zoo
+            .iter()
+            .map(|m| RetentionAnalysis::new(&a, 16).analyze(m).max_t_ret())
+            .fold(0.0, f64::max);
+        let cached = zoo_occupancy(&zoo, &a, 16);
+        assert_eq!(cached, direct);
+        let (h0, _) = stats();
+        assert_eq!(zoo_occupancy(&zoo, &a, 16), cached);
+        let (h1, _) = stats();
+        assert!(h1 > h0, "second fold must be a hit");
+        // A different zoo slice does not alias the full fold.
+        let sub = &zoo[..3];
+        let sub_occ = zoo_occupancy(sub, &a, 16);
+        assert!(sub_occ <= cached);
     }
 
     #[test]

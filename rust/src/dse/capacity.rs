@@ -65,14 +65,24 @@ impl DramOverheadRow {
     ) -> Self {
         let t = super::cache::traffic(m, a, dt, batch, glb_bytes);
         let spill = t.total_dram_bytes();
+        // A zero-spill row is uniformly zero by construction, not by
+        // accident of the DRAM model's internals: the invariant is pinned
+        // here (and by `zero_spill_row_is_uniformly_zero`) so neither the
+        // burst latency nor any energy term can ever leak into a row that
+        // moved no bytes, whatever the transfer formulas grow into.
+        let (extra_latency, extra_energy) = if spill == 0 {
+            (0.0, 0.0)
+        } else {
+            (dram.transfer_latency(spill), dram.transfer_energy(spill))
+        };
         Self {
             model: m.name.clone(),
             dtype_bytes: dt.bytes(),
             batch,
             glb_bytes,
             spill_bytes: spill,
-            extra_latency: if spill == 0 { 0.0 } else { dram.transfer_latency(spill) },
-            extra_energy: dram.transfer_energy(spill),
+            extra_latency,
+            extra_energy,
         }
     }
 }
@@ -159,6 +169,22 @@ mod tests {
         assert!(worst_int8 < 8e-3, "worst int8 spill latency {worst_int8}");
         assert!(worst_bf16 < 15e-3, "worst bf16 spill latency {worst_bf16}");
         assert!(worst_bf16 > worst_int8);
+    }
+
+    #[test]
+    fn zero_spill_row_is_uniformly_zero() {
+        // ResNet-50 int8 batch 8 fits 12 MB (see fig12_no_spill test): the
+        // overhead row must charge nothing at all — latency AND energy.
+        let a = ArrayConfig::paper_42x42();
+        let d = DramModel::ddr4_2933_dual();
+        let m = models::by_name("ResNet50").unwrap();
+        let r = DramOverheadRow::analyze(&m, &a, &d, DType::Int8, 8, 12 * MB);
+        assert_eq!(r.spill_bytes, 0);
+        assert_eq!(r.extra_latency, 0.0);
+        assert_eq!(r.extra_energy, 0.0);
+        // A spilling row charges both.
+        let r = DramOverheadRow::analyze(&m, &a, &d, DType::Bf16, 16, 2 * MB);
+        assert!(r.spill_bytes > 0 && r.extra_latency > 0.0 && r.extra_energy > 0.0);
     }
 
     #[test]

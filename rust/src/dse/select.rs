@@ -16,9 +16,9 @@
 //!   [`DesignPoint`] plus its provenance (sweep name, objective,
 //!   constraint set, metrics, candidate/feasible/frontier counts);
 //! * [`spec_selection`] — the candidate grid (GLB variant × Δ × BER budget
-//!   on the paper's serving workload), evaluated like any other sweep on
-//!   the [`crate::dse::engine::Runner`] pool and memoized through
-//!   [`crate::dse::cache`];
+//!   × GLB capacity × MAC array on the paper's serving workload), evaluated
+//!   like any other sweep on the [`crate::dse::engine::Runner`] pool and
+//!   memoized through [`crate::dse::cache`];
 //! * the serving bridge — [`DesignSelection::system_config`],
 //!   [`DesignSelection::ber_config`] and
 //!   [`DesignSelection::glb_kind`] let `coordinator::Engine`/`serve` boot
@@ -38,8 +38,8 @@ use crate::ber::{BankSplit, FaultExposure, WordKind};
 use crate::config::{BerConfig, DTypeConfig, GlbVariant, SystemConfig, TechConfig};
 use crate::dse::cache;
 use crate::dse::capacity::DramOverheadRow;
-use crate::dse::engine::{Axis, DesignPoint, SweepResult, SweepSpec, Zoo};
-use crate::memsys::{BufferSystem, DramModel, EnergyLedger, GlbKind, Scratchpad};
+use crate::dse::engine::{variant_stall_context, Axis, DesignPoint, SweepResult, SweepSpec, Zoo};
+use crate::memsys::{BufferSystem, DramModel, EnergyLedger, GlbKind};
 use crate::models::{DType, Model};
 use crate::mram::technology::finite_or_max;
 use crate::report::table3::{AcceleratorSummary, CoreCosts};
@@ -198,6 +198,18 @@ pub fn pareto_mask(results: &[SweepResult], objectives: &[Objective]) -> Vec<boo
         .collect()
 }
 
+/// Version tag of the latency model behind `latency_s`/`throughput_rps` in
+/// the selection records. Bumped when the scoring physics changes so a
+/// pinned golden record carries its own provenance: `write-bw-stall-v1` is
+/// the per-layer write-bandwidth stall model
+/// ([`crate::memsys::bandwidth`]); records predating the tag were scored by
+/// the variant-invariant pure compute walk (`compute-walk-v0`).
+pub const LATENCY_MODEL: &str = "write-bw-stall-v1";
+
+/// The latency-model tag assumed for records that predate [`LATENCY_MODEL`]
+/// provenance.
+pub const LATENCY_MODEL_LEGACY: &str = "compute-walk-v0";
+
 /// The outcome of a [`select`] run: the winning design point plus the full
 /// provenance needed to rebuild (and audit) the serving configuration.
 #[derive(Debug, Clone)]
@@ -207,6 +219,9 @@ pub struct DesignSelection {
     pub objective: Objective,
     /// Stable description of the applied constraint set.
     pub constraints: Vec<String>,
+    /// Version of the latency model that scored the candidates (see
+    /// [`LATENCY_MODEL`]).
+    pub latency_model: String,
     /// The winning coordinate.
     pub point: DesignPoint,
     /// The winner's full metric record.
@@ -283,6 +298,7 @@ impl DesignSelection {
                 "constraints",
                 Json::Arr(self.constraints.iter().map(|c| Json::Str(c.clone())).collect()),
             ),
+            ("latency_model", Json::Str(self.latency_model.clone())),
             ("point", self.point.to_json()),
             (
                 "metrics",
@@ -327,6 +343,13 @@ impl DesignSelection {
             sweep: j.req_str("sweep").map_err(anyhow::Error::from)?.to_string(),
             objective,
             constraints,
+            // Records written before the stall model carry no tag: they were
+            // scored by the pure compute walk.
+            latency_model: j
+                .get("latency_model")
+                .and_then(Json::as_str)
+                .unwrap_or(LATENCY_MODEL_LEGACY)
+                .to_string(),
             point: DesignPoint::from_json(j.req("point").map_err(anyhow::Error::from)?)?,
             metrics,
             score: j
@@ -340,19 +363,39 @@ impl DesignSelection {
         })
     }
 
+    /// Check the record's point against the current zoo before it drives a
+    /// sweep or boots an engine: `--from-selection` files carry arbitrary
+    /// model strings, and an unknown one must surface as a clean CLI error
+    /// instead of a worker panic deep in the sweep pool.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if let Some(name) = &self.point.model {
+            resolve_model(&crate::dse::engine::shared_zoo(), name)?;
+        }
+        Ok(())
+    }
+
     pub fn save(&self, path: &Path) -> crate::Result<()> {
         std::fs::write(path, format!("{}\n", self.to_json()))?;
         Ok(())
     }
 
+    /// Load and [`Self::validate`] a saved record (`select --out` files;
+    /// the `--from-selection` boot path).
     pub fn load(path: &Path) -> crate::Result<Self> {
         let text = std::fs::read_to_string(path)?;
-        Self::from_json(&Json::parse(text.trim()).map_err(anyhow::Error::from)?)
+        let sel = Self::from_json(&Json::parse(text.trim()).map_err(anyhow::Error::from)?)?;
+        sel.validate()?;
+        Ok(sel)
     }
 
     /// CSV schema: provenance columns + the point's axis columns + metrics.
     pub fn csv_header(&self) -> String {
-        let mut cols = vec!["sweep".to_string(), "objective".to_string(), "score".to_string()];
+        let mut cols = vec![
+            "sweep".to_string(),
+            "objective".to_string(),
+            "score".to_string(),
+            "latency_model".to_string(),
+        ];
         cols.extend(self.point.columns().iter().map(|(k, _)| k.to_string()));
         cols.extend(self.metrics.iter().map(|(k, _)| k.clone()));
         cols.join(",")
@@ -363,6 +406,7 @@ impl DesignSelection {
             self.sweep.clone(),
             self.objective.token().to_string(),
             format!("{:.6e}", self.score),
+            self.latency_model.clone(),
         ];
         cols.extend(self.point.columns().into_iter().map(|(_, v)| v));
         cols.extend(self.metrics.iter().map(|(_, v)| format!("{v:.6e}")));
@@ -427,6 +471,7 @@ pub fn select(
         sweep: sweep.to_string(),
         objective,
         constraints: constraints.iter().map(Constraint::describe).collect(),
+        latency_model: LATENCY_MODEL.to_string(),
         point: winner.point.clone(),
         metrics: winner.metrics.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
         score: winner.metric(objective.metric()),
@@ -453,42 +498,55 @@ pub fn lsb_delta_for(glb_delta: f64) -> f64 {
 /// 1e-5 budget collapses, which is exactly Fig. 21's contrast.
 const CATASTROPHIC_AMPLIFICATION: f64 = 1.0e4;
 
-fn find_model<'a>(zoo: &'a [Model], name: &str) -> &'a Model {
-    zoo.iter().find(|m| m.name == name).unwrap_or_else(|| panic!("unknown model {name:?}"))
+/// Zoo lookup with a clean error for unknown names: `--from-selection`
+/// records and hand-edited configs carry arbitrary model strings, and an
+/// unknown one must surface as a CLI error, never a worker panic (the
+/// boundary paths go through [`DesignSelection::validate`]).
+pub fn resolve_model<'a>(zoo: &'a [Model], name: &str) -> anyhow::Result<&'a Model> {
+    zoo.iter()
+        .find(|m| m.name == name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {name:?} (not in the zoo)"))
 }
 
 /// The default candidate grid: the three GLB organizations × a Δ-scaling
 /// grid around the paper's design points × tight/relaxed robust-bank BER
-/// budgets, on the paper's serving workload (ResNet-50, batch 16, 12 MB).
-/// CLI `--sweep` overrides reshape any axis (`variant=...`, `delta=...`,
-/// `ber=...`, `model=...`, `batch=...`).
+/// budgets × GLB capacity × MAC-array side, on the paper's serving workload
+/// (ResNet-50, batch 16). The capacity grid starts at the paper's 12 MB
+/// (larger sizes trade area for less DRAM spill) and the array grid pairs
+/// the paper's 42×42 anchor with an 84×84 scale-up (faster compute, less
+/// write-stall hiding). CLI `--sweep` overrides reshape any axis
+/// (`variant=...`, `delta=...`, `ber=...`, `glb_mb=...`, `macs=...`,
+/// `model=...`, `batch=...`).
 pub fn spec_selection(zoo: &Zoo) -> SweepSpec {
     let z = zoo.clone();
+    let subject = resolve_model(zoo, "ResNet50").expect("zoo carries ResNet50").name.clone();
     SweepSpec::new(
         "selection",
         vec![
-            Axis::Model(vec![find_model(zoo, "ResNet50").name.clone()]),
+            Axis::Model(vec![subject]),
             Axis::Variant(vec![GlbVariant::Sram, GlbVariant::SttAi, GlbVariant::SttAiUltra]),
             Axis::Delta(vec![27.5, 22.5, 17.5]),
             Axis::Ber(vec![1.0e-8, 1.0e-5]),
+            Axis::GlbMb(vec![12, 16, 24]),
+            Axis::Macs(vec![42, 84]),
         ],
         move |p| selection_eval(&z, p),
     )
 }
 
 /// Evaluate one candidate: composed accelerator cost (the Table III
-/// arithmetic), serving-workload buffer energy, end-to-end latency, the
-/// Ares-style accuracy estimate, and the retention-vs-occupancy pair the
-/// §V.C design rule constrains.
+/// arithmetic, core rescaled to the candidate's MAC array), serving-workload
+/// buffer energy, end-to-end latency under the write-bandwidth stall model,
+/// the Ares-style accuracy estimate, and the retention-vs-occupancy pair
+/// the §V.C design rule constrains.
 fn selection_eval(zoo: &[Model], p: &DesignPoint) -> Vec<(&'static str, f64)> {
-    let m = find_model(zoo, p.model.as_deref().unwrap_or("ResNet50"));
+    let m = resolve_model(zoo, p.model.as_deref().unwrap_or("ResNet50"))
+        .expect("selection model axes are validated at parse/load time");
     let dt = p.dtype.unwrap_or(DType::Bf16);
     let batch = p.batch.unwrap_or(16);
     let glb = p.glb_mb.unwrap_or(12) * MB;
-    let a = match p.macs {
-        Some(side) => ArrayConfig::with_mac_array(side),
-        None => ArrayConfig::paper_42x42(),
-    };
+    let macs_side = p.macs.unwrap_or(42);
+    let a = ArrayConfig::with_mac_array(macs_side);
     let variant = p.variant.unwrap_or(GlbVariant::SttAiUltra);
     let tech = p.tech.unwrap_or_default();
     let t = tech.technology();
@@ -499,12 +557,19 @@ fn selection_eval(zoo: &[Model], p: &DesignPoint) -> Vec<(&'static str, f64)> {
         glb_delta_override: Some(delta),
         lsb_delta_override: Some(lsb_delta_for(delta)),
     };
+    // The fault/bandwidth budget of this candidate — the *same*
+    // [`BerConfig::for_selection`] budget the serving engine will inject
+    // with if this candidate wins, so the iso-accuracy constraint, the
+    // write-bandwidth stalls and the served fault model cannot drift apart.
+    // Budget, scratchpad policy and service rates come from the one shared
+    // assembly the `--fig stall` comparison uses.
+    let kind = variant.kind_for(&tech_cfg);
+    let (budget, scratch, bw) = variant_stall_context(variant, &kind, Some(ber));
 
     // Composed accelerator (core + GLB variant + scratchpad), and the SRAM
-    // baseline of the same capacity for the headline saving.
-    let scratch = (variant != GlbVariant::Sram).then(Scratchpad::paper_bf16);
-    let sys = BufferSystem::new(variant.kind_for(&tech_cfg), glb, scratch);
-    let core = CoreCosts::paper_42x42();
+    // baseline of the same capacity/array for the headline saving.
+    let sys = BufferSystem::new(kind, glb, scratch);
+    let core = CoreCosts::for_mac_array(macs_side);
     let acc = AcceleratorSummary::compose(variant.label(), core, &sys);
     let sram_glb = BufferSystem::new(GlbKind::baseline(), glb, None);
     let baseline = AcceleratorSummary::compose("baseline", core, &sram_glb);
@@ -522,25 +587,30 @@ fn selection_eval(zoo: &[Model], p: &DesignPoint) -> Vec<(&'static str, f64)> {
         ));
     }
 
-    // End-to-end latency: compute walk + DRAM spill overhead. The paper's
-    // integration argument is that MRAM write pulses hide behind compute,
-    // so latency is variant-invariant at iso array/model — the latency and
-    // throughput objectives discriminate across model/batch/macs axes.
+    // End-to-end latency: compute walk + per-layer write-bandwidth stalls
+    // + DRAM spill overhead. The paper's integration argument — MRAM write
+    // pulses hide behind compute — is *checked* per layer instead of
+    // assumed: whatever buffer service the generation time cannot hide
+    // stalls the array ([`crate::memsys::bandwidth`]), which is what makes
+    // `latency_s`/`throughput_rps` variant-, Δ-, BER- and
+    // technology-sensitive across the candidate grid.
     let dram = DramModel::ddr4_2933_dual();
     let spill = DramOverheadRow::analyze(m, &a, &dram, dt, batch, glb);
-    let latency = RetentionAnalysis::new(&a, batch).inference_latency(m) + spill.extra_latency;
+    let stalled = RetentionAnalysis::new(&a, batch).inference_latency_stalled(
+        m,
+        &traffic,
+        &bw,
+        sys.scratchpad.as_ref(),
+    );
+    let latency = stalled.total() + spill.extra_latency;
 
     // Ares-style accuracy estimate from the analytical fault exposure of
-    // the variant's bank split at this BER budget — the *same*
-    // [`BerConfig::for_selection`] budget the serving engine will inject
-    // with if this candidate wins, so the iso-accuracy constraint and the
-    // served fault model cannot drift apart.
+    // the variant's bank split at this BER budget.
     let kind = match dt {
         DType::Bf16 => WordKind::Bf16,
         DType::Int8 => WordKind::Int8,
     };
     let nonvolatile = t.is_nonvolatile();
-    let budget = BerConfig::for_selection(variant, Some(ber));
     let split = if nonvolatile {
         BankSplit { kind, msb_ber: budget.msb_ber, lsb_ber: budget.lsb_ber }
     } else {
@@ -575,18 +645,18 @@ fn selection_eval(zoo: &[Model], p: &DesignPoint) -> Vec<(&'static str, f64)> {
     };
     // §V.C designs the GLB for the worst data occupancy across the whole
     // served zoo, not just the sweep's traffic model — an accelerator that
-    // only covers ResNet-50 would lose data under VGG16. The per-model
-    // walks are memoized, so this is one retention pass per (array, batch).
-    let occupancy = zoo
-        .iter()
-        .map(|zm| cache::retention(zm, &a, batch).max_t_ret())
-        .fold(0.0, f64::max);
+    // only covers ResNet-50 would lose data under VGG16. The zoo-wide fold
+    // is memoized per (array, batch) across candidates and sweeps.
+    let occupancy = cache::zoo_occupancy(zoo, &a, batch);
 
     vec![
         ("accel_area_mm2", acc.area_mm2),
         ("accel_power_mw", acc.total_power_mw()),
         ("buffer_energy_j", buffer.total()),
         ("latency_s", latency),
+        ("compute_latency_s", stalled.compute_s),
+        ("stall_s", stalled.stall_s),
+        ("glb_write_bw_bytes_per_s", bw.write_bytes_per_s),
         ("throughput_rps", batch as f64 / latency),
         ("est_accuracy", 1.0 - est_drop),
         ("retention_at_ber_s", retention),
@@ -723,7 +793,7 @@ mod tests {
     fn selection_grid_evaluates_and_papers_point_wins_area() {
         let zoo = crate::dse::engine::shared_zoo();
         let results = spec_selection(&zoo).run_serial();
-        assert_eq!(results.len(), 18, "3 variants x 3 deltas x 2 bers");
+        assert_eq!(results.len(), 108, "3 variants x 3 deltas x 2 bers x 3 glb x 2 macs");
         let sel = select(
             "selection",
             &results,
@@ -733,14 +803,91 @@ mod tests {
         .unwrap();
         assert_eq!(sel.variant(), GlbVariant::SttAiUltra, "{sel:?}");
         // The unique feasible area-minimum is the paper's exact design point:
-        // Δ 27.5/17.5 split banks at the 1e-8/1e-5 BER budget. Lower-Δ
-        // candidates are cheaper but fail the retention-vs-occupancy rule at
-        // the hot/slow corner; relaxed-BER candidates fail iso-accuracy.
+        // Δ 27.5/17.5 split banks at the 1e-8/1e-5 BER budget, 12 MB GLB on
+        // the 42×42 array. Lower-Δ candidates are cheaper but fail the
+        // retention-vs-occupancy rule at the hot/slow corner; relaxed-BER
+        // candidates fail iso-accuracy; bigger GLBs/arrays only add area.
         assert_eq!(sel.point.delta, Some(27.5), "{sel:?}");
         assert_eq!(sel.point.ber, Some(1.0e-8), "{sel:?}");
+        assert_eq!(sel.point.glb_mb, Some(12), "{sel:?}");
+        assert_eq!(sel.point.macs, Some(42), "{sel:?}");
+        assert_eq!(sel.latency_model, LATENCY_MODEL);
         let saving = sel.metric("area_saving_vs_sram").unwrap();
         assert!((saving - 0.754).abs() < 0.03, "area saving {saving}");
         assert!(sel.frontier >= 1 && sel.feasible >= sel.frontier);
+    }
+
+    #[test]
+    fn latency_is_write_bandwidth_sensitive_across_the_grid() {
+        // The acceptance contract of the stall model: `latency_s` must NOT
+        // be constant across GLB variants at iso (model, glb, macs) — the
+        // old compute-walk score was variant-invariant by construction.
+        let zoo = crate::dse::engine::shared_zoo();
+        let results = spec_selection(&zoo).run_serial();
+        let at = |variant, delta, ber| {
+            results
+                .iter()
+                .find(|r| {
+                    r.point.variant == Some(variant)
+                        && r.point.delta == Some(delta)
+                        && r.point.ber == Some(ber)
+                        && r.point.glb_mb == Some(12)
+                        && r.point.macs == Some(84)
+                })
+                .unwrap()
+                .metric("latency_s")
+        };
+        let sram = at(GlbVariant::Sram, 27.5, 1.0e-8);
+        let mono = at(GlbVariant::SttAi, 27.5, 1.0e-8);
+        let ultra = at(GlbVariant::SttAiUltra, 27.5, 1.0e-8);
+        // SRAM writes at the practical floor → least stall; the split GLB's
+        // aggregate write bandwidth beats the mono bank at the same Δ.
+        assert!(sram < ultra && ultra < mono, "sram={sram} ultra={ultra} mono={mono}");
+        // Relaxing the WER budget shortens the write pulse → less stall.
+        let relaxed = at(GlbVariant::SttAi, 27.5, 1.0e-5);
+        assert!(relaxed < mono, "relaxed={relaxed} mono={mono}");
+        // And the stall metric itself is exported for the candidate CSV.
+        let rec = results
+            .iter()
+            .find(|r| {
+                r.point.variant == Some(GlbVariant::SttAi)
+                    && r.point.ber == Some(1.0e-8)
+                    && r.point.delta == Some(27.5)
+                    && r.point.macs == Some(84)
+                    && r.point.glb_mb == Some(12)
+            })
+            .unwrap();
+        assert!(rec.metric("stall_s") > 0.0);
+        assert_eq!(
+            rec.metric("latency_s"),
+            rec.metric("compute_latency_s")
+                + rec.metric("stall_s")
+                + DramOverheadRow::analyze(
+                    resolve_model(&zoo, "ResNet50").unwrap(),
+                    &ArrayConfig::with_mac_array(84),
+                    &DramModel::ddr4_2933_dual(),
+                    DType::Bf16,
+                    16,
+                    12 * MB,
+                )
+                .extra_latency
+        );
+    }
+
+    #[test]
+    fn unknown_model_is_a_clean_error_not_a_panic() {
+        let zoo = crate::dse::engine::shared_zoo();
+        let err = resolve_model(&zoo, "NotAModel").unwrap_err().to_string();
+        assert!(err.contains("unknown model"), "{err}");
+        // A selection record naming an unknown model fails validation — the
+        // `--from-selection` load path surfaces this instead of letting a
+        // sweep worker panic.
+        let results = spec_selection(&zoo).run_serial();
+        let mut sel = select("selection", &results, Objective::MinArea, &[]).unwrap();
+        assert!(sel.validate().is_ok());
+        sel.point.model = Some("NotAModel".into());
+        let err = sel.validate().unwrap_err().to_string();
+        assert!(err.contains("unknown model"), "{err}");
     }
 
     #[test]
@@ -778,6 +925,17 @@ mod tests {
         assert_eq!(back.objective, sel.objective);
         assert_eq!(back.score, sel.score);
         assert_eq!(back.constraints, sel.constraints);
+        // Latency-model provenance survives the round trip; tag-less legacy
+        // records fall back to the compute-walk tag.
+        assert_eq!(back.latency_model, LATENCY_MODEL);
+        let mut legacy = sel.to_json();
+        if let Json::Obj(m) = &mut legacy {
+            let _ = m.remove("latency_model");
+        }
+        assert_eq!(
+            DesignSelection::from_json(&legacy).unwrap().latency_model,
+            LATENCY_MODEL_LEGACY
+        );
         // The serving bridge reproduces the paper's Ultra configuration.
         let cfg = back.system_config();
         assert_eq!(cfg.glb, GlbVariant::SttAiUltra);
@@ -803,10 +961,12 @@ mod tests {
             variant: Some(GlbVariant::SttAiUltra),
             delta: Some(27.5),
             ber: Some(1.0e-8),
+            glb_mb: Some(12),
+            macs: Some(42),
             ..Default::default()
         };
         let over = selection_overrides(&p);
-        assert_eq!(over.len(), 3);
+        assert_eq!(over.len(), 5);
         let mut spec = spec_selection(&crate::dse::engine::shared_zoo());
         for o in over {
             spec.override_axis(o);

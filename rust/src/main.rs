@@ -32,10 +32,11 @@ stt-ai — AI accelerator + customized STT-MRAM co-design framework
 USAGE: stt-ai <COMMAND> [FLAGS]
 
 COMMANDS:
-  figures      [--fig 10..19|tech] [--csv-dir DIR] [--parallel N]
+  figures      [--fig 10..19|tech|stall] [--csv-dir DIR] [--parallel N]
                [--sweep axis=v1|v2,...] [--tech stt|sot|sram]
                [--from-selection FILE]
-               regenerate paper figures (+ cross-technology table)
+               regenerate paper figures (+ cross-technology table and the
+               write-bandwidth stall comparison)
   sweep        --axes axis=v1|v2,... [--parallel N] [--csv FILE] [--json FILE]
                [--tech stt|sot|sram]
                free cross-product DSE (axes: model, dtype, batch, glb_mb,
@@ -46,7 +47,10 @@ COMMANDS:
                [--sweep axis=v1|v2,...] [--parallel N]
                [--out selection.json] [--csv selection.csv]
                objective/constraint design-point selection over the
-               variant x delta x ber candidate grid (Pareto frontier)
+               variant x delta x ber x glb_mb x macs candidate grid
+               (Pareto frontier; latency scored with the write-bandwidth
+               stall model; a --config [deployment] section may also carry
+               glb_mb/macs grid knobs)
   table3                               Table III composition + savings
   design       [--retention 3.0|3y] [--ber 1e-8] [--tech sakhare2020|wei2019]
   accuracy     [--artifacts DIR] [--prune 0.0] [--batch 16] [--limit N]
@@ -121,6 +125,9 @@ fn main() -> anyhow::Result<()> {
                 Some("tech") => {
                     report::figures::techcmp_with(&mut out, &runner)?;
                 }
+                Some("stall") => {
+                    report::figures::stall_with(&mut out, &runner)?;
+                }
                 Some(n) => run_figure(n.parse()?, &mut out, &runner)?,
                 None => report::render_all(&mut out, &runner)?,
             }
@@ -171,9 +178,10 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "select" => {
-            // Objective + constraints come from a `[deployment]` config
-            // section (`--config build.json`) or from individual flags.
-            let (objective, constraints) = match args.get("config") {
+            // Objective + constraints (and optional glb_mb/macs grid knobs)
+            // come from a `[deployment]` config section (`--config
+            // build.json`) or from individual flags.
+            let (objective, constraints, grid) = match args.get("config") {
                 Some(path) => {
                     for f in
                         ["objective", "min-accuracy", "max-area-mm2", "max-power-mw", "no-retention-check"]
@@ -185,7 +193,8 @@ fn main() -> anyhow::Result<()> {
                         }
                     }
                     let dep = SystemConfig::load(Path::new(path))?.deployment;
-                    (dep.objective, dep.constraints())
+                    let grid = dep.grid_overrides();
+                    (dep.objective, dep.constraints(), grid)
                 }
                 None => {
                     let objective_token = args.get_or("objective", "area").to_string();
@@ -213,10 +222,11 @@ fn main() -> anyhow::Result<()> {
                     {
                         constraints.push(Constraint::MaxPowerMw(cap));
                     }
-                    (objective, constraints)
+                    (objective, constraints, Vec::new())
                 }
             };
-            let runner = runner_from(&args)?;
+            // Config-section grid knobs sit below explicit `--sweep` flags.
+            let runner = runner_from(&args)?.with_prepended_overrides(grid);
             let out_json = args.get("out").map(PathBuf::from);
             let csv = args.get("csv").map(PathBuf::from);
             args.finish()?;

@@ -1,0 +1,211 @@
+//! Write-bandwidth service model of the GLB: the stall side of the paper's
+//! §II.C/§IV.D integration argument.
+//!
+//! The paper asserts that MRAM write pulses "hide behind compute". This
+//! module makes that claim *checkable* instead of assumed:
+//!
+//! * [`GlbBandwidth`] derives sustained byte service rates for a
+//!   [`GlbKind`] from the technology's write/read pulses
+//!   ([`crate::mram::technology::MemTechnology::write_service_pulse`] /
+//!   [`crate::mram::technology::MemTechnology::read_service_pulse`],
+//!   floored/capped at the practical driver and sense-amp limits) and the
+//!   banks' service-lane counts ([`BankSpec::lanes`]);
+//! * [`layer_stall`] converts one layer's GLB/scratchpad traffic into the
+//!   stall time the compute walk cannot hide, routing partial-ofmap rounds
+//!   scratchpad-first with GLB overflow — the exact [`TrafficSplit`]
+//!   coalescing the energy ledger uses, so the §IV.D scratchpad shows up as
+//!   a *bandwidth* win, not just an energy win.
+//!
+//! The two-bank (STT-AI Ultra) organization: every word splits into an MSB
+//! and an LSB half-word stream, and the §IV.D write buffer decouples the
+//! banks, so each drains its stream at its own pulse and the service rates
+//! add — the relaxed LSB bank (lower Δ, relaxed WER budget ⇒ shorter pulse)
+//! buys the split GLB a write-bandwidth edge over the mono design, matching
+//! its cheaper-write energy story.
+//!
+//! `accel::timing::inference_latency_stalled` composes these per-layer
+//! stalls with the Eq. 5/8 compute walk; `dse::select` threads the result
+//! into the `latency_s`/`throughput_rps` selection metrics.
+
+use super::hierarchy::{BankSpec, GlbKind};
+use super::scratchpad::{Scratchpad, TrafficSplit};
+use crate::mram::technology::PRACTICAL_PULSE_FLOOR;
+
+/// GLB access word (bytes) — one 64-bit word per lane per pulse.
+pub const WORD_BYTES: f64 = 8.0;
+
+/// Sustained service rates of one GLB organization (bytes/s).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GlbBandwidth {
+    pub write_bytes_per_s: f64,
+    pub read_bytes_per_s: f64,
+}
+
+impl GlbBandwidth {
+    /// Service rates of `kind` under a per-bank reliability budget: the mono
+    /// (or MSB) bank runs at `msb_ber`, the split's relaxed bank at
+    /// `lsb_ber`. Volatile banks ignore the budget entirely.
+    pub fn of(kind: &GlbKind, msb_ber: f64, lsb_ber: f64) -> Self {
+        match kind {
+            GlbKind::Mono(b) => Self::bank(b, msb_ber, WORD_BYTES),
+            GlbKind::Split { msb, lsb } => {
+                let m = Self::bank(msb, msb_ber, 0.5 * WORD_BYTES);
+                let l = Self::bank(lsb, lsb_ber, 0.5 * WORD_BYTES);
+                Self {
+                    write_bytes_per_s: m.write_bytes_per_s + l.write_bytes_per_s,
+                    read_bytes_per_s: m.read_bytes_per_s + l.read_bytes_per_s,
+                }
+            }
+        }
+    }
+
+    /// One bank moving `width_bytes` per lane per pulse. The budget is
+    /// clamped away from 0/1 so a volatile-variant `BerConfig` (0.0) can
+    /// never reach the nonvolatile pulse solvers.
+    fn bank(b: &BankSpec, ber: f64, width_bytes: f64) -> Self {
+        let t = b.tech.technology();
+        let ber = ber.clamp(1.0e-15, 0.5);
+        let per_lane = width_bytes * b.lanes as f64;
+        Self {
+            write_bytes_per_s: per_lane / t.write_service_pulse(ber, b.delta_guard_banded),
+            read_bytes_per_s: per_lane / t.read_service_pulse(ber, b.delta_guard_banded),
+        }
+    }
+
+    /// The infinite-bandwidth reference: zero service time for any traffic,
+    /// so the stalled latency collapses to the pure compute walk (the
+    /// zero-stall parity anchor of the test suite).
+    pub fn unconstrained() -> Self {
+        Self { write_bytes_per_s: f64::INFINITY, read_bytes_per_s: f64::INFINITY }
+    }
+
+    /// Time (s) to service a read/write byte load at these rates.
+    pub fn service_time(&self, read_bytes: u64, write_bytes: u64) -> f64 {
+        read_bytes as f64 / self.read_bytes_per_s + write_bytes as f64 / self.write_bytes_per_s
+    }
+}
+
+/// Sustained scratchpad service rate (bytes/s): one word per bank per
+/// SRAM-class pulse, floored at the practical limit.
+pub fn scratchpad_bytes_per_s(sp: &Scratchpad) -> f64 {
+    sp.banks as f64 * WORD_BYTES / sp.array.sram_latency_s().max(PRACTICAL_PULSE_FLOOR)
+}
+
+/// Stall time (s) of one layer: the buffer service the layer's compute time
+/// cannot hide. `glb_reads`/`glb_writes` are the layer's ifmap+weight reads
+/// and final-ofmap writes; partial-ofmap rounds go scratchpad-first (GLB
+/// overflow beyond the scratchpad capacity), or entirely to the GLB when no
+/// scratchpad is present — mirroring [`super::BufferSystem::layer_energy`].
+pub fn layer_stall(
+    glb: &GlbBandwidth,
+    scratchpad: Option<&Scratchpad>,
+    glb_reads: u64,
+    glb_writes: u64,
+    partial_bytes: u64,
+    partial_rounds: u64,
+    t_compute: f64,
+) -> f64 {
+    let mut reads = glb_reads;
+    let mut writes = glb_writes;
+    let mut sp_time = 0.0;
+    match scratchpad {
+        Some(sp) => {
+            let split = TrafficSplit::split(partial_bytes, partial_rounds, sp);
+            writes += split.glb_overflow_writes;
+            reads += split.glb_overflow_reads;
+            sp_time = (split.scratchpad_writes + split.scratchpad_reads) as f64
+                / scratchpad_bytes_per_s(sp);
+        }
+        None => {
+            writes += partial_bytes * partial_rounds;
+            reads += partial_bytes * partial_rounds;
+        }
+    }
+    (glb.service_time(reads, writes) + sp_time - t_compute).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsys::hierarchy::DEFAULT_BANK_LANES;
+    use crate::mram::technology::TechnologyId;
+    use crate::util::units::MB;
+
+    #[test]
+    fn sram_outserves_stt_and_budgets_move_the_pulse() {
+        let sram = GlbBandwidth::of(&GlbKind::baseline(), 0.0, 0.0);
+        let stt = GlbBandwidth::of(&GlbKind::stt_ai(), 1.0e-8, 1.0e-5);
+        assert!(sram.write_bytes_per_s > stt.write_bytes_per_s);
+        assert!(sram.read_bytes_per_s >= stt.read_bytes_per_s);
+        // A relaxed WER budget shortens the write pulse → more bandwidth.
+        let relaxed = GlbBandwidth::of(&GlbKind::stt_ai(), 1.0e-5, 1.0e-5);
+        assert!(relaxed.write_bytes_per_s > stt.write_bytes_per_s);
+    }
+
+    #[test]
+    fn split_banks_add_their_half_word_streams() {
+        let mono = GlbBandwidth::of(&GlbKind::stt_ai(), 1.0e-8, 1.0e-5);
+        let split = GlbBandwidth::of(&GlbKind::stt_ai_ultra(), 1.0e-8, 1.0e-5);
+        // The relaxed LSB bank drains faster than the robust bank, so the
+        // split's aggregate write rate beats the mono design.
+        assert!(split.write_bytes_per_s > mono.write_bytes_per_s, "{split:?} vs {mono:?}");
+        // And stays below twice the mono rate (the MSB half is unchanged).
+        assert!(split.write_bytes_per_s < 2.0 * mono.write_bytes_per_s);
+    }
+
+    #[test]
+    fn sot_writes_at_the_practical_floor() {
+        let sot = GlbBandwidth::of(&GlbKind::mono(TechnologyId::Sot), 1.0e-8, 1.0e-5);
+        let lanes = DEFAULT_BANK_LANES as f64;
+        // Sub-ns incubation-free switching floors at 1 ns: 8 B × lanes / ns.
+        let expect = WORD_BYTES * lanes / PRACTICAL_PULSE_FLOOR;
+        assert!((sot.write_bytes_per_s - expect).abs() / expect < 1e-12);
+    }
+
+    #[test]
+    fn lanes_scale_bandwidth_linearly() {
+        let base = BankSpec::new(TechnologyId::SttSakhare2020, 27.5);
+        let wide = base.with_lanes(2 * DEFAULT_BANK_LANES);
+        let bw1 = GlbBandwidth::of(&GlbKind::Mono(base), 1.0e-8, 1.0e-5);
+        let bw2 = GlbBandwidth::of(&GlbKind::Mono(wide), 1.0e-8, 1.0e-5);
+        assert_eq!(bw2.write_bytes_per_s, 2.0 * bw1.write_bytes_per_s);
+        assert_eq!(bw2.read_bytes_per_s, 2.0 * bw1.read_bytes_per_s);
+        // Zero lanes are clamped to one serviceable lane.
+        assert_eq!(base.with_lanes(0).lanes, 1);
+    }
+
+    #[test]
+    fn service_time_is_linear_and_unconstrained_is_free() {
+        let bw = GlbBandwidth::of(&GlbKind::stt_ai(), 1.0e-8, 1.0e-5);
+        let t1 = bw.service_time(MB, MB);
+        let t2 = bw.service_time(2 * MB, 2 * MB);
+        assert!((t2 / t1 - 2.0).abs() < 1e-12);
+        let free = GlbBandwidth::unconstrained();
+        assert_eq!(free.service_time(u64::MAX, u64::MAX), 0.0);
+    }
+
+    #[test]
+    fn stall_is_the_unhidden_service_only() {
+        let bw = GlbBandwidth::of(&GlbKind::stt_ai(), 1.0e-8, 1.0e-5);
+        // A layer with generous compute time hides all its traffic.
+        assert_eq!(layer_stall(&bw, None, MB, MB, 0, 0, 10.0), 0.0);
+        // With zero compute time the full service is exposed.
+        let exposed = layer_stall(&bw, None, MB, MB, 0, 0, 0.0);
+        assert_eq!(exposed, bw.service_time(MB, MB));
+        // Stall is monotone in the write volume.
+        assert!(layer_stall(&bw, None, MB, 4 * MB, 0, 0, 0.0) > exposed);
+    }
+
+    #[test]
+    fn scratchpad_absorbs_partial_rounds_from_the_glb() {
+        let bw = GlbBandwidth::of(&GlbKind::stt_ai(), 1.0e-8, 1.0e-5);
+        let sp = Scratchpad::paper_bf16();
+        // 40 KB partials × 64 rounds: fit the scratchpad entirely.
+        let with_sp = layer_stall(&bw, Some(&sp), 0, 0, 40 * 1024, 64, 0.0);
+        let without = layer_stall(&bw, None, 0, 0, 40 * 1024, 64, 0.0);
+        assert!(with_sp < without, "{with_sp} vs {without}");
+        // The scratchpad-side time matches its service rate exactly.
+        let want = (2 * 40 * 1024 * 64) as f64 / scratchpad_bytes_per_s(&sp);
+        assert!((with_sp - want).abs() / want < 1e-12);
+    }
+}

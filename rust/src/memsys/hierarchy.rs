@@ -14,16 +14,33 @@ use super::scratchpad::{Scratchpad, TrafficSplit};
 use crate::mram::technology::{MemTechnology, TechnologyId};
 use crate::util::units::MB;
 
-/// One GLB bank: a technology at a guard-banded Δ design point.
+/// Parallel word-wide service lanes per GLB bank: the macro is banked into
+/// this many independently-addressed subarrays, each moving one 64-bit word
+/// per read/write pulse. Calibrated so the STT GLB write bandwidth at the
+/// paper design point (Δ 27.5, WER 1e-8, ~22 ns pulse → ~2.9 GB/s) hides
+/// behind the 42×42-array compute walk at inference traffic, per the §V
+/// integration argument (see `memsys::bandwidth`).
+pub const DEFAULT_BANK_LANES: u64 = 8;
+
+/// One GLB bank: a technology at a guard-banded Δ design point, with its
+/// service-lane count (the write-bandwidth knob).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BankSpec {
     pub tech: TechnologyId,
     pub delta_guard_banded: f64,
+    /// Parallel word-wide subarrays ([`DEFAULT_BANK_LANES`] unless resized).
+    pub lanes: u64,
 }
 
 impl BankSpec {
     pub fn new(tech: TechnologyId, delta_guard_banded: f64) -> Self {
-        Self { tech, delta_guard_banded }
+        Self { tech, delta_guard_banded, lanes: DEFAULT_BANK_LANES }
+    }
+
+    /// The same bank with a different service-lane count.
+    pub fn with_lanes(mut self, lanes: u64) -> Self {
+        self.lanes = lanes.max(1);
+        self
     }
 
     /// The volatile baseline bank.

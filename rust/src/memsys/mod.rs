@@ -10,20 +10,25 @@
 //! * [`hierarchy`] — composition of GLB banks (any registered technology,
 //!   single- or two-bank), scratchpad, weight NVM, and DRAM into one buffer
 //!   system with an energy ledger per layer.
+//! * [`bandwidth`] — per-bank write/read service rates from the technology
+//!   pulses and the stall-time conversion behind
+//!   `accel::timing::inference_latency_stalled`.
 //!
 //! Arrays and banks are parametrized by [`TechnologyId`] — the
 //! [`crate::mram::technology::MemTechnology`] registry — instead of matching
 //! on hard-coded SRAM/STT variants.
 
 pub mod array;
+pub mod bandwidth;
 pub mod dram;
 pub mod hierarchy;
 pub mod nvm;
 pub mod scratchpad;
 
 pub use array::{MemoryArray, F_14NM};
+pub use bandwidth::GlbBandwidth;
 pub use dram::DramModel;
-pub use hierarchy::{BankSpec, BufferSystem, EnergyLedger, GlbKind};
+pub use hierarchy::{BankSpec, BufferSystem, EnergyLedger, GlbKind, DEFAULT_BANK_LANES};
 pub use nvm::WeightNvm;
 pub use scratchpad::{Scratchpad, TrafficSplit};
 

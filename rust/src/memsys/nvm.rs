@@ -8,6 +8,7 @@
 
 use crate::memsys::array::MemoryArray;
 use crate::models::{DType, Model};
+use crate::mram::technology::PRACTICAL_PULSE_FLOOR;
 use crate::mram::{DesignTargets, MtjTech, ScalingSolver};
 
 /// A weight-storage NVM design.
@@ -51,14 +52,16 @@ impl WeightNvm {
     pub fn load_time(&self, model_bytes: u64, read_pulse: f64, lanes: u64) -> f64 {
         let words = model_bytes.div_ceil(8);
         // Pipelined reads: one word per read pulse per lane (sense-limited;
-        // a practical floor of 1 ns is applied for tiny RD-budget pulses).
-        words as f64 * read_pulse.max(1.0e-9) / lanes as f64
+        // the practical floor guards tiny RD-budget pulses).
+        words as f64 * read_pulse.max(PRACTICAL_PULSE_FLOOR) / lanes as f64
     }
 
-    /// Full-model write time (one-time programming cost), words × t_w / lanes.
+    /// Full-model write time (one-time programming cost), words × t_w /
+    /// lanes — under the same practical pulse floor as [`Self::load_time`],
+    /// so a tiny-budget solve can never report a sub-physical program time.
     pub fn program_time(&self, model_bytes: u64, lanes: u64) -> f64 {
         let words = model_bytes.div_ceil(8);
-        words as f64 * self.write_pulse / lanes as f64
+        words as f64 * self.write_pulse.max(PRACTICAL_PULSE_FLOOR) / lanes as f64
     }
 }
 
@@ -111,6 +114,20 @@ mod tests {
         assert!(tp < 60.0, "{tp}");
         // More lanes, faster.
         assert!(nvm.program_time(100 * MB, 128) < tp);
+    }
+
+    #[test]
+    fn program_time_floors_tiny_write_pulses() {
+        let zoo = models::zoo();
+        let mut nvm = WeightNvm::sized_for(&zoo, DType::Bf16, 1.0, MtjTech::sakhare2020());
+        // Force a sub-physical solved pulse: the floor must hold, exactly
+        // like the read path's sense floor.
+        nvm.write_pulse = 1.0e-12;
+        let words = (100 * MB).div_ceil(8) as f64;
+        let t = nvm.program_time(100 * MB, 64);
+        assert_eq!(t, words * PRACTICAL_PULSE_FLOOR / 64.0);
+        // Symmetric with the read floor.
+        assert_eq!(nvm.load_time(100 * MB, 1.0e-12, 64), t);
     }
 
     #[test]

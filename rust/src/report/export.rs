@@ -9,7 +9,7 @@
 use std::io::Write;
 use std::path::Path;
 
-use crate::dse::engine::{paper_specs, shared_zoo, spec_techcmp, Runner, SweepResult};
+use crate::dse::engine::{paper_specs, shared_zoo, spec_stall, spec_techcmp, Runner, SweepResult};
 use crate::dse::select::{self, DesignSelection};
 use crate::util::json::Json;
 
@@ -28,6 +28,7 @@ fn file_name(sweep: &str) -> String {
         "fig18" => "fig18_partial_ofmaps.csv".into(),
         "fig19" => "fig19_scratchpad_energy.csv".into(),
         "techcmp" => "techcmp_technologies.csv".into(),
+        "stall" => "stall_write_bandwidth.csv".into(),
         "selection" => "selection_candidates.csv".into(),
         other => format!("{other}.csv"),
     }
@@ -77,11 +78,11 @@ pub fn export_all_with(dir: &Path, runner: &Runner) -> std::io::Result<Vec<Strin
     let zoo = shared_zoo();
     let mut written = Vec::new();
     let mut all: Vec<SweepResult> = Vec::new();
-    // Paper sweeps plus the cross-technology comparison and the selection
-    // candidate grid.
+    // Paper sweeps plus the cross-technology comparison, the write-
+    // bandwidth stall comparison and the selection candidate grid.
     for spec in paper_specs(&zoo)
         .into_iter()
-        .chain([spec_techcmp(&zoo), select::spec_selection(&zoo)])
+        .chain([spec_techcmp(&zoo), spec_stall(&zoo), select::spec_selection(&zoo)])
     {
         let results = runner.run(spec);
         let name = file_name(&results[0].sweep);
@@ -129,10 +130,11 @@ mod tests {
     fn exports_all_figures() {
         let dir = std::env::temp_dir().join("stt_ai_csv_test");
         let files = export_all_with(&dir, &Runner::new(2)).unwrap();
-        // 11 sweep CSVs + techcmp + selection candidates + selection picks
-        // + table3 + sweeps.json.
-        assert_eq!(files.len(), 16, "{files:?}");
+        // 11 sweep CSVs + techcmp + stall + selection candidates
+        // + selection picks + table3 + sweeps.json.
+        assert_eq!(files.len(), 17, "{files:?}");
         assert!(files.contains(&"techcmp_technologies.csv".to_string()));
+        assert!(files.contains(&"stall_write_bandwidth.csv".to_string()));
         assert!(files.contains(&"selection_candidates.csv".to_string()));
         assert!(files.contains(&"selection.csv".to_string()));
         // The paper pick is in the selection records: area objective, Ultra.

@@ -431,6 +431,67 @@ pub fn techcmp_with(w: &mut impl Write, r: &Runner) -> std::io::Result<Vec<Sweep
     Ok(rows)
 }
 
+/// Write-bandwidth stall comparison table: the three GLB organizations on
+/// the ResNet-50 serving workload across the 42×42 / 84×84 arrays and
+/// inference / training write intensities — where (and whether) MRAM write
+/// pulses actually hide behind compute.
+pub fn stall(w: &mut impl Write) -> std::io::Result<Vec<SweepResult>> {
+    stall_with(w, &Runner::default())
+}
+
+pub fn stall_with(w: &mut impl Write, r: &Runner) -> std::io::Result<Vec<SweepResult>> {
+    let rows = r.run(engine::spec_stall(&engine::shared_zoo()));
+    // The header shows the (usually single-valued) model axis of the first
+    // row — the fig19 convention — while per-row columns carry every axis a
+    // `--sweep` override or `--from-selection` pin can reshape (glb, Δ), so
+    // multi-valued rows stay attributable.
+    let model = rows
+        .first()
+        .and_then(|x| x.point.model.clone())
+        .unwrap_or_else(|| "ResNet50".into());
+    writeln!(w, "== Write-bandwidth stalls ({model}, batch 16) ==")?;
+    writeln!(
+        w,
+        "{:<14} {:>5} {:>4} {:>4} {:>5} {:>10} {:>10} {:>10} {:>10} {:>7} {:>10}",
+        "variant", "macs", "wi", "glb", "dGB", "compute", "stall", "spill", "latency", "stall%",
+        "wr-BW"
+    )?;
+    for rec in &rows {
+        writeln!(
+            w,
+            "{:<14} {:>5} {:>4} {:>4} {:>5} {:>10} {:>10} {:>10} {:>10} {:>6.2}% {:>7.2}GB/s",
+            rec.point.variant.map_or("?", engine::variant_label),
+            rec.point.macs.unwrap_or(42),
+            rec.point.write_intensity.unwrap_or(1.0),
+            rec.point.glb_mb.unwrap_or(12),
+            rec.point.delta.unwrap_or(27.5),
+            fmt_time(rec.metric("compute_latency_s")),
+            fmt_time(rec.metric("stall_s")),
+            fmt_time(rec.metric("spill_s")),
+            fmt_time(rec.metric("latency_s")),
+            rec.metric("stall_frac_of_latency") * 100.0,
+            rec.metric("glb_write_bw_bytes_per_s") / 1e9
+        )?;
+    }
+    // Headline: worst unhidden share per swept array size.
+    let mut sizes: Vec<u64> = rows.iter().filter_map(|x| x.point.macs).collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    for macs in sizes {
+        if let Some(worst) = rows.iter().filter(|x| x.point.macs == Some(macs)).max_by(|a, b| {
+            a.metric("stall_frac_of_latency").total_cmp(&b.metric("stall_frac_of_latency"))
+        }) {
+            writeln!(
+                w,
+                "-- {macs}x{macs}: worst unhidden stall {:.2}% of latency ({})",
+                worst.metric("stall_frac_of_latency") * 100.0,
+                worst.point.variant.map_or("?", engine::variant_label)
+            )?;
+        }
+    }
+    Ok(rows)
+}
+
 /// Monte-Carlo PT analysis (Figs. 7–8) through the sweep engine: one row
 /// per (tech × Δ × samples) point, default 20 k samples on the STT bases.
 pub fn montecarlo(w: &mut impl Write) -> std::io::Result<Vec<SweepResult>> {
@@ -531,6 +592,8 @@ pub fn render_all(w: &mut impl Write, r: &Runner) -> std::io::Result<()> {
     fig19_with(w, r)?;
     writeln!(w)?;
     techcmp_with(w, r)?;
+    writeln!(w)?;
+    stall_with(w, r)?;
     writeln!(w)?;
     Ok(())
 }

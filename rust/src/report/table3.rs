@@ -20,6 +20,20 @@ impl CoreCosts {
     pub fn paper_42x42() -> Self {
         Self { area_mm2: 4.08, dynamic_mw: 954.0, leakage_mw: 0.91 }
     }
+
+    /// First-order rescale of the synthesized anchor to another MAC-array
+    /// side (the selection grid's `macs` axis): MAC count — quadratic in the
+    /// side — dominates core area and dynamic power, and leakage tracks
+    /// area. `for_mac_array(42)` is bit-identical to the anchor.
+    pub fn for_mac_array(macs: u64) -> Self {
+        let r = (macs as f64 / 42.0).powi(2);
+        let base = Self::paper_42x42();
+        Self {
+            area_mm2: base.area_mm2 * r,
+            dynamic_mw: base.dynamic_mw * r,
+            leakage_mw: base.leakage_mw * r,
+        }
+    }
 }
 
 /// One composed accelerator (Table III rows 7–9).
@@ -106,6 +120,19 @@ mod tests {
         assert!((rows[1].area_mm2 - 5.09).abs() / 5.09 < 0.05, "{}", rows[1].area_mm2);
         // Ultra ≈ 5.0 mm².
         assert!((rows[2].area_mm2 - 5.0).abs() / 5.0 < 0.05, "{}", rows[2].area_mm2);
+    }
+
+    #[test]
+    fn core_rescale_anchors_at_the_paper_array() {
+        let anchor = CoreCosts::paper_42x42();
+        let same = CoreCosts::for_mac_array(42);
+        assert_eq!(same.area_mm2, anchor.area_mm2);
+        assert_eq!(same.dynamic_mw, anchor.dynamic_mw);
+        assert_eq!(same.leakage_mw, anchor.leakage_mw);
+        // Doubling the side quadruples the MAC count → 4× the core costs.
+        let big = CoreCosts::for_mac_array(84);
+        assert!((big.area_mm2 / anchor.area_mm2 - 4.0).abs() < 1e-12);
+        assert!((big.dynamic_mw / anchor.dynamic_mw - 4.0).abs() < 1e-12);
     }
 
     #[test]

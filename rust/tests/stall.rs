@@ -1,0 +1,97 @@
+//! Integration coverage of the write-bandwidth stall model: zero-stall
+//! parity with the pure compute walk, monotonicity in the write pulse and
+//! in the traffic volume, and byte-stability of the re-derived selection
+//! records across worker counts.
+
+use stt_ai::accel::{ArrayConfig, ModelTraffic, RetentionAnalysis};
+use stt_ai::dse::engine::{shared_zoo, Runner};
+use stt_ai::dse::select;
+use stt_ai::memsys::{GlbBandwidth, GlbKind, Scratchpad};
+use stt_ai::models::{self, DType};
+use stt_ai::util::units::MB;
+
+/// Infinite bandwidth with no scratchpad reproduces the pre-stall latency
+/// exactly — bit for bit, for every zoo model.
+#[test]
+fn zero_stall_parity_across_the_zoo() {
+    let a = ArrayConfig::paper_42x42();
+    let free = GlbBandwidth::unconstrained();
+    for m in &models::zoo() {
+        let ra = RetentionAnalysis::new(&a, 16);
+        let traffic = ModelTraffic::analyze(m, &a, DType::Bf16, 16, 12 * MB);
+        let stalled = ra.inference_latency_stalled(m, &traffic, &free, None);
+        assert_eq!(stalled.stall_s, 0.0, "{}", m.name);
+        assert_eq!(stalled.total(), ra.inference_latency(m), "{}", m.name);
+    }
+}
+
+/// Latency is non-decreasing in the write pulse: throttling the write
+/// service rate can only grow the stall, never shrink it.
+#[test]
+fn latency_monotone_in_write_pulse() {
+    let a = ArrayConfig::with_mac_array(84);
+    let m = models::by_name("ResNet50").unwrap();
+    let ra = RetentionAnalysis::new(&a, 16);
+    let traffic = ModelTraffic::analyze(&m, &a, DType::Bf16, 16, 12 * MB);
+    let base = GlbBandwidth::of(&GlbKind::stt_ai(), 1.0e-8, 1.0e-5);
+    let sp = Scratchpad::paper_bf16();
+    let mut last = 0.0;
+    for throttle in [1.0, 2.0, 4.0, 16.0, 256.0] {
+        let bw = GlbBandwidth {
+            write_bytes_per_s: base.write_bytes_per_s / throttle,
+            read_bytes_per_s: base.read_bytes_per_s,
+        };
+        let stalled = ra.inference_latency_stalled(&m, &traffic, &bw, Some(&sp));
+        assert!(
+            stalled.stall_s >= last,
+            "throttle {throttle}: stall {} < {last}",
+            stalled.stall_s
+        );
+        last = stalled.stall_s;
+    }
+    // At the heaviest throttle the stall dominates visibly.
+    assert!(last > 0.0);
+}
+
+/// Latency is non-decreasing in the traffic volume (training-style write
+/// intensities can only add stall).
+#[test]
+fn latency_monotone_in_traffic() {
+    let a = ArrayConfig::with_mac_array(84);
+    let m = models::by_name("ResNet50").unwrap();
+    let ra = RetentionAnalysis::new(&a, 16);
+    let base = ModelTraffic::analyze(&m, &a, DType::Bf16, 16, 12 * MB);
+    let bw = GlbBandwidth::of(&GlbKind::stt_ai(), 1.0e-8, 1.0e-5);
+    let sp = Scratchpad::paper_bf16();
+    let mut last = 0.0;
+    for wi in [1.0, 1.5, 2.5, 4.0] {
+        let traffic = base.with_write_intensity(wi);
+        let stalled = ra.inference_latency_stalled(&m, &traffic, &bw, Some(&sp));
+        assert!(stalled.stall_s >= last, "wi {wi}: stall {} < {last}", stalled.stall_s);
+        last = stalled.stall_s;
+    }
+    assert!(last > 0.0);
+}
+
+/// The re-derived selection records — stall-scored latency included — are
+/// byte-stable across worker counts, and every candidate carries the stall
+/// decomposition metrics.
+#[test]
+fn selection_records_carry_stalls_and_are_worker_invariant() {
+    let zoo = shared_zoo();
+    let spec = select::spec_selection(&zoo);
+    let serial = Runner::new(1).run(spec.clone());
+    let parallel = Runner::new(4).run(spec);
+    assert_eq!(serial, parallel, "stall-scored records must be byte-stable");
+    for r in &serial {
+        assert!(r.metric_opt("stall_s").is_some(), "{:?}", r.point);
+        assert!(r.metric_opt("compute_latency_s").is_some());
+        assert!(
+            r.metric("latency_s") >= r.metric("compute_latency_s"),
+            "stall can only add latency: {:?}",
+            r.point
+        );
+    }
+    // Somewhere in the grid the stall is real (the 84×84 MRAM corner).
+    assert!(serial.iter().any(|r| r.metric("stall_s") > 0.0));
+}
