@@ -10,7 +10,7 @@ use stt_ai::accel::{ArrayConfig, RetentionAnalysis};
 use stt_ai::ber::{BankSplit, Injector, WordKind};
 use stt_ai::coordinator::{Batcher, Request};
 use stt_ai::dse::engine::Runner;
-use stt_ai::dse::{cache, DramOverheadRow, RetentionRow};
+use stt_ai::dse::{cache, engine, select, DramOverheadRow, RetentionRow};
 use stt_ai::memsys::DramModel;
 use stt_ai::models::{self, DType};
 use stt_ai::mram::montecarlo::DEFAULT_CHUNK_SAMPLES;
@@ -93,6 +93,19 @@ fn main() {
         cold.median_ns / warm.median_ns
     );
 
+    // Selection-grid evaluation: the full 108-candidate (variant × Δ × BER
+    // × GLB × array) grid behind `stt-ai select`, warm caches — the
+    // per-candidate evaluator cost the batched/tiered hot path targets.
+    let shared = engine::shared_zoo();
+    let sel_spec = select::spec_selection(&shared);
+    let sel_label = format!("dse/selection_grid_{}", sel_spec.len());
+    let r = b.run(&sel_label, || sel_spec.run_serial());
+    ledger.add_throughput(&sel_label, &r, sel_spec.len() as f64, "candidates");
+    println!(
+        "    -> {:.1} us/candidate warm",
+        r.median_ns / sel_spec.len() as f64 / 1e3
+    );
+
     // Monte-Carlo PT sampling, serial vs pool-parallel — the headline
     // datapoints; `benches/montecarlo.rs` carries the deep dive.
     let mc = MonteCarlo::paper_glb();
@@ -155,8 +168,15 @@ fn main() {
         auto.workers()
     );
 
-    if let Some(path) = bench::bench_json_from_args() {
-        ledger.write_json(&path).expect("write --bench-json");
-        println!("-- wrote {}", path.display());
+    // Tiered-cache breakdown over the whole run: which entry point absorbed
+    // the hot-path work (L1 per-candidate derived, L2 shared walks, L3
+    // model fingerprints).
+    println!("-- dse::cache tiers (whole run)");
+    for e in cache::tier_stats() {
+        println!("    L{} {:<18} {:>9} hits {:>9} misses", e.tier, e.name, e.hits, e.misses);
     }
+
+    // --bench-json / --save-baseline / --baseline handling (the CI
+    // regression gate lives behind `--baseline`).
+    bench::finish(&ledger);
 }

@@ -85,8 +85,5 @@ fn main() {
         during as f64 / n as f64
     );
 
-    if let Some(path) = bench::bench_json_from_args() {
-        ledger.write_json(&path).expect("write --bench-json");
-        println!("-- wrote {}", path.display());
-    }
+    bench::finish(&ledger);
 }

@@ -51,8 +51,5 @@ fn main() {
     println!("    -> max stall across the comparison grid: {:.3} ms", worst * 1e3);
     assert!(worst > 0.0, "the stall comparison must surface a nonzero stall");
 
-    if let Some(path) = bench::bench_json_from_args() {
-        ledger.write_json(&path).expect("write --bench-json");
-        println!("-- wrote {}", path.display());
-    }
+    bench::finish(&ledger);
 }

@@ -15,5 +15,5 @@ pub mod traffic;
 pub use core::{ArrayConfig, CoreMode, PeBlock};
 pub use simulator::{conv_golden, simulate_conv, SimResult};
 pub use systolic::{eq8_steps, matmul_golden, simulate_fc, SystolicResult};
-pub use timing::{LayerTiming, ModelRetention, RetentionAnalysis, StalledLatency};
+pub use timing::{LayerTiming, ModelRetention, RetentionAnalysis, StallPlan, StalledLatency};
 pub use traffic::{LayerTraffic, ModelTraffic};

@@ -11,7 +11,9 @@
 
 use super::core::ArrayConfig;
 use super::traffic::ModelTraffic;
-use crate::memsys::bandwidth::{layer_stall, GlbBandwidth};
+use crate::memsys::bandwidth::{
+    scratchpad_bytes_per_s, stall_from_loads, GlbBandwidth, ServiceLoads,
+};
 use crate::memsys::Scratchpad;
 use crate::models::{ConvLayer, FcLayer, Layer, Model};
 use crate::util::ceil_div;
@@ -186,24 +188,24 @@ impl<'a> RetentionAnalysis<'a> {
         t
     }
 
-    /// End-to-end inference time under a finite GLB write/read bandwidth:
-    /// the Eq. 5/8 compute walk plus, per conv layer, the buffer service
-    /// time the layer's generation time cannot hide
-    /// ([`crate::memsys::bandwidth::layer_stall`]). FC layers stream their
-    /// weights from the NVM (§V.A scope) and pool stages are compute-only,
-    /// so neither stalls on the GLB. With [`GlbBandwidth::unconstrained`]
-    /// and no scratchpad this reproduces [`Self::inference_latency`]
-    /// exactly (zero-stall parity). `traffic` must be the walk of the same
-    /// model on the same array/batch.
-    pub fn inference_latency_stalled(
+    /// Flatten the branchy per-layer walk ONCE into a [`StallPlan`]: the
+    /// compute walk total, the scratchpad service rate, and one pre-routed
+    /// [`ServiceLoads`] + generation time per conv layer. Evaluating the
+    /// plan at a [`GlbBandwidth`] is then a branch-light loop over plain
+    /// arrays ([`StallPlan::stalled_latency`]) — the hot shape for candidate
+    /// grids that revisit the same (model, array, batch, traffic) under many
+    /// GLB organizations. `traffic` must be the walk of the same model on
+    /// the same array/batch.
+    pub fn stall_plan(
         &self,
         m: &Model,
         traffic: &ModelTraffic,
-        glb: &GlbBandwidth,
         scratchpad: Option<&Scratchpad>,
-    ) -> StalledLatency {
+    ) -> StallPlan {
+        let conv_loads = traffic.routed_loads(scratchpad);
+        let sp_bytes_per_s = scratchpad.map_or(f64::INFINITY, scratchpad_bytes_per_s);
         let mut compute = 0.0;
-        let mut stall = 0.0;
+        let mut conv_t_gen = Vec::with_capacity(conv_loads.len());
         let mut conv = traffic.layers.iter();
         for l in &m.layers {
             match l {
@@ -214,21 +216,66 @@ impl<'a> RetentionAnalysis<'a> {
                         if t.is_conv {
                             let lt = conv.next().expect("traffic walk covers every conv layer");
                             debug_assert_eq!(lt.name, t.name, "traffic/timing walks must align");
-                            stall += layer_stall(
-                                glb,
-                                scratchpad,
-                                lt.glb_reads,
-                                lt.glb_writes,
-                                lt.partial_bytes,
-                                lt.partial_rounds,
-                                t.t_gen,
-                            );
+                            conv_t_gen.push(t.t_gen);
                         }
                     }
                 }
             }
         }
-        StalledLatency { compute_s: compute, stall_s: stall }
+        StallPlan { compute_s: compute, sp_bytes_per_s, conv_loads, conv_t_gen }
+    }
+
+    /// End-to-end inference time under a finite GLB write/read bandwidth:
+    /// the Eq. 5/8 compute walk plus, per conv layer, the buffer service
+    /// time the layer's generation time cannot hide
+    /// ([`crate::memsys::bandwidth::layer_stall`]). FC layers stream their
+    /// weights from the NVM (§V.A scope) and pool stages are compute-only,
+    /// so neither stalls on the GLB. With [`GlbBandwidth::unconstrained`]
+    /// and no scratchpad this reproduces [`Self::inference_latency`]
+    /// exactly (zero-stall parity). `traffic` must be the walk of the same
+    /// model on the same array/batch. One-shot composition of
+    /// [`Self::stall_plan`] + [`StallPlan::stalled_latency`].
+    pub fn inference_latency_stalled(
+        &self,
+        m: &Model,
+        traffic: &ModelTraffic,
+        glb: &GlbBandwidth,
+        scratchpad: Option<&Scratchpad>,
+    ) -> StalledLatency {
+        self.stall_plan(m, traffic, scratchpad).stalled_latency(glb)
+    }
+}
+
+/// The pre-flattened stalled-latency walk of one (model, array, batch,
+/// traffic, scratchpad) coordinate: everything the per-candidate loop needs
+/// except the GLB service rates. Built once by
+/// [`RetentionAnalysis::stall_plan`], evaluated per candidate by
+/// [`Self::stalled_latency`] — the selection grid shares one plan across
+/// every (variant, Δ, BER) that only changes the GLB bandwidth.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StallPlan {
+    /// Total compute walk (s) — identical arithmetic to
+    /// [`RetentionAnalysis::inference_latency`].
+    pub compute_s: f64,
+    /// Scratchpad service rate (`f64::INFINITY` without a scratchpad).
+    pub sp_bytes_per_s: f64,
+    /// Pre-routed buffer loads, one per conv layer in walk order.
+    pub conv_loads: Vec<ServiceLoads>,
+    /// Matching ofmap generation times (s).
+    pub conv_t_gen: Vec<f64>,
+}
+
+impl StallPlan {
+    /// Evaluate the plan at one GLB organization's service rates: the
+    /// branch-light inner loop ([`stall_from_loads`] over the flat arrays),
+    /// accumulating per-layer stalls in the same order as the one-shot walk
+    /// (bit-identical totals).
+    pub fn stalled_latency(&self, glb: &GlbBandwidth) -> StalledLatency {
+        let mut stall = 0.0;
+        for (loads, t_gen) in self.conv_loads.iter().zip(&self.conv_t_gen) {
+            stall += stall_from_loads(glb, self.sp_bytes_per_s, loads, *t_gen);
+        }
+        StalledLatency { compute_s: self.compute_s, stall_s: stall }
     }
 }
 
@@ -430,6 +477,34 @@ mod tests {
         };
         let worse = ra.inference_latency_stalled(&m, &traffic, &slower, Some(&sp));
         assert!(worse.stall_s >= stalled.stall_s);
+    }
+
+    #[test]
+    fn stall_plan_reproduces_the_one_shot_walk_bit_for_bit() {
+        use crate::memsys::{GlbBandwidth, GlbKind, Scratchpad};
+        use crate::util::units::MB;
+        let a = paper_array();
+        let m = models::by_name("ResNet50").unwrap();
+        let ra = RetentionAnalysis::new(&a, 16);
+        let traffic = ModelTraffic::analyze(&m, &a, DType::Bf16, 16, 12 * MB);
+        let sp = Scratchpad::paper_bf16();
+        let bandwidths = [
+            GlbBandwidth::unconstrained(),
+            GlbBandwidth::of(&GlbKind::baseline(), 0.0, 0.0),
+            GlbBandwidth::of(&GlbKind::stt_ai(), 1.0e-8, 1.0e-5),
+            GlbBandwidth::of(&GlbKind::stt_ai_ultra(), 1.0e-8, 1.0e-5),
+        ];
+        for scratchpad in [None, Some(&sp)] {
+            // One flattening, many GLB organizations — the grid's hot shape.
+            let plan = ra.stall_plan(&m, &traffic, scratchpad);
+            assert_eq!(plan.conv_loads.len(), plan.conv_t_gen.len());
+            assert_eq!(plan.compute_s, ra.inference_latency(&m));
+            for bw in &bandwidths {
+                let fast = plan.stalled_latency(bw);
+                let slow = ra.inference_latency_stalled(&m, &traffic, bw, scratchpad);
+                assert_eq!(fast, slow, "plan and one-shot walk must agree exactly");
+            }
+        }
     }
 
     #[test]

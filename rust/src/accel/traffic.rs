@@ -7,6 +7,8 @@
 
 use super::core::ArrayConfig;
 use super::timing::steps_per_out_ch;
+use crate::memsys::bandwidth::{route_layer, ServiceLoads};
+use crate::memsys::Scratchpad;
 use crate::models::{ConvLayer, DType, Layer, Model};
 
 /// Byte traffic of one conv layer at a given batch.
@@ -81,6 +83,19 @@ impl ModelTraffic {
     /// Max partial-ofmap bytes over the model (Fig. 18's metric).
     pub fn max_partial_bytes(&self) -> u64 {
         self.layers.iter().map(|l| l.partial_bytes).max().unwrap_or(0)
+    }
+
+    /// Pre-route every layer through the scratchpad policy in one flat pass
+    /// ([`route_layer`]): the per-layer branch on scratchpad presence and
+    /// the [`crate::memsys::scratchpad::TrafficSplit`] arithmetic run once
+    /// per traffic model instead of once per (candidate × layer), leaving
+    /// the stall hot loop ([`crate::accel::StallPlan::stalled_latency`]) a
+    /// branch-light walk over plain arrays.
+    pub fn routed_loads(&self, scratchpad: Option<&Scratchpad>) -> Vec<ServiceLoads> {
+        let route = |l: &LayerTraffic| {
+            route_layer(scratchpad, l.glb_reads, l.glb_writes, l.partial_bytes, l.partial_rounds)
+        };
+        self.layers.iter().map(route).collect()
     }
 
     /// The whole walk with every layer's write side scaled by `wi`

@@ -1,11 +1,29 @@
-//! Cross-sweep memoization of the per-layer model walks.
+//! Tiered cross-sweep memoization of the per-layer model walks.
 //!
 //! `fig11`/`fig12`/`fig14` (and every custom sweep) used to re-derive
 //! overlapping [`ModelTraffic`] and retention walks for the same
 //! (model, array, dtype, batch, GLB) coordinates — once per sweep point,
-//! across sweeps, across figures (the ROADMAP perf item). Both walks are
-//! pure functions of those coordinates, so this module interns the results
-//! process-wide:
+//! across sweeps, across figures (the ROADMAP perf item). All of these are
+//! pure functions of their coordinates, so this module interns the results
+//! process-wide, organized in three explicit tiers:
+//!
+//! * **L1 — per-candidate derived results**: the flattened stall plan
+//!   ([`stall_plan`]), the DRAM spill row ([`spill`]) and the analytical
+//!   fault exposure ([`exposure`]) the selection evaluator derives per
+//!   candidate. The 108+ grid collapses to a handful of distinct
+//!   (array, glb, model, scratchpad) groups, so per-group work is computed
+//!   once and candidates that differ only in GLB organization/Δ/BER reuse
+//!   it — the "batched evaluator" of the hot-path campaign.
+//! * **L2 — shared model walks**: [`traffic`], [`retention`],
+//!   [`zoo_occupancy`], and the Monte-Carlo design/run memos
+//!   ([`mc_design`], [`mc_result`]) that L1 and the figure sweeps compose.
+//! * **L3 — model fingerprints**: every key above starts from a structural
+//!   [`Model::fingerprint`]; for models that live in the process-wide
+//!   [`crate::dse::engine::shared_zoo`] the FNV walk itself is memoized by
+//!   buffer index, so hot keys cost an address check instead of a per-layer
+//!   hash.
+//!
+//! Mechanics shared by all tiers:
 //!
 //! * keys are (model name + structural fingerprint, array-config bits,
 //!   dtype/batch/GLB) — fingerprinting keeps ad-hoc test models from
@@ -14,23 +32,114 @@
 //!   allocation; a racing duplicate computation is harmless (identical
 //!   values, first insert wins);
 //! * results are bit-identical to uncached evaluation — the figure parity
-//!   tests cover the cached paths.
+//!   tests cover the cached paths;
+//! * every entry point keeps its own hit/miss [`Counter`]; [`stats`] is the
+//!   aggregate pair, [`tier_stats`] the per-entry breakdown
+//!   `benches/hotpath.rs` prints into the bench artifact.
 //!
 //! `benches/hotpath.rs` carries the cold-vs-warm datapoint for this cache.
-//!
-//! The same interning serves the Monte-Carlo sweep: [`mc_design`] memoizes
-//! the solved per-(technology, targets) [`MonteCarlo`] engine so every
-//! `mc_samples`/Δ point shares one Δ-scaling solve and driver sizing.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
-use crate::accel::{ArrayConfig, ModelRetention, ModelTraffic, RetentionAnalysis};
+use crate::accel::{ArrayConfig, ModelRetention, ModelTraffic, RetentionAnalysis, StallPlan};
+use crate::ber::{BankSplit, FaultExposure};
+use crate::dse::capacity::DramOverheadRow;
+use crate::memsys::{DramModel, Scratchpad};
 use crate::models::{DType, Model};
 use crate::mram::montecarlo::{McResult, MonteCarlo};
 use crate::mram::scaling::DesignTargets;
 use crate::mram::technology::TechnologyId;
+
+// ---------------------------------------------------------------------------
+// Per-entry-point hit/miss counters
+// ---------------------------------------------------------------------------
+
+/// One entry point's hit/miss counter.
+struct Counter {
+    name: &'static str,
+    tier: u8,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Counter {
+    const fn new(name: &'static str, tier: u8) -> Self {
+        Self { name, tier, hits: AtomicU64::new(0), misses: AtomicU64::new(0) }
+    }
+
+    fn hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn reset(&self) {
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+}
+
+static STALL_PLAN: Counter = Counter::new("stall_plan", 1);
+static SPILL: Counter = Counter::new("spill", 1);
+static EXPOSURE: Counter = Counter::new("exposure", 1);
+static TRAFFIC: Counter = Counter::new("traffic", 2);
+static RETENTION: Counter = Counter::new("retention", 2);
+static OCCUPANCY: Counter = Counter::new("zoo_occupancy", 2);
+static MC_DESIGN: Counter = Counter::new("mc_design", 2);
+static MC_RUN: Counter = Counter::new("mc_run", 2);
+static FINGERPRINT: Counter = Counter::new("model_fingerprint", 3);
+
+const COUNTERS: [&Counter; 9] = [
+    &STALL_PLAN,
+    &SPILL,
+    &EXPOSURE,
+    &TRAFFIC,
+    &RETENTION,
+    &OCCUPANCY,
+    &MC_DESIGN,
+    &MC_RUN,
+    &FINGERPRINT,
+];
+
+/// Snapshot of one entry point's counters (see [`tier_stats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EntryStats {
+    /// Entry-point name (`traffic`, `stall_plan`, ...).
+    pub name: &'static str,
+    /// Cache tier: 1 = per-candidate derived, 2 = shared walks, 3 = model
+    /// fingerprints.
+    pub tier: u8,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+/// Per-entry-point hit/miss counters since process start (or the last
+/// [`clear`]), tier-ordered — the breakdown the bench binaries print.
+pub fn tier_stats() -> Vec<EntryStats> {
+    COUNTERS
+        .iter()
+        .map(|c| EntryStats {
+            name: c.name,
+            tier: c.tier,
+            hits: c.hits.load(Ordering::Relaxed),
+            misses: c.misses.load(Ordering::Relaxed),
+        })
+        .collect()
+}
+
+/// Aggregate (hits, misses) over every entry point since process start (or
+/// the last [`clear`]).
+pub fn stats() -> (u64, u64) {
+    tier_stats().iter().fold((0, 0), |(h, m), e| (h + e.hits, m + e.misses))
+}
+
+// ---------------------------------------------------------------------------
+// Keys
+// ---------------------------------------------------------------------------
 
 /// Hashable identity of an [`ArrayConfig`] (f64 fields by bit pattern).
 #[derive(Clone, Copy, PartialEq, Eq, Hash)]
@@ -58,7 +167,8 @@ impl ArrayKey {
     }
 }
 
-/// Hashable identity of a [`Model`]: name + structural fingerprint.
+/// Hashable identity of a [`Model`]: name + structural fingerprint (the
+/// fingerprint itself goes through the L3 memo).
 #[derive(Clone, PartialEq, Eq, Hash)]
 struct ModelKey {
     name: String,
@@ -67,8 +177,40 @@ struct ModelKey {
 
 impl ModelKey {
     fn of(m: &Model) -> Self {
-        Self { name: m.name.clone(), fingerprint: m.fingerprint() }
+        Self { name: m.name.clone(), fingerprint: fingerprint_of(m) }
     }
+}
+
+/// Hashable identity of an optional [`Scratchpad`]: presence flag + the
+/// fields the routed loads and the service rate depend on.
+type ScratchpadKey = (u64, u64, u64, u64, u64);
+
+fn scratchpad_key(sp: Option<&Scratchpad>) -> ScratchpadKey {
+    match sp {
+        Some(sp) => (
+            1,
+            sp.array.sram_latency_s().to_bits(),
+            sp.array.capacity_bytes,
+            sp.banks as u64,
+            sp.gated_fraction.to_bits(),
+        ),
+        None => (0, 0, 0, 0, 0),
+    }
+}
+
+/// Hashable identity of a [`DramModel`] (FNV fold of the field bits).
+fn dram_fingerprint(d: &DramModel) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for bits in [
+        d.transfer_rate.to_bits(),
+        ((d.bus_bits as u64) << 32) | d.channels as u64,
+        d.efficiency.to_bits(),
+        d.energy_pj_per_bit.to_bits(),
+        d.burst_latency.to_bits(),
+    ] {
+        h = (h ^ bits).wrapping_mul(0x0100_0000_01b3);
+    }
+    h
 }
 
 type TrafficKey = (ModelKey, ArrayKey, u64, u64, u64); // (dtype bytes, batch, glb)
@@ -76,9 +218,10 @@ type RetentionKey = (ModelKey, ArrayKey, u64); // (batch)
 type OccupancyKey = (u64, ArrayKey, u64); // (zoo fingerprint fold, array, batch)
 type McKey = (TechnologyId, u64, u64, u64, u64); // (targets, f64 fields by bit pattern)
 type McRunKey = (McKey, u64, u64, u64); // (delta_gb bits, seed, n)
-
-static HITS: AtomicU64 = AtomicU64::new(0);
-static MISSES: AtomicU64 = AtomicU64::new(0);
+// (dtype bytes, batch, glb, write-intensity bits, scratchpad)
+type StallPlanKey = (ModelKey, ArrayKey, u64, u64, u64, u64, ScratchpadKey);
+type SpillKey = (ModelKey, ArrayKey, u64, u64, u64, u64); // (dram fp, dtype bytes, batch, glb)
+type ExposureKey = (ModelKey, u64, u64, u64, u64); // (dtype bytes, word bytes, msb/lsb bits)
 
 fn traffic_map() -> &'static Mutex<HashMap<TrafficKey, Arc<ModelTraffic>>> {
     static M: OnceLock<Mutex<HashMap<TrafficKey, Arc<ModelTraffic>>>> = OnceLock::new();
@@ -112,6 +255,21 @@ fn mc_run_map() -> &'static Mutex<HashMap<McRunKey, McRunCell>> {
     M.get_or_init(|| Mutex::new(HashMap::new()))
 }
 
+fn stall_plan_map() -> &'static Mutex<HashMap<StallPlanKey, Arc<StallPlan>>> {
+    static M: OnceLock<Mutex<HashMap<StallPlanKey, Arc<StallPlan>>>> = OnceLock::new();
+    M.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn spill_map() -> &'static Mutex<HashMap<SpillKey, Arc<DramOverheadRow>>> {
+    static M: OnceLock<Mutex<HashMap<SpillKey, Arc<DramOverheadRow>>>> = OnceLock::new();
+    M.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn exposure_map() -> &'static Mutex<HashMap<ExposureKey, Arc<FaultExposure>>> {
+    static M: OnceLock<Mutex<HashMap<ExposureKey, Arc<FaultExposure>>>> = OnceLock::new();
+    M.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
 fn mc_key(id: TechnologyId, targets: &DesignTargets) -> McKey {
     (
         id,
@@ -122,16 +280,57 @@ fn mc_key(id: TechnologyId, targets: &DesignTargets) -> McKey {
     )
 }
 
+// ---------------------------------------------------------------------------
+// L3 — model fingerprints
+// ---------------------------------------------------------------------------
+
+/// Memoized [`Model::fingerprint`] for models that live in the process-wide
+/// [`crate::dse::engine::shared_zoo`] buffer (identified by address — the
+/// zoo `Arc` is held here, so the buffer is stable for the process
+/// lifetime). Ad-hoc models (tests, custom zoos) compute the FNV walk
+/// directly and count as misses — they can never alias a zoo slot.
+fn fingerprint_of(m: &Model) -> u64 {
+    struct ZooFps {
+        zoo: crate::dse::engine::Zoo,
+        cells: Vec<OnceLock<u64>>,
+    }
+    static FPS: OnceLock<ZooFps> = OnceLock::new();
+    let fps = FPS.get_or_init(|| {
+        let zoo = crate::dse::engine::shared_zoo();
+        let cells = (0..zoo.len()).map(|_| OnceLock::new()).collect();
+        ZooFps { zoo, cells }
+    });
+    let base = fps.zoo.as_ptr() as usize;
+    let addr = m as *const Model as usize;
+    let size = std::mem::size_of::<Model>();
+    if addr >= base && addr < base + fps.zoo.len() * size && (addr - base) % size == 0 {
+        let idx = (addr - base) / size;
+        if let Some(fp) = fps.cells[idx].get() {
+            FINGERPRINT.hit();
+            return *fp;
+        }
+        FINGERPRINT.miss();
+        *fps.cells[idx].get_or_init(|| fps.zoo[idx].fingerprint())
+    } else {
+        FINGERPRINT.miss();
+        m.fingerprint()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// L2 — shared model walks
+// ---------------------------------------------------------------------------
+
 /// Memoized [`ModelTraffic::analyze`].
 pub fn traffic(m: &Model, a: &ArrayConfig, dt: DType, batch: u64, glb_bytes: u64) -> Arc<ModelTraffic> {
     let key: TrafficKey = (ModelKey::of(m), ArrayKey::of(a), dt.bytes(), batch, glb_bytes);
     if let Some(hit) = traffic_map().lock().unwrap().get(&key) {
-        HITS.fetch_add(1, Ordering::Relaxed);
+        TRAFFIC.hit();
         return hit.clone();
     }
     // Compute outside the lock: the walk is the expensive part, and a racing
     // duplicate insert produces an identical value (first insert wins).
-    MISSES.fetch_add(1, Ordering::Relaxed);
+    TRAFFIC.miss();
     let v = Arc::new(ModelTraffic::analyze(m, a, dt, batch, glb_bytes));
     traffic_map().lock().unwrap().entry(key).or_insert(v).clone()
 }
@@ -140,10 +339,10 @@ pub fn traffic(m: &Model, a: &ArrayConfig, dt: DType, batch: u64, glb_bytes: u64
 pub fn retention(m: &Model, a: &ArrayConfig, batch: u64) -> Arc<ModelRetention> {
     let key: RetentionKey = (ModelKey::of(m), ArrayKey::of(a), batch);
     if let Some(hit) = retention_map().lock().unwrap().get(&key) {
-        HITS.fetch_add(1, Ordering::Relaxed);
+        RETENTION.hit();
         return hit.clone();
     }
-    MISSES.fetch_add(1, Ordering::Relaxed);
+    RETENTION.miss();
     let v = Arc::new(RetentionAnalysis::new(a, batch).analyze(m));
     retention_map().lock().unwrap().entry(key).or_insert(v).clone()
 }
@@ -154,13 +353,13 @@ pub fn retention(m: &Model, a: &ArrayConfig, batch: u64) -> Arc<ModelRetention> 
 /// order-sensitive fold of the zoo's model fingerprints, so ad-hoc test
 /// zoos never alias the shared zoo.
 pub fn zoo_occupancy(zoo: &[Model], a: &ArrayConfig, batch: u64) -> f64 {
-    let fp = zoo.iter().fold(zoo.len() as u64, |acc, m| acc.rotate_left(7) ^ m.fingerprint());
+    let fp = zoo.iter().fold(zoo.len() as u64, |acc, m| acc.rotate_left(7) ^ fingerprint_of(m));
     let key: OccupancyKey = (fp, ArrayKey::of(a), batch);
     if let Some(hit) = occupancy_map().lock().unwrap().get(&key) {
-        HITS.fetch_add(1, Ordering::Relaxed);
+        OCCUPANCY.hit();
         return *hit;
     }
-    MISSES.fetch_add(1, Ordering::Relaxed);
+    OCCUPANCY.miss();
     let v = zoo.iter().map(|m| retention(m, a, batch).max_t_ret()).fold(0.0, f64::max);
     *occupancy_map().lock().unwrap().entry(key).or_insert(v)
 }
@@ -177,11 +376,11 @@ pub fn zoo_occupancy(zoo: &[Model], a: &ArrayConfig, batch: u64) -> f64 {
 pub fn mc_design(id: TechnologyId, targets: &DesignTargets) -> Option<Arc<MonteCarlo>> {
     let key = mc_key(id, targets);
     if let Some(hit) = mc_map().lock().unwrap().get(&key) {
-        HITS.fetch_add(1, Ordering::Relaxed);
+        MC_DESIGN.hit();
         return Some(hit.clone());
     }
     let v = Arc::new(MonteCarlo::for_technology(id, targets)?);
-    MISSES.fetch_add(1, Ordering::Relaxed);
+    MC_DESIGN.miss();
     Some(mc_map().lock().unwrap().entry(key).or_insert(v).clone())
 }
 
@@ -205,29 +404,120 @@ pub fn mc_result(
         map.entry(key).or_insert_with(|| Arc::new(OnceLock::new())).clone()
     };
     if cell.get().is_some() {
-        HITS.fetch_add(1, Ordering::Relaxed);
+        MC_RUN.hit();
     } else {
-        MISSES.fetch_add(1, Ordering::Relaxed);
+        MC_RUN.miss();
     }
     // Outside the map lock: the walk is the expensive part. get_or_init
     // runs it exactly once per key; latecomers block until it is ready.
     Some(cell.get_or_init(|| mc.at_delta_gb(delta_gb).run_serial(seed, n as usize)).clone())
 }
 
-/// (hits, misses) since process start (or the last [`clear`]).
-pub fn stats() -> (u64, u64) {
-    (HITS.load(Ordering::Relaxed), MISSES.load(Ordering::Relaxed))
+// ---------------------------------------------------------------------------
+// L1 — per-candidate derived results
+// ---------------------------------------------------------------------------
+
+/// Memoized flattened stall walk ([`RetentionAnalysis::stall_plan`] over the
+/// memoized traffic, with the write side scaled by `write_intensity` first
+/// when it differs from 1 — at 1 the raw walk is used, which
+/// [`crate::accel::LayerTraffic::with_write_intensity`] guarantees is
+/// bit-identical). Selection grids share one plan across every candidate
+/// that differs only in GLB organization/Δ/BER: evaluating a candidate then
+/// costs one branch-light [`StallPlan::stalled_latency`] pass instead of a
+/// full per-layer walk.
+pub fn stall_plan(
+    m: &Model,
+    a: &ArrayConfig,
+    dt: DType,
+    batch: u64,
+    glb_bytes: u64,
+    write_intensity: f64,
+    scratchpad: Option<&Scratchpad>,
+) -> Arc<StallPlan> {
+    let key: StallPlanKey = (
+        ModelKey::of(m),
+        ArrayKey::of(a),
+        dt.bytes(),
+        batch,
+        glb_bytes,
+        write_intensity.to_bits(),
+        scratchpad_key(scratchpad),
+    );
+    if let Some(hit) = stall_plan_map().lock().unwrap().get(&key) {
+        STALL_PLAN.hit();
+        return hit.clone();
+    }
+    STALL_PLAN.miss();
+    let walk = traffic(m, a, dt, batch, glb_bytes);
+    let ra = RetentionAnalysis::new(a, batch);
+    let plan = if write_intensity == 1.0 {
+        ra.stall_plan(m, &walk, scratchpad)
+    } else {
+        ra.stall_plan(m, &walk.with_write_intensity(write_intensity), scratchpad)
+    };
+    let v = Arc::new(plan);
+    stall_plan_map().lock().unwrap().entry(key).or_insert(v).clone()
 }
 
-/// Drop every cached walk and reset the counters (bench/test hook).
+/// Memoized DRAM spill row ([`DramOverheadRow::analyze`]): candidates that
+/// share (model, array, dtype, batch, GLB, DRAM) — the whole
+/// variant × Δ × BER slice of the selection grid — share one spill
+/// analysis.
+pub fn spill(
+    m: &Model,
+    a: &ArrayConfig,
+    dram: &DramModel,
+    dt: DType,
+    batch: u64,
+    glb_bytes: u64,
+) -> Arc<DramOverheadRow> {
+    let key: SpillKey =
+        (ModelKey::of(m), ArrayKey::of(a), dram_fingerprint(dram), dt.bytes(), batch, glb_bytes);
+    if let Some(hit) = spill_map().lock().unwrap().get(&key) {
+        SPILL.hit();
+        return hit.clone();
+    }
+    SPILL.miss();
+    let v = Arc::new(DramOverheadRow::analyze(m, a, dram, dt, batch, glb_bytes));
+    spill_map().lock().unwrap().entry(key).or_insert(v).clone()
+}
+
+/// Memoized analytical fault exposure ([`FaultExposure::analyze`]): the
+/// powf-heavy per-layer pass is a pure function of (model, dtype, bank
+/// split), and the grid's BER budgets collapse to a handful of distinct
+/// splits.
+pub fn exposure(m: &Model, dt: DType, split: &BankSplit) -> Arc<FaultExposure> {
+    let key: ExposureKey = (
+        ModelKey::of(m),
+        dt.bytes(),
+        split.kind.bytes() as u64,
+        split.msb_ber.to_bits(),
+        split.lsb_ber.to_bits(),
+    );
+    if let Some(hit) = exposure_map().lock().unwrap().get(&key) {
+        EXPOSURE.hit();
+        return hit.clone();
+    }
+    EXPOSURE.miss();
+    let v = Arc::new(FaultExposure::analyze(m, dt, split));
+    exposure_map().lock().unwrap().entry(key).or_insert(v).clone()
+}
+
+/// Drop every cached walk and reset the counters (bench/test hook). The L3
+/// fingerprint memo survives — zoo fingerprints are index-stable for the
+/// process lifetime and can never go stale — but its counters reset.
 pub fn clear() {
     traffic_map().lock().unwrap().clear();
     retention_map().lock().unwrap().clear();
     occupancy_map().lock().unwrap().clear();
     mc_map().lock().unwrap().clear();
     mc_run_map().lock().unwrap().clear();
-    HITS.store(0, Ordering::Relaxed);
-    MISSES.store(0, Ordering::Relaxed);
+    stall_plan_map().lock().unwrap().clear();
+    spill_map().lock().unwrap().clear();
+    exposure_map().lock().unwrap().clear();
+    for c in COUNTERS {
+        c.reset();
+    }
 }
 
 #[cfg(test)]
@@ -378,5 +668,110 @@ mod tests {
         let t1 = traffic(&m1, &a, DType::Bf16, 1, 12 * MB);
         let t2 = traffic(&m2, &a, DType::Bf16, 1, 12 * MB);
         assert_ne!(t1.layers[0].glb_writes, t2.layers[0].glb_writes);
+    }
+
+    #[test]
+    fn zoo_fingerprints_are_memoized_and_exact() {
+        // L3: a shared-zoo model's memoized fingerprint equals the direct
+        // FNV walk, and repeat lookups hit the per-index cell.
+        let zoo = crate::dse::engine::shared_zoo();
+        let m = &zoo[0];
+        assert_eq!(fingerprint_of(m), m.fingerprint());
+        let fp_hits = |stats: &[EntryStats]| {
+            stats.iter().find(|e| e.name == "model_fingerprint").unwrap().hits
+        };
+        let h0 = fp_hits(&tier_stats());
+        assert_eq!(fingerprint_of(m), m.fingerprint());
+        let h1 = fp_hits(&tier_stats());
+        assert!(h1 > h0, "second zoo fingerprint must hit the L3 memo");
+        // An ad-hoc clone lives outside the zoo buffer: identical value,
+        // computed directly (never aliased by address).
+        let clone = m.clone();
+        assert_eq!(fingerprint_of(&clone), m.fingerprint());
+    }
+
+    #[test]
+    fn stall_plans_are_memoized_and_match_the_direct_walk() {
+        use crate::memsys::{GlbBandwidth, GlbKind};
+        let a = ArrayConfig::with_mac_array(84);
+        let zoo = crate::dse::engine::shared_zoo();
+        let m = zoo.iter().find(|m| m.name == "ResNet50").unwrap();
+        let sp = Scratchpad::paper_bf16();
+        let plan = stall_plan(m, &a, DType::Bf16, 16, 12 * MB, 1.0, Some(&sp));
+        // Bit-identical to the uncached flatten over the uncached traffic.
+        let walk = ModelTraffic::analyze(m, &a, DType::Bf16, 16, 12 * MB);
+        let direct = RetentionAnalysis::new(&a, 16).stall_plan(m, &walk, Some(&sp));
+        assert_eq!(*plan, direct);
+        // And evaluating it reproduces the one-shot stalled walk.
+        let bw = GlbBandwidth::of(&GlbKind::stt_ai_ultra(), 1.0e-8, 1.0e-5);
+        assert_eq!(
+            plan.stalled_latency(&bw),
+            RetentionAnalysis::new(&a, 16).inference_latency_stalled(m, &walk, &bw, Some(&sp))
+        );
+        // Same coordinates hit and share the allocation.
+        let again = stall_plan(m, &a, DType::Bf16, 16, 12 * MB, 1.0, Some(&sp));
+        assert!(Arc::ptr_eq(&plan, &again));
+        // Scratchpad presence and write intensity are part of the key.
+        let bare = stall_plan(m, &a, DType::Bf16, 16, 12 * MB, 1.0, None);
+        assert!(!Arc::ptr_eq(&plan, &bare));
+        let train = stall_plan(m, &a, DType::Bf16, 16, 12 * MB, 2.5, Some(&sp));
+        let scaled = RetentionAnalysis::new(&a, 16).stall_plan(
+            m,
+            &walk.with_write_intensity(2.5),
+            Some(&sp),
+        );
+        assert_eq!(*train, scaled);
+    }
+
+    #[test]
+    fn spill_and_exposure_are_memoized_bit_for_bit() {
+        use crate::ber::WordKind;
+        let a = ArrayConfig::paper_42x42();
+        let zoo = crate::dse::engine::shared_zoo();
+        let m = zoo.iter().find(|m| m.name == "VGG16").unwrap();
+        let dram = DramModel::ddr4_2933_dual();
+        let row = spill(m, &a, &dram, DType::Bf16, 8, 12 * MB);
+        let direct = DramOverheadRow::analyze(m, &a, &dram, DType::Bf16, 8, 12 * MB);
+        assert_eq!(row.spill_bytes, direct.spill_bytes);
+        assert_eq!(row.extra_latency, direct.extra_latency);
+        assert_eq!(row.extra_energy, direct.extra_energy);
+        assert!(Arc::ptr_eq(&row, &spill(m, &a, &dram, DType::Bf16, 8, 12 * MB)));
+
+        let split = BankSplit::ultra(WordKind::Bf16);
+        let exp = exposure(m, DType::Bf16, &split);
+        let direct = FaultExposure::analyze(m, DType::Bf16, &split);
+        assert_eq!(exp.expected_flips, direct.expected_flips);
+        assert_eq!(exp.catastrophic_fraction, direct.catastrophic_fraction);
+        assert_eq!(exp.mean_rel_perturbation, direct.mean_rel_perturbation);
+        assert!(Arc::ptr_eq(&exp, &exposure(m, DType::Bf16, &split)));
+        // The budget is part of the key.
+        let relaxed = exposure(m, DType::Bf16, &BankSplit::uniform(WordKind::Bf16, 1.0e-5));
+        assert!(relaxed.catastrophic_fraction > exp.catastrophic_fraction);
+    }
+
+    #[test]
+    fn tier_stats_breaks_the_aggregate_down_per_entry_point() {
+        let a = ArrayConfig::paper_42x42();
+        let m = models::by_name("GoogLeNet").unwrap();
+        let count = |name: &str| {
+            let e = tier_stats().into_iter().find(|e| e.name == name).unwrap();
+            (e.hits, e.misses)
+        };
+        let (_, m0) = count("traffic");
+        let _ = traffic(&m, &a, DType::Int8, 3, 12 * MB);
+        let (h1, m1) = count("traffic");
+        assert!(m1 > m0, "fresh coordinate must miss the traffic entry");
+        let _ = traffic(&m, &a, DType::Int8, 3, 12 * MB);
+        let (h2, _) = count("traffic");
+        assert!(h2 > h1, "repeat must hit the traffic entry");
+        // Tiers are labeled, and the aggregate equals the per-entry sum.
+        let stats_v = tier_stats();
+        assert_eq!(stats_v.len(), 9);
+        assert!(stats_v.iter().any(|e| e.tier == 1));
+        assert!(stats_v.iter().any(|e| e.tier == 2));
+        assert!(stats_v.iter().any(|e| e.tier == 3));
+        let (h, mi) = stats();
+        let sum = stats_v.iter().fold((0, 0), |(a, b), e| (a + e.hits, b + e.misses));
+        assert_eq!((h, mi), sum);
     }
 }

@@ -24,7 +24,7 @@ pub mod select;
 pub use capacity::{CapacityRow, DramOverheadRow};
 pub use delta::DeltaSweep;
 pub use energy_area::EnergyAreaRow;
-pub use engine::{Axis, DesignPoint, Runner, SweepResult, SweepSpec};
+pub use engine::{Axis, DesignPoint, Runner, SweepColumns, SweepResult, SweepSpec};
 pub use retention::RetentionRow;
 pub use scratchpad::{PartialOfmapRow, ScratchpadEnergyRow};
 pub use select::{Constraint, DesignSelection, Objective};

@@ -33,12 +33,14 @@
 
 use std::path::Path;
 
-use crate::accel::{ArrayConfig, RetentionAnalysis};
-use crate::ber::{BankSplit, FaultExposure, WordKind};
+use crate::accel::ArrayConfig;
+use crate::ber::{BankSplit, WordKind};
 use crate::config::{BerConfig, DTypeConfig, GlbVariant, SystemConfig, TechConfig};
 use crate::dse::cache;
 use crate::dse::capacity::DramOverheadRow;
-use crate::dse::engine::{variant_stall_context, Axis, DesignPoint, SweepResult, SweepSpec, Zoo};
+use crate::dse::engine::{
+    variant_stall_context, Axis, DesignPoint, SweepColumns, SweepResult, SweepSpec, Zoo,
+};
 use crate::memsys::{BufferSystem, DramModel, EnergyLedger, GlbKind};
 use crate::models::{DType, Model};
 use crate::mram::technology::finite_or_max;
@@ -146,6 +148,25 @@ impl Constraint {
         }
     }
 
+    /// [`Constraint::satisfied`] against one row of a columnar batch — the
+    /// form the selection hot path uses so feasibility never re-scans a
+    /// record's metric list per constraint.
+    pub fn satisfied_at(&self, cols: &SweepColumns, row: usize) -> bool {
+        let ge = |name: &str, floor: f64| cols.value(row, name).is_some_and(|v| v >= floor);
+        let le = |name: &str, cap: f64| cols.value(row, name).is_some_and(|v| v <= cap);
+        match self {
+            Constraint::MinAccuracy(floor) => ge("est_accuracy", *floor),
+            Constraint::RetentionCoversOccupancy => {
+                match (cols.value(row, "retention_at_ber_s"), cols.value(row, "occupancy_s")) {
+                    (Some(ret), Some(occ)) => ret >= occ,
+                    _ => false,
+                }
+            }
+            Constraint::MaxAreaMm2(cap) => le("accel_area_mm2", *cap),
+            Constraint::MaxPowerMw(cap) => le("accel_power_mw", *cap),
+        }
+    }
+
     /// Stable provenance string (stored in the selection record).
     pub fn describe(&self) -> String {
         match self {
@@ -161,9 +182,16 @@ impl Constraint {
 // Pareto frontier + selection
 // ---------------------------------------------------------------------------
 
-/// Per-record feasibility under a constraint set.
+/// Per-record feasibility under a constraint set (columnar under the hood;
+/// see [`feasible_mask_columns`] when a [`SweepColumns`] view already
+/// exists).
 pub fn feasible_mask(results: &[SweepResult], constraints: &[Constraint]) -> Vec<bool> {
-    results.iter().map(|r| constraints.iter().all(|c| c.satisfied(r))).collect()
+    feasible_mask_columns(&SweepColumns::from_results(results), constraints)
+}
+
+/// [`feasible_mask`] over an existing columnar view.
+pub fn feasible_mask_columns(cols: &SweepColumns, constraints: &[Constraint]) -> Vec<bool> {
+    (0..cols.len()).map(|row| constraints.iter().all(|c| c.satisfied_at(cols, row))).collect()
 }
 
 /// Non-dominated mask over the given objectives. Record `a` dominates `b`
@@ -172,30 +200,42 @@ pub fn feasible_mask(results: &[SweepResult], constraints: &[Constraint]) -> Vec
 /// skipped, so the frontier stays well-defined on custom sweeps that carry
 /// only a subset of the selection metrics.
 pub fn pareto_mask(results: &[SweepResult], objectives: &[Objective]) -> Vec<bool> {
-    let live: Vec<Objective> = objectives
+    pareto_mask_columns(&SweepColumns::from_results(results), objectives)
+}
+
+/// [`pareto_mask`] over an existing columnar view.
+pub fn pareto_mask_columns(cols: &SweepColumns, objectives: &[Objective]) -> Vec<bool> {
+    let rows: Vec<usize> = (0..cols.len()).collect();
+    pareto_rows(cols, objectives, &rows)
+}
+
+/// Non-dominated mask over a row subset of a columnar batch (the mask is
+/// indexed like `rows`). Liveness matches the record path on the same
+/// subset: an objective participates only when every subset row carries its
+/// metric.
+fn pareto_rows(cols: &SweepColumns, objectives: &[Objective], rows: &[usize]) -> Vec<bool> {
+    // Signed sub-columns of the live objectives: smaller is always better
+    // (negating flips the f64 sign bit, which reverses `total_cmp`'s order
+    // exactly, so the signed view is faithful to the per-record compare).
+    let signed: Vec<Vec<f64>> = objectives
         .iter()
-        .copied()
-        .filter(|o| results.iter().all(|r| r.metric_opt(o.metric()).is_some()))
+        .filter_map(|o| {
+            let key = cols.key_index(o.metric())?;
+            if !rows.iter().all(|&r| cols.has(r, key)) {
+                return None;
+            }
+            let col = cols.column(key);
+            let lower = o.lower_is_better();
+            Some(rows.iter().map(|&r| if lower { col[r] } else { -col[r] }).collect())
+        })
         .collect();
-    if live.is_empty() {
-        return vec![true; results.len()];
+    if signed.is_empty() {
+        return vec![true; rows.len()];
     }
-    // Signed view: smaller is always better.
-    let key = |r: &SweepResult, o: Objective| {
-        let v = r.metric(o.metric());
-        if o.lower_is_better() {
-            v
-        } else {
-            -v
-        }
+    let dominates = |a: usize, b: usize| {
+        signed.iter().all(|c| c[a] <= c[b]) && signed.iter().any(|c| c[a] < c[b])
     };
-    let dominates = |a: &SweepResult, b: &SweepResult| {
-        live.iter().all(|&o| key(a, o) <= key(b, o)) && live.iter().any(|&o| key(a, o) < key(b, o))
-    };
-    results
-        .iter()
-        .map(|b| !results.iter().any(|a| dominates(a, b)))
-        .collect()
+    (0..rows.len()).map(|b| !(0..rows.len()).any(|a| dominates(a, b))).collect()
 }
 
 /// Version tag of the latency model behind `latency_s`/`throughput_rps` in
@@ -429,15 +469,22 @@ pub fn select(
     if results.is_empty() {
         anyhow::bail!("selection needs at least one candidate record");
     }
-    if results.iter().all(|r| r.metric_opt(objective.metric()).is_none()) {
+    // One columnar view for the whole pass: feasibility, the frontier and
+    // the winner scan all walk contiguous metric columns instead of
+    // re-scanning every record's `Vec<(&str, f64)>` per probe.
+    let cols = SweepColumns::from_results(results);
+    // Keys are interned from the records, so a missing index means no
+    // record carries the objective metric at all.
+    let Some(obj_key) = cols.key_index(objective.metric()) else {
         anyhow::bail!(
             "sweep {sweep:?} carries no {:?} metric for objective {:?}",
             objective.metric(),
             objective.token()
         );
-    }
-    let feasible = feasible_mask(results, constraints);
-    let n_feasible = feasible.iter().filter(|f| **f).count();
+    };
+    let feasible = feasible_mask_columns(&cols, constraints);
+    let rows: Vec<usize> = (0..cols.len()).filter(|&i| feasible[i]).collect();
+    let n_feasible = rows.len();
     if n_feasible == 0 {
         let described: Vec<String> = constraints.iter().map(Constraint::describe).collect();
         anyhow::bail!(
@@ -446,26 +493,28 @@ pub fn select(
             described
         );
     }
-    let owned: Vec<SweepResult> = results
-        .iter()
-        .zip(&feasible)
-        .filter_map(|(r, ok)| ok.then(|| r.clone()))
-        .collect();
-    let frontier = pareto_mask(&owned, &Objective::all());
+    let frontier = pareto_rows(&cols, &Objective::all(), &rows);
     let n_frontier = frontier.iter().filter(|f| **f).count();
-    let winner = owned
-        .iter()
-        .zip(&frontier)
-        .filter(|(r, on)| **on && r.metric_opt(objective.metric()).is_some())
-        .min_by(|(a, _), (b, _)| {
-            let (va, vb) = (a.metric(objective.metric()), b.metric(objective.metric()));
-            if objective.lower_is_better() {
-                va.total_cmp(&vb)
-            } else {
-                vb.total_cmp(&va)
-            }
-        })
-        .map(|(r, _)| r)
+    // Winner scan over the frontier: signed column compare (strictly-less
+    // update only), which keeps the record path's first-wins tie-breaking.
+    let obj_col = cols.column(obj_key);
+    let lower = objective.lower_is_better();
+    let mut best: Option<(usize, f64)> = None;
+    for (i, &row) in rows.iter().enumerate() {
+        if !frontier[i] || !cols.has(row, obj_key) {
+            continue;
+        }
+        let signed = if lower { obj_col[row] } else { -obj_col[row] };
+        let better = match best {
+            None => true,
+            Some((_, held)) => signed.total_cmp(&held) == std::cmp::Ordering::Less,
+        };
+        if better {
+            best = Some((row, signed));
+        }
+    }
+    let winner = best
+        .map(|(row, _)| &results[row])
         .ok_or_else(|| anyhow::anyhow!("Pareto frontier carries no {:?} metric", objective.metric()))?;
     Ok(DesignSelection {
         sweep: sweep.to_string(),
@@ -594,14 +643,17 @@ fn selection_eval(zoo: &[Model], p: &DesignPoint) -> Vec<(&'static str, f64)> {
     // stalls the array ([`crate::memsys::bandwidth`]), which is what makes
     // `latency_s`/`throughput_rps` variant-, Δ-, BER- and
     // technology-sensitive across the candidate grid.
+    // Both passes are L1-memoized: the whole variant × Δ × BER slice of the
+    // grid shares one flattened stall plan and one spill row per
+    // (model, array, dtype, batch, GLB) group, so a candidate re-prices the
+    // shared plan against its own service rates instead of re-walking every
+    // layer. `sys.scratchpad` is the `scratch` this candidate's context
+    // composed into the buffer system, so the cached plan routes the same
+    // loads the energy ledger above charges.
     let dram = DramModel::ddr4_2933_dual();
-    let spill = DramOverheadRow::analyze(m, &a, &dram, dt, batch, glb);
-    let stalled = RetentionAnalysis::new(&a, batch).inference_latency_stalled(
-        m,
-        &traffic,
-        &bw,
-        sys.scratchpad.as_ref(),
-    );
+    let spill = cache::spill(m, &a, &dram, dt, batch, glb);
+    let plan = cache::stall_plan(m, &a, dt, batch, glb, 1.0, sys.scratchpad.as_ref());
+    let stalled = plan.stalled_latency(&bw);
     let latency = stalled.total() + spill.extra_latency;
 
     // Ares-style accuracy estimate from the analytical fault exposure of
@@ -617,7 +669,7 @@ fn selection_eval(zoo: &[Model], p: &DesignPoint) -> Vec<(&'static str, f64)> {
         // A volatile GLB never flips bits, whatever the variant says.
         BankSplit::uniform(kind, 0.0)
     };
-    let exposure = FaultExposure::analyze(m, dt, &split);
+    let exposure = cache::exposure(m, dt, &split);
     let est_drop = (exposure.catastrophic_fraction * CATASTROPHIC_AMPLIFICATION
         + exposure.mean_rel_perturbation)
         .min(1.0);

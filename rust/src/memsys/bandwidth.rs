@@ -91,11 +91,69 @@ pub fn scratchpad_bytes_per_s(sp: &Scratchpad) -> f64 {
     sp.banks as f64 * WORD_BYTES / sp.array.sram_latency_s().max(PRACTICAL_PULSE_FLOOR)
 }
 
-/// Stall time (s) of one layer: the buffer service the layer's compute time
-/// cannot hide. `glb_reads`/`glb_writes` are the layer's ifmap+weight reads
-/// and final-ofmap writes; partial-ofmap rounds go scratchpad-first (GLB
+/// One layer's buffer load, pre-routed through the scratchpad policy: the
+/// branchy part of [`layer_stall`], factored out so per-layer walks can be
+/// flattened once (per traffic model) and the per-candidate stall loop stays
+/// branch-light over plain arrays — the same split the PR 3 Monte-Carlo
+/// engine applied to its RNG hot loop.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ServiceLoads {
+    /// GLB read bytes, overflow partial-round reads included.
+    pub glb_read_bytes: u64,
+    /// GLB write bytes, overflow partial-round writes included.
+    pub glb_write_bytes: u64,
+    /// Scratchpad write+read bytes (0 without a scratchpad).
+    pub scratchpad_bytes: u64,
+}
+
+/// Route one layer's traffic: partial-ofmap rounds go scratchpad-first (GLB
 /// overflow beyond the scratchpad capacity), or entirely to the GLB when no
 /// scratchpad is present — mirroring [`super::BufferSystem::layer_energy`].
+pub fn route_layer(
+    scratchpad: Option<&Scratchpad>,
+    glb_reads: u64,
+    glb_writes: u64,
+    partial_bytes: u64,
+    partial_rounds: u64,
+) -> ServiceLoads {
+    match scratchpad {
+        Some(sp) => {
+            let split = TrafficSplit::split(partial_bytes, partial_rounds, sp);
+            ServiceLoads {
+                glb_read_bytes: glb_reads + split.glb_overflow_reads,
+                glb_write_bytes: glb_writes + split.glb_overflow_writes,
+                scratchpad_bytes: split.scratchpad_writes + split.scratchpad_reads,
+            }
+        }
+        None => ServiceLoads {
+            glb_read_bytes: glb_reads + partial_bytes * partial_rounds,
+            glb_write_bytes: glb_writes + partial_bytes * partial_rounds,
+            scratchpad_bytes: 0,
+        },
+    }
+}
+
+/// Stall time (s) of one pre-routed layer load at the given GLB rates and
+/// scratchpad service rate (`f64::INFINITY` without a scratchpad; a zero
+/// byte load then contributes exactly `0.0`). Branch-free: the inner loop of
+/// [`crate::accel::StallPlan::stalled_latency`].
+#[inline]
+pub fn stall_from_loads(
+    glb: &GlbBandwidth,
+    sp_bytes_per_s: f64,
+    loads: &ServiceLoads,
+    t_compute: f64,
+) -> f64 {
+    (glb.service_time(loads.glb_read_bytes, loads.glb_write_bytes)
+        + loads.scratchpad_bytes as f64 / sp_bytes_per_s
+        - t_compute)
+        .max(0.0)
+}
+
+/// Stall time (s) of one layer: the buffer service the layer's compute time
+/// cannot hide. `glb_reads`/`glb_writes` are the layer's ifmap+weight reads
+/// and final-ofmap writes; the composition of [`route_layer`] and
+/// [`stall_from_loads`].
 pub fn layer_stall(
     glb: &GlbBandwidth,
     scratchpad: Option<&Scratchpad>,
@@ -105,23 +163,9 @@ pub fn layer_stall(
     partial_rounds: u64,
     t_compute: f64,
 ) -> f64 {
-    let mut reads = glb_reads;
-    let mut writes = glb_writes;
-    let mut sp_time = 0.0;
-    match scratchpad {
-        Some(sp) => {
-            let split = TrafficSplit::split(partial_bytes, partial_rounds, sp);
-            writes += split.glb_overflow_writes;
-            reads += split.glb_overflow_reads;
-            sp_time = (split.scratchpad_writes + split.scratchpad_reads) as f64
-                / scratchpad_bytes_per_s(sp);
-        }
-        None => {
-            writes += partial_bytes * partial_rounds;
-            reads += partial_bytes * partial_rounds;
-        }
-    }
-    (glb.service_time(reads, writes) + sp_time - t_compute).max(0.0)
+    let loads = route_layer(scratchpad, glb_reads, glb_writes, partial_bytes, partial_rounds);
+    let sp_rate = scratchpad.map(scratchpad_bytes_per_s).unwrap_or(f64::INFINITY);
+    stall_from_loads(glb, sp_rate, &loads, t_compute)
 }
 
 #[cfg(test)]
@@ -194,6 +238,31 @@ mod tests {
         assert_eq!(exposed, bw.service_time(MB, MB));
         // Stall is monotone in the write volume.
         assert!(layer_stall(&bw, None, MB, 4 * MB, 0, 0, 0.0) > exposed);
+    }
+
+    #[test]
+    fn routed_loads_reproduce_layer_stall_exactly() {
+        // The flattened fast path (route once, stall per candidate) is the
+        // same arithmetic as the one-shot layer_stall — bit-identical, with
+        // and without a scratchpad.
+        let bw = GlbBandwidth::of(&GlbKind::stt_ai(), 1.0e-8, 1.0e-5);
+        let sp = Scratchpad::paper_bf16();
+        for scratchpad in [None, Some(&sp)] {
+            let loads = route_layer(scratchpad, 3 * MB, MB, 40 * 1024, 64);
+            let sp_rate =
+                scratchpad.map(scratchpad_bytes_per_s).unwrap_or(f64::INFINITY);
+            for t_compute in [0.0, 1e-6, 10.0] {
+                assert_eq!(
+                    stall_from_loads(&bw, sp_rate, &loads, t_compute),
+                    layer_stall(&bw, scratchpad, 3 * MB, MB, 40 * 1024, 64, t_compute),
+                );
+            }
+        }
+        // Without a scratchpad the zero scratchpad load costs exactly zero
+        // time even at the infinite rate (0/inf = 0).
+        let none = route_layer(None, MB, MB, 0, 0);
+        assert_eq!(none.scratchpad_bytes, 0);
+        assert_eq!(stall_from_loads(&bw, f64::INFINITY, &none, 0.0), bw.service_time(MB, MB));
     }
 
     #[test]

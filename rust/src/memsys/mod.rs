@@ -26,7 +26,7 @@ pub mod nvm;
 pub mod scratchpad;
 
 pub use array::{MemoryArray, F_14NM};
-pub use bandwidth::GlbBandwidth;
+pub use bandwidth::{GlbBandwidth, ServiceLoads};
 pub use dram::DramModel;
 pub use hierarchy::{BankSpec, BufferSystem, EnergyLedger, GlbKind, DEFAULT_BANK_LANES};
 pub use nvm::WeightNvm;

@@ -6,10 +6,19 @@
 //! before/after ledger and the per-figure regeneration-cost benches.
 //!
 //! [`Ledger`] collects results into the machine-readable `BENCH_*.json`
-//! trajectory (name → median/min/max ns + optional throughput): bench
-//! binaries honor `--bench-json <path>` (see [`bench_json_from_args`]) so
-//! CI can archive one JSON artifact per bench run, and `--smoke` (see
+//! trajectory (name → median/mean/p95/min/max ns + optional throughput):
+//! bench binaries honor `--bench-json <path>` (see [`bench_json_from_args`])
+//! so CI can archive one JSON artifact per bench run, and `--smoke` (see
 //! [`smoke_from_args`]) for the reduced-n every-PR compile-and-run check.
+//!
+//! The saved-baseline workflow (criterion-style, offline): `--save-baseline
+//! <path>` merges this run's entries into a baseline file, and `--baseline
+//! <path>` compares the run against one — per-bench relative delta on the
+//! *median* (stable under CI noise), a [`BaselineGate`] with a 15% tolerance
+//! and an absolute noise floor, and a non-zero exit on regression so CI can
+//! gate on it. `--baseline-report <path>` additionally writes the
+//! machine-readable delta document. [`finish`] is the shared bench-binary
+//! tail wiring all four flags.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -21,6 +30,8 @@ use crate::util::json::Json;
 #[derive(Debug, Clone, Copy)]
 pub struct BenchResult {
     pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
     pub min_ns: f64,
     pub max_ns: f64,
     pub iters_per_sample: u64,
@@ -71,8 +82,12 @@ impl Bencher {
             per_iter.push(t.elapsed().as_secs_f64() * 1e9 / iters as f64);
         }
         per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = per_iter.len();
         let res = BenchResult {
-            median_ns: per_iter[per_iter.len() / 2],
+            median_ns: per_iter[n / 2],
+            mean_ns: per_iter.iter().sum::<f64>() / n as f64,
+            // Nearest-rank p95: ceil(0.95·n) in 1-based rank terms.
+            p95_ns: per_iter[((95 * n).div_ceil(100)).saturating_sub(1).min(n - 1)],
             min_ns: per_iter[0],
             max_ns: *per_iter.last().unwrap(),
             iters_per_sample: iters,
@@ -96,10 +111,26 @@ impl Bencher {
 #[derive(Debug, Clone)]
 struct LedgerEntry {
     median_ns: f64,
+    mean_ns: f64,
+    p95_ns: f64,
     min_ns: f64,
     max_ns: f64,
     throughput_per_s: Option<f64>,
     throughput_unit: Option<String>,
+}
+
+impl LedgerEntry {
+    fn of(r: &BenchResult) -> Self {
+        Self {
+            median_ns: r.median_ns,
+            mean_ns: r.mean_ns,
+            p95_ns: r.p95_ns,
+            min_ns: r.min_ns,
+            max_ns: r.max_ns,
+            throughput_per_s: None,
+            throughput_unit: None,
+        }
+    }
 }
 
 /// Machine-readable bench trajectory: ordered `name → summary` records that
@@ -124,31 +155,16 @@ impl Ledger {
 
     /// Record a plain timing result.
     pub fn add(&mut self, name: &str, r: &BenchResult) {
-        self.entries.insert(
-            name.to_string(),
-            LedgerEntry {
-                median_ns: r.median_ns,
-                min_ns: r.min_ns,
-                max_ns: r.max_ns,
-                throughput_per_s: None,
-                throughput_unit: None,
-            },
-        );
+        self.entries.insert(name.to_string(), LedgerEntry::of(r));
     }
 
     /// Record a result whose iteration processes `work_per_iter` `unit`s
     /// (samples, bytes, ...): throughput = work / median time.
     pub fn add_throughput(&mut self, name: &str, r: &BenchResult, work_per_iter: f64, unit: &str) {
-        self.entries.insert(
-            name.to_string(),
-            LedgerEntry {
-                median_ns: r.median_ns,
-                min_ns: r.min_ns,
-                max_ns: r.max_ns,
-                throughput_per_s: Some(work_per_iter / (r.median_ns * 1e-9)),
-                throughput_unit: Some(unit.to_string()),
-            },
-        );
+        let mut e = LedgerEntry::of(r);
+        e.throughput_per_s = Some(work_per_iter / (r.median_ns * 1e-9));
+        e.throughput_unit = Some(unit.to_string());
+        self.entries.insert(name.to_string(), e);
     }
 
     /// The `BENCH_*.json` document: `{"results": {name: {...}}}`.
@@ -159,6 +175,8 @@ impl Ledger {
             .map(|(name, e)| {
                 let mut m = BTreeMap::new();
                 m.insert("median_ns".to_string(), Json::Num(e.median_ns));
+                m.insert("mean_ns".to_string(), Json::Num(e.mean_ns));
+                m.insert("p95_ns".to_string(), Json::Num(e.p95_ns));
                 m.insert("min_ns".to_string(), Json::Num(e.min_ns));
                 m.insert("max_ns".to_string(), Json::Num(e.max_ns));
                 if let Some(t) = e.throughput_per_s {
@@ -173,9 +191,227 @@ impl Ledger {
         Json::Obj(BTreeMap::from([("results".to_string(), Json::Obj(results))]))
     }
 
+    /// Parse a `BENCH_*.json` / baseline document. `median_ns` is required
+    /// per entry; the other statistics default to the median so baselines
+    /// written by older harness versions stay comparable.
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let results = j
+            .get("results")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("ledger document needs a \"results\" object"))?;
+        let mut entries = BTreeMap::new();
+        for (name, e) in results {
+            let median_ns = e
+                .get("median_ns")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("ledger entry {name:?} needs median_ns"))?;
+            let stat = |key: &str| e.get(key).and_then(Json::as_f64).unwrap_or(median_ns);
+            entries.insert(
+                name.clone(),
+                LedgerEntry {
+                    median_ns,
+                    mean_ns: stat("mean_ns"),
+                    p95_ns: stat("p95_ns"),
+                    min_ns: stat("min_ns"),
+                    max_ns: stat("max_ns"),
+                    throughput_per_s: e.get("throughput_per_s").and_then(Json::as_f64),
+                    throughput_unit: e
+                        .get("throughput_unit")
+                        .and_then(Json::as_str)
+                        .map(str::to_string),
+                },
+            );
+        }
+        Ok(Self { entries })
+    }
+
+    /// Load a ledger/baseline file.
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(text.trim()).map_err(anyhow::Error::from)?)
+    }
+
+    /// Merge `other`'s entries into this ledger (overwriting same-name
+    /// entries) — the `--save-baseline` refresh: smoke and full runs carry
+    /// different entry names, so a refresh only replaces what it measured.
+    pub fn merge(&mut self, other: &Ledger) {
+        for (name, e) in &other.entries {
+            self.entries.insert(name.clone(), e.clone());
+        }
+    }
+
+    /// Compare this run against a saved baseline on the median statistic.
+    /// Entries missing from the baseline are [`DeltaStatus::New`] (ungated);
+    /// baseline entries this run did not produce are ignored, so a smoke run
+    /// can be gated against a full-mode baseline without false failures.
+    pub fn compare(&self, baseline: &Ledger, gate: BaselineGate) -> BaselineReport {
+        let deltas = self
+            .entries
+            .iter()
+            .map(|(name, e)| {
+                let cur = e.median_ns;
+                match baseline.entries.get(name) {
+                    Some(b) => {
+                        let base = b.median_ns;
+                        let status = if cur > base * (1.0 + gate.tolerance)
+                            && cur - base > gate.noise_floor_ns
+                        {
+                            DeltaStatus::Regressed
+                        } else if cur < base * (1.0 - gate.tolerance)
+                            && base - cur > gate.noise_floor_ns
+                        {
+                            DeltaStatus::Improved
+                        } else {
+                            DeltaStatus::Ok
+                        };
+                        BenchDelta {
+                            name: name.clone(),
+                            baseline_ns: Some(base),
+                            current_ns: cur,
+                            ratio: Some(cur / base),
+                            status,
+                        }
+                    }
+                    None => BenchDelta {
+                        name: name.clone(),
+                        baseline_ns: None,
+                        current_ns: cur,
+                        ratio: None,
+                        status: DeltaStatus::New,
+                    },
+                }
+            })
+            .collect();
+        BaselineReport { gate, deltas }
+    }
+
     /// Write the trajectory document to `path`.
     pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
         std::fs::write(path, format!("{}\n", self.to_json()))
+    }
+}
+
+/// The regression gate: a run regresses when its median exceeds the baseline
+/// median by more than `tolerance` (relative) *and* by more than
+/// `noise_floor_ns` (absolute) — the floor keeps nanosecond-class benches
+/// from tripping the gate on scheduler jitter.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BaselineGate {
+    pub tolerance: f64,
+    pub noise_floor_ns: f64,
+}
+
+impl Default for BaselineGate {
+    fn default() -> Self {
+        Self { tolerance: 0.15, noise_floor_ns: 100.0 }
+    }
+}
+
+/// Per-bench comparison outcome against the baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeltaStatus {
+    /// Within the gate's tolerance (or inside the noise floor).
+    Ok,
+    /// Faster than the baseline beyond tolerance + floor.
+    Improved,
+    /// Slower than the baseline beyond tolerance + floor — fails the gate.
+    Regressed,
+    /// Not present in the baseline (new bench, or a machine/mode-dependent
+    /// name like `_parallel_x8`) — never gated.
+    New,
+}
+
+impl DeltaStatus {
+    /// Stable serialization token.
+    pub fn token(&self) -> &'static str {
+        match self {
+            DeltaStatus::Ok => "ok",
+            DeltaStatus::Improved => "improved",
+            DeltaStatus::Regressed => "regressed",
+            DeltaStatus::New => "new",
+        }
+    }
+}
+
+/// One bench's baseline delta.
+#[derive(Debug, Clone)]
+pub struct BenchDelta {
+    pub name: String,
+    pub baseline_ns: Option<f64>,
+    pub current_ns: f64,
+    /// `current / baseline` medians (`None` for [`DeltaStatus::New`]).
+    pub ratio: Option<f64>,
+    pub status: DeltaStatus,
+}
+
+/// The `--baseline` comparison document: gate parameters + per-bench deltas.
+#[derive(Debug, Clone)]
+pub struct BaselineReport {
+    pub gate: BaselineGate,
+    pub deltas: Vec<BenchDelta>,
+}
+
+impl BaselineReport {
+    /// Did any bench regress beyond the gate?
+    pub fn has_regressions(&self) -> bool {
+        self.deltas.iter().any(|d| d.status == DeltaStatus::Regressed)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let results: BTreeMap<String, Json> = self
+            .deltas
+            .iter()
+            .map(|d| {
+                let mut m = BTreeMap::new();
+                m.insert("status".to_string(), Json::Str(d.status.token().to_string()));
+                m.insert("current_ns".to_string(), Json::Num(d.current_ns));
+                if let Some(b) = d.baseline_ns {
+                    m.insert("baseline_ns".to_string(), Json::Num(b));
+                }
+                if let Some(r) = d.ratio {
+                    m.insert("ratio".to_string(), Json::Num(r));
+                }
+                (d.name.clone(), Json::Obj(m))
+            })
+            .collect();
+        Json::obj(vec![
+            (
+                "gate",
+                Json::obj(vec![
+                    ("tolerance", Json::Num(self.gate.tolerance)),
+                    ("noise_floor_ns", Json::Num(self.gate.noise_floor_ns)),
+                ]),
+            ),
+            ("results", Json::Obj(results)),
+        ])
+    }
+
+    /// Human-readable comparison table (one line per bench).
+    pub fn print(&self) {
+        println!(
+            "-- baseline comparison (gate: +{:.0}% over median, floor {}):",
+            self.gate.tolerance * 100.0,
+            fmt_ns(self.gate.noise_floor_ns)
+        );
+        for d in &self.deltas {
+            match (d.baseline_ns, d.ratio) {
+                (Some(base), Some(ratio)) => println!(
+                    "   {:<9} {:<44} {:>12} -> {:>12}  ({:+.1}%)",
+                    d.status.token(),
+                    d.name,
+                    fmt_ns(base),
+                    fmt_ns(d.current_ns),
+                    (ratio - 1.0) * 100.0
+                ),
+                _ => println!(
+                    "   {:<9} {:<44} {:>12} -> {:>12}",
+                    d.status.token(),
+                    d.name,
+                    "(none)",
+                    fmt_ns(d.current_ns)
+                ),
+            }
+        }
     }
 }
 
@@ -189,6 +425,38 @@ pub fn bench_json_from_args() -> Option<PathBuf> {
 /// compiles and runs on every PR without paying full measurement time.
 pub fn smoke_from_args() -> bool {
     crate::util::cli::arg_switch("smoke")
+}
+
+/// Shared bench-binary tail: write `--bench-json`, refresh `--save-baseline`
+/// (load-merge-write, so runs with different entry sets compose), and gate
+/// against `--baseline` (printing the comparison, optionally writing
+/// `--baseline-report`, and exiting non-zero on regression — the CI gate).
+pub fn finish(ledger: &Ledger) {
+    if let Some(path) = bench_json_from_args() {
+        ledger.write_json(&path).expect("write --bench-json");
+        println!("-- wrote {}", path.display());
+    }
+    if let Some(path) = crate::util::cli::arg_value("save-baseline").map(PathBuf::from) {
+        let mut base = Ledger::load(&path).unwrap_or_default();
+        base.merge(ledger);
+        base.write_json(&path).expect("write --save-baseline");
+        println!("-- saved baseline {} ({} entries)", path.display(), base.len());
+    }
+    if let Some(path) = crate::util::cli::arg_value("baseline").map(PathBuf::from) {
+        let base = Ledger::load(&path)
+            .unwrap_or_else(|e| panic!("--baseline {}: {e}", path.display()));
+        let report = ledger.compare(&base, BaselineGate::default());
+        report.print();
+        if let Some(out) = crate::util::cli::arg_value("baseline-report").map(PathBuf::from) {
+            std::fs::write(&out, format!("{}\n", report.to_json()))
+                .expect("write --baseline-report");
+            println!("-- wrote {}", out.display());
+        }
+        if report.has_regressions() {
+            println!("-- FAIL: bench regression beyond the baseline gate");
+            std::process::exit(1);
+        }
+    }
 }
 
 fn fmt_ns(ns: f64) -> String {
@@ -207,12 +475,28 @@ fn fmt_ns(ns: f64) -> String {
 mod tests {
     use super::*;
 
+    fn result(median: f64) -> BenchResult {
+        BenchResult {
+            median_ns: median,
+            mean_ns: median,
+            p95_ns: median,
+            min_ns: median,
+            max_ns: median,
+            iters_per_sample: 1,
+            samples: 1,
+        }
+    }
+
     #[test]
     fn runs_and_reports() {
         let b = Bencher { sample_target_s: 0.001, samples: 3 };
         let r = b.run("noop-ish", || std::hint::black_box(1 + 1));
         assert!(r.median_ns >= 0.0);
         assert!(r.min_ns <= r.median_ns && r.median_ns <= r.max_ns);
+        // The order statistics nest: median ≤ p95 ≤ max, and the mean stays
+        // inside the sample range.
+        assert!(r.median_ns <= r.p95_ns && r.p95_ns <= r.max_ns);
+        assert!(r.min_ns <= r.mean_ns && r.mean_ns <= r.max_ns);
     }
 
     #[test]
@@ -228,6 +512,8 @@ mod tests {
         assert!(l.is_empty());
         let r = BenchResult {
             median_ns: 1000.0,
+            mean_ns: 1030.0,
+            p95_ns: 1150.0,
             min_ns: 900.0,
             max_ns: 1200.0,
             iters_per_sample: 10,
@@ -240,6 +526,8 @@ mod tests {
         let results = j.req("results").unwrap();
         let plain = results.get("plain").unwrap();
         assert_eq!(plain.get("median_ns").unwrap().as_f64(), Some(1000.0));
+        assert_eq!(plain.get("mean_ns").unwrap().as_f64(), Some(1030.0));
+        assert_eq!(plain.get("p95_ns").unwrap().as_f64(), Some(1150.0));
         assert!(plain.get("throughput_per_s").is_none());
         let mc = results.get("mc").unwrap();
         // 4096 units / 1000 ns = 4.096e9 per second.
@@ -252,21 +540,121 @@ mod tests {
     }
 
     #[test]
-    fn ledger_writes_a_parseable_file() {
+    fn ledger_round_trips_and_tolerates_legacy_schemas() {
         let mut l = Ledger::new();
         let r = BenchResult {
-            median_ns: 5.0,
-            min_ns: 4.0,
-            max_ns: 6.0,
-            iters_per_sample: 1,
-            samples: 1,
+            median_ns: 1000.0,
+            mean_ns: 1030.0,
+            p95_ns: 1150.0,
+            min_ns: 900.0,
+            max_ns: 1200.0,
+            iters_per_sample: 10,
+            samples: 3,
         };
-        l.add("x", &r);
+        l.add_throughput("mc", &r, 4096.0, "samples");
+        let back = Ledger::from_json(&l.to_json()).unwrap();
+        assert_eq!(back.to_json().to_string(), l.to_json().to_string());
+        // A pre-p95 baseline (median/min/max only) still loads: the missing
+        // statistics default to the median.
+        let legacy = Json::parse(r#"{"results":{"old":{"median_ns":500.0}}}"#).unwrap();
+        let old = Ledger::from_json(&legacy).unwrap();
+        assert_eq!(old.entries["old"].p95_ns, 500.0);
+        assert_eq!(old.entries["old"].mean_ns, 500.0);
+        // And a document without "results" is a clean error.
+        assert!(Ledger::from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn merge_overwrites_by_name_and_keeps_the_rest() {
+        let mut base = Ledger::new();
+        base.add("a", &result(100.0));
+        base.add("b", &result(200.0));
+        let mut run = Ledger::new();
+        run.add("b", &result(250.0));
+        run.add("c", &result(300.0));
+        base.merge(&run);
+        assert_eq!(base.len(), 3);
+        assert_eq!(base.entries["a"].median_ns, 100.0);
+        assert_eq!(base.entries["b"].median_ns, 250.0);
+        assert_eq!(base.entries["c"].median_ns, 300.0);
+    }
+
+    #[test]
+    fn baseline_gate_classifies_deltas() {
+        let gate = BaselineGate { tolerance: 0.15, noise_floor_ns: 100.0 };
+        let mut baseline = Ledger::new();
+        baseline.add("steady", &result(10_000.0));
+        baseline.add("slowed", &result(10_000.0));
+        baseline.add("faster", &result(10_000.0));
+        baseline.add("jitter", &result(200.0));
+        baseline.add("retired", &result(1.0));
+        let mut run = Ledger::new();
+        run.add("steady", &result(10_500.0)); // +5%: within tolerance
+        run.add("slowed", &result(12_500.0)); // +25%: regression
+        run.add("faster", &result(6_000.0)); // -40%: improvement
+        run.add("jitter", &result(260.0)); // +30% but only +60 ns: noise floor
+        run.add("fresh", &result(5_000.0)); // not in the baseline
+        let report = run.compare(&baseline, gate);
+        let status = |name: &str| {
+            report.deltas.iter().find(|d| d.name == name).map(|d| d.status).unwrap()
+        };
+        assert_eq!(status("steady"), DeltaStatus::Ok);
+        assert_eq!(status("slowed"), DeltaStatus::Regressed);
+        assert_eq!(status("faster"), DeltaStatus::Improved);
+        assert_eq!(status("jitter"), DeltaStatus::Ok, "below the noise floor");
+        assert_eq!(status("fresh"), DeltaStatus::New);
+        // Baseline-only entries are ignored (full-mode baseline, smoke run).
+        assert!(report.deltas.iter().all(|d| d.name != "retired"));
+        assert!(report.has_regressions());
+        // The report document carries the gate and per-bench ratios.
+        let j = report.to_json();
+        assert_eq!(j.req("gate").unwrap().get("tolerance").unwrap().as_f64(), Some(0.15));
+        let slowed = j.req("results").unwrap().get("slowed").unwrap();
+        assert_eq!(slowed.get("status").unwrap().as_str(), Some("regressed"));
+        assert!((slowed.get("ratio").unwrap().as_f64().unwrap() - 1.25).abs() < 1e-12);
+        let fresh = j.req("results").unwrap().get("fresh").unwrap();
+        assert_eq!(fresh.get("status").unwrap().as_str(), Some("new"));
+        assert!(fresh.get("ratio").is_none());
+    }
+
+    #[test]
+    fn a_deliberately_slowed_bench_fails_the_gate() {
+        // The acceptance demonstration for the CI gate, in miniature: take a
+        // clean baseline, slow one bench >15% past the noise floor, and the
+        // report must flag exactly that bench as the failing regression.
+        let mut baseline = Ledger::new();
+        baseline.add("dse/selection_grid_108", &result(1.0e6));
+        baseline.add("stall/stalled_walk_resnet50_b16", &result(5.0e4));
+        let mut slowed = Ledger::new();
+        slowed.add("dse/selection_grid_108", &result(1.0e6 * 1.5)); // sleep injected
+        slowed.add("stall/stalled_walk_resnet50_b16", &result(5.0e4));
+        let report = slowed.compare(&baseline, BaselineGate::default());
+        assert!(report.has_regressions());
+        let regressed: Vec<&str> = report
+            .deltas
+            .iter()
+            .filter(|d| d.status == DeltaStatus::Regressed)
+            .map(|d| d.name.as_str())
+            .collect();
+        assert_eq!(regressed, vec!["dse/selection_grid_108"]);
+        // The clean run passes the same gate.
+        let clean = baseline.compare(&baseline, BaselineGate::default());
+        assert!(!clean.has_regressions());
+        assert!(clean.deltas.iter().all(|d| d.status == DeltaStatus::Ok));
+    }
+
+    #[test]
+    fn ledger_writes_a_parseable_file() {
+        let mut l = Ledger::new();
+        l.add("x", &result(5.0));
         let path = std::env::temp_dir().join("stt_ai_bench_ledger_test.json");
         l.write_json(&path).unwrap();
         let doc = std::fs::read_to_string(&path).unwrap();
         let parsed = Json::parse(&doc).unwrap();
         assert!(parsed.req("results").unwrap().get("x").is_some());
+        // Load round-trips the file.
+        let back = Ledger::load(&path).unwrap();
+        assert_eq!(back.len(), 1);
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -5,6 +5,7 @@
 use stt_ai::accel::{ArrayConfig, RetentionAnalysis};
 use stt_ai::ber::Injector;
 use stt_ai::coordinator::{Batcher, Request};
+use stt_ai::dse::{DesignPoint, SweepColumns, SweepResult};
 use stt_ai::models;
 use stt_ai::mram::{
     read_disturb_prob, read_pulse_at_rd, retention_failure_prob, retention_time_at_ber,
@@ -167,6 +168,67 @@ fn prop_retention_monotone_in_array_and_batch() {
         assert!(r2 <= r1 * (1.0 + 1e-12), "case {case} ({}): {r2} > {r1}", m.name);
         let rb = RetentionAnalysis::new(&a1, batch + 1).analyze(m).max_t_ret();
         assert!(rb >= r1 * (1.0 - 1e-12), "case {case} ({})", m.name);
+    }
+}
+
+#[test]
+fn prop_sweep_columns_round_trip_is_lossless() {
+    // SoA↔AoS: random record batches with random metric-key subsets in
+    // random per-record order, values including genuine NaNs, and mixed
+    // sweep names — `SweepColumns::from_results(..).to_results()` must
+    // reproduce every record bit for bit, and per-row column probes must
+    // agree with the per-record linear scans.
+    const POOL: [&str; 5] = ["a", "b", "c", "d", "e"];
+    let mut rng = Rng::seed_from_u64(0x50A_0A05);
+    for case in 0..CASES {
+        let n = rng.below(12) as usize;
+        let records: Vec<SweepResult> = (0..n)
+            .map(|_| {
+                // Partial Fisher–Yates: a random-size subset of POOL in a
+                // random order, no duplicates.
+                let mut keys: Vec<&'static str> = POOL.to_vec();
+                let take = rng.below(POOL.len() as u64 + 1) as usize;
+                for i in 0..take {
+                    let j = i + rng.below((POOL.len() - i) as u64) as usize;
+                    keys.swap(i, j);
+                }
+                let metrics = keys[..take]
+                    .iter()
+                    .map(|&k| {
+                        let v = if rng.below(8) == 0 {
+                            f64::NAN
+                        } else {
+                            rng.range_f64(-1.0e9, 1.0e9)
+                        };
+                        (k, v)
+                    })
+                    .collect();
+                SweepResult {
+                    sweep: if rng.below(4) == 0 { "alt".into() } else { "main".into() },
+                    point: DesignPoint { batch: Some(1 + rng.below(32)), ..Default::default() },
+                    metrics,
+                }
+            })
+            .collect();
+        let cols = SweepColumns::from_results(&records);
+        assert_eq!(cols.len(), records.len(), "case {case}");
+        let back = cols.to_results();
+        assert_eq!(back.len(), records.len(), "case {case}");
+        for (row, (b, o)) in back.iter().zip(&records).enumerate() {
+            assert_eq!(b.sweep, o.sweep, "case {case} row {row}");
+            assert_eq!(b.point, o.point, "case {case} row {row}");
+            assert_eq!(b.metrics.len(), o.metrics.len(), "case {case} row {row}");
+            for ((bk, bv), (ok, ov)) in b.metrics.iter().zip(&o.metrics) {
+                assert_eq!(bk, ok, "case {case} row {row}");
+                assert_eq!(bv.to_bits(), ov.to_bits(), "case {case} row {row} key {ok}");
+            }
+            // Column probes == record scans, presence included.
+            for key in POOL {
+                let col = cols.value(row, key).map(f64::to_bits);
+                let rec = o.metric_opt(key).map(f64::to_bits);
+                assert_eq!(col, rec, "case {case} row {row} key {key}");
+            }
+        }
     }
 }
 

@@ -5,7 +5,7 @@
 
 use stt_ai::config::{GlbVariant, TechBase};
 use stt_ai::coordinator::EngineConfig;
-use stt_ai::dse::engine::{parse_axes, shared_zoo, Runner};
+use stt_ai::dse::engine::{parse_axes, shared_zoo, Runner, SweepColumns};
 use stt_ai::dse::select::{self, Constraint, DesignSelection, Objective};
 use stt_ai::memsys::GlbKind;
 use stt_ai::report::export;
@@ -102,6 +102,61 @@ fn selection_is_worker_count_invariant() {
         let b = select::select("selection", &parallel, objective, &paper_constraints()).unwrap();
         assert_eq!(a.to_json().to_string(), b.to_json().to_string(), "{objective:?}");
     }
+}
+
+/// The columnar hot path (SweepColumns + per-column masks behind `select`)
+/// reproduces the committed golden byte for byte at `--parallel 1` and
+/// `--parallel 4`: the SoA rewrite may not move a single byte of any
+/// selection record, and the record-path mask wrappers must agree with the
+/// columnar mask functions on the real candidate grid.
+#[test]
+fn columnar_selection_reproduces_the_golden_at_both_worker_counts() {
+    let zoo = shared_zoo();
+    let spec = select::spec_selection(&zoo);
+    let constraints = paper_constraints();
+    let mut per_worker_jsons: Vec<Vec<String>> = Vec::new();
+    for workers in [1usize, 4] {
+        let results = Runner::new(workers).run(spec.clone());
+        // The SoA view is lossless over the real 108-candidate grid.
+        let cols = SweepColumns::from_results(&results);
+        assert_eq!(cols.to_results(), results, "workers={workers}");
+        // Mask parity: record-path wrappers == columnar functions.
+        assert_eq!(
+            select::feasible_mask(&results, &constraints),
+            select::feasible_mask_columns(&cols, &constraints),
+            "workers={workers}"
+        );
+        assert_eq!(
+            select::pareto_mask(&results, &Objective::all()),
+            select::pareto_mask_columns(&cols, &Objective::all()),
+            "workers={workers}"
+        );
+        // The committed golden: area objective at iso-accuracy picks the
+        // Ultra split at the paper coordinates.
+        let sel = select::select("selection", &results, Objective::MinArea, &constraints).unwrap();
+        assert_eq!(sel.variant(), GlbVariant::SttAiUltra, "workers={workers}");
+        assert_eq!(sel.point.delta, Some(27.5));
+        assert_eq!(sel.point.ber, Some(1.0e-8));
+        let saving = sel.metric("area_saving_vs_sram").unwrap();
+        assert!((saving - 0.754).abs() < 0.03, "workers={workers}: {saving}");
+        // Serialized records for every objective, for the cross-worker
+        // byte comparison below.
+        per_worker_jsons.push(
+            Objective::all()
+                .iter()
+                .map(|&o| {
+                    select::select("selection", &results, o, &constraints)
+                        .unwrap()
+                        .to_json()
+                        .to_string()
+                })
+                .collect(),
+        );
+    }
+    assert_eq!(
+        per_worker_jsons[0], per_worker_jsons[1],
+        "selection records must be byte-identical at --parallel 1 and 4"
+    );
 }
 
 /// The full serving bridge: selection record → JSON file → EngineConfig,
