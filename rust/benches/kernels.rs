@@ -1,0 +1,156 @@
+//! Scalar-vs-kernel datapoints for the `dse::kernels` columnar hot path
+//! (EXPERIMENTS.md §Perf, vectorized-kernel subsection): fused constraint
+//! bitmasks, the tiled Pareto dominance scan (serial and pool-fanned), and
+//! the masked argmin — each measured against the exact pre-kernel scalar
+//! loop (`dse::kernels::scalar` / `Constraint::satisfied_at`) on the
+//! 2592-candidate dense selection grid, plus the end-to-end `select()`
+//! pass. Every scalar/kernel pair is asserted bit-identical before it is
+//! timed, so a reported speedup can never come from computing something
+//! else. `--smoke` shrinks sample counts only — the workload (and thus the
+//! entry names) stay identical, which makes these entries smoke-stable for
+//! the `--baseline` gate. `--bench-json PATH` writes BENCH_kernels.json.
+use stt_ai::dse::engine::{Runner, SweepColumns};
+use stt_ai::dse::kernels::{self, Bitmask};
+use stt_ai::dse::{cache, engine, select, Constraint, Objective, SelectionGrid};
+use stt_ai::util::bench::{self, Bencher, Ledger};
+use stt_ai::util::pool::ThreadPool;
+use stt_ai::util::rng::Rng;
+
+fn main() {
+    let smoke = bench::smoke_from_args();
+    let b = if smoke {
+        Bencher { sample_target_s: 0.005, samples: 3 }
+    } else {
+        Bencher::new()
+    };
+    let mut ledger = Ledger::new();
+
+    // The dense stress grid, evaluated once (warm caches) into the columnar
+    // view every kernel below scans.
+    let zoo = engine::shared_zoo();
+    let spec = select::spec_selection_grid(&zoo, SelectionGrid::Dense);
+    let n = spec.len();
+    println!("-- dense selection grid: {n} candidates");
+    let results = spec.run_serial();
+    let cols = SweepColumns::from_results(&results);
+    let constraints =
+        vec![Constraint::MinAccuracy(0.99), Constraint::RetentionCoversOccupancy];
+    let objectives = Objective::all();
+
+    // Parity first: the kernels must reproduce the scalar masks bit-for-bit
+    // before any timing is trusted.
+    let scalar_feasible: Vec<bool> = (0..cols.len())
+        .map(|row| constraints.iter().all(|c| c.satisfied_at(&cols, row)))
+        .collect();
+    assert_eq!(
+        select::feasible_mask_columns(&cols, &constraints),
+        scalar_feasible,
+        "fused feasibility must match the scalar constraint fold"
+    );
+    let signed: Vec<Vec<f64>> = objectives
+        .iter()
+        .map(|o| {
+            let key = cols
+                .key_index(o.metric())
+                .expect("the dense grid carries every objective metric");
+            let col = cols.column(key);
+            let lower = o.lower_is_better();
+            (0..cols.len()).map(|r| if lower { col[r] } else { -col[r] }).collect()
+        })
+        .collect();
+    let scalar_frontier = kernels::scalar::nondominated(&signed);
+    let auto = Runner::from_args();
+    for workers in [1, auto.workers()] {
+        assert_eq!(
+            select::pareto_mask_columns_with(&cols, &objectives, &ThreadPool::new(workers)),
+            scalar_frontier,
+            "tiled frontier must match the scalar scan at {workers} workers"
+        );
+    }
+
+    // Fused constraint predicates vs the per-row satisfied_at fold.
+    let label = format!("kernels/feasible_scalar_{n}");
+    let r_scalar = b.run(&label, || {
+        (0..cols.len())
+            .map(|row| constraints.iter().all(|c| c.satisfied_at(&cols, row)))
+            .collect::<Vec<bool>>()
+    });
+    ledger.add_throughput(&label, &r_scalar, n as f64, "candidates");
+    let label = format!("kernels/feasible_fused_{n}");
+    let r_fused = b.run(&label, || select::feasible_mask_columns(&cols, &constraints));
+    ledger.add_throughput(&label, &r_fused, n as f64, "candidates");
+    let feasible_speedup = r_scalar.median_ns / r_fused.median_ns;
+    println!("    -> fused feasibility speedup: {feasible_speedup:.2}x");
+
+    // Tiled Pareto dominance scan vs the closure-based O(n²) scalar scan,
+    // over identical signed columns.
+    let label = format!("kernels/pareto_scalar_{n}");
+    let r_scalar = b.run(&label, || kernels::scalar::nondominated(&signed));
+    ledger.add_throughput(&label, &r_scalar, n as f64, "candidates");
+    let serial_pool = ThreadPool::new(1);
+    let label = format!("kernels/pareto_tiled_{n}");
+    let r_tiled = b.run(&label, || kernels::pareto_nondominated(&signed, &serial_pool));
+    ledger.add_throughput(&label, &r_tiled, n as f64, "candidates");
+    let pareto_speedup = r_scalar.median_ns / r_tiled.median_ns;
+    println!("    -> tiled pareto speedup (serial): {pareto_speedup:.2}x");
+    let pool = ThreadPool::new(auto.workers());
+    let label = format!("kernels/pareto_tiled_{n}_x{}", pool.workers());
+    let r_pool = b.run(&label, || kernels::pareto_nondominated(&signed, &pool));
+    ledger.add_throughput(&label, &r_pool, n as f64, "candidates");
+    println!(
+        "    -> tiled pareto speedup ({} workers): {:.2}x",
+        pool.workers(),
+        r_scalar.median_ns / r_pool.median_ns
+    );
+
+    // Masked argmin under total_cmp order: two-pass integer-key kernel vs
+    // the strictly-less scalar scan, on a 1M-lane normal column.
+    let argmin_n = 1 << 20;
+    let mut column = Vec::new();
+    Rng::seed_from_u64(0xC01).fill_normal_into(&mut column, argmin_n);
+    let live_bools = vec![true; argmin_n];
+    let live = Bitmask::ones(argmin_n);
+    for negate in [false, true] {
+        assert_eq!(
+            kernels::argmin_masked(&column, &live, negate),
+            kernels::scalar::argmin_masked(&column, &live_bools, negate),
+            "argmin kernel must match the scalar scan (negate={negate})"
+        );
+    }
+    let label = "kernels/argmin_scalar_1m";
+    let r_scalar = b.run(label, || kernels::scalar::argmin_masked(&column, &live_bools, false));
+    ledger.add_throughput(label, &r_scalar, argmin_n as f64, "lanes");
+    let label = "kernels/argmin_kernel_1m";
+    let r_kernel = b.run(label, || kernels::argmin_masked(&column, &live, false));
+    ledger.add_throughput(label, &r_kernel, argmin_n as f64, "lanes");
+    println!("    -> argmin speedup: {:.2}x", r_scalar.median_ns / r_kernel.median_ns);
+
+    // End-to-end columnar selection pass (constraints → frontier → winner)
+    // over the dense grid — the user-visible cost `--grid dense` pays.
+    let label = format!("kernels/select_dense_{n}");
+    let r = b.run(&label, || {
+        select::select("selection", &results, Objective::MinArea, &constraints).unwrap()
+    });
+    ledger.add_throughput(&label, &r, n as f64, "candidates");
+
+    println!("-- dse::cache tiers (whole run)");
+    for e in cache::tier_stats() {
+        println!("    L{} {:<18} {:>9} hits {:>9} misses", e.tier, e.name, e.hits, e.misses);
+    }
+
+    // The acceptance floor for the PR 7 kernels: ≥ 2× over the scalar scans
+    // on the dense grid. Asserted in full mode only — smoke's 3-sample
+    // medians are too noisy to gate a ratio on.
+    if !smoke {
+        assert!(
+            pareto_speedup >= 2.0,
+            "tiled pareto scan is only {pareto_speedup:.2}x over scalar (need >= 2x)"
+        );
+        assert!(
+            feasible_speedup >= 2.0,
+            "fused feasibility is only {feasible_speedup:.2}x over scalar (need >= 2x)"
+        );
+    }
+
+    bench::finish(&ledger);
+}

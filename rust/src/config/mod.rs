@@ -193,6 +193,10 @@ pub struct DeploymentConfig {
     /// Optional MAC-array-side grid for the selection sweep — reshapes the
     /// `macs` axis of the candidate grid when set.
     pub macs: Option<Vec<u64>>,
+    /// Which candidate grid the selection sweep starts from (the 108-point
+    /// default or the 2592-point dense stress grid); explicit `glb_mb` /
+    /// `macs` knobs and CLI `--sweep` overrides still reshape its axes.
+    pub grid: crate::dse::select::SelectionGrid,
 }
 
 impl Default for DeploymentConfig {
@@ -207,6 +211,7 @@ impl Default for DeploymentConfig {
             max_power_mw: None,
             glb_mb: None,
             macs: None,
+            grid: crate::dse::select::SelectionGrid::Default,
         }
     }
 }
@@ -264,6 +269,11 @@ impl DeploymentConfig {
         if let Some(m) = &self.macs {
             fields.push(("macs", Json::Arr(m.iter().map(|v| (*v).into()).collect())));
         }
+        // Emitted only off-default so records written before the knob
+        // existed stay byte-identical on a round trip.
+        if self.grid != crate::dse::select::SelectionGrid::Default {
+            fields.push(("grid", Json::Str(self.grid.token().to_string())));
+        }
         Json::obj(fields)
     }
 
@@ -297,6 +307,11 @@ impl DeploymentConfig {
             Some(v) => Some(parse_u64_grid(v, "macs")?),
             None => None,
         };
+        if let Some(v) = j.get("grid") {
+            let token = v.as_str().ok_or_else(|| anyhow::anyhow!("grid must be a string"))?;
+            cfg.grid = crate::dse::select::SelectionGrid::from_token(token)
+                .ok_or_else(|| anyhow::anyhow!("unknown selection grid {token:?}"))?;
+        }
         Ok(cfg)
     }
 }
@@ -701,6 +716,7 @@ mod tests {
             max_power_mw: None,
             glb_mb: Some(vec![12, 24]),
             macs: Some(vec![42]),
+            grid: crate::dse::select::SelectionGrid::Dense,
         };
         let back =
             SystemConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
@@ -725,10 +741,17 @@ mod tests {
         let bad = r#"{"name":"x","glb":"sram","glb_bytes":1,"scratchpad_bytes":0,
                       "deployment":{"objective":"area","macs":[]}}"#;
         assert!(SystemConfig::from_json(&Json::parse(bad).unwrap()).is_err());
+        // Unknown grid tokens fail loudly.
+        let bad = r#"{"name":"x","glb":"sram","glb_bytes":1,"scratchpad_bytes":0,
+                      "deployment":{"objective":"area","grid":"sparse"}}"#;
+        assert!(SystemConfig::from_json(&Json::parse(bad).unwrap()).is_err());
         // A config without the section falls back to the paper deployment.
         let legacy = r#"{"name":"x","glb":"stt_ai","glb_bytes":1048576,"scratchpad_bytes":0}"#;
         let cfg = SystemConfig::from_json(&Json::parse(legacy).unwrap()).unwrap();
         assert_eq!(cfg.deployment, DeploymentConfig::default());
+        // The default grid is not serialized, so pre-knob records stay
+        // byte-stable; omitted grid reads back as Default.
+        assert!(!SystemConfig::paper_stt_ai_ultra().to_json().to_string().contains("\"grid\""));
         // Unknown objectives fail loudly.
         let bad = r#"{"name":"x","glb":"sram","glb_bytes":1,"scratchpad_bytes":0,
                       "deployment":{"objective":"vibes"}}"#;

@@ -37,6 +37,13 @@
 //!   aggregate pair, [`tier_stats`] the per-entry breakdown
 //!   `benches/hotpath.rs` prints into the bench artifact.
 //!
+//! The tier structure is also what makes the 2592-candidate `--grid dense`
+//! stress grid affordable: its 24× candidate fan-out multiplies only the
+//! cheap per-candidate composition, while the L1/L2 coordinate groups it
+//! collapses onto grow by the handful of new (array, glb, scratchpad)
+//! shapes — `benches/kernels.rs` prints the per-tier counters after the
+//! dense sweep so the collapse stays observable.
+//!
 //! `benches/hotpath.rs` carries the cold-vs-warm datapoint for this cache.
 
 use std::collections::HashMap;

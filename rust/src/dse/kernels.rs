@@ -1,0 +1,605 @@
+//! Branch-light columnar kernels for the selection/DSE hot path.
+//!
+//! [`crate::dse::engine::SweepColumns`] (PR 6) laid the candidate metrics
+//! out as contiguous `f64` columns; this module supplies the
+//! vectorization-friendly inner loops over them:
+//!
+//! * [`feasible_bitmask`] — all [`CompiledConstraint`]s fused into one pass
+//!   per 64-row column chunk, writing a packed `u64` [`Bitmask`] (one
+//!   feasibility bit per row);
+//! * [`argmin_masked`] — masked column min/argmin with first-wins
+//!   tie-breaking, bit-for-bit faithful to `f64::total_cmp` via the
+//!   sign-flip integer key ([`total_cmp_key`]);
+//! * [`pareto_nondominated`] — a tiled Pareto dominance scan: fixed
+//!   [`TILE`]-row source tiles with bounds-check-free lane loops (exact-size
+//!   `&[f64; TILE]` views), fanned out across target tiles on
+//!   [`ThreadPool::map_range`] and merged caller-side in tile order, so the
+//!   frontier is byte-identical at any worker count.
+//!
+//! The kernels are *pure layout transforms* of the scalar semantics: the
+//! [`scalar`] submodule keeps the pre-kernel reference implementations, and
+//! `tests/proptests.rs` pins kernel-vs-scalar bit-identity on random
+//! columns with NaNs, holes and ties. `benches/kernels.rs` records the
+//! scalar-vs-kernel datapoints in the `BENCH_kernels.json` trajectory.
+
+use crate::dse::engine::SweepColumns;
+use crate::util::pool::ThreadPool;
+
+/// Rows per Pareto source tile. 64 lanes of `f64` comparisons fit the
+/// widest practical vector units a few times over while keeping the
+/// per-tile early-exit granularity fine enough that mostly-dominated
+/// batches stay cheap.
+pub const TILE: usize = 64;
+
+/// Bits per [`Bitmask`] word (the feasibility chunk width).
+pub const LANES: usize = 64;
+
+// ---------------------------------------------------------------------------
+// Bitmask
+// ---------------------------------------------------------------------------
+
+/// A packed per-row bitmask: bit `i % 64` of word `i / 64` is row `i`
+/// (little-endian lanes). Tail bits past `len` are always zero, so word-wise
+/// reductions (`count`, `indices`, chunk early-exits) never see ghost rows.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bitmask {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl Bitmask {
+    /// All-zero mask over `len` rows.
+    pub fn zeros(len: usize) -> Self {
+        Self { words: vec![0; len.div_ceil(LANES)], len }
+    }
+
+    /// All-one mask over `len` rows (tail bits trimmed).
+    pub fn ones(len: usize) -> Self {
+        let mut m = Self { words: vec![!0u64; len.div_ceil(LANES)], len };
+        m.trim_tail();
+        m
+    }
+
+    fn trim_tail(&mut self) {
+        let tail = self.len % LANES;
+        if tail != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << tail) - 1;
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The packed words (tail bits zero).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / LANES] >> (i % LANES)) & 1 == 1
+    }
+
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / LANES] |= 1u64 << (i % LANES);
+    }
+
+    /// Number of set rows (word-wise popcount).
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Set-row indices in ascending order.
+    pub fn indices(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.count());
+        for (wi, &word) in self.words.iter().enumerate() {
+            let mut w = word;
+            while w != 0 {
+                out.push(wi * LANES + w.trailing_zeros() as usize);
+                w &= w - 1;
+            }
+        }
+        out
+    }
+
+    /// Unpack to the `Vec<bool>` form the public mask APIs return.
+    pub fn to_bools(&self) -> Vec<bool> {
+        (0..self.len).map(|i| self.get(i)).collect()
+    }
+
+    pub fn from_bools(bools: &[bool]) -> Self {
+        let mut m = Self::zeros(bools.len());
+        for (i, &b) in bools.iter().enumerate() {
+            if b {
+                m.set(i);
+            }
+        }
+        m
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused constraint predicates
+// ---------------------------------------------------------------------------
+
+/// A [`crate::dse::select::Constraint`] resolved against one columnar
+/// batch's interned keys — the shape the fused feasibility kernel consumes
+/// (no string lookups inside the row loop).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CompiledConstraint {
+    /// Column `key` must be present and `>= floor`.
+    Ge { key: usize, floor: f64 },
+    /// Column `key` must be present and `<= cap`.
+    Le { key: usize, cap: f64 },
+    /// Both columns present and `lhs >= rhs` (the retention-vs-occupancy
+    /// pair rule).
+    PairGe { lhs: usize, rhs: usize },
+    /// The constrained metric is not interned at all: no row can satisfy it.
+    Never,
+}
+
+/// Evaluate every compiled constraint in one fused pass per 64-row column
+/// chunk. Bit `i` of the result is set iff row `i` satisfies *all*
+/// constraints — semantics identical to folding
+/// [`crate::dse::select::Constraint::satisfied_at`] per row (absent metrics
+/// and `NaN` values are infeasible), just without the per-(row × constraint)
+/// key lookups and branches.
+pub fn feasible_bitmask(cols: &SweepColumns, compiled: &[CompiledConstraint]) -> Bitmask {
+    let n = cols.len();
+    if compiled.iter().any(|c| matches!(c, CompiledConstraint::Never)) {
+        return Bitmask::zeros(n);
+    }
+    // Presence lanes per distinct constrained key, packed once up front.
+    let mut keys: Vec<usize> = Vec::new();
+    for c in compiled {
+        match *c {
+            CompiledConstraint::Ge { key, .. } | CompiledConstraint::Le { key, .. } => {
+                keys.push(key)
+            }
+            CompiledConstraint::PairGe { lhs, rhs } => keys.extend([lhs, rhs]),
+            CompiledConstraint::Never => unreachable!("screened above"),
+        }
+    }
+    keys.sort_unstable();
+    keys.dedup();
+    let presence: Vec<Vec<u64>> = keys.iter().map(|&k| cols.presence_packed(k)).collect();
+    let pres = |key: usize, word: usize| {
+        presence[keys.binary_search(&key).expect("key collected above")][word]
+    };
+
+    let mut mask = Bitmask::ones(n);
+    for (w, chunk_base) in (0..n).step_by(LANES).enumerate() {
+        let lanes = (n - chunk_base).min(LANES);
+        let mut word = mask.words[w];
+        for c in compiled {
+            if word == 0 {
+                break;
+            }
+            let cw = match *c {
+                CompiledConstraint::Ge { key, floor } => {
+                    let col = &cols.column(key)[chunk_base..chunk_base + lanes];
+                    cmp_word(col, |v| v >= floor) & pres(key, w)
+                }
+                CompiledConstraint::Le { key, cap } => {
+                    let col = &cols.column(key)[chunk_base..chunk_base + lanes];
+                    cmp_word(col, |v| v <= cap) & pres(key, w)
+                }
+                CompiledConstraint::PairGe { lhs, rhs } => {
+                    let l = &cols.column(lhs)[chunk_base..chunk_base + lanes];
+                    let r = &cols.column(rhs)[chunk_base..chunk_base + lanes];
+                    pair_ge_word(l, r) & pres(lhs, w) & pres(rhs, w)
+                }
+                CompiledConstraint::Never => unreachable!("screened above"),
+            };
+            word &= cw;
+        }
+        mask.words[w] = word;
+    }
+    mask
+}
+
+/// Pack one comparison over up to 64 lanes into a word (false for `NaN`,
+/// like the scalar comparison).
+#[inline]
+fn cmp_word(col: &[f64], pred: impl Fn(f64) -> bool) -> u64 {
+    let mut w = 0u64;
+    for (bit, &v) in col.iter().enumerate() {
+        w |= u64::from(pred(v)) << bit;
+    }
+    w
+}
+
+#[inline]
+fn pair_ge_word(lhs: &[f64], rhs: &[f64]) -> u64 {
+    let mut w = 0u64;
+    for (bit, (&l, &r)) in lhs.iter().zip(rhs).enumerate() {
+        w |= u64::from(l >= r) << bit;
+    }
+    w
+}
+
+// ---------------------------------------------------------------------------
+// Masked min / argmin
+// ---------------------------------------------------------------------------
+
+/// The sign-flip integer key: comparing keys with plain `i64::lt` is
+/// exactly `f64::total_cmp` on the original values (`-NaN < -inf < … <
+/// +inf < +NaN`). Negating a float flips only its sign bit, which reverses
+/// this order exactly — so max-objectives reuse the same kernel with
+/// `negate = true`, bit-for-bit faithful to the scalar `-v` compare.
+#[inline(always)]
+pub fn total_cmp_key(bits: u64) -> i64 {
+    let b = bits as i64;
+    b ^ (((b >> 63) as u64) >> 1) as i64
+}
+
+/// Masked argmin under `total_cmp` order with first-wins tie-breaking
+/// (`None` when no row is live). Two branch-light passes: a lane-parallel
+/// integer min over the masked keys, then the first live row achieving it —
+/// which is exactly the index the scalar strictly-less scan holds
+/// ([`scalar::argmin_masked`]). `negate` selects the sign-flipped (max
+/// objective) view of the column.
+pub fn argmin_masked(col: &[f64], mask: &Bitmask, negate: bool) -> Option<usize> {
+    debug_assert_eq!(col.len(), mask.len());
+    let sign = if negate { 1u64 << 63 } else { 0 };
+    let mut min_key = i64::MAX;
+    let mut any = false;
+    for (chunk, &mword) in col.chunks(LANES).zip(mask.words()) {
+        if mword == 0 {
+            continue;
+        }
+        any = true;
+        let mut chunk_min = i64::MAX;
+        for (bit, &v) in chunk.iter().enumerate() {
+            let key = total_cmp_key(v.to_bits() ^ sign);
+            let live = (mword >> bit) & 1 == 1;
+            // Dead lanes contribute the sentinel; a live lane whose key
+            // equals the sentinel is still found by the second pass, which
+            // re-checks liveness explicitly.
+            chunk_min = chunk_min.min(if live { key } else { i64::MAX });
+        }
+        min_key = min_key.min(chunk_min);
+    }
+    if !any {
+        return None;
+    }
+    for (w, (chunk, &mword)) in col.chunks(LANES).zip(mask.words()).enumerate() {
+        if mword == 0 {
+            continue;
+        }
+        for (bit, &v) in chunk.iter().enumerate() {
+            let live = (mword >> bit) & 1 == 1;
+            if live && total_cmp_key(v.to_bits() ^ sign) == min_key {
+                return Some(w * LANES + bit);
+            }
+        }
+    }
+    unreachable!("a live row achieving the masked min must exist")
+}
+
+// ---------------------------------------------------------------------------
+// Tiled Pareto dominance scan
+// ---------------------------------------------------------------------------
+
+/// Non-dominated mask over dense signed objective columns (every column
+/// oriented so *smaller is better*; max objectives are sign-flipped by the
+/// caller). Row `a` dominates row `b` when it is `<=` in every column and
+/// `<` in at least one — `NaN` lanes compare false on both, so a `NaN` row
+/// neither dominates nor is dominated through that column, exactly like the
+/// scalar scan.
+///
+/// Target rows are split into [`TILE`]-sized jobs fanned out on `pool`
+/// (byte-identical for any worker count: each bit is a pure function of the
+/// full column set, and [`ThreadPool::map_range`] merges in tile order).
+/// Source rows are scanned in exact-size `&[f64; TILE]` tiles — the inner
+/// lane loops carry no bounds checks — with a per-tile early exit once a
+/// dominator is found.
+pub fn pareto_nondominated(signed: &[Vec<f64>], pool: &ThreadPool) -> Vec<bool> {
+    let Some(n) = signed.first().map(Vec::len) else {
+        return Vec::new();
+    };
+    debug_assert!(signed.iter().all(|c| c.len() == n), "ragged objective columns");
+    let tiles = n.div_ceil(TILE);
+    let masks = pool.map_range(tiles, |t| {
+        let lo = t * TILE;
+        let hi = (lo + TILE).min(n);
+        (lo..hi).map(|b| !dominated(signed, n, b)).collect::<Vec<bool>>()
+    });
+    masks.concat()
+}
+
+/// Does any source row dominate target `b`?
+#[inline]
+fn dominated(signed: &[Vec<f64>], n: usize, b: usize) -> bool {
+    let full = n - n % TILE;
+    let mut base = 0;
+    while base < full {
+        if tile_dominates(signed, base, b) {
+            return true;
+        }
+        base += TILE;
+    }
+    span_dominates(signed, full, n, b)
+}
+
+/// Branchless dominance accumulation over one exact source tile.
+#[inline]
+fn tile_dominates(signed: &[Vec<f64>], base: usize, b: usize) -> bool {
+    let mut le = [true; TILE];
+    let mut lt = [false; TILE];
+    for col in signed {
+        let tb = col[b];
+        let lane: &[f64; TILE] =
+            col[base..base + TILE].try_into().expect("exact tile slice");
+        for ((le, lt), &v) in le.iter_mut().zip(lt.iter_mut()).zip(lane) {
+            *le &= v <= tb;
+            *lt |= v < tb;
+        }
+    }
+    le.iter().zip(&lt).any(|(&le, &lt)| le & lt)
+}
+
+/// Dominance over a short (tail) source span.
+#[inline]
+fn span_dominates(signed: &[Vec<f64>], lo: usize, hi: usize, b: usize) -> bool {
+    let mut dom = false;
+    for a in lo..hi {
+        let mut le = true;
+        let mut lt = false;
+        for col in signed {
+            let (av, tb) = (col[a], col[b]);
+            le &= av <= tb;
+            lt |= av < tb;
+        }
+        dom |= le & lt;
+    }
+    dom
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference implementations
+// ---------------------------------------------------------------------------
+
+/// The pre-kernel scalar implementations, kept as the bit-identity oracle:
+/// `tests/proptests.rs` pins kernel == scalar on random columns with NaNs,
+/// holes and ties, and `benches/kernels.rs` reports the scalar-vs-kernel
+/// speedup datapoints against these exact loops.
+pub mod scalar {
+    /// PR 6's closure-based O(n²) frontier scan over signed columns.
+    pub fn nondominated(signed: &[Vec<f64>]) -> Vec<bool> {
+        let Some(n) = signed.first().map(Vec::len) else {
+            return Vec::new();
+        };
+        let dominates = |a: usize, b: usize| {
+            signed.iter().all(|c| c[a] <= c[b]) && signed.iter().any(|c| c[a] < c[b])
+        };
+        (0..n).map(|b| !(0..n).any(|a| dominates(a, b))).collect()
+    }
+
+    /// PR 6's winner scan: strictly-less `total_cmp` update over live rows
+    /// (first-wins tie-breaking), on the optionally sign-flipped column.
+    pub fn argmin_masked(col: &[f64], live: &[bool], negate: bool) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, &v) in col.iter().enumerate() {
+            if !live[i] {
+                continue;
+            }
+            let signed = if negate { -v } else { v };
+            let better = match best {
+                None => true,
+                Some((_, held)) => signed.total_cmp(&held) == std::cmp::Ordering::Less,
+            };
+            if better {
+                best = Some((i, signed));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::engine::{DesignPoint, SweepResult};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bitmask_tail_and_roundtrip() {
+        for len in [0usize, 1, 2, 63, 64, 65, 127, 128, 130] {
+            let ones = Bitmask::ones(len);
+            assert_eq!(ones.count(), len, "len={len}");
+            assert_eq!(ones.indices(), (0..len).collect::<Vec<_>>());
+            assert_eq!(ones.to_bools(), vec![true; len]);
+            assert_eq!(Bitmask::from_bools(&ones.to_bools()), ones);
+            let zeros = Bitmask::zeros(len);
+            assert_eq!(zeros.count(), 0);
+            assert!(zeros.indices().is_empty());
+            // Tail bits past `len` stay zero even for the all-ones mask.
+            if len % LANES != 0 {
+                let tail = *ones.words().last().unwrap() >> (len % LANES);
+                assert_eq!(tail, 0, "len={len}");
+            }
+        }
+        let mut m = Bitmask::zeros(130);
+        for i in [0usize, 63, 64, 65, 129] {
+            m.set(i);
+        }
+        assert_eq!(m.indices(), vec![0, 63, 64, 65, 129]);
+        assert_eq!(m.count(), 5);
+        assert!(m.get(64) && !m.get(1));
+    }
+
+    #[test]
+    fn total_cmp_key_orders_like_total_cmp() {
+        let vals = [
+            f64::NEG_INFINITY,
+            -1.5,
+            -0.0,
+            0.0,
+            1e-300,
+            2.5,
+            f64::INFINITY,
+            f64::NAN,
+            -f64::NAN,
+        ];
+        for &a in &vals {
+            for &b in &vals {
+                assert_eq!(
+                    total_cmp_key(a.to_bits()).cmp(&total_cmp_key(b.to_bits())),
+                    a.total_cmp(&b),
+                    "a={a} b={b}"
+                );
+            }
+        }
+    }
+
+    fn mask_of(live: &[bool]) -> Bitmask {
+        Bitmask::from_bools(live)
+    }
+
+    #[test]
+    fn argmin_first_wins_and_handles_nan() {
+        let col = [3.0, 1.0, 1.0, f64::NAN, 0.5];
+        let all = vec![true; col.len()];
+        // Ties break to the first index; NaN sorts above every real value
+        // under total_cmp so it never wins against one.
+        assert_eq!(argmin_masked(&col, &mask_of(&all), false), Some(4));
+        let no_last = [true, true, true, true, false];
+        assert_eq!(argmin_masked(&col, &mask_of(&no_last), false), Some(1));
+        // Max objective: sign-flip view.
+        assert_eq!(argmin_masked(&col, &mask_of(&all), true), Some(0));
+        // All-NaN column: the first live row wins (matches the scalar scan).
+        let nans = [f64::NAN, f64::NAN, f64::NAN];
+        assert_eq!(argmin_masked(&nans, &mask_of(&[true; 3]), false), Some(0));
+        assert_eq!(argmin_masked(&nans, &mask_of(&[false, true, true]), false), Some(1));
+        // Empty mask → no winner.
+        assert_eq!(argmin_masked(&col, &mask_of(&[false; 5]), false), None);
+        assert_eq!(argmin_masked(&[], &Bitmask::zeros(0), false), None);
+    }
+
+    #[test]
+    fn argmin_matches_scalar_reference_on_random_columns() {
+        let mut rng = Rng::seed_from_u64(0xA561);
+        for case in 0..200 {
+            let n = 1 + rng.below(200) as usize;
+            // Small discrete support forces ties; sprinkle NaNs and signs.
+            let col: Vec<f64> = (0..n)
+                .map(|_| match rng.below(8) {
+                    0 => f64::NAN,
+                    k => (k as f64 - 4.0) * 0.5,
+                })
+                .collect();
+            let live: Vec<bool> = (0..n).map(|_| rng.below(4) != 0).collect();
+            for negate in [false, true] {
+                assert_eq!(
+                    argmin_masked(&col, &mask_of(&live), negate),
+                    scalar::argmin_masked(&col, &live, negate),
+                    "case={case} negate={negate}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pareto_matches_scalar_and_is_worker_invariant() {
+        let mut rng = Rng::seed_from_u64(0x9A12E);
+        for case in 0..60 {
+            let n = 1 + rng.below(180) as usize;
+            let k = 1 + rng.below(4) as usize;
+            let signed: Vec<Vec<f64>> = (0..k)
+                .map(|_| {
+                    (0..n)
+                        .map(|_| match rng.below(10) {
+                            0 => f64::NAN,
+                            v => v as f64,
+                        })
+                        .collect()
+                })
+                .collect();
+            let reference = scalar::nondominated(&signed);
+            for workers in [1, 2, 8] {
+                assert_eq!(
+                    pareto_nondominated(&signed, &ThreadPool::new(workers)),
+                    reference,
+                    "case={case} workers={workers} n={n} k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pareto_tile_boundaries_and_equal_rows() {
+        // Exactly one tile, one-past, and multi-tile sizes; equal rows must
+        // both stay on the frontier (le holds, lt does not).
+        for n in [1usize, 2, TILE - 1, TILE, TILE + 1, 3 * TILE + 7] {
+            let col: Vec<f64> = (0..n).map(|i| (i / 2) as f64).collect();
+            let signed = vec![col];
+            let nd = pareto_nondominated(&signed, &ThreadPool::new(1));
+            // Only the global minima (rows 0 and, for n>1, row 1 — equal
+            // values) are non-dominated in a single min column.
+            for (i, &keep) in nd.iter().enumerate() {
+                assert_eq!(keep, i < 2.min(n), "n={n} i={i}");
+            }
+        }
+        assert_eq!(pareto_nondominated(&[], &ThreadPool::new(4)), Vec::<bool>::new());
+    }
+
+    fn batch(rows: Vec<Vec<(&'static str, f64)>>) -> SweepColumns {
+        let results: Vec<SweepResult> = rows
+            .into_iter()
+            .map(|metrics| SweepResult {
+                sweep: "t".into(),
+                point: DesignPoint::default(),
+                metrics,
+            })
+            .collect();
+        SweepColumns::from_results(&results)
+    }
+
+    #[test]
+    fn feasible_bitmask_fuses_constraints_with_presence() {
+        let cols = batch(vec![
+            vec![("acc", 0.995), ("ret", 10.0), ("occ", 1.0)],
+            vec![("acc", 0.5), ("ret", 10.0), ("occ", 1.0)], // fails floor
+            vec![("acc", 0.999), ("ret", 0.5), ("occ", 1.0)], // fails pair
+            vec![("acc", 0.999)],                             // hole: no ret/occ
+            vec![("acc", f64::NAN), ("ret", 10.0), ("occ", 1.0)], // NaN fails
+        ]);
+        let acc = cols.key_index("acc").unwrap();
+        let ret = cols.key_index("ret").unwrap();
+        let occ = cols.key_index("occ").unwrap();
+        let compiled = [
+            CompiledConstraint::Ge { key: acc, floor: 0.99 },
+            CompiledConstraint::PairGe { lhs: ret, rhs: occ },
+        ];
+        let mask = feasible_bitmask(&cols, &compiled);
+        assert_eq!(mask.to_bools(), vec![true, false, false, false, false]);
+        assert_eq!(mask.indices(), vec![0]);
+        // An unresolvable constraint blanks the whole mask.
+        let never = [CompiledConstraint::Never];
+        assert_eq!(feasible_bitmask(&cols, &never).count(), 0);
+        // No constraints: everything feasible (tail bits still trimmed).
+        assert_eq!(feasible_bitmask(&cols, &[]).count(), cols.len());
+    }
+
+    #[test]
+    fn feasible_bitmask_le_cap_and_chunk_tail() {
+        // 70 rows crosses the 64-lane chunk boundary.
+        let rows: Vec<Vec<(&'static str, f64)>> =
+            (0..70).map(|i| vec![("area", i as f64)]).collect();
+        let cols = batch(rows);
+        let area = cols.key_index("area").unwrap();
+        let mask =
+            feasible_bitmask(&cols, &[CompiledConstraint::Le { key: area, cap: 66.0 }]);
+        assert_eq!(mask.count(), 67);
+        assert!(mask.get(66) && !mask.get(67));
+    }
+}

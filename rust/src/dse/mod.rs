@@ -9,7 +9,10 @@
 //! figures. [`select`] closes the co-design loop: an objective/constraint
 //! layer over the sweep records (Pareto frontier, accuracy/retention/budget
 //! constraints) that picks the deployment's design point and hands it to
-//! the serving coordinator as a [`select::DesignSelection`].
+//! the serving coordinator as a [`select::DesignSelection`]. [`kernels`]
+//! supplies the branch-light columnar inner loops (fused feasibility
+//! bitmasks, masked argmin, pool-tiled Pareto scan) the selection hot path
+//! runs on.
 
 pub mod ablation;
 pub mod cache;
@@ -17,6 +20,7 @@ pub mod capacity;
 pub mod delta;
 pub mod energy_area;
 pub mod engine;
+pub mod kernels;
 pub mod retention;
 pub mod scratchpad;
 pub mod select;
@@ -27,4 +31,4 @@ pub use energy_area::EnergyAreaRow;
 pub use engine::{Axis, DesignPoint, Runner, SweepColumns, SweepResult, SweepSpec};
 pub use retention::RetentionRow;
 pub use scratchpad::{PartialOfmapRow, ScratchpadEnergyRow};
-pub use select::{Constraint, DesignSelection, Objective};
+pub use select::{Constraint, DesignSelection, Objective, SelectionGrid};

@@ -41,6 +41,8 @@ use crate::dse::capacity::DramOverheadRow;
 use crate::dse::engine::{
     variant_stall_context, Axis, DesignPoint, SweepColumns, SweepResult, SweepSpec, Zoo,
 };
+use crate::dse::kernels;
+use crate::util::pool::ThreadPool;
 use crate::memsys::{BufferSystem, DramModel, EnergyLedger, GlbKind};
 use crate::models::{DType, Model};
 use crate::mram::technology::finite_or_max;
@@ -189,53 +191,152 @@ pub fn feasible_mask(results: &[SweepResult], constraints: &[Constraint]) -> Vec
     feasible_mask_columns(&SweepColumns::from_results(results), constraints)
 }
 
-/// [`feasible_mask`] over an existing columnar view.
+/// [`feasible_mask`] over an existing columnar view. The constraints are
+/// compiled once against the batch's interned keys and fused into a single
+/// bitmask pass per 64-row column chunk
+/// ([`kernels::feasible_bitmask`]) — bit-identical to folding
+/// [`Constraint::satisfied_at`] per row.
 pub fn feasible_mask_columns(cols: &SweepColumns, constraints: &[Constraint]) -> Vec<bool> {
-    (0..cols.len()).map(|row| constraints.iter().all(|c| c.satisfied_at(cols, row))).collect()
+    feasible_bitmask_columns(cols, constraints).to_bools()
+}
+
+/// The packed form of [`feasible_mask_columns`] (the shape [`select`]
+/// consumes directly).
+fn feasible_bitmask_columns(cols: &SweepColumns, constraints: &[Constraint]) -> kernels::Bitmask {
+    let compiled = compile_constraints(cols, constraints);
+    kernels::feasible_bitmask(cols, &compiled)
+}
+
+/// Resolve each [`Constraint`] against the batch's interned keys into the
+/// lookup-free form the fused kernel consumes. A metric the batch never
+/// interned compiles to [`kernels::CompiledConstraint::Never`] (no row can
+/// satisfy it — same as [`Constraint::satisfied_at`] returning false
+/// everywhere).
+fn compile_constraints(
+    cols: &SweepColumns,
+    constraints: &[Constraint],
+) -> Vec<kernels::CompiledConstraint> {
+    use kernels::CompiledConstraint as K;
+    let ge = |name: &str, floor: f64| match cols.key_index(name) {
+        Some(key) => K::Ge { key, floor },
+        None => K::Never,
+    };
+    let le = |name: &str, cap: f64| match cols.key_index(name) {
+        Some(key) => K::Le { key, cap },
+        None => K::Never,
+    };
+    constraints
+        .iter()
+        .map(|c| match c {
+            Constraint::MinAccuracy(floor) => ge("est_accuracy", *floor),
+            Constraint::RetentionCoversOccupancy => {
+                match (cols.key_index("retention_at_ber_s"), cols.key_index("occupancy_s")) {
+                    (Some(lhs), Some(rhs)) => K::PairGe { lhs, rhs },
+                    _ => K::Never,
+                }
+            }
+            Constraint::MaxAreaMm2(cap) => le("accel_area_mm2", *cap),
+            Constraint::MaxPowerMw(cap) => le("accel_power_mw", *cap),
+        })
+        .collect()
 }
 
 /// Non-dominated mask over the given objectives. Record `a` dominates `b`
 /// when it is at least as good on every objective and strictly better on at
-/// least one. Objectives whose metric is missing from any record are
-/// skipped, so the frontier stays well-defined on custom sweeps that carry
-/// only a subset of the selection metrics.
+/// least one. An objective participates when *some* record carries its
+/// metric; records missing a live objective metric are excluded from the
+/// frontier (mask false) rather than comparing as if present, so
+/// mixed-layout batches cannot smuggle hole-`NaN`s into the dominance scan.
 pub fn pareto_mask(results: &[SweepResult], objectives: &[Objective]) -> Vec<bool> {
     pareto_mask_columns(&SweepColumns::from_results(results), objectives)
 }
 
 /// [`pareto_mask`] over an existing columnar view.
 pub fn pareto_mask_columns(cols: &SweepColumns, objectives: &[Objective]) -> Vec<bool> {
+    pareto_mask_columns_with(cols, objectives, &frontier_pool(cols.len()))
+}
+
+/// [`pareto_mask_columns`] on an explicit pool. The frontier is
+/// byte-identical at any worker count (the tiled scan fans target tiles out
+/// on the pool and merges caller-side in tile order); exposing the pool lets
+/// tests and benches pin/vary the width.
+pub fn pareto_mask_columns_with(
+    cols: &SweepColumns,
+    objectives: &[Objective],
+    pool: &ThreadPool,
+) -> Vec<bool> {
     let rows: Vec<usize> = (0..cols.len()).collect();
-    pareto_rows(cols, objectives, &rows)
+    pareto_rows_with(cols, objectives, &rows, pool)
+}
+
+/// Candidate batches below this row count run the tiled scan serially — the
+/// per-job overhead of fanning tile jobs out would dominate the O(n²/64)
+/// tile work itself.
+const FRONTIER_PAR_ROWS: usize = 1024;
+
+/// Pool choice for an internal frontier scan over `rows` candidates.
+fn frontier_pool(rows: usize) -> ThreadPool {
+    if rows >= FRONTIER_PAR_ROWS {
+        ThreadPool::auto()
+    } else {
+        ThreadPool::new(1)
+    }
 }
 
 /// Non-dominated mask over a row subset of a columnar batch (the mask is
-/// indexed like `rows`). Liveness matches the record path on the same
-/// subset: an objective participates only when every subset row carries its
-/// metric.
+/// indexed like `rows`). An objective is live when its metric is interned
+/// *and* carried by at least one subset row; subset rows missing any live
+/// metric are excluded (mask false) and take no part in dominance. With no
+/// live objective the whole subset is trivially non-dominated.
 fn pareto_rows(cols: &SweepColumns, objectives: &[Objective], rows: &[usize]) -> Vec<bool> {
-    // Signed sub-columns of the live objectives: smaller is always better
-    // (negating flips the f64 sign bit, which reverses `total_cmp`'s order
-    // exactly, so the signed view is faithful to the per-record compare).
-    let signed: Vec<Vec<f64>> = objectives
-        .iter()
-        .filter_map(|o| {
-            let key = cols.key_index(o.metric())?;
-            if !rows.iter().all(|&r| cols.has(r, key)) {
-                return None;
+    pareto_rows_with(cols, objectives, rows, &frontier_pool(rows.len()))
+}
+
+fn pareto_rows_with(
+    cols: &SweepColumns,
+    objectives: &[Objective],
+    rows: &[usize],
+    pool: &ThreadPool,
+) -> Vec<bool> {
+    let mut live: Vec<(usize, bool)> = Vec::new();
+    for o in objectives {
+        if let Some(key) = cols.key_index(o.metric()) {
+            let seen = live.iter().any(|&(k, _)| k == key);
+            if !seen && rows.iter().any(|&r| cols.has(r, key)) {
+                live.push((key, o.lower_is_better()));
             }
-            let col = cols.column(key);
-            let lower = o.lower_is_better();
-            Some(rows.iter().map(|&r| if lower { col[r] } else { -col[r] }).collect())
-        })
-        .collect();
-    if signed.is_empty() {
+        }
+    }
+    if live.is_empty() {
         return vec![true; rows.len()];
     }
-    let dominates = |a: usize, b: usize| {
-        signed.iter().all(|c| c[a] <= c[b]) && signed.iter().any(|c| c[a] < c[b])
-    };
-    (0..rows.len()).map(|b| !(0..rows.len()).any(|a| dominates(a, b))).collect()
+    // Gather the complete rows (those carrying every live metric) into
+    // dense signed sub-columns: smaller is always better (negating flips
+    // the f64 sign bit, which reverses `total_cmp`'s order exactly, so the
+    // signed view is faithful to the per-record compare). Incomplete rows
+    // stay masked out.
+    let mut mask = vec![false; rows.len()];
+    let complete: Vec<usize> = (0..rows.len())
+        .filter(|&i| live.iter().all(|&(key, _)| cols.has(rows[i], key)))
+        .collect();
+    if complete.is_empty() {
+        return mask;
+    }
+    let signed: Vec<Vec<f64>> = live
+        .iter()
+        .map(|&(key, lower)| {
+            let col = cols.column(key);
+            complete
+                .iter()
+                .map(|&i| if lower { col[rows[i]] } else { -col[rows[i]] })
+                .collect()
+        })
+        .collect();
+    let nondominated = kernels::pareto_nondominated(&signed, pool);
+    for (&i, keep) in complete.iter().zip(nondominated) {
+        mask[i] = keep;
+    }
+    mask
 }
 
 /// Version tag of the latency model behind `latency_s`/`throughput_rps` in
@@ -482,8 +583,8 @@ pub fn select(
             objective.token()
         );
     };
-    let feasible = feasible_mask_columns(&cols, constraints);
-    let rows: Vec<usize> = (0..cols.len()).filter(|&i| feasible[i]).collect();
+    let feasible = feasible_bitmask_columns(&cols, constraints);
+    let rows = feasible.indices();
     let n_feasible = rows.len();
     if n_feasible == 0 {
         let described: Vec<String> = constraints.iter().map(Constraint::describe).collect();
@@ -495,26 +596,21 @@ pub fn select(
     }
     let frontier = pareto_rows(&cols, &Objective::all(), &rows);
     let n_frontier = frontier.iter().filter(|f| **f).count();
-    // Winner scan over the frontier: signed column compare (strictly-less
-    // update only), which keeps the record path's first-wins tie-breaking.
+    // Winner scan over the frontier: masked argmin on the gathered
+    // objective sub-column under the sign-flipped `total_cmp` key — the
+    // kernel's two-pass min + first-match keeps the record path's
+    // first-wins tie-breaking bit-for-bit.
     let obj_col = cols.column(obj_key);
     let lower = objective.lower_is_better();
-    let mut best: Option<(usize, f64)> = None;
+    let sub: Vec<f64> = rows.iter().map(|&row| obj_col[row]).collect();
+    let mut live = kernels::Bitmask::zeros(rows.len());
     for (i, &row) in rows.iter().enumerate() {
-        if !frontier[i] || !cols.has(row, obj_key) {
-            continue;
-        }
-        let signed = if lower { obj_col[row] } else { -obj_col[row] };
-        let better = match best {
-            None => true,
-            Some((_, held)) => signed.total_cmp(&held) == std::cmp::Ordering::Less,
-        };
-        if better {
-            best = Some((row, signed));
+        if frontier[i] && cols.has(row, obj_key) {
+            live.set(i);
         }
     }
-    let winner = best
-        .map(|(row, _)| &results[row])
+    let winner = kernels::argmin_masked(&sub, &live, !lower)
+        .map(|i| &results[rows[i]])
         .ok_or_else(|| anyhow::anyhow!("Pareto frontier carries no {:?} metric", objective.metric()))?;
     Ok(DesignSelection {
         sweep: sweep.to_string(),
@@ -567,17 +663,74 @@ pub fn resolve_model<'a>(zoo: &'a [Model], name: &str) -> anyhow::Result<&'a Mod
 /// (`variant=...`, `delta=...`, `ber=...`, `glb_mb=...`, `macs=...`,
 /// `model=...`, `batch=...`).
 pub fn spec_selection(zoo: &Zoo) -> SweepSpec {
+    spec_selection_grid(zoo, SelectionGrid::Default)
+}
+
+/// Which candidate grid [`spec_selection_grid`] builds — the `[deployment]`
+/// `grid` knob / CLI `--grid`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SelectionGrid {
+    /// The 108-candidate grid behind the pinned Table III goldens.
+    #[default]
+    Default,
+    /// The 2592-candidate stress grid (variant × Δ × BER × GLB × MAC-array
+    /// densified): the vectorized-kernel workload, and the resolution knob
+    /// for grids too expensive on the scalar path.
+    Dense,
+}
+
+impl SelectionGrid {
+    pub fn token(self) -> &'static str {
+        match self {
+            SelectionGrid::Default => "default",
+            SelectionGrid::Dense => "dense",
+        }
+    }
+
+    pub fn from_token(tok: &str) -> Option<Self> {
+        match tok {
+            "default" => Some(SelectionGrid::Default),
+            "dense" => Some(SelectionGrid::Dense),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [SelectionGrid; 2] {
+        [SelectionGrid::Default, SelectionGrid::Dense]
+    }
+}
+
+/// [`spec_selection`] at an explicit grid resolution. The dense grid keeps
+/// the default grid's axes and workload but widens every device/capacity
+/// axis (Δ down to the 12.5 LSB floor and up past the paper's 30 anchor,
+/// a mid 1e-6 BER budget, an 8 MB GLB below the paper's 12 MB, a 28×28
+/// edge-sized MAC array): 3 × 8 × 3 × 4 × 3 = 2592 candidates. Both grids
+/// produce the same record shape, so `select`/export/serve consume either;
+/// dense winners are *not* pinned as goldens — the grid exists to stress
+/// the columnar kernels and to sharpen frontier resolution.
+pub fn spec_selection_grid(zoo: &Zoo, grid: SelectionGrid) -> SweepSpec {
     let z = zoo.clone();
     let subject = resolve_model(zoo, "ResNet50").expect("zoo carries ResNet50").name.clone();
+    let (delta, ber, glb_mb, macs) = match grid {
+        SelectionGrid::Default => {
+            (vec![27.5, 22.5, 17.5], vec![1.0e-8, 1.0e-5], vec![12, 16, 24], vec![42, 84])
+        }
+        SelectionGrid::Dense => (
+            vec![30.0, 27.5, 25.0, 22.5, 20.0, 17.5, 15.0, 12.5],
+            vec![1.0e-8, 1.0e-6, 1.0e-5],
+            vec![8, 12, 16, 24],
+            vec![28, 42, 84],
+        ),
+    };
     SweepSpec::new(
         "selection",
         vec![
             Axis::Model(vec![subject]),
             Axis::Variant(vec![GlbVariant::Sram, GlbVariant::SttAi, GlbVariant::SttAiUltra]),
-            Axis::Delta(vec![27.5, 22.5, 17.5]),
-            Axis::Ber(vec![1.0e-8, 1.0e-5]),
-            Axis::GlbMb(vec![12, 16, 24]),
-            Axis::Macs(vec![42, 84]),
+            Axis::Delta(delta),
+            Axis::Ber(ber),
+            Axis::GlbMb(glb_mb),
+            Axis::Macs(macs),
         ],
         move |p| selection_eval(&z, p),
     )

@@ -43,14 +43,16 @@ COMMANDS:
                macs, variant, tech, ber, delta, write_intensity, mc_samples)
   select       [--objective area|energy|latency|throughput]
                [--min-accuracy 0.99] [--max-area-mm2 X] [--max-power-mw X]
-               [--no-retention-check] [--config build.json]
+               [--no-retention-check] [--grid default|dense]
+               [--config build.json]
                [--sweep axis=v1|v2,...] [--parallel N]
                [--out selection.json] [--csv selection.csv]
                objective/constraint design-point selection over the
                variant x delta x ber x glb_mb x macs candidate grid
                (Pareto frontier; latency scored with the write-bandwidth
-               stall model; a --config [deployment] section may also carry
-               glb_mb/macs grid knobs)
+               stall model; --grid dense widens every axis to the
+               2592-candidate stress grid; a --config [deployment]
+               section may also carry glb_mb/macs/grid knobs)
   table3                               Table III composition + savings
   design       [--retention 3.0|3y] [--ber 1e-8] [--tech sakhare2020|wei2019]
   accuracy     [--artifacts DIR] [--prune 0.0] [--batch 16] [--limit N]
@@ -178,14 +180,19 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "select" => {
-            // Objective + constraints (and optional glb_mb/macs grid knobs)
-            // come from a `[deployment]` config section (`--config
+            // Objective + constraints (and the optional glb_mb/macs/grid
+            // knobs) come from a `[deployment]` config section (`--config
             // build.json`) or from individual flags.
-            let (objective, constraints, grid) = match args.get("config") {
+            let (objective, constraints, axis_overrides, grid) = match args.get("config") {
                 Some(path) => {
-                    for f in
-                        ["objective", "min-accuracy", "max-area-mm2", "max-power-mw", "no-retention-check"]
-                    {
+                    for f in [
+                        "objective",
+                        "min-accuracy",
+                        "max-area-mm2",
+                        "max-power-mw",
+                        "no-retention-check",
+                        "grid",
+                    ] {
                         if args.get(f).is_some() {
                             anyhow::bail!(
                                 "--{f} conflicts with --config (the [deployment] section owns it)"
@@ -193,8 +200,8 @@ fn main() -> anyhow::Result<()> {
                         }
                     }
                     let dep = SystemConfig::load(Path::new(path))?.deployment;
-                    let grid = dep.grid_overrides();
-                    (dep.objective, dep.constraints(), grid)
+                    let over = dep.grid_overrides();
+                    (dep.objective, dep.constraints(), over, dep.grid)
                 }
                 None => {
                     let objective_token = args.get_or("objective", "area").to_string();
@@ -202,6 +209,10 @@ fn main() -> anyhow::Result<()> {
                         anyhow::anyhow!(
                             "unknown objective {objective_token:?} (area, energy, latency, throughput)"
                         )
+                    })?;
+                    let grid_token = args.get_or("grid", "default").to_string();
+                    let grid = select::SelectionGrid::from_token(&grid_token).ok_or_else(|| {
+                        anyhow::anyhow!("unknown selection grid {grid_token:?} (default, dense)")
                     })?;
                     let mut constraints = Vec::new();
                     if let Some(floor) =
@@ -222,17 +233,17 @@ fn main() -> anyhow::Result<()> {
                     {
                         constraints.push(Constraint::MaxPowerMw(cap));
                     }
-                    (objective, constraints, Vec::new())
+                    (objective, constraints, Vec::new(), grid)
                 }
             };
             // Config-section grid knobs sit below explicit `--sweep` flags.
-            let runner = runner_from(&args)?.with_prepended_overrides(grid);
+            let runner = runner_from(&args)?.with_prepended_overrides(axis_overrides);
             let out_json = args.get("out").map(PathBuf::from);
             let csv = args.get("csv").map(PathBuf::from);
             args.finish()?;
 
             let zoo = dse_engine::shared_zoo();
-            let spec = runner.resolve(select::spec_selection(&zoo));
+            let spec = runner.resolve(select::spec_selection_grid(&zoo, grid));
             let results = spec.run(runner.pool());
             let feasible = select::feasible_mask(&results, &constraints);
             let sel = select::select("selection", &results, objective, &constraints)?;

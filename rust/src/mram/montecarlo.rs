@@ -165,7 +165,7 @@ struct BlockScratch {
 
 impl BlockScratch {
     fn new() -> Self {
-        Self { normals: vec![0.0; BLOCK_SAMPLES], uniforms: vec![0.0; BLOCK_SAMPLES] }
+        Self { normals: Vec::with_capacity(BLOCK_SAMPLES), uniforms: vec![0.0; BLOCK_SAMPLES] }
     }
 }
 
@@ -268,9 +268,13 @@ impl MonteCarlo {
         scratch: &mut BlockScratch,
         acc: &mut McAccumulator,
     ) {
-        let normals = &mut scratch.normals[..m];
+        // Normals go through the chunked shared fill path (bit-identical to
+        // one monolithic fill_normal; capacity reused, zero steady-state
+        // allocation).
+        scratch.normals.clear();
+        rng.fill_normal_into(&mut scratch.normals, m);
+        let normals = &scratch.normals[..];
         let uniforms = &mut scratch.uniforms[..m];
-        rng.fill_normal(normals);
         rng.fill_f64(uniforms);
         let t_span = self.variation.t_hot - self.variation.t_cold;
         for (&ps, &u) in normals.iter().zip(uniforms.iter()) {

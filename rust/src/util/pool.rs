@@ -55,9 +55,22 @@ impl ThreadPool {
         R: Send,
         F: Fn(usize, &T) -> R + Sync,
     {
-        let n = self.workers.min(items.len());
+        self.map_range(items.len(), |i| f(i, &items[i]))
+    }
+
+    /// [`ThreadPool::map`] over a bare index range `0..len` — the form the
+    /// columnar kernels use to fan tile jobs out without materializing an
+    /// item slice. Same contract: each index runs exactly once, results come
+    /// back in index order (deterministic for any worker count), worker
+    /// panics propagate.
+    pub fn map_range<R, F>(&self, len: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        let n = self.workers.min(len);
         if n <= 1 {
-            return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+            return (0..len).map(f).collect();
         }
 
         // Contiguous index chunks per worker; stealing takes from the *back*
@@ -65,15 +78,15 @@ impl ThreadPool {
         // over the same cache lines of work.
         let queues: Vec<Mutex<VecDeque<usize>>> = (0..n)
             .map(|w| {
-                let lo = w * items.len() / n;
-                let hi = (w + 1) * items.len() / n;
+                let lo = w * len / n;
+                let hi = (w + 1) * len / n;
                 Mutex::new((lo..hi).collect())
             })
             .collect();
 
         let f = &f;
         let queues = &queues;
-        let mut tagged: Vec<(usize, R)> = Vec::with_capacity(items.len());
+        let mut tagged: Vec<(usize, R)> = Vec::with_capacity(len);
         std::thread::scope(|s| {
             let handles: Vec<_> = (0..n)
                 .map(|w| {
@@ -91,7 +104,7 @@ impl ThreadPool {
                                 }),
                             };
                             match job {
-                                Some(i) => out.push((i, f(i, &items[i]))),
+                                Some(i) => out.push((i, f(i))),
                                 None => return out,
                             }
                         }
@@ -106,7 +119,7 @@ impl ThreadPool {
             }
         });
 
-        debug_assert_eq!(tagged.len(), items.len());
+        debug_assert_eq!(tagged.len(), len);
         tagged.sort_by_key(|(i, _)| *i);
         tagged.into_iter().map(|(_, r)| r).collect()
     }
@@ -168,6 +181,20 @@ mod tests {
         });
         assert_eq!(runs.load(Ordering::Relaxed), 64);
         assert_eq!(out, items);
+    }
+
+    #[test]
+    fn map_range_matches_map_and_is_worker_invariant() {
+        let items: Vec<usize> = (0..321).collect();
+        let via_map = ThreadPool::new(1).map(&items, |i, _| i * i);
+        for workers in [1, 2, 4, 8] {
+            assert_eq!(
+                ThreadPool::new(workers).map_range(items.len(), |i| i * i),
+                via_map,
+                "workers={workers}"
+            );
+        }
+        assert_eq!(ThreadPool::new(4).map_range(0, |i| i), Vec::<usize>::new());
     }
 
     #[test]

@@ -137,11 +137,55 @@ impl Rng {
             out[i] = self.normal();
         }
     }
+
+    /// Append `n` standard normals to `out`, generated through
+    /// [`Rng::fill_normal`] in fixed [`FILL_CHUNK`]-sized slices. Because
+    /// the chunk size is even, every chunk boundary lands between Box–Muller
+    /// pairs and the result is bit-identical to one monolithic
+    /// `fill_normal` over `n` lanes — while the working set each pass
+    /// touches stays L1/L2-resident for large `n`. Capacity is reused
+    /// across calls (`clear()` + `fill_normal_into` is the zero-allocation
+    /// steady state the MC accumulator and the columnar kernels share).
+    pub fn fill_normal_into(&mut self, out: &mut Vec<f64>, n: usize) {
+        let start = out.len();
+        out.resize(start + n, 0.0);
+        for chunk in out[start..].chunks_mut(FILL_CHUNK) {
+            self.fill_normal(chunk);
+        }
+    }
 }
+
+/// Slice width of the chunked batched-fill paths ([`Rng::fill_normal_into`]).
+/// Must stay even so chunk boundaries never split a Box–Muller pair — that
+/// is what keeps the chunked fill bit-identical to the monolithic one.
+pub const FILL_CHUNK: usize = 512;
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fill_normal_into_is_bit_identical_to_monolithic_fill() {
+        // Chunk boundaries must never split a Box–Muller pair: the chunked
+        // append matches one big fill_normal bit-for-bit, for lengths below,
+        // at, and straddling FILL_CHUNK (odd tails included).
+        for n in [0usize, 1, 2, 511, 512, 513, 1024, 1025, 3 * FILL_CHUNK + 7] {
+            let mut mono = vec![0.0f64; n];
+            Rng::seed_from_u64(42).fill_normal(&mut mono);
+            let mut chunked = Vec::new();
+            Rng::seed_from_u64(42).fill_normal_into(&mut chunked, n);
+            assert_eq!(chunked.len(), n);
+            let eq = mono.iter().zip(&chunked).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(eq, "n={n}");
+        }
+        // Appends after the existing tail and reuses capacity.
+        let mut out = vec![7.0f64];
+        let mut rng = Rng::seed_from_u64(9);
+        rng.fill_normal_into(&mut out, 10);
+        assert_eq!(out.len(), 11);
+        assert_eq!(out[0], 7.0);
+        assert_eq!(FILL_CHUNK % 2, 0, "FILL_CHUNK must stay even");
+    }
 
     #[test]
     fn deterministic() {

@@ -5,13 +5,14 @@
 use stt_ai::accel::{ArrayConfig, RetentionAnalysis};
 use stt_ai::ber::Injector;
 use stt_ai::coordinator::{Batcher, Request};
-use stt_ai::dse::{DesignPoint, SweepColumns, SweepResult};
+use stt_ai::dse::{kernels, select, Constraint, DesignPoint, Objective, SweepColumns, SweepResult};
 use stt_ai::models;
 use stt_ai::mram::{
     read_disturb_prob, read_pulse_at_rd, retention_failure_prob, retention_time_at_ber,
     write_error_rate, write_pulse_at_wer, PtVariation,
 };
 use stt_ai::util::json::Json;
+use stt_ai::util::pool::ThreadPool;
 use stt_ai::util::rng::Rng;
 
 const CASES: usize = 200;
@@ -266,6 +267,223 @@ fn prop_strided_split_matches_copy_based_masked_split() {
         for i in 0..words {
             assert_eq!(lsb[i], fast[2 * i], "case {case}: lsb byte {i}");
             assert_eq!(msb[i], fast[2 * i + 1], "case {case}: msb byte {i}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Selection kernels (PR 7): the fused/tiled columnar hot path must be
+// bit-identical to the per-record scalar scans on adversarial batches —
+// metric holes, genuine NaN values, heavy ties from a small value pool, and
+// row counts straddling the TILE=64 boundary — at every worker count.
+// ---------------------------------------------------------------------------
+
+/// The real selection-record metric vocabulary (what `spec_selection`
+/// sweeps emit), so the generated batches exercise the same compiled
+/// constraint keys as production.
+const SELECTION_KEYS: [&str; 7] = [
+    "accel_area_mm2",
+    "buffer_energy_j",
+    "latency_s",
+    "throughput_rps",
+    "est_accuracy",
+    "retention_at_ber_s",
+    "occupancy_s",
+];
+
+/// Random selection-shaped batch: each record carries a random subset of
+/// [`SELECTION_KEYS`] (~1-in-6 holes), values drawn from the tiny pool
+/// {1,2,3,4} to force ties, with ~1-in-12 genuine NaNs. Points are unique
+/// per row (batch = row+1) so a winner can be identified by its point.
+fn gen_selection_batch(rng: &mut Rng, n: usize) -> Vec<SweepResult> {
+    (0..n)
+        .map(|row| {
+            let mut metrics: Vec<(&'static str, f64)> = Vec::new();
+            for &k in SELECTION_KEYS.iter() {
+                if rng.below(6) == 0 {
+                    continue; // hole: this record never carries k
+                }
+                let v = if rng.below(12) == 0 { f64::NAN } else { 1.0 + rng.below(4) as f64 };
+                metrics.push((k, v));
+            }
+            SweepResult {
+                sweep: "prop".into(),
+                point: DesignPoint { batch: Some(row as u64 + 1), ..Default::default() },
+                metrics,
+            }
+        })
+        .collect()
+}
+
+/// Random constraint set over the generated value pool (floors/caps sit
+/// mid-pool so roughly half the rows pass each check). The power cap's
+/// metric is never generated, so when it appears it exercises the
+/// compiled-`Never` screen (everything infeasible).
+fn gen_constraints(rng: &mut Rng) -> Vec<Constraint> {
+    let mut c = Vec::new();
+    if rng.below(2) == 0 {
+        c.push(Constraint::MinAccuracy(2.0));
+    }
+    if rng.below(2) == 0 {
+        c.push(Constraint::RetentionCoversOccupancy);
+    }
+    if rng.below(2) == 0 {
+        c.push(Constraint::MaxAreaMm2(3.0));
+    }
+    if rng.below(8) == 0 {
+        c.push(Constraint::MaxPowerMw(2.0));
+    }
+    c
+}
+
+/// Reference frontier with the documented hole semantics, built from
+/// per-record probes and the pre-kernel scalar dominance scan: an objective
+/// is live when some subset row carries its metric; subset rows missing a
+/// live metric are excluded; complete rows are compared through signed
+/// (smaller-is-better) values.
+fn reference_pareto(records: &[SweepResult], objectives: &[Objective], rows: &[usize]) -> Vec<bool> {
+    let mut live: Vec<(&'static str, bool)> = Vec::new();
+    for o in objectives {
+        if !live.iter().any(|&(m, _)| m == o.metric())
+            && rows.iter().any(|&r| records[r].metric_opt(o.metric()).is_some())
+        {
+            live.push((o.metric(), o.lower_is_better()));
+        }
+    }
+    if live.is_empty() {
+        return vec![true; rows.len()];
+    }
+    let mut mask = vec![false; rows.len()];
+    let complete: Vec<usize> = (0..rows.len())
+        .filter(|&i| live.iter().all(|&(m, _)| records[rows[i]].metric_opt(m).is_some()))
+        .collect();
+    if complete.is_empty() {
+        return mask;
+    }
+    let signed: Vec<Vec<f64>> = live
+        .iter()
+        .map(|&(m, lower)| {
+            complete
+                .iter()
+                .map(|&i| {
+                    let v = records[rows[i]].metric_opt(m).expect("complete row carries m");
+                    if lower {
+                        v
+                    } else {
+                        -v
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    for (&i, keep) in complete.iter().zip(kernels::scalar::nondominated(&signed)) {
+        mask[i] = keep;
+    }
+    mask
+}
+
+/// Reference `select()`: per-record feasibility fold → [`reference_pareto`]
+/// over the feasible subset → first-wins `total_cmp` argmin of the
+/// requested objective over frontier rows that carry it. `None` exactly
+/// when `select()` errors (no feasible row, objective metric absent, or a
+/// frontier without the metric).
+fn reference_select<'a>(
+    records: &'a [SweepResult],
+    objective: Objective,
+    constraints: &[Constraint],
+) -> Option<&'a SweepResult> {
+    let feasible: Vec<usize> = (0..records.len())
+        .filter(|&i| constraints.iter().all(|c| c.satisfied(&records[i])))
+        .collect();
+    if feasible.is_empty() {
+        return None;
+    }
+    let frontier = reference_pareto(records, &Objective::all(), &feasible);
+    let mut best: Option<(usize, f64)> = None;
+    for (j, &i) in feasible.iter().enumerate() {
+        if !frontier[j] {
+            continue;
+        }
+        let Some(v) = records[i].metric_opt(objective.metric()) else { continue };
+        let key = if objective.lower_is_better() { v } else { -v };
+        let better = match best {
+            Some((_, b)) => key.total_cmp(&b) == std::cmp::Ordering::Less,
+            None => true,
+        };
+        if better {
+            best = Some((i, key));
+        }
+    }
+    best.map(|(i, _)| &records[i])
+}
+
+#[test]
+fn prop_fused_feasibility_matches_the_scalar_fold() {
+    let mut rng = Rng::seed_from_u64(0xFEA5_1B1E);
+    for case in 0..CASES {
+        let n = 1 + rng.below(96) as usize;
+        let records = gen_selection_batch(&mut rng, n);
+        let constraints = gen_constraints(&mut rng);
+        let cols = SweepColumns::from_results(&records);
+        let fused = select::feasible_mask_columns(&cols, &constraints);
+        let per_row: Vec<bool> = (0..n)
+            .map(|row| constraints.iter().all(|c| c.satisfied_at(&cols, row)))
+            .collect();
+        let per_record: Vec<bool> =
+            records.iter().map(|r| constraints.iter().all(|c| c.satisfied(r))).collect();
+        assert_eq!(fused, per_row, "case {case}: fused vs columnar fold ({constraints:?})");
+        assert_eq!(fused, per_record, "case {case}: fused vs record fold ({constraints:?})");
+    }
+}
+
+#[test]
+fn prop_tiled_pareto_matches_scalar_at_every_worker_count() {
+    let mut rng = Rng::seed_from_u64(0x7A12E_70);
+    let pools: Vec<ThreadPool> = [1, 2, 8].into_iter().map(ThreadPool::new).collect();
+    for case in 0..CASES {
+        let n = 1 + rng.below(96) as usize;
+        let records = gen_selection_batch(&mut rng, n);
+        let cols = SweepColumns::from_results(&records);
+        let objectives = Objective::all();
+        let rows: Vec<usize> = (0..n).collect();
+        let expect = reference_pareto(&records, &objectives, &rows);
+        for pool in &pools {
+            assert_eq!(
+                select::pareto_mask_columns_with(&cols, &objectives, pool),
+                expect,
+                "case {case}: tiled frontier vs scalar reference at {} workers",
+                pool.workers()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_select_winner_matches_the_reference_scan() {
+    let mut rng = Rng::seed_from_u64(0x5E1E_C7);
+    for case in 0..CASES {
+        let n = 1 + rng.below(80) as usize;
+        let records = gen_selection_batch(&mut rng, n);
+        let constraints = gen_constraints(&mut rng);
+        let objective = Objective::all()[rng.below(4) as usize];
+        let expect = reference_select(&records, objective, &constraints);
+        match (select::select("prop", &records, objective, &constraints), expect) {
+            (Ok(sel), Some(rec)) => {
+                assert_eq!(sel.point, rec.point, "case {case}: winner ({objective:?})");
+                let want = rec.metric_opt(objective.metric()).expect("winner carries objective");
+                assert_eq!(
+                    sel.score.to_bits(),
+                    want.to_bits(),
+                    "case {case}: score must be the winner's raw metric"
+                );
+            }
+            (Err(_), None) => {}
+            (Ok(sel), None) => {
+                panic!("case {case}: select picked {:?} but the reference found none", sel.point)
+            }
+            (Err(e), Some(rec)) => {
+                panic!("case {case}: select errored ({e}) but the reference picked {:?}", rec.point)
+            }
         }
     }
 }

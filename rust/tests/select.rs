@@ -5,10 +5,11 @@
 
 use stt_ai::config::{GlbVariant, TechBase};
 use stt_ai::coordinator::EngineConfig;
-use stt_ai::dse::engine::{parse_axes, shared_zoo, Runner, SweepColumns};
-use stt_ai::dse::select::{self, Constraint, DesignSelection, Objective};
+use stt_ai::dse::engine::{parse_axes, shared_zoo, DesignPoint, Runner, SweepColumns, SweepResult};
+use stt_ai::dse::select::{self, Constraint, DesignSelection, Objective, SelectionGrid};
 use stt_ai::memsys::GlbKind;
 use stt_ai::report::export;
+use stt_ai::util::pool::ThreadPool;
 
 fn paper_constraints() -> Vec<Constraint> {
     vec![Constraint::MinAccuracy(0.99), Constraint::RetentionCoversOccupancy]
@@ -271,6 +272,87 @@ fn budget_constraints_filter_candidates() {
     .unwrap_err()
     .to_string();
     assert!(err.contains("no feasible design point"), "{err}");
+}
+
+fn rec_with(metrics: Vec<(&'static str, f64)>) -> SweepResult {
+    SweepResult { sweep: "mixed".into(), point: DesignPoint::default(), metrics }
+}
+
+/// Hole-handling regression (mixed-layout batches): a row whose layout is
+/// missing a live objective metric is *excluded* from the frontier — it
+/// neither joins it nor sways the dominance ranking of the complete rows —
+/// instead of comparing as if the metric were present.
+#[test]
+fn rows_missing_a_live_objective_metric_are_excluded_from_the_frontier() {
+    let objectives = [Objective::MinArea, Objective::MinEnergy];
+    let rs = vec![
+        rec_with(vec![("accel_area_mm2", 5.0), ("buffer_energy_j", 2.0)]),
+        // Missing energy: excluded, even though its area is competitive.
+        rec_with(vec![("accel_area_mm2", 4.0)]),
+        rec_with(vec![("accel_area_mm2", 6.0), ("buffer_energy_j", 1.0)]),
+        // Missing energy with the best area of all: must not dominate the
+        // complete rows through the area column.
+        rec_with(vec![("accel_area_mm2", 0.1)]),
+    ];
+    let mask = select::pareto_mask(&rs, &objectives);
+    assert_eq!(mask, vec![true, false, true, false]);
+    // The columnar view agrees at any pool width.
+    let cols = SweepColumns::from_results(&rs);
+    for workers in [1usize, 2, 8] {
+        assert_eq!(
+            select::pareto_mask_columns_with(&cols, &objectives, &ThreadPool::new(workers)),
+            mask,
+            "workers={workers}"
+        );
+    }
+    // An objective nobody carries stays inert; with no live objective at
+    // all the whole batch is trivially non-dominated.
+    let none = vec![rec_with(vec![("other", 1.0)]), rec_with(vec![("other", 2.0)])];
+    assert_eq!(select::pareto_mask(&none, &[Objective::MinEnergy]), vec![true, true]);
+}
+
+/// The `--grid dense` stress grid: 2592 candidates, byte-stable across
+/// worker counts, kernel masks matching the scalar folds on real records —
+/// and, being a strict superset of the default grid, its area pick can only
+/// improve on (or tie) the default one.
+#[test]
+fn dense_grid_is_deterministic_and_sharpens_the_area_pick() {
+    let zoo = shared_zoo();
+    assert_eq!(select::spec_selection_grid(&zoo, SelectionGrid::Default).len(), 108);
+    let spec = select::spec_selection_grid(&zoo, SelectionGrid::Dense);
+    assert_eq!(spec.len(), 2592, "3 variants x 8 deltas x 3 bers x 4 glb x 3 macs");
+    let serial = Runner::new(1).run(spec.clone());
+    let parallel = Runner::new(4).run(spec);
+    assert_eq!(serial, parallel, "dense records must be byte-stable across worker counts");
+
+    // Kernel parity on the real dense grid: the fused feasibility bitmask
+    // equals the per-row constraint fold, and the tiled frontier is
+    // byte-identical at every pool width.
+    let cols = SweepColumns::from_results(&serial);
+    let constraints = paper_constraints();
+    let folded: Vec<bool> = (0..cols.len())
+        .map(|row| constraints.iter().all(|c| c.satisfied_at(&cols, row)))
+        .collect();
+    assert_eq!(select::feasible_mask_columns(&cols, &constraints), folded);
+    let reference = select::pareto_mask_columns_with(&cols, &Objective::all(), &ThreadPool::new(1));
+    for workers in [2usize, 8] {
+        assert_eq!(
+            select::pareto_mask_columns_with(&cols, &Objective::all(), &ThreadPool::new(workers)),
+            reference,
+            "workers={workers}"
+        );
+    }
+
+    let dense = select::select("selection", &serial, Objective::MinArea, &constraints).unwrap();
+    let default_results = Runner::new(1).run(select::spec_selection(&zoo));
+    let base = select::select("selection", &default_results, Objective::MinArea, &constraints)
+        .unwrap();
+    assert!(
+        dense.score <= base.score,
+        "superset grid regressed the area pick: dense {} vs default {}",
+        dense.score,
+        base.score
+    );
 }
 
 /// The tech axis composes: pinning the Wei 2019 base case still selects an
