@@ -3,14 +3,20 @@
 //! vLLM-router-shaped view of the coordinator (threaded; the build is
 //! offline so no async runtime, the loop structure is identical).
 //!
+//! Both threads read the same wall-backed [`Clock`], the injectable time
+//! source the whole serving stack runs on (`Clock::virtual_at_zero()` is
+//! what the chaos harness substitutes for deterministic replays).
+//!
 //! Run: `make artifacts && cargo run --release --example serve [rate_rps]`
 
 use std::path::Path;
 use std::sync::mpsc;
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Duration;
 
 use stt_ai::config::GlbVariant;
 use stt_ai::coordinator::{Batcher, Engine, EngineConfig, Metrics, Request};
+use stt_ai::util::clock::Clock;
 
 const N_REQUESTS: usize = 512;
 const BATCH: usize = 16;
@@ -24,19 +30,25 @@ fn main() -> anyhow::Result<()> {
     let per_image: usize = engine.manifest.testset.image_shape.iter().product::<i64>() as usize;
     let n_test = engine.manifest.testset.n;
 
-    // Producer: one request every 1/rate seconds.
+    let clock = Arc::new(Clock::wall());
+
+    // Producer: one request every 1/rate seconds, stamped off the shared
+    // serving clock.
     let (tx, rx) = mpsc::channel::<Request>();
-    let producer = std::thread::spawn(move || {
-        let gap = Duration::from_secs_f64(1.0 / rate);
-        for i in 0..N_REQUESTS {
-            let src = i % n_test;
-            let img = images[src * per_image..(src + 1) * per_image].to_vec();
-            if tx.send(Request::new(i as u64, img)).is_err() {
-                break;
+    let producer = {
+        let clock = Arc::clone(&clock);
+        std::thread::spawn(move || {
+            let gap = Duration::from_secs_f64(1.0 / rate);
+            for i in 0..N_REQUESTS {
+                let src = i % n_test;
+                let img = images[src * per_image..(src + 1) * per_image].to_vec();
+                if tx.send(Request::new(i as u64, img, clock.now())).is_err() {
+                    break;
+                }
+                std::thread::sleep(gap);
             }
-            std::thread::sleep(gap);
-        }
-    });
+        })
+    };
 
     // Consumer: batcher + engine.
     let mut batcher = Batcher::new(BATCH, Duration::from_millis(2), per_image, 4096);
@@ -47,12 +59,19 @@ fn main() -> anyhow::Result<()> {
         while let Ok(r) = rx.try_recv() {
             batcher.push(r);
         }
-        let now = Instant::now();
+        let now = clock.now();
         if batcher.ready(now) {
             if let Some(b) = batcher.form(BATCH, now) {
-                let t0 = Instant::now();
+                let t0 = clock.now();
                 let _ = engine.infer(&model, &b.images)?;
-                metrics.record_batch_waited(b.real, b.capacity, t0.elapsed(), b.oldest_wait);
+                let done = clock.now();
+                metrics.record_batch_waited(
+                    done,
+                    b.real,
+                    b.capacity,
+                    done.duration_since(t0),
+                    b.oldest_wait,
+                );
                 served += b.real;
             }
         } else {

@@ -1,0 +1,91 @@
+//! Fault-injection harness hot paths (EXPERIMENTS.md §Robustness): the
+//! full burst_ber chaos run on the virtual clock, the per-tick effective
+//! fault lookup the dispatcher pays, and the 64 KiB canary probe.
+//!
+//! Flags (mixed with harness flags, all optional): `--smoke` reduced
+//! budget for CI, `--bench-json PATH` machine-readable trajectory output.
+
+use stt_ai::ber::{BankSplit, Injector, WordKind};
+use stt_ai::config::{BerConfig, GlbVariant, TechBase};
+use stt_ai::coordinator::{ChaosConfig, EngineSpec, FaultSchedule, Supervisor, SupervisorPolicy};
+use stt_ai::util::bench::{self, Bencher, Ledger};
+use stt_ai::util::clock::{Clock, Tick};
+
+fn main() {
+    let smoke = bench::smoke_from_args();
+    let b = if smoke {
+        Bencher { sample_target_s: 0.02, samples: 3 }
+    } else {
+        Bencher::new()
+    };
+    let mut ledger = Ledger::new();
+
+    // The golden scenario end-to-end: build the fleet, replay the storm,
+    // assemble the report. Each sample is a fresh supervisor so the health
+    // machine walks the full Degraded → Down → fallback arc every time.
+    let requests = if smoke { 400 } else { 2000 };
+    let label = format!("chaos/burst_ber_{requests}req");
+    let run = || {
+        let schedule = FaultSchedule::builtin("burst_ber").expect("builtin");
+        let mut sup = Supervisor::new(
+            schedule,
+            EngineSpec::paper_fleet(3),
+            Some(EngineSpec::paper(GlbVariant::Sram)),
+            SupervisorPolicy::default(),
+            1,
+        )
+        .expect("fleet");
+        let cfg = ChaosConfig { requests, ..Default::default() };
+        sup.run(&cfg, &Clock::virtual_at_zero()).expect("chaos run")
+    };
+    let r = b.run(&label, || run());
+    ledger.add_throughput(&label, &r, requests as f64, "requests");
+
+    // The fault layer's per-dispatch question: what does engine e see at
+    // tick t? Folds every active event over the base BER budget.
+    let schedule = FaultSchedule::builtin("burst_ber").expect("builtin");
+    let base = BerConfig::for_variant(GlbVariant::SttAiUltra);
+    let tech = TechBase::from_token("stt").expect("stt tech");
+    let label = "faults/effective_lookup";
+    let evals = 64 * 3;
+    let r = b.run(label, || {
+        let mut acc = 0.0_f64;
+        for step in 0..64u64 {
+            let now = Tick::from_nanos(step * 1_250_000); // 0..80 ms
+            for engine in 0..3 {
+                let eff = schedule.effective(engine, now, base, tech, 60.0, 30.0);
+                acc += eff.msb_ber + eff.lsb_ber;
+            }
+        }
+        acc
+    });
+    ledger.add_throughput(label, &r, evals as f64, "lookups");
+
+    // One canary probe at the storm's escalated BER: seed-derived
+    // injection into a zeroed 64 KiB buffer, split across the bank pair.
+    let policy = SupervisorPolicy::default();
+    let label = "faults/canary_probe_64k";
+    let r = b.run(label, || {
+        let mut buf = vec![0u8; policy.canary_probe_bytes.next_multiple_of(2)];
+        let mut inj = Injector::new(0xFA17);
+        let split = BankSplit {
+            kind: WordKind::Bf16,
+            msb_ber: base.msb_ber * 1.0e3,
+            lsb_ber: base.lsb_ber * 1.0e3,
+        };
+        split.inject_split(&mut inj, &mut buf)
+    });
+    ledger.add_throughput(label, &r, policy.canary_probe_bytes as f64, "bytes");
+
+    // Shape sanity inside the bench binary: the storm must degrade
+    // gracefully, not collapse — and the fallback reboot must fire.
+    let rep = run();
+    println!(
+        "    -> availability {:.3}%  retries {}  fallbacks {}",
+        rep.availability, rep.retries, rep.fallbacks
+    );
+    assert!(rep.availability >= 99.0, "graceful degradation gate");
+    assert!(rep.fallbacks >= 1, "the SRAM fallback reboot must fire");
+
+    bench::finish(&ledger);
+}

@@ -135,11 +135,12 @@ fn main() {
     // Batcher push/form cycle.
     let r = b.run("batcher/push_form_64", || {
         let mut batcher = Batcher::new(16, Duration::ZERO, 4, 1024);
+        let now = stt_ai::util::clock::Tick::ZERO;
         for i in 0..64u64 {
-            batcher.push(Request::new(i, vec![0.0; 4]));
+            batcher.push(Request::new(i, vec![0.0; 4], now));
         }
         let mut n = 0;
-        while let Some(batch) = batcher.form(16, std::time::Instant::now()) {
+        while let Some(batch) = batcher.form(16, now) {
             n += batch.real;
         }
         n

@@ -46,13 +46,20 @@ impl BankSplit {
 
     /// Inject into a little-endian buffer of words of `self.kind`.
     pub fn inject(&self, inj: &mut Injector, buf: &mut [u8]) -> BitFlipStats {
-        let mut total = BitFlipStats::default();
+        let (msb, lsb) = self.inject_split(inj, buf);
+        msb.merge(lsb)
+    }
+
+    /// [`BankSplit::inject`] with per-bank stats: `(msb, lsb)` flip counts.
+    /// The supervisor's canary probes key on the split — a single MSB-group
+    /// flip is catastrophic while LSB flips are budgeted
+    /// ([`crate::coordinator::supervisor`]).
+    pub fn inject_split(&self, inj: &mut Injector, buf: &mut [u8]) -> (BitFlipStats, BitFlipStats) {
         match self.kind {
             WordKind::Int8 => {
                 let hi = inj.flip_masked(buf, self.msb_ber, 0xF0);
                 let lo = inj.flip_masked(buf, self.lsb_ber, 0x0F);
-                total.bits_scanned = hi.bits_scanned + lo.bits_scanned;
-                total.bits_flipped = hi.bits_flipped + lo.bits_flipped;
+                (hi, lo)
             }
             WordKind::Bf16 => {
                 assert_eq!(buf.len() % 2, 0, "bf16 buffer must be even-length");
@@ -61,11 +68,9 @@ impl BankSplit {
                 // Strided geometric walks flip each sub-stream in place.
                 let lo = inj.flip_strided(buf, self.lsb_ber, 0, 2);
                 let hi = inj.flip_strided(buf, self.msb_ber, 1, 2);
-                total.bits_scanned = hi.bits_scanned + lo.bits_scanned;
-                total.bits_flipped = hi.bits_flipped + lo.bits_flipped;
+                (hi, lo)
             }
         }
-        total
     }
 
     /// Expected flips for a buffer of `n_bytes`.
@@ -99,6 +104,29 @@ mod tests {
         let mut inj = Injector::new(13);
         split.inject(&mut inj, &mut buf);
         assert!(buf.iter().all(|&b| b & 0xF0 == 0));
+    }
+
+    #[test]
+    fn inject_split_reports_per_bank_and_sums_to_inject() {
+        // The split stats attribute every flip to its bank, and merging
+        // them reproduces the aggregate `inject` contract (same seed, same
+        // buffer -> identical flips).
+        let split = BankSplit { kind: WordKind::Bf16, msb_ber: 1e-3, lsb_ber: 1e-2 };
+        let mut a = vec![0u8; 1 << 16];
+        let mut b = a.clone();
+        let total = split.inject(&mut Injector::new(17), &mut a);
+        let (msb, lsb) = split.inject_split(&mut Injector::new(17), &mut b);
+        assert_eq!(a, b, "same seed, same flips");
+        assert_eq!(msb.merge(lsb), total);
+        assert_eq!(msb.bits_scanned, (b.len() / 2 * 8) as u64);
+        assert_eq!(lsb.bits_scanned, (b.len() / 2 * 8) as u64);
+        assert!(lsb.bits_flipped > msb.bits_flipped, "LSB bank is 10x leakier");
+        // A one-sided split attributes everything to one bank.
+        let lsb_only = BankSplit { kind: WordKind::Int8, msb_ber: 0.0, lsb_ber: 0.1 };
+        let mut c = vec![0u8; 4096];
+        let (m, l) = lsb_only.inject_split(&mut Injector::new(19), &mut c);
+        assert_eq!(m.bits_flipped, 0);
+        assert!(l.bits_flipped > 0);
     }
 
     #[test]

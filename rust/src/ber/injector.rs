@@ -15,6 +15,16 @@ pub struct BitFlipStats {
     pub bits_flipped: u64,
 }
 
+impl BitFlipStats {
+    /// Fold another pass into this one (per-bank stats → buffer totals).
+    pub fn merge(self, other: BitFlipStats) -> BitFlipStats {
+        BitFlipStats {
+            bits_scanned: self.bits_scanned + other.bits_scanned,
+            bits_flipped: self.bits_flipped + other.bits_flipped,
+        }
+    }
+}
+
 /// Seeded bit-flip injector.
 pub struct Injector {
     rng: Rng,

@@ -422,6 +422,10 @@ pub struct SystemConfig {
     /// Deployment objective/constraint section (`[deployment]`): what
     /// `stt-ai select` optimizes when deriving this build's design point.
     pub deployment: DeploymentConfig,
+    /// Optional fault-injection section (`[faults]`): a named, seeded
+    /// scenario the chaos harness replays against this build
+    /// (`stt-ai serve --faults` / `stt-ai chaos`). Absent by default.
+    pub faults: Option<crate::coordinator::faults::FaultSchedule>,
 }
 
 /// Serializable datatype.
@@ -453,6 +457,7 @@ impl SystemConfig {
             tech: TechConfig::default(),
             serving: ServingConfig::default(),
             deployment: DeploymentConfig::default(),
+            faults: None,
         }
     }
 
@@ -500,7 +505,7 @@ impl SystemConfig {
 
     /// Serialize to JSON (the offline build carries its own JSON codec).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("name", Json::Str(self.name.clone())),
             (
                 "glb",
@@ -545,7 +550,11 @@ impl SystemConfig {
                 ]),
             ),
             ("deployment", self.deployment.to_json()),
-        ])
+        ];
+        if let Some(f) = &self.faults {
+            fields.push(("faults", f.to_json()));
+        }
+        Json::obj(fields)
     }
 
     /// Deserialize from JSON; missing optional sections fall back to the
@@ -604,6 +613,9 @@ impl SystemConfig {
         if let Some(d) = j.get("deployment") {
             cfg.deployment = DeploymentConfig::from_json(d)?;
         }
+        if let Some(f) = j.get("faults") {
+            cfg.faults = Some(crate::coordinator::faults::FaultSchedule::from_json(f)?);
+        }
         Ok(cfg)
     }
 
@@ -651,6 +663,24 @@ mod tests {
         assert_eq!(back.glb_bytes, c.glb_bytes);
         assert_eq!(back.array.w_a, c.array.w_a);
         assert_eq!(back.serving.max_batch, c.serving.max_batch);
+    }
+
+    #[test]
+    fn faults_section_roundtrips_and_defaults_to_none() {
+        // No [faults] section in the paper configs or their serialization.
+        let c = SystemConfig::paper_stt_ai_ultra();
+        assert!(c.faults.is_none());
+        assert!(!c.to_json().to_string().contains("\"faults\""));
+        let back = SystemConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
+        assert!(back.faults.is_none());
+        // With a scenario attached, the section roundtrips exactly.
+        let mut c = c;
+        c.faults = Some(crate::coordinator::faults::FaultSchedule::builtin("burst_ber").unwrap());
+        let text = c.to_json().to_string();
+        assert!(text.contains("\"faults\""), "{text}");
+        let back = SystemConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.faults, c.faults);
+        assert_eq!(back.to_json().to_string(), text, "byte-stable");
     }
 
     #[test]

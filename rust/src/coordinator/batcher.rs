@@ -4,21 +4,30 @@
 //! size); the batcher drains the request queue up to `max_batch`, waits at
 //! most `window` for stragglers, and pads the final partial batch (padding
 //! rows are executed and discarded — the fixed-shape cost of AOT).
+//!
+//! All time is expressed as [`Tick`] from an injectable
+//! [`Clock`](crate::util::clock::Clock): under a virtual clock the same
+//! arrival schedule forms byte-identical batches on every run, which is what
+//! makes the fault-injection harness (`coordinator::supervisor`)
+//! deterministic.
 
+use crate::util::clock::Tick;
 use std::collections::VecDeque;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-/// One inference request: an image and an opaque id.
+/// One inference request: an image, an opaque id, and its arrival instant.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
     pub image: Vec<f32>,
-    pub enqueued: Instant,
+    pub enqueued: Tick,
 }
 
 impl Request {
-    pub fn new(id: u64, image: Vec<f32>) -> Self {
-        Self { id, image, enqueued: Instant::now() }
+    /// Build a request stamped with its arrival instant (read it from the
+    /// serving loop's `Clock`).
+    pub fn new(id: u64, image: Vec<f32>, now: Tick) -> Self {
+        Self { id, image, enqueued: now }
     }
 }
 
@@ -85,13 +94,13 @@ impl Batcher {
 
     /// Queueing delay of the oldest pending request (zero when idle) — the
     /// signal [`crate::coordinator::Router::dispatch`] schedules on.
-    pub fn oldest_wait(&self, now: Instant) -> Duration {
+    pub fn oldest_wait(&self, now: Tick) -> Duration {
         self.queue.front().map_or(Duration::ZERO, |r| now.duration_since(r.enqueued))
     }
 
     /// Should the caller fire a batch now? Either the batch is full, or the
     /// oldest request has waited past the window.
-    pub fn ready(&self, now: Instant) -> bool {
+    pub fn ready(&self, now: Tick) -> bool {
         if self.queue.len() >= self.max_batch {
             return true;
         }
@@ -103,7 +112,7 @@ impl Batcher {
 
     /// Form a batch of exactly `capacity` rows (padding with zero images if
     /// fewer real requests are queued). Returns `None` on an empty queue.
-    pub fn form(&mut self, capacity: usize, now: Instant) -> Option<Batch> {
+    pub fn form(&mut self, capacity: usize, now: Tick) -> Option<Batch> {
         if self.queue.is_empty() {
             return None;
         }
@@ -112,13 +121,16 @@ impl Batcher {
         let mut images = Vec::with_capacity(capacity * self.image_elems);
         let mut oldest = Duration::ZERO;
         for _ in 0..take {
-            let r = self.queue.pop_front().unwrap();
+            // `take <= queue.len()` by construction, but a sick invariant
+            // must degrade to a short batch, not a serving-loop panic.
+            let Some(r) = self.queue.pop_front() else { break };
             oldest = oldest.max(now.duration_since(r.enqueued));
             ids.push(r.id);
             images.extend_from_slice(&r.image);
         }
+        let real = ids.len();
         images.resize(capacity * self.image_elems, 0.0);
-        Some(Batch { ids, images, real: take, capacity, oldest_wait: oldest })
+        Some(Batch { ids, images, real, capacity, oldest_wait: oldest })
     }
 }
 
@@ -127,7 +139,7 @@ mod tests {
     use super::*;
 
     fn req(id: u64) -> Request {
-        Request::new(id, vec![0.5; 4])
+        Request::new(id, vec![0.5; 4], Tick::ZERO)
     }
 
     fn batcher() -> Batcher {
@@ -140,8 +152,8 @@ mod tests {
         for i in 0..4 {
             assert!(b.push(req(i)));
         }
-        assert!(b.ready(Instant::now()));
-        let batch = b.form(4, Instant::now()).unwrap();
+        assert!(b.ready(Tick::ZERO));
+        let batch = b.form(4, Tick::ZERO).unwrap();
         assert_eq!(batch.real, 4);
         assert_eq!(batch.ids, vec![0, 1, 2, 3]);
         assert_eq!(batch.images.len(), 16);
@@ -152,12 +164,13 @@ mod tests {
     fn window_expiry_fires_partial() {
         let mut b = batcher();
         b.push(req(1));
-        assert!(!b.ready(Instant::now()), "fresh request, window not expired");
-        let later = Instant::now() + Duration::from_millis(10);
+        assert!(!b.ready(Tick::ZERO), "fresh request, window not expired");
+        let later = Tick::ZERO + Duration::from_millis(10);
         assert!(b.ready(later));
         let batch = b.form(4, later).unwrap();
         assert_eq!(batch.real, 1);
         assert_eq!(batch.capacity, 4);
+        assert_eq!(batch.oldest_wait, Duration::from_millis(10));
         // Padding rows are zeros.
         assert!(batch.images[4..].iter().all(|&x| x == 0.0));
     }
@@ -175,8 +188,8 @@ mod tests {
     #[test]
     fn empty_queue_forms_nothing() {
         let mut b = batcher();
-        assert!(b.form(4, Instant::now()).is_none());
-        assert!(!b.ready(Instant::now()));
+        assert!(b.form(4, Tick::ZERO).is_none());
+        assert!(!b.ready(Tick::ZERO));
     }
 
     #[test]
@@ -185,7 +198,7 @@ mod tests {
         for i in [5u64, 3, 9] {
             b.push(req(i));
         }
-        let batch = b.form(4, Instant::now()).unwrap();
+        let batch = b.form(4, Tick::ZERO).unwrap();
         assert_eq!(batch.ids, vec![5, 3, 9]);
     }
 
@@ -194,16 +207,16 @@ mod tests {
         // Regression: a wrong-shaped image used to assert! and crash the
         // whole serving loop; it must be rejected and counted instead.
         let mut b = batcher();
-        assert!(!b.push(Request::new(1, vec![0.5; 3])), "short image rejected");
-        assert!(!b.push(Request::new(2, vec![0.5; 5])), "long image rejected");
-        assert!(!b.push(Request::new(3, Vec::new())), "empty image rejected");
+        assert!(!b.push(Request::new(1, vec![0.5; 3], Tick::ZERO)), "short image rejected");
+        assert!(!b.push(Request::new(2, vec![0.5; 5], Tick::ZERO)), "long image rejected");
+        assert!(!b.push(Request::new(3, Vec::new(), Tick::ZERO)), "empty image rejected");
         assert_eq!(b.malformed, 3);
         assert_eq!(b.rejected, 0, "malformed is its own counter");
         assert_eq!(b.pending(), 0, "nothing malformed reaches the queue");
         // The loop keeps serving well-formed traffic afterwards.
         assert!(b.push(req(4)));
         assert_eq!(b.pending(), 1);
-        assert_eq!(b.form(4, Instant::now()).unwrap().ids, vec![4]);
+        assert_eq!(b.form(4, Tick::ZERO).unwrap().ids, vec![4]);
     }
 
     #[test]
@@ -214,7 +227,7 @@ mod tests {
         for i in 0..8 {
             assert!(b.push(req(i)));
         }
-        assert!(!b.push(Request::new(99, vec![0.0; 2])));
+        assert!(!b.push(Request::new(99, vec![0.0; 2], Tick::ZERO)));
         assert_eq!((b.malformed, b.rejected), (1, 0));
         assert!(!b.push(req(100)));
         assert_eq!((b.malformed, b.rejected), (1, 1));
@@ -223,11 +236,11 @@ mod tests {
     #[test]
     fn oldest_wait_tracks_the_queue_head() {
         let mut b = batcher();
-        let now = Instant::now();
+        let now = Tick::ZERO;
         assert_eq!(b.oldest_wait(now), Duration::ZERO, "idle queue waits zero");
         b.push(req(1));
         let later = now + Duration::from_millis(10);
-        assert!(b.oldest_wait(later) >= Duration::from_millis(9));
+        assert_eq!(b.oldest_wait(later), Duration::from_millis(10));
         // Forming the batch drains the head; the wait resets.
         b.form(4, later).unwrap();
         assert_eq!(b.oldest_wait(later + Duration::from_millis(5)), Duration::ZERO);
@@ -244,11 +257,11 @@ mod tests {
         }
         assert!(!b.push(req(99)));
         assert_eq!(b.rejected, 1);
-        let later = Instant::now() + Duration::from_millis(10);
+        let later = Tick::ZERO + Duration::from_millis(10);
         assert!(b.ready(later), "expired window fires despite backpressure");
         let batch = b.form(4, later).unwrap();
         assert_eq!(batch.real, 4);
-        assert!(batch.oldest_wait >= Duration::from_millis(9));
+        assert_eq!(batch.oldest_wait, Duration::from_millis(10));
         assert_eq!(b.pending(), 4);
         assert!(b.push(req(100)), "space freed after the batch fired");
     }

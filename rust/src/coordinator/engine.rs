@@ -176,6 +176,20 @@ impl Engine {
         self.config.seed = seed;
         self.rebuild_served();
     }
+
+    /// Swap the BER fault model in place and rebuild the served image —
+    /// how the fault-injection supervisor applies a scheduled BER episode
+    /// to a live engine without reloading artifacts.
+    pub fn set_ber(&mut self, ber: BerConfig) {
+        if self.config.ber.msb_ber == ber.msb_ber
+            && self.config.ber.lsb_ber == ber.lsb_ber
+            && self.config.ber.seed == ber.seed
+        {
+            return;
+        }
+        self.config.ber = ber;
+        self.rebuild_served();
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,492 @@
+//! Deterministic fault-schedule DSL for the serving stack.
+//!
+//! A [`FaultSchedule`] is a named, seed-reproducible list of timed
+//! [`FaultEvent`]s — retention-loss storms at the hot/slow PT corner (the
+//! *inverse* of the Eq. 17 guard band used by `dse::select`), BER
+//! escalation episodes, bank takedowns, engine stalls/crashes, and latency
+//! spikes — executed by the graceful-degradation supervisor
+//! ([`crate::coordinator::supervisor`]) against a virtual clock. Because
+//! every event fires at a fixed [`Tick`] and all randomness derives from
+//! the schedule seed, the same scenario produces byte-identical
+//! availability/accuracy reports on every run and at any worker count.
+//!
+//! Schedules come from three places, one grammar: built-in scenario tokens
+//! ([`FaultSchedule::builtin`], e.g. `burst_ber`), JSON files
+//! ([`FaultSchedule::parse`] falls back to a path), and the `[faults]`
+//! section of a [`crate::config::SystemConfig`].
+
+use std::time::Duration;
+
+use crate::config::{BerConfig, TechBase};
+use crate::util::clock::Tick;
+use crate::util::json::Json;
+
+/// What a fault event does to the engines it targets while active.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Multiply both bank BERs by `factor` (temperature / read-disturb
+    /// episode), capped at 0.5 per bit.
+    BerEscalation { factor: f64 },
+    /// Retention-loss storm at the hot/slow PT corner: each bank's BER is
+    /// rescaled by the Arrhenius factor between its *built* Δ and the Δ the
+    /// guard-band inversion leaves at the worst corner, with `derate`
+    /// shrinking the corner Δ further (derate 1.0 = exactly the Eq. 17
+    /// corner; see [`storm_ber`]).
+    RetentionStorm { derate: f64 },
+    /// One bank group goes dark: its BER pegs to 0.5 (every read a coin
+    /// flip). `lsb` picks the relaxed bank, otherwise the robust MSB bank.
+    BankDown { lsb: bool },
+    /// Multiply the engine's service latency by `mult`.
+    LatencySpike { mult: f64 },
+    /// The engine stops making progress: dispatches time out against the
+    /// supervisor's per-request deadline but the process stays up.
+    Stall,
+    /// The engine process is down: dispatches fail immediately and the
+    /// health machine marks it `Down` at once.
+    Crash,
+}
+
+impl FaultKind {
+    /// Stable serialization token.
+    pub fn token(&self) -> &'static str {
+        match self {
+            FaultKind::BerEscalation { .. } => "ber_escalation",
+            FaultKind::RetentionStorm { .. } => "retention_storm",
+            FaultKind::BankDown { .. } => "bank_down",
+            FaultKind::LatencySpike { .. } => "latency_spike",
+            FaultKind::Stall => "stall",
+            FaultKind::Crash => "crash",
+        }
+    }
+}
+
+/// One timed fault: `kind` applies to `engine` (or the whole fleet) during
+/// `[at, until)` on the supervisor's virtual clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Onset, measured from the clock epoch (simulation t = 0).
+    pub at: Duration,
+    /// End of the window (exclusive), measured from the clock epoch.
+    pub until: Duration,
+    /// Target engine index; `None` hits every engine in the fleet.
+    pub engine: Option<usize>,
+    pub kind: FaultKind,
+}
+
+impl FaultEvent {
+    /// Is this event active for `engine` at instant `now`?
+    pub fn active_at(&self, engine: usize, now: Tick) -> bool {
+        if self.engine.is_some_and(|e| e != engine) {
+            return false;
+        }
+        let t = now.duration_since(Tick::ZERO);
+        t >= self.at && t < self.until
+    }
+}
+
+/// A named, seeded fault scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSchedule {
+    pub name: String,
+    /// Root seed: canary probes and any stochastic corruption derive their
+    /// sub-streams from it, so the whole run replays exactly.
+    pub seed: u64,
+    pub events: Vec<FaultEvent>,
+}
+
+/// Everything the fault layer says about one engine at one instant: the
+/// effective per-bank BERs plus the service-path modifiers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EffectiveFaults {
+    pub msb_ber: f64,
+    pub lsb_ber: f64,
+    pub latency_mult: f64,
+    pub stalled: bool,
+    pub crashed: bool,
+}
+
+impl EffectiveFaults {
+    /// The no-fault state over a base BER budget.
+    pub fn clean(base: BerConfig) -> Self {
+        Self {
+            msb_ber: base.msb_ber,
+            lsb_ber: base.lsb_ber,
+            latency_mult: 1.0,
+            stalled: false,
+            crashed: false,
+        }
+    }
+}
+
+/// BER of one bank under a retention-loss storm at the hot/slow PT corner.
+///
+/// Retention failure is Arrhenius in the thermal-stability factor: for a
+/// fixed observation window, `BER ∝ exp(-Δ)`. The §V.C flow *builds* the
+/// bank at the guard-banded Δ (Eq. 17) precisely so the worst corner still
+/// holds the scaled design Δ — so the corner Δ is recovered by inverting
+/// the (linear) guard band: `Δ_corner = Δ_built / gb(1.0)`. A storm with
+/// `derate > 1` pushes the die *past* the designed-for corner, and the
+/// bank's BER scales by `exp(Δ_built − Δ_corner/…)`:
+///
+/// `ber' = min(0.5, ber · exp(Δ_built − Δ_built / gb(1.0) / derate))`
+///
+/// A volatile bank (`base_ber == 0`, e.g. SRAM) never flips whatever the
+/// storm does — which is exactly why the supervisor's fallback reboot to
+/// the SRAM [`crate::dse::select::DesignSelection`] restores service.
+pub fn storm_ber(tech: TechBase, delta_built: f64, base_ber: f64, derate: f64) -> f64 {
+    if base_ber <= 0.0 {
+        return 0.0;
+    }
+    let gb_per_scaled = tech.technology().guard_band(1.0).delta_guard_banded.max(1.0);
+    let delta_corner = delta_built / gb_per_scaled / derate.max(1.0);
+    (base_ber * (delta_built - delta_corner).exp()).min(0.5)
+}
+
+impl FaultSchedule {
+    /// A quiet scenario (no events) — the control run.
+    pub fn calm() -> Self {
+        Self { name: "calm".into(), seed: 0xCA11, events: Vec::new() }
+    }
+
+    /// Built-in scenarios by token; `None` for unknown names.
+    ///
+    /// `burst_ber` is the golden graceful-degradation scenario (see
+    /// EXPERIMENTS.md §Robustness): a long BER-escalation storm on engine 0
+    /// drives it through `Degraded → Down → fallback reboot`, a shorter
+    /// storm brushes engine 1, and a brief stall on engine 2 forces the
+    /// dispatch path to retry and reroute — all while availability stays
+    /// ≥ 99 %.
+    pub fn builtin(name: &str) -> Option<Self> {
+        let ms = Duration::from_millis;
+        let ev = |at: u64, until: u64, engine: Option<usize>, kind: FaultKind| FaultEvent {
+            at: ms(at),
+            until: ms(until),
+            engine,
+            kind,
+        };
+        match name {
+            "calm" => Some(Self::calm()),
+            "burst_ber" => Some(Self {
+                name: "burst_ber".into(),
+                seed: 0xFA17,
+                events: vec![
+                    ev(10, 70, Some(0), FaultKind::BerEscalation { factor: 1.0e3 }),
+                    ev(30, 50, Some(1), FaultKind::BerEscalation { factor: 1.0e3 }),
+                    ev(35, 40, Some(2), FaultKind::Stall),
+                ],
+            }),
+            "retention_storm" => Some(Self {
+                name: "retention_storm".into(),
+                seed: 0x5702,
+                events: vec![
+                    // Fleet-wide thermal excursion past the designed-for
+                    // corner; volatile fallbacks are immune by construction.
+                    ev(10, 60, None, FaultKind::RetentionStorm { derate: 1.5 }),
+                ],
+            }),
+            "bank_takedown" => Some(Self {
+                name: "bank_takedown".into(),
+                seed: 0xBA2C,
+                events: vec![
+                    ev(10, 50, Some(0), FaultKind::BankDown { lsb: true }),
+                    ev(20, 40, Some(1), FaultKind::BankDown { lsb: false }),
+                ],
+            }),
+            "crash_loop" => Some(Self {
+                name: "crash_loop".into(),
+                seed: 0xC2A5,
+                events: vec![
+                    // Windows outlast the dispatch round-robin cycle so the
+                    // crash is always observed on the dispatch path (instant
+                    // Down), not just by a canary.
+                    ev(10, 16, Some(0), FaultKind::Crash),
+                    ev(40, 46, Some(0), FaultKind::Crash),
+                ],
+            }),
+            "latency_spike" => Some(Self {
+                name: "latency_spike".into(),
+                seed: 0x1A7E,
+                events: vec![ev(10, 40, Some(1), FaultKind::LatencySpike { mult: 4.0 })],
+            }),
+            _ => None,
+        }
+    }
+
+    /// Every built-in scenario token (CLI help + roundtrip tests).
+    pub fn builtin_names() -> [&'static str; 6] {
+        ["calm", "burst_ber", "retention_storm", "bank_takedown", "crash_loop", "latency_spike"]
+    }
+
+    /// Resolve a CLI `--faults`/`--scenario` spec: a built-in token first,
+    /// else a path to a schedule JSON file.
+    pub fn parse(spec: &str) -> crate::Result<Self> {
+        if let Some(s) = Self::builtin(spec) {
+            return Ok(s);
+        }
+        let path = std::path::Path::new(spec);
+        if path.exists() {
+            let text = std::fs::read_to_string(path)?;
+            return Self::from_json(&Json::parse(&text).map_err(anyhow::Error::from)?);
+        }
+        anyhow::bail!(
+            "unknown fault scenario {spec:?} (builtins: {}; or a path to a schedule JSON)",
+            Self::builtin_names().join(", ")
+        )
+    }
+
+    /// The fault layer's view of `engine` at `now`: every active event
+    /// folded over the engine's base BER budget. Events compose — two
+    /// escalations multiply, a bank takedown wins over anything milder on
+    /// that bank (0.5 is the cap).
+    pub fn effective(
+        &self,
+        engine: usize,
+        now: Tick,
+        base: BerConfig,
+        tech: TechBase,
+        glb_delta: f64,
+        lsb_delta: f64,
+    ) -> EffectiveFaults {
+        let mut eff = EffectiveFaults::clean(base);
+        for e in self.events.iter().filter(|e| e.active_at(engine, now)) {
+            match e.kind {
+                FaultKind::BerEscalation { factor } => {
+                    eff.msb_ber = (eff.msb_ber * factor).min(0.5);
+                    eff.lsb_ber = (eff.lsb_ber * factor).min(0.5);
+                }
+                FaultKind::RetentionStorm { derate } => {
+                    eff.msb_ber = storm_ber(tech, glb_delta, eff.msb_ber, derate);
+                    eff.lsb_ber = storm_ber(tech, lsb_delta, eff.lsb_ber, derate);
+                }
+                FaultKind::BankDown { lsb } => {
+                    if lsb {
+                        eff.lsb_ber = 0.5;
+                    } else {
+                        eff.msb_ber = 0.5;
+                    }
+                }
+                FaultKind::LatencySpike { mult } => eff.latency_mult *= mult,
+                FaultKind::Stall => eff.stalled = true,
+                FaultKind::Crash => eff.crashed = true,
+            }
+        }
+        eff
+    }
+
+    /// Serialize (durations as integer microseconds — exact on roundtrip).
+    pub fn to_json(&self) -> Json {
+        let events = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut fields = vec![
+                    ("kind", Json::Str(e.kind.token().to_string())),
+                    ("at_us", (e.at.as_micros() as u64).into()),
+                    ("for_us", ((e.until - e.at).as_micros() as u64).into()),
+                ];
+                if let Some(idx) = e.engine {
+                    fields.push(("engine", (idx as u64).into()));
+                }
+                match e.kind {
+                    FaultKind::BerEscalation { factor } => {
+                        fields.push(("factor", Json::Num(factor)));
+                    }
+                    FaultKind::RetentionStorm { derate } => {
+                        fields.push(("derate", Json::Num(derate)));
+                    }
+                    FaultKind::BankDown { lsb } => fields.push(("lsb", lsb.into())),
+                    FaultKind::LatencySpike { mult } => fields.push(("mult", Json::Num(mult))),
+                    FaultKind::Stall | FaultKind::Crash => {}
+                }
+                Json::obj(fields)
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("seed", self.seed.into()),
+            ("events", Json::Arr(events)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        use anyhow::Context;
+        let name = j.req_str("name").map_err(anyhow::Error::from)?.to_string();
+        let seed = j.req_u64("seed").map_err(anyhow::Error::from)?;
+        let mut events = Vec::new();
+        for e in j.req_arr("events").map_err(anyhow::Error::from)? {
+            let at = Duration::from_micros(e.req_u64("at_us").map_err(anyhow::Error::from)?);
+            let dur = Duration::from_micros(e.req_u64("for_us").map_err(anyhow::Error::from)?);
+            let engine = match e.get("engine") {
+                Some(v) => Some(v.as_u64().context("engine")? as usize),
+                None => None,
+            };
+            let kind = match e.req_str("kind").map_err(anyhow::Error::from)? {
+                "ber_escalation" => FaultKind::BerEscalation {
+                    factor: e.req("factor").map_err(anyhow::Error::from)?.as_f64().context("factor")?,
+                },
+                "retention_storm" => FaultKind::RetentionStorm {
+                    derate: e.req("derate").map_err(anyhow::Error::from)?.as_f64().context("derate")?,
+                },
+                "bank_down" => FaultKind::BankDown {
+                    lsb: e.req("lsb").map_err(anyhow::Error::from)?.as_bool().context("lsb")?,
+                },
+                "latency_spike" => FaultKind::LatencySpike {
+                    mult: e.req("mult").map_err(anyhow::Error::from)?.as_f64().context("mult")?,
+                },
+                "stall" => FaultKind::Stall,
+                "crash" => FaultKind::Crash,
+                other => anyhow::bail!("unknown fault kind {other:?}"),
+            };
+            if dur.is_zero() {
+                anyhow::bail!("fault event {:?} at {}us has zero duration", kind.token(), at.as_micros());
+            }
+            events.push(FaultEvent { at, until: at + dur, engine, kind });
+        }
+        Ok(Self { name, seed, events })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GlbVariant;
+
+    fn ultra() -> BerConfig {
+        BerConfig::for_variant(GlbVariant::SttAiUltra)
+    }
+
+    #[test]
+    fn event_windows_are_half_open_and_targeted() {
+        let e = FaultEvent {
+            at: Duration::from_millis(10),
+            until: Duration::from_millis(20),
+            engine: Some(1),
+            kind: FaultKind::Stall,
+        };
+        let t = |ms: u64| Tick::ZERO + Duration::from_millis(ms);
+        assert!(!e.active_at(1, t(9)), "before onset");
+        assert!(e.active_at(1, t(10)), "inclusive start");
+        assert!(e.active_at(1, t(19)));
+        assert!(!e.active_at(1, t(20)), "exclusive end");
+        assert!(!e.active_at(0, t(15)), "other engine untouched");
+        let fleet = FaultEvent { engine: None, ..e };
+        assert!(fleet.active_at(0, t(15)) && fleet.active_at(7, t(15)), "fleet-wide event");
+    }
+
+    #[test]
+    fn escalation_multiplies_and_caps() {
+        let s = FaultSchedule {
+            name: "x".into(),
+            seed: 1,
+            events: vec![
+                FaultEvent {
+                    at: Duration::ZERO,
+                    until: Duration::from_millis(1),
+                    engine: None,
+                    kind: FaultKind::BerEscalation { factor: 1.0e3 },
+                },
+                FaultEvent {
+                    at: Duration::ZERO,
+                    until: Duration::from_millis(1),
+                    engine: None,
+                    kind: FaultKind::BerEscalation { factor: 1.0e3 },
+                },
+            ],
+        };
+        let eff = s.effective(0, Tick::ZERO, ultra(), TechBase::Sakhare2020, 27.5, 17.5);
+        // Two stacked 1e3 episodes: msb 1e-8 -> 1e-2, lsb 1e-5 -> 0.5 (cap).
+        assert!((eff.msb_ber - 1.0e-2).abs() < 1e-12, "msb {}", eff.msb_ber);
+        assert_eq!(eff.lsb_ber, 0.5, "lsb capped");
+        assert!(!eff.stalled && !eff.crashed);
+    }
+
+    #[test]
+    fn storm_ber_is_monotone_in_derate_and_caps() {
+        let t = TechBase::Sakhare2020;
+        let base = 1e-8;
+        let b1 = storm_ber(t, 27.5, base, 1.0);
+        let b2 = storm_ber(t, 27.5, base, 1.5);
+        let b3 = storm_ber(t, 27.5, base, 4.0);
+        assert!(b1 > base, "the designed-for corner already costs exp(gb margin): {b1}");
+        assert!(b2 > b1 && b3 > b2, "harsher corners flip more: {b1} {b2} {b3}");
+        assert!(b3 <= 0.5, "coin-flip cap");
+        // derate below 1 clamps to the designed-for corner.
+        assert_eq!(storm_ber(t, 27.5, base, 0.5), b1);
+    }
+
+    #[test]
+    fn storm_leaves_volatile_banks_alone() {
+        // SRAM (base BER 0) is immune to retention storms — the basis of
+        // the supervisor's fallback reboot.
+        assert_eq!(storm_ber(TechBase::Sram, 27.5, 0.0, 4.0), 0.0);
+        assert_eq!(storm_ber(TechBase::Sakhare2020, 27.5, 0.0, 4.0), 0.0);
+        let calm = FaultSchedule::builtin("retention_storm").unwrap();
+        let sram = BerConfig::for_variant(GlbVariant::Sram);
+        let eff = calm.effective(
+            0,
+            Tick::ZERO + Duration::from_millis(20),
+            sram,
+            TechBase::Sram,
+            27.5,
+            17.5,
+        );
+        assert_eq!((eff.msb_ber, eff.lsb_ber), (0.0, 0.0));
+    }
+
+    #[test]
+    fn bank_down_pegs_one_bank() {
+        let s = FaultSchedule::builtin("bank_takedown").unwrap();
+        let mid = Tick::ZERO + Duration::from_millis(25);
+        let e0 = s.effective(0, mid, ultra(), TechBase::Sakhare2020, 27.5, 17.5);
+        assert_eq!(e0.lsb_ber, 0.5, "engine 0 loses the LSB bank");
+        assert_eq!(e0.msb_ber, 1e-8, "MSB bank untouched");
+        let e1 = s.effective(1, mid, ultra(), TechBase::Sakhare2020, 27.5, 17.5);
+        assert_eq!(e1.msb_ber, 0.5, "engine 1 loses the MSB bank");
+        assert_eq!(e1.lsb_ber, 1e-5);
+    }
+
+    #[test]
+    fn builtins_roundtrip_through_json() {
+        for name in FaultSchedule::builtin_names() {
+            let s = FaultSchedule::builtin(name).unwrap();
+            let text = s.to_json().to_string();
+            let back = FaultSchedule::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, s, "{name} roundtrip");
+            // Serialization itself is byte-stable.
+            assert_eq!(back.to_json().to_string(), text, "{name} byte-stable");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_unknown_scenarios_with_a_named_error() {
+        let err = FaultSchedule::parse("no_such_scenario").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown fault scenario"), "{msg}");
+        assert!(msg.contains("burst_ber"), "lists builtins: {msg}");
+    }
+
+    #[test]
+    fn burst_ber_timeline_matches_the_golden_story() {
+        let s = FaultSchedule::builtin("burst_ber").unwrap();
+        assert_eq!(s.seed, 0xFA17);
+        let at = |ms: u64| Tick::ZERO + Duration::from_millis(ms);
+        let base = ultra();
+        let eff = |eng: usize, t: Tick| {
+            s.effective(eng, t, base, TechBase::Sakhare2020, 27.5, 17.5)
+        };
+        // t=5ms: everyone clean.
+        for e in 0..3 {
+            assert_eq!(eff(e, at(5)), EffectiveFaults::clean(base));
+        }
+        // t=20ms: engine 0 in the storm, others clean.
+        assert!(eff(0, at(20)).msb_ber > base.msb_ber);
+        assert_eq!(eff(1, at(20)), EffectiveFaults::clean(base));
+        // t=37ms: engine 2 stalled (the retry/reroute driver).
+        assert!(eff(2, at(37)).stalled);
+        assert!(!eff(2, at(42)).stalled, "stall window closed");
+        // t=80ms: storm over everywhere.
+        for e in 0..3 {
+            assert_eq!(eff(e, at(80)), EffectiveFaults::clean(base));
+        }
+    }
+}

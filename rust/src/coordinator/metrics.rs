@@ -1,8 +1,13 @@
 //! Serving metrics: latency histogram, queueing delay, throughput,
 //! batch-occupancy.
+//!
+//! Records are stamped with [`Tick`]s from the serving loop's injected
+//! [`Clock`](crate::util::clock::Clock), never with `Instant::now()` — under
+//! a virtual clock the whole metrics report is bit-reproducible.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
+use crate::util::clock::Tick;
 use crate::util::stats::LatencyHistogram;
 
 /// Aggregated serving metrics.
@@ -17,7 +22,10 @@ pub struct Metrics {
     pub padded_rows: u64,
     /// Anchored at the *first executed batch*, not construction — model
     /// load and idle warm-up time must not dilute the throughput figure.
-    started: Option<Instant>,
+    started: Option<Tick>,
+    /// Completion instant of the most recent batch; `started..last_end` is
+    /// the serving interval throughput is measured over.
+    last_end: Tick,
 }
 
 impl Default for Metrics {
@@ -35,18 +43,22 @@ impl Metrics {
             requests: 0,
             padded_rows: 0,
             started: None,
+            last_end: Tick::ZERO,
         }
     }
 
-    /// Record one executed batch (no queueing-delay information).
-    pub fn record_batch(&mut self, real: usize, capacity: usize, latency: Duration) {
-        self.record_batch_waited(real, capacity, latency, Duration::ZERO);
+    /// Record one executed batch (no queueing-delay information). `now` is
+    /// the batch's *completion* instant on the serving clock.
+    pub fn record_batch(&mut self, now: Tick, real: usize, capacity: usize, latency: Duration) {
+        self.record_batch_waited(now, real, capacity, latency, Duration::ZERO);
     }
 
     /// Record one executed batch plus the queueing delay of its oldest
-    /// request ([`crate::coordinator::Batch::oldest_wait`]).
+    /// request ([`crate::coordinator::Batch::oldest_wait`]). `now` is the
+    /// batch's *completion* instant on the serving clock.
     pub fn record_batch_waited(
         &mut self,
+        now: Tick,
         real: usize,
         capacity: usize,
         latency: Duration,
@@ -57,9 +69,9 @@ impl Metrics {
             // arrive after inference, so back-date by its latency): the
             // interval includes every batch's service time but none of the
             // model-load/idle time before the first request.
-            let now = Instant::now();
             self.started = Some(now.checked_sub(latency).unwrap_or(now));
         }
+        self.last_end = self.last_end.max(now);
         self.batches += 1;
         self.requests += real as u64;
         self.padded_rows += (capacity - real) as u64;
@@ -67,11 +79,12 @@ impl Metrics {
         self.queue_wait.record_us(queue_wait.as_micros() as u64);
     }
 
-    /// Requests per second since the first recorded batch (0 before any
-    /// batch has executed — there is no serving interval to measure yet).
+    /// Requests per second over the serving interval — from the first
+    /// recorded batch's start to the latest batch's completion (0 before
+    /// any batch has executed: there is no interval to measure yet).
     pub fn throughput(&self) -> f64 {
         match self.started {
-            Some(t0) => self.throughput_after(t0.elapsed()),
+            Some(t0) => self.throughput_after(self.last_end.duration_since(t0)),
             None => 0.0,
         }
     }
@@ -121,8 +134,15 @@ mod tests {
     #[test]
     fn records_and_summarizes() {
         let mut m = Metrics::new();
-        m.record_batch(4, 4, Duration::from_micros(100));
-        m.record_batch_waited(2, 4, Duration::from_micros(300), Duration::from_micros(40));
+        let now = Tick::ZERO + Duration::from_micros(100);
+        m.record_batch(now, 4, 4, Duration::from_micros(100));
+        m.record_batch_waited(
+            now + Duration::from_micros(300),
+            2,
+            4,
+            Duration::from_micros(300),
+            Duration::from_micros(40),
+        );
         assert_eq!(m.batches, 2);
         assert_eq!(m.requests, 6);
         assert_eq!(m.padded_rows, 2);
@@ -134,51 +154,43 @@ mod tests {
 
     #[test]
     fn throughput_deterministic_with_injected_elapsed() {
-        // No wall-clock sleep: inject the elapsed time instead (the old
-        // sleep(2ms)-based assertion was flaky under loaded CI runners).
         let mut m = Metrics::new();
-        m.record_batch(8, 8, Duration::from_micros(50));
+        m.record_batch(Tick::ZERO + Duration::from_micros(50), 8, 8, Duration::from_micros(50));
         assert_eq!(m.throughput_after(Duration::from_secs(2)), 4.0);
         assert_eq!(m.throughput_after(Duration::from_millis(500)), 16.0);
         // Zero elapsed stays defined.
         assert_eq!(m.throughput_after(Duration::ZERO), 0.0);
-        // And the wall-clock path is monotone-safe: elapsed > 0 from here.
-        assert!(m.throughput() >= 0.0);
     }
 
     #[test]
     fn throughput_anchors_on_first_batch_not_construction() {
         // Regression: `started` used to be stamped in `new()`, so model
         // loading / idle time before the first request silently deflated
-        // throughput. Before any batch there is no interval — and after a
-        // batch the interval starts at that batch, so even if construction
-        // happened long ago the figure only reflects serving time.
+        // throughput. With tick-stamped records the interval is exact:
+        // anchored at the first batch's *start* (completion back-dated by
+        // its latency), ending at the latest batch's completion.
         let m = Metrics::new();
         assert_eq!(m.throughput(), 0.0, "no batches -> no throughput");
         let mut m = Metrics::new();
-        std::thread::sleep(Duration::from_millis(50)); // "model load" delay
-        m.record_batch(100, 100, Duration::from_millis(10));
-        // Anchored at the first batch's start: even with generous scheduler
-        // jitter the measured interval stays far below the 50 ms warm-up,
-        // so the figure stays above the diluted 100/50ms bound the old
-        // construction-time anchor would impose.
-        let diluted_bound = 100.0 / Duration::from_millis(50).as_secs_f64();
-        assert!(
-            m.throughput() > diluted_bound,
-            "warm-up time must not count: {} vs {}",
-            m.throughput(),
-            diluted_bound
-        );
-        // And the interval includes the first batch's own service time, so
-        // a single-batch run reports requests/batch-latency, not a
-        // requests/(~0 s) explosion.
-        let single_batch_bound = 100.0 / Duration::from_millis(10).as_secs_f64();
-        assert!(
-            m.throughput() <= single_batch_bound * 1.01,
-            "first batch's service time must count: {} vs {}",
-            m.throughput(),
-            single_batch_bound
-        );
+        // "Model load" delay: the first batch completes 60 ms in, after a
+        // 10 ms service time. The interval is exactly that 10 ms — the
+        // 50 ms warm-up before it does not count.
+        let done = Tick::ZERO + Duration::from_millis(60);
+        m.record_batch(done, 100, 100, Duration::from_millis(10));
+        assert_eq!(m.throughput(), 100.0 / 0.010, "exactly requests / first batch latency");
+        // A second batch extends the interval to its completion.
+        m.record_batch(done + Duration::from_millis(10), 100, 100, Duration::from_millis(10));
+        assert_eq!(m.throughput(), 200.0 / 0.020);
+    }
+
+    #[test]
+    fn first_batch_latency_exceeding_epoch_saturates() {
+        // A first batch whose latency back-dates past the clock epoch
+        // anchors at the completion instant instead of wrapping.
+        let mut m = Metrics::new();
+        m.record_batch(Tick::ZERO + Duration::from_millis(1), 4, 4, Duration::from_millis(5));
+        // Anchor = completion (1 ms), last_end = 1 ms -> zero interval.
+        assert_eq!(m.throughput(), 0.0);
     }
 
     #[test]

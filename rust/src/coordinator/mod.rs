@@ -13,6 +13,30 @@
 //! * [`metrics`] — latency + queue-wait histograms, throughput counters
 //!   anchored at the first served batch.
 //! * [`accuracy`] — Fig. 21-style evaluation loops (Top-1/Top-5, pruning).
+//! * [`faults`] — deterministic fault-schedule DSL: seeded, timed BER
+//!   escalations, retention storms at the inverted guard-band corner, bank
+//!   takedowns, stalls, crashes and latency spikes.
+//! * [`supervisor`] — graceful-degradation supervisor over a multi-engine
+//!   fleet. Every engine carries a health state driven by canary probes
+//!   and dispatch outcomes:
+//!
+//!   ```text
+//!   Healthy --(degraded_after consecutive failures)--> Degraded
+//!   Degraded --(down_after consecutive failures)-----> Down
+//!   Down --(down for reboot_after)--> fallback reboot --> Degraded probation
+//!   Degraded --(recover_after consecutive passes)----> Healthy
+//!   ```
+//!
+//!   The dispatch path prefers Healthy engines, falls back to Degraded
+//!   ones, retries with exponential backoff under a per-request deadline,
+//!   and — on sustained fault pressure — reboots a Down engine from a
+//!   fallback `DesignSelection` (e.g. the latency-optimal SRAM pick, which
+//!   is immune to retention faults by construction).
+//!
+//! All serving time flows through the injectable
+//! [`Clock`](crate::util::clock::Clock): wall-backed for live serving,
+//! virtual for tests and fault scenarios (bit-reproducible reports at any
+//! `--parallel` worker count).
 //!
 //! The engine boots from a hard-coded paper config
 //! ([`EngineConfig::new`]) or from a sweep-selected design point
@@ -21,12 +45,16 @@
 pub mod accuracy;
 pub mod batcher;
 pub mod engine;
+pub mod faults;
 pub mod metrics;
 pub mod router;
 pub mod serve;
+pub mod supervisor;
 
 pub use accuracy::{AccuracyReport, Fig21Row};
 pub use batcher::{Batch, Batcher, Request};
 pub use engine::{Engine, EngineConfig};
+pub use faults::{EffectiveFaults, FaultEvent, FaultKind, FaultSchedule};
 pub use metrics::Metrics;
 pub use router::{Router, RouterPolicy, Variant};
+pub use supervisor::{ChaosConfig, EngineSpec, FleetReport, Health, Supervisor, SupervisorPolicy};

@@ -6,6 +6,7 @@
 //! (throughput) — the same decision a vLLM-style router makes between
 //! latency- and throughput-optimal batching.
 
+use anyhow::bail;
 use std::time::Duration;
 
 /// One available executable variant.
@@ -32,17 +33,24 @@ impl Default for RouterPolicy {
 /// The router.
 #[derive(Debug, Clone)]
 pub struct Router {
-    /// Sorted ascending by batch.
+    /// Sorted ascending by batch; guaranteed non-empty by [`Router::new`].
     variants: Vec<Variant>,
     pub policy: RouterPolicy,
 }
 
 impl Router {
-    pub fn new(mut batches: Vec<usize>, policy: RouterPolicy) -> Self {
+    /// Build a router over the compiled batch sizes (sorted, deduplicated).
+    ///
+    /// An empty variant list is a configuration error, not a panic: a
+    /// serving binary booting from a bad manifest must surface
+    /// `router: no compiled batch variants` instead of crashing the fleet.
+    pub fn new(mut batches: Vec<usize>, policy: RouterPolicy) -> crate::Result<Self> {
         batches.sort_unstable();
         batches.dedup();
-        assert!(!batches.is_empty(), "need at least one compiled variant");
-        Self { variants: batches.into_iter().map(|batch| Variant { batch }).collect(), policy }
+        if batches.is_empty() {
+            bail!("router: no compiled batch variants (need at least one batch size)");
+        }
+        Ok(Self { variants: batches.into_iter().map(|batch| Variant { batch }).collect(), policy })
     }
 
     pub fn variants(&self) -> &[Variant] {
@@ -57,7 +65,8 @@ impl Router {
         }
         // Throughput path: fire only when the LARGEST variant fills to the
         // threshold (firing small variants early would starve big batches).
-        let largest = *self.variants.last().unwrap();
+        // `new()` guarantees a non-empty ladder, so last() always exists.
+        let largest = *self.variants.last()?;
         if queued as f64 >= largest.batch as f64 * self.policy.fill_threshold {
             return Some(largest);
         }
@@ -68,8 +77,7 @@ impl Router {
                 .variants
                 .iter()
                 .find(|v| v.batch >= queued)
-                .or_else(|| self.variants.last())
-                .unwrap();
+                .or_else(|| self.variants.last())?;
             return Some(*v);
         }
         None
@@ -81,7 +89,15 @@ mod tests {
     use super::*;
 
     fn router() -> Router {
-        Router::new(vec![16, 1], RouterPolicy::default())
+        Router::new(vec![16, 1], RouterPolicy::default()).expect("non-empty variants")
+    }
+
+    #[test]
+    fn empty_variant_list_is_an_error_not_a_panic() {
+        // Regression: Router::new used to assert! on an empty list, taking
+        // the whole serving process down on a bad manifest.
+        let err = Router::new(Vec::new(), RouterPolicy::default()).unwrap_err();
+        assert!(err.to_string().contains("no compiled batch variants"), "named error: {err}");
     }
 
     #[test]
@@ -105,7 +121,7 @@ mod tests {
 
     #[test]
     fn deadline_fires_smallest_covering_variant() {
-        let r = Router::new(vec![1, 4, 16], RouterPolicy::default());
+        let r = Router::new(vec![1, 4, 16], RouterPolicy::default()).expect("variants");
         let late = Duration::from_millis(5);
         assert_eq!(r.dispatch(3, late), Some(Variant { batch: 4 }));
         assert_eq!(r.dispatch(1, late), Some(Variant { batch: 1 }));
@@ -123,14 +139,15 @@ mod tests {
 
     #[test]
     fn threshold_below_one_fires_earlier() {
-        let r = Router::new(vec![16], RouterPolicy { fill_threshold: 0.5, ..Default::default() });
+        let r = Router::new(vec![16], RouterPolicy { fill_threshold: 0.5, ..Default::default() })
+            .expect("variants");
         assert_eq!(r.dispatch(8, Duration::ZERO), Some(Variant { batch: 16 }));
         assert_eq!(r.dispatch(7, Duration::ZERO), None);
     }
 
     #[test]
     fn variants_sorted_dedup() {
-        let r = Router::new(vec![16, 1, 16, 4], RouterPolicy::default());
+        let r = Router::new(vec![16, 1, 16, 4], RouterPolicy::default()).expect("variants");
         let b: Vec<usize> = r.variants().iter().map(|v| v.batch).collect();
         assert_eq!(b, vec![1, 4, 16]);
     }
@@ -140,7 +157,8 @@ mod tests {
         // fill_threshold > 1.0 demands more queued requests than the
         // largest batch holds before the throughput path fires — the queue
         // must overfill so the next batch starts warm.
-        let r = Router::new(vec![16], RouterPolicy { fill_threshold: 1.5, ..Default::default() });
+        let r = Router::new(vec![16], RouterPolicy { fill_threshold: 1.5, ..Default::default() })
+            .expect("variants");
         assert_eq!(r.dispatch(16, Duration::ZERO), None, "a full batch is not 1.5x full");
         assert_eq!(r.dispatch(23, Duration::ZERO), None);
         assert_eq!(r.dispatch(24, Duration::ZERO), Some(Variant { batch: 16 }));
@@ -154,7 +172,7 @@ mod tests {
         // Queue sizes that land strictly between compiled variants must
         // take the smallest variant that covers them (minimal padding),
         // across the whole ladder.
-        let r = Router::new(vec![2, 8, 32], RouterPolicy::default());
+        let r = Router::new(vec![2, 8, 32], RouterPolicy::default()).expect("variants");
         let late = Duration::from_millis(5);
         assert_eq!(r.dispatch(1, late), Some(Variant { batch: 2 }));
         assert_eq!(r.dispatch(3, late), Some(Variant { batch: 8 }));
@@ -172,7 +190,7 @@ mod tests {
         // oldest_wait >= ZERO always holds, so nothing ever starves — and
         // an empty queue still yields None rather than a phantom batch.
         let policy = RouterPolicy { fill_threshold: 1.0, max_wait: Duration::ZERO };
-        let r = Router::new(vec![4, 16], policy);
+        let r = Router::new(vec![4, 16], policy).expect("variants");
         assert_eq!(r.dispatch(0, Duration::ZERO), None);
         assert_eq!(r.dispatch(1, Duration::ZERO), Some(Variant { batch: 4 }));
         assert_eq!(r.dispatch(16, Duration::ZERO), Some(Variant { batch: 16 }));

@@ -8,27 +8,97 @@
 //! [`Router::dispatch`] picks the executable variant from the queue depth
 //! and the head-of-line wait. Queueing delay flows into
 //! [`Metrics::queue_wait`] via [`crate::coordinator::Batch::oldest_wait`].
+//!
+//! All time comes from an injected [`Clock`]: `closed_loop` runs on a wall
+//! clock, while tests and the fault-injection harness
+//! (`coordinator::supervisor`) drive the same [`drain`] core with a virtual
+//! clock for bit-reproducible schedules.
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use super::batcher::{Batcher, Request};
+use super::batcher::{Batch, Batcher, Request};
 use super::engine::Engine;
 use super::metrics::Metrics;
 use super::router::{Router, RouterPolicy};
+use crate::util::clock::{Clock, Tick};
 
 /// One scheduling decision: the batch capacity to fire now, or `None` to
 /// keep waiting. Pure function of (batcher state, router policy, clock) —
 /// the unit-testable core of [`closed_loop`].
-pub fn next_dispatch(batcher: &Batcher, router: &Router, now: Instant) -> Option<usize> {
+pub fn next_dispatch(batcher: &Batcher, router: &Router, now: Tick) -> Option<usize> {
     if !batcher.ready(now) {
         return None;
     }
     router.dispatch(batcher.pending(), batcher.oldest_wait(now)).map(|v| v.batch)
 }
 
-/// Run `n_requests` through the engine at the given batch size; returns a
-/// human-readable metrics summary.
+/// Drain every pending request through `infer`, recording each executed
+/// batch into `metrics`.
+///
+/// When no batch is ready the clock advances *boundedly* to the next
+/// scheduling deadline (`max(window, max_wait)` past the oldest arrival) —
+/// never an unbounded spin. `infer` returns the batch's service latency;
+/// on a virtual clock the drain advances past it (the engine call itself is
+/// instantaneous in wall time), on a wall clock the call already consumed
+/// real time and `now()` is simply re-read.
+pub fn drain(
+    batcher: &mut Batcher,
+    router: &Router,
+    metrics: &mut Metrics,
+    clock: &Clock,
+    mut infer: impl FnMut(&Batch) -> crate::Result<Duration>,
+) -> crate::Result<()> {
+    while batcher.pending() > 0 {
+        let now = clock.now();
+        let Some(capacity) = next_dispatch(batcher, router, now) else {
+            // Partial tail inside the window: advance to the instant both
+            // the batcher window and the router deadline have expired for
+            // the oldest request. Guaranteed > 0 (else a batch would have
+            // fired), with a 1 ns floor so progress is unconditional.
+            let deadline = batcher.window.max(router.policy.max_wait);
+            let wait = deadline
+                .saturating_sub(batcher.oldest_wait(now))
+                .max(Duration::from_nanos(1));
+            clock.advance(wait);
+            continue;
+        };
+        if let Some(b) = batcher.form(capacity, now) {
+            let latency = infer(&b)?;
+            let done = if clock.is_virtual() { clock.advance(latency) } else { clock.now() };
+            metrics.record_batch_waited(done, b.real, b.capacity, latency, b.oldest_wait);
+        }
+    }
+    Ok(())
+}
+
+/// The one-line serving report shared by [`closed_loop`] and the CLI.
+pub fn summary_line(n_requests: usize, batch: usize, metrics: &Metrics) -> String {
+    format!(
+        "served {n_requests} requests (batch {batch}): {} | throughput {:.1} req/s",
+        metrics.summary(),
+        metrics.throughput()
+    )
+}
+
+/// Run `n_requests` through the engine at the given batch size on a wall
+/// clock; returns a human-readable metrics summary.
 pub fn closed_loop(engine: &Engine, n_requests: usize, batch: usize) -> crate::Result<String> {
+    closed_loop_with(engine, n_requests, batch, &Clock::wall())
+}
+
+/// [`closed_loop`] with an injected clock (virtual clocks make the schedule
+/// deterministic; inference latency is still measured by the engine).
+pub fn closed_loop_with(
+    engine: &Engine,
+    n_requests: usize,
+    batch: usize,
+    clock: &Clock,
+) -> crate::Result<String> {
+    if n_requests == 0 {
+        // Nothing offered: report a well-formed empty summary instead of
+        // relying on the drain loop never being entered.
+        return Ok(summary_line(0, batch, &Metrics::new()));
+    }
     let model = engine.model_for_batch(batch)?;
     let (images, _) = engine.manifest.load_testset()?;
     let per_image: usize = engine.manifest.testset.image_shape.iter().product::<i64>() as usize;
@@ -38,34 +108,23 @@ pub fn closed_loop(engine: &Engine, n_requests: usize, batch: usize) -> crate::R
     let mut batcher = Batcher::new(batch, window, per_image, n_requests + 1);
     // One compiled variant in the closed loop; the deadline path of the
     // policy shares the batcher's window so the tail fires when it expires.
-    let router = Router::new(vec![batch], RouterPolicy { fill_threshold: 1.0, max_wait: window });
+    let router = Router::new(vec![batch], RouterPolicy { fill_threshold: 1.0, max_wait: window })?;
     let mut metrics = Metrics::new();
 
+    let t0 = clock.now();
     for i in 0..n_requests {
         let src = i % n_test;
         let img = images[src * per_image..(src + 1) * per_image].to_vec();
-        batcher.push(Request::new(i as u64, img));
+        batcher.push(Request::new(i as u64, img, t0));
     }
-    while batcher.pending() > 0 {
-        let now = Instant::now();
-        let Some(capacity) = next_dispatch(&batcher, &router, now) else {
-            // Partial tail inside the window: spin until it expires (the
-            // closed loop has no new arrivals to wait for).
-            std::hint::spin_loop();
-            continue;
-        };
-        if let Some(b) = batcher.form(capacity, now) {
-            let t0 = Instant::now();
-            let logits = engine.infer(&model, &b.images)?;
-            debug_assert_eq!(logits.len(), capacity * model.art.num_classes);
-            metrics.record_batch_waited(b.real, b.capacity, t0.elapsed(), b.oldest_wait);
-        }
-    }
-    Ok(format!(
-        "served {n_requests} requests (batch {batch}): {} | throughput {:.1} req/s",
-        metrics.summary(),
-        metrics.throughput()
-    ))
+    let num_classes = model.art.num_classes;
+    drain(&mut batcher, &router, &mut metrics, clock, |b| {
+        let t0 = clock.now();
+        let logits = engine.infer(&model, &b.images)?;
+        debug_assert_eq!(logits.len(), b.capacity * num_classes);
+        Ok(clock.now().duration_since(t0))
+    })?;
+    Ok(summary_line(n_requests, batch, &metrics))
 }
 
 #[cfg(test)]
@@ -73,12 +132,13 @@ mod tests {
     use super::*;
 
     fn req(id: u64) -> Request {
-        Request::new(id, vec![0.25; 4])
+        Request::new(id, vec![0.25; 4], Tick::ZERO)
     }
 
     fn harness(window: Duration) -> (Batcher, Router) {
         let batcher = Batcher::new(4, window, 4, 8);
-        let router = Router::new(vec![1, 4], RouterPolicy { fill_threshold: 1.0, max_wait: window });
+        let router = Router::new(vec![1, 4], RouterPolicy { fill_threshold: 1.0, max_wait: window })
+            .expect("variants");
         (batcher, router)
     }
 
@@ -88,22 +148,21 @@ mod tests {
         for i in 0..4 {
             b.push(req(i));
         }
-        assert_eq!(next_dispatch(&b, &r, Instant::now()), Some(4));
+        assert_eq!(next_dispatch(&b, &r, Tick::ZERO), Some(4));
     }
 
     #[test]
     fn partial_queue_waits_for_the_window_then_fires() {
         let (mut b, r) = harness(Duration::from_millis(5));
         b.push(req(1));
-        let now = Instant::now();
-        assert_eq!(next_dispatch(&b, &r, now), None, "fresh partial batch waits");
-        let later = now + Duration::from_millis(10);
+        assert_eq!(next_dispatch(&b, &r, Tick::ZERO), None, "fresh partial batch waits");
+        let later = Tick::ZERO + Duration::from_millis(10);
         // Window expired: the deadline path picks the smallest covering
         // variant (batch 1 — no padding), not the big one.
         assert_eq!(next_dispatch(&b, &r, later), Some(1));
         let batch = b.form(1, later).unwrap();
         assert_eq!(batch.real, 1);
-        assert!(batch.oldest_wait >= Duration::from_millis(9), "queueing delay recorded");
+        assert_eq!(batch.oldest_wait, Duration::from_millis(10), "queueing delay recorded");
     }
 
     #[test]
@@ -117,7 +176,7 @@ mod tests {
         }
         let mut drained = 0;
         while b.pending() > 0 {
-            let now = Instant::now();
+            let now = Tick::ZERO;
             let cap = next_dispatch(&b, &r, now).expect("zero window always dispatches");
             let batch = b.form(cap, now).unwrap();
             drained += batch.real;
@@ -128,7 +187,7 @@ mod tests {
     #[test]
     fn idle_queue_never_dispatches() {
         let (b, r) = harness(Duration::ZERO);
-        assert_eq!(next_dispatch(&b, &r, Instant::now()), None);
+        assert_eq!(next_dispatch(&b, &r, Tick::ZERO), None);
     }
 
     #[test]
@@ -140,19 +199,83 @@ mod tests {
         let r = Router::new(
             vec![1, 4],
             RouterPolicy { fill_threshold: 1.0, max_wait: Duration::from_millis(5) },
-        );
+        )
+        .expect("variants");
         // max_batch 16 keeps `ready()` gated on the window, not on fill.
         let mut batcher = Batcher::new(16, Duration::from_millis(5), 4, 8);
         for i in 0..8 {
             assert!(batcher.push(req(i)));
         }
         assert!(!batcher.push(req(99)));
-        let now = Instant::now();
-        assert_eq!(next_dispatch(&batcher, &r, now), None, "below fill, window open");
-        let later = now + Duration::from_millis(10);
+        assert_eq!(next_dispatch(&batcher, &r, Tick::ZERO), None, "below fill, window open");
+        let later = Tick::ZERO + Duration::from_millis(10);
         let cap = next_dispatch(&batcher, &r, later).expect("deadline fires");
         assert_eq!(cap, 4, "largest variant covers the 8-deep queue");
         batcher.form(cap, later).unwrap();
         assert!(batcher.push(req(100)), "space freed");
+    }
+
+    #[test]
+    fn drain_advances_boundedly_through_a_partial_tail() {
+        // Regression for the unbounded spin_loop tail wait: a partial batch
+        // below the fill threshold must drain by *advancing the clock to
+        // the window deadline*, not by spinning. On a virtual clock the
+        // number of advances is exact and small.
+        let window = Duration::from_millis(5);
+        let mut batcher = Batcher::new(4, window, 4, 8);
+        let router =
+            Router::new(vec![1, 4], RouterPolicy { fill_threshold: 1.0, max_wait: window })
+                .expect("variants");
+        let clock = Clock::virtual_at_zero();
+        batcher.push(Request::new(7, vec![0.25; 4], clock.now()));
+        let mut metrics = Metrics::new();
+        let mut calls = 0;
+        drain(&mut batcher, &router, &mut metrics, &clock, |b| {
+            calls += 1;
+            assert_eq!(b.real, 1);
+            Ok(Duration::from_micros(100))
+        })
+        .unwrap();
+        assert_eq!(calls, 1, "single tail batch fires exactly once");
+        assert_eq!(metrics.batches, 1);
+        assert_eq!(metrics.requests, 1);
+        // Clock advanced to the window deadline, then past the service
+        // latency — no further (bounded, not a spin).
+        assert_eq!(clock.now(), Tick::ZERO + window + Duration::from_micros(100));
+        assert_eq!(metrics.queue_wait.max_us(), 5_000, "tail waited exactly the window");
+    }
+
+    #[test]
+    fn drain_full_batches_then_tail() {
+        // 6 requests, batch 4: one full batch fires at t=0, the 2-deep tail
+        // waits out the window, then fires on the deadline path.
+        let window = Duration::from_millis(2);
+        let mut batcher = Batcher::new(4, window, 4, 16);
+        let router =
+            Router::new(vec![1, 4], RouterPolicy { fill_threshold: 1.0, max_wait: window })
+                .expect("variants");
+        let clock = Clock::virtual_at_zero();
+        for i in 0..6 {
+            batcher.push(Request::new(i, vec![0.25; 4], clock.now()));
+        }
+        let mut metrics = Metrics::new();
+        drain(&mut batcher, &router, &mut metrics, &clock, |_| Ok(Duration::from_micros(50)))
+            .unwrap();
+        assert_eq!(metrics.batches, 2);
+        assert_eq!(metrics.requests, 6);
+        assert_eq!(metrics.padded_rows, 2, "tail padded 2->4");
+        assert!(metrics.throughput() > 0.0);
+    }
+
+    #[test]
+    fn zero_requests_reports_a_well_formed_empty_summary() {
+        // Regression: closed_loop(n_requests = 0) must return a complete
+        // summary line, not depend on loop non-entry. summary_line is the
+        // exact formatting core closed_loop uses for that early return.
+        let s = summary_line(0, 16, &Metrics::new());
+        assert!(s.starts_with("served 0 requests (batch 16):"), "{s}");
+        assert!(s.contains("batches=0"), "{s}");
+        assert!(s.contains("requests=0"), "{s}");
+        assert!(s.contains("throughput 0.0 req/s"), "{s}");
     }
 }

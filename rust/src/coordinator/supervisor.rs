@@ -1,0 +1,1107 @@
+//! Graceful-degradation supervisor: a multi-engine fleet under a
+//! [`FaultSchedule`], with per-engine health, canary probes, bounded
+//! retry/reroute dispatch, and fallback reboots.
+//!
+//! Each engine slot carries a [`Health`] state machine (see the diagram in
+//! [`crate::coordinator`]) driven by two signals:
+//!
+//! * **canary probes** — every `canary_period` a small buffer passes
+//!   through the engine's effective [`BankSplit`] fault model; the probe
+//!   fails when the robust MSB bank flips beyond its (near-zero) budget or
+//!   the relaxed LSB bank exceeds ~10x its expected clean flip count. The
+//!   probes are fanned across a [`ThreadPool`] but each derives its
+//!   injection stream from `(schedule seed, engine, round)`, so the verdict
+//!   vector — and therefore the whole report — is identical at any
+//!   `--parallel` worker count.
+//! * **dispatch outcomes** — a crash marks the engine `Down` at once; a
+//!   timeout counts one failure. Successful dispatches do *not* count as
+//!   health passes: an engine can serve corrupted answers happily, and only
+//!   the canaries are allowed to clear it.
+//!
+//! The dispatch path prefers `Healthy` engines, falls back to `Degraded`
+//! ones, retries with exponential backoff under a per-request deadline, and
+//! drops the batch only when the attempt budget or the deadline is
+//! exhausted. An engine that stays `Down` for `reboot_after` is rebooted —
+//! onto the fallback [`EngineSpec`] (e.g. the latency-optimal SRAM pick,
+//! immune to retention faults) the first time, in place afterwards.
+//!
+//! Everything runs on an injected [`Clock`]; under
+//! [`Clock::virtual_at_zero`] the run is a discrete-event simulation whose
+//! [`FleetReport`] is byte-identical across runs.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use crate::ber::{BankSplit, FaultExposure, Injector, WordKind};
+use crate::config::{BerConfig, GlbVariant, TechBase, TechConfig};
+use crate::dse::select::{DesignSelection, CATASTROPHIC_AMPLIFICATION};
+use crate::models::{DType, Model};
+use crate::util::clock::{Clock, Tick};
+use crate::util::json::Json;
+use crate::util::pool::ThreadPool;
+
+use super::batcher::{Batch, Batcher, Request};
+use super::faults::{EffectiveFaults, FaultSchedule};
+use super::metrics::Metrics;
+use super::router::{Router, RouterPolicy};
+use super::serve;
+
+/// Engine health as the supervisor sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    /// Serving normally; preferred by the dispatch path.
+    Healthy,
+    /// Failing canaries or dispatches; used only when no Healthy engine is
+    /// available, and the probation state after a reboot.
+    Degraded,
+    /// Not dispatchable. Leaves via canary passes (the fault cleared on its
+    /// own) or a fallback reboot after `reboot_after`.
+    Down,
+}
+
+impl Health {
+    /// Stable serialization token.
+    pub fn token(&self) -> &'static str {
+        match self {
+            Health::Healthy => "healthy",
+            Health::Degraded => "degraded",
+            Health::Down => "down",
+        }
+    }
+}
+
+/// Everything the supervisor needs to know about one engine build: the
+/// fault model its GLB carries and its modeled per-batch service latency.
+#[derive(Debug, Clone)]
+pub struct EngineSpec {
+    pub label: String,
+    pub variant: GlbVariant,
+    /// Technology base for retention-storm scaling ([`super::faults::storm_ber`]).
+    pub tech: TechBase,
+    pub ber: BerConfig,
+    /// Built Δ_PT_GB of the (mono or MSB) bank.
+    pub glb_delta: f64,
+    /// Built Δ_PT_GB of the LSB bank.
+    pub lsb_delta: f64,
+    /// Modeled clean service latency per batch.
+    pub service: Duration,
+}
+
+impl EngineSpec {
+    /// The paper build of `variant` with a 1 ms modeled service latency.
+    pub fn paper(variant: GlbVariant) -> Self {
+        let tech = TechConfig::default();
+        Self {
+            label: variant.label().to_string(),
+            variant,
+            tech: tech.base,
+            ber: BerConfig::for_variant(variant),
+            glb_delta: tech.glb_delta(),
+            lsb_delta: tech.lsb_delta(),
+            service: Duration::from_millis(1),
+        }
+    }
+
+    /// A uniform fleet of `n` paper STT-AI Ultra engines (the serving
+    /// default), labeled by slot.
+    pub fn paper_fleet(n: usize) -> Vec<EngineSpec> {
+        (0..n)
+            .map(|i| {
+                let mut s = Self::paper(GlbVariant::SttAiUltra);
+                s.label = format!("{}-{i}", s.label);
+                s
+            })
+            .collect()
+    }
+
+    /// Build from a sweep-selected design point: variant, BER budget, built
+    /// Δs and (when the sweep recorded one) the modeled latency all come
+    /// from the selection record.
+    pub fn from_selection(sel: &DesignSelection) -> Self {
+        let cfg = sel.system_config();
+        let service = sel
+            .metric("latency_s")
+            .filter(|s| s.is_finite() && *s > 0.0)
+            .map(Duration::from_secs_f64)
+            .unwrap_or(Duration::from_millis(1));
+        Self {
+            label: cfg.name.clone(),
+            variant: sel.variant(),
+            tech: cfg.tech.base,
+            ber: sel.ber_config(),
+            glb_delta: cfg.tech.glb_delta(),
+            lsb_delta: cfg.tech.lsb_delta(),
+            service,
+        }
+    }
+}
+
+/// Supervisor knobs. `Default` is tuned for 1 ms-class engine specs; the
+/// constructor floors `attempt_timeout` and `deadline` against the fleet's
+/// actual service latencies so slow selections do not time out on every
+/// dispatch.
+#[derive(Debug, Clone, Copy)]
+pub struct SupervisorPolicy {
+    /// Dispatch attempts (including the first) before a batch is dropped.
+    pub max_attempts: u32,
+    /// First retry backoff; doubles per failed attempt up to `backoff_cap`.
+    pub backoff_base: Duration,
+    pub backoff_cap: Duration,
+    /// Per-attempt service timeout: an engine that holds a batch longer is
+    /// abandoned (the stall detector).
+    pub attempt_timeout: Duration,
+    /// Per-request deadline across all attempts and backoffs.
+    pub deadline: Duration,
+    /// Canary cadence.
+    pub canary_period: Duration,
+    /// Probe buffer size (rounded up to whole bf16 words).
+    pub canary_probe_bytes: usize,
+    /// Max MSB-bank flips per probe before the canary fails. The robust
+    /// bank expects ~0.003 flips per 64 KiB probe at the paper's 1e-8, so
+    /// anything past a stray flip or two is an episode.
+    pub canary_msb_flip_budget: u64,
+    /// Max LSB-bank flips per probe. 64 KiB at the Ultra 1e-5 budget
+    /// expects ~2.6 flips; 26 is 10x that (never trips clean, always trips
+    /// a 1e3 escalation).
+    pub canary_lsb_flip_budget: u64,
+    /// Consecutive failures before Healthy -> Degraded.
+    pub degraded_after: u32,
+    /// Consecutive failures before Degraded -> Down.
+    pub down_after: u32,
+    /// Consecutive canary passes to climb one health level.
+    pub recover_after: u32,
+    /// Time spent Down before the supervisor reboots the engine.
+    pub reboot_after: Duration,
+    /// Reboot duration (the slot is not dispatchable or probeable).
+    pub reboot_time: Duration,
+}
+
+impl Default for SupervisorPolicy {
+    fn default() -> Self {
+        Self {
+            max_attempts: 4,
+            backoff_base: Duration::from_micros(250),
+            backoff_cap: Duration::from_millis(2),
+            attempt_timeout: Duration::from_millis(2),
+            deadline: Duration::from_millis(8),
+            canary_period: Duration::from_millis(5),
+            canary_probe_bytes: 64 << 10,
+            canary_msb_flip_budget: 3,
+            canary_lsb_flip_budget: 26,
+            degraded_after: 2,
+            down_after: 4,
+            recover_after: 2,
+            reboot_after: Duration::from_millis(15),
+            reboot_time: Duration::from_millis(2),
+        }
+    }
+}
+
+/// One engine slot: spec + health machine + lifetime counters.
+#[derive(Debug, Clone)]
+pub struct EngineSlot {
+    pub id: usize,
+    pub spec: EngineSpec,
+    pub health: Health,
+    consecutive_failures: u32,
+    consecutive_passes: u32,
+    /// Requests served (real rows, not padding).
+    pub served: u64,
+    pub batches: u64,
+    /// Dispatch attempts that failed here (crash or timeout).
+    pub failed_dispatches: u64,
+    pub canaries: u64,
+    pub canary_failures: u64,
+    pub reboots: u64,
+    /// True once the slot runs the fallback spec.
+    pub on_fallback: bool,
+    down_since: Option<Tick>,
+    /// Not dispatchable or probeable before this instant (mid-reboot).
+    ready_at: Tick,
+    /// Health transition log: (ns since epoch, new state).
+    pub transitions: Vec<(u64, Health)>,
+}
+
+impl EngineSlot {
+    fn new(id: usize, spec: EngineSpec) -> Self {
+        Self {
+            id,
+            spec,
+            health: Health::Healthy,
+            consecutive_failures: 0,
+            consecutive_passes: 0,
+            served: 0,
+            batches: 0,
+            failed_dispatches: 0,
+            canaries: 0,
+            canary_failures: 0,
+            reboots: 0,
+            on_fallback: false,
+            down_since: None,
+            ready_at: Tick::ZERO,
+            transitions: Vec::new(),
+        }
+    }
+
+    fn set_health(&mut self, h: Health, now: Tick) {
+        if self.health != h {
+            self.health = h;
+            self.transitions.push((now.as_nanos(), h));
+        }
+    }
+
+    /// One failure signal of the given weight (1 for a canary failure or a
+    /// dispatch timeout; `down_after` for a crash, which must floor the
+    /// engine immediately).
+    fn note_failure(&mut self, now: Tick, weight: u32, policy: &SupervisorPolicy) {
+        self.consecutive_passes = 0;
+        self.consecutive_failures = self.consecutive_failures.saturating_add(weight);
+        if self.health == Health::Healthy && self.consecutive_failures >= policy.degraded_after {
+            self.set_health(Health::Degraded, now);
+        }
+        if self.health == Health::Degraded && self.consecutive_failures >= policy.down_after {
+            self.set_health(Health::Down, now);
+            self.down_since = Some(now);
+        }
+    }
+
+    /// One canary pass; `recover_after` consecutive passes climb one level
+    /// (Down -> Degraded -> Healthy), so a fault that clears on its own
+    /// needs two full probation windows to fully rehabilitate the engine.
+    fn note_pass(&mut self, now: Tick, policy: &SupervisorPolicy) {
+        self.consecutive_failures = 0;
+        self.consecutive_passes = self.consecutive_passes.saturating_add(1);
+        if self.consecutive_passes >= policy.recover_after {
+            match self.health {
+                Health::Down => {
+                    self.set_health(Health::Degraded, now);
+                    self.down_since = None;
+                    self.consecutive_passes = 0;
+                }
+                Health::Degraded => {
+                    self.set_health(Health::Healthy, now);
+                    self.consecutive_passes = 0;
+                }
+                Health::Healthy => {}
+            }
+        }
+    }
+}
+
+/// Chaos-run shape: offered load and batching knobs.
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// Total requests offered.
+    pub requests: usize,
+    /// Max batch (and largest compiled variant of the ladder).
+    pub batch: usize,
+    /// Open-loop arrival spacing (request i arrives at `i * arrival_gap`).
+    pub arrival_gap: Duration,
+    /// Synthetic image elements per request (the sim backend never runs a
+    /// real executable, so this only sizes the queue traffic).
+    pub image_elems: usize,
+    pub queue_depth: usize,
+    /// Batching window (also the router's deadline).
+    pub window: Duration,
+    /// Canary fan-out workers. Any value produces the identical report.
+    pub parallel: usize,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        Self {
+            requests: 2000,
+            batch: 16,
+            arrival_gap: Duration::from_micros(70),
+            image_elems: 4,
+            queue_depth: 4096,
+            window: Duration::from_micros(500),
+            parallel: 1,
+        }
+    }
+}
+
+/// Per-engine rows of the [`FleetReport`].
+#[derive(Debug, Clone)]
+pub struct EngineReport {
+    pub id: usize,
+    pub label: String,
+    pub health: Health,
+    pub served: u64,
+    pub batches: u64,
+    pub failed_dispatches: u64,
+    pub canaries: u64,
+    pub canary_failures: u64,
+    pub reboots: u64,
+    pub on_fallback: bool,
+    pub transitions: Vec<(u64, Health)>,
+}
+
+/// The availability/accuracy report of one chaos run. Under a virtual
+/// clock both [`FleetReport::render`] and [`FleetReport::to_json`] are
+/// byte-identical across runs and worker counts.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub scenario: String,
+    pub seed: u64,
+    pub engines: Vec<EngineReport>,
+    pub offered: u64,
+    pub served: u64,
+    pub dropped: u64,
+    pub rejected: u64,
+    pub malformed: u64,
+    /// Failed dispatch attempts (timeouts, crashes, all-engines-busy waits).
+    pub retries: u64,
+    /// Batches that succeeded only after at least one failed attempt.
+    pub reroutes: u64,
+    /// Reboots that swapped a slot onto the fallback spec.
+    pub fallbacks: u64,
+    pub reboots: u64,
+    pub canaries: u64,
+    pub canary_failures: u64,
+    /// served / offered, percent.
+    pub availability: f64,
+    /// Traffic-weighted Fig. 21-style estimated accuracy under faults.
+    pub est_accuracy: f64,
+    /// The same estimate for the primary spec with no faults active.
+    pub clean_accuracy: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+    pub qwait_p50_us: u64,
+    pub qwait_max_us: u64,
+    pub sim_elapsed: Duration,
+    pub throughput_rps: f64,
+}
+
+impl FleetReport {
+    /// Deterministic human-readable report.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(s, "chaos report: scenario={} seed={}", self.scenario, self.seed);
+        let _ = writeln!(
+            s,
+            "  offered={} served={} dropped={} rejected={} malformed={}",
+            self.offered, self.served, self.dropped, self.rejected, self.malformed
+        );
+        let _ = writeln!(
+            s,
+            "  availability={:.3}% retries={} reroutes={} fallbacks={} reboots={}",
+            self.availability, self.retries, self.reroutes, self.fallbacks, self.reboots
+        );
+        let _ = writeln!(s, "  canaries={} failed={}", self.canaries, self.canary_failures);
+        let _ = writeln!(
+            s,
+            "  est_accuracy={:.6} clean_accuracy={:.6}",
+            self.est_accuracy, self.clean_accuracy
+        );
+        let _ = writeln!(
+            s,
+            "  latency: p50={}us p99={}us max={}us | qwait: p50={}us max={}us",
+            self.p50_us, self.p99_us, self.max_us, self.qwait_p50_us, self.qwait_max_us
+        );
+        let _ = writeln!(
+            s,
+            "  sim_elapsed={:.3}ms throughput={:.1} req/s",
+            self.sim_elapsed.as_secs_f64() * 1e3,
+            self.throughput_rps
+        );
+        for e in &self.engines {
+            let _ = write!(
+                s,
+                "  engine {} [{}]: health={} served={} batches={} failed={} canaries={}/{} reboots={}{}",
+                e.id,
+                e.label,
+                e.health.token(),
+                e.served,
+                e.batches,
+                e.failed_dispatches,
+                e.canary_failures,
+                e.canaries,
+                e.reboots,
+                if e.on_fallback { " (fallback)" } else { "" }
+            );
+            if e.transitions.is_empty() {
+                let _ = writeln!(s);
+            } else {
+                let _ = write!(s, " |");
+                for (ns, h) in &e.transitions {
+                    let _ = write!(s, " {:.1}ms->{}", *ns as f64 / 1e6, h.token());
+                }
+                let _ = writeln!(s);
+            }
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        let engines = self
+            .engines
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("id", (e.id as u64).into()),
+                    ("label", Json::Str(e.label.clone())),
+                    ("health", Json::Str(e.health.token().to_string())),
+                    ("served", e.served.into()),
+                    ("batches", e.batches.into()),
+                    ("failed_dispatches", e.failed_dispatches.into()),
+                    ("canaries", e.canaries.into()),
+                    ("canary_failures", e.canary_failures.into()),
+                    ("reboots", e.reboots.into()),
+                    ("on_fallback", e.on_fallback.into()),
+                    (
+                        "transitions",
+                        Json::Arr(
+                            e.transitions
+                                .iter()
+                                .map(|(ns, h)| {
+                                    Json::obj(vec![
+                                        ("at_us", (ns / 1_000).into()),
+                                        ("health", Json::Str(h.token().to_string())),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("seed", self.seed.into()),
+            ("offered", self.offered.into()),
+            ("served", self.served.into()),
+            ("dropped", self.dropped.into()),
+            ("rejected", self.rejected.into()),
+            ("malformed", self.malformed.into()),
+            ("retries", self.retries.into()),
+            ("reroutes", self.reroutes.into()),
+            ("fallbacks", self.fallbacks.into()),
+            ("reboots", self.reboots.into()),
+            ("canaries", self.canaries.into()),
+            ("canary_failures", self.canary_failures.into()),
+            ("availability_pct", Json::Str(format!("{:.3}", self.availability))),
+            ("est_accuracy", Json::Str(format!("{:.6}", self.est_accuracy))),
+            ("clean_accuracy", Json::Str(format!("{:.6}", self.clean_accuracy))),
+            ("p50_us", self.p50_us.into()),
+            ("p99_us", self.p99_us.into()),
+            ("max_us", self.max_us.into()),
+            ("qwait_p50_us", self.qwait_p50_us.into()),
+            ("qwait_max_us", self.qwait_max_us.into()),
+            ("sim_elapsed_us", (self.sim_elapsed.as_micros() as u64).into()),
+            ("throughput_rps", Json::Str(format!("{:.1}", self.throughput_rps))),
+            ("engines", Json::Arr(engines)),
+        ])
+    }
+}
+
+/// One deterministic canary probe: inject the engine's effective fault
+/// model into a zeroed buffer and compare per-bank flip counts against the
+/// budgets. The injection stream derives from (schedule seed, engine,
+/// round) only — never from thread identity.
+fn canary_passes(
+    seed: u64,
+    engine: u64,
+    round: u64,
+    eff: &EffectiveFaults,
+    policy: &SupervisorPolicy,
+) -> bool {
+    if eff.crashed || eff.stalled {
+        return false;
+    }
+    let mut buf = vec![0u8; policy.canary_probe_bytes.next_multiple_of(2)];
+    let mut inj = Injector::new(
+        seed ^ engine.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ round.wrapping_mul(0xD1B5_4A32_D192_ED03),
+    );
+    let split = BankSplit { kind: WordKind::Bf16, msb_ber: eff.msb_ber, lsb_ber: eff.lsb_ber };
+    let (msb, lsb) = split.inject_split(&mut inj, &mut buf);
+    msb.bits_flipped <= policy.canary_msb_flip_budget
+        && lsb.bits_flipped <= policy.canary_lsb_flip_budget
+}
+
+/// The model the Fig. 21-style accuracy estimate is computed over.
+const EXPOSURE_MODEL: &str = "ResNet50";
+
+/// The graceful-degradation supervisor (see module docs).
+pub struct Supervisor {
+    schedule: FaultSchedule,
+    policy: SupervisorPolicy,
+    slots: Vec<EngineSlot>,
+    fallback: Option<EngineSpec>,
+    pool: ThreadPool,
+    model: Model,
+    /// Round-robin cursor of the dispatch path.
+    rr: usize,
+    retries: u64,
+    reroutes: u64,
+    dropped: u64,
+    fallbacks: u64,
+    /// Accuracy estimate accumulated per served request.
+    acc_weighted: f64,
+    acc_weight: f64,
+    /// `(msb_ber, lsb_ber) -> estimated accuracy` memo (the exposure
+    /// analysis walks every model layer; the schedule only ever produces a
+    /// handful of distinct BER pairs).
+    exposure_memo: HashMap<(u64, u64), f64>,
+}
+
+impl Supervisor {
+    /// Build a supervisor over `specs` (slot order = engine index in the
+    /// schedule). `fallback` is the reboot target spec; `parallel` sizes
+    /// the canary fan-out pool (any value, same report).
+    pub fn new(
+        schedule: FaultSchedule,
+        specs: Vec<EngineSpec>,
+        fallback: Option<EngineSpec>,
+        mut policy: SupervisorPolicy,
+        parallel: usize,
+    ) -> crate::Result<Self> {
+        if specs.is_empty() {
+            anyhow::bail!("supervisor: fleet needs at least one engine spec");
+        }
+        // Floor the timers against the fleet's modeled service latencies so
+        // a slow selection does not time out on every clean dispatch.
+        let slowest = specs.iter().map(|s| s.service).max().unwrap_or(Duration::ZERO);
+        policy.attempt_timeout = policy.attempt_timeout.max(2 * slowest);
+        policy.deadline = policy.deadline.max(4 * policy.attempt_timeout);
+        let model = crate::models::by_name(EXPOSURE_MODEL)
+            .ok_or_else(|| anyhow::anyhow!("model {EXPOSURE_MODEL} missing from the zoo"))?;
+        Ok(Self {
+            schedule,
+            policy,
+            slots: specs.into_iter().enumerate().map(|(i, s)| EngineSlot::new(i, s)).collect(),
+            fallback,
+            pool: ThreadPool::new(parallel.max(1)),
+            model,
+            rr: 0,
+            retries: 0,
+            reroutes: 0,
+            dropped: 0,
+            fallbacks: 0,
+            acc_weighted: 0.0,
+            acc_weight: 0.0,
+            exposure_memo: HashMap::new(),
+        })
+    }
+
+    pub fn policy(&self) -> &SupervisorPolicy {
+        &self.policy
+    }
+
+    pub fn slots(&self) -> &[EngineSlot] {
+        &self.slots
+    }
+
+    /// Fig. 21-style estimated accuracy at an effective BER pair, memoized.
+    fn est_accuracy(&mut self, msb_ber: f64, lsb_ber: f64) -> f64 {
+        let key = (msb_ber.to_bits(), lsb_ber.to_bits());
+        if let Some(&v) = self.exposure_memo.get(&key) {
+            return v;
+        }
+        let split = BankSplit { kind: WordKind::Bf16, msb_ber, lsb_ber };
+        let e = FaultExposure::analyze(&self.model, DType::Bf16, &split);
+        let est_drop = (e.catastrophic_fraction * CATASTROPHIC_AMPLIFICATION
+            + e.mean_rel_perturbation)
+            .min(1.0);
+        let acc = 1.0 - est_drop;
+        self.exposure_memo.insert(key, acc);
+        acc
+    }
+
+    /// Pick the next dispatch target: round-robin over Healthy engines
+    /// first, then Degraded ones; Down, mid-reboot, and already-`tried`
+    /// slots are skipped. Deterministic by construction.
+    fn pick_engine(&mut self, tried: &[usize], now: Tick) -> Option<usize> {
+        let n = self.slots.len();
+        for want in [Health::Healthy, Health::Degraded] {
+            for k in 0..n {
+                let idx = (self.rr + k) % n;
+                let s = &self.slots[idx];
+                if s.health == want && s.ready_at <= now && !tried.contains(&idx) {
+                    self.rr = (idx + 1) % n;
+                    return Some(idx);
+                }
+            }
+        }
+        None
+    }
+
+    /// Serve one batch: bounded retry with exponential backoff under the
+    /// per-request deadline. Serialized model — the supervisor advances the
+    /// clock by the service latency of whichever engine finally takes the
+    /// batch; the fleet buys redundancy, not parallel throughput.
+    fn dispatch_batch(&mut self, b: &Batch, clock: &Clock, metrics: &mut Metrics) {
+        let start = clock.now();
+        let deadline = start + self.policy.deadline;
+        let mut backoff = self.policy.backoff_base;
+        let mut attempts: u32 = 0;
+        let mut tried: Vec<usize> = Vec::new();
+        loop {
+            attempts += 1;
+            let now = clock.now();
+            match self.pick_engine(&tried, now) {
+                None => {
+                    // Whole fleet down, mid-reboot, or already tried: back
+                    // off and widen the candidate set again.
+                    tried.clear();
+                }
+                Some(idx) => {
+                    let spec = self.slots[idx].spec.clone();
+                    let eff = self.schedule.effective(
+                        idx,
+                        now,
+                        spec.ber,
+                        spec.tech,
+                        spec.glb_delta,
+                        spec.lsb_delta,
+                    );
+                    if eff.crashed {
+                        // Hard failure, detected immediately; the health
+                        // machine floors the engine at once.
+                        let policy = self.policy;
+                        let slot = &mut self.slots[idx];
+                        slot.failed_dispatches += 1;
+                        slot.note_failure(now, policy.down_after, &policy);
+                        tried.push(idx);
+                    } else {
+                        let service = spec.service.mul_f64(eff.latency_mult.max(0.0));
+                        if eff.stalled || service > self.policy.attempt_timeout {
+                            // The engine holds the batch until the attempt
+                            // timer expires; one failure, try elsewhere.
+                            let t = clock.advance(self.policy.attempt_timeout);
+                            let policy = self.policy;
+                            let slot = &mut self.slots[idx];
+                            slot.failed_dispatches += 1;
+                            slot.note_failure(t, 1, &policy);
+                            tried.push(idx);
+                        } else {
+                            let done = clock.advance(service);
+                            let slot = &mut self.slots[idx];
+                            slot.served += b.real as u64;
+                            slot.batches += 1;
+                            if attempts > 1 {
+                                self.reroutes += 1;
+                            }
+                            let acc = self.est_accuracy(eff.msb_ber, eff.lsb_ber);
+                            self.acc_weighted += acc * b.real as f64;
+                            self.acc_weight += b.real as f64;
+                            metrics.record_batch_waited(
+                                done,
+                                b.real,
+                                b.capacity,
+                                done.duration_since(start),
+                                b.oldest_wait,
+                            );
+                            return;
+                        }
+                    }
+                }
+            }
+            // Failed attempt: retry within the budget or drop the batch.
+            self.retries += 1;
+            if attempts >= self.policy.max_attempts || clock.now() + backoff >= deadline {
+                self.dropped += b.real as u64;
+                return;
+            }
+            clock.advance(backoff);
+            backoff = (backoff * 2).min(self.policy.backoff_cap);
+        }
+    }
+
+    /// One canary round at the scheduled instant `at` (round index `seq`).
+    /// Probes fan across the pool; verdicts apply in slot order, then any
+    /// engine Down past `reboot_after` is rebooted.
+    fn canary_round(&mut self, at: Tick, seq: u64) {
+        let policy = self.policy;
+        let seed = self.schedule.seed;
+        let effs: Vec<Option<EffectiveFaults>> = self
+            .slots
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                if s.ready_at > at {
+                    return None; // mid-reboot: nothing to probe
+                }
+                Some(self.schedule.effective(
+                    i,
+                    at,
+                    s.spec.ber,
+                    s.spec.tech,
+                    s.spec.glb_delta,
+                    s.spec.lsb_delta,
+                ))
+            })
+            .collect();
+        let verdicts: Vec<Option<bool>> = self
+            .pool
+            .map_range(effs.len(), |i| {
+                effs[i].map(|eff| canary_passes(seed, i as u64, seq, &eff, &policy))
+            });
+        for (i, v) in verdicts.into_iter().enumerate() {
+            let Some(pass) = v else { continue };
+            let slot = &mut self.slots[i];
+            slot.canaries += 1;
+            if pass {
+                slot.note_pass(at, &policy);
+            } else {
+                slot.canary_failures += 1;
+                slot.note_failure(at, 1, &policy);
+            }
+        }
+        let due: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| {
+                s.health == Health::Down
+                    && s.down_since.is_some_and(|t| at.duration_since(t) >= policy.reboot_after)
+            })
+            .map(|(i, _)| i)
+            .collect();
+        for i in due {
+            self.reboot(i, at);
+        }
+    }
+
+    /// Reboot a slot: onto the fallback spec the first time (recorded as a
+    /// fallback), in place afterwards. The slot re-enters as Degraded
+    /// probation and becomes dispatchable after `reboot_time`.
+    fn reboot(&mut self, i: usize, at: Tick) {
+        let swap = self.fallback.clone().filter(|_| !self.slots[i].on_fallback);
+        let swapped = swap.is_some();
+        let ready = at + self.policy.reboot_time;
+        let slot = &mut self.slots[i];
+        if let Some(spec) = swap {
+            slot.spec = spec;
+            slot.on_fallback = true;
+        }
+        slot.reboots += 1;
+        slot.down_since = None;
+        slot.consecutive_failures = 0;
+        slot.consecutive_passes = 0;
+        slot.ready_at = ready;
+        slot.set_health(Health::Degraded, at);
+        if swapped {
+            self.fallbacks += 1;
+        }
+    }
+
+    /// Run one chaos scenario to completion and report. Deterministic under
+    /// a virtual clock: discrete events are arrivals (`i * arrival_gap`),
+    /// canary rounds (`k * canary_period`) and batcher deadlines; the clock
+    /// advances to the earliest pending one, never spins.
+    pub fn run(&mut self, cfg: &ChaosConfig, clock: &Clock) -> crate::Result<FleetReport> {
+        let epoch = clock.now();
+        let mut batcher = Batcher::new(cfg.batch, cfg.window, cfg.image_elems, cfg.queue_depth);
+        let mut ladder = Vec::new();
+        let mut bsz = 1;
+        while bsz < cfg.batch {
+            ladder.push(bsz);
+            bsz *= 2;
+        }
+        ladder.push(cfg.batch);
+        let router =
+            Router::new(ladder, RouterPolicy { fill_threshold: 1.0, max_wait: cfg.window })?;
+        let mut metrics = Metrics::new();
+        let image = vec![0.5f32; cfg.image_elems];
+        let clean_ber = self.slots[0].spec.ber;
+        let clean_accuracy = self.est_accuracy(clean_ber.msb_ber, clean_ber.lsb_ber);
+
+        let mut admitted: usize = 0;
+        let mut canary_seq: u64 = 0;
+        let arrival = |i: usize| epoch + cfg.arrival_gap * (i as u32);
+        loop {
+            let now = clock.now();
+            while admitted < cfg.requests && arrival(admitted) <= now {
+                batcher.push(Request::new(admitted as u64, image.clone(), arrival(admitted)));
+                admitted += 1;
+            }
+            while epoch + self.policy.canary_period * (canary_seq as u32 + 1) <= now {
+                canary_seq += 1;
+                let at = epoch + self.policy.canary_period * (canary_seq as u32);
+                self.canary_round(at, canary_seq);
+            }
+            if let Some(capacity) = serve::next_dispatch(&batcher, &router, now) {
+                if let Some(b) = batcher.form(capacity, now) {
+                    self.dispatch_batch(&b, clock, &mut metrics);
+                    continue;
+                }
+            }
+            if admitted >= cfg.requests && batcher.pending() == 0 {
+                break;
+            }
+            let mut target = epoch + self.policy.canary_period * (canary_seq as u32 + 1);
+            if admitted < cfg.requests {
+                target = target.min(arrival(admitted));
+            }
+            if batcher.pending() > 0 {
+                let deadline = batcher.window.max(router.policy.max_wait);
+                let wait = deadline
+                    .saturating_sub(batcher.oldest_wait(now))
+                    .max(Duration::from_nanos(1));
+                target = target.min(now + wait);
+            }
+            clock.advance_to(target.max(now + Duration::from_nanos(1)));
+        }
+
+        let end = clock.now();
+        let offered = cfg.requests as u64;
+        let served = metrics.requests;
+        let engines = self
+            .slots
+            .iter()
+            .map(|s| EngineReport {
+                id: s.id,
+                label: s.spec.label.clone(),
+                health: s.health,
+                served: s.served,
+                batches: s.batches,
+                failed_dispatches: s.failed_dispatches,
+                canaries: s.canaries,
+                canary_failures: s.canary_failures,
+                reboots: s.reboots,
+                on_fallback: s.on_fallback,
+                transitions: s.transitions.clone(),
+            })
+            .collect::<Vec<_>>();
+        Ok(FleetReport {
+            scenario: self.schedule.name.clone(),
+            seed: self.schedule.seed,
+            offered,
+            served,
+            dropped: self.dropped,
+            rejected: batcher.rejected,
+            malformed: batcher.malformed,
+            retries: self.retries,
+            reroutes: self.reroutes,
+            fallbacks: self.fallbacks,
+            reboots: engines.iter().map(|e| e.reboots).sum(),
+            canaries: engines.iter().map(|e| e.canaries).sum(),
+            canary_failures: engines.iter().map(|e| e.canary_failures).sum(),
+            availability: if offered == 0 {
+                100.0
+            } else {
+                served as f64 / offered as f64 * 100.0
+            },
+            est_accuracy: if self.acc_weight > 0.0 {
+                self.acc_weighted / self.acc_weight
+            } else {
+                clean_accuracy
+            },
+            clean_accuracy,
+            p50_us: metrics.latency.percentile_us(50.0),
+            p99_us: metrics.latency.percentile_us(99.0),
+            max_us: metrics.latency.max_us(),
+            qwait_p50_us: metrics.queue_wait.percentile_us(50.0),
+            qwait_max_us: metrics.queue_wait.max_us(),
+            sim_elapsed: end.duration_since(epoch),
+            throughput_rps: metrics.throughput(),
+            engines,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_scenario(name: &str, requests: usize, parallel: usize) -> FleetReport {
+        let schedule = FaultSchedule::builtin(name).unwrap();
+        let mut sup = Supervisor::new(
+            schedule,
+            EngineSpec::paper_fleet(3),
+            Some(EngineSpec::paper(GlbVariant::Sram)),
+            SupervisorPolicy::default(),
+            parallel,
+        )
+        .unwrap();
+        let cfg = ChaosConfig { requests, parallel, ..Default::default() };
+        sup.run(&cfg, &Clock::virtual_at_zero()).unwrap()
+    }
+
+    fn accounting_closes(r: &FleetReport) {
+        assert_eq!(
+            r.served + r.dropped + r.rejected + r.malformed,
+            r.offered,
+            "every offered request must be served, dropped, rejected or malformed"
+        );
+        assert_eq!(r.served, r.engines.iter().map(|e| e.served).sum::<u64>());
+    }
+
+    #[test]
+    fn policy_floors_adapt_to_slow_specs() {
+        let mut spec = EngineSpec::paper(GlbVariant::SttAiUltra);
+        spec.service = Duration::from_millis(20);
+        let sup = Supervisor::new(
+            FaultSchedule::calm(),
+            vec![spec],
+            None,
+            SupervisorPolicy::default(),
+            1,
+        )
+        .unwrap();
+        // 2x the slowest service, and a deadline wide enough for retries.
+        assert_eq!(sup.policy().attempt_timeout, Duration::from_millis(40));
+        assert_eq!(sup.policy().deadline, Duration::from_millis(160));
+        // Fast specs keep the defaults.
+        let sup = Supervisor::new(
+            FaultSchedule::calm(),
+            EngineSpec::paper_fleet(1),
+            None,
+            SupervisorPolicy::default(),
+            1,
+        )
+        .unwrap();
+        assert_eq!(sup.policy().attempt_timeout, Duration::from_millis(2));
+        assert_eq!(sup.policy().deadline, Duration::from_millis(8));
+    }
+
+    #[test]
+    fn empty_fleet_is_an_error_not_a_panic() {
+        let err = Supervisor::new(
+            FaultSchedule::calm(),
+            Vec::new(),
+            None,
+            SupervisorPolicy::default(),
+            1,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("at least one engine"), "{err}");
+    }
+
+    #[test]
+    fn health_machine_walks_degraded_down_and_back() {
+        let policy = SupervisorPolicy::default();
+        let mut s = EngineSlot::new(0, EngineSpec::paper(GlbVariant::SttAiUltra));
+        let t = |ms: u64| Tick::ZERO + Duration::from_millis(ms);
+        s.note_failure(t(1), 1, &policy);
+        assert_eq!(s.health, Health::Healthy, "one failure is not an episode");
+        s.note_failure(t(2), 1, &policy);
+        assert_eq!(s.health, Health::Degraded);
+        s.note_failure(t(3), 1, &policy);
+        s.note_failure(t(4), 1, &policy);
+        assert_eq!(s.health, Health::Down);
+        // Recovery climbs one level per `recover_after` passes.
+        s.note_pass(t(5), &policy);
+        assert_eq!(s.health, Health::Down);
+        s.note_pass(t(6), &policy);
+        assert_eq!(s.health, Health::Degraded);
+        s.note_pass(t(7), &policy);
+        s.note_pass(t(8), &policy);
+        assert_eq!(s.health, Health::Healthy);
+        // The full walk is logged in order.
+        let states: Vec<Health> = s.transitions.iter().map(|(_, h)| *h).collect();
+        assert_eq!(
+            states,
+            vec![Health::Degraded, Health::Down, Health::Degraded, Health::Healthy]
+        );
+        // A pass resets the failure streak: no flapping from stale counts.
+        s.note_failure(t(9), 1, &policy);
+        s.note_pass(t(10), &policy);
+        s.note_failure(t(11), 1, &policy);
+        assert_eq!(s.health, Health::Healthy);
+    }
+
+    #[test]
+    fn crash_failure_floors_the_engine_immediately() {
+        let policy = SupervisorPolicy::default();
+        let mut s = EngineSlot::new(0, EngineSpec::paper(GlbVariant::SttAiUltra));
+        s.note_failure(Tick::ZERO, policy.down_after, &policy);
+        assert_eq!(s.health, Health::Down, "crash weight skips Degraded dwell");
+        assert!(s.down_since.is_some());
+    }
+
+    #[test]
+    fn pick_engine_prefers_healthy_and_skips_down_tried_and_rebooting() {
+        let mut sup = Supervisor::new(
+            FaultSchedule::calm(),
+            EngineSpec::paper_fleet(4),
+            None,
+            SupervisorPolicy::default(),
+            1,
+        )
+        .unwrap();
+        let now = Tick::ZERO + Duration::from_millis(1);
+        // Round-robin over the healthy fleet.
+        assert_eq!(sup.pick_engine(&[], now), Some(0));
+        assert_eq!(sup.pick_engine(&[], now), Some(1));
+        // Degrade 2, floor 3, put 0 mid-reboot: only 1 is Healthy+ready.
+        sup.slots[2].set_health(Health::Degraded, now);
+        sup.slots[3].set_health(Health::Down, now);
+        sup.slots[0].ready_at = now + Duration::from_millis(1);
+        assert_eq!(sup.pick_engine(&[], now), Some(1));
+        // With 1 already tried, the Degraded engine is the fallback pick;
+        // Down and rebooting slots never serve.
+        assert_eq!(sup.pick_engine(&[1], now), Some(2));
+        assert_eq!(sup.pick_engine(&[1, 2], now), None);
+        // After the reboot window, slot 0 is dispatchable again.
+        assert_eq!(sup.pick_engine(&[1, 2], now + Duration::from_millis(2)), Some(0));
+    }
+
+    #[test]
+    fn calm_scenario_serves_everything_cleanly() {
+        let r = run_scenario("calm", 400, 1);
+        accounting_closes(&r);
+        assert_eq!(r.served, 400);
+        assert_eq!(r.availability, 100.0);
+        assert_eq!((r.dropped, r.retries, r.reroutes, r.fallbacks, r.reboots), (0, 0, 0, 0, 0));
+        assert!(
+            (r.est_accuracy - r.clean_accuracy).abs() < 1e-12,
+            "no faults, no accuracy gap: {} vs {}",
+            r.est_accuracy,
+            r.clean_accuracy
+        );
+        assert!(r.canaries > 0, "canaries probe even a calm fleet");
+        assert_eq!(r.canary_failures, 0);
+        for e in &r.engines {
+            assert_eq!(e.health, Health::Healthy);
+            assert!(e.transitions.is_empty(), "engine {} never left Healthy", e.id);
+        }
+        assert!(r.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn burst_ber_degrades_gracefully_and_reboots_to_fallback() {
+        let r = run_scenario("burst_ber", 2000, 1);
+        accounting_closes(&r);
+        // The golden story: availability holds through the storm...
+        assert!(r.availability >= 99.0, "availability {:.3}% < 99%", r.availability);
+        assert!(r.dropped <= 20, "dropped {}", r.dropped);
+        // ...the stall forces retries and reroutes...
+        assert!(r.retries > 0, "the engine-2 stall must force retries");
+        assert!(r.reroutes > 0, "stalled dispatches must reroute");
+        // ...and sustained canary failures walk engine 0 Degraded -> Down
+        // and reboot it onto the SRAM fallback.
+        assert!(r.fallbacks >= 1, "engine 0 must reboot onto the fallback");
+        let e0 = &r.engines[0];
+        assert!(e0.on_fallback);
+        let states: Vec<Health> = e0.transitions.iter().map(|(_, h)| *h).collect();
+        assert!(states.contains(&Health::Degraded) && states.contains(&Health::Down), "{states:?}");
+        assert!(r.canary_failures > 0);
+        // Storm traffic costs estimated accuracy.
+        assert!(r.est_accuracy <= r.clean_accuracy);
+    }
+
+    #[test]
+    fn crash_loop_floors_engine_zero_without_losing_the_fleet() {
+        let r = run_scenario("crash_loop", 1200, 1);
+        accounting_closes(&r);
+        assert!(r.availability >= 99.0, "availability {:.3}%", r.availability);
+        let e0 = &r.engines[0];
+        let states: Vec<Health> = e0.transitions.iter().map(|(_, h)| *h).collect();
+        assert!(states.contains(&Health::Down), "crashes must floor engine 0: {states:?}");
+    }
+
+    #[test]
+    fn reports_are_byte_identical_across_runs_and_worker_counts() {
+        let a = run_scenario("burst_ber", 800, 1);
+        let b = run_scenario("burst_ber", 800, 1);
+        let c = run_scenario("burst_ber", 800, 4);
+        assert_eq!(a.render(), b.render(), "same scenario, same report");
+        assert_eq!(a.render(), c.render(), "worker count must not leak into the report");
+        assert_eq!(a.to_json().to_string(), c.to_json().to_string());
+    }
+}

@@ -641,7 +641,7 @@ pub fn lsb_delta_for(glb_delta: f64) -> f64 {
 /// prediction — calibrated so the STT-AI Ultra budget (MSB 1e-8 / LSB 1e-5)
 /// lands at the paper's "<1 % normalized drop" while a uniformly relaxed
 /// 1e-5 budget collapses, which is exactly Fig. 21's contrast.
-const CATASTROPHIC_AMPLIFICATION: f64 = 1.0e4;
+pub const CATASTROPHIC_AMPLIFICATION: f64 = 1.0e4;
 
 /// Zoo lookup with a clean error for unknown names: `--from-selection`
 /// records and hand-edited configs carry arbitrary model strings, and an

@@ -39,6 +39,13 @@
 //! * [`coordinator`] — the L3 serving loop: request queue, dynamic batcher,
 //!   router, inference engine, metrics; boots from either a paper config or
 //!   a sweep-selected design point ([`dse::select::DesignSelection`]).
+//!   Includes the deterministic fault-injection harness
+//!   ([`coordinator::faults`]) and the graceful-degradation supervisor
+//!   ([`coordinator::supervisor`]): seeded fault schedules replayed on a
+//!   virtual [`util::clock::Clock`] against a multi-engine fleet whose
+//!   health states (Healthy → Degraded → Down → fallback reboot) are driven
+//!   by canary probes, with byte-identical availability reports at any
+//!   worker count.
 //! * [`report`] — figure/table renderers over the unified sweep records
 //!   (`report::legacy` keeps the frozen pre-refactor serial renderers as the
 //!   golden parity reference), plus CSV/JSON export.

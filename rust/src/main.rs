@@ -9,6 +9,9 @@
 //! * `design`            — solve a customized STT-MRAM design point.
 //! * `accuracy`          — Fig. 21 fault-injection evaluation on artifacts.
 //! * `serve`             — closed-loop batched inference with metrics.
+//! * `chaos`             — deterministic fault-injection run: a named
+//!   scenario replayed against a simulated engine fleet under the
+//!   graceful-degradation supervisor.
 //! * `init-config`       — write the three paper SystemConfigs as JSON.
 
 use std::io::Write;
@@ -58,6 +61,19 @@ COMMANDS:
   accuracy     [--artifacts DIR] [--prune 0.0] [--batch 16] [--limit N]
   serve        [--artifacts DIR] [--variant sram|stt_ai|stt_ai_ultra]
                [--from-selection FILE] [--requests 256] [--batch 16]
+               [--faults SCENARIO] [--parallel N]
+               (--faults switches to chaos mode: the scenario replays
+               against a simulated 3-engine fleet, no artifacts needed)
+  chaos        [--scenario burst_ber|FILE] [--config build.json]
+               [--requests 2000] [--batch 16] [--engines 3] [--seed N]
+               [--variant V] [--from-selection FILE]
+               [--fallback sram|stt_ai|stt_ai_ultra|none]
+               [--parallel N] [--report FILE]
+               deterministic fault-injection run: replay a seeded scenario
+               against a simulated engine fleet under the
+               graceful-degradation supervisor; the report is byte-identical
+               across runs and --parallel values (builtins: calm, burst_ber,
+               retention_storm, bank_takedown, crash_loop, latency_spike)
   montecarlo   [--samples 20000] [--seed N] [--parallel N]
                [--sweep axis=v1|v2,...] [--tech stt|wei2019]
                streaming PT Monte Carlo through the sweep engine
@@ -89,6 +105,34 @@ fn run_figure(n: u32, out: &mut impl Write, r: &Runner) -> std::io::Result<()> {
 fn parse_tech(s: &str) -> anyhow::Result<TechBase> {
     TechBase::from_token(s)
         .ok_or_else(|| anyhow::anyhow!("unknown tech {s:?} (stt, sot, sram, wei2019)"))
+}
+
+/// Clone the primary spec into an `n`-engine fleet and run one chaos
+/// scenario to completion on a virtual clock.
+fn run_chaos(
+    schedule: coordinator::FaultSchedule,
+    primary: coordinator::EngineSpec,
+    fallback: Option<coordinator::EngineSpec>,
+    engines: usize,
+    requests: usize,
+    batch: usize,
+    parallel: usize,
+) -> anyhow::Result<coordinator::FleetReport> {
+    let mut specs = Vec::with_capacity(engines);
+    for i in 0..engines {
+        let mut spec = primary.clone();
+        spec.label = format!("{}-{i}", primary.label);
+        specs.push(spec);
+    }
+    let mut sup = coordinator::Supervisor::new(
+        schedule,
+        specs,
+        fallback,
+        coordinator::SupervisorPolicy::default(),
+        parallel,
+    )?;
+    let cfg = coordinator::ChaosConfig { requests, batch, parallel, ..Default::default() };
+    sup.run(&cfg, &stt_ai::util::clock::Clock::virtual_at_zero())
 }
 
 /// Build the sweep runner from the shared `--parallel` / `--sweep` / `--tech`
@@ -374,6 +418,33 @@ fn main() -> anyhow::Result<()> {
             let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
             let requests = args.get_usize("requests", 256)?;
             let batch = args.get_usize("batch", 16)?;
+            if let Some(spec) = args.get("faults").map(str::to_string) {
+                // Chaos mode: replay the scenario against a simulated
+                // 3-engine fleet of this build under the supervisor. No
+                // artifacts are needed — the supervisor models service
+                // latency per spec and injects faults into canary probes.
+                let schedule = coordinator::FaultSchedule::parse(&spec)?;
+                let primary = match args.get("from-selection") {
+                    Some(path) => {
+                        if args.get("variant").is_some() {
+                            anyhow::bail!("--variant conflicts with --from-selection");
+                        }
+                        coordinator::EngineSpec::from_selection(&DesignSelection::load(
+                            Path::new(path),
+                        )?)
+                    }
+                    None => coordinator::EngineSpec::paper(parse_variant(
+                        args.get_or("variant", "stt_ai_ultra"),
+                    )?),
+                };
+                let parallel = args.get_usize("parallel", 1)?;
+                args.finish()?;
+                let _ = artifacts; // unused in chaos mode
+                let fallback = Some(coordinator::EngineSpec::paper(GlbVariant::Sram));
+                let rep = run_chaos(schedule, primary, fallback, 3, requests, batch, parallel)?;
+                write!(out, "{}", rep.render())?;
+                return Ok(());
+            }
             // The engine boots either from an explicit variant or from a
             // sweep-selected design point — never from both.
             let config = match args.get("from-selection") {
@@ -399,6 +470,64 @@ fn main() -> anyhow::Result<()> {
             let engine = Engine::load(&artifacts, config)?;
             let summary = coordinator::serve::closed_loop(&engine, requests, batch)?;
             writeln!(out, "{summary}")?;
+        }
+        "chaos" => {
+            let requests = args.get_usize("requests", 2000)?;
+            let batch = args.get_usize("batch", 16)?;
+            let engines = args.get_usize("engines", 3)?;
+            let parallel = args.get_usize("parallel", 1)?;
+            // Scenario resolution order: explicit --scenario (builtin name
+            // or JSON path), then the [faults] section of --config, then
+            // the burst_ber builtin.
+            let config = args
+                .get("config")
+                .map(|p| SystemConfig::load(Path::new(p)))
+                .transpose()?;
+            let mut schedule = match args.get("scenario") {
+                Some(spec) => coordinator::FaultSchedule::parse(spec)?,
+                None => match config.as_ref().and_then(|c| c.faults.clone()) {
+                    Some(sched) => sched,
+                    None => coordinator::FaultSchedule::builtin("burst_ber")
+                        .expect("burst_ber is a builtin"),
+                },
+            };
+            if let Some(seed) = args.get("seed") {
+                schedule.seed = seed
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad --seed {seed:?}: {e}"))?;
+            }
+            let primary = match args.get("from-selection") {
+                Some(path) => {
+                    if args.get("variant").is_some() {
+                        anyhow::bail!("--variant conflicts with --from-selection");
+                    }
+                    coordinator::EngineSpec::from_selection(&DesignSelection::load(Path::new(
+                        path,
+                    ))?)
+                }
+                None => {
+                    let variant = match (args.get("variant"), &config) {
+                        (Some(v), _) => parse_variant(v)?,
+                        (None, Some(c)) => c.glb,
+                        (None, None) => GlbVariant::SttAiUltra,
+                    };
+                    coordinator::EngineSpec::paper(variant)
+                }
+            };
+            let fallback = match args.get_or("fallback", "sram") {
+                "none" => None,
+                v => Some(coordinator::EngineSpec::paper(parse_variant(v)?)),
+            };
+            let report_path = args.get("report").map(PathBuf::from);
+            args.finish()?;
+            let rep = run_chaos(schedule, primary, fallback, engines, requests, batch, parallel)?;
+            write!(out, "{}", rep.render())?;
+            if let Some(path) = report_path {
+                let mut text = rep.to_json().to_string();
+                text.push('\n');
+                std::fs::write(&path, text)?;
+                writeln!(out, "-- wrote {path:?}")?;
+            }
         }
         "montecarlo" => {
             // Through the sweep engine: default grid is the two STT base

@@ -1,0 +1,163 @@
+//! Simulation-grade time: a monotonic [`Tick`] instant plus an injectable
+//! [`Clock`] that is either wall-backed (real serving) or virtual
+//! (discrete-event simulation, bit-reproducible at any worker count).
+//!
+//! The serving stack (`coordinator::{batcher, serve, metrics, supervisor}`)
+//! takes `Tick`/`Clock` instead of calling `std::time::Instant::now()`
+//! directly, so a fault scenario replayed under `Clock::virtual_at_zero()`
+//! produces byte-identical reports across runs and `--parallel` settings.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// A monotonic instant measured in nanoseconds since the clock's epoch.
+///
+/// `Tick` is to the simulated serving path what `std::time::Instant` is to
+/// wall-clock code: an opaque point in time supporting `+ Duration` and
+/// `duration_since`. Unlike `Instant` it is a plain integer, so virtual
+/// schedules are exactly reproducible.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Tick(u64);
+
+impl Tick {
+    /// The clock epoch (t = 0).
+    pub const ZERO: Tick = Tick(0);
+
+    /// Construct from nanoseconds since the epoch.
+    pub fn from_nanos(ns: u64) -> Tick {
+        Tick(ns)
+    }
+
+    /// Nanoseconds since the epoch.
+    pub fn as_nanos(self) -> u64 {
+        self.0
+    }
+
+    /// Elapsed time since `earlier`, saturating to zero if `earlier` is
+    /// actually later (mirrors `Instant::saturating_duration_since`).
+    pub fn duration_since(self, earlier: Tick) -> Duration {
+        Duration::from_nanos(self.0.saturating_sub(earlier.0))
+    }
+
+    /// `self - d`, or `None` if that would precede the epoch. Used to
+    /// back-date throughput anchors without wrapping.
+    pub fn checked_sub(self, d: Duration) -> Option<Tick> {
+        self.0.checked_sub(d.as_nanos() as u64).map(Tick)
+    }
+}
+
+impl std::ops::Add<Duration> for Tick {
+    type Output = Tick;
+    fn add(self, d: Duration) -> Tick {
+        Tick(self.0.saturating_add(d.as_nanos() as u64))
+    }
+}
+
+/// Injectable time source for the serving stack.
+///
+/// * [`Clock::wall`] — `now()` reads the real elapsed time since
+///   construction; `advance` sleeps. Used by live serving and examples.
+/// * [`Clock::virtual_at_zero`] — `now()` reads a counter; `advance`
+///   adds to it. Used by the fault-injection harness and tests, where it
+///   makes every schedule deterministic.
+#[derive(Debug)]
+pub enum Clock {
+    /// Wall-backed clock: ticks are nanoseconds since `epoch`.
+    Wall {
+        /// Construction instant; all ticks are measured from here.
+        epoch: Instant,
+    },
+    /// Virtual clock: ticks are whatever the harness says they are.
+    Virtual(AtomicU64),
+}
+
+impl Clock {
+    /// A wall-backed clock whose epoch is now.
+    pub fn wall() -> Clock {
+        Clock::Wall {
+            epoch: Instant::now(),
+        }
+    }
+
+    /// A virtual clock starting at `Tick::ZERO`.
+    pub fn virtual_at_zero() -> Clock {
+        Clock::Virtual(AtomicU64::new(0))
+    }
+
+    /// Current instant on this clock.
+    pub fn now(&self) -> Tick {
+        match self {
+            Clock::Wall { epoch } => Tick(epoch.elapsed().as_nanos() as u64),
+            Clock::Virtual(ns) => Tick(ns.load(Ordering::SeqCst)),
+        }
+    }
+
+    /// Advance time by `d`: sleeps on a wall clock, increments on a
+    /// virtual one. Returns the new `now()`.
+    pub fn advance(&self, d: Duration) -> Tick {
+        match self {
+            Clock::Wall { .. } => {
+                std::thread::sleep(d);
+                self.now()
+            }
+            Clock::Virtual(ns) => {
+                let add = d.as_nanos() as u64;
+                Tick(ns.fetch_add(add, Ordering::SeqCst).saturating_add(add))
+            }
+        }
+    }
+
+    /// Advance to at least `t` (no-op if already past). Returns `now()`.
+    pub fn advance_to(&self, t: Tick) -> Tick {
+        let now = self.now();
+        if t > now {
+            self.advance(t.duration_since(now))
+        } else {
+            now
+        }
+    }
+
+    /// True for virtual clocks (the simulated serving path).
+    pub fn is_virtual(&self) -> bool {
+        matches!(self, Clock::Virtual(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tick_arithmetic_round_trips() {
+        let t = Tick::ZERO + Duration::from_micros(5);
+        assert_eq!(t.as_nanos(), 5_000);
+        assert_eq!(t.duration_since(Tick::ZERO), Duration::from_micros(5));
+        // Saturating in the wrong direction.
+        assert_eq!(Tick::ZERO.duration_since(t), Duration::ZERO);
+        assert_eq!(t.checked_sub(Duration::from_micros(5)), Some(Tick::ZERO));
+        assert_eq!(t.checked_sub(Duration::from_micros(6)), None);
+    }
+
+    #[test]
+    fn virtual_clock_advances_exactly() {
+        let c = Clock::virtual_at_zero();
+        assert!(c.is_virtual());
+        assert_eq!(c.now(), Tick::ZERO);
+        let t = c.advance(Duration::from_millis(3));
+        assert_eq!(t.as_nanos(), 3_000_000);
+        assert_eq!(c.now(), t);
+        // advance_to backwards is a no-op.
+        assert_eq!(c.advance_to(Tick::ZERO), t);
+        let t2 = c.advance_to(Tick::from_nanos(5_000_000));
+        assert_eq!(t2.as_nanos(), 5_000_000);
+    }
+
+    #[test]
+    fn wall_clock_monotone() {
+        let c = Clock::wall();
+        assert!(!c.is_virtual());
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+}

@@ -4,6 +4,7 @@
 pub mod bench;
 pub mod bf16;
 pub mod cli;
+pub mod clock;
 pub mod json;
 pub mod pool;
 pub mod rng;

@@ -1,0 +1,146 @@
+//! Integration coverage of the deterministic fault-injection harness
+//! (EXPERIMENTS.md §Robustness): the committed golden scenario parses
+//! equal to its builtin, chaos reports are byte-identical across runs and
+//! worker counts, the burst_ber storm degrades gracefully (retries,
+//! reroutes, SRAM fallback, availability ≥ 99 %), and the `[faults]`
+//! config section feeds the same run as the builtin token.
+
+use stt_ai::config::{GlbVariant, SystemConfig, TechBase};
+use stt_ai::coordinator::faults::storm_ber;
+use stt_ai::coordinator::{
+    ChaosConfig, EngineSpec, FaultSchedule, FleetReport, Health, Supervisor, SupervisorPolicy,
+};
+use stt_ai::util::clock::Clock;
+
+const GOLDEN: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/golden/chaos_burst_ber.scenario.json");
+
+fn run_schedule(schedule: FaultSchedule, requests: usize, parallel: usize) -> FleetReport {
+    let specs = EngineSpec::paper_fleet(3);
+    let fallback = Some(EngineSpec::paper(GlbVariant::Sram));
+    let mut sup =
+        Supervisor::new(schedule, specs, fallback, SupervisorPolicy::default(), parallel)
+            .expect("fleet is non-empty");
+    let cfg = ChaosConfig { requests, parallel, ..Default::default() };
+    sup.run(&cfg, &Clock::virtual_at_zero()).expect("chaos run")
+}
+
+fn run_scenario(name: &str, requests: usize, parallel: usize) -> FleetReport {
+    run_schedule(FaultSchedule::builtin(name).expect("builtin scenario"), requests, parallel)
+}
+
+/// Every request is accounted for exactly once, and the per-engine served
+/// counts cover the fleet total.
+fn accounting_closes(r: &FleetReport) {
+    assert_eq!(
+        r.offered,
+        r.served + r.dropped + r.rejected + r.malformed,
+        "accounting leak in {}",
+        r.scenario
+    );
+    let per_engine: u64 = r.engines.iter().map(|e| e.served).sum();
+    assert_eq!(r.served, per_engine, "engine ledger mismatch in {}", r.scenario);
+}
+
+/// The committed golden scenario file is the burst_ber builtin, field for
+/// field — and serializes back to the identical canonical JSON.
+#[test]
+fn golden_scenario_file_matches_the_builtin() {
+    let parsed = FaultSchedule::parse(GOLDEN).expect("golden scenario parses");
+    let builtin = FaultSchedule::builtin("burst_ber").unwrap();
+    assert_eq!(parsed, builtin);
+    assert_eq!(parsed.to_json().to_string(), builtin.to_json().to_string());
+}
+
+/// Same scenario + seed → byte-identical reports across consecutive runs
+/// and across `--parallel` worker counts (the acceptance gate for the
+/// harness being deterministic, not merely statistically similar).
+#[test]
+fn reports_are_byte_identical_across_runs_and_worker_counts() {
+    let a = run_scenario("burst_ber", 600, 1);
+    let b = run_scenario("burst_ber", 600, 1);
+    let c = run_scenario("burst_ber", 600, 4);
+    assert_eq!(a.render(), b.render(), "consecutive runs diverged");
+    assert_eq!(a.render(), c.render(), "worker count leaked into the report");
+    assert_eq!(a.to_json().to_string(), c.to_json().to_string());
+}
+
+/// The golden storm end-to-end: the fleet retries and reroutes around the
+/// sick engines, reboots engine 0 onto the SRAM fallback, and still serves
+/// ≥ 99 % of offered load with zero panics.
+#[test]
+fn burst_ber_storm_degrades_gracefully() {
+    let r = run_scenario("burst_ber", 2000, 1);
+    accounting_closes(&r);
+    assert_eq!(r.offered, 2000);
+    assert!(r.availability >= 99.0, "availability {:.3} < 99%", r.availability);
+    assert!(r.retries > 0, "the stall window must force retries");
+    assert!(r.reroutes > 0, "retries must land on a different engine");
+    assert!(r.fallbacks >= 1, "engine 0 must reboot onto the SRAM fallback");
+    assert!(r.canary_failures > 0, "canaries must observe the BER storm");
+    let e0 = &r.engines[0];
+    assert!(e0.on_fallback, "engine 0 ends the run on the fallback spec");
+    let states: Vec<Health> = e0.transitions.iter().map(|&(_, h)| h).collect();
+    assert!(states.contains(&Health::Degraded) && states.contains(&Health::Down));
+    assert!(r.est_accuracy <= r.clean_accuracy + 1e-12);
+    assert!(r.p99_us >= r.p50_us && r.max_us >= r.p99_us);
+}
+
+/// The calm control run: nothing degrades, nothing retries, accuracy is
+/// the clean-BER estimate.
+#[test]
+fn calm_control_run_is_clean() {
+    let r = run_scenario("calm", 400, 1);
+    accounting_closes(&r);
+    assert_eq!(r.served, 400);
+    assert_eq!(r.availability, 100.0);
+    assert_eq!((r.dropped, r.retries, r.reroutes, r.fallbacks, r.reboots), (0, 0, 0, 0, 0));
+    assert_eq!(r.canary_failures, 0);
+    assert!((r.est_accuracy - r.clean_accuracy).abs() < 1e-12);
+    for e in &r.engines {
+        assert_eq!(e.health, Health::Healthy, "{}", e.label);
+        assert!(e.transitions.is_empty(), "{}", e.label);
+    }
+}
+
+/// Every builtin scenario runs to completion with closed accounting — the
+/// harness never panics under any committed fault pattern.
+#[test]
+fn every_builtin_scenario_survives() {
+    for name in FaultSchedule::builtin_names() {
+        let r = run_scenario(name, 300, 1);
+        accounting_closes(&r);
+        assert_eq!(r.offered, 300, "{name}");
+        assert!(r.served > 0, "{name}: fleet served nothing");
+    }
+}
+
+/// A `[faults]` section in a SystemConfig drives the identical run as the
+/// builtin token it carries.
+#[test]
+fn config_faults_section_feeds_the_chaos_run() {
+    let mut cfg = SystemConfig::paper_stt_ai_ultra();
+    cfg.faults = Some(FaultSchedule::builtin("latency_spike").unwrap());
+    let back = SystemConfig::from_json(&cfg.to_json()).expect("config roundtrip");
+    let schedule = back.faults.expect("faults section survives the roundtrip");
+    let a = run_schedule(schedule, 300, 1);
+    let b = run_scenario("latency_spike", 300, 1);
+    assert_eq!(a.render(), b.render());
+}
+
+/// Retention-storm BER closed form: zero base stays zero (volatile banks
+/// are immune), the storm never shrinks the BER, deeper derates only grow
+/// it, and the ceiling is the coin-flip 0.5.
+#[test]
+fn storm_ber_is_monotone_and_capped() {
+    let tech = TechBase::from_token("stt").expect("stt tech");
+    assert_eq!(storm_ber(tech, 60.0, 0.0, 1.5), 0.0);
+    let base = 1.0e-8;
+    let mut last = base;
+    for derate in [1.0, 1.2, 1.5, 2.0, 4.0] {
+        let b = storm_ber(tech, 60.0, base, derate);
+        assert!(b >= last, "derate {derate}: {b:.3e} < {last:.3e}");
+        assert!(b <= 0.5);
+        last = b;
+    }
+    assert_eq!(storm_ber(tech, 500.0, 1.0e-3, 8.0), 0.5, "deep storms hit the cap");
+}

@@ -124,6 +124,17 @@ fn serve_closed_loop_reports_metrics() {
 }
 
 #[test]
+fn serve_closed_loop_zero_requests_is_well_formed() {
+    // Regression: n_requests = 0 must produce a complete empty summary
+    // through the real engine path, not hang or divide by zero.
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::load(&dir, EngineConfig::new(GlbVariant::SttAi)).unwrap();
+    let summary = serve::closed_loop(&engine, 0, 16).unwrap();
+    assert!(summary.starts_with("served 0 requests"), "{summary}");
+    assert!(summary.contains("requests=0"), "{summary}");
+}
+
+#[test]
 fn batch1_and_batch16_agree() {
     let Some(dir) = artifacts() else { return };
     let engine = Engine::load(&dir, EngineConfig::new(GlbVariant::Sram)).unwrap();

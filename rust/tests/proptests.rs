@@ -115,11 +115,12 @@ fn prop_batcher_never_loses_or_reorders() {
         let max_batch = 1 + rng.below(8) as usize;
         let mut b = Batcher::new(max_batch, std::time::Duration::ZERO, 1, usize::MAX);
         let n = 1 + rng.below(64);
+        let now = stt_ai::util::clock::Tick::ZERO;
         for id in 0..n {
-            assert!(b.push(Request::new(id, vec![0.0])));
+            assert!(b.push(Request::new(id, vec![0.0], now)));
         }
         let mut seen = Vec::new();
-        while let Some(batch) = b.form(max_batch, std::time::Instant::now()) {
+        while let Some(batch) = b.form(max_batch, now) {
             assert!(batch.real <= max_batch);
             assert_eq!(batch.images.len(), max_batch);
             seen.extend(batch.ids);
