@@ -1,0 +1,105 @@
+//! Fleet-simulator hot paths (EXPERIMENTS.md §Fleet simulation): the full
+//! open-loop Poisson run on the virtual clock (events/s at 1e6 requests),
+//! the bursty heterogeneous fleet, steady-state allocation behavior, and a
+//! byte-identity determinism cross-check.
+//!
+//! Flags (mixed with harness flags, all optional): `--smoke` reduced
+//! budget for CI, `--bench-json PATH` machine-readable trajectory output.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use stt_ai::config::GlbVariant;
+use stt_ai::coordinator::{ArrivalTrace, EngineSpec, FleetConfig, FleetSim, FleetSimReport};
+use stt_ai::util::bench::{self, Bencher, Ledger};
+use stt_ai::util::clock::Clock;
+
+/// Counting allocator: every heap allocation anywhere in the process bumps
+/// one counter, which is how the per-event allocation budget is measured
+/// rather than asserted.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn run(trace: &str, specs: Vec<EngineSpec>, requests: usize, parallel: usize) -> FleetSimReport {
+    let trace = ArrivalTrace::builtin(trace).expect("builtin trace");
+    let cfg = FleetConfig { requests, parallel, ..Default::default() };
+    let mut sim = FleetSim::new(trace, specs, cfg).expect("fleet");
+    sim.run(&Clock::virtual_at_zero()).expect("fleet run")
+}
+
+fn main() {
+    let smoke = bench::smoke_from_args();
+    let n: usize = if smoke { 20_000 } else { 1_000_000 };
+    let b = if smoke {
+        Bencher { sample_target_s: 0.02, samples: 3 }
+    } else {
+        Bencher::new()
+    };
+    let mut ledger = Ledger::new();
+
+    // The headline run: open-loop Poisson arrivals through three Ultra
+    // engines — every sample replays the full event schedule from epoch.
+    let label = format!("fleet/poisson_{}k_3xultra", n / 1000);
+    let r = b.run(&label, || run("poisson", EngineSpec::paper_fleet(3), n, 1));
+    ledger.add_throughput(&label, &r, n as f64, "requests");
+    let rep = run("poisson", EngineSpec::paper_fleet(3), n, 1);
+    println!(
+        "    -> {:.2} Mevents/s ({} events for {} requests)",
+        rep.events as f64 * 1e3 / r.median_ns,
+        rep.events,
+        n
+    );
+
+    // The hetero storm: SRAM island + two Ultras under the bursty MMPP.
+    let hetero = || {
+        vec![
+            EngineSpec::paper(GlbVariant::Sram),
+            EngineSpec::paper(GlbVariant::SttAiUltra),
+            EngineSpec::paper(GlbVariant::SttAiUltra),
+        ]
+    };
+    let hn = if smoke { 10_000 } else { 200_000 };
+    let label = format!("fleet/bursty_{}k_hetero", hn / 1000);
+    let r = b.run(&label, || run("bursty", hetero(), hn, 1));
+    ledger.add_throughput(&label, &r, hn as f64, "requests");
+
+    // Determinism cross-check inside the bench binary: the worker knob
+    // must not change a byte of the report.
+    let a = run("bursty", hetero(), hn, 1);
+    let c = run("bursty", hetero(), hn, 4);
+    assert_eq!(a.render(), c.render(), "--parallel leaked into the report");
+
+    // Steady-state allocations: the budget is O(1) per event (queue rows,
+    // batch assembly, wake scheduling) — not O(fleet) or O(history).
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let rep = std::hint::black_box(run("poisson", EngineSpec::paper_fleet(3), n, 1));
+    let during = ALLOCS.load(Ordering::Relaxed) - before;
+    let per_event = during as f64 / rep.events as f64;
+    println!(
+        "    -> {} allocations / {} events = {:.2} per event ({:.2} per request)",
+        during,
+        rep.events,
+        per_event,
+        during as f64 / n as f64
+    );
+    if !smoke {
+        assert!(per_event < 64.0, "allocation budget blew up: {per_event:.1} per event");
+    }
+
+    bench::finish(&ledger);
+}

@@ -426,6 +426,11 @@ pub struct SystemConfig {
     /// scenario the chaos harness replays against this build
     /// (`stt-ai serve --faults` / `stt-ai chaos`). Absent by default.
     pub faults: Option<crate::coordinator::faults::FaultSchedule>,
+    /// Optional arrival-trace section (`[traffic]`): a named, seeded
+    /// open-loop trace the fleet simulator offers against this build
+    /// (`stt-ai fleet`, default when `--trace` is not given). Absent by
+    /// default.
+    pub traffic: Option<crate::coordinator::traffic::ArrivalTrace>,
 }
 
 /// Serializable datatype.
@@ -458,6 +463,7 @@ impl SystemConfig {
             serving: ServingConfig::default(),
             deployment: DeploymentConfig::default(),
             faults: None,
+            traffic: None,
         }
     }
 
@@ -554,6 +560,9 @@ impl SystemConfig {
         if let Some(f) = &self.faults {
             fields.push(("faults", f.to_json()));
         }
+        if let Some(t) = &self.traffic {
+            fields.push(("traffic", t.to_json()));
+        }
         Json::obj(fields)
     }
 
@@ -615,6 +624,9 @@ impl SystemConfig {
         }
         if let Some(f) = j.get("faults") {
             cfg.faults = Some(crate::coordinator::faults::FaultSchedule::from_json(f)?);
+        }
+        if let Some(t) = j.get("traffic") {
+            cfg.traffic = Some(crate::coordinator::traffic::ArrivalTrace::from_json(t)?);
         }
         Ok(cfg)
     }
@@ -680,6 +692,24 @@ mod tests {
         assert!(text.contains("\"faults\""), "{text}");
         let back = SystemConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.faults, c.faults);
+        assert_eq!(back.to_json().to_string(), text, "byte-stable");
+    }
+
+    #[test]
+    fn traffic_section_roundtrips_and_defaults_to_none() {
+        // No [traffic] section in the paper configs or their serialization.
+        let c = SystemConfig::paper_stt_ai_ultra();
+        assert!(c.traffic.is_none());
+        assert!(!c.to_json().to_string().contains("\"traffic\""));
+        let back = SystemConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
+        assert!(back.traffic.is_none());
+        // With a trace attached, the section roundtrips exactly.
+        let mut c = c;
+        c.traffic = Some(crate::coordinator::traffic::ArrivalTrace::builtin("bursty").unwrap());
+        let text = c.to_json().to_string();
+        assert!(text.contains("\"traffic\""), "{text}");
+        let back = SystemConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.traffic, c.traffic);
         assert_eq!(back.to_json().to_string(), text, "byte-stable");
     }
 

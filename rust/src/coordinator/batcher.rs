@@ -42,6 +42,10 @@ pub struct Batch {
     pub capacity: usize,
     /// Queueing delay of the oldest request in the batch.
     pub oldest_wait: Duration,
+    /// Arrival instant of each real row (parallel to `ids`) — the fleet
+    /// simulator turns these into per-request sojourn latencies when the
+    /// batch completes.
+    pub enqueued: Vec<Tick>,
 }
 
 /// The batcher. Synchronous core (easily driven from a tokio task — see
@@ -119,6 +123,7 @@ impl Batcher {
         let take = self.queue.len().min(capacity);
         let mut ids = Vec::with_capacity(take);
         let mut images = Vec::with_capacity(capacity * self.image_elems);
+        let mut enqueued = Vec::with_capacity(take);
         let mut oldest = Duration::ZERO;
         for _ in 0..take {
             // `take <= queue.len()` by construction, but a sick invariant
@@ -126,11 +131,12 @@ impl Batcher {
             let Some(r) = self.queue.pop_front() else { break };
             oldest = oldest.max(now.duration_since(r.enqueued));
             ids.push(r.id);
+            enqueued.push(r.enqueued);
             images.extend_from_slice(&r.image);
         }
         let real = ids.len();
         images.resize(capacity * self.image_elems, 0.0);
-        Some(Batch { ids, images, real, capacity, oldest_wait: oldest })
+        Some(Batch { ids, images, real, capacity, oldest_wait: oldest, enqueued })
     }
 }
 
@@ -171,6 +177,8 @@ mod tests {
         assert_eq!(batch.real, 1);
         assert_eq!(batch.capacity, 4);
         assert_eq!(batch.oldest_wait, Duration::from_millis(10));
+        // Per-row arrival instants cover exactly the real rows.
+        assert_eq!(batch.enqueued, vec![Tick::ZERO]);
         // Padding rows are zeros.
         assert!(batch.images[4..].iter().all(|&x| x == 0.0));
     }

@@ -1,0 +1,976 @@
+//! Discrete-event fleet simulator: open-loop arrivals, heterogeneous
+//! engines, SLO-aware routing, and streaming tail metrics at O(1) memory.
+//!
+//! Where [`super::serve`] drives one engine closed-loop (every request
+//! queued at t = 0) and [`super::supervisor`] serializes a fault scenario
+//! through one dispatch path, the fleet simulator is the general form: a
+//! single event heap on a virtual [`Clock`] interleaves
+//!
+//! * **arrivals** from an open-loop [`ArrivalTrace`] generator (Poisson,
+//!   diurnal, bursty, uniform, or the degenerate closed pattern),
+//! * **completions** of in-flight batches, one per shard at a time (each
+//!   engine is a serial device with its modeled [`EngineSpec::service`]
+//!   latency),
+//! * **wakes** for shards holding a partial batch whose window deadline is
+//!   the next interesting instant, and
+//! * **autoscale** rounds that activate or retire engines on queue-depth
+//!   hysteresis with a per-engine warm-up.
+//!
+//! Routing is least-outstanding with an SLO-aware fallback: when even the
+//! emptiest shard's projected completion (warm-up residue plus
+//! `ceil((outstanding+1)/batch)` service quanta) exceeds the SLO, the
+//! request instead goes to the shard with the *smallest projection* — in a
+//! heterogeneous fleet that is the fast SRAM island, which is exactly the
+//! paper's case for keeping one latency-optimal build next to the
+//! energy-optimal STT-AI Ultra pool.
+//!
+//! Per-request sojourn latencies and per-request energy stream into
+//! fixed-footprint [`QuantileSketch`]es (relative error ≤ 1/64), merged in
+//! shard order into the fleet report — memory stays O(1) from 1e6 to 1e8
+//! requests and the merged report is byte-identical across reruns and
+//! `--parallel` settings (the simulation itself is single-threaded; the
+//! flag is accepted for CLI symmetry with `serve`/`chaos` and must not
+//! change a byte).
+//!
+//! A [`FaultSchedule`] can ride along as a fleet policy: a crashed or
+//! stalled engine refuses dispatch (the batch stays queued and the shard
+//! retries a window later), and a latency-spike fault stretches service
+//! time — composing the chaos DSL with open-loop traffic.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::time::Duration;
+
+use crate::util::clock::{Clock, Tick};
+use crate::util::json::Json;
+use crate::util::stats::QuantileSketch;
+
+use super::batcher::{Batch, Batcher, Request};
+use super::faults::FaultSchedule;
+use super::metrics::Metrics;
+use super::router::{Router, RouterPolicy};
+use super::serve;
+use super::supervisor::EngineSpec;
+use super::traffic::{ArrivalGen, ArrivalTrace};
+
+/// Fleet-level scheduling knobs (routing SLO + autoscaler hysteresis).
+#[derive(Debug, Clone, Copy)]
+pub struct FleetPolicy {
+    /// Per-request sojourn target: routing falls back to the fastest
+    /// projection when the least-loaded shard would miss it, and every
+    /// completed request is checked against it for the violation count.
+    pub slo: Duration,
+    /// Autoscaler cadence.
+    pub scale_period: Duration,
+    /// Delay between activating an engine and its first dispatch.
+    pub warmup: Duration,
+    /// Scale up when total queued requests exceed this many per active
+    /// engine.
+    pub up_per_engine: usize,
+    /// Scale down when total queued requests fall below this many per
+    /// active engine (hysteresis band: `down < up`).
+    pub down_per_engine: usize,
+    /// Never scale below this many active engines.
+    pub min_engines: usize,
+}
+
+impl Default for FleetPolicy {
+    fn default() -> Self {
+        Self {
+            slo: Duration::from_millis(10),
+            scale_period: Duration::from_millis(5),
+            warmup: Duration::from_millis(2),
+            up_per_engine: 32,
+            down_per_engine: 4,
+            min_engines: 1,
+        }
+    }
+}
+
+/// Fleet-run shape: offered load, batching knobs, and optional policies.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Total requests offered by the arrival trace.
+    pub requests: usize,
+    /// Max batch (largest compiled variant of every shard's ladder).
+    pub batch: usize,
+    /// Synthetic image elements per request.
+    pub image_elems: usize,
+    /// Per-shard queue depth (backpressure bound).
+    pub queue_depth: usize,
+    /// Batching window (also each shard router's deadline).
+    pub window: Duration,
+    /// Start with `policy.min_engines` active and let the autoscaler manage
+    /// the rest; `false` keeps every engine active from t = 0.
+    pub autoscale: bool,
+    /// Accepted for CLI symmetry with `serve`/`chaos`. The simulation is
+    /// single-threaded; any value produces the identical report.
+    pub parallel: usize,
+    pub policy: FleetPolicy,
+    /// Optional chaos composition: crashed/stalled engines refuse
+    /// dispatch, latency faults stretch service time.
+    pub faults: Option<FaultSchedule>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            requests: 20_000,
+            batch: 16,
+            image_elems: 4,
+            queue_depth: 4096,
+            window: Duration::from_micros(500),
+            autoscale: false,
+            parallel: 1,
+            policy: FleetPolicy::default(),
+            faults: None,
+        }
+    }
+}
+
+/// One batch in service on a shard (the payload of its completion event).
+#[derive(Debug, Clone)]
+struct Inflight {
+    real: usize,
+    capacity: usize,
+    /// Arrival instant of each real row — sojourn latency is completion
+    /// minus arrival, per request.
+    enqueued: Vec<Tick>,
+}
+
+#[derive(Debug)]
+enum EventKind {
+    /// The next trace arrival (exactly one in the heap at a time).
+    Arrival,
+    /// A shard finishes its in-service batch.
+    Complete { shard: usize, job: Inflight },
+    /// Re-scan a shard holding queued work (window deadline, warm-up end,
+    /// or fault-retry instant).
+    Wake { shard: usize },
+    /// One autoscaler round.
+    Autoscale,
+}
+
+/// Heap entry. Ordered by `(at, seq)` only — `seq` is the global insertion
+/// counter, so simultaneous events pop in creation order and the schedule
+/// is fully deterministic.
+#[derive(Debug)]
+struct Event {
+    at: Tick,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        (self.at, self.seq) == (other.at, other.seq)
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+/// One engine shard: spec + queue + per-shard streaming metrics.
+struct Shard {
+    spec: EngineSpec,
+    batcher: Batcher,
+    router: Router,
+    /// Per-request sojourn latency (µs).
+    latency: QuantileSketch,
+    /// Per-request GLB energy (pJ — integer-exact for the paper's
+    /// 1e-4 J-class figures, and mergeable like any sketch).
+    energy_pj: QuantileSketch,
+    served: u64,
+    batches: u64,
+    padded: u64,
+    slo_violations: u64,
+    /// Dispatches refused because the fault schedule had the engine
+    /// crashed or stalled at that instant.
+    fault_blocked: u64,
+    /// Queued + in-service requests (the routing signal).
+    outstanding: usize,
+    peak_outstanding: usize,
+    /// Completion instant of the batch in service (a shard is a serial
+    /// device: one batch at a time).
+    busy_until: Option<Tick>,
+    /// Inactive shards receive no traffic until the autoscaler wakes them.
+    active: bool,
+    /// First dispatchable instant after (re)activation.
+    warm_at: Tick,
+    /// Times the autoscaler activated this shard.
+    warm_boots: u64,
+    /// Pending Wake event instant (at most one per shard in the heap).
+    wake_at: Option<Tick>,
+}
+
+/// The discrete-event fleet simulator. Build with [`FleetSim::new`], run
+/// once with [`FleetSim::run`].
+pub struct FleetSim {
+    trace: ArrivalTrace,
+    cfg: FleetConfig,
+    shards: Vec<Shard>,
+    heap: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+    arrived: usize,
+    events: u64,
+    scale_ups: u64,
+    scale_downs: u64,
+    image: Vec<f32>,
+}
+
+impl FleetSim {
+    /// Build a simulator over `specs` (shard order = engine index, also the
+    /// deterministic sketch-merge order of the report).
+    pub fn new(
+        trace: ArrivalTrace,
+        specs: Vec<EngineSpec>,
+        cfg: FleetConfig,
+    ) -> crate::Result<Self> {
+        if specs.is_empty() {
+            anyhow::bail!("fleet: need at least one engine spec");
+        }
+        let mut ladder = Vec::new();
+        let mut bsz = 1;
+        while bsz < cfg.batch {
+            ladder.push(bsz);
+            bsz *= 2;
+        }
+        ladder.push(cfg.batch);
+        let min_active = cfg.policy.min_engines.max(1);
+        let shards = specs
+            .into_iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let router = Router::new(
+                    ladder.clone(),
+                    RouterPolicy { fill_threshold: 1.0, max_wait: cfg.window },
+                )?;
+                Ok(Shard {
+                    spec,
+                    batcher: Batcher::new(cfg.batch, cfg.window, cfg.image_elems, cfg.queue_depth),
+                    router,
+                    latency: QuantileSketch::new(),
+                    energy_pj: QuantileSketch::new(),
+                    served: 0,
+                    batches: 0,
+                    padded: 0,
+                    slo_violations: 0,
+                    fault_blocked: 0,
+                    outstanding: 0,
+                    peak_outstanding: 0,
+                    busy_until: None,
+                    active: !cfg.autoscale || i < min_active,
+                    warm_at: Tick::ZERO,
+                    warm_boots: 0,
+                    wake_at: None,
+                })
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        let image = vec![0.5f32; cfg.image_elems];
+        Ok(Self {
+            trace,
+            cfg,
+            shards,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            arrived: 0,
+            events: 0,
+            scale_ups: 0,
+            scale_downs: 0,
+            image,
+        })
+    }
+
+    fn push_event(&mut self, at: Tick, kind: EventKind) {
+        self.seq += 1;
+        self.heap.push(Reverse(Event { at, seq: self.seq, kind }));
+    }
+
+    /// Schedule a re-scan of shard `i` at `at`, unless a Wake for it is
+    /// already in the heap (at most one per shard; a too-early wake is a
+    /// harmless extra scan, a too-late one only delays the dispatch it
+    /// would have found — either way the schedule stays deterministic).
+    fn schedule_wake(&mut self, i: usize, at: Tick) {
+        if self.shards[i].wake_at.is_some() {
+            return;
+        }
+        self.shards[i].wake_at = Some(at);
+        self.push_event(at, EventKind::Wake { shard: i });
+    }
+
+    /// Projected completion of one more request routed to shard `i` now:
+    /// warm-up residue plus whole service quanta for the batches ahead of
+    /// it. Conservative (ignores partially-elapsed service) but monotone in
+    /// queue depth, which is all the balancer needs.
+    fn projected(&self, i: usize, now: Tick) -> Duration {
+        let s = &self.shards[i];
+        let batch = s.router.largest().batch.max(1);
+        let ahead = (s.outstanding + 1).div_ceil(batch) as u32;
+        s.warm_at.duration_since(now) + s.spec.service * ahead
+    }
+
+    /// Route one arrival: least-outstanding active shard (ties to the
+    /// lowest index); when even that shard's projection misses the SLO,
+    /// fall back to the globally fastest projection — the fast island of a
+    /// heterogeneous fleet.
+    fn route(&self, now: Tick) -> usize {
+        let mut least = usize::MAX;
+        let mut least_out = usize::MAX;
+        for (i, s) in self.shards.iter().enumerate() {
+            if s.active && s.outstanding < least_out {
+                least = i;
+                least_out = s.outstanding;
+            }
+        }
+        debug_assert!(least != usize::MAX, "min_engines >= 1 keeps one shard active");
+        if self.projected(least, now) <= self.cfg.policy.slo {
+            return least;
+        }
+        let mut fast = least;
+        let mut fast_proj = self.projected(least, now);
+        for (i, s) in self.shards.iter().enumerate() {
+            if !s.active || i == least {
+                continue;
+            }
+            let p = self.projected(i, now);
+            if p < fast_proj {
+                fast = i;
+                fast_proj = p;
+            }
+        }
+        fast
+    }
+
+    /// One autoscaler round: queue-depth hysteresis. Scale-up activates the
+    /// lowest-index inactive shard (warm after `warmup`); scale-down
+    /// retires the highest-index active shard that is fully idle.
+    fn autoscale_round(&mut self, now: Tick) {
+        let p = self.cfg.policy;
+        let active = self.shards.iter().filter(|s| s.active).count();
+        let queued: usize = self.shards.iter().map(|s| s.batcher.pending()).sum();
+        if queued > p.up_per_engine * active {
+            if let Some(i) = self.shards.iter().position(|s| !s.active) {
+                let s = &mut self.shards[i];
+                s.active = true;
+                s.warm_at = now + p.warmup;
+                s.warm_boots += 1;
+                self.scale_ups += 1;
+            }
+        } else if active > p.min_engines.max(1) && queued < p.down_per_engine * active {
+            let idle = self
+                .shards
+                .iter()
+                .rposition(|s| s.active && s.batcher.pending() == 0 && s.busy_until.is_none());
+            if let Some(i) = idle {
+                self.shards[i].active = false;
+                self.scale_downs += 1;
+            }
+        }
+    }
+
+    /// All offered traffic admitted and fully drained?
+    fn finished(&self) -> bool {
+        self.arrived >= self.cfg.requests
+            && self
+                .shards
+                .iter()
+                .all(|s| s.batcher.pending() == 0 && s.busy_until.is_none())
+    }
+
+    /// Scan every shard for dispatchable work; schedule completions for
+    /// what fires and wakes for what must wait.
+    fn pump(&mut self, now: Tick) {
+        for i in 0..self.shards.len() {
+            let s = &self.shards[i];
+            if !s.active || s.busy_until.is_some() || s.batcher.pending() == 0 {
+                continue;
+            }
+            if s.warm_at > now {
+                self.schedule_wake(i, self.shards[i].warm_at);
+                continue;
+            }
+            let Some(capacity) = serve::next_dispatch(&s.batcher, &s.router, now) else {
+                // Partial batch inside the window: the next interesting
+                // instant is its deadline (mirrors `serve::drain`'s
+                // bounded tail wait).
+                let deadline = s.batcher.window.max(s.router.policy.max_wait);
+                let wait = deadline
+                    .saturating_sub(s.batcher.oldest_wait(now))
+                    .max(Duration::from_nanos(1));
+                self.schedule_wake(i, now + wait);
+                continue;
+            };
+            let eff = self.cfg.faults.as_ref().map(|f| {
+                f.effective(i, now, s.spec.ber, s.spec.tech, s.spec.glb_delta, s.spec.lsb_delta)
+            });
+            if eff.as_ref().is_some_and(|e| e.crashed || e.stalled) {
+                // The engine holds its queue and retries a window later.
+                self.shards[i].fault_blocked += 1;
+                let at = now + self.cfg.window.max(Duration::from_nanos(1));
+                self.schedule_wake(i, at);
+                continue;
+            }
+            let mult = eff.map_or(1.0, |e| e.latency_mult.max(0.0));
+            let s = &mut self.shards[i];
+            let Some(b) = s.batcher.form(capacity, now) else { continue };
+            let service = s.spec.service.mul_f64(mult).max(Duration::from_nanos(1));
+            let done = now + service;
+            s.busy_until = Some(done);
+            let Batch { real, capacity, enqueued, .. } = b;
+            let job = Inflight { real, capacity, enqueued };
+            self.push_event(done, EventKind::Complete { shard: i, job });
+        }
+    }
+
+    /// Run the simulation to completion on `clock` (virtual for
+    /// reproducibility; the CLI always injects [`Clock::virtual_at_zero`]).
+    pub fn run(&mut self, clock: &Clock) -> crate::Result<FleetSimReport> {
+        let epoch = clock.now();
+        let mut gen = ArrivalGen::new(&self.trace);
+        if self.cfg.requests > 0 {
+            let at = epoch + gen.next_offset();
+            self.push_event(at, EventKind::Arrival);
+        }
+        if self.cfg.autoscale {
+            self.push_event(epoch + self.cfg.policy.scale_period, EventKind::Autoscale);
+        }
+        while let Some(Reverse(ev)) = self.heap.pop() {
+            clock.advance_to(ev.at);
+            let now = clock.now();
+            self.events += 1;
+            match ev.kind {
+                EventKind::Arrival => {
+                    let idx = self.route(now);
+                    let id = self.arrived as u64;
+                    let image = self.image.clone();
+                    let s = &mut self.shards[idx];
+                    if s.batcher.push(Request::new(id, image, now)) {
+                        s.outstanding += 1;
+                        s.peak_outstanding = s.peak_outstanding.max(s.outstanding);
+                    }
+                    self.arrived += 1;
+                    if self.arrived < self.cfg.requests {
+                        let at = epoch + gen.next_offset();
+                        self.push_event(at, EventKind::Arrival);
+                    }
+                }
+                EventKind::Complete { shard, job } => {
+                    let slo = self.cfg.policy.slo;
+                    let s = &mut self.shards[shard];
+                    s.busy_until = None;
+                    s.batches += 1;
+                    s.padded += (job.capacity - job.real) as u64;
+                    s.served += job.real as u64;
+                    s.outstanding = s.outstanding.saturating_sub(job.real);
+                    let pj = (s.spec.energy_per_req_j * 1e12) as u64;
+                    for &enq in &job.enqueued {
+                        let sojourn = now.duration_since(enq);
+                        s.latency.record(sojourn.as_micros() as u64);
+                        s.energy_pj.record(pj);
+                        if sojourn > slo {
+                            s.slo_violations += 1;
+                        }
+                    }
+                }
+                EventKind::Wake { shard } => {
+                    self.shards[shard].wake_at = None;
+                }
+                EventKind::Autoscale => {
+                    self.autoscale_round(now);
+                    if !self.finished() {
+                        let at = now + self.cfg.policy.scale_period;
+                        self.push_event(at, EventKind::Autoscale);
+                    }
+                }
+            }
+            self.pump(now);
+            if self.finished() {
+                // Stale wakes may remain in the heap; the work is done.
+                break;
+            }
+        }
+        Ok(self.report(clock.now().duration_since(epoch)))
+    }
+
+    fn report(&self, sim_elapsed: Duration) -> FleetSimReport {
+        // Deterministic merge: shard order, never completion order.
+        let mut latency = QuantileSketch::new();
+        let mut energy_pj = QuantileSketch::new();
+        for s in &self.shards {
+            latency.merge(&s.latency);
+            energy_pj.merge(&s.energy_pj);
+        }
+        let engines = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(id, s)| FleetEngineReport {
+                id,
+                label: s.spec.label.clone(),
+                served: s.served,
+                batches: s.batches,
+                padded: s.padded,
+                peak_outstanding: s.peak_outstanding as u64,
+                slo_violations: s.slo_violations,
+                fault_blocked: s.fault_blocked,
+                warm_boots: s.warm_boots,
+                active: s.active,
+                p99_us: s.latency.quantile(99.0),
+            })
+            .collect::<Vec<_>>();
+        let offered = self.cfg.requests as u64;
+        let served: u64 = engines.iter().map(|e| e.served).sum();
+        let rejected: u64 = self.shards.iter().map(|s| s.batcher.rejected).sum();
+        let malformed: u64 = self.shards.iter().map(|s| s.batcher.malformed).sum();
+        let secs = sim_elapsed.as_secs_f64();
+        FleetSimReport {
+            trace: self.trace.name.clone(),
+            seed: self.trace.seed,
+            scenario: self.cfg.faults.as_ref().map(|f| f.name.clone()),
+            offered,
+            served,
+            rejected,
+            malformed,
+            events: self.events,
+            slo: self.cfg.policy.slo,
+            slo_violations: engines.iter().map(|e| e.slo_violations).sum(),
+            fault_blocked: engines.iter().map(|e| e.fault_blocked).sum(),
+            scale_ups: self.scale_ups,
+            scale_downs: self.scale_downs,
+            active_end: self.shards.iter().filter(|s| s.active).count() as u64,
+            p50_us: latency.quantile(50.0),
+            p99_us: latency.quantile(99.0),
+            p999_us: latency.quantile(99.9),
+            max_us: latency.max(),
+            mean_us: latency.mean(),
+            mean_uj: energy_pj.mean() / 1e6,
+            p99_uj: energy_pj.quantile(99.0) as f64 / 1e6,
+            total_j: served as f64 * energy_pj.mean() * 1e-12,
+            sim_elapsed,
+            throughput_rps: if secs > 0.0 { served as f64 / secs } else { 0.0 },
+            engines,
+        }
+    }
+}
+
+/// Per-engine rows of the [`FleetSimReport`].
+#[derive(Debug, Clone)]
+pub struct FleetEngineReport {
+    pub id: usize,
+    pub label: String,
+    pub served: u64,
+    pub batches: u64,
+    pub padded: u64,
+    pub peak_outstanding: u64,
+    pub slo_violations: u64,
+    pub fault_blocked: u64,
+    pub warm_boots: u64,
+    pub active: bool,
+    pub p99_us: u64,
+}
+
+/// The fleet-simulation report. Under a virtual clock both
+/// [`FleetSimReport::render`] and [`FleetSimReport::to_json`] are
+/// byte-identical across reruns and `--parallel` settings.
+#[derive(Debug, Clone)]
+pub struct FleetSimReport {
+    pub trace: String,
+    pub seed: u64,
+    /// Name of the composed fault scenario, when one rode along.
+    pub scenario: Option<String>,
+    pub offered: u64,
+    pub served: u64,
+    pub rejected: u64,
+    pub malformed: u64,
+    /// Heap events processed (the simulator's work unit; benches report
+    /// events/sec).
+    pub events: u64,
+    pub slo: Duration,
+    pub slo_violations: u64,
+    pub fault_blocked: u64,
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    pub active_end: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub p999_us: u64,
+    pub max_us: u64,
+    pub mean_us: f64,
+    /// Mean / p99 GLB energy per served request (µJ).
+    pub mean_uj: f64,
+    pub p99_uj: f64,
+    /// Total modeled GLB energy over the run (J).
+    pub total_j: f64,
+    pub sim_elapsed: Duration,
+    pub throughput_rps: f64,
+    pub engines: Vec<FleetEngineReport>,
+}
+
+impl FleetSimReport {
+    /// served / offered, percent.
+    pub fn availability(&self) -> f64 {
+        if self.offered == 0 {
+            100.0
+        } else {
+            self.served as f64 / self.offered as f64 * 100.0
+        }
+    }
+
+    /// Deterministic human-readable report.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = write!(s, "fleet report: trace={} seed={}", self.trace, self.seed);
+        match &self.scenario {
+            Some(sc) => {
+                let _ = writeln!(s, " faults={sc}");
+            }
+            None => {
+                let _ = writeln!(s);
+            }
+        }
+        let _ = writeln!(
+            s,
+            "  offered={} served={} rejected={} malformed={} availability={:.3}%",
+            self.offered,
+            self.served,
+            self.rejected,
+            self.malformed,
+            self.availability()
+        );
+        let _ = writeln!(
+            s,
+            "  latency: p50={}us p99={}us p999={}us max={}us mean={:.0}us",
+            self.p50_us, self.p99_us, self.p999_us, self.max_us, self.mean_us
+        );
+        let _ = writeln!(
+            s,
+            "  slo={}ms violations={} ({:.3}%) fault_blocked={}",
+            self.slo.as_millis(),
+            self.slo_violations,
+            if self.served == 0 {
+                0.0
+            } else {
+                self.slo_violations as f64 / self.served as f64 * 100.0
+            },
+            self.fault_blocked
+        );
+        let _ = writeln!(
+            s,
+            "  autoscale: ups={} downs={} active_end={}",
+            self.scale_ups, self.scale_downs, self.active_end
+        );
+        let _ = writeln!(
+            s,
+            "  energy: mean={:.3}uJ/req p99={:.3}uJ/req total={:.6}J",
+            self.mean_uj, self.p99_uj, self.total_j
+        );
+        let _ = writeln!(
+            s,
+            "  sim_elapsed={:.3}ms events={} throughput={:.1} req/s",
+            self.sim_elapsed.as_secs_f64() * 1e3,
+            self.events,
+            self.throughput_rps
+        );
+        for e in &self.engines {
+            let _ = writeln!(
+                s,
+                "  engine {} [{}]: served={} batches={} padded={} peak_q={} slo_viol={} \
+                 blocked={} warm_boots={} p99={}us{}",
+                e.id,
+                e.label,
+                e.served,
+                e.batches,
+                e.padded,
+                e.peak_outstanding,
+                e.slo_violations,
+                e.fault_blocked,
+                e.warm_boots,
+                e.p99_us,
+                if e.active { "" } else { " (retired)" }
+            );
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        let engines = self
+            .engines
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("id", (e.id as u64).into()),
+                    ("label", Json::Str(e.label.clone())),
+                    ("served", e.served.into()),
+                    ("batches", e.batches.into()),
+                    ("padded", e.padded.into()),
+                    ("peak_outstanding", e.peak_outstanding.into()),
+                    ("slo_violations", e.slo_violations.into()),
+                    ("fault_blocked", e.fault_blocked.into()),
+                    ("warm_boots", e.warm_boots.into()),
+                    ("active", e.active.into()),
+                    ("p99_us", e.p99_us.into()),
+                ])
+            })
+            .collect();
+        let mut fields = vec![
+            ("trace", Json::Str(self.trace.clone())),
+            ("seed", self.seed.into()),
+            ("offered", self.offered.into()),
+            ("served", self.served.into()),
+            ("rejected", self.rejected.into()),
+            ("malformed", self.malformed.into()),
+            ("events", self.events.into()),
+            ("availability_pct", Json::Str(format!("{:.3}", self.availability()))),
+            ("slo_ms", (self.slo.as_millis() as u64).into()),
+            ("slo_violations", self.slo_violations.into()),
+            ("fault_blocked", self.fault_blocked.into()),
+            ("scale_ups", self.scale_ups.into()),
+            ("scale_downs", self.scale_downs.into()),
+            ("active_end", self.active_end.into()),
+            ("p50_us", self.p50_us.into()),
+            ("p99_us", self.p99_us.into()),
+            ("p999_us", self.p999_us.into()),
+            ("max_us", self.max_us.into()),
+            ("mean_us", Json::Str(format!("{:.1}", self.mean_us))),
+            ("energy_mean_uj", Json::Str(format!("{:.3}", self.mean_uj))),
+            ("energy_p99_uj", Json::Str(format!("{:.3}", self.p99_uj))),
+            ("energy_total_j", Json::Str(format!("{:.6}", self.total_j))),
+            ("sim_elapsed_us", (self.sim_elapsed.as_micros() as u64).into()),
+            ("throughput_rps", Json::Str(format!("{:.1}", self.throughput_rps))),
+            ("engines", Json::Arr(engines)),
+        ];
+        if let Some(sc) = &self.scenario {
+            fields.push(("scenario", Json::Str(sc.clone())));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// The closed-loop drain re-threaded through the simulator's scheduling
+/// core: a one-shard fleet under the degenerate *closed* arrival pattern
+/// reduces exactly to this loop — every request is already queued, so the
+/// event schedule alternates `next_dispatch` instants with bounded tail
+/// waits and there is nothing left for the heap to order. [`serve::drain`]
+/// delegates here, which keeps the closed-loop goldens byte-identical by
+/// construction.
+pub fn run_closed(
+    batcher: &mut Batcher,
+    router: &Router,
+    metrics: &mut Metrics,
+    clock: &Clock,
+    mut infer: impl FnMut(&Batch) -> crate::Result<Duration>,
+) -> crate::Result<()> {
+    while batcher.pending() > 0 {
+        let now = clock.now();
+        let Some(capacity) = serve::next_dispatch(batcher, router, now) else {
+            // Partial tail inside the window: advance to the instant both
+            // the batcher window and the router deadline have expired for
+            // the oldest request. Guaranteed > 0 (else a batch would have
+            // fired), with a 1 ns floor so progress is unconditional.
+            let deadline = batcher.window.max(router.policy.max_wait);
+            let wait = deadline
+                .saturating_sub(batcher.oldest_wait(now))
+                .max(Duration::from_nanos(1));
+            clock.advance(wait);
+            continue;
+        };
+        if let Some(b) = batcher.form(capacity, now) {
+            let latency = infer(&b)?;
+            let done = if clock.is_virtual() { clock.advance(latency) } else { clock.now() };
+            metrics.record_batch_waited(done, b.real, b.capacity, latency, b.oldest_wait);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GlbVariant;
+
+    fn sim(trace: &str, specs: Vec<EngineSpec>, cfg: FleetConfig) -> FleetSim {
+        FleetSim::new(ArrivalTrace::builtin(trace).unwrap(), specs, cfg).expect("sim")
+    }
+
+    fn accounting_closes(r: &FleetSimReport) {
+        assert_eq!(
+            r.served + r.rejected + r.malformed,
+            r.offered,
+            "every offered request is served, rejected, or malformed"
+        );
+        assert_eq!(r.served, r.engines.iter().map(|e| e.served).sum::<u64>());
+    }
+
+    #[test]
+    fn empty_fleet_is_an_error_not_a_panic() {
+        let err = FleetSim::new(
+            ArrivalTrace::builtin("closed").unwrap(),
+            Vec::new(),
+            FleetConfig::default(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("at least one engine"), "{err}");
+    }
+
+    #[test]
+    fn routing_prefers_least_outstanding_with_lowest_index_ties() {
+        let mut s = sim("poisson", EngineSpec::paper_fleet(3), FleetConfig::default());
+        assert_eq!(s.route(Tick::ZERO), 0, "all empty: lowest index");
+        s.shards[0].outstanding = 5;
+        s.shards[1].outstanding = 2;
+        s.shards[2].outstanding = 2;
+        assert_eq!(s.route(Tick::ZERO), 1, "least outstanding, tie to lower index");
+        s.shards[1].outstanding = 9;
+        assert_eq!(s.route(Tick::ZERO), 2);
+    }
+
+    #[test]
+    fn slo_pressure_falls_back_to_the_fast_island() {
+        // Shard 0 = fast SRAM island, shard 1 = Ultra. Load both beyond the
+        // SLO so even the least-outstanding pick projects a miss; the
+        // balancer must route to the *fastest projection* (SRAM at 700 µs
+        // per batch) even though Ultra has fewer outstanding.
+        let specs =
+            vec![EngineSpec::paper(GlbVariant::Sram), EngineSpec::paper(GlbVariant::SttAiUltra)];
+        let mut s = sim("poisson", specs, FleetConfig::default());
+        s.cfg.policy.slo = Duration::from_millis(2);
+        s.shards[0].outstanding = 64; // SRAM: 5 batches ahead ~ 3.5 ms
+        s.shards[1].outstanding = 48; // Ultra: 4 batches ahead ~ 4 ms
+        assert_eq!(s.route(Tick::ZERO), 0, "fast island wins under SLO pressure");
+        // With slack SLO the plain least-outstanding pick stands.
+        s.cfg.policy.slo = Duration::from_millis(10);
+        assert_eq!(s.route(Tick::ZERO), 1);
+    }
+
+    #[test]
+    fn projected_accounts_for_warmup_residue() {
+        let mut s = sim("poisson", EngineSpec::paper_fleet(2), FleetConfig::default());
+        let now = Tick::ZERO + Duration::from_millis(1);
+        s.shards[1].warm_at = now + Duration::from_millis(3);
+        let cold = s.projected(1, now);
+        let warm = s.projected(0, now);
+        assert_eq!(cold, warm + Duration::from_millis(3));
+    }
+
+    #[test]
+    fn autoscaler_hysteresis_scales_up_then_down() {
+        let mut cfg = FleetConfig { autoscale: true, ..Default::default() };
+        cfg.policy.min_engines = 1;
+        let mut s = sim("bursty", EngineSpec::paper_fleet(3), cfg);
+        assert!(s.shards[0].active && !s.shards[1].active && !s.shards[2].active);
+        // Flood shard 0's queue past up_per_engine * 1.
+        let now = Tick::ZERO + Duration::from_millis(1);
+        for i in 0..40 {
+            s.shards[0].batcher.push(Request::new(i, vec![0.5; 4], now));
+        }
+        s.autoscale_round(now);
+        assert!(s.shards[1].active, "scale-up activates the lowest inactive shard");
+        assert_eq!(s.scale_ups, 1);
+        assert_eq!(s.shards[1].warm_at, now + s.cfg.policy.warmup);
+        // In the hysteresis band (4 <= queued/engine <= 32): no action.
+        s.autoscale_round(now);
+        assert_eq!((s.scale_ups, s.scale_downs), (1, 0), "band holds steady");
+        // Drain the queue below down_per_engine * 2: the idle top shard
+        // retires, and min_engines floors the fleet.
+        while s.shards[0].batcher.pending() > 0 {
+            s.shards[0].batcher.form(16, now);
+        }
+        s.autoscale_round(now);
+        assert!(!s.shards[1].active, "idle top shard retires first");
+        assert_eq!(s.scale_downs, 1);
+        s.autoscale_round(now);
+        assert!(s.shards[0].active, "min_engines keeps the last shard");
+        assert_eq!(s.scale_downs, 1);
+    }
+
+    #[test]
+    fn uniform_trace_serves_everything_and_accounts_close() {
+        let cfg = FleetConfig { requests: 2_000, ..Default::default() };
+        let mut s = sim("uniform", EngineSpec::paper_fleet(2), cfg);
+        let r = s.run(&Clock::virtual_at_zero()).unwrap();
+        accounting_closes(&r);
+        assert_eq!(r.served, 2_000);
+        assert_eq!(r.availability(), 100.0);
+        assert!(r.events as usize >= 2_000, "at least one event per arrival");
+        assert!(r.p50_us > 0 && r.p99_us >= r.p50_us && r.max_us >= r.p99_us);
+        assert!(r.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn closed_trace_is_the_degenerate_single_burst() {
+        // Every request lands at the epoch; a 1-engine fleet drains them in
+        // three full batches plus a tail that the power-of-two ladder
+        // covers with the batch-2 variant — the closed-loop shape.
+        let cfg = FleetConfig { requests: 50, ..Default::default() };
+        let mut s = sim("closed", EngineSpec::paper_fleet(1), cfg);
+        let r = s.run(&Clock::virtual_at_zero()).unwrap();
+        accounting_closes(&r);
+        assert_eq!(r.served, 50);
+        assert_eq!(r.engines[0].batches, 4, "3 full batches + the covered tail");
+        assert_eq!(r.engines[0].padded, 0, "the ladder covers the 2-deep tail exactly");
+    }
+
+    #[test]
+    fn energy_per_request_follows_the_spec() {
+        let cfg = FleetConfig { requests: 32, ..Default::default() };
+        let mut s = sim("closed", EngineSpec::paper_fleet(1), cfg);
+        let r = s.run(&Clock::virtual_at_zero()).unwrap();
+        // Ultra: 1.5e-4 J/req = 150 µJ; the sketch is exact-ish (≤ 1/64)
+        // and the mean of a constant stream is that constant's bucket.
+        assert!((r.mean_uj - 150.0).abs() / 150.0 < 0.02, "mean {} uJ", r.mean_uj);
+        assert!((r.total_j - 32.0 * 1.5e-4).abs() / (32.0 * 1.5e-4) < 0.02);
+    }
+
+    #[test]
+    fn reruns_are_byte_identical_and_parallel_is_cosmetic() {
+        let run = |parallel: usize| {
+            let cfg = FleetConfig { requests: 3_000, parallel, ..Default::default() };
+            let mut s = sim("bursty", EngineSpec::paper_fleet(2), cfg);
+            let r = s.run(&Clock::virtual_at_zero()).unwrap();
+            (r.render(), r.to_json().to_string())
+        };
+        assert_eq!(run(1), run(1), "rerun identical");
+        assert_eq!(run(1), run(4), "worker count cosmetic");
+    }
+
+    #[test]
+    fn faulted_engine_blocks_dispatch_but_traffic_drains() {
+        // The builtin crash_loop scenario crashes engine 0 twice (10–16 ms
+        // and 40–46 ms); the shard holds its queue and retries a window
+        // later, so nothing is lost — the refusals show in the counter.
+        let faults = FaultSchedule::builtin("crash_loop").unwrap();
+        let cfg = FleetConfig { requests: 5_000, faults: Some(faults), ..FleetConfig::default() };
+        let mut s = sim("uniform", EngineSpec::paper_fleet(3), cfg);
+        let r = s.run(&Clock::virtual_at_zero()).unwrap();
+        accounting_closes(&r);
+        assert_eq!(r.scenario.as_deref(), Some("crash_loop"));
+        assert_eq!(r.served, 5_000, "no traffic lost to the crash");
+        assert!(r.fault_blocked > 0, "the crashed engine refused dispatches");
+        assert_eq!(r.fault_blocked, r.engines[0].fault_blocked, "only engine 0 crashes");
+    }
+
+    #[test]
+    fn report_renders_all_sections() {
+        let cfg = FleetConfig { requests: 200, ..Default::default() };
+        let mut s = sim("poisson", EngineSpec::paper_fleet(2), cfg);
+        let r = s.run(&Clock::virtual_at_zero()).unwrap();
+        let text = r.render();
+        for needle in
+            ["fleet report: trace=poisson", "latency:", "slo=", "autoscale:", "energy:", "engine 0"]
+        {
+            assert!(text.contains(needle), "missing {needle:?} in {text}");
+        }
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"trace\":\"poisson\""), "{j}");
+        assert!(j.contains("\"events\":"), "{j}");
+    }
+}

@@ -10,8 +10,21 @@
 //! * [`router`] — picks the executable variant per dispatch from queue
 //!   depth and head-of-line wait; [`serve::closed_loop`] schedules through
 //!   it.
-//! * [`metrics`] — latency + queue-wait histograms, throughput counters
-//!   anchored at the first served batch.
+//! * [`metrics`] — latency + queue-wait quantile sketches (fixed footprint,
+//!   ≤ 1/64 relative error), throughput counters anchored at the first
+//!   served batch.
+//! * [`traffic`] — open-loop arrival-trace DSL: seeded Poisson, diurnal
+//!   (raised-cosine rate via thinning), bursty (two-state MMPP), uniform,
+//!   and closed patterns, from builtin tokens, JSON files, or the
+//!   `[traffic]` config section.
+//! * [`fleet`] — discrete-event fleet simulator: one event heap interleaves
+//!   open-loop arrivals, per-shard batch completions, window-deadline
+//!   wakes, and autoscale rounds over a heterogeneous fleet of
+//!   [`EngineSpec`]s; routing is least-outstanding with an SLO-aware
+//!   fallback to the fastest projection (the SRAM island), and per-request
+//!   latency/energy stream into mergeable sketches at O(1) memory.
+//!   [`serve::closed_loop`] is its degenerate one-shard/closed-arrival
+//!   configuration ([`fleet::run_closed`]).
 //! * [`accuracy`] — Fig. 21-style evaluation loops (Top-1/Top-5, pruning).
 //! * [`faults`] — deterministic fault-schedule DSL: seeded, timed BER
 //!   escalations, retention storms at the inverted guard-band corner, bank
@@ -46,15 +59,19 @@ pub mod accuracy;
 pub mod batcher;
 pub mod engine;
 pub mod faults;
+pub mod fleet;
 pub mod metrics;
 pub mod router;
 pub mod serve;
 pub mod supervisor;
+pub mod traffic;
 
 pub use accuracy::{AccuracyReport, Fig21Row};
 pub use batcher::{Batch, Batcher, Request};
 pub use engine::{Engine, EngineConfig};
 pub use faults::{EffectiveFaults, FaultEvent, FaultKind, FaultSchedule};
+pub use fleet::{FleetConfig, FleetEngineReport, FleetPolicy, FleetSim, FleetSimReport};
 pub use metrics::Metrics;
 pub use router::{Router, RouterPolicy, Variant};
 pub use supervisor::{ChaosConfig, EngineSpec, FleetReport, Health, Supervisor, SupervisorPolicy};
+pub use traffic::{ArrivalGen, ArrivalTrace, TracePattern};

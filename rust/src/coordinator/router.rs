@@ -57,6 +57,26 @@ impl Router {
         &self.variants
     }
 
+    /// Largest compiled batch — the per-shard capacity quantum the fleet
+    /// balancer divides outstanding work by when projecting service time.
+    pub fn largest(&self) -> Variant {
+        // Non-empty by `new()`'s contract.
+        *self.variants.last().expect("router variants are non-empty")
+    }
+
+    /// Smallest compiled variant covering `queued` requests (the largest
+    /// one if the queue exceeds everything) — what the deadline path would
+    /// fire. The fleet balancer uses this to estimate the *next* batch's
+    /// capacity for a shard without mutating its queue.
+    pub fn covering(&self, queued: usize) -> Variant {
+        *self
+            .variants
+            .iter()
+            .find(|v| v.batch >= queued)
+            .or_else(|| self.variants.last())
+            .expect("router variants are non-empty")
+    }
+
     /// Decide what to run given `queued` requests whose oldest has waited
     /// `oldest_wait`. Returns `None` to keep waiting.
     pub fn dispatch(&self, queued: usize, oldest_wait: Duration) -> Option<Variant> {
@@ -143,6 +163,16 @@ mod tests {
             .expect("variants");
         assert_eq!(r.dispatch(8, Duration::ZERO), Some(Variant { batch: 16 }));
         assert_eq!(r.dispatch(7, Duration::ZERO), None);
+    }
+
+    #[test]
+    fn covering_and_largest_mirror_the_deadline_ladder() {
+        let r = Router::new(vec![2, 8, 32], RouterPolicy::default()).expect("variants");
+        assert_eq!(r.largest(), Variant { batch: 32 });
+        assert_eq!(r.covering(0), Variant { batch: 2 });
+        assert_eq!(r.covering(3), Variant { batch: 8 });
+        assert_eq!(r.covering(8), Variant { batch: 8 });
+        assert_eq!(r.covering(100), Variant { batch: 32 });
     }
 
     #[test]

@@ -41,34 +41,19 @@ pub fn next_dispatch(batcher: &Batcher, router: &Router, now: Tick) -> Option<us
 /// on a virtual clock the drain advances past it (the engine call itself is
 /// instantaneous in wall time), on a wall clock the call already consumed
 /// real time and `now()` is simply re-read.
+///
+/// The scheduling core lives in [`fleet::run_closed`]: the closed loop is
+/// the degenerate one-shard/closed-arrival configuration of the fleet
+/// simulator's event schedule, so delegating keeps the two paths
+/// byte-identical by construction.
 pub fn drain(
     batcher: &mut Batcher,
     router: &Router,
     metrics: &mut Metrics,
     clock: &Clock,
-    mut infer: impl FnMut(&Batch) -> crate::Result<Duration>,
+    infer: impl FnMut(&Batch) -> crate::Result<Duration>,
 ) -> crate::Result<()> {
-    while batcher.pending() > 0 {
-        let now = clock.now();
-        let Some(capacity) = next_dispatch(batcher, router, now) else {
-            // Partial tail inside the window: advance to the instant both
-            // the batcher window and the router deadline have expired for
-            // the oldest request. Guaranteed > 0 (else a batch would have
-            // fired), with a 1 ns floor so progress is unconditional.
-            let deadline = batcher.window.max(router.policy.max_wait);
-            let wait = deadline
-                .saturating_sub(batcher.oldest_wait(now))
-                .max(Duration::from_nanos(1));
-            clock.advance(wait);
-            continue;
-        };
-        if let Some(b) = batcher.form(capacity, now) {
-            let latency = infer(&b)?;
-            let done = if clock.is_virtual() { clock.advance(latency) } else { clock.now() };
-            metrics.record_batch_waited(done, b.real, b.capacity, latency, b.oldest_wait);
-        }
-    }
-    Ok(())
+    super::fleet::run_closed(batcher, router, metrics, clock, infer)
 }
 
 /// The one-line serving report shared by [`closed_loop`] and the CLI.
@@ -242,7 +227,7 @@ mod tests {
         // Clock advanced to the window deadline, then past the service
         // latency — no further (bounded, not a spin).
         assert_eq!(clock.now(), Tick::ZERO + window + Duration::from_micros(100));
-        assert_eq!(metrics.queue_wait.max_us(), 5_000, "tail waited exactly the window");
+        assert_eq!(metrics.queue_wait.max(), 5_000, "tail waited exactly the window");
     }
 
     #[test]

@@ -85,12 +85,31 @@ pub struct EngineSpec {
     pub lsb_delta: f64,
     /// Modeled clean service latency per batch.
     pub service: Duration,
+    /// Modeled GLB energy per served request (J) — the fleet simulator's
+    /// energy-per-request metric sums these across the engines that
+    /// actually served each request.
+    pub energy_per_req_j: f64,
 }
 
 impl EngineSpec {
-    /// The paper build of `variant` with a 1 ms modeled service latency.
+    /// The paper build of `variant`, with per-variant modeled service
+    /// latency and per-request GLB energy.
+    ///
+    /// Service follows the PR 5 write-stall ordering (SRAM carries no
+    /// write-bandwidth stalls, so MinLatency selects it; the STT variants
+    /// pay the write service-rate penalty): SRAM 700 µs, STT-AI 900 µs,
+    /// STT-AI Ultra exactly 1 ms — the Ultra figure is the anchor
+    /// [`SupervisorPolicy`]'s default timers are tuned against and must not
+    /// drift. Energy follows the Table III power ranking (Ultra < STT-AI <
+    /// SRAM): the customized STT-MRAM buffers trade a little latency for
+    /// large static-power and area savings.
     pub fn paper(variant: GlbVariant) -> Self {
         let tech = TechConfig::default();
+        let (service_us, energy_per_req_j) = match variant {
+            GlbVariant::Sram => (700, 2.4e-4),
+            GlbVariant::SttAi => (900, 1.8e-4),
+            GlbVariant::SttAiUltra => (1_000, 1.5e-4),
+        };
         Self {
             label: variant.label().to_string(),
             variant,
@@ -98,7 +117,8 @@ impl EngineSpec {
             ber: BerConfig::for_variant(variant),
             glb_delta: tech.glb_delta(),
             lsb_delta: tech.lsb_delta(),
-            service: Duration::from_millis(1),
+            service: Duration::from_micros(service_us),
+            energy_per_req_j,
         }
     }
 
@@ -124,6 +144,9 @@ impl EngineSpec {
             .filter(|s| s.is_finite() && *s > 0.0)
             .map(Duration::from_secs_f64)
             .unwrap_or(Duration::from_millis(1));
+        let energy_per_req_j = sel
+            .energy_per_request_j()
+            .unwrap_or_else(|| Self::paper(sel.variant()).energy_per_req_j);
         Self {
             label: cfg.name.clone(),
             variant: sel.variant(),
@@ -132,6 +155,7 @@ impl EngineSpec {
             glb_delta: cfg.tech.glb_delta(),
             lsb_delta: cfg.tech.lsb_delta(),
             service,
+            energy_per_req_j,
         }
     }
 }
@@ -892,11 +916,11 @@ impl Supervisor {
                 clean_accuracy
             },
             clean_accuracy,
-            p50_us: metrics.latency.percentile_us(50.0),
-            p99_us: metrics.latency.percentile_us(99.0),
-            max_us: metrics.latency.max_us(),
-            qwait_p50_us: metrics.queue_wait.percentile_us(50.0),
-            qwait_max_us: metrics.queue_wait.max_us(),
+            p50_us: metrics.latency.quantile(50.0),
+            p99_us: metrics.latency.quantile(99.0),
+            max_us: metrics.latency.max(),
+            qwait_p50_us: metrics.queue_wait.quantile(50.0),
+            qwait_max_us: metrics.queue_wait.max(),
             sim_elapsed: end.duration_since(epoch),
             throughput_rps: metrics.throughput(),
             engines,

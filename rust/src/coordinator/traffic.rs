@@ -1,0 +1,421 @@
+//! Open-loop arrival-trace DSL for the fleet simulator.
+//!
+//! An [`ArrivalTrace`] is a named, seeded description of *when requests
+//! arrive*, independent of how fast the fleet serves them — the open-loop
+//! half of the discrete-event simulation in [`crate::coordinator::fleet`].
+//! Three stochastic generators cover the canonical serving regimes:
+//!
+//! * **poisson** — memoryless arrivals at a constant rate λ (inverse-CDF
+//!   exponential inter-arrival times);
+//! * **diurnal** — a nonhomogeneous Poisson process whose rate follows a
+//!   raised-cosine day/night curve between `base_rps` and `peak_rps`,
+//!   sampled exactly by Lewis–Shedler thinning against the peak rate;
+//! * **bursty** — a two-state Markov-modulated Poisson process (calm/burst
+//!   phases with exponential dwell times), the trace that separates a
+//!   hetero fleet's fast SRAM island from an all-Ultra fleet in the p99.
+//!
+//! Two degenerate patterns complete the grammar: **closed** (every request
+//! queued at t = 0, the old `serve::closed_loop` arrival model) and
+//! **uniform** (fixed gap, the supervisor's chaos pacing).
+//!
+//! Like the fault DSL ([`crate::coordinator::faults`]), traces come from
+//! three places sharing one grammar: built-in tokens
+//! ([`ArrivalTrace::builtin`]), JSON files ([`ArrivalTrace::parse`] falls
+//! back to a path — the committed golden lives at
+//! `rust/golden/fleet_diurnal.trace.json`), and the `[traffic]` section of
+//! a [`crate::config::SystemConfig`]. All randomness derives from the
+//! trace seed through the crate's xoshiro [`Rng`], so a trace replays the
+//! exact same arrival instants on every run and at any worker count.
+
+use std::time::Duration;
+
+use crate::util::clock::Tick;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// The stochastic (or degenerate) process generating arrival instants.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TracePattern {
+    /// Every request arrives at t = 0 (closed-loop serving: the clients
+    /// queue everything up front and wait).
+    Closed,
+    /// Fixed inter-arrival gap.
+    Uniform { gap: Duration },
+    /// Homogeneous Poisson arrivals at `rate_rps` requests per second.
+    Poisson { rate_rps: f64 },
+    /// Nonhomogeneous Poisson with a raised-cosine rate curve:
+    /// `λ(t) = base + (peak − base)·(1 − cos(2πt/period))/2`, so the trace
+    /// starts at the quiet `base_rps` and crests at `peak_rps` once per
+    /// `period`.
+    Diurnal { base_rps: f64, peak_rps: f64, period: Duration },
+    /// Two-state Markov-modulated Poisson process: exponential dwell times
+    /// with the given means, Poisson arrivals at the phase's rate.
+    Bursty { calm_rps: f64, burst_rps: f64, calm_dwell: Duration, burst_dwell: Duration },
+}
+
+impl TracePattern {
+    /// Stable serialization token.
+    pub fn token(&self) -> &'static str {
+        match self {
+            TracePattern::Closed => "closed",
+            TracePattern::Uniform { .. } => "uniform",
+            TracePattern::Poisson { .. } => "poisson",
+            TracePattern::Diurnal { .. } => "diurnal",
+            TracePattern::Bursty { .. } => "bursty",
+        }
+    }
+}
+
+/// A named, seeded arrival trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrivalTrace {
+    pub name: String,
+    /// Root seed for the arrival generator's xoshiro stream.
+    pub seed: u64,
+    pub pattern: TracePattern,
+}
+
+impl ArrivalTrace {
+    /// Built-in traces by token; `None` for unknown names.
+    ///
+    /// Rates are sized against the paper fleet (≈1 ms service, batch 16 →
+    /// ~16 k req/s per STT-AI Ultra engine): `poisson` loads one engine to
+    /// ~90 %, `diurnal` crests near a two-engine fleet's capacity, and
+    /// `bursty` alternates a comfortable 8 k req/s calm phase with 40 k
+    /// req/s storms that overload a two-Ultra fleet but not one fronted by
+    /// an SRAM island — the hetero-fleet p99 gate in `tests/fleet.rs`.
+    pub fn builtin(name: &str) -> Option<Self> {
+        let ms = Duration::from_millis;
+        match name {
+            "closed" => {
+                Some(Self { name: "closed".into(), seed: 0x0C10, pattern: TracePattern::Closed })
+            }
+            "uniform" => Some(Self {
+                name: "uniform".into(),
+                seed: 0x41F0,
+                pattern: TracePattern::Uniform { gap: Duration::from_micros(70) },
+            }),
+            "poisson" => Some(Self {
+                name: "poisson".into(),
+                seed: 0x9015,
+                pattern: TracePattern::Poisson { rate_rps: 14_000.0 },
+            }),
+            "diurnal" => Some(Self {
+                name: "diurnal".into(),
+                seed: 0xD1A1,
+                pattern: TracePattern::Diurnal {
+                    base_rps: 8_000.0,
+                    peak_rps: 28_000.0,
+                    period: ms(100),
+                },
+            }),
+            "bursty" => Some(Self {
+                name: "bursty".into(),
+                seed: 0xB4B5,
+                pattern: TracePattern::Bursty {
+                    calm_rps: 8_000.0,
+                    burst_rps: 40_000.0,
+                    calm_dwell: ms(20),
+                    burst_dwell: ms(10),
+                },
+            }),
+            _ => None,
+        }
+    }
+
+    /// Every built-in trace token (CLI help + roundtrip tests).
+    pub fn builtin_names() -> [&'static str; 5] {
+        ["closed", "uniform", "poisson", "diurnal", "bursty"]
+    }
+
+    /// Resolve a CLI `--trace` spec: a built-in token first, else a path to
+    /// a trace JSON file.
+    pub fn parse(spec: &str) -> crate::Result<Self> {
+        if let Some(t) = Self::builtin(spec) {
+            return Ok(t);
+        }
+        let path = std::path::Path::new(spec);
+        if path.exists() {
+            let text = std::fs::read_to_string(path)?;
+            return Self::from_json(&Json::parse(&text).map_err(anyhow::Error::from)?);
+        }
+        anyhow::bail!(
+            "unknown arrival trace {spec:?} (builtins: {}; or a path to a trace JSON)",
+            Self::builtin_names().join(", ")
+        )
+    }
+
+    /// Serialize (durations as integer microseconds — exact on roundtrip;
+    /// rates as JSON numbers, which the crate serializer prints losslessly
+    /// for the integral req/s values the grammar uses).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("seed", self.seed.into()),
+            ("pattern", Json::Str(self.pattern.token().to_string())),
+        ];
+        match self.pattern {
+            TracePattern::Closed => {}
+            TracePattern::Uniform { gap } => {
+                fields.push(("gap_us", (gap.as_micros() as u64).into()));
+            }
+            TracePattern::Poisson { rate_rps } => fields.push(("rate_rps", Json::Num(rate_rps))),
+            TracePattern::Diurnal { base_rps, peak_rps, period } => {
+                fields.push(("base_rps", Json::Num(base_rps)));
+                fields.push(("peak_rps", Json::Num(peak_rps)));
+                fields.push(("period_us", (period.as_micros() as u64).into()));
+            }
+            TracePattern::Bursty { calm_rps, burst_rps, calm_dwell, burst_dwell } => {
+                fields.push(("calm_rps", Json::Num(calm_rps)));
+                fields.push(("burst_rps", Json::Num(burst_rps)));
+                fields.push(("calm_dwell_us", (calm_dwell.as_micros() as u64).into()));
+                fields.push(("burst_dwell_us", (burst_dwell.as_micros() as u64).into()));
+            }
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        use anyhow::Context;
+        let name = j.req_str("name").map_err(anyhow::Error::from)?.to_string();
+        let seed = j.req_u64("seed").map_err(anyhow::Error::from)?;
+        let us = |key: &str| -> crate::Result<Duration> {
+            Ok(Duration::from_micros(j.req_u64(key).map_err(anyhow::Error::from)?))
+        };
+        let rps = |key: &'static str| -> crate::Result<f64> {
+            let v = j.req(key).map_err(anyhow::Error::from)?.as_f64().context(key)?;
+            if !(v.is_finite() && v > 0.0) {
+                anyhow::bail!("trace {name:?}: {key} must be a positive rate, got {v}");
+            }
+            Ok(v)
+        };
+        let pattern = match j.req_str("pattern").map_err(anyhow::Error::from)? {
+            "closed" => TracePattern::Closed,
+            "uniform" => {
+                let gap = us("gap_us")?;
+                if gap.is_zero() {
+                    anyhow::bail!("trace {name:?}: uniform gap_us must be positive");
+                }
+                TracePattern::Uniform { gap }
+            }
+            "poisson" => TracePattern::Poisson { rate_rps: rps("rate_rps")? },
+            "diurnal" => {
+                let (base_rps, peak_rps) = (rps("base_rps")?, rps("peak_rps")?);
+                let period = us("period_us")?;
+                if peak_rps < base_rps {
+                    anyhow::bail!("trace {name:?}: peak_rps {peak_rps} below base_rps {base_rps}");
+                }
+                if period.is_zero() {
+                    anyhow::bail!("trace {name:?}: diurnal period_us must be positive");
+                }
+                TracePattern::Diurnal { base_rps, peak_rps, period }
+            }
+            "bursty" => {
+                let (calm_dwell, burst_dwell) = (us("calm_dwell_us")?, us("burst_dwell_us")?);
+                if calm_dwell.is_zero() || burst_dwell.is_zero() {
+                    anyhow::bail!("trace {name:?}: bursty dwell times must be positive");
+                }
+                TracePattern::Bursty {
+                    calm_rps: rps("calm_rps")?,
+                    burst_rps: rps("burst_rps")?,
+                    calm_dwell,
+                    burst_dwell,
+                }
+            }
+            other => anyhow::bail!("unknown trace pattern {other:?}"),
+        };
+        Ok(Self { name, seed, pattern })
+    }
+}
+
+/// Exponential inter-arrival draw for rate λ (per second), in nanoseconds.
+/// `next_f64` is 53-bit in [0, 1), so `1 − u ∈ (0, 1]` keeps the log finite
+/// and the draw bounded by ~36.7/λ.
+#[inline]
+fn exp_ns(rng: &mut Rng, rate_rps: f64) -> u64 {
+    (-(1.0 - rng.next_f64()).ln() / rate_rps * 1e9) as u64
+}
+
+/// Exponential dwell draw with the given mean.
+#[inline]
+fn exp_dwell_ns(rng: &mut Rng, mean: Duration) -> u64 {
+    (-(1.0 - rng.next_f64()).ln() * mean.as_nanos() as f64) as u64
+}
+
+/// Streaming generator of arrival instants for one [`ArrivalTrace`]: each
+/// [`ArrivalGen::next_offset`] call yields the next arrival as a
+/// nondecreasing offset from the clock epoch. Entirely seed-driven — two
+/// generators built from equal traces emit identical instants forever.
+#[derive(Debug)]
+pub struct ArrivalGen {
+    pattern: TracePattern,
+    rng: Rng,
+    t_ns: u64,
+    in_burst: bool,
+    state_until_ns: u64,
+}
+
+impl ArrivalGen {
+    pub fn new(trace: &ArrivalTrace) -> Self {
+        let mut rng = Rng::seed_from_u64(trace.seed);
+        let state_until_ns = match trace.pattern {
+            TracePattern::Bursty { calm_dwell, .. } => exp_dwell_ns(&mut rng, calm_dwell),
+            _ => 0,
+        };
+        Self { pattern: trace.pattern, rng, t_ns: 0, in_burst: false, state_until_ns }
+    }
+
+    /// Offset from the clock epoch of the next arrival.
+    pub fn next_offset(&mut self) -> Duration {
+        match self.pattern {
+            TracePattern::Closed => {}
+            TracePattern::Uniform { gap } => self.t_ns += gap.as_nanos() as u64,
+            TracePattern::Poisson { rate_rps } => self.t_ns += exp_ns(&mut self.rng, rate_rps),
+            TracePattern::Diurnal { base_rps, peak_rps, period } => {
+                // Lewis–Shedler thinning against the peak rate: candidate
+                // arrivals at λ_max, each kept with probability λ(t)/λ_max.
+                // Acceptance never falls below base/peak, so the loop
+                // terminates (and in ~peak/base expected candidates).
+                loop {
+                    self.t_ns += exp_ns(&mut self.rng, peak_rps);
+                    let phase = std::f64::consts::TAU * Tick::from_nanos(self.t_ns).as_secs_f64()
+                        / period.as_secs_f64();
+                    let rate = base_rps + (peak_rps - base_rps) * 0.5 * (1.0 - phase.cos());
+                    if self.rng.next_f64() * peak_rps < rate {
+                        break;
+                    }
+                }
+            }
+            TracePattern::Bursty { calm_rps, burst_rps, calm_dwell, burst_dwell } => loop {
+                let rate = if self.in_burst { burst_rps } else { calm_rps };
+                let cand = self.t_ns + exp_ns(&mut self.rng, rate);
+                if cand <= self.state_until_ns {
+                    self.t_ns = cand;
+                    break;
+                }
+                // Phase boundary crossed: jump to it, toggle the state, and
+                // redraw — exact for an MMPP because the exponential is
+                // memoryless, so the discarded partial draw carries no
+                // information.
+                self.t_ns = self.state_until_ns;
+                self.in_burst = !self.in_burst;
+                let dwell = if self.in_burst { burst_dwell } else { calm_dwell };
+                self.state_until_ns = self.t_ns + exp_dwell_ns(&mut self.rng, dwell);
+            },
+        }
+        Duration::from_nanos(self.t_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_roundtrip_through_json() {
+        for name in ArrivalTrace::builtin_names() {
+            let t = ArrivalTrace::builtin(name).unwrap();
+            let text = t.to_json().to_string();
+            let back = ArrivalTrace::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, t, "{name} roundtrip");
+            assert_eq!(back.to_json().to_string(), text, "{name} byte-stable");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_unknown_traces_with_a_named_error() {
+        let err = ArrivalTrace::parse("no_such_trace").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown arrival trace"), "{msg}");
+        assert!(msg.contains("bursty"), "lists builtins: {msg}");
+    }
+
+    #[test]
+    fn from_json_rejects_nonpositive_rates_and_zero_durations() {
+        let bad = r#"{"name":"x","seed":1,"pattern":"poisson","rate_rps":0}"#;
+        assert!(ArrivalTrace::from_json(&Json::parse(bad).unwrap()).is_err());
+        let bad = r#"{"name":"x","seed":1,"pattern":"uniform","gap_us":0}"#;
+        assert!(ArrivalTrace::from_json(&Json::parse(bad).unwrap()).is_err());
+        let bad = r#"{"name":"x","seed":1,"pattern":"diurnal",
+                      "base_rps":9000,"peak_rps":100,"period_us":1000}"#;
+        assert!(ArrivalTrace::from_json(&Json::parse(bad).unwrap()).is_err());
+        let bad = r#"{"name":"x","seed":1,"pattern":"warp"}"#;
+        assert!(ArrivalTrace::from_json(&Json::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn generators_are_deterministic_and_nondecreasing() {
+        for name in ArrivalTrace::builtin_names() {
+            let trace = ArrivalTrace::builtin(name).unwrap();
+            let mut a = ArrivalGen::new(&trace);
+            let mut b = ArrivalGen::new(&trace);
+            let mut last = Duration::ZERO;
+            for i in 0..2_000 {
+                let x = a.next_offset();
+                assert_eq!(x, b.next_offset(), "{name} diverged at arrival {i}");
+                assert!(x >= last, "{name}: arrivals must be nondecreasing");
+                last = x;
+            }
+        }
+    }
+
+    #[test]
+    fn closed_trace_queues_everything_at_the_epoch() {
+        let mut g = ArrivalGen::new(&ArrivalTrace::builtin("closed").unwrap());
+        for _ in 0..10 {
+            assert_eq!(g.next_offset(), Duration::ZERO);
+        }
+    }
+
+    #[test]
+    fn uniform_trace_paces_exactly() {
+        let mut g = ArrivalGen::new(&ArrivalTrace::builtin("uniform").unwrap());
+        assert_eq!(g.next_offset(), Duration::from_micros(70));
+        assert_eq!(g.next_offset(), Duration::from_micros(140));
+    }
+
+    /// The MMPP actually alternates: over many dwells the burst phase must
+    /// contribute a visibly higher local arrival density than calm.
+    #[test]
+    fn bursty_trace_has_two_distinguishable_phases() {
+        let trace = ArrivalTrace::builtin("bursty").unwrap();
+        let mut g = ArrivalGen::new(&trace);
+        // Bin arrivals into 5 ms windows over ~2 s of trace.
+        let mut bins = vec![0u32; 400];
+        loop {
+            let t = g.next_offset();
+            let bin = t.as_nanos() as u64 / 5_000_000;
+            if bin as usize >= bins.len() {
+                break;
+            }
+            bins[bin as usize] += 1;
+        }
+        let (lo, hi) = (*bins.iter().min().unwrap(), *bins.iter().max().unwrap());
+        // calm ≈ 40/bin, burst ≈ 200/bin; demand a clear spread.
+        assert!(hi > 2 * lo.max(1), "no burst structure: min {lo} max {hi}");
+    }
+
+    /// Diurnal rate law: arrivals per period-half around the crest must
+    /// clearly exceed those around the trough.
+    #[test]
+    fn diurnal_trace_follows_the_rate_curve() {
+        let trace = ArrivalTrace::builtin("diurnal").unwrap();
+        let mut g = ArrivalGen::new(&trace);
+        let period_ns = 100_000_000u64;
+        let (mut trough, mut crest) = (0u64, 0u64);
+        loop {
+            let t = g.next_offset().as_nanos() as u64;
+            if t >= 20 * period_ns {
+                break;
+            }
+            // Quarter around the trough (phase 0) vs around the crest (π).
+            let phase = t % period_ns;
+            if phase < period_ns / 8 || phase >= 7 * period_ns / 8 {
+                trough += 1;
+            } else if (3 * period_ns / 8..5 * period_ns / 8).contains(&phase) {
+                crest += 1;
+            }
+        }
+        assert!(crest > 2 * trough, "crest {crest} vs trough {trough}");
+    }
+}

@@ -431,6 +431,17 @@ impl DesignSelection {
         BerConfig::for_selection(self.variant(), self.point.ber)
     }
 
+    /// Modeled GLB energy per served request: the record's per-inference
+    /// `buffer_energy_j` (scored for one whole batch) divided by the batch
+    /// the sweep evaluated at (paper default 16). `None` when the record
+    /// carries no usable energy metric — the fleet simulator then falls
+    /// back to the variant's paper constant
+    /// ([`crate::coordinator::EngineSpec::paper`]).
+    pub fn energy_per_request_j(&self) -> Option<f64> {
+        let batch = self.point.batch.unwrap_or(16).max(1) as f64;
+        self.metric("buffer_energy_j").filter(|e| e.is_finite() && *e > 0.0).map(|e| e / batch)
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("sweep", Json::Str(self.sweep.clone())),

@@ -11,7 +11,11 @@
 //! * `serve`             — closed-loop batched inference with metrics.
 //! * `chaos`             — deterministic fault-injection run: a named
 //!   scenario replayed against a simulated engine fleet under the
-//!   graceful-degradation supervisor.
+//!   graceful-degradation supervisor (or, with `--trace`, composed with
+//!   open-loop arrivals inside the fleet simulator).
+//! * `fleet`             — discrete-event fleet simulation: open-loop
+//!   arrival traces, heterogeneous engines from selection records,
+//!   SLO-aware routing and optional autoscaling.
 //! * `init-config`       — write the three paper SystemConfigs as JSON.
 
 use std::io::Write;
@@ -66,14 +70,28 @@ COMMANDS:
                against a simulated 3-engine fleet, no artifacts needed)
   chaos        [--scenario burst_ber|FILE] [--config build.json]
                [--requests 2000] [--batch 16] [--engines 3] [--seed N]
-               [--variant V] [--from-selection FILE]
-               [--fallback sram|stt_ai|stt_ai_ultra|none]
+               [--variant V] [--from-selection FILE] [--selections FILES]
+               [--fallback sram|stt_ai|stt_ai_ultra|none] [--trace TRACE]
                [--parallel N] [--report FILE]
                deterministic fault-injection run: replay a seeded scenario
                against a simulated engine fleet under the
                graceful-degradation supervisor; the report is byte-identical
                across runs and --parallel values (builtins: calm, burst_ber,
-               retention_storm, bank_takedown, crash_loop, latency_spike)
+               retention_storm, bank_takedown, crash_loop, latency_spike);
+               --trace composes the scenario with open-loop arrivals inside
+               the fleet simulator instead
+  fleet        [--trace closed|uniform|poisson|diurnal|bursty|FILE]
+               [--config build.json] [--engines 3]
+               [--selections a.json,b.json,...] [--variant V]
+               [--from-selection FILE] [--requests 20000] [--batch 16]
+               [--slo-ms 10] [--autoscale] [--faults SCENARIO] [--seed N]
+               [--parallel N] [--report FILE]
+               discrete-event fleet simulation: open-loop arrivals from a
+               seeded trace (or the [traffic] config section), heterogeneous
+               engines booted from selection records, SLO-aware
+               least-outstanding routing with a fast-island fallback, and
+               optional queue-depth autoscaling; reports are byte-identical
+               across runs and --parallel values
   montecarlo   [--samples 20000] [--seed N] [--parallel N]
                [--sweep axis=v1|v2,...] [--tech stt|wei2019]
                streaming PT Monte Carlo through the sweep engine
@@ -107,23 +125,82 @@ fn parse_tech(s: &str) -> anyhow::Result<TechBase> {
         .ok_or_else(|| anyhow::anyhow!("unknown tech {s:?} (stt, sot, sram, wei2019)"))
 }
 
-/// Clone the primary spec into an `n`-engine fleet and run one chaos
-/// scenario to completion on a virtual clock.
+/// Resolve the primary engine spec shared by `serve --faults`, `chaos`,
+/// and `fleet`: an explicit selection record, an explicit variant, the
+/// config's GLB variant, or the paper STT-AI Ultra default — in that order.
+fn primary_spec(
+    args: &Args,
+    config: Option<&SystemConfig>,
+) -> anyhow::Result<coordinator::EngineSpec> {
+    match args.get("from-selection") {
+        Some(path) => {
+            if args.get("variant").is_some() {
+                anyhow::bail!("--variant conflicts with --from-selection");
+            }
+            Ok(coordinator::EngineSpec::from_selection(&DesignSelection::load(Path::new(path))?))
+        }
+        None => {
+            let variant = match (args.get("variant"), config) {
+                (Some(v), _) => parse_variant(v)?,
+                (None, Some(c)) => c.glb,
+                (None, None) => GlbVariant::SttAiUltra,
+            };
+            Ok(coordinator::EngineSpec::paper(variant))
+        }
+    }
+}
+
+/// Build the fleet's engine specs, shared by `serve --faults`, `chaos`,
+/// and `fleet`. `--selections a.json,b.json,...` boots each engine from
+/// its own selection record (a heterogeneous fleet); otherwise the primary
+/// spec is cloned. `engines` is the explicit `--engines` count when given:
+/// a heterogeneous fleet defaults to one engine per record, a homogeneous
+/// one to 3 slots, and naming fewer records than engines is a clean error.
+fn fleet_specs(
+    args: &Args,
+    config: Option<&SystemConfig>,
+    engines: Option<usize>,
+) -> anyhow::Result<Vec<coordinator::EngineSpec>> {
+    let mut specs = match args.get("selections") {
+        Some(list) => {
+            let paths: Vec<&str> = list.split(',').filter(|s| !s.is_empty()).collect();
+            let mut specs = Vec::with_capacity(paths.len());
+            for p in &paths {
+                let sel = DesignSelection::load(Path::new(p))?;
+                specs.push(coordinator::EngineSpec::from_selection(&sel));
+            }
+            let want = engines.unwrap_or(specs.len());
+            if specs.len() < want {
+                anyhow::bail!(
+                    "--selections names {} record(s) but --engines asks for {want}; \
+                     give one selection per engine or drop --engines",
+                    specs.len()
+                );
+            }
+            specs.truncate(want.max(1));
+            specs
+        }
+        None => {
+            let primary = primary_spec(args, config)?;
+            vec![primary; engines.unwrap_or(3).max(1)]
+        }
+    };
+    for (i, s) in specs.iter_mut().enumerate() {
+        s.label = format!("{}-{i}", s.label);
+    }
+    Ok(specs)
+}
+
+/// Run one chaos scenario against `specs` under the graceful-degradation
+/// supervisor on a virtual clock.
 fn run_chaos(
     schedule: coordinator::FaultSchedule,
-    primary: coordinator::EngineSpec,
+    specs: Vec<coordinator::EngineSpec>,
     fallback: Option<coordinator::EngineSpec>,
-    engines: usize,
     requests: usize,
     batch: usize,
     parallel: usize,
 ) -> anyhow::Result<coordinator::FleetReport> {
-    let mut specs = Vec::with_capacity(engines);
-    for i in 0..engines {
-        let mut spec = primary.clone();
-        spec.label = format!("{}-{i}", primary.label);
-        specs.push(spec);
-    }
     let mut sup = coordinator::Supervisor::new(
         schedule,
         specs,
@@ -133,6 +210,32 @@ fn run_chaos(
     )?;
     let cfg = coordinator::ChaosConfig { requests, batch, parallel, ..Default::default() };
     sup.run(&cfg, &stt_ai::util::clock::Clock::virtual_at_zero())
+}
+
+/// Run one fleet simulation on a virtual clock (byte-identical reports
+/// across runs and `--parallel` values).
+fn run_fleet(
+    trace: coordinator::ArrivalTrace,
+    specs: Vec<coordinator::EngineSpec>,
+    cfg: coordinator::FleetConfig,
+) -> anyhow::Result<coordinator::FleetSimReport> {
+    let mut sim = coordinator::FleetSim::new(trace, specs, cfg)?;
+    sim.run(&stt_ai::util::clock::Clock::virtual_at_zero())
+}
+
+/// Write a report JSON (newline-terminated) when `--report FILE` was given.
+fn write_report(
+    out: &mut impl Write,
+    path: Option<PathBuf>,
+    json: stt_ai::util::json::Json,
+) -> anyhow::Result<()> {
+    if let Some(path) = path {
+        let mut text = json.to_string();
+        text.push('\n');
+        std::fs::write(&path, text)?;
+        writeln!(out, "-- wrote {path:?}")?;
+    }
+    Ok(())
 }
 
 /// Build the sweep runner from the shared `--parallel` / `--sweep` / `--tech`
@@ -424,24 +527,12 @@ fn main() -> anyhow::Result<()> {
                 // artifacts are needed — the supervisor models service
                 // latency per spec and injects faults into canary probes.
                 let schedule = coordinator::FaultSchedule::parse(&spec)?;
-                let primary = match args.get("from-selection") {
-                    Some(path) => {
-                        if args.get("variant").is_some() {
-                            anyhow::bail!("--variant conflicts with --from-selection");
-                        }
-                        coordinator::EngineSpec::from_selection(&DesignSelection::load(
-                            Path::new(path),
-                        )?)
-                    }
-                    None => coordinator::EngineSpec::paper(parse_variant(
-                        args.get_or("variant", "stt_ai_ultra"),
-                    )?),
-                };
+                let specs = fleet_specs(&args, None, Some(3))?;
                 let parallel = args.get_usize("parallel", 1)?;
                 args.finish()?;
                 let _ = artifacts; // unused in chaos mode
                 let fallback = Some(coordinator::EngineSpec::paper(GlbVariant::Sram));
-                let rep = run_chaos(schedule, primary, fallback, 3, requests, batch, parallel)?;
+                let rep = run_chaos(schedule, specs, fallback, requests, batch, parallel)?;
                 write!(out, "{}", rep.render())?;
                 return Ok(());
             }
@@ -474,7 +565,7 @@ fn main() -> anyhow::Result<()> {
         "chaos" => {
             let requests = args.get_usize("requests", 2000)?;
             let batch = args.get_usize("batch", 16)?;
-            let engines = args.get_usize("engines", 3)?;
+            let engines_flag = args.get("engines").map(|v| v.parse::<usize>()).transpose()?;
             let parallel = args.get_usize("parallel", 1)?;
             // Scenario resolution order: explicit --scenario (builtin name
             // or JSON path), then the [faults] section of --config, then
@@ -496,38 +587,85 @@ fn main() -> anyhow::Result<()> {
                     .parse()
                     .map_err(|e| anyhow::anyhow!("bad --seed {seed:?}: {e}"))?;
             }
-            let primary = match args.get("from-selection") {
-                Some(path) => {
-                    if args.get("variant").is_some() {
-                        anyhow::bail!("--variant conflicts with --from-selection");
-                    }
-                    coordinator::EngineSpec::from_selection(&DesignSelection::load(Path::new(
-                        path,
-                    ))?)
+            let specs = fleet_specs(&args, config.as_ref(), engines_flag)?;
+            let report_path = args.get("report").map(PathBuf::from);
+            if let Some(tspec) = args.get("trace").map(str::to_string) {
+                // Open-loop composition: replay the fault scenario inside
+                // the fleet simulator under an arrival trace instead of the
+                // supervisor's fixed-gap pacing. The simulator has no
+                // fallback-reboot path, so --fallback is supervisor-only.
+                if args.get("fallback").is_some() {
+                    anyhow::bail!("--fallback needs the supervisor path; drop it or --trace");
                 }
-                None => {
-                    let variant = match (args.get("variant"), &config) {
-                        (Some(v), _) => parse_variant(v)?,
-                        (None, Some(c)) => c.glb,
-                        (None, None) => GlbVariant::SttAiUltra,
-                    };
-                    coordinator::EngineSpec::paper(variant)
-                }
-            };
+                args.finish()?;
+                let trace = coordinator::ArrivalTrace::parse(&tspec)?;
+                let cfg = coordinator::FleetConfig {
+                    requests,
+                    batch,
+                    parallel,
+                    faults: Some(schedule),
+                    ..Default::default()
+                };
+                let rep = run_fleet(trace, specs, cfg)?;
+                write!(out, "{}", rep.render())?;
+                return write_report(&mut out, report_path, rep.to_json());
+            }
             let fallback = match args.get_or("fallback", "sram") {
                 "none" => None,
                 v => Some(coordinator::EngineSpec::paper(parse_variant(v)?)),
             };
+            args.finish()?;
+            let rep = run_chaos(schedule, specs, fallback, requests, batch, parallel)?;
+            write!(out, "{}", rep.render())?;
+            write_report(&mut out, report_path, rep.to_json())?;
+        }
+        "fleet" => {
+            let requests = args.get_usize("requests", 20_000)?;
+            let batch = args.get_usize("batch", 16)?;
+            let parallel = args.get_usize("parallel", 1)?;
+            let autoscale = args.get_flag("autoscale");
+            let engines_flag = args.get("engines").map(|v| v.parse::<usize>()).transpose()?;
+            let config = args
+                .get("config")
+                .map(|p| SystemConfig::load(Path::new(p)))
+                .transpose()?;
+            // Trace resolution order: explicit --trace (builtin token or
+            // JSON path), then the [traffic] section of --config, then the
+            // poisson builtin.
+            let mut trace = match args.get("trace") {
+                Some(spec) => coordinator::ArrivalTrace::parse(spec)?,
+                None => match config.as_ref().and_then(|c| c.traffic.clone()) {
+                    Some(t) => t,
+                    None => coordinator::ArrivalTrace::builtin("poisson")
+                        .expect("poisson is a builtin"),
+                },
+            };
+            if let Some(seed) = args.get("seed") {
+                trace.seed = seed
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad --seed {seed:?}: {e}"))?;
+            }
+            let faults = args
+                .get("faults")
+                .map(coordinator::FaultSchedule::parse)
+                .transpose()?;
+            let specs = fleet_specs(&args, config.as_ref(), engines_flag)?;
+            let mut cfg = coordinator::FleetConfig {
+                requests,
+                batch,
+                parallel,
+                autoscale,
+                faults,
+                ..Default::default()
+            };
+            if let Some(ms) = args.get("slo-ms").map(|v| v.parse::<u64>()).transpose()? {
+                cfg.policy.slo = std::time::Duration::from_millis(ms);
+            }
             let report_path = args.get("report").map(PathBuf::from);
             args.finish()?;
-            let rep = run_chaos(schedule, primary, fallback, engines, requests, batch, parallel)?;
+            let rep = run_fleet(trace, specs, cfg)?;
             write!(out, "{}", rep.render())?;
-            if let Some(path) = report_path {
-                let mut text = rep.to_json().to_string();
-                text.push('\n');
-                std::fs::write(&path, text)?;
-                writeln!(out, "-- wrote {path:?}")?;
-            }
+            write_report(&mut out, report_path, rep.to_json())?;
         }
         "montecarlo" => {
             // Through the sweep engine: default grid is the two STT base

@@ -44,6 +44,13 @@ impl Tick {
     pub fn checked_sub(self, d: Duration) -> Option<Tick> {
         self.0.checked_sub(d.as_nanos() as u64).map(Tick)
     }
+
+    /// Seconds since the epoch as `f64` — the time axis the diurnal arrival
+    /// rate `λ(t)` is evaluated on (`coordinator::traffic`). Lossy above
+    /// ~2^53 ns (~104 days of simulated time), which no trace approaches.
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 * 1e-9
+    }
 }
 
 impl std::ops::Add<Duration> for Tick {
@@ -136,6 +143,7 @@ mod tests {
         assert_eq!(Tick::ZERO.duration_since(t), Duration::ZERO);
         assert_eq!(t.checked_sub(Duration::from_micros(5)), Some(Tick::ZERO));
         assert_eq!(t.checked_sub(Duration::from_micros(6)), None);
+        assert_eq!(Tick::from_nanos(1_500_000_000).as_secs_f64(), 1.5);
     }
 
     #[test]

@@ -227,9 +227,261 @@ impl LatencyHistogram {
     }
 }
 
+/// Sub-bucket resolution of [`QuantileSketch`]: 2^6 = 64 linear sub-buckets
+/// per power-of-two octave, giving a guaranteed relative error ≤ 1/64.
+const SKETCH_SUB_BITS: usize = 6;
+const SKETCH_SUB: usize = 1 << SKETCH_SUB_BITS;
+
+/// Fixed-size log-linear quantile sketch over `u64` values (HDR-histogram
+/// style), the O(1)-memory replacement for exact-sort percentiles at fleet
+/// scale (1e6–1e8 recorded values).
+///
+/// Layout: values below 64 land in exact unit buckets; a value `v ≥ 64` in
+/// octave `o = 63 - v.leading_zeros()` lands in one of 64 linear sub-buckets
+/// of width `2^(o-6)`. Quantiles report the **inclusive upper bound** of the
+/// bucket holding the target-rank sample, clamped to the exact maximum, so
+/// for any recorded quantile `exact ≤ sketch ≤ exact·(1 + 1/64)` — the
+/// documented ≤ 1.6 % error bound (see EXPERIMENTS.md §Fleet-simulation).
+///
+/// The footprint is a fixed [`QuantileSketch::BUCKETS`]-slot table
+/// (~30 KiB) regardless of how many values are recorded, and
+/// [`QuantileSketch::merge`] is a commutative integer bucket-wise add:
+/// merging per-shard sketches in shard-index order is bit-identical at any
+/// worker count (cf. [`Streaming::merge`]'s fixed-order contract — the
+/// sketch is even stronger, being order-independent outright).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QuantileSketch {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl QuantileSketch {
+    /// Fixed table size: 58 octaves × 64 sub-buckets + 64 exact unit slots.
+    pub const BUCKETS: usize = (64 - SKETCH_SUB_BITS) * SKETCH_SUB + SKETCH_SUB;
+
+    pub fn new() -> Self {
+        Self { buckets: vec![0; Self::BUCKETS], count: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    #[inline]
+    fn index(v: u64) -> usize {
+        if v < SKETCH_SUB as u64 {
+            v as usize
+        } else {
+            let oct = 63 - v.leading_zeros() as usize;
+            let sub = ((v >> (oct - SKETCH_SUB_BITS)) as usize) & (SKETCH_SUB - 1);
+            (oct - SKETCH_SUB_BITS + 1) * SKETCH_SUB + sub
+        }
+    }
+
+    /// Inclusive upper bound of bucket `idx` (exact for the unit slots).
+    #[inline]
+    fn upper(idx: usize) -> u64 {
+        if idx < SKETCH_SUB {
+            idx as u64
+        } else {
+            let oct = idx / SKETCH_SUB + (SKETCH_SUB_BITS - 1);
+            let shift = oct - SKETCH_SUB_BITS;
+            let lo = ((SKETCH_SUB + idx % SKETCH_SUB) as u64) << shift;
+            lo + (1u64 << shift) - 1
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::index(v)] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact mean (the sum is tracked exactly in integers); 0.0 when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Exact minimum; 0 when empty.
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum; 0 when empty.
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Approximate `q`-th percentile (`q` in [0, 100]): the upper bound of
+    /// the bucket holding the rank-`ceil(q·n/100)` sample, clamped to the
+    /// exact max so `quantile(q) ≤ max()` always holds (the old
+    /// `LatencyHistogram` could overshoot the max by a whole power of two).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (((q.clamp(0.0, 100.0) / 100.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::upper(i).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Commutative bucket-wise merge — pure integer adds, so any merge
+    /// order over a fixed partition reproduces identical bits.
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Jain–Chlamtac P² single-quantile estimator: five markers, parabolic
+/// adjustment, O(1) memory. Kept as an *independent cross-check* on
+/// [`QuantileSketch`] (the sketch has a hard error bound; P² does not, but
+/// it is the classic streaming estimator the literature reaches for, so the
+/// unit tests pin the two against exact sorts on the same stream).
+#[derive(Debug, Clone)]
+pub struct P2Quantile {
+    p: f64,
+    n: u64,
+    q: [f64; 5],
+    pos: [f64; 5],
+    warmup: Vec<f64>,
+}
+
+impl P2Quantile {
+    /// `p` is the quantile in (0, 1), e.g. 0.99 for p99.
+    pub fn new(p: f64) -> Self {
+        Self {
+            p: p.clamp(0.0, 1.0),
+            n: 0,
+            q: [0.0; 5],
+            pos: [1.0, 2.0, 3.0, 4.0, 5.0],
+            warmup: Vec::with_capacity(5),
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.n += 1;
+        if self.n <= 5 {
+            self.warmup.push(x);
+            if self.n == 5 {
+                self.warmup.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                for (i, &v) in self.warmup.iter().enumerate() {
+                    self.q[i] = v;
+                }
+            }
+            return;
+        }
+        // Locate the cell, stretching the extreme markers when x escapes.
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x < self.q[1] {
+            0
+        } else if x < self.q[2] {
+            1
+        } else if x < self.q[3] {
+            2
+        } else if x <= self.q[4] {
+            3
+        } else {
+            self.q[4] = x;
+            3
+        };
+        for pos in self.pos.iter_mut().skip(k + 1) {
+            *pos += 1.0;
+        }
+        let n = self.n as f64;
+        let want = [
+            1.0,
+            1.0 + (n - 1.0) * self.p / 2.0,
+            1.0 + (n - 1.0) * self.p,
+            1.0 + (n - 1.0) * (1.0 + self.p) / 2.0,
+            n,
+        ];
+        for i in 1..4 {
+            let d = want[i] - self.pos[i];
+            if (d >= 1.0 && self.pos[i + 1] - self.pos[i] > 1.0)
+                || (d <= -1.0 && self.pos[i - 1] - self.pos[i] < -1.0)
+            {
+                let s = if d >= 1.0 { 1.0 } else { -1.0 };
+                let cand = self.parabolic(i, s);
+                self.q[i] = if self.q[i - 1] < cand && cand < self.q[i + 1] {
+                    cand
+                } else {
+                    self.linear(i, s)
+                };
+                self.pos[i] += s;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, s: f64) -> f64 {
+        let (q, pos) = (&self.q, &self.pos);
+        q[i] + s / (pos[i + 1] - pos[i - 1])
+            * ((pos[i] - pos[i - 1] + s) * (q[i + 1] - q[i]) / (pos[i + 1] - pos[i])
+                + (pos[i + 1] - pos[i] - s) * (q[i] - q[i - 1]) / (pos[i] - pos[i - 1]))
+    }
+
+    fn linear(&self, i: usize, s: f64) -> f64 {
+        let j = if s > 0.0 { i + 1 } else { i - 1 };
+        self.q[i] + s * (self.q[j] - self.q[i]) / (self.pos[j] - self.pos[i])
+    }
+
+    /// Current estimate; exact order statistic while fewer than five samples
+    /// have been seen, 0.0 when empty.
+    pub fn value(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        if self.n < 5 {
+            let mut v = self.warmup.clone();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let idx = (self.p * (v.len() - 1) as f64).round() as usize;
+            return v[idx.min(v.len() - 1)];
+        }
+        self.q[2]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn mean_std() {
@@ -327,6 +579,120 @@ mod tests {
             (acc.mean().to_bits(), acc.std_dev().to_bits())
         };
         assert_eq!(fold(256), fold(256));
+    }
+
+    /// Rank-`ceil(q·n/100)` order statistic of a sorted copy — the exact
+    /// reference the sketch's quantile definition is pinned against.
+    fn exact_rank(sorted: &[u64], q: f64) -> u64 {
+        let target = (((q / 100.0) * sorted.len() as f64).ceil() as usize).max(1);
+        sorted[target - 1]
+    }
+
+    /// Heavy-tailed sample stream (Pareto-ish) in microsecond scale.
+    fn tail_samples(n: usize, seed: u64) -> Vec<u64> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..n).map(|_| (150.0 / (1.0 - rng.next_f64()).powf(0.6)) as u64).collect()
+    }
+
+    /// The satellite gate: sketch vs exact sort at 1e5 samples, within the
+    /// documented bound `exact ≤ sketch ≤ exact·(1 + 1/64)`.
+    #[test]
+    fn sketch_matches_exact_sort_within_documented_bound_at_1e5() {
+        let xs = tail_samples(100_000, 0xF1EE7);
+        let mut sk = QuantileSketch::new();
+        for &x in &xs {
+            sk.record(x);
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        for q in [10.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
+            let exact = exact_rank(&sorted, q);
+            let approx = sk.quantile(q);
+            assert!(approx >= exact, "q={q}: sketch {approx} < exact {exact}");
+            assert!(
+                approx - exact <= exact / 64 + 1,
+                "q={q}: sketch {approx} overshoots exact {exact} past 1/64"
+            );
+        }
+        assert_eq!(sk.max(), *sorted.last().unwrap());
+        assert_eq!(sk.min(), sorted[0]);
+        assert_eq!(sk.count(), 100_000);
+        let exact_mean = sorted.iter().map(|&v| v as f64).sum::<f64>() / 100_000.0;
+        assert!((sk.mean() - exact_mean).abs() < 1e-6, "integer sum ⇒ exact mean");
+        // p999 never exceeds the true max (the old histogram's overshoot bug).
+        assert!(sk.quantile(99.9) <= sk.max());
+    }
+
+    #[test]
+    fn sketch_is_exact_below_64_and_empty_is_zeroed() {
+        let mut sk = QuantileSketch::new();
+        assert_eq!((sk.quantile(50.0), sk.max(), sk.min(), sk.count()), (0, 0, 0, 0));
+        for v in [3u64, 7, 7, 12, 63] {
+            sk.record(v);
+        }
+        assert_eq!(sk.quantile(0.0), 3);
+        assert_eq!(sk.quantile(50.0), 7);
+        assert_eq!(sk.quantile(100.0), 63);
+    }
+
+    #[test]
+    fn sketch_merge_is_order_independent_and_matches_sequential() {
+        let xs = tail_samples(10_000, 0xCAFE);
+        let mut whole = QuantileSketch::new();
+        xs.iter().for_each(|&x| whole.record(x));
+        let parts: Vec<QuantileSketch> = xs
+            .chunks(977)
+            .map(|c| {
+                let mut s = QuantileSketch::new();
+                c.iter().for_each(|&x| s.record(x));
+                s
+            })
+            .collect();
+        let mut fwd = QuantileSketch::new();
+        parts.iter().for_each(|p| fwd.merge(p));
+        let mut rev = QuantileSketch::new();
+        parts.iter().rev().for_each(|p| rev.merge(p));
+        assert_eq!(fwd, whole, "shard-order merge must equal the sequential stream");
+        assert_eq!(rev, whole, "integer buckets make the merge commutative");
+    }
+
+    #[test]
+    fn sketch_footprint_is_fixed() {
+        // O(1) memory at any request count: the table never grows.
+        assert_eq!(QuantileSketch::BUCKETS, 3776);
+        let mut sk = QuantileSketch::new();
+        for i in 0..100_000u64 {
+            sk.record(i * 37 + 1);
+        }
+        assert_eq!(sk.buckets.len(), QuantileSketch::BUCKETS);
+        sk.record(u64::MAX); // extreme octave still lands in the fixed table
+        assert_eq!(sk.max(), u64::MAX);
+    }
+
+    /// P² cross-check: the independent streaming estimator lands close to
+    /// the same exact sorts the sketch is pinned against.
+    #[test]
+    fn p2_estimator_tracks_exact_sort() {
+        let xs = tail_samples(100_000, 0xBEEF);
+        let mut p50 = P2Quantile::new(0.5);
+        let mut p99 = P2Quantile::new(0.99);
+        for &x in &xs {
+            p50.record(x as f64);
+            p99.record(x as f64);
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        let e50 = exact_rank(&sorted, 50.0) as f64;
+        let e99 = exact_rank(&sorted, 99.0) as f64;
+        assert!((p50.value() - e50).abs() / e50 < 0.05, "p50 {} vs {e50}", p50.value());
+        assert!((p99.value() - e99).abs() / e99 < 0.15, "p99 {} vs {e99}", p99.value());
+        // Short streams fall back to exact order statistics.
+        let mut short = P2Quantile::new(0.5);
+        assert_eq!(short.value(), 0.0);
+        for x in [5.0, 1.0, 3.0] {
+            short.record(x);
+        }
+        assert_eq!(short.value(), 3.0);
     }
 
     #[test]

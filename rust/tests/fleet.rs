@@ -1,0 +1,133 @@
+//! Integration coverage of the discrete-event fleet simulator
+//! (EXPERIMENTS.md §Fleet simulation): the committed golden trace parses
+//! equal to its builtin, fleet reports are byte-identical across reruns
+//! and `--parallel` values for every builtin trace at 1e5 requests, the
+//! Poisson generator hits its configured rate, a heterogeneous SRAM+Ultra
+//! fleet beats the all-Ultra fleet on p99 under bursty load, the
+//! autoscaler reacts to queue pressure, and the `[traffic]` config
+//! section feeds the same run as the builtin token.
+
+use stt_ai::config::{GlbVariant, SystemConfig};
+use stt_ai::coordinator::{
+    ArrivalGen, ArrivalTrace, EngineSpec, FleetConfig, FleetSim, FleetSimReport,
+};
+use stt_ai::util::clock::Clock;
+
+const GOLDEN: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/golden/fleet_diurnal.trace.json");
+
+fn run_trace(trace: ArrivalTrace, specs: Vec<EngineSpec>, cfg: FleetConfig) -> FleetSimReport {
+    let mut sim = FleetSim::new(trace, specs, cfg).expect("fleet is non-empty");
+    sim.run(&Clock::virtual_at_zero()).expect("fleet run")
+}
+
+fn cfg_with(requests: usize, parallel: usize) -> FleetConfig {
+    FleetConfig { requests, parallel, ..Default::default() }
+}
+
+/// Every request is accounted for exactly once, and the per-engine served
+/// counts cover the fleet total.
+fn accounting_closes(r: &FleetSimReport) {
+    assert_eq!(r.offered, r.served + r.rejected + r.malformed, "accounting leak in {}", r.trace);
+    let per_engine: u64 = r.engines.iter().map(|e| e.served).sum();
+    assert_eq!(r.served, per_engine, "engine ledger mismatch in {}", r.trace);
+}
+
+/// The committed golden trace file is the diurnal builtin, field for
+/// field — and serializes back to the identical canonical JSON.
+#[test]
+fn golden_trace_file_matches_the_builtin() {
+    let parsed = ArrivalTrace::parse(GOLDEN).expect("golden trace parses");
+    let builtin = ArrivalTrace::builtin("diurnal").unwrap();
+    assert_eq!(parsed, builtin);
+    assert_eq!(parsed.to_json().to_string(), builtin.to_json().to_string());
+}
+
+/// Same trace + seed → byte-identical reports across consecutive runs and
+/// across `--parallel` worker counts, for every builtin trace at 1e5
+/// simulated requests (the acceptance gate for the simulator being
+/// deterministic, not merely statistically similar).
+#[test]
+fn reports_are_byte_identical_across_reruns_and_parallel() {
+    for name in ArrivalTrace::builtin_names() {
+        let trace = || ArrivalTrace::builtin(name).unwrap();
+        let a = run_trace(trace(), EngineSpec::paper_fleet(3), cfg_with(100_000, 1));
+        let b = run_trace(trace(), EngineSpec::paper_fleet(3), cfg_with(100_000, 1));
+        let c = run_trace(trace(), EngineSpec::paper_fleet(3), cfg_with(100_000, 4));
+        assert_eq!(a.render(), b.render(), "{name}: consecutive runs diverged");
+        assert_eq!(a.render(), c.render(), "{name}: --parallel leaked into the report");
+        assert_eq!(a.to_json().to_string(), c.to_json().to_string(), "{name}");
+        accounting_closes(&a);
+        assert_eq!(a.offered, 100_000, "{name}");
+        assert!(a.served > 0, "{name}: fleet served nothing");
+    }
+}
+
+/// The Poisson generator's empirical inter-arrival mean matches the
+/// configured rate at 1e5 events (±2 %, ≈ 6σ of the sample mean).
+#[test]
+fn poisson_interarrival_mean_matches_the_configured_rate() {
+    let trace = ArrivalTrace::builtin("poisson").unwrap();
+    let mut gen = ArrivalGen::new(&trace);
+    let n = 100_000u64;
+    let mut last = std::time::Duration::ZERO;
+    for _ in 0..n {
+        last = gen.next_offset();
+    }
+    let mean_us = last.as_secs_f64() * 1e6 / n as f64;
+    let expect_us = 1e6 / 14_000.0;
+    let err = (mean_us - expect_us).abs() / expect_us;
+    assert!(err < 0.02, "poisson mean {mean_us:.3}us vs {expect_us:.3}us (err {err:.4})");
+}
+
+/// The hetero-fleet gate: under the bursty trace (40 k req/s storms), a
+/// mixed SRAM+Ultra fleet — whose fast island absorbs SLO-threatened
+/// requests — holds a strictly lower p99 than two Ultra engines, whose
+/// combined 32 k req/s capacity falls behind every burst.
+#[test]
+fn hetero_sram_island_beats_all_ultra_on_p99_under_bursty_load() {
+    let bursty = || ArrivalTrace::builtin("bursty").unwrap();
+    let mixed =
+        vec![EngineSpec::paper(GlbVariant::Sram), EngineSpec::paper(GlbVariant::SttAiUltra)];
+    let a = run_trace(bursty(), mixed, cfg_with(30_000, 1));
+    let b = run_trace(bursty(), EngineSpec::paper_fleet(2), cfg_with(30_000, 1));
+    accounting_closes(&a);
+    accounting_closes(&b);
+    assert!(
+        a.p99_us < b.p99_us,
+        "mixed fleet p99 {}us !< all-Ultra p99 {}us",
+        a.p99_us,
+        b.p99_us
+    );
+}
+
+/// With autoscaling on, burst pressure must activate reserve engines (a
+/// scale-up with a paid warm-up), and the ledger still closes.
+#[test]
+fn autoscaler_reacts_to_burst_pressure() {
+    let trace = ArrivalTrace::builtin("bursty").unwrap();
+    let mut cfg = cfg_with(30_000, 1);
+    cfg.autoscale = true;
+    let r = run_trace(trace, EngineSpec::paper_fleet(4), cfg);
+    accounting_closes(&r);
+    assert!(r.scale_ups >= 1, "burst load must activate reserve engines");
+    assert!(r.active_end >= 1);
+    assert!(r.engines.iter().any(|e| e.warm_boots > 0), "activation pays a warm-up");
+}
+
+/// A `[traffic]` section in a SystemConfig drives the identical run as the
+/// builtin token it carries.
+#[test]
+fn config_traffic_section_feeds_the_fleet_run() {
+    let mut cfg = SystemConfig::paper_stt_ai_ultra();
+    cfg.traffic = Some(ArrivalTrace::builtin("uniform").unwrap());
+    let back = SystemConfig::from_json(&cfg.to_json()).expect("config roundtrip");
+    let trace = back.traffic.expect("traffic section survives the roundtrip");
+    let a = run_trace(trace, EngineSpec::paper_fleet(3), cfg_with(5_000, 1));
+    let b = run_trace(
+        ArrivalTrace::builtin("uniform").unwrap(),
+        EngineSpec::paper_fleet(3),
+        cfg_with(5_000, 1),
+    );
+    assert_eq!(a.render(), b.render());
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+}
