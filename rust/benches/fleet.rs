@@ -10,7 +10,9 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use stt_ai::config::GlbVariant;
-use stt_ai::coordinator::{ArrivalTrace, EngineSpec, FleetConfig, FleetSim, FleetSimReport};
+use stt_ai::coordinator::{
+    ArrivalTrace, EngineSpec, FleetConfig, FleetSim, FleetSimReport, TenantMix,
+};
 use stt_ai::util::bench::{self, Bencher, Ledger};
 use stt_ai::util::clock::Clock;
 
@@ -83,6 +85,47 @@ fn main() {
     let a = run("bursty", hetero(), hn, 1);
     let c = run("bursty", hetero(), hn, 4);
     assert_eq!(a.render(), c.render(), "--parallel leaked into the report");
+
+    // The two-tenant mix on the SRAM+Ultra pair: class-aware scheduling
+    // (per-class DRR queues, island routing, per-tenant ledgers) against
+    // the single-queue ablation on the same offered load — the event-rate
+    // cost of tenancy is the delta between these two datapoints.
+    let pair = || {
+        vec![EngineSpec::paper(GlbVariant::Sram), EngineSpec::paper(GlbVariant::SttAiUltra)]
+    };
+    let run_mix = |classless: bool| {
+        let trace = ArrivalTrace::builtin("poisson").expect("builtin trace");
+        let cfg = FleetConfig {
+            requests: hn,
+            tenants: TenantMix::builtin("two_tier").expect("builtin mix"),
+            classless,
+            ..Default::default()
+        };
+        let mut sim = FleetSim::new(trace, pair(), cfg).expect("fleet");
+        sim.run(&Clock::virtual_at_zero()).expect("fleet run")
+    };
+    let label = format!("fleet/two_tier_{}k_hetero", hn / 1000);
+    let r = b.run(&label, || run_mix(false));
+    ledger.add_throughput(&label, &r, hn as f64, "requests");
+    let label = format!("fleet/two_tier_{}k_single_queue", hn / 1000);
+    let r = b.run(&label, || run_mix(true));
+    ledger.add_throughput(&label, &r, hn as f64, "requests");
+    // The payoff gate, asserted where the full-size runs already exist:
+    // tight-class p99 beats the single-queue baseline at <= 105% energy.
+    let aware = run_mix(false);
+    let baseline = run_mix(true);
+    assert!(
+        aware.tenants[0].p99_us < baseline.tenants[0].p99_us,
+        "tight p99 {}us >= single-queue {}us",
+        aware.tenants[0].p99_us,
+        baseline.tenants[0].p99_us
+    );
+    assert!(
+        aware.mean_uj <= baseline.mean_uj * 1.05,
+        "tenant-aware energy {:.3}uJ/req vs baseline {:.3}uJ/req",
+        aware.mean_uj,
+        baseline.mean_uj
+    );
 
     // Steady-state allocations: the budget is O(1) per event (queue rows,
     // batch assembly, wake scheduling) — not O(fleet) or O(history).

@@ -431,6 +431,11 @@ pub struct SystemConfig {
     /// (`stt-ai fleet`, default when `--trace` is not given). Absent by
     /// default.
     pub traffic: Option<crate::coordinator::traffic::ArrivalTrace>,
+    /// Optional multi-tenant section (`[tenants]`): the named SLO-class
+    /// mix sharing the fleet (`stt-ai fleet`, default when `--tenants` is
+    /// not given). Absent by default — a fleet without one runs the
+    /// legacy single-tenant stack byte for byte.
+    pub tenants: Option<crate::coordinator::tenant::TenantMix>,
 }
 
 /// Serializable datatype.
@@ -464,6 +469,7 @@ impl SystemConfig {
             deployment: DeploymentConfig::default(),
             faults: None,
             traffic: None,
+            tenants: None,
         }
     }
 
@@ -563,6 +569,9 @@ impl SystemConfig {
         if let Some(t) = &self.traffic {
             fields.push(("traffic", t.to_json()));
         }
+        if let Some(m) = &self.tenants {
+            fields.push(("tenants", m.to_json()));
+        }
         Json::obj(fields)
     }
 
@@ -627,6 +636,9 @@ impl SystemConfig {
         }
         if let Some(t) = j.get("traffic") {
             cfg.traffic = Some(crate::coordinator::traffic::ArrivalTrace::from_json(t)?);
+        }
+        if let Some(m) = j.get("tenants") {
+            cfg.tenants = Some(crate::coordinator::tenant::TenantMix::from_json(m)?);
         }
         Ok(cfg)
     }
@@ -710,6 +722,24 @@ mod tests {
         assert!(text.contains("\"traffic\""), "{text}");
         let back = SystemConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.traffic, c.traffic);
+        assert_eq!(back.to_json().to_string(), text, "byte-stable");
+    }
+
+    #[test]
+    fn tenants_section_roundtrips_and_defaults_to_none() {
+        // No [tenants] section in the paper configs or their serialization.
+        let c = SystemConfig::paper_stt_ai_ultra();
+        assert!(c.tenants.is_none());
+        assert!(!c.to_json().to_string().contains("\"tenants\""));
+        let back = SystemConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
+        assert!(back.tenants.is_none());
+        // With a mix attached, the section roundtrips exactly.
+        let mut c = c;
+        c.tenants = Some(crate::coordinator::tenant::TenantMix::builtin("two_tier").unwrap());
+        let text = c.to_json().to_string();
+        assert!(text.contains("\"tenants\""), "{text}");
+        let back = SystemConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.tenants, c.tenants);
         assert_eq!(back.to_json().to_string(), text, "byte-stable");
     }
 

@@ -1,9 +1,17 @@
 //! Dynamic batcher: coalesce queued inference requests into batches.
 //!
 //! The accelerator exposes fixed-batch executables (one per compiled batch
-//! size); the batcher drains the request queue up to `max_batch`, waits at
+//! size); the batcher drains the request queues up to `max_batch`, waits at
 //! most `window` for stragglers, and pads the final partial batch (padding
 //! rows are executed and discarded — the fixed-shape cost of AOT).
+//!
+//! The batcher is class-aware: each tenant class owns its own FIFO queue
+//! with its own backpressure budget, and [`Batcher::form`] admits rows by
+//! weighted deficit round-robin — a backlogged class of weight *w* earns
+//! *w* rows per service round, so no positive-weight class can be starved
+//! by a heavier neighbour. A single-class batcher (the
+//! [`Batcher::new`] constructor) degenerates to exactly the historical
+//! FIFO: one queue, round-robin over one class.
 //!
 //! All time is expressed as [`Tick`] from an injectable
 //! [`Clock`](crate::util::clock::Clock): under a virtual clock the same
@@ -15,19 +23,28 @@ use crate::util::clock::Tick;
 use std::collections::VecDeque;
 use std::time::Duration;
 
-/// One inference request: an image, an opaque id, and its arrival instant.
+/// One inference request: an image, an opaque id, its tenant class, and its
+/// arrival instant.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
+    /// Tenant class index (position in the run's
+    /// [`TenantMix`](super::TenantMix)); single-tenant paths use 0.
+    pub tenant: u32,
     pub image: Vec<f32>,
     pub enqueued: Tick,
 }
 
 impl Request {
-    /// Build a request stamped with its arrival instant (read it from the
-    /// serving loop's `Clock`).
+    /// Build a default-tenant request stamped with its arrival instant
+    /// (read it from the serving loop's `Clock`).
     pub fn new(id: u64, image: Vec<f32>, now: Tick) -> Self {
-        Self { id, image, enqueued: now }
+        Self::for_tenant(id, 0, image, now)
+    }
+
+    /// Build a request tagged with its tenant class.
+    pub fn for_tenant(id: u64, tenant: u32, image: Vec<f32>, now: Tick) -> Self {
+        Self { id, tenant, image, enqueued: now }
     }
 }
 
@@ -46,16 +63,41 @@ pub struct Batch {
     /// simulator turns these into per-request sojourn latencies when the
     /// batch completes.
     pub enqueued: Vec<Tick>,
+    /// Tenant class of each real row (parallel to `ids`) — the fleet
+    /// simulator books each row into its tenant's ledger on completion.
+    pub tenants: Vec<u32>,
+}
+
+/// One tenant class's FIFO queue plus its deficit-round-robin state.
+#[derive(Debug)]
+struct ClassQueue {
+    queue: VecDeque<Request>,
+    /// DRR quantum: rows this class may contribute per service round.
+    weight: u64,
+    /// Unspent quantum carried across `form` calls (persistent deficit —
+    /// a class cut off mid-quantum resumes where it stopped).
+    deficit: u64,
+    rejected: u64,
+    malformed: u64,
+}
+
+impl ClassQueue {
+    fn new(weight: u64) -> Self {
+        Self { queue: VecDeque::new(), weight, deficit: 0, rejected: 0, malformed: 0 }
+    }
 }
 
 /// The batcher. Synchronous core (easily driven from a tokio task — see
 /// examples/serve.rs).
 pub struct Batcher {
-    queue: VecDeque<Request>,
+    classes: Vec<ClassQueue>,
+    /// Round-robin cursor: which class the next service round visits.
+    rr: usize,
     pub max_batch: usize,
     pub window: Duration,
     pub image_elems: usize,
-    /// Rejected when the queue is full (backpressure).
+    /// Per-class queue budget; a class at its budget rejects (backpressure)
+    /// without consuming its neighbours' headroom.
     pub queue_depth: usize,
     pub rejected: u64,
     /// Rejected because the request's image shape does not match the
@@ -65,9 +107,28 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Single-class batcher: the historical FIFO path.
     pub fn new(max_batch: usize, window: Duration, image_elems: usize, queue_depth: usize) -> Self {
+        Self::with_weights(max_batch, window, image_elems, queue_depth, &[1])
+    }
+
+    /// Class-aware batcher with one queue per weight (tenant order). An
+    /// empty slice falls back to a single class of weight 1.
+    pub fn with_weights(
+        max_batch: usize,
+        window: Duration,
+        image_elems: usize,
+        queue_depth: usize,
+        weights: &[u64],
+    ) -> Self {
+        let classes = if weights.is_empty() {
+            vec![ClassQueue::new(1)]
+        } else {
+            weights.iter().map(|&w| ClassQueue::new(w.max(1))).collect()
+        };
         Self {
-            queue: VecDeque::new(),
+            classes,
+            rr: 0,
             max_batch,
             window,
             image_elems,
@@ -77,66 +138,120 @@ impl Batcher {
         }
     }
 
+    /// Number of tenant classes.
+    pub fn class_count(&self) -> usize {
+        self.classes.len()
+    }
+
+    fn class_of(&self, tenant: u32) -> usize {
+        (tenant as usize).min(self.classes.len() - 1)
+    }
+
     /// Enqueue a request; `false` if rejected (malformed image shape, or
-    /// backpressure when the queue is full).
+    /// backpressure when the request's class queue is full).
     pub fn push(&mut self, r: Request) -> bool {
+        let c = self.class_of(r.tenant);
         if r.image.len() != self.image_elems {
             self.malformed += 1;
+            self.classes[c].malformed += 1;
             return false;
         }
-        if self.queue.len() >= self.queue_depth {
+        if self.classes[c].queue.len() >= self.queue_depth {
             self.rejected += 1;
+            self.classes[c].rejected += 1;
             return false;
         }
-        self.queue.push_back(r);
+        self.classes[c].queue.push_back(r);
         true
     }
 
     pub fn pending(&self) -> usize {
-        self.queue.len()
+        self.classes.iter().map(|c| c.queue.len()).sum()
     }
 
-    /// Queueing delay of the oldest pending request (zero when idle) — the
-    /// signal [`crate::coordinator::Router::dispatch`] schedules on.
+    /// Pending requests in one tenant class.
+    pub fn class_pending(&self, class: usize) -> usize {
+        self.classes.get(class).map_or(0, |c| c.queue.len())
+    }
+
+    /// Backpressure rejects charged to one tenant class.
+    pub fn class_rejected(&self, class: usize) -> u64 {
+        self.classes.get(class).map_or(0, |c| c.rejected)
+    }
+
+    /// Malformed rejects charged to one tenant class.
+    pub fn class_malformed(&self, class: usize) -> u64 {
+        self.classes.get(class).map_or(0, |c| c.malformed)
+    }
+
+    /// Queueing delay of the oldest pending request across all classes
+    /// (zero when idle) — the signal
+    /// [`crate::coordinator::Router::dispatch`] schedules on.
     pub fn oldest_wait(&self, now: Tick) -> Duration {
-        self.queue.front().map_or(Duration::ZERO, |r| now.duration_since(r.enqueued))
+        self.classes
+            .iter()
+            .filter_map(|c| c.queue.front())
+            .map(|r| now.duration_since(r.enqueued))
+            .max()
+            .unwrap_or(Duration::ZERO)
     }
 
-    /// Should the caller fire a batch now? Either the batch is full, or the
-    /// oldest request has waited past the window.
+    /// Should the caller fire a batch now? Either a full batch is pending,
+    /// or some class's oldest request has waited past the window (the
+    /// window is accounted per class head, so a trickle-rate tenant still
+    /// fires on time behind a high-rate neighbour).
     pub fn ready(&self, now: Tick) -> bool {
-        if self.queue.len() >= self.max_batch {
-            return true;
-        }
-        match self.queue.front() {
-            Some(r) => now.duration_since(r.enqueued) >= self.window,
-            None => false,
-        }
+        self.pending() >= self.max_batch || self.oldest_wait(now) >= self.window
     }
 
     /// Form a batch of exactly `capacity` rows (padding with zero images if
-    /// fewer real requests are queued). Returns `None` on an empty queue.
+    /// fewer real requests are queued), admitting rows by weighted deficit
+    /// round-robin over the class queues. Returns `None` when every queue
+    /// is empty.
     pub fn form(&mut self, capacity: usize, now: Tick) -> Option<Batch> {
-        if self.queue.is_empty() {
+        let pending = self.pending();
+        if pending == 0 {
             return None;
         }
-        let take = self.queue.len().min(capacity);
+        let take = pending.min(capacity);
+        let n = self.classes.len();
         let mut ids = Vec::with_capacity(take);
         let mut images = Vec::with_capacity(capacity * self.image_elems);
         let mut enqueued = Vec::with_capacity(take);
+        let mut tenants = Vec::with_capacity(take);
         let mut oldest = Duration::ZERO;
-        for _ in 0..take {
-            // `take <= queue.len()` by construction, but a sick invariant
-            // must degrade to a short batch, not a serving-loop panic.
-            let Some(r) = self.queue.pop_front() else { break };
-            oldest = oldest.max(now.duration_since(r.enqueued));
-            ids.push(r.id);
-            enqueued.push(r.enqueued);
-            images.extend_from_slice(&r.image);
+        let mut taken = 0usize;
+        while taken < take {
+            let c = self.rr;
+            if self.classes[c].queue.is_empty() {
+                // An idle class spends nothing and banks nothing.
+                self.classes[c].deficit = 0;
+                self.rr = (self.rr + 1) % n;
+                continue;
+            }
+            if self.classes[c].deficit == 0 {
+                self.classes[c].deficit = self.classes[c].weight;
+            }
+            while self.classes[c].deficit > 0 && taken < take {
+                let Some(r) = self.classes[c].queue.pop_front() else { break };
+                self.classes[c].deficit -= 1;
+                oldest = oldest.max(now.duration_since(r.enqueued));
+                ids.push(r.id);
+                tenants.push(r.tenant);
+                enqueued.push(r.enqueued);
+                images.extend_from_slice(&r.image);
+                taken += 1;
+            }
+            if self.classes[c].queue.is_empty() {
+                self.classes[c].deficit = 0;
+            }
+            if self.classes[c].deficit == 0 {
+                self.rr = (self.rr + 1) % n;
+            }
         }
         let real = ids.len();
         images.resize(capacity * self.image_elems, 0.0);
-        Some(Batch { ids, images, real, capacity, oldest_wait: oldest, enqueued })
+        Some(Batch { ids, images, real, capacity, oldest_wait: oldest, enqueued, tenants })
     }
 }
 
@@ -146,6 +261,10 @@ mod tests {
 
     fn req(id: u64) -> Request {
         Request::new(id, vec![0.5; 4], Tick::ZERO)
+    }
+
+    fn treq(id: u64, tenant: u32) -> Request {
+        Request::for_tenant(id, tenant, vec![0.5; 4], Tick::ZERO)
     }
 
     fn batcher() -> Batcher {
@@ -179,6 +298,7 @@ mod tests {
         assert_eq!(batch.oldest_wait, Duration::from_millis(10));
         // Per-row arrival instants cover exactly the real rows.
         assert_eq!(batch.enqueued, vec![Tick::ZERO]);
+        assert_eq!(batch.tenants, vec![0]);
         // Padding rows are zeros.
         assert!(batch.images[4..].iter().all(|&x| x == 0.0));
     }
@@ -272,5 +392,98 @@ mod tests {
         assert_eq!(batch.oldest_wait, Duration::from_millis(10));
         assert_eq!(b.pending(), 4);
         assert!(b.push(req(100)), "space freed after the batch fired");
+    }
+
+    #[test]
+    fn drr_interleaves_by_weight() {
+        // Two backlogged classes at weights 2:1 — a service round admits
+        // two rows of class 0 for every one of class 1.
+        let mut b = Batcher::with_weights(6, Duration::ZERO, 4, 64, &[2, 1]);
+        for i in 0..6 {
+            b.push(treq(i, 0));
+        }
+        for i in 10..16 {
+            b.push(treq(i, 1));
+        }
+        let batch = b.form(6, Tick::ZERO).unwrap();
+        assert_eq!(batch.ids, vec![0, 1, 10, 2, 3, 11]);
+        assert_eq!(batch.tenants, vec![0, 0, 1, 0, 0, 1]);
+        // The cursor and deficits persist: the next batch picks up where
+        // the round stopped instead of restarting at class 0.
+        let batch = b.form(6, Tick::ZERO).unwrap();
+        assert_eq!(batch.ids, vec![4, 5, 12, 13, 14, 15]);
+    }
+
+    #[test]
+    fn drr_never_starves_the_light_class() {
+        // Weight 7 vs 1 with a deep heavy backlog: every 8-row service
+        // round still carries one light-class row.
+        let mut b = Batcher::with_weights(8, Duration::ZERO, 4, 1024, &[7, 1]);
+        for i in 0..64 {
+            b.push(treq(i, 0));
+        }
+        for i in 100..108 {
+            b.push(treq(i, 1));
+        }
+        for round in 0..8 {
+            let batch = b.form(8, Tick::ZERO).unwrap();
+            let light = batch.tenants.iter().filter(|&&t| t == 1).count();
+            assert_eq!(light, 1, "round {round} carries exactly one light row");
+        }
+    }
+
+    #[test]
+    fn out_of_range_tenant_clamps_to_the_last_class() {
+        let mut b = Batcher::with_weights(4, Duration::ZERO, 4, 8, &[1, 1]);
+        assert!(b.push(treq(1, 7)));
+        assert_eq!(b.class_pending(1), 1, "tenant 7 lands in the last class");
+        assert_eq!(b.form(4, Tick::ZERO).unwrap().tenants, vec![7], "tag preserved verbatim");
+    }
+
+    #[test]
+    fn per_class_backpressure_is_isolated() {
+        // Class 0 saturates its budget; class 1 still accepts traffic, and
+        // rejects are charged to the class that overflowed.
+        let mut b = Batcher::with_weights(4, Duration::ZERO, 4, 4, &[1, 1]);
+        for i in 0..4 {
+            assert!(b.push(treq(i, 0)));
+        }
+        assert!(!b.push(treq(99, 0)), "class 0 is full");
+        assert!(b.push(treq(100, 1)), "class 1 has its own budget");
+        assert_eq!((b.class_rejected(0), b.class_rejected(1)), (1, 0));
+        assert_eq!(b.rejected, 1, "aggregate counter still tracks the total");
+    }
+
+    #[test]
+    fn idle_class_banks_no_deficit() {
+        // A class that goes idle mid-round must not hoard quantum and burst
+        // ahead when traffic returns: deficit resets on empty.
+        let mut b = Batcher::with_weights(4, Duration::ZERO, 4, 64, &[3, 1]);
+        b.push(treq(0, 0));
+        assert_eq!(b.form(4, Tick::ZERO).unwrap().ids, vec![0]);
+        for i in 1..4 {
+            b.push(treq(i, 0));
+        }
+        for i in 10..12 {
+            b.push(treq(i, 1));
+        }
+        // The cursor moved past class 0 when it went idle, so class 1 runs
+        // first; class 0 then earns exactly its weight (3) again — the
+        // unspent quantum from the short round did not carry over.
+        assert_eq!(b.form(4, Tick::ZERO).unwrap().ids, vec![10, 1, 2, 3]);
+        assert_eq!(b.form(4, Tick::ZERO).unwrap().ids, vec![11]);
+    }
+
+    #[test]
+    fn window_fires_for_a_trickle_tenant_behind_a_busy_one() {
+        // Class 1's lone request ages past the window even while class 0
+        // keeps its own head fresh — readiness tracks the oldest head
+        // across classes, not just one queue front.
+        let mut b = Batcher::with_weights(16, Duration::from_millis(5), 4, 64, &[1, 1]);
+        b.push(Request::for_tenant(1, 1, vec![0.5; 4], Tick::ZERO));
+        let later = Tick::ZERO + Duration::from_millis(6);
+        b.push(Request::for_tenant(2, 0, vec![0.5; 4], later));
+        assert!(b.ready(later), "aged class-1 head fires the window");
+        assert_eq!(b.oldest_wait(later), Duration::from_millis(6));
     }
 }

@@ -213,8 +213,8 @@ impl FaultSchedule {
     }
 
     /// Every built-in scenario token (CLI help + roundtrip tests).
-    pub fn builtin_names() -> [&'static str; 6] {
-        ["calm", "burst_ber", "retention_storm", "bank_takedown", "crash_loop", "latency_spike"]
+    pub fn builtin_names() -> &'static [&'static str] {
+        &["calm", "burst_ber", "retention_storm", "bank_takedown", "crash_loop", "latency_spike"]
     }
 
     /// Resolve a CLI `--faults`/`--scenario` spec: a built-in token first,

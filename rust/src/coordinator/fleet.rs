@@ -24,6 +24,18 @@
 //! paper's case for keeping one latency-optimal build next to the
 //! energy-optimal STT-AI Ultra pool.
 //!
+//! Under a non-default [`TenantMix`] the whole stack becomes class-aware:
+//! per-tenant arrival generators are merged into one seed-deterministic
+//! [`MuxArrivalGen`] stream, every request carries its tenant tag through the shard
+//! batchers' weighted deficit-round-robin queues, routing steers each
+//! class to its tier island (tight → fastest service, relaxed → lowest
+//! energy per request, both subject to an optional accuracy floor), the
+//! autoscaler holds the best active projection against the *tightest*
+//! class SLO, and the report gains per-tenant [`TenantLedger`] sections
+//! with the same byte-identical-at-any-worker-count guarantee. The
+//! degenerate single-default mix takes none of these branches and
+//! reproduces the pre-tenant reports byte for byte.
+//!
 //! Per-request sojourn latencies and per-request energy stream into
 //! fixed-footprint [`QuantileSketch`]es (relative error ≤ 1/64), merged in
 //! shard order into the fleet report — memory stays O(1) from 1e6 to 1e8
@@ -47,11 +59,12 @@ use crate::util::stats::QuantileSketch;
 
 use super::batcher::{Batch, Batcher, Request};
 use super::faults::FaultSchedule;
-use super::metrics::Metrics;
+use super::metrics::{Metrics, TenantLedger};
 use super::router::{Router, RouterPolicy};
 use super::serve;
 use super::supervisor::EngineSpec;
-use super::traffic::{ArrivalGen, ArrivalTrace};
+use super::tenant::{SloTier, TenantMix};
+use super::traffic::{ArrivalTrace, MuxArrivalGen};
 
 /// Fleet-level scheduling knobs (routing SLO + autoscaler hysteresis).
 #[derive(Debug, Clone, Copy)]
@@ -110,6 +123,18 @@ pub struct FleetConfig {
     /// Optional chaos composition: crashed/stalled engines refuse
     /// dispatch, latency faults stretch service time.
     pub faults: Option<FaultSchedule>,
+    /// The tenant mix sharing this fleet. The default single-tenant mix
+    /// takes every legacy code path and reproduces pre-tenant reports
+    /// byte for byte.
+    pub tenants: TenantMix,
+    /// Force the legacy single-queue scheduler (one FIFO class, global-SLO
+    /// routing and autoscaling) while keeping per-tenant arrival streams,
+    /// tags and ledgers — the ablation baseline the hetero payoff gate
+    /// compares against.
+    pub classless: bool,
+    /// Keep a per-request arrival/completion/tenant log for
+    /// [`FleetSim::render_record`] (the `fleet --record` JSON-lines dump).
+    pub record: bool,
 }
 
 impl Default for FleetConfig {
@@ -124,8 +149,20 @@ impl Default for FleetConfig {
             parallel: 1,
             policy: FleetPolicy::default(),
             faults: None,
+            tenants: TenantMix::default(),
+            classless: false,
+            record: false,
         }
     }
+}
+
+/// One real row of a batch in service: identity, tenant class, and the
+/// arrival instant its sojourn is measured from.
+#[derive(Debug, Clone, Copy)]
+struct InflightRow {
+    id: u64,
+    tenant: u32,
+    enqueued: Tick,
 }
 
 /// One batch in service on a shard (the payload of its completion event).
@@ -133,15 +170,26 @@ impl Default for FleetConfig {
 struct Inflight {
     real: usize,
     capacity: usize,
-    /// Arrival instant of each real row — sojourn latency is completion
-    /// minus arrival, per request.
-    enqueued: Vec<Tick>,
+    /// The real rows — sojourn latency is completion minus arrival, per
+    /// request, booked into the row's tenant ledger.
+    rows: Vec<InflightRow>,
+}
+
+/// One line of the `--record` log: a request's full fleet transit.
+#[derive(Debug, Clone, Copy)]
+struct RecordRow {
+    id: u64,
+    tenant: u32,
+    engine: usize,
+    arrival_ns: u64,
+    completion_ns: u64,
 }
 
 #[derive(Debug)]
 enum EventKind {
-    /// The next trace arrival (exactly one in the heap at a time).
-    Arrival,
+    /// The next trace arrival (exactly one in the heap at a time), tagged
+    /// with the tenant whose stream produced it.
+    Arrival { tenant: u32 },
     /// A shard finishes its in-service batch.
     Complete { shard: usize, job: Inflight },
     /// Re-scan a shard holding queued work (window deadline, warm-up end,
@@ -224,6 +272,22 @@ pub struct FleetSim {
     scale_ups: u64,
     scale_downs: u64,
     image: Vec<f32>,
+    /// Class-aware scheduling on? (non-default mix and not forced
+    /// classless — the legacy routing/admission paths run otherwise).
+    tenant_aware: bool,
+    /// Per-tenant accounting on? (any non-default mix, even classless, so
+    /// the single-queue baseline reports the same ledgers).
+    book_tenants: bool,
+    /// Effective per-tenant SLOs (tenant order; unset SLOs inherit the
+    /// fleet policy target).
+    slos: Vec<Duration>,
+    /// The tightest per-tenant SLO — the class-aware autoscaler's target.
+    tightest_slo: Duration,
+    ledgers: Vec<TenantLedger>,
+    /// The merged arrival stream ended (a finite replay ran dry) before
+    /// `cfg.requests` arrivals.
+    exhausted: bool,
+    record_log: Vec<RecordRow>,
 }
 
 impl FleetSim {
@@ -245,6 +309,16 @@ impl FleetSim {
         }
         ladder.push(cfg.batch);
         let min_active = cfg.policy.min_engines.max(1);
+        let tenant_aware = !cfg.classless && !cfg.tenants.is_default();
+        let book_tenants = !cfg.tenants.is_default();
+        let slos: Vec<Duration> = (0..cfg.tenants.tenants.len())
+            .map(|i| cfg.tenants.effective_slo(i, cfg.policy.slo))
+            .collect();
+        let tightest_slo = cfg.tenants.tightest_slo(cfg.policy.slo);
+        let ledgers = vec![TenantLedger::new(); cfg.tenants.tenants.len()];
+        // Class-aware admission only when the scheduler is tenant-aware;
+        // the classless baseline keeps the historical single FIFO.
+        let weights = if tenant_aware { cfg.tenants.weights() } else { vec![1] };
         let shards = specs
             .into_iter()
             .enumerate()
@@ -255,7 +329,13 @@ impl FleetSim {
                 )?;
                 Ok(Shard {
                     spec,
-                    batcher: Batcher::new(cfg.batch, cfg.window, cfg.image_elems, cfg.queue_depth),
+                    batcher: Batcher::with_weights(
+                        cfg.batch,
+                        cfg.window,
+                        cfg.image_elems,
+                        cfg.queue_depth,
+                        &weights,
+                    ),
                     router,
                     latency: QuantileSketch::new(),
                     energy_pj: QuantileSketch::new(),
@@ -286,6 +366,13 @@ impl FleetSim {
             scale_ups: 0,
             scale_downs: 0,
             image,
+            tenant_aware,
+            book_tenants,
+            slos,
+            tightest_slo,
+            ledgers,
+            exhausted: false,
+            record_log: Vec::new(),
         })
     }
 
@@ -349,14 +436,82 @@ impl FleetSim {
         fast
     }
 
+    /// Class-aware routing: within the tenant's eligible set (active
+    /// shards over its accuracy floor), prefer the tier island — tight
+    /// classes the fastest-service shards, relaxed classes the lowest
+    /// energy per request, standard classes everything — then
+    /// least-outstanding with lowest-index ties. When even that pick's
+    /// projection misses the *tenant's* SLO, the island preference yields:
+    /// fall back to the fastest projection among all eligible shards.
+    fn route_tenant(&self, tenant: u32, now: Tick) -> usize {
+        let spec = &self.cfg.tenants.tenants[tenant as usize];
+        let floor = spec.accuracy_floor;
+        let passes = |s: &Shard| floor.is_none_or(|f| s.spec.est_accuracy >= f);
+        // If no active shard clears the floor, serving beats starving:
+        // the floor filter falls away and every active shard is eligible.
+        let any_pass = self.shards.iter().any(|s| s.active && passes(s));
+        let eligible = |s: &Shard| s.active && (!any_pass || passes(s));
+        let mut min_service = Duration::MAX;
+        let mut min_energy = f64::INFINITY;
+        for s in self.shards.iter().filter(|s| eligible(s)) {
+            min_service = min_service.min(s.spec.service);
+            min_energy = min_energy.min(s.spec.energy_per_req_j);
+        }
+        let in_island = |s: &Shard| match spec.tier {
+            SloTier::Tight => s.spec.service == min_service,
+            SloTier::Relaxed => s.spec.energy_per_req_j == min_energy,
+            SloTier::Standard => true,
+        };
+        let mut least = usize::MAX;
+        let mut least_out = usize::MAX;
+        for (i, s) in self.shards.iter().enumerate() {
+            if eligible(s) && in_island(s) && s.outstanding < least_out {
+                least = i;
+                least_out = s.outstanding;
+            }
+        }
+        debug_assert!(least != usize::MAX, "min_engines >= 1 keeps one shard active");
+        if self.projected(least, now) <= self.slos[tenant as usize] {
+            return least;
+        }
+        let mut fast = least;
+        let mut fast_proj = self.projected(least, now);
+        for (i, s) in self.shards.iter().enumerate() {
+            if i == least || !eligible(s) {
+                continue;
+            }
+            let p = self.projected(i, now);
+            if p < fast_proj {
+                fast = i;
+                fast_proj = p;
+            }
+        }
+        fast
+    }
+
     /// One autoscaler round: queue-depth hysteresis. Scale-up activates the
     /// lowest-index inactive shard (warm after `warmup`); scale-down
-    /// retires the highest-index active shard that is fully idle.
+    /// retires the highest-index active shard that is fully idle. A
+    /// tenant-aware fleet also scales up — and declines to scale down —
+    /// whenever even the best active projection would miss the tightest
+    /// class SLO: queue depth alone reacts too late for a 2 ms class on a
+    /// 1 ms-service fleet.
     fn autoscale_round(&mut self, now: Tick) {
         let p = self.cfg.policy;
         let active = self.shards.iter().filter(|s| s.active).count();
         let queued: usize = self.shards.iter().map(|s| s.batcher.pending()).sum();
-        if queued > p.up_per_engine * active {
+        let slo_pressure = self.tenant_aware && {
+            let best = self
+                .shards
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| s.active)
+                .map(|(i, _)| self.projected(i, now))
+                .min()
+                .unwrap_or(Duration::MAX);
+            best > self.tightest_slo
+        };
+        if queued > p.up_per_engine * active || slo_pressure {
             if let Some(i) = self.shards.iter().position(|s| !s.active) {
                 let s = &mut self.shards[i];
                 s.active = true;
@@ -376,9 +531,10 @@ impl FleetSim {
         }
     }
 
-    /// All offered traffic admitted and fully drained?
+    /// All offered traffic admitted (or the arrival stream ran dry — a
+    /// finite replay) and fully drained?
     fn finished(&self) -> bool {
-        self.arrived >= self.cfg.requests
+        (self.arrived >= self.cfg.requests || self.exhausted)
             && self
                 .shards
                 .iter()
@@ -424,8 +580,14 @@ impl FleetSim {
             let service = s.spec.service.mul_f64(mult).max(Duration::from_nanos(1));
             let done = now + service;
             s.busy_until = Some(done);
-            let Batch { real, capacity, enqueued, .. } = b;
-            let job = Inflight { real, capacity, enqueued };
+            let Batch { real, capacity, ids, tenants, enqueued, .. } = b;
+            let rows = ids
+                .iter()
+                .zip(&tenants)
+                .zip(&enqueued)
+                .map(|((&id, &tenant), &enqueued)| InflightRow { id, tenant, enqueued })
+                .collect();
+            let job = Inflight { real, capacity, rows };
             self.push_event(done, EventKind::Complete { shard: i, job });
         }
     }
@@ -434,10 +596,23 @@ impl FleetSim {
     /// reproducibility; the CLI always injects [`Clock::virtual_at_zero`]).
     pub fn run(&mut self, clock: &Clock) -> crate::Result<FleetSimReport> {
         let epoch = clock.now();
-        let mut gen = ArrivalGen::new(&self.trace);
+        // One merged, seed-deterministic stream over the per-tenant traces
+        // (tenants without a trace of their own inherit the run's). The
+        // default mix has exactly one stream — the run trace — so the mux
+        // degenerates to the plain generator and the schedule is unchanged.
+        let traces: Vec<ArrivalTrace> = self
+            .cfg
+            .tenants
+            .tenants
+            .iter()
+            .map(|t| t.trace.clone().unwrap_or_else(|| self.trace.clone()))
+            .collect();
+        let mut gen = MuxArrivalGen::new(&traces);
         if self.cfg.requests > 0 {
-            let at = epoch + gen.next_offset();
-            self.push_event(at, EventKind::Arrival);
+            match gen.next_arrival() {
+                Some((off, tenant)) => self.push_event(epoch + off, EventKind::Arrival { tenant }),
+                None => self.exhausted = true,
+            }
         }
         if self.cfg.autoscale {
             self.push_event(epoch + self.cfg.policy.scale_period, EventKind::Autoscale);
@@ -447,23 +622,36 @@ impl FleetSim {
             let now = clock.now();
             self.events += 1;
             match ev.kind {
-                EventKind::Arrival => {
-                    let idx = self.route(now);
+                EventKind::Arrival { tenant } => {
+                    let idx = if self.tenant_aware {
+                        self.route_tenant(tenant, now)
+                    } else {
+                        self.route(now)
+                    };
                     let id = self.arrived as u64;
                     let image = self.image.clone();
+                    if self.book_tenants {
+                        self.ledgers[tenant as usize].arrived += 1;
+                    }
                     let s = &mut self.shards[idx];
-                    if s.batcher.push(Request::new(id, image, now)) {
+                    if s.batcher.push(Request::for_tenant(id, tenant, image, now)) {
                         s.outstanding += 1;
                         s.peak_outstanding = s.peak_outstanding.max(s.outstanding);
+                    } else if self.book_tenants {
+                        self.ledgers[tenant as usize].rejected += 1;
                     }
                     self.arrived += 1;
                     if self.arrived < self.cfg.requests {
-                        let at = epoch + gen.next_offset();
-                        self.push_event(at, EventKind::Arrival);
+                        match gen.next_arrival() {
+                            Some((off, tenant)) => {
+                                self.push_event(epoch + off, EventKind::Arrival { tenant });
+                            }
+                            None => self.exhausted = true,
+                        }
                     }
                 }
                 EventKind::Complete { shard, job } => {
-                    let slo = self.cfg.policy.slo;
+                    let fleet_slo = self.cfg.policy.slo;
                     let s = &mut self.shards[shard];
                     s.busy_until = None;
                     s.batches += 1;
@@ -471,12 +659,40 @@ impl FleetSim {
                     s.served += job.real as u64;
                     s.outstanding = s.outstanding.saturating_sub(job.real);
                     let pj = (s.spec.energy_per_req_j * 1e12) as u64;
-                    for &enq in &job.enqueued {
-                        let sojourn = now.duration_since(enq);
+                    for row in &job.rows {
+                        let sojourn = now.duration_since(row.enqueued);
                         s.latency.record(sojourn.as_micros() as u64);
                         s.energy_pj.record(pj);
+                        // Shard violations score against the tenant's SLO
+                        // under class-aware scheduling, the fleet SLO on
+                        // the legacy paths (including the classless
+                        // baseline, whose scheduler knows only that one).
+                        let slo = if self.tenant_aware {
+                            self.slos[row.tenant as usize]
+                        } else {
+                            fleet_slo
+                        };
                         if sojourn > slo {
                             s.slo_violations += 1;
+                        }
+                        // The per-tenant ledger always scores the tenant's
+                        // own SLO so baseline and class-aware runs stay
+                        // comparable per class.
+                        if self.book_tenants {
+                            self.ledgers[row.tenant as usize].record_completion(
+                                sojourn,
+                                pj,
+                                self.slos[row.tenant as usize],
+                            );
+                        }
+                        if self.cfg.record {
+                            self.record_log.push(RecordRow {
+                                id: row.id,
+                                tenant: row.tenant,
+                                engine: shard,
+                                arrival_ns: row.enqueued.duration_since(epoch).as_nanos() as u64,
+                                completion_ns: now.duration_since(epoch).as_nanos() as u64,
+                            });
                         }
                     }
                 }
@@ -526,10 +742,39 @@ impl FleetSim {
                 p99_us: s.latency.quantile(99.0),
             })
             .collect::<Vec<_>>();
-        let offered = self.cfg.requests as u64;
+        // Actual arrivals, not `cfg.requests`: equal on every infinite
+        // trace, but a finite replay can run dry first.
+        let offered = self.arrived as u64;
         let served: u64 = engines.iter().map(|e| e.served).sum();
         let rejected: u64 = self.shards.iter().map(|s| s.batcher.rejected).sum();
         let malformed: u64 = self.shards.iter().map(|s| s.batcher.malformed).sum();
+        let tenants = if self.book_tenants {
+            self.cfg
+                .tenants
+                .tenants
+                .iter()
+                .zip(&self.ledgers)
+                .enumerate()
+                .map(|(i, (t, l))| FleetTenantReport {
+                    name: t.name.clone(),
+                    tier: t.tier.token(),
+                    slo: self.slos[i],
+                    weight: t.weight,
+                    arrived: l.arrived,
+                    served: l.served,
+                    rejected: l.rejected,
+                    slo_violations: l.slo_violations,
+                    p50_us: l.latency.quantile(50.0),
+                    p99_us: l.latency.quantile(99.0),
+                    p999_us: l.latency.quantile(99.9),
+                    max_us: l.latency.max(),
+                    mean_us: l.latency.mean(),
+                    mean_uj: l.energy_pj.mean() / 1e6,
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
         let secs = sim_elapsed.as_secs_f64();
         FleetSimReport {
             trace: self.trace.name.clone(),
@@ -556,9 +801,62 @@ impl FleetSim {
             total_j: served as f64 * energy_pj.mean() * 1e-12,
             sim_elapsed,
             throughput_rps: if secs > 0.0 { served as f64 / secs } else { 0.0 },
+            tenants,
             engines,
         }
     }
+
+    /// The `--record` log as JSON lines: a header naming the run (so a
+    /// replay restores the trace identity and the round trip reproduces
+    /// the report byte for byte), then one line per served request in id —
+    /// i.e. arrival — order. Empty body unless the run had
+    /// [`FleetConfig::record`] set.
+    pub fn render_record(&self) -> String {
+        use std::fmt::Write as _;
+        let mut rows = self.record_log.clone();
+        rows.sort_unstable_by_key(|r| r.id);
+        let mut out = String::new();
+        let header = Json::obj(vec![
+            ("trace", Json::Str(self.trace.name.clone())),
+            ("seed", self.trace.seed.into()),
+            ("requests", (self.arrived as u64).into()),
+        ]);
+        let _ = writeln!(out, "{header}");
+        for r in rows {
+            let line = Json::obj(vec![
+                ("id", r.id.into()),
+                ("tenant", (r.tenant as u64).into()),
+                ("engine", (r.engine as u64).into()),
+                ("arrival_ns", r.arrival_ns.into()),
+                ("completion_ns", r.completion_ns.into()),
+            ]);
+            let _ = writeln!(out, "{line}");
+        }
+        out
+    }
+}
+
+/// Per-tenant rows of the [`FleetSimReport`] (present when the run's mix
+/// is not the single default tenant).
+#[derive(Debug, Clone)]
+pub struct FleetTenantReport {
+    pub name: String,
+    /// The tenant's [`SloTier`] token.
+    pub tier: &'static str,
+    /// Effective SLO the ledger scored against.
+    pub slo: Duration,
+    pub weight: u64,
+    pub arrived: u64,
+    pub served: u64,
+    pub rejected: u64,
+    pub slo_violations: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub p999_us: u64,
+    pub max_us: u64,
+    pub mean_us: f64,
+    /// Mean GLB energy per served request (µJ).
+    pub mean_uj: f64,
 }
 
 /// Per-engine rows of the [`FleetSimReport`].
@@ -611,6 +909,9 @@ pub struct FleetSimReport {
     pub total_j: f64,
     pub sim_elapsed: Duration,
     pub throughput_rps: f64,
+    /// Per-tenant ledgers; empty for the default single-tenant mix (whose
+    /// reports stay byte-identical to the pre-tenant stack).
+    pub tenants: Vec<FleetTenantReport>,
     pub engines: Vec<FleetEngineReport>,
 }
 
@@ -680,6 +981,32 @@ impl FleetSimReport {
             self.events,
             self.throughput_rps
         );
+        for t in &self.tenants {
+            let _ = writeln!(
+                s,
+                "  tenant {} [{}] w={}: arrived={} served={} rejected={} slo={}ms viol={} \
+                 ({:.3}%) p50={}us p99={}us p999={}us max={}us mean={:.0}us energy={:.3}uJ/req",
+                t.name,
+                t.tier,
+                t.weight,
+                t.arrived,
+                t.served,
+                t.rejected,
+                t.slo.as_millis(),
+                t.slo_violations,
+                if t.served == 0 {
+                    0.0
+                } else {
+                    t.slo_violations as f64 / t.served as f64 * 100.0
+                },
+                t.p50_us,
+                t.p99_us,
+                t.p999_us,
+                t.max_us,
+                t.mean_us,
+                t.mean_uj,
+            );
+        }
         for e in &self.engines {
             let _ = writeln!(
                 s,
@@ -750,6 +1077,31 @@ impl FleetSimReport {
         ];
         if let Some(sc) = &self.scenario {
             fields.push(("scenario", Json::Str(sc.clone())));
+        }
+        if !self.tenants.is_empty() {
+            let tenants = self
+                .tenants
+                .iter()
+                .map(|t| {
+                    Json::obj(vec![
+                        ("name", Json::Str(t.name.clone())),
+                        ("tier", Json::Str(t.tier.to_string())),
+                        ("slo_ms", (t.slo.as_millis() as u64).into()),
+                        ("weight", t.weight.into()),
+                        ("arrived", t.arrived.into()),
+                        ("served", t.served.into()),
+                        ("rejected", t.rejected.into()),
+                        ("slo_violations", t.slo_violations.into()),
+                        ("p50_us", t.p50_us.into()),
+                        ("p99_us", t.p99_us.into()),
+                        ("p999_us", t.p999_us.into()),
+                        ("max_us", t.max_us.into()),
+                        ("mean_us", Json::Str(format!("{:.1}", t.mean_us))),
+                        ("energy_mean_uj", Json::Str(format!("{:.3}", t.mean_uj))),
+                    ])
+                })
+                .collect();
+            fields.push(("tenants", Json::Arr(tenants)));
         }
         Json::obj(fields)
     }
@@ -972,5 +1324,133 @@ mod tests {
         let j = r.to_json().to_string();
         assert!(j.contains("\"trace\":\"poisson\""), "{j}");
         assert!(j.contains("\"events\":"), "{j}");
+        assert!(!j.contains("\"tenants\""), "default mix emits no tenant section: {j}");
+        assert!(r.tenants.is_empty());
+    }
+
+    fn hetero() -> Vec<EngineSpec> {
+        vec![EngineSpec::paper(GlbVariant::Sram), EngineSpec::paper(GlbVariant::SttAiUltra)]
+    }
+
+    fn mix_cfg(mix: &str) -> FleetConfig {
+        FleetConfig {
+            tenants: crate::coordinator::TenantMix::builtin(mix).unwrap(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn tenant_routing_prefers_tier_islands() {
+        // two_tier on SRAM+Ultra: the tight class heads for the
+        // fastest-service shard, the relaxed class for the most
+        // energy-efficient one — each island empty of the other's traffic.
+        let s = sim("poisson", hetero(), mix_cfg("two_tier"));
+        assert!(s.tenant_aware);
+        assert_eq!(s.route_tenant(0, Tick::ZERO), 0, "tight -> SRAM island");
+        assert_eq!(s.route_tenant(1, Tick::ZERO), 1, "relaxed -> Ultra island");
+    }
+
+    #[test]
+    fn tenant_slo_pressure_spills_off_the_island() {
+        // Load the Ultra island until the relaxed class's projection
+        // misses its 50 ms SLO (1 ms service × ceil(817/16) = 52 ms): the
+        // island preference must yield to the fastest projection.
+        let mut s = sim("poisson", hetero(), mix_cfg("two_tier"));
+        s.shards[1].outstanding = 816;
+        assert_eq!(s.route_tenant(1, Tick::ZERO), 0, "relaxed spills to SRAM");
+        s.shards[1].outstanding = 100;
+        assert_eq!(s.route_tenant(1, Tick::ZERO), 1, "within SLO the island holds");
+    }
+
+    #[test]
+    fn accuracy_floor_filters_shards_until_none_remain() {
+        // three_class's tight tenant has floor 0.999: SRAM (1.0) passes,
+        // Ultra (0.995) does not — even when Ultra is emptier.
+        let mut s = sim("poisson", hetero(), mix_cfg("three_class"));
+        s.shards[0].outstanding = 8;
+        assert_eq!(s.route_tenant(0, Tick::ZERO), 0, "floor keeps tight off Ultra");
+        // On an all-Ultra fleet nothing clears the floor: serving beats
+        // starving, so the filter falls away.
+        let s = sim("poisson", EngineSpec::paper_fleet(2), mix_cfg("three_class"));
+        assert_eq!(s.route_tenant(0, Tick::ZERO), 0, "fallback to every active shard");
+    }
+
+    #[test]
+    fn classless_mode_keeps_legacy_scheduling_but_books_ledgers() {
+        let cfg = FleetConfig { classless: true, ..mix_cfg("two_tier") };
+        let mut s = sim("poisson", hetero(), cfg);
+        assert!(!s.tenant_aware && s.book_tenants);
+        let r = s.run(&Clock::virtual_at_zero()).unwrap();
+        accounting_closes(&r);
+        assert_eq!(r.tenants.len(), 2, "baseline still reports per-tenant ledgers");
+        assert_eq!(
+            r.tenants.iter().map(|t| t.arrived).sum::<u64>(),
+            r.offered,
+            "every arrival is booked to exactly one tenant"
+        );
+    }
+
+    #[test]
+    fn tenant_autoscaler_reacts_to_the_tightest_class_projection() {
+        // All-Ultra fleet, two_tier mix: outstanding 32 projects 3 ms on a
+        // 1 ms-service shard — past the 2 ms tight SLO but nowhere near
+        // the queue-depth trigger. The class-aware autoscaler must scale
+        // up anyway, and must not retire capacity while pressure holds.
+        let mut cfg = FleetConfig { autoscale: true, ..mix_cfg("two_tier") };
+        cfg.policy.min_engines = 1;
+        let mut s = sim("poisson", EngineSpec::paper_fleet(3), cfg);
+        s.shards[0].outstanding = 32;
+        s.autoscale_round(Tick::ZERO);
+        assert_eq!(s.scale_ups, 1, "tightest-SLO pressure scales up without deep queues");
+        assert!(s.shards[1].active);
+        // Pressure gone (projections back under 2 ms): the idle extra
+        // shard retires through the ordinary hysteresis path.
+        s.shards[0].outstanding = 0;
+        s.shards[1].warm_at = Tick::ZERO;
+        s.autoscale_round(Tick::ZERO);
+        assert_eq!(s.scale_downs, 1, "no pressure, no queue: idle shard retires");
+        assert!(!s.shards[1].active);
+    }
+
+    #[test]
+    fn two_tier_run_reports_per_tenant_ledgers_that_close() {
+        let cfg = FleetConfig { requests: 4_000, ..mix_cfg("two_tier") };
+        let mut s = sim("poisson", hetero(), cfg);
+        let r = s.run(&Clock::virtual_at_zero()).unwrap();
+        accounting_closes(&r);
+        assert_eq!(r.tenants.len(), 2);
+        for t in &r.tenants {
+            assert_eq!(t.arrived, t.served + t.rejected, "{}: tenant accounting closes", t.name);
+            assert!(t.served > 0, "{}: class saw traffic", t.name);
+            assert!(t.p99_us >= t.p50_us && t.max_us >= t.p999_us, "{}", t.name);
+        }
+        assert_eq!(r.tenants.iter().map(|t| t.served).sum::<u64>(), r.served);
+        let text = r.render();
+        assert!(text.contains("tenant tight [tight]"), "{text}");
+        assert!(text.contains("tenant relaxed [relaxed]"), "{text}");
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"tenants\":["), "{j}");
+    }
+
+    #[test]
+    fn record_log_round_trips_through_the_replay_trace() {
+        // Record a small single-tenant run, replay the log, and demand the
+        // byte-identical report — arrivals, routing, batching, energy and
+        // all (the record/replay contract).
+        let cfg =
+            FleetConfig { requests: 500, record: true, ..Default::default() };
+        let mut s = sim("poisson", EngineSpec::paper_fleet(2), cfg.clone());
+        let r1 = s.run(&Clock::virtual_at_zero()).unwrap();
+        let log = s.render_record();
+        assert_eq!(log.lines().count(), 501, "header + one line per request");
+        let path = std::env::temp_dir()
+            .join(format!("stt_ai_fleet_record_{}.jsonl", std::process::id()));
+        std::fs::write(&path, &log).unwrap();
+        let replay = ArrivalTrace::parse(path.to_str().unwrap()).unwrap();
+        std::fs::remove_file(&path).ok();
+        let mut s2 = FleetSim::new(replay, EngineSpec::paper_fleet(2), cfg).unwrap();
+        let r2 = s2.run(&Clock::virtual_at_zero()).unwrap();
+        assert_eq!(r2.to_json().to_string(), r1.to_json().to_string());
+        assert_eq!(r2.render(), r1.render());
     }
 }

@@ -134,6 +134,70 @@ impl Metrics {
     }
 }
 
+/// Per-tenant serving ledger for the fleet simulator: one sojourn-latency
+/// and one energy-per-request sketch plus the class's own accounting
+/// counters, so a multi-tenant report can state each class's p50/p99/p999,
+/// energy and SLO violations independently of its neighbours.
+///
+/// Like [`Metrics`], every record is tick-stamped from the injected clock
+/// and the sketches are mergeable — per-shard ledgers merged in shard
+/// order produce byte-identical figures at any worker count.
+#[derive(Debug, Clone)]
+pub struct TenantLedger {
+    /// Per-request sojourn (arrival → batch completion), microseconds.
+    pub latency: QuantileSketch,
+    /// Per-request energy attributed at completion, picojoules.
+    pub energy_pj: QuantileSketch,
+    /// Requests this tenant offered (accepted + rejected).
+    pub arrived: u64,
+    pub served: u64,
+    /// Backpressure rejects charged to this tenant's class queue.
+    pub rejected: u64,
+    /// Completions whose sojourn exceeded the tenant's effective SLO.
+    pub slo_violations: u64,
+}
+
+impl Default for TenantLedger {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TenantLedger {
+    pub fn new() -> Self {
+        Self {
+            latency: QuantileSketch::new(),
+            energy_pj: QuantileSketch::new(),
+            arrived: 0,
+            served: 0,
+            rejected: 0,
+            slo_violations: 0,
+        }
+    }
+
+    /// Book one completed request: its sojourn, its energy share, and
+    /// whether it broke the tenant's SLO.
+    pub fn record_completion(&mut self, sojourn: Duration, energy_pj: u64, slo: Duration) {
+        self.served += 1;
+        self.latency.record(sojourn.as_micros() as u64);
+        self.energy_pj.record(energy_pj);
+        if sojourn > slo {
+            self.slo_violations += 1;
+        }
+    }
+
+    /// Fold another ledger of the same tenant into this one (merge order
+    /// must be deterministic — the fleet merges in shard order).
+    pub fn merge(&mut self, other: &TenantLedger) {
+        self.latency.merge(&other.latency);
+        self.energy_pj.merge(&other.energy_pj);
+        self.arrived += other.arrived;
+        self.served += other.served;
+        self.rejected += other.rejected;
+        self.slo_violations += other.slo_violations;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -243,5 +307,33 @@ mod tests {
         assert!((sk99 - p299).abs() / p299 < 0.2, "sketch {sk99} vs P² {p299}");
         // The summary's max can never be undercut by a percentile.
         assert!(m.latency.quantile(99.9) <= m.latency.max());
+    }
+
+    #[test]
+    fn tenant_ledger_books_completions_and_violations() {
+        let mut l = TenantLedger::new();
+        let slo = Duration::from_millis(2);
+        l.record_completion(Duration::from_millis(1), 240, slo);
+        l.record_completion(Duration::from_millis(3), 150, slo);
+        l.record_completion(slo, 150, slo);
+        assert_eq!(l.served, 3);
+        assert_eq!(l.slo_violations, 1, "exactly-at-SLO is not a violation");
+        assert_eq!(l.latency.max(), 3_000);
+        assert_eq!(l.energy_pj.max(), 240);
+    }
+
+    #[test]
+    fn tenant_ledger_merge_is_exact_on_counters() {
+        let slo = Duration::from_millis(10);
+        let mut a = TenantLedger::new();
+        a.arrived = 5;
+        a.rejected = 1;
+        a.record_completion(Duration::from_millis(1), 100, slo);
+        let mut b = TenantLedger::new();
+        b.arrived = 3;
+        b.record_completion(Duration::from_millis(20), 200, slo);
+        a.merge(&b);
+        assert_eq!((a.arrived, a.served, a.rejected, a.slo_violations), (8, 2, 1, 1));
+        assert_eq!(a.latency.max(), 20_000);
     }
 }

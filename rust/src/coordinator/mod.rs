@@ -15,16 +15,26 @@
 //!   served batch.
 //! * [`traffic`] — open-loop arrival-trace DSL: seeded Poisson, diurnal
 //!   (raised-cosine rate via thinning), bursty (two-state MMPP), uniform,
-//!   and closed patterns, from builtin tokens, JSON files, or the
-//!   `[traffic]` config section.
+//!   closed, and replay (recorded JSON-lines timestamps) patterns, from
+//!   builtin tokens, JSON files, or the `[traffic]` config section;
+//!   [`MuxArrivalGen`] merges per-tenant streams into one deterministic
+//!   arrival order.
+//! * [`tenant`] — multi-tenant SLO classes: [`TenantSpec`] (tier, weight,
+//!   own arrival trace, optional accuracy floor) grouped into a
+//!   [`TenantMix`] from builtin tokens, JSON files, or the `[tenants]`
+//!   config section. The default single-tenant mix reproduces the
+//!   pre-tenant stack byte for byte.
 //! * [`fleet`] — discrete-event fleet simulator: one event heap interleaves
 //!   open-loop arrivals, per-shard batch completions, window-deadline
 //!   wakes, and autoscale rounds over a heterogeneous fleet of
 //!   [`EngineSpec`]s; routing is least-outstanding with an SLO-aware
 //!   fallback to the fastest projection (the SRAM island), and per-request
-//!   latency/energy stream into mergeable sketches at O(1) memory.
-//!   [`serve::closed_loop`] is its degenerate one-shard/closed-arrival
-//!   configuration ([`fleet::run_closed`]).
+//!   latency/energy stream into mergeable sketches at O(1) memory. Under a
+//!   non-default [`TenantMix`] the batcher runs weighted deficit
+//!   round-robin across per-class queues, routing prefers per-tier islands
+//!   under each tenant's own SLO, and the report carries per-tenant
+//!   ledgers. [`serve::closed_loop`] is its degenerate
+//!   one-shard/closed-arrival configuration ([`fleet::run_closed`]).
 //! * [`accuracy`] — Fig. 21-style evaluation loops (Top-1/Top-5, pruning).
 //! * [`faults`] — deterministic fault-schedule DSL: seeded, timed BER
 //!   escalations, retention storms at the inverted guard-band corner, bank
@@ -64,14 +74,18 @@ pub mod metrics;
 pub mod router;
 pub mod serve;
 pub mod supervisor;
+pub mod tenant;
 pub mod traffic;
 
 pub use accuracy::{AccuracyReport, Fig21Row};
 pub use batcher::{Batch, Batcher, Request};
 pub use engine::{Engine, EngineConfig};
 pub use faults::{EffectiveFaults, FaultEvent, FaultKind, FaultSchedule};
-pub use fleet::{FleetConfig, FleetEngineReport, FleetPolicy, FleetSim, FleetSimReport};
-pub use metrics::Metrics;
+pub use fleet::{
+    FleetConfig, FleetEngineReport, FleetPolicy, FleetSim, FleetSimReport, FleetTenantReport,
+};
+pub use metrics::{Metrics, TenantLedger};
 pub use router::{Router, RouterPolicy, Variant};
 pub use supervisor::{ChaosConfig, EngineSpec, FleetReport, Health, Supervisor, SupervisorPolicy};
-pub use traffic::{ArrivalGen, ArrivalTrace, TracePattern};
+pub use tenant::{SloTier, TenantMix, TenantSpec};
+pub use traffic::{ArrivalGen, ArrivalTrace, MuxArrivalGen, TracePattern};

@@ -89,6 +89,11 @@ pub struct EngineSpec {
     /// energy-per-request metric sums these across the engines that
     /// actually served each request.
     pub energy_per_req_j: f64,
+    /// Modeled inference accuracy of this build (fraction of clean).
+    /// Tenants with an accuracy floor are only routed to shards at or
+    /// above it; the paper builds degrade mildly with BER budget (SRAM
+    /// clean, STT-AI 0.999, Ultra 0.995 under its relaxed LSB budget).
+    pub est_accuracy: f64,
 }
 
 impl EngineSpec {
@@ -105,10 +110,10 @@ impl EngineSpec {
     /// large static-power and area savings.
     pub fn paper(variant: GlbVariant) -> Self {
         let tech = TechConfig::default();
-        let (service_us, energy_per_req_j) = match variant {
-            GlbVariant::Sram => (700, 2.4e-4),
-            GlbVariant::SttAi => (900, 1.8e-4),
-            GlbVariant::SttAiUltra => (1_000, 1.5e-4),
+        let (service_us, energy_per_req_j, est_accuracy) = match variant {
+            GlbVariant::Sram => (700, 2.4e-4, 1.0),
+            GlbVariant::SttAi => (900, 1.8e-4, 0.999),
+            GlbVariant::SttAiUltra => (1_000, 1.5e-4, 0.995),
         };
         Self {
             label: variant.label().to_string(),
@@ -119,6 +124,7 @@ impl EngineSpec {
             lsb_delta: tech.lsb_delta(),
             service: Duration::from_micros(service_us),
             energy_per_req_j,
+            est_accuracy,
         }
     }
 
@@ -147,6 +153,10 @@ impl EngineSpec {
         let energy_per_req_j = sel
             .energy_per_request_j()
             .unwrap_or_else(|| Self::paper(sel.variant()).energy_per_req_j);
+        let est_accuracy = sel
+            .metric("est_accuracy")
+            .filter(|a| a.is_finite() && *a > 0.0)
+            .unwrap_or_else(|| Self::paper(sel.variant()).est_accuracy);
         Self {
             label: cfg.name.clone(),
             variant: sel.variant(),
@@ -156,6 +166,7 @@ impl EngineSpec {
             lsb_delta: cfg.tech.lsb_delta(),
             service,
             energy_per_req_j,
+            est_accuracy,
         }
     }
 }

@@ -1,0 +1,428 @@
+//! Multi-tenant SLO-class DSL for the serving stack.
+//!
+//! A [`TenantSpec`] names one workload class sharing the fleet: its SLO
+//! tier (which routing island it prefers), an optional per-class sojourn
+//! target, a weighted-deficit-round-robin admission weight, an optional
+//! per-tenant [`ArrivalTrace`], and an optional accuracy floor that keeps
+//! the class off relaxed-BER approximate-memory shards. A [`TenantMix`] is
+//! the named set of tenants one fleet run serves.
+//!
+//! Like the fault and traffic DSLs, mixes come from three places sharing
+//! one grammar: built-in tokens ([`TenantMix::builtin`] — `default`,
+//! `two_tier`, `three_class`), JSON files ([`TenantMix::parse`] falls back
+//! to a path; the committed golden lives at
+//! `rust/golden/fleet_tenants.mix.json`), and the `[tenants]` section of a
+//! [`crate::config::SystemConfig`].
+//!
+//! The degenerate [`TenantMix::single_default`] — one `standard` tenant of
+//! weight 1 inheriting the run's trace and the fleet SLO — is the
+//! migration golden: a fleet run under it is byte-identical to the
+//! pre-tenant serving stack.
+
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+use super::traffic::ArrivalTrace;
+
+/// The scheduling class of a tenant: which island the class-aware router
+/// prefers for it.
+///
+/// * `tight` — latency-critical: routed to the fastest-service island (the
+///   SRAM shards of a hetero fleet), where faster buffers earn their area.
+/// * `standard` — no preference: least-outstanding over the whole fleet,
+///   exactly the classless router.
+/// * `relaxed` — throughput/efficiency: routed to the lowest
+///   energy-per-request island (the STT-AI Ultra shards), where the
+///   paper's 75.4 % area / 3.5 % power savings accumulate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SloTier {
+    Tight,
+    Standard,
+    Relaxed,
+}
+
+impl SloTier {
+    /// Stable serialization token.
+    pub fn token(&self) -> &'static str {
+        match self {
+            SloTier::Tight => "tight",
+            SloTier::Standard => "standard",
+            SloTier::Relaxed => "relaxed",
+        }
+    }
+
+    pub fn from_token(s: &str) -> Option<Self> {
+        match s {
+            "tight" => Some(SloTier::Tight),
+            "standard" => Some(SloTier::Standard),
+            "relaxed" => Some(SloTier::Relaxed),
+            _ => None,
+        }
+    }
+}
+
+/// One workload class sharing the fleet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    pub tier: SloTier,
+    /// Per-class sojourn target; `None` inherits the fleet policy SLO.
+    pub slo: Option<Duration>,
+    /// Weighted-deficit-round-robin quantum at batch admission: rows this
+    /// class may contribute per service round while backlogged (≥ 1, so a
+    /// configured tenant can never starve).
+    pub weight: u64,
+    /// Per-tenant arrival trace; `None` inherits the run's trace.
+    pub trace: Option<ArrivalTrace>,
+    /// Minimum estimated engine accuracy this class tolerates: shards
+    /// whose [`super::EngineSpec::est_accuracy`] falls below it are
+    /// excluded from routing (approximate-memory tolerance is
+    /// workload-dependent). `None` accepts every shard.
+    pub accuracy_floor: Option<f64>,
+}
+
+impl TenantSpec {
+    /// A standard-tier, weight-1 tenant inheriting the run's trace and the
+    /// fleet SLO.
+    pub fn standard(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            tier: SloTier::Standard,
+            slo: None,
+            weight: 1,
+            trace: None,
+            accuracy_floor: None,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("tier", Json::Str(self.tier.token().to_string())),
+            ("weight", self.weight.into()),
+        ];
+        if let Some(slo) = self.slo {
+            fields.push(("slo_us", (slo.as_micros() as u64).into()));
+        }
+        if let Some(t) = &self.trace {
+            fields.push(("trace", t.to_json()));
+        }
+        if let Some(f) = self.accuracy_floor {
+            fields.push(("accuracy_floor", Json::Num(f)));
+        }
+        Json::obj(fields)
+    }
+
+    fn from_json(j: &Json) -> crate::Result<Self> {
+        let name = j.req_str("name").map_err(anyhow::Error::from)?.to_string();
+        if name.is_empty() {
+            anyhow::bail!("tenant names must be non-empty");
+        }
+        let tier_token = j.req_str("tier").map_err(anyhow::Error::from)?;
+        let tier = SloTier::from_token(tier_token).ok_or_else(|| {
+            anyhow::anyhow!("tenant {name:?}: unknown tier {tier_token:?} (tight, standard, relaxed)")
+        })?;
+        let weight = match j.get("weight") {
+            Some(w) => w
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("tenant {name:?}: weight must be a u64"))?,
+            None => 1,
+        };
+        if weight == 0 {
+            anyhow::bail!("tenant {name:?}: weight must be >= 1 (zero weight starves the class)");
+        }
+        let slo = match j.get("slo_us") {
+            Some(v) => {
+                let us = v
+                    .as_u64()
+                    .ok_or_else(|| anyhow::anyhow!("tenant {name:?}: slo_us must be a u64"))?;
+                if us == 0 {
+                    anyhow::bail!("tenant {name:?}: slo_us must be positive");
+                }
+                Some(Duration::from_micros(us))
+            }
+            None => None,
+        };
+        let trace = match j.get("trace") {
+            Some(t) => Some(ArrivalTrace::from_json(t)?),
+            None => None,
+        };
+        let accuracy_floor = match j.get("accuracy_floor") {
+            Some(v) => {
+                let f = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("tenant {name:?}: accuracy_floor not a number"))?;
+                if !(f.is_finite() && f > 0.0 && f <= 1.0) {
+                    anyhow::bail!("tenant {name:?}: accuracy_floor must be in (0, 1], got {f}");
+                }
+                Some(f)
+            }
+            None => None,
+        };
+        Ok(Self { name, tier, slo, weight, trace, accuracy_floor })
+    }
+}
+
+/// A named set of tenants sharing one fleet run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantMix {
+    pub name: String,
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl TenantMix {
+    /// The migration golden: one standard tenant, weight 1, inheriting the
+    /// run's trace and the fleet SLO. A fleet run under this mix is
+    /// byte-identical to the pre-tenant serving stack.
+    pub fn single_default() -> Self {
+        Self { name: "default".into(), tenants: vec![TenantSpec::standard("default")] }
+    }
+
+    /// Is this the degenerate single-tenant mix? Tenant-aware scheduling
+    /// and per-tenant report sections only switch on when it is not.
+    pub fn is_default(&self) -> bool {
+        *self == Self::single_default()
+    }
+
+    /// Built-in mixes by token; `None` for unknown names.
+    ///
+    /// Rates are sized against the paper SRAM+Ultra pair (SRAM ≈ 22.9 k
+    /// req/s at 700 µs service, Ultra ≈ 16 k req/s at 1 ms): `two_tier`
+    /// offers a 4 k req/s tight 2 ms class next to a bursty relaxed 50 ms
+    /// class averaging ≈ 13.3 k req/s — each island alone carries its
+    /// class, which is the hetero payoff gate in `tests/tenants.rs` —
+    /// and `three_class` adds a standard class plus an accuracy floor that
+    /// keeps the tight class off relaxed-BER Ultra shards.
+    pub fn builtin(name: &str) -> Option<Self> {
+        let ms = Duration::from_millis;
+        match name {
+            "default" => Some(Self::single_default()),
+            "two_tier" => Some(Self {
+                name: "two_tier".into(),
+                tenants: vec![
+                    TenantSpec {
+                        name: "tight".into(),
+                        tier: SloTier::Tight,
+                        slo: Some(ms(2)),
+                        weight: 4,
+                        trace: Some(ArrivalTrace {
+                            name: "two_tier.tight".into(),
+                            seed: 0x7167,
+                            pattern: super::traffic::TracePattern::Poisson { rate_rps: 4_000.0 },
+                        }),
+                        accuracy_floor: None,
+                    },
+                    TenantSpec {
+                        name: "relaxed".into(),
+                        tier: SloTier::Relaxed,
+                        slo: Some(ms(50)),
+                        weight: 1,
+                        trace: Some(ArrivalTrace {
+                            name: "two_tier.relaxed".into(),
+                            seed: 0x5E1A,
+                            pattern: super::traffic::TracePattern::Bursty {
+                                calm_rps: 8_000.0,
+                                burst_rps: 24_000.0,
+                                calm_dwell: ms(20),
+                                burst_dwell: ms(10),
+                            },
+                        }),
+                        accuracy_floor: None,
+                    },
+                ],
+            }),
+            "three_class" => Some(Self {
+                name: "three_class".into(),
+                tenants: vec![
+                    TenantSpec {
+                        name: "tight".into(),
+                        tier: SloTier::Tight,
+                        slo: Some(ms(2)),
+                        weight: 4,
+                        trace: Some(ArrivalTrace {
+                            name: "three_class.tight".into(),
+                            seed: 0x3C01,
+                            pattern: super::traffic::TracePattern::Poisson { rate_rps: 3_000.0 },
+                        }),
+                        accuracy_floor: Some(0.999),
+                    },
+                    TenantSpec {
+                        name: "standard".into(),
+                        tier: SloTier::Standard,
+                        slo: None,
+                        weight: 2,
+                        trace: Some(ArrivalTrace {
+                            name: "three_class.standard".into(),
+                            seed: 0x3C02,
+                            pattern: super::traffic::TracePattern::Poisson { rate_rps: 6_000.0 },
+                        }),
+                        accuracy_floor: None,
+                    },
+                    TenantSpec {
+                        name: "relaxed".into(),
+                        tier: SloTier::Relaxed,
+                        slo: Some(ms(50)),
+                        weight: 1,
+                        trace: Some(ArrivalTrace {
+                            name: "three_class.relaxed".into(),
+                            seed: 0x3C03,
+                            pattern: super::traffic::TracePattern::Poisson { rate_rps: 6_000.0 },
+                        }),
+                        accuracy_floor: None,
+                    },
+                ],
+            }),
+            _ => None,
+        }
+    }
+
+    /// Every built-in mix token (CLI help + roundtrip tests).
+    pub fn builtin_names() -> &'static [&'static str] {
+        &["default", "two_tier", "three_class"]
+    }
+
+    /// Resolve a CLI `--tenants` spec: a built-in token first, else a path
+    /// to a mix JSON file.
+    pub fn parse(spec: &str) -> crate::Result<Self> {
+        if let Some(m) = Self::builtin(spec) {
+            return Ok(m);
+        }
+        let path = std::path::Path::new(spec);
+        if path.exists() {
+            let text = std::fs::read_to_string(path)?;
+            return Self::from_json(&Json::parse(&text).map_err(anyhow::Error::from)?);
+        }
+        anyhow::bail!(
+            "unknown tenant mix {spec:?} (builtins: {}; or a path to a mix JSON)",
+            Self::builtin_names().join(", ")
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("tenants", Json::Arr(self.tenants.iter().map(TenantSpec::to_json).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let name = j.req_str("name").map_err(anyhow::Error::from)?.to_string();
+        let rows = j.req_arr("tenants").map_err(anyhow::Error::from)?;
+        if rows.is_empty() {
+            anyhow::bail!("tenant mix {name:?}: needs at least one tenant");
+        }
+        let tenants =
+            rows.iter().map(TenantSpec::from_json).collect::<crate::Result<Vec<_>>>()?;
+        for (i, t) in tenants.iter().enumerate() {
+            if tenants[..i].iter().any(|o| o.name == t.name) {
+                anyhow::bail!("tenant mix {name:?}: duplicate tenant name {:?}", t.name);
+            }
+        }
+        Ok(Self { name, tenants })
+    }
+
+    /// Per-class DRR weights, in tenant order.
+    pub fn weights(&self) -> Vec<u64> {
+        self.tenants.iter().map(|t| t.weight).collect()
+    }
+
+    /// Tenant `i`'s sojourn target, inheriting `fleet_slo` when unset.
+    pub fn effective_slo(&self, i: usize, fleet_slo: Duration) -> Duration {
+        self.tenants.get(i).and_then(|t| t.slo).unwrap_or(fleet_slo)
+    }
+
+    /// The tightest sojourn target across the mix — what the class-aware
+    /// autoscaler holds the best shard projection against.
+    pub fn tightest_slo(&self, fleet_slo: Duration) -> Duration {
+        (0..self.tenants.len())
+            .map(|i| self.effective_slo(i, fleet_slo))
+            .min()
+            .unwrap_or(fleet_slo)
+    }
+}
+
+impl Default for TenantMix {
+    fn default() -> Self {
+        Self::single_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_mix_is_the_degenerate_single_tenant() {
+        let m = TenantMix::single_default();
+        assert!(m.is_default());
+        assert_eq!(m.tenants.len(), 1);
+        assert_eq!(m.tenants[0].tier, SloTier::Standard);
+        assert_eq!(m.tenants[0].weight, 1);
+        assert!(m.tenants[0].slo.is_none() && m.tenants[0].trace.is_none());
+        assert!(!TenantMix::builtin("two_tier").unwrap().is_default());
+    }
+
+    #[test]
+    fn builtins_roundtrip_through_json() {
+        for name in TenantMix::builtin_names() {
+            let m = TenantMix::builtin(name).unwrap();
+            let text = m.to_json().to_string();
+            let back = TenantMix::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, m, "{name} roundtrip");
+            assert_eq!(back.to_json().to_string(), text, "{name} byte-stable");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_unknown_mixes_with_a_named_error() {
+        let err = TenantMix::parse("no_such_mix").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown tenant mix"), "{msg}");
+        assert!(msg.contains("two_tier"), "lists builtins: {msg}");
+    }
+
+    #[test]
+    fn from_json_rejects_degenerate_mixes() {
+        let bad = r#"{"name":"x","tenants":[]}"#;
+        assert!(TenantMix::from_json(&Json::parse(bad).unwrap()).is_err(), "empty mix");
+        let bad = r#"{"name":"x","tenants":[{"name":"a","tier":"tight","weight":0}]}"#;
+        assert!(TenantMix::from_json(&Json::parse(bad).unwrap()).is_err(), "zero weight");
+        let bad = r#"{"name":"x","tenants":[{"name":"a","tier":"warp","weight":1}]}"#;
+        assert!(TenantMix::from_json(&Json::parse(bad).unwrap()).is_err(), "unknown tier");
+        let bad = r#"{"name":"x","tenants":[
+            {"name":"a","tier":"tight","weight":1},
+            {"name":"a","tier":"relaxed","weight":1}]}"#;
+        assert!(TenantMix::from_json(&Json::parse(bad).unwrap()).is_err(), "duplicate name");
+        let bad = r#"{"name":"x","tenants":[{"name":"a","tier":"tight","weight":1,"slo_us":0}]}"#;
+        assert!(TenantMix::from_json(&Json::parse(bad).unwrap()).is_err(), "zero slo");
+        let bad =
+            r#"{"name":"x","tenants":[{"name":"a","tier":"tight","weight":1,"accuracy_floor":1.5}]}"#;
+        assert!(TenantMix::from_json(&Json::parse(bad).unwrap()).is_err(), "floor > 1");
+    }
+
+    #[test]
+    fn missing_weight_defaults_to_one() {
+        let j = Json::parse(r#"{"name":"x","tenants":[{"name":"a","tier":"standard"}]}"#).unwrap();
+        let m = TenantMix::from_json(&j).unwrap();
+        assert_eq!(m.tenants[0].weight, 1);
+    }
+
+    #[test]
+    fn effective_and_tightest_slos_inherit_the_fleet_target() {
+        let fleet = Duration::from_millis(10);
+        let m = TenantMix::builtin("three_class").unwrap();
+        assert_eq!(m.effective_slo(0, fleet), Duration::from_millis(2));
+        assert_eq!(m.effective_slo(1, fleet), fleet, "unset slo inherits the fleet target");
+        assert_eq!(m.tightest_slo(fleet), Duration::from_millis(2));
+        assert_eq!(TenantMix::single_default().tightest_slo(fleet), fleet);
+    }
+
+    #[test]
+    fn tier_tokens_roundtrip() {
+        for tier in [SloTier::Tight, SloTier::Standard, SloTier::Relaxed] {
+            assert_eq!(SloTier::from_token(tier.token()), Some(tier));
+        }
+        assert_eq!(SloTier::from_token("bogus"), None);
+    }
+}

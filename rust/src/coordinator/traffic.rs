@@ -16,7 +16,17 @@
 //!
 //! Two degenerate patterns complete the grammar: **closed** (every request
 //! queued at t = 0, the old `serve::closed_loop` arrival model) and
-//! **uniform** (fixed gap, the supervisor's chaos pacing).
+//! **uniform** (fixed gap, the supervisor's chaos pacing). A sixth,
+//! **replay**, is not stochastic at all: it streams a recorded list of
+//! arrival instants (a `fleet --record` log, or any JSON-lines file of
+//! timestamps) back through the same [`ArrivalGen`] contract, and is the
+//! only finite pattern — its generator returns `None` past the last
+//! recorded instant.
+//!
+//! Multi-tenant runs hold one trace per tenant; [`MuxArrivalGen`] merges
+//! the per-tenant generators into a single nondecreasing arrival stream
+//! tagged with the originating tenant index, deterministic because ties
+//! break to the lowest index and each stream is itself seed-deterministic.
 //!
 //! Like the fault DSL ([`crate::coordinator::faults`]), traces come from
 //! three places sharing one grammar: built-in tokens
@@ -27,6 +37,7 @@
 //! trace seed through the crate's xoshiro [`Rng`], so a trace replays the
 //! exact same arrival instants on every run and at any worker count.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::util::clock::Tick;
@@ -34,7 +45,7 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// The stochastic (or degenerate) process generating arrival instants.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum TracePattern {
     /// Every request arrives at t = 0 (closed-loop serving: the clients
     /// queue everything up front and wait).
@@ -51,6 +62,12 @@ pub enum TracePattern {
     /// Two-state Markov-modulated Poisson process: exponential dwell times
     /// with the given means, Poisson arrivals at the phase's rate.
     Bursty { calm_rps: f64, burst_rps: f64, calm_dwell: Duration, burst_dwell: Duration },
+    /// Recorded arrival instants replayed verbatim: nondecreasing offsets
+    /// from the clock epoch, in nanoseconds. The only finite pattern —
+    /// the generator ends after the last instant. Shared via `Arc` so
+    /// cloning a trace (config roundtrips, per-shard setup) does not copy
+    /// the recording.
+    Replay { offsets_ns: Arc<Vec<u64>> },
 }
 
 impl TracePattern {
@@ -62,6 +79,7 @@ impl TracePattern {
             TracePattern::Poisson { .. } => "poisson",
             TracePattern::Diurnal { .. } => "diurnal",
             TracePattern::Bursty { .. } => "bursty",
+            TracePattern::Replay { .. } => "replay",
         }
     }
 }
@@ -124,12 +142,13 @@ impl ArrivalTrace {
     }
 
     /// Every built-in trace token (CLI help + roundtrip tests).
-    pub fn builtin_names() -> [&'static str; 5] {
-        ["closed", "uniform", "poisson", "diurnal", "bursty"]
+    pub fn builtin_names() -> &'static [&'static str] {
+        &["closed", "uniform", "poisson", "diurnal", "bursty"]
     }
 
     /// Resolve a CLI `--trace` spec: a built-in token first, else a path to
-    /// a trace JSON file.
+    /// a trace JSON file, else a JSON-lines recording (a `fleet --record`
+    /// log, or one timestamp object per line) replayed as a `replay` trace.
     pub fn parse(spec: &str) -> crate::Result<Self> {
         if let Some(t) = Self::builtin(spec) {
             return Ok(t);
@@ -137,12 +156,65 @@ impl ArrivalTrace {
         let path = std::path::Path::new(spec);
         if path.exists() {
             let text = std::fs::read_to_string(path)?;
-            return Self::from_json(&Json::parse(&text).map_err(anyhow::Error::from)?);
+            // A whole-file JSON document is a trace description; a record
+            // log is JSON *lines*, so whole-file parsing stops at the first
+            // newline with a trailing-content error and we fall through.
+            return match Json::parse(&text) {
+                Ok(j) => Self::from_json(&j),
+                Err(_) => Self::replay_from_jsonl(path, &text),
+            };
         }
         anyhow::bail!(
-            "unknown arrival trace {spec:?} (builtins: {}; or a path to a trace JSON)",
+            "unknown arrival trace {spec:?} (builtins: {}; or a path to a trace JSON \
+             or a JSON-lines arrival recording)",
             Self::builtin_names().join(", ")
         )
+    }
+
+    /// Parse a JSON-lines arrival recording into a `replay` trace.
+    ///
+    /// Accepted rows: `fleet --record` entries (objects with an
+    /// `arrival_ns` field) or bare objects `{"arrival_ns": N}`. A header
+    /// line carrying `trace` and `seed` (the record log writes one) names
+    /// the replayed trace so a record → replay round trip reproduces the
+    /// original report byte for byte; without it the trace is named after
+    /// the file.
+    fn replay_from_jsonl(path: &std::path::Path, text: &str) -> crate::Result<Self> {
+        let mut name: Option<String> = None;
+        let mut seed = 0u64;
+        let mut offsets = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let row = Json::parse(line).map_err(|e| {
+                anyhow::anyhow!("{}:{}: not a JSON line: {e}", path.display(), lineno + 1)
+            })?;
+            if let Some(n) = row.get("arrival_ns").and_then(Json::as_u64) {
+                offsets.push(n);
+            } else if row.get("trace").is_some() {
+                // Record-log header: restore the recorded trace identity.
+                name = row.get("trace").and_then(Json::as_str).map(str::to_string);
+                seed = row.get("seed").and_then(Json::as_u64).unwrap_or(0);
+            } else {
+                anyhow::bail!(
+                    "{}:{}: replay rows need an arrival_ns field",
+                    path.display(),
+                    lineno + 1
+                );
+            }
+        }
+        if offsets.is_empty() {
+            anyhow::bail!("{}: no arrivals to replay", path.display());
+        }
+        if offsets.windows(2).any(|w| w[0] > w[1]) {
+            anyhow::bail!("{}: replay arrivals must be nondecreasing", path.display());
+        }
+        let name = name.unwrap_or_else(|| {
+            path.file_stem().map_or_else(|| "replay".into(), |s| s.to_string_lossy().into_owned())
+        });
+        Ok(Self { name, seed, pattern: TracePattern::Replay { offsets_ns: Arc::new(offsets) } })
     }
 
     /// Serialize (durations as integer microseconds — exact on roundtrip;
@@ -154,22 +226,28 @@ impl ArrivalTrace {
             ("seed", self.seed.into()),
             ("pattern", Json::Str(self.pattern.token().to_string())),
         ];
-        match self.pattern {
+        match &self.pattern {
             TracePattern::Closed => {}
             TracePattern::Uniform { gap } => {
                 fields.push(("gap_us", (gap.as_micros() as u64).into()));
             }
-            TracePattern::Poisson { rate_rps } => fields.push(("rate_rps", Json::Num(rate_rps))),
+            TracePattern::Poisson { rate_rps } => fields.push(("rate_rps", Json::Num(*rate_rps))),
             TracePattern::Diurnal { base_rps, peak_rps, period } => {
-                fields.push(("base_rps", Json::Num(base_rps)));
-                fields.push(("peak_rps", Json::Num(peak_rps)));
+                fields.push(("base_rps", Json::Num(*base_rps)));
+                fields.push(("peak_rps", Json::Num(*peak_rps)));
                 fields.push(("period_us", (period.as_micros() as u64).into()));
             }
             TracePattern::Bursty { calm_rps, burst_rps, calm_dwell, burst_dwell } => {
-                fields.push(("calm_rps", Json::Num(calm_rps)));
-                fields.push(("burst_rps", Json::Num(burst_rps)));
+                fields.push(("calm_rps", Json::Num(*calm_rps)));
+                fields.push(("burst_rps", Json::Num(*burst_rps)));
                 fields.push(("calm_dwell_us", (calm_dwell.as_micros() as u64).into()));
                 fields.push(("burst_dwell_us", (burst_dwell.as_micros() as u64).into()));
+            }
+            TracePattern::Replay { offsets_ns } => {
+                fields.push((
+                    "offsets_ns",
+                    Json::Arr(offsets_ns.iter().map(|&n| n.into()).collect()),
+                ));
             }
         }
         Json::obj(fields)
@@ -222,6 +300,24 @@ impl ArrivalTrace {
                     burst_dwell,
                 }
             }
+            "replay" => {
+                let rows = j.req_arr("offsets_ns").map_err(anyhow::Error::from)?;
+                let offsets = rows
+                    .iter()
+                    .map(|v| {
+                        v.as_u64().ok_or_else(|| {
+                            anyhow::anyhow!("trace {name:?}: offsets_ns entries must be u64 ns")
+                        })
+                    })
+                    .collect::<crate::Result<Vec<u64>>>()?;
+                if offsets.is_empty() {
+                    anyhow::bail!("trace {name:?}: replay needs at least one arrival");
+                }
+                if offsets.windows(2).any(|w| w[0] > w[1]) {
+                    anyhow::bail!("trace {name:?}: replay offsets must be nondecreasing");
+                }
+                TracePattern::Replay { offsets_ns: Arc::new(offsets) }
+            }
             other => anyhow::bail!("unknown trace pattern {other:?}"),
         };
         Ok(Self { name, seed, pattern })
@@ -243,9 +339,11 @@ fn exp_dwell_ns(rng: &mut Rng, mean: Duration) -> u64 {
 }
 
 /// Streaming generator of arrival instants for one [`ArrivalTrace`]: each
-/// [`ArrivalGen::next_offset`] call yields the next arrival as a
-/// nondecreasing offset from the clock epoch. Entirely seed-driven — two
-/// generators built from equal traces emit identical instants forever.
+/// [`ArrivalGen::next_offset_opt`] call yields the next arrival as a
+/// nondecreasing offset from the clock epoch (`None` once a finite
+/// `replay` trace is exhausted; stochastic traces never end). Entirely
+/// seed-driven — two generators built from equal traces emit identical
+/// instants forever.
 #[derive(Debug)]
 pub struct ArrivalGen {
     pattern: TracePattern,
@@ -253,25 +351,47 @@ pub struct ArrivalGen {
     t_ns: u64,
     in_burst: bool,
     state_until_ns: u64,
+    /// Cursor into a `replay` trace's recorded offsets.
+    idx: usize,
 }
 
 impl ArrivalGen {
     pub fn new(trace: &ArrivalTrace) -> Self {
         let mut rng = Rng::seed_from_u64(trace.seed);
-        let state_until_ns = match trace.pattern {
-            TracePattern::Bursty { calm_dwell, .. } => exp_dwell_ns(&mut rng, calm_dwell),
+        let state_until_ns = match &trace.pattern {
+            TracePattern::Bursty { calm_dwell, .. } => exp_dwell_ns(&mut rng, *calm_dwell),
             _ => 0,
         };
-        Self { pattern: trace.pattern, rng, t_ns: 0, in_burst: false, state_until_ns }
+        Self {
+            pattern: trace.pattern.clone(),
+            rng,
+            t_ns: 0,
+            in_burst: false,
+            state_until_ns,
+            idx: 0,
+        }
     }
 
-    /// Offset from the clock epoch of the next arrival.
+    /// Offset from the clock epoch of the next arrival. An exhausted
+    /// `replay` trace holds at its last instant; open-ended callers should
+    /// prefer [`Self::next_offset_opt`].
     pub fn next_offset(&mut self) -> Duration {
-        match self.pattern {
+        let held = Duration::from_nanos(self.t_ns);
+        self.next_offset_opt().unwrap_or(held)
+    }
+
+    /// Offset from the clock epoch of the next arrival, or `None` once a
+    /// finite trace has replayed every recorded instant.
+    pub fn next_offset_opt(&mut self) -> Option<Duration> {
+        match &self.pattern {
             TracePattern::Closed => {}
             TracePattern::Uniform { gap } => self.t_ns += gap.as_nanos() as u64,
-            TracePattern::Poisson { rate_rps } => self.t_ns += exp_ns(&mut self.rng, rate_rps),
+            TracePattern::Poisson { rate_rps } => {
+                let rate = *rate_rps;
+                self.t_ns += exp_ns(&mut self.rng, rate);
+            }
             TracePattern::Diurnal { base_rps, peak_rps, period } => {
+                let (base_rps, peak_rps, period) = (*base_rps, *peak_rps, *period);
                 // Lewis–Shedler thinning against the peak rate: candidate
                 // arrivals at λ_max, each kept with probability λ(t)/λ_max.
                 // Acceptance never falls below base/peak, so the loop
@@ -286,24 +406,74 @@ impl ArrivalGen {
                     }
                 }
             }
-            TracePattern::Bursty { calm_rps, burst_rps, calm_dwell, burst_dwell } => loop {
-                let rate = if self.in_burst { burst_rps } else { calm_rps };
-                let cand = self.t_ns + exp_ns(&mut self.rng, rate);
-                if cand <= self.state_until_ns {
-                    self.t_ns = cand;
-                    break;
+            TracePattern::Bursty { calm_rps, burst_rps, calm_dwell, burst_dwell } => {
+                let (calm_rps, burst_rps) = (*calm_rps, *burst_rps);
+                let (calm_dwell, burst_dwell) = (*calm_dwell, *burst_dwell);
+                loop {
+                    let rate = if self.in_burst { burst_rps } else { calm_rps };
+                    let cand = self.t_ns + exp_ns(&mut self.rng, rate);
+                    if cand <= self.state_until_ns {
+                        self.t_ns = cand;
+                        break;
+                    }
+                    // Phase boundary crossed: jump to it, toggle the state,
+                    // and redraw — exact for an MMPP because the
+                    // exponential is memoryless, so the discarded partial
+                    // draw carries no information.
+                    self.t_ns = self.state_until_ns;
+                    self.in_burst = !self.in_burst;
+                    let dwell = if self.in_burst { burst_dwell } else { calm_dwell };
+                    self.state_until_ns = self.t_ns + exp_dwell_ns(&mut self.rng, dwell);
                 }
-                // Phase boundary crossed: jump to it, toggle the state, and
-                // redraw — exact for an MMPP because the exponential is
-                // memoryless, so the discarded partial draw carries no
-                // information.
-                self.t_ns = self.state_until_ns;
-                self.in_burst = !self.in_burst;
-                let dwell = if self.in_burst { burst_dwell } else { calm_dwell };
-                self.state_until_ns = self.t_ns + exp_dwell_ns(&mut self.rng, dwell);
-            },
+            }
+            TracePattern::Replay { offsets_ns } => {
+                let off = *offsets_ns.get(self.idx)?;
+                self.idx += 1;
+                self.t_ns = off;
+            }
         }
-        Duration::from_nanos(self.t_ns)
+        Some(Duration::from_nanos(self.t_ns))
+    }
+}
+
+/// Merge per-tenant arrival generators into one nondecreasing stream of
+/// `(offset, tenant)` pairs.
+///
+/// Each pull yields the earliest pending arrival across every stream; ties
+/// break to the lowest tenant index, so the merged order is a pure function
+/// of the traces — seed-deterministic and independent of worker count. A
+/// single-stream mux emits exactly its generator's sequence, which is how
+/// the default single-tenant fleet stays byte-identical to the pre-tenant
+/// serving stack. The mux ends (`None`) only when every stream is finite
+/// and exhausted.
+#[derive(Debug)]
+pub struct MuxArrivalGen {
+    gens: Vec<ArrivalGen>,
+    /// The next undelivered offset of each stream (`None` = exhausted).
+    next: Vec<Option<Duration>>,
+}
+
+impl MuxArrivalGen {
+    pub fn new(traces: &[ArrivalTrace]) -> Self {
+        let mut gens: Vec<ArrivalGen> = traces.iter().map(ArrivalGen::new).collect();
+        let next = gens.iter_mut().map(ArrivalGen::next_offset_opt).collect();
+        Self { gens, next }
+    }
+
+    /// The earliest pending arrival and its tenant index, or `None` when
+    /// every stream is exhausted.
+    pub fn next_arrival(&mut self) -> Option<(Duration, u32)> {
+        let mut best: Option<(Duration, usize)> = None;
+        for (i, pending) in self.next.iter().enumerate() {
+            if let Some(d) = pending {
+                if best.is_none_or(|(bd, _)| *d < bd) {
+                    best = Some((*d, i));
+                }
+            }
+        }
+        let (off, i) = best?;
+        self.next[i] = self.gens[i].next_offset_opt();
+        Some((off, i as u32))
     }
 }
 
@@ -417,5 +587,96 @@ mod tests {
             }
         }
         assert!(crest > 2 * trough, "crest {crest} vs trough {trough}");
+    }
+
+    fn replay_trace(offsets: &[u64]) -> ArrivalTrace {
+        ArrivalTrace {
+            name: "rec".into(),
+            seed: 7,
+            pattern: TracePattern::Replay { offsets_ns: Arc::new(offsets.to_vec()) },
+        }
+    }
+
+    #[test]
+    fn replay_roundtrips_through_json_and_ends_after_the_recording() {
+        let t = replay_trace(&[10, 10, 25, 40]);
+        let text = t.to_json().to_string();
+        let back = ArrivalTrace::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, t, "replay roundtrip");
+        let mut g = ArrivalGen::new(&back);
+        let got: Vec<_> = std::iter::from_fn(|| g.next_offset_opt()).collect();
+        assert_eq!(
+            got,
+            vec![
+                Duration::from_nanos(10),
+                Duration::from_nanos(10),
+                Duration::from_nanos(25),
+                Duration::from_nanos(40)
+            ]
+        );
+        assert_eq!(g.next_offset_opt(), None, "stays exhausted");
+        assert_eq!(g.next_offset(), Duration::from_nanos(40), "open-ended view holds the end");
+    }
+
+    #[test]
+    fn replay_from_json_rejects_empty_and_decreasing_recordings() {
+        let bad = r#"{"name":"x","seed":1,"pattern":"replay","offsets_ns":[]}"#;
+        assert!(ArrivalTrace::from_json(&Json::parse(bad).unwrap()).is_err(), "empty");
+        let bad = r#"{"name":"x","seed":1,"pattern":"replay","offsets_ns":[5,3]}"#;
+        assert!(ArrivalTrace::from_json(&Json::parse(bad).unwrap()).is_err(), "decreasing");
+    }
+
+    #[test]
+    fn parse_reads_a_jsonl_recording_and_restores_the_header_identity() {
+        let path =
+            std::env::temp_dir().join(format!("stt_ai_replay_{}.jsonl", std::process::id()));
+        let log = "{\"requests\":3,\"seed\":36885,\"trace\":\"poisson\"}\n\
+                   {\"arrival_ns\":100,\"completion_ns\":900,\"engine\":0,\"id\":0,\"tenant\":0}\n\
+                   {\"arrival_ns\":250,\"completion_ns\":1100,\"engine\":1,\"id\":1,\"tenant\":0}\n\
+                   {\"arrival_ns\":300,\"completion_ns\":1300,\"engine\":0,\"id\":2,\"tenant\":0}\n";
+        std::fs::write(&path, log).unwrap();
+        let t = ArrivalTrace::parse(path.to_str().unwrap()).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(t.name, "poisson", "header names the replayed trace");
+        assert_eq!(t.seed, 36885, "header restores the recorded seed");
+        match &t.pattern {
+            TracePattern::Replay { offsets_ns } => {
+                assert_eq!(offsets_ns.as_slice(), &[100, 250, 300]);
+            }
+            other => panic!("expected replay, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mux_merges_streams_in_time_order_with_lowest_index_ties() {
+        let a = replay_trace(&[10, 30, 30]);
+        let b = replay_trace(&[5, 30, 50]);
+        let mut mux = MuxArrivalGen::new(&[a, b]);
+        let ns = Duration::from_nanos;
+        let got: Vec<_> = std::iter::from_fn(|| mux.next_arrival()).collect();
+        assert_eq!(
+            got,
+            vec![
+                (ns(5), 1),
+                (ns(10), 0),
+                (ns(30), 0), // tie at 30 ns: tenant 0 wins
+                (ns(30), 0),
+                (ns(30), 1),
+                (ns(50), 1)
+            ]
+        );
+        assert_eq!(mux.next_arrival(), None);
+    }
+
+    #[test]
+    fn single_stream_mux_matches_the_plain_generator() {
+        let trace = ArrivalTrace::builtin("bursty").unwrap();
+        let mut plain = ArrivalGen::new(&trace);
+        let mut mux = MuxArrivalGen::new(std::slice::from_ref(&trace));
+        for i in 0..2_000 {
+            let (off, tenant) = mux.next_arrival().unwrap();
+            assert_eq!(tenant, 0);
+            assert_eq!(off, plain.next_offset(), "diverged at arrival {i}");
+        }
     }
 }

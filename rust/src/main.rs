@@ -79,19 +79,26 @@ COMMANDS:
                across runs and --parallel values (builtins: calm, burst_ber,
                retention_storm, bank_takedown, crash_loop, latency_spike);
                --trace composes the scenario with open-loop arrivals inside
-               the fleet simulator instead
+               the fleet simulator instead (where --tenants also applies)
   fleet        [--trace closed|uniform|poisson|diurnal|bursty|FILE]
+               [--tenants default|two_tier|three_class|FILE] [--single-queue]
                [--config build.json] [--engines 3]
                [--selections a.json,b.json,...] [--variant V]
                [--from-selection FILE] [--requests 20000] [--batch 16]
                [--slo-ms 10] [--autoscale] [--faults SCENARIO] [--seed N]
-               [--parallel N] [--report FILE]
+               [--record FILE] [--parallel N] [--report FILE]
                discrete-event fleet simulation: open-loop arrivals from a
                seeded trace (or the [traffic] config section), heterogeneous
                engines booted from selection records, SLO-aware
                least-outstanding routing with a fast-island fallback, and
                optional queue-depth autoscaling; reports are byte-identical
-               across runs and --parallel values
+               across runs and --parallel values. --tenants (or the config
+               [tenants] section) shares the fleet between SLO classes:
+               per-class weighted deficit-round-robin batching, per-tier
+               island routing against each tenant's own SLO, and per-tenant
+               report ledgers (--single-queue keeps the legacy scheduler as
+               an ablation baseline); --trace FILE also accepts a JSON-lines
+               arrival recording, and --record FILE dumps one for replay
   montecarlo   [--samples 20000] [--seed N] [--parallel N]
                [--sweep axis=v1|v2,...] [--tech stt|wei2019]
                streaming PT Monte Carlo through the sweep engine
@@ -213,14 +220,31 @@ fn run_chaos(
 }
 
 /// Run one fleet simulation on a virtual clock (byte-identical reports
-/// across runs and `--parallel` values).
+/// across runs and `--parallel` values). The second return is the
+/// `--record` JSON-lines log when the config asked for one.
 fn run_fleet(
     trace: coordinator::ArrivalTrace,
     specs: Vec<coordinator::EngineSpec>,
     cfg: coordinator::FleetConfig,
-) -> anyhow::Result<coordinator::FleetSimReport> {
+) -> anyhow::Result<(coordinator::FleetSimReport, Option<String>)> {
+    let record = cfg.record;
     let mut sim = coordinator::FleetSim::new(trace, specs, cfg)?;
-    sim.run(&stt_ai::util::clock::Clock::virtual_at_zero())
+    let rep = sim.run(&stt_ai::util::clock::Clock::virtual_at_zero())?;
+    let log = record.then(|| sim.render_record());
+    Ok((rep, log))
+}
+
+/// Resolve the tenant mix for a fleet-simulator command: explicit
+/// `--tenants` (builtin token or JSON path), then the `[tenants]` section
+/// of `--config`, then the single default tenant (the legacy stack).
+fn resolve_tenants(
+    spec: Option<&str>,
+    config: Option<&SystemConfig>,
+) -> anyhow::Result<coordinator::TenantMix> {
+    match spec {
+        Some(s) => coordinator::TenantMix::parse(s),
+        None => Ok(config.and_then(|c| c.tenants.clone()).unwrap_or_default()),
+    }
 }
 
 /// Write a report JSON (newline-terminated) when `--report FILE` was given.
@@ -597,6 +621,7 @@ fn main() -> anyhow::Result<()> {
                 if args.get("fallback").is_some() {
                     anyhow::bail!("--fallback needs the supervisor path; drop it or --trace");
                 }
+                let tenants = resolve_tenants(args.get("tenants"), config.as_ref())?;
                 args.finish()?;
                 let trace = coordinator::ArrivalTrace::parse(&tspec)?;
                 let cfg = coordinator::FleetConfig {
@@ -604,9 +629,10 @@ fn main() -> anyhow::Result<()> {
                     batch,
                     parallel,
                     faults: Some(schedule),
+                    tenants,
                     ..Default::default()
                 };
-                let rep = run_fleet(trace, specs, cfg)?;
+                let (rep, _) = run_fleet(trace, specs, cfg)?;
                 write!(out, "{}", rep.render())?;
                 return write_report(&mut out, report_path, rep.to_json());
             }
@@ -649,6 +675,12 @@ fn main() -> anyhow::Result<()> {
                 .get("faults")
                 .map(coordinator::FaultSchedule::parse)
                 .transpose()?;
+            // Tenant resolution mirrors the trace: explicit --tenants
+            // (builtin token or JSON path), then the [tenants] section of
+            // --config, then the single default tenant (the legacy stack).
+            let tenants = resolve_tenants(args.get("tenants"), config.as_ref())?;
+            let classless = args.get_flag("single-queue");
+            let record_path = args.get("record").map(PathBuf::from);
             let specs = fleet_specs(&args, config.as_ref(), engines_flag)?;
             let mut cfg = coordinator::FleetConfig {
                 requests,
@@ -656,6 +688,9 @@ fn main() -> anyhow::Result<()> {
                 parallel,
                 autoscale,
                 faults,
+                tenants,
+                classless,
+                record: record_path.is_some(),
                 ..Default::default()
             };
             if let Some(ms) = args.get("slo-ms").map(|v| v.parse::<u64>()).transpose()? {
@@ -663,8 +698,12 @@ fn main() -> anyhow::Result<()> {
             }
             let report_path = args.get("report").map(PathBuf::from);
             args.finish()?;
-            let rep = run_fleet(trace, specs, cfg)?;
+            let (rep, record) = run_fleet(trace, specs, cfg)?;
             write!(out, "{}", rep.render())?;
+            if let (Some(path), Some(log)) = (record_path, record) {
+                std::fs::write(&path, log)?;
+                writeln!(out, "-- recorded {path:?}")?;
+            }
             write_report(&mut out, report_path, rep.to_json())?;
         }
         "montecarlo" => {

@@ -130,6 +130,62 @@ fn prop_batcher_never_loses_or_reorders() {
     }
 }
 
+/// Weighted deficit-round-robin admission: with every class backlogged,
+/// the dequeue stream is exactly weight-proportional — over two full
+/// cursor cycles each class contributes exactly `2 * weight` rows (so a
+/// positive-weight tenant can never starve, whatever the mix), and the
+/// per-class order stays FIFO.
+#[test]
+fn prop_weighted_drr_never_starves_a_backlogged_class() {
+    let mut rng = Rng::seed_from_u64(0xD2D2);
+    for case in 0..50 {
+        let classes = 2 + rng.below(5) as usize;
+        let weights: Vec<u64> = (0..classes).map(|_| 1 + rng.below(9)).collect();
+        let max_batch = 1 + rng.below(8) as usize;
+        let mut b = Batcher::with_weights(
+            max_batch,
+            std::time::Duration::ZERO,
+            1,
+            usize::MAX,
+            &weights,
+        );
+        let now = stt_ai::util::clock::Tick::ZERO;
+        // Adversarial backlog: every class queues more rows than two full
+        // service cycles can drain, so no queue empties mid-measurement.
+        let per_class = 2 * (*weights.iter().max().unwrap() as usize) + 4;
+        let mut id = 0u64;
+        for _ in 0..per_class {
+            for t in 0..classes {
+                assert!(b.push(Request::for_tenant(id, t as u32, vec![0.0], now)));
+                id += 1;
+            }
+        }
+        let quota: usize = 2 * weights.iter().sum::<u64>() as usize;
+        let mut stream: Vec<(u64, u32)> = Vec::new();
+        while stream.len() < quota {
+            let batch = b.form(max_batch, now).expect("backlog keeps batches coming");
+            stream.extend(batch.ids.iter().copied().zip(batch.tenants.iter().copied()));
+        }
+        stream.truncate(quota);
+        let mut counts = vec![0u64; classes];
+        let mut last_id = vec![None::<u64>; classes];
+        for &(id, t) in &stream {
+            counts[t as usize] += 1;
+            if let Some(prev) = last_id[t as usize] {
+                assert!(prev < id, "case {case}: class {t} reordered ({prev} after {id})");
+            }
+            last_id[t as usize] = Some(id);
+        }
+        for (t, (&got, &w)) in counts.iter().zip(&weights).enumerate() {
+            assert_eq!(
+                got,
+                2 * w,
+                "case {case}: class {t} got {got} of {quota} rows (weights {weights:?})"
+            );
+        }
+    }
+}
+
 #[test]
 fn prop_json_roundtrip_random_trees() {
     fn gen(rng: &mut Rng, depth: u32) -> Json {

@@ -1,0 +1,208 @@
+//! Integration coverage of multi-tenant SLO classes (EXPERIMENTS.md
+//! §Multi-tenant serving): the committed golden mix parses equal to its
+//! builtin, per-tenant ledgers are byte-identical across reruns and
+//! `--parallel` values for every builtin mix, the hetero SRAM+Ultra
+//! payoff gate holds (class-aware scheduling beats the single-queue
+//! baseline on tight-class p99 at equal-ish energy), a `--record` log
+//! replays to the byte-identical report, the default mix reproduces the
+//! pre-tenant stack, and accuracy floors pin tenants to accurate shards.
+
+use std::time::Duration;
+
+use stt_ai::config::GlbVariant;
+use stt_ai::coordinator::{
+    ArrivalTrace, EngineSpec, FleetConfig, FleetSim, FleetSimReport, TenantMix,
+};
+use stt_ai::util::clock::Clock;
+use stt_ai::util::json::Json;
+
+const GOLDEN: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/golden/fleet_tenants.mix.json");
+
+fn run_trace(trace: ArrivalTrace, specs: Vec<EngineSpec>, cfg: FleetConfig) -> FleetSimReport {
+    let mut sim = FleetSim::new(trace, specs, cfg).expect("fleet is non-empty");
+    sim.run(&Clock::virtual_at_zero()).expect("fleet run")
+}
+
+fn hetero() -> Vec<EngineSpec> {
+    vec![EngineSpec::paper(GlbVariant::Sram), EngineSpec::paper(GlbVariant::SttAiUltra)]
+}
+
+fn mix_cfg(mix: &TenantMix, requests: usize, parallel: usize) -> FleetConfig {
+    FleetConfig { tenants: mix.clone(), requests, parallel, ..Default::default() }
+}
+
+/// The committed golden mix file is the two_tier builtin, field for field
+/// — and serializes back to the identical canonical JSON.
+#[test]
+fn golden_mix_file_matches_the_builtin() {
+    let parsed = TenantMix::parse(GOLDEN).expect("golden mix parses");
+    let builtin = TenantMix::builtin("two_tier").unwrap();
+    assert_eq!(parsed, builtin);
+    assert_eq!(parsed.to_json().to_string(), builtin.to_json().to_string());
+}
+
+/// A fleet run booted from the golden mix file is byte-identical to one
+/// booted from the builtin token (the CLI `--tenants FILE` contract).
+#[test]
+fn golden_mix_runs_byte_identical_to_the_builtin() {
+    let trace = || ArrivalTrace::builtin("poisson").unwrap();
+    let from_file = TenantMix::parse(GOLDEN).unwrap();
+    let builtin = TenantMix::builtin("two_tier").unwrap();
+    let a = run_trace(trace(), hetero(), mix_cfg(&from_file, 20_000, 1));
+    let b = run_trace(trace(), hetero(), mix_cfg(&builtin, 20_000, 1));
+    assert_eq!(a.render(), b.render());
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+}
+
+/// Same mix + seed → byte-identical reports (tenant ledgers included)
+/// across consecutive runs and `--parallel` worker counts, for every
+/// builtin tenant mix.
+#[test]
+fn tenant_reports_are_byte_identical_across_reruns_and_parallel() {
+    for name in TenantMix::builtin_names() {
+        let mix = TenantMix::builtin(name).unwrap();
+        let trace = || ArrivalTrace::builtin("poisson").unwrap();
+        let a = run_trace(trace(), EngineSpec::paper_fleet(3), mix_cfg(&mix, 30_000, 1));
+        let b = run_trace(trace(), EngineSpec::paper_fleet(3), mix_cfg(&mix, 30_000, 1));
+        let c = run_trace(trace(), EngineSpec::paper_fleet(3), mix_cfg(&mix, 30_000, 4));
+        assert_eq!(a.render(), b.render(), "{name}: consecutive runs diverged");
+        assert_eq!(a.render(), c.render(), "{name}: --parallel leaked into the report");
+        assert_eq!(a.to_json().to_string(), c.to_json().to_string(), "{name}");
+        assert_eq!(a.offered, 30_000, "{name}");
+        let expect_tenants = if mix.is_default() { 0 } else { mix.tenants.len() };
+        assert_eq!(a.tenants.len(), expect_tenants, "{name}");
+        for t in &a.tenants {
+            assert_eq!(t.arrived, t.served + t.rejected, "{name}/{}: ledger leak", t.name);
+        }
+        assert_eq!(
+            a.tenants.iter().map(|t| t.arrived).sum::<u64>(),
+            if mix.is_default() { 0 } else { a.offered },
+            "{name}: arrivals book to exactly one tenant"
+        );
+    }
+}
+
+/// The payoff gate: on a heterogeneous SRAM+Ultra pair under the builtin
+/// two-tenant mix, class-aware scheduling must beat the single-queue
+/// baseline on tight-class p99 while fleet energy per request stays
+/// within 5 % — the SRAM island earns its area for the 2 ms class, the
+/// Ultra island keeps the energy win for the 50 ms class.
+#[test]
+fn hetero_two_tier_beats_the_single_queue_baseline() {
+    let mix = TenantMix::builtin("two_tier").unwrap();
+    let trace = || ArrivalTrace::builtin("poisson").unwrap();
+    let aware = run_trace(trace(), hetero(), mix_cfg(&mix, 30_000, 1));
+    let aware4 = run_trace(trace(), hetero(), mix_cfg(&mix, 30_000, 4));
+    let baseline = run_trace(
+        trace(),
+        hetero(),
+        FleetConfig { classless: true, ..mix_cfg(&mix, 30_000, 1) },
+    );
+    assert_eq!(aware.render(), aware4.render(), "--parallel is cosmetic");
+    // Both runs ledger the same tenants against the same per-class SLOs.
+    assert_eq!(aware.tenants.len(), 2);
+    assert_eq!(baseline.tenants.len(), 2);
+    let tight = &aware.tenants[0];
+    let tight_base = &baseline.tenants[0];
+    assert_eq!(tight.name, "tight");
+    assert_eq!(tight_base.name, "tight");
+    assert!(tight.served > 0 && tight_base.served > 0);
+    assert!(
+        tight.p99_us < tight_base.p99_us,
+        "tight p99 {}us must beat the single-queue baseline's {}us",
+        tight.p99_us,
+        tight_base.p99_us
+    );
+    assert!(
+        aware.mean_uj <= baseline.mean_uj * 1.05,
+        "fleet energy {:.3}uJ/req must stay within 5% of the baseline's {:.3}uJ/req",
+        aware.mean_uj,
+        baseline.mean_uj
+    );
+}
+
+/// `--record` → replay round trip: a recorded run's JSON-lines log, fed
+/// back through `ArrivalTrace::parse`, reproduces the byte-identical
+/// report — arrivals, routing, batching, energy and all.
+#[test]
+fn record_log_replays_to_the_byte_identical_report() {
+    let cfg = FleetConfig { requests: 2_000, record: true, ..Default::default() };
+    let trace = ArrivalTrace::builtin("bursty").unwrap();
+    let mut sim = FleetSim::new(trace, hetero(), cfg.clone()).unwrap();
+    let first = sim.run(&Clock::virtual_at_zero()).unwrap();
+    let log = sim.render_record();
+    assert_eq!(log.lines().count(), 2_001, "header + one line per request");
+    let path = std::env::temp_dir()
+        .join(format!("stt_ai_tenants_record_{}.jsonl", std::process::id()));
+    std::fs::write(&path, &log).unwrap();
+    let replay = ArrivalTrace::parse(path.to_str().unwrap()).expect("recording parses");
+    std::fs::remove_file(&path).ok();
+    let again = run_trace(replay, hetero(), cfg);
+    assert_eq!(again.render(), first.render());
+    assert_eq!(again.to_json().to_string(), first.to_json().to_string());
+}
+
+/// Migration golden: the default single-tenant mix takes the legacy code
+/// paths — explicitly forcing `classless` changes nothing, and the report
+/// carries no tenant section.
+#[test]
+fn default_mix_reproduces_the_pre_tenant_stack() {
+    let trace = || ArrivalTrace::builtin("diurnal").unwrap();
+    let plain = run_trace(trace(), EngineSpec::paper_fleet(3), FleetConfig::default());
+    let classless = run_trace(
+        trace(),
+        EngineSpec::paper_fleet(3),
+        FleetConfig { classless: true, ..Default::default() },
+    );
+    let default_mix = run_trace(
+        trace(),
+        EngineSpec::paper_fleet(3),
+        FleetConfig { tenants: TenantMix::single_default(), ..Default::default() },
+    );
+    assert_eq!(plain.render(), classless.render());
+    assert_eq!(plain.render(), default_mix.render());
+    assert_eq!(plain.to_json().to_string(), default_mix.to_json().to_string());
+    assert!(plain.tenants.is_empty());
+    assert!(!plain.to_json().to_string().contains("\"tenants\""));
+}
+
+/// Accuracy floors pin classes to accurate shards: under three_class on
+/// SRAM+Ultra, every tight-tenant request (floor 0.999) serves on the
+/// SRAM shard (est. accuracy 1.0), never the Ultra (0.995) — verified
+/// per request from the record log.
+#[test]
+fn accuracy_floor_keeps_the_tight_class_on_accurate_shards() {
+    let mix = TenantMix::builtin("three_class").unwrap();
+    let cfg = FleetConfig { record: true, ..mix_cfg(&mix, 20_000, 1) };
+    let trace = ArrivalTrace::builtin("poisson").unwrap();
+    let mut sim = FleetSim::new(trace, hetero(), cfg).unwrap();
+    let r = sim.run(&Clock::virtual_at_zero()).unwrap();
+    assert!(r.tenants[0].served > 0, "tight class saw traffic");
+    let mut tight_rows = 0u64;
+    for line in sim.render_record().lines().skip(1) {
+        let row = Json::parse(line).expect("record row parses");
+        let tenant = row.get("tenant").and_then(Json::as_u64).unwrap();
+        let engine = row.get("engine").and_then(Json::as_u64).unwrap();
+        if tenant == 0 {
+            tight_rows += 1;
+            assert_eq!(engine, 0, "tight request served off the accurate island: {line}");
+        }
+    }
+    assert_eq!(tight_rows, r.tenants[0].served, "log covers every tight completion");
+}
+
+/// Per-tenant SLOs drive the ledgers: the tight class's 2 ms target is
+/// scored per tenant even when the fleet-level SLO is far looser.
+#[test]
+fn tenant_ledgers_score_each_class_own_slo() {
+    let mix = TenantMix::builtin("two_tier").unwrap();
+    let r = run_trace(ArrivalTrace::builtin("poisson").unwrap(), hetero(), mix_cfg(&mix, 20_000, 1));
+    assert_eq!(r.tenants[0].slo, Duration::from_millis(2));
+    assert_eq!(r.tenants[1].slo, Duration::from_millis(50));
+    let text = r.render();
+    assert!(text.contains("tenant tight [tight] w=4:"), "{text}");
+    assert!(text.contains("tenant relaxed [relaxed] w=1:"), "{text}");
+    let j = r.to_json().to_string();
+    assert!(j.contains("\"tenants\":[{"), "{j}");
+    assert!(j.contains("\"slo_ms\":2"), "{j}");
+}
